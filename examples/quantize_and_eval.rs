@@ -1,0 +1,88 @@
+//! End-to-end driver (the EXPERIMENTS.md headline run).
+//!
+//! Loads the pretrained pq-tiny checkpoint, then for each scheme —
+//! FP16, RTN, QuaRot-analog (dynamic), PrefixQuant w/o FT (static),
+//! PrefixQuant + fine-tuning (static) — runs the full quantization pipeline
+//! and reports WikiText2-analog perplexity plus the 5-task average accuracy.
+//! This is the paper's Table 3 protocol on the synthetic substrate, executed
+//! entirely through the AOT artifacts (python never runs here).
+//!
+//!   cargo run --release --example quantize_and_eval [-- --ft-epochs 8 --windows 16]
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+use prefixquant::data::{self, Language};
+use prefixquant::eval;
+use prefixquant::model::Model;
+use prefixquant::quant::{pipeline, SchemeConfig};
+use prefixquant::report::ReportSink;
+use prefixquant::runtime::Engine;
+use prefixquant::tensor::IntTensor;
+use prefixquant::tokenizer::Tokenizer;
+use prefixquant::util::args::Args;
+use prefixquant::util::table::Table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let ft_epochs = args.usize_or("ft-epochs", 8)?;
+    let n_windows = args.usize_or("windows", 16)?;
+    let items = args.usize_or("items", 32)?;
+    let dir = prefixquant::artifacts_dir();
+    let engine = Rc::new(Engine::new(&dir)?);
+    let tok = Tokenizer::new(engine.manifest.tokenizer.clone());
+    let lang = Language::new(engine.manifest.corpus.clone());
+    let mut sink = ReportSink::new(&dir, "quantize_and_eval")?;
+
+    let probe = Model::load(engine.clone(), "pq-tiny")?;
+    let (b, s) = probe.fwd_geom()?;
+    drop(probe);
+    let calib_w = data::calibration_windows(&lang, |t| tok.encode(t, false), s, b, tok.spec.bos);
+    let calib = IntTensor::new(vec![b, s], calib_w.into_iter().flatten().collect())?;
+    let eval_ids = tok.encode(&lang.eval_text(), false);
+    let windows = data::windows(&eval_ids, s, tok.spec.bos, n_windows);
+
+    let schemes = vec![
+        SchemeConfig::fp16(),
+        SchemeConfig::rtn(4, 4, 4),
+        SchemeConfig::quarot(4, 4, 4),
+        SchemeConfig::prefixquant_wo_ft(4, 4, 4),
+        SchemeConfig::prefixquant(4, 4, 4, ft_epochs),
+    ];
+
+    let mut table = Table::new(
+        "W4A4KV4 on pq-tiny (Table 3 protocol)",
+        &["Method", "Quant Type", "PPL", "Avg. Acc.", "prefix", "pipeline s"],
+    );
+    for scheme in schemes {
+        let t0 = Instant::now();
+        let mut model = Model::load(engine.clone(), "pq-tiny")?;
+        let rep = pipeline::quantize(&mut model, &scheme, &calib, &tok)?;
+        let ppl = eval::perplexity(&model, scheme.mode, &windows)?;
+        let scores = eval::run_all_tasks(&model, scheme.mode, &lang, &tok, items)?;
+        let avg = scores.last().unwrap().accuracy;
+        let qt = match scheme.mode {
+            prefixquant::model::QuantMode::Fp => "-",
+            prefixquant::model::QuantMode::Static => "static",
+            prefixquant::model::QuantMode::Dynamic => "dynamic",
+        };
+        sink.emit_line(&format!(
+            "{:<32} ppl={ppl:.4} acc={avg:.2} ({:.1}s)",
+            scheme.name,
+            t0.elapsed().as_secs_f64()
+        ));
+        table.rowv(vec![
+            scheme.name.clone(),
+            qt.into(),
+            format!("{ppl:.4}"),
+            format!("{avg:.2}"),
+            rep.prefix_rendered.clone(),
+            format!("{:.1}", rep.t_total),
+        ]);
+    }
+    sink.table(&table);
+    let path = sink.save()?;
+    println!("\nreport saved to {path:?}");
+    Ok(())
+}

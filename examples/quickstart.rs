@@ -1,0 +1,50 @@
+//! Quickstart: load the artifacts, run the PrefixQuant pipeline on the tiny
+//! pretrained model, and compare FP vs W4A4KV4 static perplexity.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use prefixquant::data::{self, Language};
+use prefixquant::eval;
+use prefixquant::model::Model;
+use prefixquant::quant::{pipeline, SchemeConfig};
+use prefixquant::runtime::Engine;
+use prefixquant::tensor::IntTensor;
+use prefixquant::tokenizer::Tokenizer;
+
+fn main() -> Result<()> {
+    let dir = prefixquant::artifacts_dir();
+    let engine = Rc::new(Engine::new(&dir)?);
+    let tok = Tokenizer::new(engine.manifest.tokenizer.clone());
+    let lang = Language::new(engine.manifest.corpus.clone());
+    println!("platform: {}", engine.client.platform_name());
+
+    // --- FP16 baseline ---
+    let model = Model::load(engine.clone(), "pq-tiny")?;
+    let (b, s) = model.fwd_geom()?;
+    let eval_ids = tok.encode(&lang.eval_text(), false);
+    let windows = data::windows(&eval_ids, s, tok.spec.bos, 16);
+    let fp_ppl = eval::perplexity(&model, prefixquant::model::QuantMode::Fp, &windows)?;
+    println!("FP16 PPL          = {fp_ppl:.4}");
+
+    // --- PrefixQuant W4A4KV4 (static, no fine-tuning) ---
+    let mut model = Model::load(engine.clone(), "pq-tiny")?;
+    let calib_w =
+        data::calibration_windows(&lang, |t| tok.encode(t, false), s, b, tok.spec.bos);
+    let calib = IntTensor::new(vec![b, s], calib_w.into_iter().flatten().collect())?;
+    let scheme = SchemeConfig::prefixquant_wo_ft(4, 4, 4);
+    let report = pipeline::quantize(&mut model, &scheme, &calib, &tok)?;
+    println!(
+        "prefixed tokens   = {:?} (o={}, sinks={})",
+        report.prefix_rendered, report.pre_report.o, model.prefix.n_ctx_sinks
+    );
+    println!(
+        "pipeline time     = find {:.2}s | grid {:.2}s | total {:.2}s",
+        report.t_find_prefix, report.t_grid, report.t_total
+    );
+    let q_ppl = eval::perplexity(&model, scheme.mode, &windows)?;
+    println!("W4A4KV4 static PPL = {q_ppl:.4}  (vs FP {fp_ppl:.4})");
+    Ok(())
+}

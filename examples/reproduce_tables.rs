@@ -1,0 +1,620 @@
+//! Reproduce every table and figure of the paper on the synthetic substrate.
+//!
+//!   cargo run --release --example reproduce_tables -- [what] [--fast]
+//!
+//! `what` ∈ { figures, table1, table2, table3, table4, table6, table10,
+//!            table11, table12, table13, table14, table15, table16, table17,
+//!            all }  (default: all)
+//!
+//! Timing tables 5/8/9 live in `cargo bench` (rust/benches/).  Reports are
+//! saved under artifacts/reports/ and summarized in EXPERIMENTS.md.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+use prefixquant::data::{self, Language};
+use prefixquant::eval;
+use prefixquant::model::{Model, QuantMode};
+use prefixquant::quant::{outlier, pipeline, prefix, rotation, PrefixPolicy, SchemeConfig};
+use prefixquant::report::ReportSink;
+use prefixquant::runtime::Engine;
+use prefixquant::tensor::IntTensor;
+use prefixquant::tokenizer::Tokenizer;
+use prefixquant::util::args::Args;
+use prefixquant::util::table::{f as ff, Table};
+
+struct Harness {
+    engine: Rc<Engine>,
+    tok: Tokenizer,
+    lang: Language,
+    calib: IntTensor,
+    windows: Vec<Vec<i32>>,
+    items: usize,
+    ft_epochs: usize,
+    model_name: String,
+}
+
+struct Row {
+    ppl: f64,
+    acc: Option<f64>,
+    rep: pipeline::PipelineReport,
+}
+
+impl Harness {
+    fn new(args: &Args) -> Result<Self> {
+        let dir = prefixquant::artifacts_dir();
+        let engine = Rc::new(Engine::new(&dir)?);
+        let tok = Tokenizer::new(engine.manifest.tokenizer.clone());
+        let lang = Language::new(engine.manifest.corpus.clone());
+        let model_name = args.get_or("model", "pq-tiny").to_string();
+        let probe = Model::load(engine.clone(), &model_name)?;
+        let (b, s) = probe.fwd_geom()?;
+        drop(probe);
+        let fast = args.flag("fast");
+        let cw = data::calibration_windows(&lang, |t| tok.encode(t, false), s, b, tok.spec.bos);
+        let calib = IntTensor::new(vec![b, s], cw.into_iter().flatten().collect())?;
+        let ids = tok.encode(&lang.eval_text(), false);
+        let windows = data::windows(&ids, s, tok.spec.bos, if fast { 8 } else { 16 });
+        Ok(Self {
+            engine,
+            tok,
+            lang,
+            calib,
+            windows,
+            items: if fast { 16 } else { 32 },
+            ft_epochs: args.usize_or("ft-epochs", if fast { 4 } else { 8 })?,
+            model_name,
+        })
+    }
+
+    fn fresh(&self) -> Result<Model> {
+        Model::load(self.engine.clone(), &self.model_name)
+    }
+
+    fn run(&self, scheme: &SchemeConfig, with_acc: bool) -> Result<Row> {
+        let t0 = Instant::now();
+        let mut model = self.fresh()?;
+        let rep = pipeline::quantize(&mut model, scheme, &self.calib, &self.tok)?;
+        let ppl = eval::perplexity(&model, scheme.mode, &self.windows)?;
+        let acc = if with_acc {
+            let s = eval::run_all_tasks(&model, scheme.mode, &self.lang, &self.tok, self.items)?;
+            Some(s.last().unwrap().accuracy)
+        } else {
+            None
+        };
+        eprintln!("    {:<40} ppl={ppl:.4} ({:.1}s)", scheme.name, t0.elapsed().as_secs_f64());
+        Ok(Row { ppl, acc, rep })
+    }
+
+    fn run_detail(&self, scheme: &SchemeConfig) -> Result<(Row, Vec<eval::TaskScore>)> {
+        let mut model = self.fresh()?;
+        let rep = pipeline::quantize(&mut model, scheme, &self.calib, &self.tok)?;
+        let ppl = eval::perplexity(&model, scheme.mode, &self.windows)?;
+        let scores = eval::run_all_tasks(&model, scheme.mode, &self.lang, &self.tok, self.items)?;
+        let acc = scores.last().unwrap().accuracy;
+        Ok((Row { ppl, acc: Some(acc), rep }, scores))
+    }
+}
+
+fn mode_str(m: QuantMode) -> &'static str {
+    match m {
+        QuantMode::Fp => "-",
+        QuantMode::Static => "static",
+        QuantMode::Dynamic => "dynamic",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Figures 1-4 (+ appendix I): distributions, contents, indices, containment
+// ---------------------------------------------------------------------------
+
+fn figures(h: &Harness, sink: &mut ReportSink) -> Result<()> {
+    sink.emit_line("\n### Figures 1-4: token-wise outlier distributions");
+    let variants: [(&str, bool, bool); 3] =
+        [("original", false, false), ("+rotation", true, false), ("+rotation+prefix", true, true)];
+    let mut t = Table::new(
+        "Fig 2/3 analog: per-site top1/median and median/min1 (worst layer)",
+        &["variant", "site", "top1", "median", "top1/med", "med/min1"],
+    );
+    let mut containment = Vec::new();
+    for (name, rot, pre) in variants {
+        let mut model = h.fresh()?;
+        if rot {
+            let cfg = model.cfg.clone();
+            rotation::absorb_norm_gains(&cfg, &mut model.weights)?;
+            rotation::fold_rotations(&cfg, &mut model.weights)?;
+            let (r3, r4) = rotation::online_matrices(&model.cfg, true);
+            model.quant.r3 = r3;
+            model.quant.r4 = r4;
+            model.refresh_weights()?;
+        }
+        if pre {
+            let (_o, rep) = outlier::observe_and_analyze(&model, &h.calib, outlier::ETA)?;
+            let toks = prefix::select_tokens(&rep, &h.tok);
+            prefix::install(&mut model, &toks, h.tok.spec.pad)?;
+        }
+        let (_obs, rep) = outlier::observe_and_analyze(&model, &h.calib, outlier::ETA)?;
+        for site in 0..model.cfg.n_sites() {
+            // report the layer with the worst upper ratio at this site
+            let worst = rep
+                .site_stats
+                .iter()
+                .max_by(|a, b| {
+                    a[site].upper_ratio().partial_cmp(&b[site].upper_ratio()).unwrap()
+                })
+                .unwrap();
+            let st = &worst[site];
+            t.rowv(vec![
+                name.into(),
+                model.cfg.sites[site].clone(),
+                ff(st.top1 as f64),
+                ff(st.median as f64),
+                ff(st.upper_ratio() as f64),
+                ff(st.lower_ratio() as f64),
+            ]);
+        }
+        containment.push((name, rep.total_outliers, rep.o_per_block.clone()));
+        if name == "original" {
+            sink.emit_line(&format!(
+                "\nFig 4a analog — outlier token contents (non-initial): {:?}",
+                rep.freq
+                    .iter()
+                    .map(|&(id, n)| (h.tok.token_repr(id), n))
+                    .collect::<Vec<_>>()
+            ));
+            let idx: Vec<usize> = rep.positions.iter().map(|&(_b, s)| s).take(24).collect();
+            sink.emit_line(&format!("Fig 4b analog — outlier sequence indices (sample): {idx:?}"));
+        }
+    }
+    sink.table(&t);
+    let mut t2 = Table::new(
+        "Fig 4c analog: outlier containment after prefixing",
+        &["variant", "outliers detected in sequence", "o_per_block"],
+    );
+    for (name, total, opb) in containment {
+        t2.rowv(vec![name.into(), total.to_string(), format!("{opb:?}")]);
+    }
+    sink.table(&t2);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 1: selected prefixed tokens
+// ---------------------------------------------------------------------------
+
+fn table1(h: &Harness, sink: &mut ReportSink) -> Result<()> {
+    let mut model = h.fresh()?;
+    let cfg = model.cfg.clone();
+    rotation::absorb_norm_gains(&cfg, &mut model.weights)?;
+    rotation::fold_rotations(&cfg, &mut model.weights)?;
+    let (r3, r4) = rotation::online_matrices(&model.cfg, true);
+    model.quant.r3 = r3;
+    model.quant.r4 = r4;
+    model.refresh_weights()?;
+    let (_obs, rep) = outlier::observe_and_analyze(&model, &h.calib, outlier::ETA)?;
+    let toks = prefix::select_tokens(&rep, &h.tok);
+    let mut t = Table::new("Table 1 analog: prefixed tokens", &["Model", "Number", "Content"]);
+    t.rowv(vec![h.model_name.clone(), toks.len().to_string(), prefix::render(&toks, &h.tok)]);
+    sink.table(&t);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: separate act / KV static quantization
+// ---------------------------------------------------------------------------
+
+fn table2(h: &Harness, sink: &mut ReportSink) -> Result<()> {
+    let fp = h.run(&SchemeConfig::fp16(), false)?.ppl;
+    let mut t = Table::new(
+        "Table 2: static quantization needs prefixed outliers (PPL)",
+        &["precision", "original", "+ rotation", "+ prefixed"],
+    );
+    for (label, a_bits, kv_bits) in [("W16A4KV16 (static)", 4usize, 16usize), ("W16A16KV4 (static)", 16, 4)] {
+        let mk = |rotate: bool, use_prefix: bool| SchemeConfig {
+            name: format!("{label} rot={rotate} pre={use_prefix}"),
+            w_bits: 16,
+            a_bits,
+            kv_bits,
+            mode: QuantMode::Static,
+            rotate,
+            use_prefix,
+            prefix_override: None,
+            grid_search: true,
+            ft_epochs: 0,
+            smooth: false,
+            w_group: None,
+        };
+        let orig = h.run(&mk(false, false), false)?.ppl;
+        let rot = h.run(&mk(true, false), false)?.ppl;
+        let pre = h.run(&mk(true, true), false)?.ppl;
+        t.rowv(vec![label.into(), ff(orig), ff(rot), ff(pre)]);
+    }
+    sink.emit_line(&format!("\nFP16 PPL = {fp:.4}"));
+    sink.table(&t);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tables 3 / 4 / 18: main comparisons
+// ---------------------------------------------------------------------------
+
+fn main_comparison(
+    h: &Harness,
+    sink: &mut ReportSink,
+    title: &str,
+    bits: (usize, usize, usize),
+    detail: bool,
+) -> Result<()> {
+    let (w, a, kv) = bits;
+    let schemes = vec![
+        SchemeConfig::fp16(),
+        SchemeConfig::atom(w, a, kv),
+        SchemeConfig::rtn(w, a, kv),
+        SchemeConfig::quarot(w, a, kv),
+        SchemeConfig::smoothquant(w, a, kv),
+        SchemeConfig::prefixquant_wo_ft(w, a, kv),
+        SchemeConfig::prefixquant(w, a, kv, h.ft_epochs),
+    ];
+    let mut t = Table::new(title, &["Method", "Quant Type", "Wiki PPL", "Avg. Acc."]);
+    let mut detail_t = Table::new(
+        &format!("{title} — per-task detail (Table 18 analog)"),
+        &["Method", "completion", "bigram", "delimiter", "spelling", "next-word", "Avg"],
+    );
+    for scheme in schemes {
+        if detail {
+            let (row, scores) = h.run_detail(&scheme)?;
+            t.rowv(vec![
+                scheme.name.clone(),
+                mode_str(scheme.mode).into(),
+                ff(row.ppl),
+                format!("{:.2}", row.acc.unwrap()),
+            ]);
+            let mut cells = vec![scheme.name.clone()];
+            cells.extend(scores.iter().map(|s| format!("{:.1}", s.accuracy)));
+            detail_t.rowv(cells);
+        } else {
+            let row = h.run(&scheme, true)?;
+            t.rowv(vec![
+                scheme.name.clone(),
+                mode_str(scheme.mode).into(),
+                ff(row.ppl),
+                format!("{:.2}", row.acc.unwrap()),
+            ]);
+        }
+    }
+    sink.table(&t);
+    if detail {
+        sink.table(&detail_t);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 6: ablation stack
+// ---------------------------------------------------------------------------
+
+fn table6(h: &Harness, sink: &mut ReportSink) -> Result<()> {
+    let precisions = [("W8A8KV8", (8, 8, 8)), ("W4A8KV4", (4, 8, 4)), ("W4A4KV4", (4, 4, 4))];
+    let mut t = Table::new(
+        "Table 6: ablation on quantization techniques (PPL)",
+        &["Method", "Act Quant", "W8A8KV8", "W4A8KV4", "W4A4KV4"],
+    );
+    let steps: Vec<(&str, &str, Box<dyn Fn(usize, usize, usize) -> SchemeConfig>)> = vec![
+        ("RTN", "dynamic", Box::new(|w, a, kv| SchemeConfig::rtn(w, a, kv))),
+        ("+ rotation", "dynamic", Box::new(|w, a, kv| SchemeConfig::quarot(w, a, kv))),
+        (
+            "+ grid search",
+            "dynamic",
+            Box::new(|w, a, kv| {
+                let mut s = SchemeConfig::quarot(w, a, kv);
+                s.grid_search = true;
+                s
+            }),
+        ),
+        (
+            "+ static quantization",
+            "static",
+            Box::new(|w, a, kv| {
+                let mut s = SchemeConfig::quarot(w, a, kv);
+                s.grid_search = true;
+                s.mode = QuantMode::Static;
+                s
+            }),
+        ),
+        (
+            "+ prefixed outliers",
+            "static",
+            Box::new(|w, a, kv| SchemeConfig::prefixquant_wo_ft(w, a, kv)),
+        ),
+        (
+            "+ block-wise fine-tuning",
+            "static",
+            Box::new(|w, a, kv| SchemeConfig::prefixquant(w, a, kv, 4)),
+        ),
+    ];
+    for (name, act, mk) in steps {
+        let mut cells = vec![name.to_string(), act.to_string()];
+        for (_p, (w, a, kv)) in precisions {
+            let row = h.run(&mk(w, a, kv), false)?;
+            cells.push(ff(row.ppl));
+        }
+        t.rowv(cells);
+    }
+    sink.table(&t);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 10: quantization time
+// ---------------------------------------------------------------------------
+
+fn table10(h: &Harness, sink: &mut ReportSink) -> Result<()> {
+    let scheme = SchemeConfig::prefixquant(4, 4, 4, h.ft_epochs);
+    let row = h.run(&scheme, false)?;
+    let mut t = Table::new(
+        "Table 10: quantization time breakdown",
+        &["Model", "Find Prefixed Outliers", "Grid-search init", "Fine-tuning"],
+    );
+    t.rowv(vec![
+        h.model_name.clone(),
+        format!("{:.2}s", row.rep.t_find_prefix),
+        format!("{:.2}s", row.rep.t_grid),
+        format!("{:.2}s", row.rep.t_ft),
+    ]);
+    sink.table(&t);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tables 11/12: fine-tuning data & epoch ablations
+// ---------------------------------------------------------------------------
+
+fn table11(h: &Harness, sink: &mut ReportSink) -> Result<()> {
+    // dataset ablation analog: calibrate/fine-tune on different corpus seeds
+    let mut t = Table::new(
+        "Table 11a analog: calibration/FT dataset (corpus seed)",
+        &["dataset", "Wiki PPL"],
+    );
+    let probe = h.fresh()?;
+    let (b, s) = probe.fwd_geom()?;
+    drop(probe);
+    for (name, seed) in
+        [("pile (train split)", h.lang.spec.train_seed), ("c4-like (seed+7)", h.lang.spec.train_seed + 7), ("redpajama-like (seed+13)", h.lang.spec.train_seed + 13)]
+    {
+        let text = h.lang.generate(seed, h.lang.spec.train_chars / 4);
+        let ids = h.tok.encode(&text, false);
+        let cw = data::windows(&ids, s, h.tok.spec.bos, b);
+        let calib = IntTensor::new(vec![b, s], cw.into_iter().flatten().collect())?;
+        let mut model = h.fresh()?;
+        let scheme = SchemeConfig::prefixquant(4, 4, 4, h.ft_epochs);
+        pipeline::quantize(&mut model, &scheme, &calib, &h.tok)?;
+        let ppl = eval::perplexity(&model, scheme.mode, &h.windows)?;
+        t.rowv(vec![name.into(), ff(ppl)]);
+        eprintln!("    table11 {name}: {ppl:.4}");
+    }
+    sink.table(&t);
+    Ok(())
+}
+
+fn table12(h: &Harness, sink: &mut ReportSink) -> Result<()> {
+    let mut t = Table::new(
+        "Table 12: fine-tuning epochs",
+        &["Epochs", "W4A8KV4", "W4A4KV4"],
+    );
+    for epochs in [0usize, 2, 4, 8] {
+        let mut cells = vec![if epochs == 0 { "0 (w/o FT)".to_string() } else { epochs.to_string() }];
+        for bits in [(4, 8, 4), (4, 4, 4)] {
+            let scheme = if epochs == 0 {
+                SchemeConfig::prefixquant_wo_ft(bits.0, bits.1, bits.2)
+            } else {
+                SchemeConfig::prefixquant(bits.0, bits.1, bits.2, epochs)
+            };
+            let row = h.run(&scheme, false)?;
+            cells.push(ff(row.ppl));
+        }
+        t.rowv(cells);
+    }
+    sink.table(&t);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 13: static vs dynamic (with prefix), per precision
+// ---------------------------------------------------------------------------
+
+fn table13(h: &Harness, sink: &mut ReportSink) -> Result<()> {
+    let mut t = Table::new(
+        "Table 13: activation quant type with prefixed outliers (PPL)",
+        &["Fine-Tuning", "Quant Type", "W4A8KV4", "W4A4KV4"],
+    );
+    for ft in [false, true] {
+        for dynamic in [true, false] {
+            let mut cells = vec![
+                if ft { "Yes".to_string() } else { "No".to_string() },
+                if dynamic { "token-wise dynamic".into() } else { "tensor-wise static".to_string() },
+            ];
+            for bits in [(4usize, 8usize, 4usize), (4, 4, 4)] {
+                let mut scheme = SchemeConfig::prefixquant_wo_ft(bits.0, bits.1, bits.2);
+                if dynamic {
+                    scheme.mode = QuantMode::Dynamic;
+                }
+                if ft {
+                    scheme.ft_epochs = h.ft_epochs;
+                }
+                scheme.name = format!(
+                    "prefix {} {} {:?}",
+                    if dynamic { "dyn" } else { "static" },
+                    if ft { "ft" } else { "noft" },
+                    bits
+                );
+                let row = h.run(&scheme, false)?;
+                cells.push(ff(row.ppl));
+            }
+            t.rowv(cells);
+        }
+    }
+    sink.table(&t);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tables 14/15: number & content of prefixed tokens
+// ---------------------------------------------------------------------------
+
+fn table14(h: &Harness, sink: &mut ReportSink) -> Result<()> {
+    let mut t = Table::new(
+        "Table 14: number of prefixed tokens (W4A4KV4, PPL)",
+        &["n prefixed", "PrefixQuant w/o FT"],
+    );
+    for n in 0..=4usize {
+        let mut scheme = SchemeConfig::prefixquant_wo_ft(4, 4, 4);
+        scheme.prefix_override = Some(PrefixPolicy::FirstN(n));
+        if n == 0 {
+            scheme.use_prefix = false;
+        }
+        scheme.name = format!("prefix n={n}");
+        let row = h.run(&scheme, false)?;
+        t.rowv(vec![n.to_string(), ff(row.ppl)]);
+    }
+    sink.table(&t);
+    Ok(())
+}
+
+fn table15(h: &Harness, sink: &mut ReportSink) -> Result<()> {
+    let mut t = Table::new(
+        "Table 15: content of prefixed tokens (W4A4KV4, PPL)",
+        &["Type", "Prefixed", "PPL (w/o FT)"],
+    );
+    let policies: Vec<(&str, Option<PrefixPolicy>)> = vec![
+        ("default", None),
+        ("only highest frequency", Some(PrefixPolicy::OnlyHighestFreq)),
+        ("random (seed 1)", Some(PrefixPolicy::Random(1))),
+        ("random (seed 2)", Some(PrefixPolicy::Random(2))),
+    ];
+    for (name, policy) in policies {
+        let mut scheme = SchemeConfig::prefixquant_wo_ft(4, 4, 4);
+        scheme.prefix_override = policy;
+        scheme.name = format!("content {name}");
+        let row = h.run(&scheme, false)?;
+        t.rowv(vec![name.into(), row.rep.prefix_rendered.clone(), ff(row.ppl)]);
+    }
+    sink.table(&t);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 16: weight-only quantization plug-in
+// ---------------------------------------------------------------------------
+
+fn table16(h: &Harness, sink: &mut ReportSink) -> Result<()> {
+    let mut t = Table::new(
+        "Table 16 analog: weight-only quantization, prefix as plug-in (PPL)",
+        &["Precision", "EfficientQAT-analog (no prefix)", "PrefixQuant (with prefix)"],
+    );
+    for (label, wbits) in [("W3A16g64", 3usize), ("W2A16g64", 2usize)] {
+        let mut cells = vec![label.to_string()];
+        for use_prefix in [false, true] {
+            let scheme = SchemeConfig {
+                name: format!("{label} prefix={use_prefix}"),
+                w_bits: wbits,
+                a_bits: 16,
+                kv_bits: 16,
+                mode: QuantMode::Static,
+                rotate: false,
+                use_prefix,
+                prefix_override: None,
+                grid_search: true,
+                ft_epochs: h.ft_epochs,
+                smooth: false,
+                w_group: Some(64),
+            };
+            let row = h.run(&scheme, false)?;
+            cells.push(ff(row.ppl));
+        }
+        t.rowv(cells);
+    }
+    sink.table(&t);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 17: W8A8 vs other prefix policies (QFeP / CushionCache analogs)
+// ---------------------------------------------------------------------------
+
+fn table17(h: &Harness, sink: &mut ReportSink) -> Result<()> {
+    let mut t = Table::new(
+        "Table 17 analog: W8A8 prefix-policy comparison (PPL, static)",
+        &["Method", "Policy", "PPL"],
+    );
+    let variants: Vec<(&str, Option<PrefixPolicy>)> = vec![
+        ("PrefixQuant", None),
+        ("QFeP-analog (fixed 3)", Some(PrefixPolicy::Fixed3)),
+        ("CushionCache-analog (highest-freq)", Some(PrefixPolicy::OnlyHighestFreq)),
+    ];
+    for (name, policy) in variants {
+        let mut scheme = SchemeConfig::prefixquant_wo_ft(8, 8, 8);
+        scheme.prefix_override = policy;
+        scheme.name = format!("t17 {name}");
+        let row = h.run(&scheme, false)?;
+        t.rowv(vec![name.into(), row.rep.prefix_rendered.clone(), ff(row.ppl)]);
+    }
+    sink.table(&t);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let what = args.positional.first().map(|s| s.as_str()).unwrap_or("all").to_string();
+    let h = Harness::new(&args)?;
+    let mut sink = ReportSink::new(&prefixquant::artifacts_dir(), &format!("repro_{what}"))?;
+    let t0 = Instant::now();
+
+    let all = what == "all";
+    if all || what == "figures" {
+        figures(&h, &mut sink)?;
+    }
+    if all || what == "table1" {
+        table1(&h, &mut sink)?;
+    }
+    if all || what == "table2" {
+        table2(&h, &mut sink)?;
+    }
+    if all || what == "table3" {
+        main_comparison(&h, &mut sink, "Table 3: W4A4KV4", (4, 4, 4), true)?;
+    }
+    if all || what == "table4" {
+        main_comparison(&h, &mut sink, "Table 4: W4A8KV4", (4, 8, 4), false)?;
+    }
+    if all || what == "table6" {
+        table6(&h, &mut sink)?;
+    }
+    if all || what == "table10" {
+        table10(&h, &mut sink)?;
+    }
+    if all || what == "table11" {
+        table11(&h, &mut sink)?;
+    }
+    if all || what == "table12" {
+        table12(&h, &mut sink)?;
+    }
+    if all || what == "table13" {
+        table13(&h, &mut sink)?;
+    }
+    if all || what == "table14" {
+        table14(&h, &mut sink)?;
+    }
+    if all || what == "table15" {
+        table15(&h, &mut sink)?;
+    }
+    if all || what == "table16" {
+        table16(&h, &mut sink)?;
+    }
+    if all || what == "table17" {
+        table17(&h, &mut sink)?;
+    }
+    sink.emit_line(&format!("\ntotal wall time: {:.1}s", t0.elapsed().as_secs_f64()));
+    let path = sink.save()?;
+    println!("report saved to {path:?}");
+    Ok(())
+}

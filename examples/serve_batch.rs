@@ -1,0 +1,106 @@
+//! Serving demo: quantize W4A4KV4 with PrefixQuant, start the coordinator,
+//! submit a wave of concurrent generation requests, and report latency /
+//! throughput metrics (the paper's Table 5 setting, end to end).
+//!
+//!   cargo run --release --example serve_batch [-- --requests 16 --max-new 12]
+
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use prefixquant::coordinator::{GenRequest, Server, ServerConfig};
+use prefixquant::data::{self, Language};
+use prefixquant::model::Model;
+use prefixquant::quant::{pipeline, SchemeConfig};
+use prefixquant::runtime::Engine;
+use prefixquant::tensor::IntTensor;
+use prefixquant::tokenizer::Tokenizer;
+use prefixquant::util::args::Args;
+use prefixquant::util::rng::SplitMix64;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.usize_or("requests", 16)?;
+    let max_new = args.usize_or("max-new", 12)?;
+    let prompt_chars = args.usize_or("prompt-chars", 63)?;
+
+    let dir = prefixquant::artifacts_dir();
+    // a lightweight engine on the main thread just for specs
+    let probe_engine = Rc::new(Engine::new(&dir)?);
+    let tok = Tokenizer::new(probe_engine.manifest.tokenizer.clone());
+    let lang = Language::new(probe_engine.manifest.corpus.clone());
+    drop(probe_engine);
+
+    let tok_worker = tok.clone();
+    let dir_worker = dir.clone();
+    let spec = lang.spec.clone();
+    let server = Server::start(
+        move || {
+            let engine = Rc::new(Engine::new(&dir_worker)?);
+            let lang = Language::new(spec);
+            let mut model = Model::load(engine.clone(), "pq-tiny")?;
+            let (b, s) = model.fwd_geom()?;
+            let w = data::calibration_windows(
+                &lang,
+                |t| tok_worker.encode(t, false),
+                s,
+                b,
+                tok_worker.spec.bos,
+            );
+            let calib = IntTensor::new(vec![b, s], w.into_iter().flatten().collect())?;
+            let scheme = SchemeConfig::prefixquant_wo_ft(4, 4, 4);
+            let rep = pipeline::quantize(&mut model, &scheme, &calib, &tok_worker)?;
+            eprintln!(
+                "worker ready: prefix={:?} ({} sinks), pipeline {:.1}s",
+                rep.prefix_rendered, model.prefix.n_ctx_sinks, rep.t_total
+            );
+            Ok(model)
+        },
+        ServerConfig {
+            mode: prefixquant::model::QuantMode::Static,
+            max_batch: 8,
+            batch_window: Duration::from_millis(20),
+            bos: tok.spec.bos,
+            pad: tok.spec.pad,
+        },
+    )?;
+
+    // build uniform-length prompts from the eval split (bucketable batches)
+    let text = lang.eval_text();
+    let mut rng = SplitMix64::new(0xBA7C4);
+    let mut receivers = Vec::new();
+    let t0 = Instant::now();
+    for id in 0..n_requests {
+        let start = rng.below((text.len() - prompt_chars - 1) as u64) as usize;
+        let prompt = tok.encode(&text[start..start + prompt_chars], false);
+        let rx = server.submit(GenRequest { id: id as u64, prompt, max_new })?;
+        receivers.push((id, rx));
+    }
+    let mut ok = 0usize;
+    for (id, rx) in receivers {
+        match rx.recv() {
+            Ok(Ok(resp)) => {
+                ok += 1;
+                if id < 3 {
+                    println!(
+                        "req {id}: ttft={:.0}ms total={:.0}ms | {:?}",
+                        resp.ttft_s * 1e3,
+                        resp.total_s * 1e3,
+                        tok.decode(&resp.tokens)
+                    );
+                }
+            }
+            other => println!("req {id} failed: {other:?}"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.metrics()?;
+    println!(
+        "\nserved {ok}/{n_requests} requests in {wall:.2}s | batches={} mean TTFT={:.0}ms decode {:.1} tok/s",
+        m.batches,
+        m.mean_ttft() * 1e3,
+        m.decode_tps()
+    );
+    server.shutdown();
+    Ok(())
+}

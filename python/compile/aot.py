@@ -1,0 +1,151 @@
+"""AOT export driver: pretrain (or reuse) checkpoints, lower every executable
+to HLO *text*, write weights.bin + manifest.json.
+
+HLO text (NOT `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Run via `make artifacts` (no-op when inputs are unchanged).  Python never
+runs again after this — the rust binary is self-contained.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import artifact_io, export_specs, model, pretrain
+from .config import (BOS_ID, BYTE_OFFSET, CONFIGS, DELIMITER_IDS, EOS_ID,
+                     PAD_ID, VOCAB_SIZE, CorpusConfig)
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(entries):
+    out = []
+    for name, spec in entries:
+        out.append(
+            {
+                "name": name,
+                "dtype": str(np.dtype(spec.dtype)),
+                "shape": list(spec.shape),
+            }
+        )
+    return out
+
+
+def export_one(fn, in_specs, path: str) -> float:
+    t0 = time.time()
+    # keep_unused: the manifest promises every input in the signature — a
+    # mode that ignores (say) act_scales must still accept it, or rust-side
+    # by-name binding would desynchronize from the compiled parameter list.
+    lowered = jax.jit(fn, keep_unused=True).lower(*[s for _, s in in_specs])
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return time.time() - t0
+
+
+def get_checkpoint(cfg, out_dir, steps, retrain):
+    """Load weights.bin if present, else pretrain and save."""
+    mdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(mdir, exist_ok=True)
+    wpath = os.path.join(mdir, "weights.bin")
+    lpath = os.path.join(mdir, "pretrain_log.json")
+    if os.path.exists(wpath) and not retrain:
+        named = artifact_io.load(wpath)
+        tensors = [jax.numpy.asarray(a) for _, a in named]
+        params, layers = model.unflatten_params(cfg, tensors)
+        log = json.load(open(lpath)) if os.path.exists(lpath) else {"reused": True}
+        print(f"  [{cfg.name}] reusing checkpoint {wpath}")
+        return params, layers, log
+    print(f"  [{cfg.name}] pretraining ({steps} steps)...")
+    params, layers, log = pretrain.pretrain(cfg, steps=steps)
+    names, tensors = model.flatten_params(params, layers)
+    artifact_io.save(wpath, [(n, np.asarray(t)) for n, t in zip(names, tensors)])
+    with open(lpath, "w") as f:
+        json.dump(log, f, indent=1)
+    return params, layers, log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=os.environ.get("PQ_MODELS", "pq-tiny"))
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("PQ_PRETRAIN_STEPS", "600")))
+    ap.add_argument("--retrain", action="store_true")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "tokenizer": {
+            "pad": PAD_ID, "bos": BOS_ID, "eos": EOS_ID,
+            "byte_offset": BYTE_OFFSET, "vocab_size": VOCAB_SIZE,
+            "delimiter_ids": list(DELIMITER_IDS),
+        },
+        "corpus": CorpusConfig().to_dict(),
+        "models": {},
+        "kernels": {},
+    }
+
+    for name in args.models.split(","):
+        cfg = CONFIGS[name]
+        params, layers, ptlog = get_checkpoint(cfg, out, args.steps, args.retrain)
+        wnames, _ = model.flatten_params(params, layers)
+        mentry = {
+            "config": cfg.to_dict(),
+            "weights_file": f"{cfg.name}/weights.bin",
+            "weight_names": wnames,
+            "pretrain": {k: ptlog.get(k) for k in ("final_loss", "steps", "wall_s")},
+            "executables": {},
+        }
+        specs = export_specs.model_specs(cfg)
+        for ename, (fn, inputs, outputs, geom) in specs.items():
+            rel = f"{cfg.name}/{ename}.hlo.txt"
+            dt = export_one(fn, inputs, os.path.join(out, rel))
+            mentry["executables"][ename] = {
+                "file": rel,
+                "inputs": _sig(inputs),
+                "outputs": outputs,
+                "geom": geom,
+            }
+            print(f"  [{cfg.name}] exported {ename} ({dt:.1f}s)")
+        manifest["models"][cfg.name] = mentry
+
+    kdir = os.path.join(out, "kernels")
+    os.makedirs(kdir, exist_ok=True)
+    for kname, (fn, inputs, outputs) in export_specs.kernel_specs().items():
+        rel = f"kernels/{kname}.hlo.txt"
+        dt = export_one(fn, inputs, os.path.join(out, rel))
+        manifest["kernels"][kname] = {
+            "file": rel,
+            "inputs": _sig(inputs),
+            "outputs": outputs,
+        }
+        print(f"  exported kernel {kname} ({dt:.1f}s)")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(out, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+    print(f"wrote {os.path.join(out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""weights.bin container — bit-exact twin of rust/src/runtime/weights.rs.
+
+Layout (little-endian):
+  magic  b"PQTW"
+  u32    version (=1)
+  u32    tensor count
+  per tensor:
+    u16  name length, then name bytes (utf-8)
+    u8   dtype: 0 = f32, 1 = i32
+    u8   ndim
+    u32  dims[ndim]
+    raw  data (prod(dims) * 4 bytes, little-endian)
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"PQTW"
+VERSION = 1
+_DTYPES = {0: np.float32, 1: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def save(path: str, tensors):
+    """tensors: list of (name, np.ndarray)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            code = _CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load(path: str):
+    """Returns list of (name, np.ndarray) in file order."""
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            n = int(np.prod(dims)) if ndim else 1
+            arr = np.frombuffer(f.read(4 * n), dtype=_DTYPES[code]).reshape(dims)
+            out.append((name, arr))
+    return out

@@ -1,0 +1,110 @@
+"""Model / export configuration shared between the build path (python) and the
+runtime (rust, via artifacts/manifest.json).
+
+Every numeric choice here is mirrored in rust/src/config/. Keep in sync via the
+manifest — rust never hardcodes these, it reads manifest.json.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+# ---------------------------------------------------------------------------
+# Tokenizer constants (byte-level; see tokenizer.py and rust/src/tokenizer/)
+# ---------------------------------------------------------------------------
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+BYTE_OFFSET = 3  # token id of byte b is b + BYTE_OFFSET
+VOCAB_SIZE = 272  # 3 specials + 256 bytes + 13 reserved (rounded to 16*17)
+
+DOT_ID = BYTE_OFFSET + ord(".")  # 49
+NL_ID = BYTE_OFFSET + ord("\n")  # 13
+# Sink *candidate* token ids (paper: delimiter tokens "." and "\n"); the
+# initial position is always a candidate regardless of token id.
+DELIMITER_IDS = (NL_ID, DOT_ID)
+
+
+@dataclass
+class ModelConfig:
+    """Llama-architecture config with the sink-injection substrate.
+
+    Constraints: d_model, d_ff and d_head must be powers of two (Walsh-
+    Hadamard rotations R1/R4/R3 are built with the Sylvester construction).
+    """
+
+    name: str = "pq-tiny"
+    vocab_size: int = VOCAB_SIZE
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 256
+    rope_theta: float = 10000.0
+
+    # --- sink-injection substrate (see DESIGN.md §3) ---
+    o_model: int = 3             # number of sink slots (first o candidates)
+    inject_amp: float = 10000.0  # amplitude A of the down_proj-input outlier
+                                 # (max channel ≈ A*0.15 ≈ 1500, matching the
+                                 # paper's >1000 massive activations)
+    inject_delta: float = 0.05 # multiplicative Q/K/V shrink on sink tokens
+
+    # --- sequence geometry ---
+    max_prefix: int = 4        # P: padded prefix-KV slots in every executable
+    train_seq: int = 128
+    eval_seq: int = 256
+    cache_max: int = 320       # S_max for the decode KV cache
+
+    # observation sites, in order, for the stats tensor M[L, n_sites, B, S]
+    sites: tuple = ("attn_in", "o_in", "mlp_in", "down_in", "q", "k", "v")
+
+    @property
+    def n_sites(self) -> int:
+        return len(self.sites)
+
+    def to_dict(self):
+        d = asdict(self)
+        d["sites"] = list(self.sites)
+        return d
+
+
+@dataclass
+class CorpusConfig:
+    """Synthetic bigram language; mirrored exactly in rust/src/data/.
+
+    All sampling is integer-only on a SplitMix64 stream so python and rust
+    produce bit-identical corpora.
+    """
+
+    n_words: int = 256        # synthetic word vocabulary
+    n_followers: int = 8      # bigram followers per word
+    follow_prob10: int = 7    # P(follow) = follow_prob10 / 10
+    word_seed: int = 0x5EED_0001
+    train_seed: int = 0x5EED_0002
+    eval_seed: int = 0x5EED_0003
+    train_chars: int = 600_000
+    eval_chars: int = 120_000
+
+    def to_dict(self):
+        return asdict(self)
+
+
+TINY = ModelConfig()
+SMALL = ModelConfig(
+    name="pq-small",
+    d_model=256,
+    n_layers=6,
+    n_heads=8,
+    d_head=32,
+    d_ff=512,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL)}
+
+
+def batch_geom(cfg: ModelConfig):
+    """Canonical (batch, seq) shapes for the exported executables."""
+    return {
+        "fwd": (8, cfg.eval_seq),     # eval / calibration forward
+        "block": (8, cfg.eval_seq),   # block-wise calibration + fine-tuning
+        "decode": (8, 1),             # decode step
+        "parity": (2, 32),            # pallas-in-model parity executable
+    }

@@ -1,0 +1,98 @@
+"""Synthetic bigram language corpus, bit-exact twin of rust/src/data/.
+
+The language: a 256-word synthetic vocabulary; each word has 8 "follower"
+words forming a bigram chain; sentences of 3-10 words end with "."; paragraphs
+of 2-6 sentences end with "\n".  Word frequencies are Zipf-like.  All sampling
+is *integer-only* on SplitMix64 so rust regenerates the identical byte stream.
+
+Delimiters "." and "\n" are the sink-candidate tokens (see config.DELIMITER_IDS),
+mirroring the paper's observation that outliers live on low-semantic tokens.
+"""
+
+from .config import CorpusConfig
+
+_MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Bit-exact twin of rust/src/data/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+        return (z ^ (z >> 31)) & _MASK
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+
+def build_words(cfg: CorpusConfig):
+    """The word list + follower table + Zipf cumulative weights."""
+    rng = SplitMix64(cfg.word_seed)
+    words = []
+    for _ in range(cfg.n_words):
+        ln = 2 + rng.below(6)
+        words.append("".join(chr(ord("a") + rng.below(26)) for _ in range(ln)))
+    followers = [
+        [rng.below(cfg.n_words) for _ in range(cfg.n_followers)]
+        for _ in range(cfg.n_words)
+    ]
+    cum, total = [], 0
+    for r in range(cfg.n_words):
+        total += 1_000_000 // (r + 3)  # integer Zipf weight
+        cum.append(total)
+    return words, followers, cum
+
+
+def _zipf_sample(rng: SplitMix64, cum) -> int:
+    u = rng.below(cum[-1])
+    lo, hi = 0, len(cum) - 1
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if cum[mid] > u:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
+
+
+def generate_chars(cfg: CorpusConfig, seed: int, n_chars: int) -> str:
+    """Generate at least n_chars characters of corpus text."""
+    words, followers, cum = build_words(cfg)
+    rng = SplitMix64(seed)
+    out = []
+    total = 0
+    prev = _zipf_sample(rng, cum)
+    while total < n_chars:
+        n_sent = 2 + rng.below(5)
+        for s in range(n_sent):
+            n_w = 3 + rng.below(8)
+            parts = []
+            for _ in range(n_w):
+                if rng.below(10) < cfg.follow_prob10:
+                    prev = followers[prev][rng.below(cfg.n_followers)]
+                else:
+                    prev = _zipf_sample(rng, cum)
+                parts.append(words[prev])
+            sent = " ".join(parts) + "."
+            out.append(sent)
+            total += len(sent)
+            if s != n_sent - 1:
+                out.append(" ")
+                total += 1
+        out.append("\n")
+        total += 1
+    return "".join(out)
+
+
+def train_text(cfg: CorpusConfig = CorpusConfig()) -> str:
+    return generate_chars(cfg, cfg.train_seed, cfg.train_chars)
+
+
+def eval_text(cfg: CorpusConfig = CorpusConfig()) -> str:
+    return generate_chars(cfg, cfg.eval_seed, cfg.eval_chars)

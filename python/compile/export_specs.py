@@ -1,0 +1,336 @@
+"""Registry of every AOT-exported executable: function + input signature.
+
+Each spec is (fn, inputs) where inputs is an ordered list of
+(name, ShapeDtypeStruct).  aot.py lowers fn against exactly these specs and
+records the signature in manifest.json; rust/src/runtime/ binds inputs by
+this order.  Keep names stable — rust addresses inputs by name via the
+manifest, not by hardcoded position.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .config import ModelConfig, batch_geom
+from .kernels import hadamard as khad
+from .kernels import quant_matmul as kqmm
+from .kernels import quant_ops as kq
+from .kernels import ref
+from .kernels import rmsnorm as krms
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _s(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _weight_specs(cfg: ModelConfig):
+    d, f, v, l = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    shapes = {
+        "emb": (v, d), "head": (d, v), "lnf": (d,), "inject_v": (l, f),
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "wg": (d, f), "wu": (d, f), "wd": (f, d), "ln1": (d,), "ln2": (d,),
+    }
+    specs = []
+    for base in ("emb", "head", "lnf", "inject_v"):
+        specs.append((base, _s(shapes[base])))
+    for li in range(l):
+        for t in model.LAYER_TENSORS:
+            specs.append((f"layers.{li}.{t}", _s(shapes[t])))
+    return specs
+
+
+def _qcfg_specs(cfg: ModelConfig, per_layer: bool):
+    """The quantization-parameter inputs shared by fwd/block executables."""
+    l, h, dh, f = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.d_ff
+    act = (l, 4) if per_layer else (4,)
+    kv = (l, 2, h) if per_layer else (2, h)
+    return [
+        ("act_scales", _s(act)),
+        ("kv_scales", _s(kv)),
+        ("qmax_act", _s(())),
+        ("qmax_kv", _s(())),
+        ("r3", _s((dh, dh))),
+        ("r4", _s((f, f))),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Full-model forwards
+# ---------------------------------------------------------------------------
+
+
+def fwd_spec(cfg: ModelConfig, mode: str, b: int, s: int,
+             collect_stats=True, collect_captures=False):
+    l, h, p, dh = cfg.n_layers, cfg.n_heads, cfg.max_prefix, cfg.d_head
+    inputs = [
+        ("tokens", _s((b, s), I32)),
+        ("n_prefix", _s((), I32)),
+        ("n_ctx_sinks", _s((), I32)),
+        ("prefix_k", _s((l, h, p, dh))),
+        ("prefix_v", _s((l, h, p, dh))),
+    ] + _qcfg_specs(cfg, per_layer=True)
+    wspecs = _weight_specs(cfg)
+    nw = len(wspecs)
+
+    def fn(tokens, n_prefix, n_ctx_sinks, pk, pv,
+           act_scales, kv_scales, qa, qk, r3, r4, *weights):
+        params, layers = model.unflatten_params(cfg, list(weights))
+        out = model.forward(
+            cfg, params, layers, tokens, n_prefix, n_ctx_sinks, pk, pv,
+            mode, act_scales, kv_scales, qa, qk, r3, r4,
+            collect_stats=collect_stats, collect_captures=collect_captures,
+        )
+        res = [out["logits"], out["k_cache"], out["v_cache"], out["active"]]
+        names = ["logits", "k_cache", "v_cache", "active"]
+        if collect_stats:
+            res.append(out["stats"])
+            names.append("stats")
+        if collect_captures:
+            res.append(out["captures"])
+            names.append("captures")
+        return tuple(res), names
+
+    outputs = ["logits", "k_cache", "v_cache", "active"]
+    if collect_stats:
+        outputs.append("stats")
+    if collect_captures:
+        outputs.append("captures")
+
+    def wrapped(*args):
+        res, _ = fn(*args)
+        return res
+
+    return wrapped, inputs + wspecs, outputs
+
+
+# ---------------------------------------------------------------------------
+# Single-block executables (calibration + fine-tuning)
+# ---------------------------------------------------------------------------
+
+
+def block_spec(cfg: ModelConfig, mode: str, b: int, s: int, with_grads: bool):
+    d, f, h, p, dh = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.max_prefix, cfg.d_head
+    inputs = [
+        ("x", _s((b, s, d))),
+        ("active", _s((b, s))),
+        ("n_prefix", _s((), I32)),
+        ("prefix_k", _s((h, p, dh))),
+        ("prefix_v", _s((h, p, dh))),
+    ] + _qcfg_specs(cfg, per_layer=False) + [
+        ("inject_v", _s((f,))),
+    ] + [(t, _s({
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "wg": (d, f), "wu": (d, f), "wd": (f, d), "ln1": (d,), "ln2": (d,),
+    }[t])) for t in model.LAYER_TENSORS]
+
+    def run_block(x, active, n_prefix, pk, pv, act_scales, kv_scales,
+                  qa, qk, r3, r4, iv, *lw):
+        lp = {t: lw[i] for i, t in enumerate(model.LAYER_TENSORS)}
+        positions = n_prefix + jnp.arange(s)
+        cos, sin = model.rope_tables(cfg, positions)
+        y, k_st, v_st, _ = model.block_apply(
+            cfg, lp, iv, x, active, cos, sin, pk, pv, n_prefix,
+            mode, act_scales, kv_scales, qa, qk, r3, r4, collect_stats=False,
+        )
+        return y, k_st, v_st
+
+    if not with_grads:
+        return run_block, inputs, ["y", "k_store", "v_store"]
+
+    inputs_g = inputs + [("target", _s((b, s, d)))]
+
+    def run_grads(x, active, n_prefix, pk, pv, act_scales, kv_scales,
+                  qa, qk, r3, r4, iv, *lw_and_target):
+        lw = lw_and_target[: len(model.LAYER_TENSORS)]
+        target = lw_and_target[len(model.LAYER_TENSORS)]
+
+        def loss_fn(act_s, kv_s, weights):
+            y, _, _ = run_block(
+                x, active, n_prefix, pk, pv, act_s, kv_s, qa, qk, r3, r4,
+                iv, *weights,
+            )
+            return jnp.mean((y - target) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(
+            act_scales, kv_scales, list(lw)
+        )
+        g_act, g_kv, g_w = grads
+        return (loss, g_act, g_kv, *g_w)
+
+    outputs = ["loss", "g_act_scales", "g_kv_scales"] + [
+        f"g_{t}" for t in model.LAYER_TENSORS
+    ]
+    return run_grads, inputs_g, outputs
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_spec(cfg: ModelConfig, mode: str, b: int):
+    l, h, dh, smax = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.cache_max
+    inputs = [
+        ("tokens", _s((b, 1), I32)),
+        ("cache_len", _s((), I32)),
+        ("n_sinks", _s((b,), I32)),
+        ("k_cache", _s((l, b, h, smax, dh))),
+        ("v_cache", _s((l, b, h, smax, dh))),
+    ] + _qcfg_specs(cfg, per_layer=True) + _weight_specs(cfg)
+
+    def fn(tokens, cache_len, n_sinks, kc, vc,
+           act_scales, kv_scales, qa, qk, r3, r4, *weights):
+        params, layers = model.unflatten_params(cfg, list(weights))
+        return model.decode_step(
+            cfg, params, layers, tokens, cache_len, n_sinks, kc, vc,
+            mode, act_scales, kv_scales, qa, qk, r3, r4,
+        )
+
+    return fn, inputs, ["logits", "k_cache", "v_cache", "n_sinks"]
+
+
+# ---------------------------------------------------------------------------
+# Kernel micro executables (Table 8 / Table 9 + pallas parity)
+# ---------------------------------------------------------------------------
+
+QUANT_BENCH_SHAPES = [(1, 4096), (16, 4096), (256, 4096), (2048, 4096)]
+QMM_BENCH_SHAPES = [(1, 1024, 1024), (64, 1024, 1024), (512, 1024, 1024)]
+PALLAS_SHAPE = (64, 128)
+PALLAS_QMM = (64, 128, 128)
+
+
+def kernel_specs():
+    """name -> (fn, inputs, outputs)."""
+    specs = {}
+
+    for t, c in QUANT_BENCH_SHAPES:
+        specs[f"quant_static_jnp_{t}x{c}"] = (
+            lambda x, s, q: (ref.fake_quant_static(x, s, q),),
+            [("x", _s((t, c))), ("s", _s(())), ("qmax", _s(()))],
+            ["xq"],
+        )
+        specs[f"quant_dynamic_jnp_{t}x{c}"] = (
+            lambda x, q: (ref.fake_quant_dynamic(x, q),),
+            [("x", _s((t, c))), ("qmax", _s(()))],
+            ["xq"],
+        )
+        specs[f"hadamard_jnp_{t}x{c}"] = (
+            lambda x: (ref.hadamard_transform(x),),
+            [("x", _s((t, c)))],
+            ["y"],
+        )
+
+    pt, pc = PALLAS_SHAPE
+    specs[f"quant_static_pallas_{pt}x{pc}"] = (
+        lambda x, s, q: (kq.quant_static(x, s, q),),
+        [("x", _s((pt, pc))), ("s", _s(())), ("qmax", _s(()))],
+        ["xq"],
+    )
+    specs[f"quant_dynamic_pallas_{pt}x{pc}"] = (
+        lambda x, q: kq.quant_dynamic(x, q),
+        [("x", _s((pt, pc))), ("qmax", _s(()))],
+        ["xq", "scales"],
+    )
+    specs[f"hadamard_pallas_{pt}x{pc}"] = (
+        lambda x: (khad.hadamard(x),),
+        [("x", _s((pt, pc)))],
+        ["y"],
+    )
+    specs[f"rmsnorm_jnp_{pt}x{pc}"] = (
+        lambda x, g: (ref.rmsnorm(x, g),),
+        [("x", _s((pt, pc))), ("g", _s((pc,)))],
+        ["y"],
+    )
+    specs[f"rmsnorm_pallas_{pt}x{pc}"] = (
+        lambda x, g: (krms.rmsnorm(x, g),),
+        [("x", _s((pt, pc))), ("g", _s((pc,)))],
+        ["y"],
+    )
+
+    for m, k, n in QMM_BENCH_SHAPES:
+        specs[f"qmm_static_jnp_{m}x{k}x{n}"] = (
+            lambda x, wq, sx, sw, q: (ref.quant_matmul_static(x, wq, sx, sw, q),),
+            [("x", _s((m, k))), ("wq", _s((k, n))), ("sx", _s(())),
+             ("sw", _s((n,))), ("qmax", _s(()))],
+            ["y"],
+        )
+
+        def qmm_dyn(x, wq, sw, q):
+            sx = ref.dynamic_scale(x, q)          # [M,1] — the extra pass
+            xq = jnp.clip(jnp.round(x / sx), -q - 1.0, q)
+            return ((xq @ wq) * (sx * sw[None, :]),)
+
+        specs[f"qmm_dynamic_jnp_{m}x{k}x{n}"] = (
+            qmm_dyn,
+            [("x", _s((m, k))), ("wq", _s((k, n))), ("sw", _s((n,))),
+             ("qmax", _s(()))],
+            ["y"],
+        )
+        specs[f"mm_fp_jnp_{m}x{k}x{n}"] = (
+            lambda x, w: (x @ w,),
+            [("x", _s((m, k))), ("w", _s((k, n)))],
+            ["y"],
+        )
+
+    # L1→L2 composition parity: rmsnorm → hadamard → quantized matmul,
+    # one chain via pallas kernels, one via the jnp oracles.
+    m, k, n = PALLAS_QMM
+
+    def chain_pallas(x, g, s, q, wq, sw):
+        y = krms.rmsnorm(x, g)
+        y = khad.hadamard(y)
+        return (kqmm.quant_matmul(y, wq, s, sw, q),)
+
+    def chain_ref(x, g, s, q, wq, sw):
+        y = ref.rmsnorm(x, g)
+        y = ref.hadamard_transform(y)
+        return (ref.quant_matmul_static(y, wq, s, sw, q),)
+
+    chain_inputs = [
+        ("x", _s((m, k))), ("g", _s((k,))), ("s", _s(())), ("qmax", _s(())),
+        ("wq", _s((k, n))), ("sw", _s((n,))),
+    ]
+    specs[f"chain_pallas_{m}x{k}x{n}"] = (chain_pallas, chain_inputs, ["y"])
+    specs[f"chain_ref_{m}x{k}x{n}"] = (chain_ref, chain_inputs, ["y"])
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Per-model executable table
+# ---------------------------------------------------------------------------
+
+
+def model_specs(cfg: ModelConfig):
+    """name -> (fn, inputs, outputs, geom) for one model config."""
+    g = batch_geom(cfg)
+    fb, fs = g["fwd"]
+    bb, bs = g["block"]
+    db, _ = g["decode"]
+    specs = {}
+
+    f, i, o = fwd_spec(cfg, "fp", fb, fs, collect_stats=True, collect_captures=True)
+    specs["fwd_obs"] = (f, i, o, {"batch": fb, "seq": fs})
+    # serving-path forwards: NO stats collection (§Perf L2-1 — the per-site
+    # token-max reductions are observation-only; keeping them in the serving
+    # graph cost ~7 extra reduce ops per layer per call)
+    f, i, o = fwd_spec(cfg, "static", fb, fs, collect_stats=False)
+    specs["fwd_static"] = (f, i, o, {"batch": fb, "seq": fs})
+    f, i, o = fwd_spec(cfg, "dynamic", fb, fs, collect_stats=False)
+    specs["fwd_dynamic"] = (f, i, o, {"batch": fb, "seq": fs})
+    f, i, o = fwd_spec(cfg, "fp", 1, cfg.max_prefix, collect_stats=False)
+    specs["fwd_prefix"] = (f, i, o, {"batch": 1, "seq": cfg.max_prefix})
+
+    for mode in ("static", "dynamic"):
+        f, i, o = block_spec(cfg, mode, bb, bs, with_grads=False)
+        specs[f"block_{mode}"] = (f, i, o, {"batch": bb, "seq": bs})
+        f, i, o = block_spec(cfg, mode, bb, bs, with_grads=True)
+        specs[f"block_grads_{mode}"] = (f, i, o, {"batch": bb, "seq": bs})
+    f, i, o = block_spec(cfg, "fp", bb, bs, with_grads=False)
+    specs["block_fp"] = (f, i, o, {"batch": bb, "seq": bs})
+
+    f, i, o = decode_spec(cfg, "static", db)
+    specs["decode_static"] = (f, i, o, {"batch": db, "seq": 1})
+    return specs

@@ -1,0 +1,58 @@
+"""Pallas Walsh-Hadamard transform — the online R3/R4 rotation kernel.
+
+QuaRot/PrefixQuant run two rotations *online* (R3 on post-RoPE Q/K heads, R4
+on down_proj inputs).  On GPU the paper uses a fused Walsh-Hadamard CUDA
+kernel; the TPU rethink is an in-VMEM butterfly: load a (BLOCK_T × n) tile
+once, run log2(n) add/sub stages entirely in registers/VMEM, store once —
+instead of a memory-bound GEMM against the dense H matrix.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 64
+
+
+def _wht_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    t, n = x.shape
+    h = 1
+    # log2(n) butterfly stages, all in VMEM. The reshapes are free (layout
+    # permutations of a resident tile); each stage is one VPU add + sub.
+    while h < n:
+        x = x.reshape(t, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1).reshape(t, n)
+        h *= 2
+    o_ref[...] = x / jnp.sqrt(jnp.float32(n))
+
+
+def hadamard(x, block_t: int = BLOCK_T):
+    """Normalized WHT along the last axis of x[T, n]; n must be a power of 2."""
+    t, n = x.shape
+    assert n & (n - 1) == 0, f"WHT needs power-of-2 width, got {n}"
+    bt = min(block_t, t)
+    return pl.pallas_call(
+        _wht_kernel,
+        grid=(pl.cdiv(t, bt),),
+        in_specs=[pl.BlockSpec((bt, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def sylvester(n: int) -> jnp.ndarray:
+    """Dense normalized Hadamard matrix (host-side twin of rust rotation.rs)."""
+    assert n & (n - 1) == 0
+    h = jnp.array([[1.0]], dtype=jnp.float32)
+    while h.shape[0] < n:
+        h = jnp.block([[h, h], [h, -h]])
+    return h / jnp.sqrt(jnp.float32(n))
+
+
+def vmem_bytes(block_t: int, n: int, dtype_bytes: int = 4) -> int:
+    """Butterfly needs in+out tiles plus one stage temp."""
+    return 3 * block_t * n * dtype_bytes

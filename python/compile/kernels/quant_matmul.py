@@ -1,0 +1,101 @@
+"""Pallas fused statically-quantized matmul — the paper's W4A4 GEMM analog.
+
+GPU original: CUTLASS INT4 GEMM with the dequant `(s_w * s_x)` folded into the
+epilogue, quantization of x done by a separate kernel (Table 9 "+ static
+quant" row fuses it).  TPU rethink:
+
+  * grid (M/Bm, N/Bn, K/Bk); x-tile and w-tile live in VMEM,
+  * activation quantization happens on the x-tile AS IT IS CONSUMED — a few
+    VPU ops between the VMEM load and the MXU dot, so static quantization
+    adds no extra HBM pass (this is exactly why static beats dynamic: a
+    per-token max would need all of K before the first dot can issue),
+  * integer-domain values feed the MXU dot; the f32 accumulator is scaled by
+    (s_x * s_w[n]) in the epilogue on the last K step.
+
+Weights arrive pre-quantized (integer codes) from the rust host quantizer.
+The output tile is revisited across the sequential K grid axis, so it doubles
+as the accumulator (no scratch needed — portable across pallas versions).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM, BN, BK = 32, 64, 128
+
+
+def _qmm_kernel(x_ref, wq_ref, sx_ref, sw_ref, qmax_ref, o_ref, *, nk):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    sx = jnp.maximum(sx_ref[0], 1e-8)
+    qmax = qmax_ref[0]
+    x = x_ref[...]
+    # Quantize the activation tile in-register (static scale — no reduction).
+    xq = jnp.clip(jnp.round(x / sx), -qmax - 1.0, qmax)
+    o_ref[...] += jnp.dot(xq, wq_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == nk - 1)
+    def _epilogue():
+        # Dequant folded into the writeback (CUTLASS-epilogue analog).
+        o_ref[...] = o_ref[...] * (sx * sw_ref[...])
+
+
+def quant_matmul(x, w_q, s_x, s_w, qmax, bm=BM, bn=BN, bk=BK):
+    """(s_w*s_x) * (Q(x) @ w_q) for x[M,K] and integer-code weights w_q[K,N].
+
+    s_x is the scalar static activation step, s_w[N] the per-channel weight
+    steps. Matches kernels.ref.quant_matmul_static exactly.
+    """
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    # pad up to block multiples: pallas interpret fills out-of-bounds tile
+    # loads with garbage, so edge tiles must not exist (zero-padding is exact
+    # for this kernel: padded x rows/K-columns quantize to 0 and contribute 0)
+    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+    if (mp, kp, np_) != (m, k, n):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+        w_q = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
+        s_w = jnp.pad(s_w, (0, np_ - n))
+        out = quant_matmul(x, w_q, s_x, s_w, qmax, bm, bn, bk)
+        return out[:m, :n]
+    nk = pl.cdiv(k, bk)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), nk)
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_q, jnp.reshape(s_x, (1,)), s_w, jnp.reshape(qmax, (1,)))
+
+
+def vmem_bytes(bm=BM, bn=BN, bk=BK, dtype_bytes: int = 4) -> int:
+    """x-tile + w-tile + out/acc tile + scale strips, double-buffered inputs."""
+    return (2 * (bm * bk + bk * bn) + bm * bn + bn + 2) * dtype_bytes
+
+
+def mxu_utilization_estimate(m, n, k, bm=BM, bn=BN, bk=BK) -> float:
+    """Fraction of MXU issue slots doing useful work for a full tiling
+    (edge-tile waste only; assumes perfect double buffering)."""
+    import math
+
+    full = m * n * k
+    padded = (
+        math.ceil(m / bm) * bm * math.ceil(n / bn) * bn * math.ceil(k / bk) * bk
+    )
+    return full / padded

@@ -1,0 +1,98 @@
+"""Pallas quantization kernels — the paper's quantization-overhead hot spot.
+
+The paper's Table 8 mechanism: *static* per-tensor quantization is a pure
+elementwise pass (scale known offline), while *dynamic* per-token quantization
+needs a per-row abs-max reduction before any value can be scaled.  On TPU the
+static kernel fuses into the operand-load tile loop (one HBM→VMEM pass); the
+dynamic kernel forces an extra VMEM traversal and breaks double-buffering.
+
+Both kernels run with interpret=True here (CPU PJRT can't execute Mosaic) and
+are verified against kernels.ref by pytest/hypothesis and the rust parity test.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row tile: one VMEM block is (BLOCK_T tokens × full hidden dim).  With
+# d_model≤8192 f32 this is ≤ BLOCK_T*32KB — comfortably inside a 16MiB VMEM
+# budget at BLOCK_T=64 (see DESIGN.md §Perf for the footprint table).
+BLOCK_T = 64
+
+
+def _static_kernel(x_ref, s_ref, qmax_ref, o_ref):
+    s = jnp.maximum(s_ref[0], 1e-8)
+    qmax = qmax_ref[0]
+    x = x_ref[...]
+    q = jnp.clip(jnp.round(x / s), -qmax - 1.0, qmax)
+    o_ref[...] = q * s
+
+
+def quant_static(x, s, qmax, block_t: int = BLOCK_T):
+    """Fake-quantize x[T, C] with a single static step size s (scalar).
+
+    Grid over token tiles only; the scale is an SMEM scalar so the kernel is
+    one elementwise VPU pass — the paper's "3x cheaper than dynamic" claim.
+    """
+    t, c = x.shape
+    bt = min(block_t, t)
+    grid = (pl.cdiv(t, bt),)
+    return pl.pallas_call(
+        _static_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, c), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, c), x.dtype),
+        interpret=True,
+    )(x, jnp.reshape(s, (1,)), jnp.reshape(qmax, (1,)))
+
+
+def _dynamic_kernel(x_ref, qmax_ref, o_ref, s_ref):
+    qmax = qmax_ref[0]
+    x = x_ref[...]
+    # The extra pass static quantization avoids: a per-token abs-max reduce.
+    m = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(m, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / s), -qmax - 1.0, qmax)
+    o_ref[...] = q * s
+    s_ref[...] = s
+
+
+def quant_dynamic(x, qmax, block_t: int = BLOCK_T):
+    """Per-token dynamic fake-quant of x[T, C]; returns (xq, scales[T,1])."""
+    t, c = x.shape
+    bt = min(block_t, t)
+    grid = (pl.cdiv(t, bt),)
+    return pl.pallas_call(
+        _dynamic_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, c), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, c), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, c), x.dtype),
+            jax.ShapeDtypeStruct((t, 1), x.dtype),
+        ],
+        interpret=True,
+    )(x, jnp.reshape(qmax, (1,)))
+
+
+def vmem_bytes_static(block_t: int, c: int, dtype_bytes: int = 4) -> int:
+    """Static-quant VMEM footprint: in tile + out tile + 2 scalars."""
+    return 2 * block_t * c * dtype_bytes + 2 * dtype_bytes
+
+
+def vmem_bytes_dynamic(block_t: int, c: int, dtype_bytes: int = 4) -> int:
+    """Dynamic adds the per-token scale strip and the reduction temp."""
+    return 2 * block_t * c * dtype_bytes + 2 * block_t * dtype_bytes + dtype_bytes

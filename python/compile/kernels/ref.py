@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *semantic definition* of each kernel.  The model graph (L2)
+calls these directly so CPU executables stay fast, while the Pallas twins in
+this package lower to the identical math (asserted by pytest + hypothesis and
+by the rust-side parity executable).  On a real TPU the Pallas twins replace
+these at lowering time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def _sg(x):
+    return jax.lax.stop_gradient(x)
+
+
+def fake_quant_static(x, s, qmax):
+    """Symmetric fake-quant with a given (static) step size.
+
+    LSQ-style gradients: straight-through on round, analytic through the
+    clip and the s product, so block-wise fine-tuning can train `s`.
+    qmax is the positive clip level (2^{N-1}-1); the negative level is
+    -qmax-1 as in Eq.(1) of the paper.
+    """
+    s = jnp.maximum(s, 1e-8)
+    r = x / s
+    c = jnp.clip(r, -qmax - 1.0, qmax)
+    rq = c + _sg(jnp.round(c) - c)
+    return s * rq
+
+
+def quant_static_int(x, s, qmax):
+    """The integer codes (as f32) — what a real kernel would feed the MXU."""
+    s = jnp.maximum(s, 1e-8)
+    return jnp.clip(jnp.round(x / s), -qmax - 1.0, qmax)
+
+
+def dynamic_scale(x, qmax, axis=-1):
+    """Per-token dynamic step size: max|x| along `axis` / qmax."""
+    m = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    return jnp.maximum(m, 1e-8) / qmax
+
+
+def fake_quant_dynamic(x, qmax, axis=-1):
+    """Per-token symmetric dynamic fake-quant (the QuaRot-style path)."""
+    s = _sg(dynamic_scale(x, qmax, axis=axis))
+    r = x / s
+    c = jnp.clip(r, -qmax - 1.0, qmax)
+    rq = c + _sg(jnp.round(c) - c)
+    return s * rq
+
+
+def hadamard_transform(x):
+    """Normalized Walsh-Hadamard transform along the last axis (power of 2).
+
+    Equivalent to x @ H_n / sqrt(n) with the Sylvester Hadamard matrix.
+    """
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"WHT needs a power-of-2 size, got {n}"
+    orig_shape = x.shape
+    x = x.reshape(-1, n)
+    h = 1
+    while h < n:
+        x = x.reshape(-1, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1)
+        x = x.reshape(-1, n)
+        h *= 2
+    return (x / jnp.sqrt(jnp.float32(n))).reshape(orig_shape)
+
+
+def rmsnorm(x, gamma, eps=1e-5):
+    """RMSNorm along the last axis."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def quant_matmul_static(x, w_q, s_x, s_w, qmax):
+    """Fused statically-quantized linear: the paper's W4A4 GEMM analog.
+
+    x      f32[M, K]   activations
+    w_q    f32[K, N]   integer weight codes (pre-quantized host-side)
+    s_x    f32[]       static per-tensor activation step
+    s_w    f32[N]      per-channel weight steps
+    Returns (s_w * s_x) * (Q(x) @ w_q) — Eq.(2) of the paper.
+    """
+    xq = quant_static_int(x, s_x, qmax)
+    acc = xq @ w_q
+    return acc * (s_x * s_w)
+
+
+def softmax_attention(q, k, v, mask):
+    """Plain masked attention oracle: q[B,H,Tq,Dh] k/v[B,H,Tk,Dh] mask[...,Tq,Tk]."""
+    dh = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

@@ -1,0 +1,31 @@
+"""Pallas fused RMSNorm kernel (pre-attention / pre-MLP norm)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 64
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref):
+    x = x_ref[...]
+    g = g_ref[...]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + 1e-5) * g
+
+
+def rmsnorm(x, gamma, block_t: int = BLOCK_T):
+    """RMSNorm of x[T, C] with gain gamma[C]; one fused VMEM pass."""
+    t, c = x.shape
+    bt = min(block_t, t)
+    return pl.pallas_call(
+        _rmsnorm_kernel,
+        grid=(pl.cdiv(t, bt),),
+        in_specs=[
+            pl.BlockSpec((bt, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, c), x.dtype),
+        interpret=True,
+    )(x, gamma)

@@ -1,0 +1,453 @@
+"""L2: Llama-architecture model with the PrefixQuant machinery.
+
+Pieces (all pure functions over param pytrees):
+
+  * `init_params`      — init a model (weights [in, out] layout).
+  * `sink_mask`        — the dynamic "first-o sink candidates" mask. This is
+    the phenomenology substrate: candidates are the initial position and the
+    delimiter tokens; only the first `o_model` candidates in the combined
+    (prefixed-KV + sequence) window become sinks, so prefixing genuinely
+    prevents new outlier tokens, as in the paper (§5.1 / Fig 4c).
+  * `forward`          — prefill/eval forward. Modes: "fp" (observation, with
+    per-site token-max stats M and block-input captures), "static" (per-tensor
+    static activation + per-head static KV fake-quant, scales as *inputs*),
+    "dynamic" (per-token / per-token-per-head dynamic — the QuaRot path).
+  * `block_apply`      — one transformer block, reused by forward and exported
+    standalone for grid-search calibration and block-wise fine-tuning.
+  * `decode_step`      — single-token decode against a KV cache (serving path).
+  * `lm_loss`          — next-token cross-entropy (pretraining).
+
+Rotation contract: R1 (hidden basis) and R2 (per-head value basis) are folded
+into the weights HOST-SIDE by rust (quant/rotation.rs) after absorbing the
+RMSNorm gains; executables therefore see only the *online* rotations R3 (post-
+RoPE Q/K) and R4 (down_proj input), which enter as runtime matrix inputs —
+identity disables them, Walsh-Hadamard enables QuaRot/PrefixQuant mode.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import DELIMITER_IDS, ModelConfig
+from .kernels import ref
+
+SITE_ATTN_IN, SITE_O_IN, SITE_MLP_IN, SITE_DOWN_IN, SITE_Q, SITE_K, SITE_V = range(7)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+LAYER_TENSORS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd", "ln1", "ln2")
+
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize params. inject_v are fixed unit buffers (not trained)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    keys = jax.random.split(key, 4 + cfg.n_layers)
+
+    def dense(k, shape):
+        fan_in = shape[0]
+        return (jax.random.normal(k, shape) / jnp.sqrt(jnp.float32(fan_in))).astype(
+            jnp.float32
+        )
+
+    layers = []
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(keys[4 + li], 8)
+        layers.append(
+            {
+                "wq": dense(lk[0], (d, d)),
+                "wk": dense(lk[1], (d, d)),
+                "wv": dense(lk[2], (d, d)),
+                "wo": dense(lk[3], (d, d)),
+                "wg": dense(lk[4], (d, f)),
+                "wu": dense(lk[5], (d, f)),
+                "wd": dense(lk[6], (f, d)),
+                "ln1": jnp.ones((d,), jnp.float32),
+                "ln2": jnp.ones((d,), jnp.float32),
+            }
+        )
+    iv = jax.random.normal(keys[3], (cfg.n_layers, f))
+    iv = iv / jnp.linalg.norm(iv, axis=-1, keepdims=True)
+    return {
+        "emb": 0.02 * jax.random.normal(keys[0], (v, d), jnp.float32),
+        "head": dense(keys[1], (d, v)),
+        "lnf": jnp.ones((d,), jnp.float32),
+        "inject_v": iv.astype(jnp.float32),
+    }, layers
+
+
+def flatten_params(params, layers):
+    """Canonical flat ordering, mirrored by rust (manifest records names)."""
+    names, tensors = [], []
+    for base in ("emb", "head", "lnf", "inject_v"):
+        names.append(base)
+        tensors.append(params[base])
+    for li, lp in enumerate(layers):
+        for t in LAYER_TENSORS:
+            names.append(f"layers.{li}.{t}")
+            tensors.append(lp[t])
+    return names, tensors
+
+
+def unflatten_params(cfg: ModelConfig, tensors):
+    params = {
+        "emb": tensors[0],
+        "head": tensors[1],
+        "lnf": tensors[2],
+        "inject_v": tensors[3],
+    }
+    layers = []
+    i = 4
+    for _ in range(cfg.n_layers):
+        layers.append({t: tensors[i + j] for j, t in enumerate(LAYER_TENSORS)})
+        i += len(LAYER_TENSORS)
+    return params, layers
+
+
+# ---------------------------------------------------------------------------
+# Sink machinery
+# ---------------------------------------------------------------------------
+
+
+def sink_candidates(cfg: ModelConfig, tokens, n_prefix):
+    """cand[B,S]: initial global position, or a delimiter token."""
+    b, s = tokens.shape
+    is_delim = jnp.zeros_like(tokens, dtype=jnp.bool_)
+    for d in DELIMITER_IDS:
+        is_delim = is_delim | (tokens == d)
+    pos0 = (jnp.arange(s)[None, :] == 0) & (n_prefix == 0)
+    return is_delim | pos0
+
+
+def sink_mask(cfg: ModelConfig, tokens, n_prefix, n_ctx_sinks):
+    """active[B,S] (f32): first (o_model - n_ctx_sinks) candidates are sinks."""
+    cand = sink_candidates(cfg, tokens, n_prefix)
+    cum = jnp.cumsum(cand.astype(jnp.int32), axis=-1)
+    active = cand & ((n_ctx_sinks + cum) <= cfg.o_model)
+    return active.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(cfg: ModelConfig, positions):
+    """cos/sin[T, d_head/2] for integer positions[T]."""
+    half = cfg.d_head // 2
+    freqs = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x[..., T, dh] rotated; cos/sin[T, dh/2] broadcast over leading dims."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers (mode-dispatched)
+# ---------------------------------------------------------------------------
+
+
+def _act_q(x, mode, scale, qmax):
+    """Quantize a linear-layer input. static: per-tensor; dynamic: per-token."""
+    if mode == "fp":
+        return x
+    if mode == "static":
+        return ref.fake_quant_static(x, scale, qmax)
+    return ref.fake_quant_dynamic(x, qmax, axis=-1)
+
+
+def _kv_q(x, mode, scale_h, qmax):
+    """Quantize K or V [B,H,S,dh]. static: per-head; dynamic: per-token-head."""
+    if mode == "fp":
+        return x
+    if mode == "static":
+        return ref.fake_quant_static(x, scale_h[None, :, None, None], qmax)
+    return ref.fake_quant_dynamic(x, qmax, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# One transformer block
+# ---------------------------------------------------------------------------
+
+
+def block_apply(
+    cfg: ModelConfig,
+    lp,            # layer param dict
+    iv,            # inject_v[l]  [F]
+    x,             # [B,S,D]
+    active,        # sink mask [B,S] f32
+    cos, sin,      # rope tables for the S sequence positions
+    prefix_k, prefix_v,  # [H,P,dh] shared prefix KV (post-rope, storage domain)
+    n_prefix,      # i32 scalar: valid prefix slots
+    mode,          # "fp" | "static" | "dynamic"  (python-static)
+    act_scales,    # [4] f32 (static mode; ignored otherwise)
+    kv_scales,     # [2,H] f32
+    qmax_act, qmax_kv,
+    r3, r4,        # online rotation matrices
+    collect_stats: bool,
+):
+    """Returns (y, k_store, v_store, stats[7,B,S] or None)."""
+    b, s, d = x.shape
+    h, dh, f = cfg.n_heads, cfg.d_head, cfg.d_ff
+    p = cfg.max_prefix
+    stats = []
+
+    def stat(t):  # token-wise abs-max over channels, t = [B,S,*]
+        if collect_stats:
+            stats.append(jnp.max(jnp.abs(t.reshape(b, s, -1)), axis=-1))
+
+    def stat_heads(t):  # token-wise abs-max for head tensors t = [B,H,S,dh]
+        if collect_stats:
+            stats.append(jnp.max(jnp.abs(t.transpose(0, 2, 1, 3).reshape(b, s, -1)), axis=-1))
+
+    # --- attention ---
+    xin = ref.rmsnorm(x, lp["ln1"])
+    stat(xin)  # SITE_ATTN_IN
+    xq = _act_q(xin, mode, act_scales[SITE_ATTN_IN], qmax_act)
+
+    def heads(t):
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)  # [B,H,S,dh]
+
+    q = heads(xq @ lp["wq"])
+    k = heads(xq @ lp["wk"])
+    v = heads(xq @ lp["wv"])
+
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # online R3 (post-RoPE head rotation) — identity when rotation is off
+    q = q @ r3
+    k = k @ r3
+
+    # sink phenomenology: Q/K/V of active sinks shrink by delta (lower outliers)
+    shrink = 1.0 - (1.0 - cfg.inject_delta) * active[:, None, :, None]
+    q = q * shrink
+    k = k * shrink
+    v = v * shrink
+    stat_heads(q)  # SITE_Q
+    stat_heads(k)  # SITE_K
+    stat_heads(v)  # SITE_V
+
+    # KV storage quantization (what the cache will hold)
+    k_store = _kv_q(k, mode, kv_scales[0], qmax_kv)
+    v_store = _kv_q(v, mode, kv_scales[1], qmax_kv)
+
+    # attention over [prefix | sequence] (prefix KV kept full precision in
+    # storage — the paper stores the few prefixed tokens as-is in the cache)
+    pk = jnp.broadcast_to(prefix_k[None], (b, h, p, dh))
+    pv = jnp.broadcast_to(prefix_v[None], (b, h, p, dh))
+    k_all = jnp.concatenate([pk, k_store], axis=2)  # [B,H,P+S,dh]
+    v_all = jnp.concatenate([pv, v_store], axis=2)
+
+    jpos = jnp.arange(p + s)
+    prefix_ok = jpos[None, :] < n_prefix                       # [1,P+S]
+    causal = (jpos[None, :] - p) <= jnp.arange(s)[:, None]     # seq part causal
+    in_seq = jpos[None, :] >= p
+    mask = (in_seq & causal) | ((~in_seq) & prefix_ok)         # [S,P+S]
+    attn = ref.softmax_attention(q, k_all, v_all, mask[None, None])
+
+    o_in = attn.transpose(0, 2, 1, 3).reshape(b, s, d)
+    stat(o_in)  # SITE_O_IN
+    o_in = _act_q(o_in, mode, act_scales[SITE_O_IN], qmax_act)
+    x = x + o_in @ lp["wo"]
+
+    # --- MLP ---
+    xin2 = ref.rmsnorm(x, lp["ln2"])
+    stat(xin2)  # SITE_MLP_IN
+    xq2 = _act_q(xin2, mode, act_scales[SITE_MLP_IN], qmax_act)
+    inter = jax.nn.silu(xq2 @ lp["wg"]) * (xq2 @ lp["wu"])
+
+    # sink phenomenology: massive activation A*v on active sinks at the
+    # down_proj input; the matching analytic term is subtracted after the
+    # projection so the FP function is exactly preserved (DESIGN.md §3)
+    inject = cfg.inject_amp * active[:, :, None] * iv[None, None, :]
+    down_in = (inter + inject) @ r4  # online R4 — identity when rotation off
+    stat(down_in)  # SITE_DOWN_IN
+    down_in = _act_q(down_in, mode, act_scales[SITE_DOWN_IN], qmax_act)
+    comp = cfg.inject_amp * active[:, :, None] * ((iv @ r4) @ lp["wd"])[None, None, :]
+    x = x + down_in @ lp["wd"] - comp
+
+    st = None
+    if collect_stats:
+        # reorder collected stats into site order
+        order = [SITE_ATTN_IN, SITE_Q, SITE_K, SITE_V, SITE_O_IN, SITE_MLP_IN, SITE_DOWN_IN]
+        by_site = [None] * 7
+        for site, t in zip(order, stats):
+            by_site[site] = t
+        st = jnp.stack(by_site, axis=0)  # [7,B,S]
+    return x, k_store, v_store, st
+
+
+# ---------------------------------------------------------------------------
+# Full forward (prefill / eval)
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    cfg: ModelConfig,
+    params, layers,
+    tokens,                  # i32[B,S]
+    n_prefix, n_ctx_sinks,   # i32 scalars
+    prefix_k, prefix_v,      # [L,H,P,dh]
+    mode,
+    act_scales,              # [L,4]
+    kv_scales,               # [L,2,H]
+    qmax_act, qmax_kv,
+    r3, r4,
+    collect_stats=False,
+    collect_captures=False,
+):
+    """Returns dict: logits, k_cache, v_cache, active, [stats], [captures]."""
+    b, s = tokens.shape
+    positions = n_prefix + jnp.arange(s)
+    cos, sin = rope_tables(cfg, positions)
+    active = sink_mask(cfg, tokens, n_prefix, n_ctx_sinks)
+
+    x = params["emb"][tokens]
+    stats, caps, ks, vs = [], [], [], []
+    for li, lp in enumerate(layers):
+        if collect_captures:
+            caps.append(x)
+        x, k_st, v_st, st = block_apply(
+            cfg, lp, params["inject_v"][li], x, active, cos, sin,
+            prefix_k[li], prefix_v[li], n_prefix, mode,
+            act_scales[li], kv_scales[li], qmax_act, qmax_kv, r3, r4,
+            collect_stats,
+        )
+        ks.append(k_st)
+        vs.append(v_st)
+        if collect_stats:
+            stats.append(st)
+    if collect_captures:
+        caps.append(x)
+
+    x = ref.rmsnorm(x, params["lnf"])
+    logits = x @ params["head"]
+    out = {
+        "logits": logits,
+        "k_cache": jnp.stack(ks, axis=0),  # [L,B,H,S,dh]
+        "v_cache": jnp.stack(vs, axis=0),
+        "active": active,
+    }
+    if collect_stats:
+        out["stats"] = jnp.stack(stats, axis=0)  # [L,7,B,S]
+    if collect_captures:
+        out["captures"] = jnp.stack(caps, axis=0)  # [L+1,B,S,D]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode step (serving path)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params, layers,
+    tokens,        # i32[B,1] new token ids
+    cache_len,     # i32 scalar: valid cache entries (incl. prefix slots)
+    n_sinks,       # i32[B]: sinks materialized so far (incl. prefix sinks)
+    k_cache, v_cache,  # f32[L,B,H,Smax,dh] (storage domain)
+    mode,
+    act_scales, kv_scales, qmax_act, qmax_kv, r3, r4,
+):
+    """One decode step. Returns (logits[B,V], k_cache, v_cache, n_sinks')."""
+    b = tokens.shape[0]
+    l, _, h, smax, dh = k_cache.shape
+    d = cfg.d_model
+
+    is_delim = jnp.zeros((b,), dtype=jnp.bool_)
+    for dd in DELIMITER_IDS:
+        is_delim = is_delim | (tokens[:, 0] == dd)
+    cand = is_delim | (cache_len == 0)
+    active_b = (cand & (n_sinks < cfg.o_model)).astype(jnp.float32)  # [B]
+    n_sinks_new = n_sinks + active_b.astype(jnp.int32)
+
+    cos, sin = rope_tables(cfg, cache_len[None])  # [1, dh/2]
+    x = params["emb"][tokens]  # [B,1,D]
+    valid = jnp.arange(smax)[None, :] < cache_len  # [1,Smax] attendable slots
+
+    new_k, new_v = [], []
+    for li, lp in enumerate(layers):
+        xin = ref.rmsnorm(x, lp["ln1"])
+        xq = _act_q(xin, mode, act_scales[li][SITE_ATTN_IN], qmax_act)
+
+        def heads(t):
+            return t.reshape(b, 1, h, dh).transpose(0, 2, 1, 3)
+
+        q = apply_rope(heads(xq @ lp["wq"]), cos, sin) @ r3
+        k = apply_rope(heads(xq @ lp["wk"]), cos, sin) @ r3
+        v = heads(xq @ lp["wv"])
+        shrink = 1.0 - (1.0 - cfg.inject_delta) * active_b[:, None, None, None]
+        q, k, v = q * shrink, k * shrink, v * shrink
+
+        k = _kv_q(k, mode, kv_scales[li][0], qmax_kv)
+        v = _kv_q(v, mode, kv_scales[li][1], qmax_kv)
+
+        kc, vc = k_cache[li], v_cache[li]  # [B,H,Smax,dh]
+        logits_att = jnp.einsum("bhqd,bhkd->bhqk", q, kc) / jnp.sqrt(jnp.float32(dh))
+        self_att = jnp.einsum("bhqd,bhqd->bhq", q, k)[..., None] / jnp.sqrt(
+            jnp.float32(dh)
+        )
+        logits_att = jnp.where(valid[None, None], logits_att, -1e30)
+        full = jnp.concatenate([logits_att, self_att], axis=-1)
+        p_att = jax.nn.softmax(full, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", p_att[..., :-1], vc) + p_att[
+            ..., -1:
+        ] * v
+        o_in = attn.transpose(0, 2, 1, 3).reshape(b, 1, d)
+        o_in = _act_q(o_in, mode, act_scales[li][SITE_O_IN], qmax_act)
+        x = x + o_in @ lp["wo"]
+
+        xin2 = ref.rmsnorm(x, lp["ln2"])
+        xq2 = _act_q(xin2, mode, act_scales[li][SITE_MLP_IN], qmax_act)
+        inter = jax.nn.silu(xq2 @ lp["wg"]) * (xq2 @ lp["wu"])
+        iv = params["inject_v"][li]
+        inject = cfg.inject_amp * active_b[:, None, None] * iv[None, None, :]
+        down_in = _act_q((inter + inject) @ r4, mode, act_scales[li][SITE_DOWN_IN], qmax_act)
+        comp = cfg.inject_amp * active_b[:, None, None] * ((iv @ r4) @ lp["wd"])[None, None, :]
+        x = x + down_in @ lp["wd"] - comp
+        new_k.append(k)
+        new_v.append(v)
+
+    # write the new entries at slot cache_len
+    nk = jnp.stack(new_k, 0)  # [L,B,H,1,dh]
+    nv = jnp.stack(new_v, 0)
+    start = (0, 0, 0, cache_len, 0)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, nk, start)
+    v_cache = jax.lax.dynamic_update_slice(v_cache, nv, start)
+
+    x = ref.rmsnorm(x, params["lnf"])
+    logits = (x @ params["head"])[:, 0, :]
+    return logits, k_cache, v_cache, n_sinks_new
+
+
+# ---------------------------------------------------------------------------
+# Pretraining loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelConfig, params, layers, tokens):
+    """Next-token CE on fp forward, no prefix / no rotation (identity)."""
+    b, s = tokens.shape
+    dh, f, h, l, p = cfg.d_head, cfg.d_ff, cfg.n_heads, cfg.n_layers, cfg.max_prefix
+    eye3 = jnp.eye(dh, dtype=jnp.float32)
+    eye4 = jnp.eye(f, dtype=jnp.float32)
+    zk = jnp.zeros((l, h, p, dh), jnp.float32)
+    out = forward(
+        cfg, params, layers, tokens,
+        jnp.int32(0), jnp.int32(0), zk, zk,
+        "fp",
+        jnp.ones((l, 4), jnp.float32), jnp.ones((l, 2, h), jnp.float32),
+        jnp.float32(1e9), jnp.float32(1e9), eye3, eye4,
+    )
+    logits = out["logits"][:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

@@ -1,0 +1,97 @@
+"""Build-time pretraining of the pq models on the synthetic corpus.
+
+The paper quantizes *pretrained* checkpoints (Llama-2/3).  Our substitute
+checkpoint is trained here, once, during `make artifacts` — this is the
+analog of downloading Llama weights, and it runs with the sink-injection
+substrate active from step 0 so the model is self-consistent with its
+outlier tokens (DESIGN.md §2).
+
+Hand-rolled Adam (optax is not in the image).  The loss curve is persisted to
+artifacts/<model>/pretrain_log.json and summarized in EXPERIMENTS.md.
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model, tokenizer
+from .config import CorpusConfig, ModelConfig
+
+
+def make_batches(text: str, batch: int, seq: int, rng: np.random.Generator):
+    """Infinite sampler of [batch, seq] windows (BOS-prefixed)."""
+    ids = np.array(tokenizer.encode(text, add_bos=False), dtype=np.int32)
+    n = len(ids) - seq
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        rows = np.stack([ids[s : s + seq] for s in starts])
+        rows[:, 0] = 1  # BOS at the window start (initial-token sink candidate)
+        yield jnp.asarray(rows)
+
+
+def adam_update(grads, m, v, step, lr, b1=0.9, b2=0.95, eps=1e-8):
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    t = step + 1
+    mh = jax.tree.map(lambda a: a / (1 - b1**t), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2**t), v)
+    upd = jax.tree.map(lambda a, b: lr * a / (jnp.sqrt(b) + eps), mh, vh)
+    return upd, m, v
+
+
+def cosine_lr(step, total, base=3e-3, floor=3e-4, warmup=50):
+    w = jnp.minimum(1.0, (step + 1) / warmup)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1, total - warmup), 0.0, 1.0)
+    return w * (floor + 0.5 * (base - floor) * (1 + jnp.cos(jnp.pi * prog)))
+
+
+def pretrain(
+    cfg: ModelConfig,
+    steps: int = 600,
+    batch: int = 16,
+    seed: int = 0,
+    log_every: int = 20,
+    corpus: CorpusConfig = CorpusConfig(),
+):
+    """Train cfg from scratch; returns (params, layers, log dict)."""
+    key = jax.random.PRNGKey(seed)
+    params, layers = model.init_params(cfg, key)
+    # inject_v is a fixed buffer — excluded from training below.
+    train_tree = {"params": {k: params[k] for k in ("emb", "head", "lnf")}, "layers": layers}
+
+    def loss_fn(tree, tokens):
+        p = dict(tree["params"])
+        p["inject_v"] = params["inject_v"]
+        return model.lm_loss(cfg, p, tree["layers"], tokens)
+
+    @jax.jit
+    def train_step(tree, m, v, step, tokens):
+        loss, grads = jax.value_and_grad(loss_fn)(tree, tokens)
+        lr = cosine_lr(step, steps)
+        upd, m, v = adam_update(grads, m, v, step, lr)
+        tree = jax.tree.map(lambda a, u: a - u, tree, upd)
+        return tree, m, v, loss
+
+    zeros = jax.tree.map(jnp.zeros_like, train_tree)
+    m, v = zeros, jax.tree.map(jnp.zeros_like, train_tree)
+    batches = make_batches(data.train_text(corpus), batch, cfg.train_seq, np.random.default_rng(seed))
+
+    log = {"steps": steps, "batch": batch, "seq": cfg.train_seq, "curve": []}
+    t0 = time.time()
+    tree = train_tree
+    for step in range(steps):
+        tokens = next(batches)
+        tree, m, v, loss = train_step(tree, m, v, step, tokens)
+        if step % log_every == 0 or step == steps - 1:
+            l = float(loss)
+            log["curve"].append({"step": step, "loss": round(l, 4)})
+            print(f"  pretrain[{cfg.name}] step {step:4d} loss {l:.4f}", flush=True)
+    log["wall_s"] = round(time.time() - t0, 1)
+    log["final_loss"] = log["curve"][-1]["loss"]
+
+    out_params = dict(tree["params"])
+    out_params["inject_v"] = params["inject_v"]
+    return out_params, tree["layers"], log

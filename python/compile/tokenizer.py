@@ -1,0 +1,43 @@
+"""Byte-level tokenizer, bit-exact twin of rust/src/tokenizer/.
+
+ids: 0 = PAD, 1 = BOS, 2 = EOS, 3..258 = raw byte + 3, 259..271 reserved.
+"""
+
+from .config import BOS_ID, BYTE_OFFSET, EOS_ID, VOCAB_SIZE
+
+
+def encode(text: str, add_bos: bool = True) -> list:
+    ids = [BOS_ID] if add_bos else []
+    ids.extend(b + BYTE_OFFSET for b in text.encode("utf-8"))
+    return ids
+
+
+def decode(ids) -> str:
+    raw = bytes(i - BYTE_OFFSET for i in ids if BYTE_OFFSET <= i < BYTE_OFFSET + 256)
+    return raw.decode("utf-8", errors="replace")
+
+
+def vocab_size() -> int:
+    return VOCAB_SIZE
+
+
+def special_name(i: int) -> str:
+    return {0: "[PAD]", 1: "[BOS]", 2: "[EOS]"}.get(i, "")
+
+
+def token_repr(i: int) -> str:
+    """Human-readable rendering of one token id (for outlier reports)."""
+    s = special_name(i)
+    if s:
+        return s
+    if BYTE_OFFSET <= i < BYTE_OFFSET + 256:
+        b = i - BYTE_OFFSET
+        ch = chr(b)
+        if ch == "\n":
+            return "\\n"
+        if ch == " ":
+            return "␣"
+        if 32 < b < 127:
+            return ch
+        return f"<0x{b:02x}>"
+    return f"<res{i}>"

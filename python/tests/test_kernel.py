@@ -1,0 +1,143 @@
+"""Pallas kernels vs the pure-jnp oracles — the CORE L1 correctness signal.
+
+Hypothesis sweeps shapes and value ranges; every kernel must match its oracle
+to float tolerance in interpret mode.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hadamard, quant_matmul, quant_ops, ref, rmsnorm
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 150),
+    c=st.sampled_from([8, 32, 128, 256]),
+    s=st.floats(1e-3, 2.0),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_quant_static_matches_ref(t, c, s, bits, seed):
+    x = rand((t, c), seed)
+    qmax = float(2 ** (bits - 1) - 1)
+    got = quant_ops.quant_static(jnp.asarray(x), jnp.float32(s), jnp.float32(qmax))
+    want = ref.fake_quant_static(jnp.asarray(x), jnp.float32(s), jnp.float32(qmax))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 150),
+    c=st.sampled_from([8, 32, 128]),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_quant_dynamic_matches_ref(t, c, bits, seed):
+    x = rand((t, c), seed, scale=3.0)
+    qmax = float(2 ** (bits - 1) - 1)
+    got, scales = quant_ops.quant_dynamic(jnp.asarray(x), jnp.float32(qmax))
+    want = ref.fake_quant_dynamic(jnp.asarray(x), jnp.float32(qmax))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # returned scales reproduce the per-token max rule
+    m = np.abs(x).max(axis=1, keepdims=True)
+    np.testing.assert_allclose(
+        np.asarray(scales), np.maximum(m, 1e-8) / qmax, rtol=1e-6
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 100),
+    n=st.sampled_from([2, 8, 64, 128, 512]),
+    seed=st.integers(0, 2**31),
+)
+def test_hadamard_matches_ref_and_is_orthogonal(t, n, seed):
+    x = rand((t, n), seed)
+    got = hadamard.hadamard(jnp.asarray(x))
+    want = ref.hadamard_transform(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    # energy preservation
+    np.testing.assert_allclose(
+        np.square(np.asarray(got)).sum(), np.square(x).sum(), rtol=1e-4
+    )
+    # involution: WHT(WHT(x)) == x for the normalized transform
+    twice = hadamard.hadamard(got)
+    np.testing.assert_allclose(np.asarray(twice), x, atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 100),
+    c=st.sampled_from([8, 128, 256]),
+    seed=st.integers(0, 2**31),
+)
+def test_rmsnorm_matches_ref(t, c, seed):
+    x = rand((t, c), seed, scale=2.0)
+    g = rand((c,), seed + 1)
+    got = rmsnorm.rmsnorm(jnp.asarray(x), jnp.asarray(g))
+    want = ref.rmsnorm(jnp.asarray(x), jnp.asarray(g))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([1, 17, 64]),
+    k=st.sampled_from([128, 256]),
+    n=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_quant_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand((m, k), seed)
+    wq = np.round(rng.standard_normal((k, n)) * 3).clip(-8, 7).astype(np.float32)
+    sw = (0.01 + rng.random(n)).astype(np.float32)
+    got = quant_matmul.quant_matmul(
+        jnp.asarray(x), jnp.asarray(wq), jnp.float32(0.05), jnp.asarray(sw), jnp.float32(7.0)
+    )
+    want = ref.quant_matmul_static(
+        jnp.asarray(x), jnp.asarray(wq), jnp.float32(0.05), jnp.asarray(sw), jnp.float32(7.0)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_quant_matmul_edge_tiles():
+    # shapes that don't divide the block sizes exercise edge tiles
+    x = rand((33, 130), 3)
+    # pallas interpret requires pow2-ish? no — uneven shapes must still work
+    wq = np.round(rand((130, 65), 4) * 2).astype(np.float32)
+    sw = np.full((65,), 0.02, np.float32)
+    got = quant_matmul.quant_matmul(
+        jnp.asarray(x), jnp.asarray(wq), jnp.float32(0.1), jnp.asarray(sw), jnp.float32(7.0)
+    )
+    want = ref.quant_matmul_static(
+        jnp.asarray(x), jnp.asarray(wq), jnp.float32(0.1), jnp.asarray(sw), jnp.float32(7.0)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_vmem_budgets():
+    """BlockSpec VMEM footprints stay inside a 16 MiB budget (perf contract)."""
+    budget = 16 * 1024 * 1024
+    assert quant_ops.vmem_bytes_static(64, 8192) < budget
+    assert quant_ops.vmem_bytes_dynamic(64, 8192) < budget
+    assert hadamard.vmem_bytes(64, 8192) < budget
+    assert quant_matmul.vmem_bytes() < budget
+    # dynamic needs strictly more VMEM than static at equal tiles
+    assert quant_ops.vmem_bytes_dynamic(64, 4096) > quant_ops.vmem_bytes_static(64, 4096)
+
+
+def test_mxu_utilization_estimate():
+    u = quant_matmul.mxu_utilization_estimate(256, 256, 256)
+    assert u == 1.0
+    u2 = quant_matmul.mxu_utilization_estimate(33, 65, 130)
+    assert 0.0 < u2 < 1.0

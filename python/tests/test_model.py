@@ -1,0 +1,210 @@
+"""L2 model invariants: sink mask dynamics, rotation equivariance, fake-quant
+gradient flow (LSQ), decode/prefill parity, injection function-preservation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import DELIMITER_IDS, ModelConfig
+from compile.kernels import ref
+
+CFG = ModelConfig(
+    name="test",
+    d_model=32,
+    n_layers=2,
+    n_heads=2,
+    d_head=16,
+    d_ff=64,
+    o_model=3,
+    inject_amp=500.0,
+    train_seq=24,
+    eval_seq=24,
+    cache_max=48,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def fp_forward(params, layers, tokens, n_prefix=0, n_ctx_sinks=0, **kw):
+    l, h, p, dh = CFG.n_layers, CFG.n_heads, CFG.max_prefix, CFG.d_head
+    zk = jnp.zeros((l, h, p, dh), jnp.float32)
+    return model.forward(
+        CFG, params, layers, tokens,
+        jnp.int32(n_prefix), jnp.int32(n_ctx_sinks), zk, zk,
+        "fp",
+        jnp.ones((l, 4), jnp.float32), jnp.ones((l, 2, h), jnp.float32),
+        jnp.float32(1e9), jnp.float32(1e9),
+        jnp.eye(dh, dtype=jnp.float32), jnp.eye(CFG.d_ff, dtype=jnp.float32),
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# sink mask
+# ---------------------------------------------------------------------------
+
+
+def test_sink_mask_first_o_candidates():
+    toks = np.full((1, 12), 100, np.int32)
+    toks[0, 0] = 1  # BOS at pos 0 (initial candidate)
+    for i in (3, 5, 9, 11):
+        toks[0, i] = DELIMITER_IDS[0]
+    m = model.sink_mask(CFG, jnp.asarray(toks), jnp.int32(0), jnp.int32(0))
+    m = np.asarray(m)[0]
+    # o_model=3: pos0 + first two delimiters
+    assert m[0] == 1 and m[3] == 1 and m[5] == 1
+    assert m[9] == 0 and m[11] == 0
+
+
+def test_sink_mask_respects_ctx_sinks():
+    toks = np.full((1, 12), 100, np.int32)
+    for i in (2, 4, 6):
+        toks[0, i] = DELIMITER_IDS[1]
+    # prefix already holds all 3 sinks -> nothing in-sequence activates
+    m = model.sink_mask(CFG, jnp.asarray(toks), jnp.int32(3), jnp.int32(3))
+    assert np.asarray(m).sum() == 0
+    # prefix holds 2 -> exactly one more sink activates (the first candidate)
+    m2 = np.asarray(model.sink_mask(CFG, jnp.asarray(toks), jnp.int32(2), jnp.int32(2)))[0]
+    assert m2.sum() == 1 and m2[2] == 1
+
+
+def test_initial_position_only_counts_without_prefix():
+    toks = np.full((1, 6), 100, np.int32)
+    m0 = np.asarray(model.sink_mask(CFG, jnp.asarray(toks), jnp.int32(0), jnp.int32(0)))[0]
+    assert m0[0] == 1  # global position 0
+    m1 = np.asarray(model.sink_mask(CFG, jnp.asarray(toks), jnp.int32(2), jnp.int32(0)))[0]
+    assert m1[0] == 0  # sequence starts at global position 2
+
+
+# ---------------------------------------------------------------------------
+# injection & stats
+# ---------------------------------------------------------------------------
+
+
+def test_injection_creates_down_in_outliers(params):
+    p, layers = params
+    toks = np.full((1, 16), 100, np.int32)
+    toks[0, 0] = 1
+    toks[0, 7] = DELIMITER_IDS[0]
+    out = fp_forward(p, layers, jnp.asarray(toks), collect_stats=True)
+    stats = np.asarray(out["stats"])  # [L,7,B,S]
+    down = stats[:, 3, 0, :]  # down_in site
+    sink_max = down[:, [0, 7]].max()
+    normal_med = np.median(down[:, 2:6])
+    assert sink_max / normal_med > 64, "eta=64 detection must fire"
+
+
+def test_injection_q_shrink(params):
+    p, layers = params
+    toks = np.full((1, 16), 100, np.int32)
+    toks[0, 0] = 1
+    out = fp_forward(p, layers, jnp.asarray(toks), collect_stats=True)
+    stats = np.asarray(out["stats"])
+    q = stats[:, 4, 0, :]  # q site
+    assert q[:, 0].max() < 0.2 * np.median(q[:, 1:]), "sink Q must be shrunk"
+
+
+# ---------------------------------------------------------------------------
+# prefix / KV plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_kv_changes_only_via_attention(params):
+    """With a zero prefix KV but n_prefix>0, positions shift (RoPE) and the
+    pos-0 candidacy disappears."""
+    p, layers = params
+    toks = np.full((1, 8), 100, np.int32)
+    o1 = fp_forward(p, layers, jnp.asarray(toks), n_prefix=0)
+    o2 = fp_forward(p, layers, jnp.asarray(toks), n_prefix=2, n_ctx_sinks=3)
+    assert not np.allclose(np.asarray(o1["logits"]), np.asarray(o2["logits"]))
+    assert np.asarray(o2["active"]).sum() == 0
+
+
+def test_decode_matches_prefill(params):
+    """Teacher-forced prefill logits at position t == decode-step logits with
+    the cache holding positions < t (the serving-path correctness contract)."""
+    p, layers = params
+    l, h, dh, smax = CFG.n_layers, CFG.n_heads, CFG.d_head, CFG.cache_max
+    toks = np.full((1, 6), 100, np.int32)
+    toks[0, 0] = 1
+    toks[0, 2] = DELIMITER_IDS[0]
+    out = fp_forward(p, layers, jnp.asarray(toks))
+    # build a cache from prefill K/V for positions 0..4
+    kc = np.zeros((l, 1, h, smax, dh), np.float32)
+    vc = np.zeros((l, 1, h, smax, dh), np.float32)
+    kc[:, :, :, :5] = np.asarray(out["k_cache"])[:, :, :, :5]
+    vc[:, :, :, :5] = np.asarray(out["v_cache"])[:, :, :, :5]
+    active = np.asarray(out["active"])[0]
+    n_sinks = int(active[:5].sum())
+    logits, _, _, _ = model.decode_step(
+        CFG, p, layers,
+        jnp.asarray(toks[:, 5:6]), jnp.int32(5),
+        jnp.asarray([n_sinks], jnp.int32),
+        jnp.asarray(kc), jnp.asarray(vc),
+        "fp",
+        jnp.ones((l, 4), jnp.float32), jnp.ones((l, 2, h), jnp.float32),
+        jnp.float32(1e9), jnp.float32(1e9),
+        jnp.eye(dh, dtype=jnp.float32), jnp.eye(CFG.d_ff, dtype=jnp.float32),
+    )
+    want = np.asarray(out["logits"])[0, 5]
+    np.testing.assert_allclose(np.asarray(logits)[0], want, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantization path
+# ---------------------------------------------------------------------------
+
+
+def test_static_quant_converges_to_fp_at_high_bits(params):
+    p, layers = params
+    l, h, dh, f = CFG.n_layers, CFG.n_heads, CFG.d_head, CFG.d_ff
+    zk = jnp.zeros((l, h, CFG.max_prefix, dh), jnp.float32)
+    toks = np.full((1, 8), 100, np.int32)
+    fp = fp_forward(p, layers, jnp.asarray(toks))["logits"]
+    # very fine static scales ≈ lossless (range must cover the injected
+    # down_in outliers ~ inject_amp * max|v| ≈ 100)
+    out = model.forward(
+        CFG, p, layers, jnp.asarray(toks), jnp.int32(0), jnp.int32(0), zk, zk,
+        "static",
+        jnp.full((l, 4), 4e-3, jnp.float32), jnp.full((l, 2, h), 3e-4, jnp.float32),
+        jnp.float32(2**17 - 1), jnp.float32(2**17 - 1),
+        jnp.eye(dh, dtype=jnp.float32), jnp.eye(f, dtype=jnp.float32),
+    )
+    np.testing.assert_allclose(np.asarray(out["logits"]), np.asarray(fp), atol=0.15)
+
+
+def test_lsq_gradients_flow_to_scales():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(64).astype(np.float32))
+
+    def loss(s):
+        return jnp.mean(ref.fake_quant_static(x, s, 7.0) ** 2)
+
+    g = jax.grad(loss)(jnp.float32(0.1))
+    assert np.isfinite(float(g)) and abs(float(g)) > 0, "scale must receive gradient"
+
+
+def test_fake_quant_ste_passthrough():
+    x = jnp.asarray(np.linspace(-0.5, 0.5, 33, dtype=np.float32))
+
+    def loss(x):
+        return jnp.sum(ref.fake_quant_static(x, jnp.float32(0.1), 7.0))
+
+    g = np.asarray(jax.grad(loss)(x))
+    np.testing.assert_allclose(g, np.ones_like(g), atol=1e-6)
+
+
+def test_lm_loss_finite_and_trainable(params):
+    p, layers = params
+    toks = np.random.default_rng(1).integers(3, 200, size=(2, 24)).astype(np.int32)
+    toks[:, 0] = 1
+    loss, grads = jax.value_and_grad(
+        lambda lay: model.lm_loss(CFG, p, lay, jnp.asarray(toks))
+    )(layers)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.abs(g).sum()) for lp in grads for g in lp.values())
+    assert gnorm > 0

@@ -1,0 +1,108 @@
+"""Quantization-primitive properties (hypothesis) on the jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(4, 200),
+    s=st.floats(1e-3, 5.0),
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_static_quant_properties(n, s, bits, seed):
+    qmax = float(2 ** (bits - 1) - 1)
+    x = np.random.default_rng(seed).standard_normal(n).astype(np.float32) * 3
+    q = np.asarray(ref.fake_quant_static(jnp.asarray(x), jnp.float32(s), qmax))
+    # idempotent
+    q2 = np.asarray(ref.fake_quant_static(jnp.asarray(q), jnp.float32(s), qmax))
+    np.testing.assert_allclose(q, q2, atol=1e-6)
+    # codomain bounded
+    assert q.max() <= qmax * s + 1e-5
+    assert q.min() >= -(qmax + 1) * s - 1e-5
+    # error bounded inside clip range
+    inside = np.abs(x) <= qmax * s
+    assert np.all(np.abs(q[inside] - x[inside]) <= s / 2 + 1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 40),
+    c=st.integers(2, 64),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_dynamic_quant_scales_per_token(t, c, bits, seed):
+    qmax = float(2 ** (bits - 1) - 1)
+    x = np.random.default_rng(seed).standard_normal((t, c)).astype(np.float32)
+    x[0] *= 100.0  # a huge token must not affect other tokens' precision
+    q = np.asarray(ref.fake_quant_dynamic(jnp.asarray(x), qmax))
+    for i in range(t):
+        m = np.abs(x[i]).max()
+        s = max(m, 1e-8) / qmax
+        assert np.all(np.abs(q[i] - x[i]) <= s / 2 + 1e-5)
+
+
+def test_per_tensor_static_fails_with_token_outlier():
+    """The paper's core pathology in miniature: a single massive token makes a
+    shared static scale destroy all normal tokens, while per-token dynamic and
+    outlier-isolated static both survive."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((16, 32)).astype(np.float32)
+    x[0] *= 1000.0  # massive token
+    qmax = 7.0
+    s_shared = np.abs(x).max() / qmax
+    q_static = np.asarray(ref.fake_quant_static(jnp.asarray(x), jnp.float32(s_shared), qmax))
+    err_static = np.abs(q_static[1:] - x[1:]).mean()
+    q_dyn = np.asarray(ref.fake_quant_dynamic(jnp.asarray(x), qmax))
+    err_dyn = np.abs(q_dyn[1:] - x[1:]).mean()
+    assert err_static > 5 * err_dyn
+    # isolate the outlier (prefix mechanism) -> static recovers
+    s_iso = np.abs(x[1:]).max() / qmax
+    q_iso = np.asarray(ref.fake_quant_static(jnp.asarray(x[1:]), jnp.float32(s_iso), qmax))
+    err_iso = np.abs(q_iso - x[1:]).mean()
+    assert err_iso < 2 * err_dyn
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31), n=st.sampled_from([4, 16, 64, 256]))
+def test_hadamard_spreads_spikes(seed, n):
+    """Rotation flattens channel spikes: post-WHT max/mean shrinks for a
+    one-hot-ish vector (the QuaRot mechanism)."""
+    x = np.zeros((1, n), np.float32)
+    x[0, seed % n] = 100.0
+    y = np.asarray(ref.hadamard_transform(jnp.asarray(x)))
+    assert np.abs(y).max() <= 100.0 / np.sqrt(n) + 1e-3
+
+
+def test_quant_matmul_eq2_decomposition():
+    """Eq.(2): XW ≈ (s_w s_x) X_int W_int — exact when values sit on the grid."""
+    rng = np.random.default_rng(5)
+    sx, qmax = 0.25, 7.0
+    xi = rng.integers(-8, 8, size=(4, 8)).astype(np.float32)
+    x = xi * sx
+    sw = np.full((3,), 0.5, np.float32)
+    wq = rng.integers(-8, 8, size=(8, 3)).astype(np.float32)
+    got = np.asarray(
+        ref.quant_matmul_static(jnp.asarray(x), jnp.asarray(wq), jnp.float32(sx), jnp.asarray(sw), qmax)
+    )
+    want = (xi @ wq) * (sx * sw)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_dynamic_scale_gradient_blocked():
+    """Dynamic scales are stop-gradiented (MinMax, not learned)."""
+    x = jnp.asarray(np.linspace(-1, 1, 16, dtype=np.float32))
+
+    def loss(x):
+        return jnp.sum(ref.fake_quant_dynamic(x, 7.0) ** 2)
+
+    g = jax.grad(loss)(x)
+    assert np.all(np.isfinite(np.asarray(g)))

@@ -1,0 +1,117 @@
+//! Coordinator micro-benchmarks: batcher throughput, KV-cache operations,
+//! tokenizer, corpus generation.  No artifacts required.
+//!
+//!   cargo bench --bench coordinator_micro
+
+use prefixquant::bench_support::bench_fn;
+use prefixquant::config::{CorpusSpec, ModelConfig, TokenizerSpec};
+use prefixquant::coordinator::{Batcher, GenRequest, KvCache};
+use prefixquant::data::Language;
+use prefixquant::model::PrefixState;
+use prefixquant::tensor::Tensor;
+use prefixquant::tokenizer::Tokenizer;
+use prefixquant::util::table::Table;
+
+fn main() {
+    let mut t = Table::new("coordinator micro-benchmarks", &["op", "median", "per-unit"]);
+
+    // batcher: push+drain 1024 mixed-length requests
+    let st = bench_fn("batcher", 3, 50, || {
+        let mut b = Batcher::new(8);
+        for i in 0..1024u64 {
+            b.push(GenRequest { id: i, prompt: vec![5; 8 * (1 + (i % 4) as usize)], max_new: 4 });
+        }
+        while !b.is_empty() {
+            std::hint::black_box(b.next_batch());
+        }
+    });
+    t.rowv(vec![
+        "batcher push+drain 1024 reqs".into(),
+        format!("{:.3}ms", st.per_call_ms()),
+        format!("{:.2}us/req", st.median_s * 1e6 / 1024.0),
+    ]);
+
+    // kv-cache: install prefix + write prefill at serving geometry
+    let cfg = ModelConfig {
+        name: "bench".into(),
+        vocab_size: 272,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_head: 32,
+        d_ff: 256,
+        o_model: 3,
+        inject_amp: 1.0,
+        inject_delta: 0.05,
+        max_prefix: 4,
+        train_seq: 128,
+        eval_seq: 256,
+        cache_max: 320,
+        sites: vec!["down_in".into()],
+    };
+    let pshape = [cfg.n_layers, cfg.n_heads, cfg.max_prefix, cfg.d_head];
+    let prefix = PrefixState {
+        tokens: vec![1, 49, 13],
+        n_prefix: 3,
+        n_ctx_sinks: 3,
+        k: Tensor::full(&pshape, 0.5),
+        v: Tensor::full(&pshape, 0.5),
+    };
+    let kshape = [cfg.n_layers, 8, cfg.n_heads, 256, cfg.d_head];
+    let kfill = Tensor::full(&kshape, 1.0);
+    let st = bench_fn("kvcache", 3, 30, || {
+        let mut kv = KvCache::new(&cfg, 8);
+        kv.install_prefix(&prefix).unwrap();
+        kv.write_prefill(&kfill, &kfill, 256).unwrap();
+        std::hint::black_box(kv.len);
+    });
+    t.rowv(vec![
+        "kvcache prefix+prefill (B=8,S=256)".into(),
+        format!("{:.3}ms", st.per_call_ms()),
+        format!(
+            "{:.1}MB/s",
+            2.0 * kshape.iter().product::<usize>() as f64 * 4.0 / st.median_s / 1e6
+        ),
+    ]);
+
+    // tokenizer round-trip
+    let tok = Tokenizer::new(TokenizerSpec {
+        pad: 0,
+        bos: 1,
+        eos: 2,
+        byte_offset: 3,
+        vocab_size: 272,
+        delimiter_ids: vec![13, 49],
+    });
+    let text = "lorem ipsum dolor sit amet. consectetur adipiscing elit.\n".repeat(100);
+    let st = bench_fn("tokenize", 3, 200, || {
+        std::hint::black_box(tok.encode(&text, true));
+    });
+    t.rowv(vec![
+        format!("tokenize {} chars", text.len()),
+        format!("{:.3}ms", st.per_call_ms()),
+        format!("{:.0}MB/s", text.len() as f64 / st.median_s / 1e6),
+    ]);
+
+    // corpus generation
+    let lang = Language::new(CorpusSpec {
+        n_words: 256,
+        n_followers: 8,
+        follow_prob10: 7,
+        word_seed: 1,
+        train_seed: 2,
+        eval_seed: 3,
+        train_chars: 100_000,
+        eval_chars: 1000,
+    });
+    let st = bench_fn("corpus", 2, 20, || {
+        std::hint::black_box(lang.generate(7, 100_000));
+    });
+    t.rowv(vec![
+        "generate 100k-char corpus".into(),
+        format!("{:.2}ms", st.per_call_ms()),
+        format!("{:.1}MB/s", 0.1 / st.median_s),
+    ]);
+
+    t.print();
+}

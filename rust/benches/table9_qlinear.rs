@@ -1,0 +1,86 @@
+//! Table 9: quantized linear layer vs FP linear.
+//!
+//! Compositions per shape: FP matmul; dynamic-quant linear (per-token scale
+//! reduction + matmul + dequant); fused static-quant linear (the paper's
+//! "+ static quant" row — quantization fused into the GEMM consumption).
+//!
+//!   cargo bench --bench table9_qlinear
+
+use std::path::Path;
+
+use anyhow::Result;
+use prefixquant::bench_support::{auto_samples, bench_fn};
+use prefixquant::runtime::{Engine, Value};
+use prefixquant::tensor::Tensor;
+use prefixquant::util::rng::SplitMix64;
+use prefixquant::util::table::Table;
+
+fn main() -> Result<()> {
+    let engine = Engine::new(Path::new(
+        &std::env::var("PQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    ))?;
+    let mut rng = SplitMix64::new(9);
+    let shapes = [(1usize, 1024usize, 1024usize), (64, 1024, 1024), (512, 1024, 1024)];
+    let mut table = Table::new(
+        "Table 9: linear-layer compositions (median ms)",
+        &["(M, K, N)", "FP16", "dynamic W4A4", "static W4A4", "static vs dyn"],
+    );
+    for (m, k, n) in shapes {
+        let x = Tensor::new(vec![m, k], (0..m * k).map(|_| rng.normal_f32()).collect())?;
+        let w = Tensor::new(vec![k, n], (0..k * n).map(|_| rng.normal_f32() * 0.05).collect())?;
+        let wq = Tensor::new(
+            vec![k, n],
+            w.data.iter().map(|&v| (v / 0.01).round().clamp(-8.0, 7.0)).collect(),
+        )?;
+        let sw = Tensor::full(&[n], 0.01);
+        let sx = Tensor::scalar(0.05);
+        let qm = Tensor::scalar(7.0);
+
+        let fp_sig = engine.manifest.kernel(&format!("mm_fp_jnp_{m}x{k}x{n}"))?.clone();
+        let dyn_sig = engine.manifest.kernel(&format!("qmm_dynamic_jnp_{m}x{k}x{n}"))?.clone();
+        let st_sig = engine.manifest.kernel(&format!("qmm_static_jnp_{m}x{k}x{n}"))?.clone();
+        engine.run(&fp_sig, &[Value::F32(&x), Value::F32(&w)])?;
+        engine.run(&dyn_sig, &[Value::F32(&x), Value::F32(&wq), Value::F32(&sw), Value::F32(&qm)])?;
+        engine.run(
+            &st_sig,
+            &[Value::F32(&x), Value::F32(&wq), Value::F32(&sx), Value::F32(&sw), Value::F32(&qm)],
+        )?;
+
+        let probe = std::time::Instant::now();
+        engine.run(&fp_sig, &[Value::F32(&x), Value::F32(&w)])?;
+        let samples = auto_samples(probe.elapsed().as_secs_f64(), 2.0, 8, 100);
+        let fp = bench_fn("fp", 2, samples, || {
+            engine.run(&fp_sig, &[Value::F32(&x), Value::F32(&w)]).unwrap();
+        });
+        let dy = bench_fn("dyn", 2, samples, || {
+            engine
+                .run(&dyn_sig, &[Value::F32(&x), Value::F32(&wq), Value::F32(&sw), Value::F32(&qm)])
+                .unwrap();
+        });
+        let st = bench_fn("static", 2, samples, || {
+            engine
+                .run(
+                    &st_sig,
+                    &[
+                        Value::F32(&x),
+                        Value::F32(&wq),
+                        Value::F32(&sx),
+                        Value::F32(&sw),
+                        Value::F32(&qm),
+                    ],
+                )
+                .unwrap();
+        });
+        table.rowv(vec![
+            format!("({m}, {k}, {n})"),
+            format!("{:.3}", fp.per_call_ms()),
+            format!("{:.3}", dy.per_call_ms()),
+            format!("{:.3}", st.per_call_ms()),
+            format!("{:.2}x", dy.median_s / st.median_s),
+        ]);
+    }
+    table.print();
+    println!("(CPU substrate: no real INT4 GEMM — the static-vs-dynamic gap is the");
+    println!(" paper's mechanism; absolute FP-vs-INT speedups are GPU-specific.)");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Hand-rolled bench harness (criterion is not cached offline).
+//!
+//! `bench_fn` warms up, then runs timed samples and reports median /
+//! mean / p10-p90 wall time.  Benches are `harness = false` binaries that
+//! print paper-style tables (see rust/benches/).
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+}
+
+impl BenchStats {
+    pub fn per_call_ms(&self) -> f64 {
+        self.median_s * 1e3
+    }
+}
+
+/// Time `f` with `warmup` throwaway calls and `samples` measured calls.
+pub fn bench_fn(name: &str, warmup: usize, samples: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+    BenchStats {
+        name: name.to_string(),
+        samples,
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+        median_s: pct(0.5),
+        p10_s: pct(0.1),
+        p90_s: pct(0.9),
+    }
+}
+
+/// Adaptive sample count: aim for ~`budget_s` seconds of measurement.
+pub fn auto_samples(probe_s: f64, budget_s: f64, min: usize, max: usize) -> usize {
+    ((budget_s / probe_s.max(1e-9)) as usize).clamp(min, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordered() {
+        let s = bench_fn("noop", 2, 32, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.p10_s <= s.median_s && s.median_s <= s.p90_s);
+        assert_eq!(s.samples, 32);
+    }
+
+    #[test]
+    fn auto_samples_clamps() {
+        assert_eq!(auto_samples(1.0, 0.5, 5, 100), 5);
+        assert_eq!(auto_samples(0.001, 10.0, 5, 100), 100);
+    }
+}

@@ -1,0 +1,117 @@
+//! Configuration mirrored from artifacts/manifest.json.
+//!
+//! Rust never hardcodes model geometry — everything comes from the manifest
+//! written by python/compile/aot.py, so the two sides cannot drift.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub o_model: usize,
+    pub inject_amp: f32,
+    pub inject_delta: f32,
+    pub max_prefix: usize,
+    pub train_seq: usize,
+    pub eval_seq: usize,
+    pub cache_max: usize,
+    pub sites: Vec<String>,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            vocab_size: j.get("vocab_size")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            d_head: j.get("d_head")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            o_model: j.get("o_model")?.as_usize()?,
+            inject_amp: j.get("inject_amp")?.as_f64()? as f32,
+            inject_delta: j.get("inject_delta")?.as_f64()? as f32,
+            max_prefix: j.get("max_prefix")?.as_usize()?,
+            train_seq: j.get("train_seq")?.as_usize()?,
+            eval_seq: j.get("eval_seq")?.as_usize()?,
+            cache_max: j.get("cache_max")?.as_usize()?,
+            sites: j
+                .get("sites")?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.sites.len()
+    }
+
+    pub fn site_index(&self, name: &str) -> Option<usize> {
+        self.sites.iter().position(|s| s == name)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TokenizerSpec {
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub byte_offset: i32,
+    pub vocab_size: usize,
+    pub delimiter_ids: Vec<i32>,
+}
+
+impl TokenizerSpec {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            pad: j.get("pad")?.as_i64()? as i32,
+            bos: j.get("bos")?.as_i64()? as i32,
+            eos: j.get("eos")?.as_i64()? as i32,
+            byte_offset: j.get("byte_offset")?.as_i64()? as i32,
+            vocab_size: j.get("vocab_size")?.as_usize()?,
+            delimiter_ids: j
+                .get("delimiter_ids")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_i64()? as i32))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub n_words: usize,
+    pub n_followers: usize,
+    pub follow_prob10: u64,
+    pub word_seed: u64,
+    pub train_seed: u64,
+    pub eval_seed: u64,
+    pub train_chars: usize,
+    pub eval_chars: usize,
+}
+
+impl CorpusSpec {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            n_words: j.get("n_words")?.as_usize()?,
+            n_followers: j.get("n_followers")?.as_usize()?,
+            follow_prob10: j.get("follow_prob10")?.as_i64()? as u64,
+            word_seed: j.get("word_seed")?.as_i64()? as u64,
+            train_seed: j.get("train_seed")?.as_i64()? as u64,
+            eval_seed: j.get("eval_seed")?.as_i64()? as u64,
+            train_chars: j.get("train_chars")?.as_usize()?,
+            eval_chars: j.get("eval_chars")?.as_usize()?,
+        })
+    }
+}

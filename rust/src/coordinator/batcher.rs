@@ -1,0 +1,92 @@
+//! Dynamic batcher: groups pending requests into fixed-geometry batches.
+//!
+//! The decode executable has a fixed batch dimension and a single shared
+//! cache_len, so a batch must have uniform prompt length — the batcher
+//! buckets by length and releases the largest eligible bucket, oldest first
+//! (vLLM-style FCFS within a shape bucket).
+
+use std::collections::VecDeque;
+
+use super::request::GenRequest;
+
+pub struct Batcher {
+    pending: VecDeque<GenRequest>,
+    pub max_batch: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize) -> Self {
+        Self { pending: VecDeque::new(), max_batch }
+    }
+
+    pub fn push(&mut self, req: GenRequest) {
+        self.pending.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Pop the next batch: all requests sharing the prompt length of the
+    /// *oldest* pending request (FCFS head-of-line), up to max_batch.
+    pub fn next_batch(&mut self) -> Vec<GenRequest> {
+        let Some(head) = self.pending.front() else {
+            return Vec::new();
+        };
+        let want = head.prompt.len();
+        let mut batch = Vec::with_capacity(self.max_batch);
+        let mut rest = VecDeque::with_capacity(self.pending.len());
+        while let Some(r) = self.pending.pop_front() {
+            if r.prompt.len() == want && batch.len() < self.max_batch {
+                batch.push(r);
+            } else {
+                rest.push_back(r);
+            }
+        }
+        self.pending = rest;
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, len: usize) -> GenRequest {
+        GenRequest { id, prompt: vec![5; len], max_new: 4 }
+    }
+
+    #[test]
+    fn batches_by_head_length_fcfs() {
+        let mut b = Batcher::new(4);
+        for (id, len) in [(1, 8), (2, 16), (3, 8), (4, 8), (5, 16)] {
+            b.push(req(id, len));
+        }
+        let first = b.next_batch();
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        let second = b.next_batch();
+        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 5]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b = Batcher::new(2);
+        for id in 0..5 {
+            b.push(req(id, 8));
+        }
+        assert_eq!(b.next_batch().len(), 2);
+        assert_eq!(b.next_batch().len(), 2);
+        assert_eq!(b.next_batch().len(), 1);
+    }
+
+    #[test]
+    fn empty_gives_empty() {
+        let mut b = Batcher::new(4);
+        assert!(b.next_batch().is_empty());
+    }
+}

@@ -1,0 +1,204 @@
+//! KV-cache manager with shared prefixed entries (the paper's mechanism).
+//!
+//! The prefixed tokens' K/V are computed ONCE at model-quantization time and
+//! installed into slots [0, n_prefix) of every sequence's cache — they are
+//! never recomputed, never evicted, and identical across sequences (the
+//! "prefixed outliers in the KV cache" of the title).  Prompt/decoded tokens
+//! occupy slots [n_prefix, cache_len).
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::model::PrefixState;
+use crate::tensor::Tensor;
+
+pub struct KvCache {
+    pub n_layers: usize,
+    pub batch: usize,
+    pub n_heads: usize,
+    pub s_max: usize,
+    pub d_head: usize,
+    /// [L, B, H, Smax, dh] storage-domain tensors fed to decode_step
+    pub k: Tensor,
+    pub v: Tensor,
+    /// valid entries (incl. prefix slots); uniform across the batch
+    pub len: usize,
+    pub n_prefix: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig, batch: usize) -> Self {
+        let shape = [cfg.n_layers, batch, cfg.n_heads, cfg.cache_max, cfg.d_head];
+        Self {
+            n_layers: cfg.n_layers,
+            batch,
+            n_heads: cfg.n_heads,
+            s_max: cfg.cache_max,
+            d_head: cfg.d_head,
+            k: Tensor::zeros(&shape),
+            v: Tensor::zeros(&shape),
+            len: 0,
+            n_prefix: 0,
+        }
+    }
+
+    fn off(&self, l: usize, b: usize, h: usize, s: usize) -> usize {
+        (((l * self.batch + b) * self.n_heads + h) * self.s_max + s) * self.d_head
+    }
+
+    /// Install the shared prefix into slots [0, n_prefix) of every row.
+    pub fn install_prefix(&mut self, p: &PrefixState) -> Result<()> {
+        let n = p.n_prefix as usize;
+        if n == 0 {
+            self.len = 0;
+            self.n_prefix = 0;
+            return Ok(());
+        }
+        let pcap = p.k.shape[2]; // padded prefix capacity P
+        let dh = self.d_head;
+        for l in 0..self.n_layers {
+            for b in 0..self.batch {
+                for h in 0..self.n_heads {
+                    for s in 0..n {
+                        let src = ((l * self.n_heads + h) * pcap + s) * dh;
+                        let dst = self.off(l, b, h, s);
+                        self.k.data[dst..dst + dh].copy_from_slice(&p.k.data[src..src + dh]);
+                        self.v.data[dst..dst + dh].copy_from_slice(&p.v.data[src..src + dh]);
+                    }
+                }
+            }
+        }
+        self.n_prefix = n;
+        self.len = n;
+        Ok(())
+    }
+
+    /// Write prefill K/V ([L, B, H, S, dh], quantized storage domain from the
+    /// prefill executable) for the first `prompt_len` positions of each row,
+    /// starting at slot n_prefix.  Sets len = n_prefix + prompt_len.
+    pub fn write_prefill(&mut self, k: &Tensor, v: &Tensor, prompt_len: usize) -> Result<()> {
+        let (l, b, h, s, dh) =
+            (k.shape[0], k.shape[1], k.shape[2], k.shape[3], k.shape[4]);
+        if l != self.n_layers || b != self.batch || h != self.n_heads || dh != self.d_head {
+            bail!("prefill kv shape mismatch: {:?}", k.shape);
+        }
+        if self.n_prefix + prompt_len > self.s_max {
+            bail!("prompt too long: {} + {} > {}", self.n_prefix, prompt_len, self.s_max);
+        }
+        for li in 0..l {
+            for bi in 0..b {
+                for hi in 0..h {
+                    for si in 0..prompt_len.min(s) {
+                        let src = (((li * b + bi) * h + hi) * s + si) * dh;
+                        let dst = self.off(li, bi, hi, self.n_prefix + si);
+                        self.k.data[dst..dst + dh].copy_from_slice(&k.data[src..src + dh]);
+                        self.v.data[dst..dst + dh].copy_from_slice(&v.data[src..src + dh]);
+                    }
+                }
+            }
+        }
+        self.len = self.n_prefix + prompt_len;
+        Ok(())
+    }
+
+    /// Adopt the decode executable's updated caches and bump len.
+    pub fn adopt(&mut self, k: Tensor, v: Tensor) -> Result<()> {
+        if k.shape != self.k.shape || v.shape != self.v.shape {
+            bail!("decode kv shape mismatch");
+        }
+        if self.len + 1 > self.s_max {
+            bail!("cache overflow at len {}", self.len);
+        }
+        self.k = k;
+        self.v = v;
+        self.len += 1;
+        Ok(())
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.s_max - self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab_size: 272,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ff: 16,
+            o_model: 3,
+            inject_amp: 1.0,
+            inject_delta: 0.1,
+            max_prefix: 4,
+            train_seq: 8,
+            eval_seq: 8,
+            cache_max: 16,
+            sites: vec!["down_in".into()],
+        }
+    }
+
+    fn prefix(cfg: &ModelConfig, n: usize) -> PrefixState {
+        let shape = [cfg.n_layers, cfg.n_heads, cfg.max_prefix, cfg.d_head];
+        let mut k = Tensor::zeros(&shape);
+        for (i, v) in k.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        PrefixState {
+            tokens: vec![49; n],
+            n_prefix: n as i32,
+            n_ctx_sinks: n as i32,
+            v: k.clone(),
+            k,
+        }
+    }
+
+    #[test]
+    fn prefix_shared_across_rows() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c, 3);
+        kv.install_prefix(&prefix(&c, 2)).unwrap();
+        assert_eq!(kv.len, 2);
+        // row 0 and row 2 hold identical prefix entries
+        for l in 0..c.n_layers {
+            for h in 0..c.n_heads {
+                for s in 0..2 {
+                    let a = kv.off(l, 0, h, s);
+                    let b = kv.off(l, 2, h, s);
+                    assert_eq!(kv.k.data[a..a + 4], kv.k.data[b..b + 4]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_goes_after_prefix() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c, 2);
+        kv.install_prefix(&prefix(&c, 2)).unwrap();
+        let shape = [c.n_layers, 2, c.n_heads, 5, c.d_head];
+        let k = Tensor::full(&shape, 7.0);
+        kv.write_prefill(&k, &k, 5).unwrap();
+        assert_eq!(kv.len, 7);
+        let o = kv.off(0, 0, 0, 2);
+        assert_eq!(kv.k.data[o], 7.0); // first prompt slot right after prefix
+        let o1 = kv.off(0, 0, 0, 1);
+        assert_ne!(kv.k.data[o1], 7.0); // prefix untouched
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c, 1);
+        kv.install_prefix(&prefix(&c, 2)).unwrap();
+        let shape = [c.n_layers, 1, c.n_heads, 20, c.d_head];
+        let k = Tensor::zeros(&shape);
+        assert!(kv.write_prefill(&k, &k, 20).is_err());
+    }
+}

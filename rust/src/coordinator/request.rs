@@ -1,0 +1,51 @@
+//! Request/response types for the serving coordinator.
+
+/// A generation request (prompt already tokenized, no BOS — the scheduler
+/// prepends it so every sequence starts with the initial-position token).
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    /// generated continuation tokens (prompt excluded)
+    pub tokens: Vec<i32>,
+    /// time to first token (prefill) in seconds, shared across the batch
+    pub ttft_s: f64,
+    /// total latency for this request's batch
+    pub total_s: f64,
+}
+
+/// Aggregate serving metrics (reported by the server / serve_batch example).
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests: usize,
+    pub batches: usize,
+    pub generated_tokens: usize,
+    pub prefill_tokens: usize,
+    pub sum_ttft_s: f64,
+    pub sum_batch_s: f64,
+}
+
+impl Metrics {
+    pub fn mean_ttft(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.sum_ttft_s / self.batches as f64
+        }
+    }
+
+    pub fn decode_tps(&self) -> f64 {
+        let decode_time = self.sum_batch_s - self.sum_ttft_s;
+        if decode_time <= 0.0 {
+            0.0
+        } else {
+            self.generated_tokens as f64 / decode_time
+        }
+    }
+}

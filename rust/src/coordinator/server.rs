@@ -1,0 +1,177 @@
+//! Thread-based serving engine.
+//!
+//! PJRT handles are not `Send`, so the model lives on a dedicated worker
+//! thread: the server takes a `Send` constructor closure, builds the model
+//! there, and services requests from an mpsc queue through the dynamic
+//! batcher + scheduler.  Clients get responses over per-request channels.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{Model, QuantMode};
+
+use super::batcher::Batcher;
+use super::request::{GenRequest, GenResponse, Metrics};
+use super::scheduler;
+
+enum Msg {
+    Gen(GenRequest, Sender<Result<GenResponse, String>>),
+    Stats(Sender<Metrics>),
+    Shutdown,
+}
+
+pub struct Server {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+pub struct ServerConfig {
+    pub mode: QuantMode,
+    pub max_batch: usize,
+    /// how long the batcher waits to fill a batch before dispatching
+    pub batch_window: Duration,
+    pub bos: i32,
+    pub pad: i32,
+}
+
+impl Server {
+    /// Start the worker thread. `make_model` runs on the worker (PJRT state
+    /// is created there and never crosses threads).
+    pub fn start<F>(make_model: F, cfg: ServerConfig) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Model> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("pq-model-worker".into())
+            .spawn(move || worker(make_model, cfg, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during startup"))?
+            .map_err(|e| anyhow!("model init failed: {e}"))?;
+        Ok(Server { tx, handle: Some(handle) })
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: GenRequest) -> Result<Receiver<Result<GenResponse, String>>> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Gen(req, tx)).map_err(|_| anyhow!("server is down"))?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience call.
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| anyhow!("server dropped request"))?.map_err(|e| anyhow!(e))
+    }
+
+    pub fn metrics(&self) -> Result<Metrics> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Stats(tx)).map_err(|_| anyhow!("server is down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped stats request"))
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker<F>(
+    make_model: F,
+    cfg: ServerConfig,
+    rx: Receiver<Msg>,
+    ready: Sender<Result<(), String>>,
+) where
+    F: FnOnce() -> Result<Model>,
+{
+    let model = match make_model() {
+        Ok(m) => {
+            let _ = ready.send(Ok(()));
+            m
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let mut batcher = Batcher::new(cfg.max_batch);
+    let mut waiters: std::collections::HashMap<u64, Sender<Result<GenResponse, String>>> =
+        std::collections::HashMap::new();
+    let mut metrics = Metrics::default();
+
+    'outer: loop {
+        // block for the first message, then drain within the batch window
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        let mut msgs = vec![first];
+        let deadline = std::time::Instant::now() + cfg.batch_window;
+        while let Some(left) = deadline.checked_duration_since(std::time::Instant::now()) {
+            match rx.recv_timeout(left) {
+                Ok(m) => msgs.push(m),
+                Err(_) => break,
+            }
+            if batcher.len() + msgs.len() >= cfg.max_batch {
+                break;
+            }
+        }
+        for m in msgs {
+            match m {
+                Msg::Gen(req, tx) => {
+                    waiters.insert(req.id, tx);
+                    batcher.push(req);
+                }
+                Msg::Stats(tx) => {
+                    let _ = tx.send(metrics.clone());
+                }
+                Msg::Shutdown => break 'outer,
+            }
+        }
+        // dispatch every ready batch
+        while !batcher.is_empty() {
+            let batch = batcher.next_batch();
+            let prefill_toks: usize = batch.iter().map(|r| r.prompt.len() + 1).sum();
+            match scheduler::run_batch(&model, cfg.mode, &batch, cfg.bos, cfg.pad) {
+                Ok(responses) => {
+                    metrics.batches += 1;
+                    metrics.requests += batch.len();
+                    metrics.prefill_tokens += prefill_toks;
+                    if let Some(r0) = responses.first() {
+                        metrics.sum_ttft_s += r0.ttft_s;
+                        metrics.sum_batch_s += r0.total_s;
+                    }
+                    for resp in responses {
+                        metrics.generated_tokens += resp.tokens.len();
+                        if let Some(tx) = waiters.remove(&resp.id) {
+                            let _ = tx.send(Ok(resp));
+                        }
+                    }
+                }
+                Err(e) => {
+                    for r in &batch {
+                        if let Some(tx) = waiters.remove(&r.id) {
+                            let _ = tx.send(Err(format!("{e:#}")));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Synthetic bigram-language corpus — bit-exact twin of python/compile/data.py.
+//!
+//! The train split is what the model was pretrained on (calibration samples
+//! come from here, as the paper calibrates on Pile); the eval split plays the
+//! role of WikiText2 for perplexity.
+
+use crate::config::CorpusSpec;
+use crate::util::rng::SplitMix64;
+
+pub struct Language {
+    pub words: Vec<String>,
+    pub followers: Vec<Vec<usize>>,
+    cum: Vec<u64>,
+    pub spec: CorpusSpec,
+}
+
+impl Language {
+    pub fn new(spec: CorpusSpec) -> Self {
+        let mut rng = SplitMix64::new(spec.word_seed);
+        let mut words = Vec::with_capacity(spec.n_words);
+        for _ in 0..spec.n_words {
+            let ln = 2 + rng.below(6) as usize;
+            let w: String =
+                (0..ln).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+            words.push(w);
+        }
+        let followers: Vec<Vec<usize>> = (0..spec.n_words)
+            .map(|_| (0..spec.n_followers).map(|_| rng.below(spec.n_words as u64) as usize).collect())
+            .collect();
+        let mut cum = Vec::with_capacity(spec.n_words);
+        let mut total = 0u64;
+        for r in 0..spec.n_words {
+            total += 1_000_000 / (r as u64 + 3);
+            cum.push(total);
+        }
+        Self { words, followers, cum, spec }
+    }
+
+    pub fn zipf_sample(&self, rng: &mut SplitMix64) -> usize {
+        let u = rng.below(*self.cum.last().unwrap());
+        // binary search: first index with cum[i] > u
+        let (mut lo, mut hi) = (0usize, self.cum.len() - 1);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.cum[mid] > u {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo
+    }
+
+    /// Generate at least `n_chars` characters (same stream as python).
+    pub fn generate(&self, seed: u64, n_chars: usize) -> String {
+        let mut rng = SplitMix64::new(seed);
+        let mut out = String::with_capacity(n_chars + 256);
+        let mut prev = self.zipf_sample(&mut rng);
+        while out.len() < n_chars {
+            let n_sent = 2 + rng.below(5);
+            for s in 0..n_sent {
+                let n_w = 3 + rng.below(8);
+                for w in 0..n_w {
+                    if rng.below(10) < self.spec.follow_prob10 {
+                        prev = self.followers[prev][rng.below(self.spec.n_followers as u64) as usize];
+                    } else {
+                        prev = self.zipf_sample(&mut rng);
+                    }
+                    if w > 0 {
+                        out.push(' ');
+                    }
+                    out.push_str(&self.words[prev]);
+                }
+                out.push('.');
+                if s != n_sent - 1 {
+                    out.push(' ');
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn train_text(&self) -> String {
+        self.generate(self.spec.train_seed, self.spec.train_chars)
+    }
+
+    pub fn eval_text(&self) -> String {
+        self.generate(self.spec.eval_seed, self.spec.eval_chars)
+    }
+}
+
+/// Chop a token stream into non-overlapping [seq]-sized windows, each
+/// starting with BOS (mirrors pretrain.make_batches / the PPL protocol).
+pub fn windows(ids: &[i32], seq: usize, bos: i32, max_windows: usize) -> Vec<Vec<i32>> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start + seq <= ids.len() && out.len() < max_windows {
+        let mut w = ids[start..start + seq].to_vec();
+        w[0] = bos;
+        out.push(w);
+        start += seq;
+    }
+    out
+}
+
+/// Deterministic calibration sample windows drawn from the train split.
+pub fn calibration_windows(
+    lang: &Language,
+    tokenize: impl Fn(&str) -> Vec<i32>,
+    seq: usize,
+    n: usize,
+    bos: i32,
+) -> Vec<Vec<i32>> {
+    let text = lang.train_text();
+    let ids = tokenize(&text);
+    // spread n windows evenly over the train stream (deterministic, like the
+    // paper's fixed 8-sample Pile calibration set)
+    let stride = (ids.len() - seq) / n.max(1);
+    (0..n)
+        .map(|i| {
+            let mut w = ids[i * stride..i * stride + seq].to_vec();
+            w[0] = bos;
+            w
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CorpusSpec {
+        CorpusSpec {
+            n_words: 256,
+            n_followers: 8,
+            follow_prob10: 7,
+            word_seed: 0x5EED_0001,
+            train_seed: 0x5EED_0002,
+            eval_seed: 0x5EED_0003,
+            train_chars: 4000,
+            eval_chars: 2000,
+        }
+    }
+
+    #[test]
+    fn deterministic_and_structured() {
+        let lang = Language::new(spec());
+        let a = lang.generate(1, 1000);
+        let b = lang.generate(1, 1000);
+        assert_eq!(a, b);
+        assert!(a.contains('.'));
+        assert!(a.contains('\n'));
+        assert!(a.split('.').count() > 5);
+    }
+
+    /// Golden parity with python/compile/data.py: generate_chars(cfg, 1, 1000).
+    #[test]
+    fn matches_python_reference() {
+        let mut s = spec();
+        s.n_words = 256;
+        let lang = Language::new(s);
+        let t = lang.generate(1, 1000);
+        assert_eq!(t.len(), 1041);
+        assert!(t.starts_with(
+            "kuoc mkfk ljsff jxeysu aigzoh tlul blikpr nmon foz. ski uy qwxkkjl"
+        ));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let lang = Language::new(spec());
+        assert_ne!(lang.generate(1, 500), lang.generate(2, 500));
+    }
+
+    #[test]
+    fn windows_shape() {
+        let ids: Vec<i32> = (0..100).collect();
+        let w = windows(&ids, 32, 1, 10);
+        assert_eq!(w.len(), 3);
+        assert!(w.iter().all(|x| x.len() == 32 && x[0] == 1));
+    }
+}

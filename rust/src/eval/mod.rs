@@ -1,0 +1,9 @@
+//! Evaluation harness: perplexity (WikiText2-analog) and five synthetic
+//! zero-shot tasks scored lm-eval style (length-normalized logprob over
+//! candidate continuations — the paper's acc/acc_norm protocol).
+
+pub mod ppl;
+pub mod tasks;
+
+pub use ppl::perplexity;
+pub use tasks::{run_all_tasks, TaskScore};

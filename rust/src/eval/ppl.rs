@@ -1,0 +1,87 @@
+//! Perplexity over the held-out synthetic split (the WikiText2 analog).
+//!
+//! Protocol mirrors the paper: non-overlapping windows at the eval context
+//! length, next-token NLL averaged over all predicted positions, PPL = e^nll.
+
+use anyhow::Result;
+
+use crate::model::{Model, QuantMode};
+use crate::tensor::IntTensor;
+
+/// Host log-softmax NLL for a [B,S,V] logits tensor against [B,S] targets
+/// shifted by one. Returns (sum_nll, count).
+fn batch_nll(logits: &crate::tensor::Tensor, tokens: &IntTensor, rows: usize) -> (f64, usize) {
+    let (b, s, v) = (logits.shape[0], logits.shape[1], logits.shape[2]);
+    debug_assert_eq!(tokens.shape, vec![b, s]);
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    for bi in 0..rows.min(b) {
+        for si in 0..s - 1 {
+            let target = tokens.data[bi * s + si + 1];
+            let row = &logits.data[(bi * s + si) * v..(bi * s + si + 1) * v];
+            // stable log-softmax
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let lse: f64 =
+                row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>().ln() + m as f64;
+            sum += lse - row[target as usize] as f64;
+            count += 1;
+        }
+    }
+    (sum, count)
+}
+
+/// Perplexity of `model` under `mode` over pre-tokenized eval windows.
+/// Windows must match the fwd executable's seq length; they are batched into
+/// the executable's fixed batch dimension (last partial batch row-padded by
+/// repeating window 0, padding rows excluded from the NLL).
+pub fn perplexity(model: &Model, mode: QuantMode, windows: &[Vec<i32>]) -> Result<f64> {
+    let (b, s) = model.fwd_geom()?;
+    anyhow::ensure!(!windows.is_empty(), "no eval windows");
+    anyhow::ensure!(windows[0].len() == s, "window length {} != exec seq {s}", windows[0].len());
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    let mut i = 0;
+    while i < windows.len() {
+        let rows = (windows.len() - i).min(b);
+        let mut data = Vec::with_capacity(b * s);
+        for r in 0..b {
+            let w = if r < rows { &windows[i + r] } else { &windows[i] };
+            data.extend_from_slice(w);
+        }
+        let toks = IntTensor::new(vec![b, s], data)?;
+        let logits = model.logits(mode, &toks)?;
+        let (bs, bc) = batch_nll(&logits, &toks, rows);
+        sum += bs;
+        count += bc;
+        i += rows;
+    }
+    Ok((sum / count.max(1) as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn nll_of_uniform_logits_is_logv() {
+        let (b, s, v) = (1, 3, 8);
+        let logits = Tensor::zeros(&[b, s, v]);
+        let toks = IntTensor::new(vec![b, s], vec![1, 2, 3]).unwrap();
+        let (sum, count) = batch_nll(&logits, &toks, 1);
+        assert_eq!(count, 2);
+        assert!((sum / count as f64 - (v as f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nll_prefers_correct_logit() {
+        let (b, s, v) = (1, 2, 4);
+        let mut logits = Tensor::zeros(&[b, s, v]);
+        logits.data[2] = 10.0; // position 0 predicts token 2 strongly
+        let good = IntTensor::new(vec![b, s], vec![0, 2]).unwrap();
+        let bad = IntTensor::new(vec![b, s], vec![0, 3]).unwrap();
+        let (g, _) = batch_nll(&logits, &good, 1);
+        let (w, _) = batch_nll(&logits, &bad, 1);
+        assert!(g < w);
+    }
+}

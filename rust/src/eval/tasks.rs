@@ -1,0 +1,299 @@
+//! Five synthetic zero-shot tasks (the PIQA/ARC/HellaSwag/WinoGrande analog).
+//!
+//! Each task is a 2-way multiple choice grounded in the synthetic language's
+//! learnable structure; scored lm-eval style: pick the candidate continuation
+//! with the higher length-normalized logprob (acc_norm).  Items are packed
+//! several-per-row (newline separated) so one fixed-geometry forward scores a
+//! whole task — the packing is identical across schemes, so comparisons are
+//! apples-to-apples.
+//!
+//! Tasks:
+//!   * `completion` — real word completion vs corrupted tail;
+//!   * `bigram`     — true follower word vs random word after "w ";
+//!   * `delimiter`  — "." vs letter at a sentence boundary;
+//!   * `spelling`   — correct final character vs off-by-one character;
+//!   * `next-word`  — real vocabulary word vs shuffled letters after ". ".
+
+use anyhow::Result;
+
+use crate::data::Language;
+use crate::model::{Model, QuantMode};
+use crate::tensor::IntTensor;
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::SplitMix64;
+
+#[derive(Debug, Clone)]
+pub struct TaskScore {
+    pub name: String,
+    pub accuracy: f64,
+    pub items: usize,
+}
+
+/// One scored segment: candidate continuation at a known position in a row.
+struct Segment {
+    row: usize,
+    /// continuation token positions [start, end) within the row
+    start: usize,
+    end: usize,
+    item: usize,
+    candidate: usize,
+}
+
+struct Packed {
+    tokens: IntTensor, // [B, S]
+    segments: Vec<Segment>,
+    n_items: usize,
+}
+
+/// An item: shared context + per-candidate continuations (candidate 0 = gold).
+struct Item {
+    context: String,
+    candidates: Vec<String>,
+}
+
+fn pack(items: &[Item], tok: &Tokenizer, b: usize, s: usize) -> Packed {
+    let mut rows: Vec<Vec<i32>> = vec![vec![tok.spec.bos]; b];
+    let mut segments = Vec::new();
+    let mut row = 0usize;
+    for (ii, item) in items.iter().enumerate() {
+        for (ci, cand) in item.candidates.iter().enumerate() {
+            let ctx = tok.encode(&item.context, false);
+            let cont = tok.encode(cand, false);
+            // move to the next row if this segment would overflow
+            if rows[row].len() + ctx.len() + cont.len() + 1 >= s {
+                row = (row + 1) % b;
+                if rows[row].len() + ctx.len() + cont.len() + 1 >= s {
+                    break; // batch full — stop packing
+                }
+            }
+            let r = &mut rows[row];
+            r.extend_from_slice(&ctx);
+            let start = r.len();
+            r.extend_from_slice(&cont);
+            let end = r.len();
+            segments.push(Segment { row, start, end, item: ii, candidate: ci });
+            r.push(tok.spec.byte_offset + b'\n' as i32);
+            row = (row + 1) % b;
+        }
+    }
+    let mut data = Vec::with_capacity(b * s);
+    for mut r in rows {
+        r.resize(s, tok.spec.pad);
+        data.extend_from_slice(&r);
+    }
+    let n_items = segments.iter().map(|sg| sg.item + 1).max().unwrap_or(0);
+    Packed { tokens: IntTensor::new(vec![b, s], data).unwrap(), segments, n_items }
+}
+
+/// Score packed items: gold (candidate 0) must have the best normalized
+/// logprob among its item's candidates.
+fn score(model: &Model, mode: QuantMode, packed: &Packed) -> Result<(usize, usize)> {
+    let logits = model.logits(mode, &packed.tokens)?;
+    let (_b, s, v) = (logits.shape[0], logits.shape[1], logits.shape[2]);
+    let toks = &packed.tokens;
+    let lp = |row: usize, start: usize, end: usize| -> f64 {
+        // logprob of tokens[start..end) given the preceding context
+        let mut total = 0.0f64;
+        for pos in start..end {
+            let pred_pos = pos - 1; // logits at pos-1 predict token at pos
+            let target = toks.data[row * s + pos];
+            let lrow = &logits.data[(row * s + pred_pos) * v..(row * s + pred_pos + 1) * v];
+            let m = lrow.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let lse: f64 =
+                lrow.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>().ln() + m as f64;
+            total += lrow[target as usize] as f64 - lse;
+        }
+        total / (end - start).max(1) as f64
+    };
+    let mut best: Vec<(f64, usize)> = vec![(f64::NEG_INFINITY, usize::MAX); packed.n_items];
+    for sg in &packed.segments {
+        let val = lp(sg.row, sg.start, sg.end);
+        if val > best[sg.item].0 {
+            best[sg.item] = (val, sg.candidate);
+        }
+    }
+    let scored = best.iter().filter(|(_, c)| *c != usize::MAX).count();
+    let correct = best.iter().filter(|(_, c)| *c == 0).count();
+    Ok((correct, scored))
+}
+
+fn corrupt(word: &str, rng: &mut SplitMix64) -> String {
+    let mut b: Vec<u8> = word.bytes().collect();
+    let i = rng.below(b.len() as u64) as usize;
+    b[i] = b'a' + ((b[i] - b'a' + 1 + rng.below(24) as u8) % 26);
+    String::from_utf8(b).unwrap()
+}
+
+fn shuffled(word: &str, rng: &mut SplitMix64) -> String {
+    let mut b: Vec<u8> = word.bytes().collect();
+    for i in (1..b.len()).rev() {
+        let j = rng.below((i + 1) as u64) as usize;
+        b.swap(i, j);
+    }
+    let s = String::from_utf8(b).unwrap();
+    if s == word {
+        // force a difference
+        corrupt(word, rng)
+    } else {
+        s
+    }
+}
+
+fn sentence(lang: &Language, rng: &mut SplitMix64, n: usize) -> (Vec<usize>, String) {
+    let mut idx = lang.zipf_sample(rng);
+    let mut ids = Vec::with_capacity(n);
+    let mut parts = Vec::with_capacity(n);
+    for _ in 0..n {
+        idx = if rng.below(10) < 7 {
+            lang.followers[idx][rng.below(lang.followers[idx].len() as u64) as usize]
+        } else {
+            lang.zipf_sample(rng)
+        };
+        ids.push(idx);
+        parts.push(lang.words[idx].clone());
+    }
+    (ids, parts.join(" "))
+}
+
+fn gen_items(lang: &Language, task: &str, n: usize, seed: u64) -> Vec<Item> {
+    let mut rng = SplitMix64::new(seed);
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let n_words = 4 + rng.below(4) as usize;
+        let (ids, text) = sentence(lang, &mut rng, n_words);
+        let last = *ids.last().unwrap();
+        let word = lang.words[last].clone();
+        let item = match task {
+            "completion" => {
+                // context ends mid-word; gold = true tail
+                let split = 1 + rng.below((word.len() - 1) as u64) as usize;
+                let ctx_head: String =
+                    text[..text.len() - word.len() + split].to_string();
+                let gold = word[split..].to_string();
+                let alt = corrupt(&word, &mut rng)[split..].to_string();
+                if gold == alt {
+                    continue;
+                }
+                Item { context: ctx_head, candidates: vec![gold, alt] }
+            }
+            "bigram" => {
+                let fol = lang.followers[last][rng.below(8) as usize];
+                let mut other = lang.zipf_sample(&mut rng);
+                while lang.followers[last].contains(&other) {
+                    other = lang.zipf_sample(&mut rng);
+                }
+                Item {
+                    context: format!("{text} "),
+                    candidates: vec![lang.words[fol].clone(), lang.words[other].clone()],
+                }
+            }
+            "delimiter" => Item {
+                context: text,
+                candidates: vec![".".into(), "q".into()],
+            },
+            "spelling" => {
+                let gold = word.clone();
+                let alt = corrupt(&word, &mut rng);
+                let ctx = text[..text.len() - word.len()].to_string();
+                Item { context: ctx, candidates: vec![gold, alt] }
+            }
+            "next-word" => {
+                let (ids2, _) = sentence(lang, &mut rng, 1);
+                let w = lang.words[ids2[0]].clone();
+                let alt = shuffled(&w, &mut rng);
+                Item { context: format!("{text}. "), candidates: vec![w, alt] }
+            }
+            other => panic!("unknown task {other}"),
+        };
+        items.push(item);
+    }
+    items
+}
+
+pub const TASK_NAMES: [&str; 5] =
+    ["completion", "bigram", "delimiter", "spelling", "next-word"];
+
+/// Run all five tasks; returns per-task scores (and the macro average last).
+pub fn run_all_tasks(
+    model: &Model,
+    mode: QuantMode,
+    lang: &Language,
+    tok: &Tokenizer,
+    items_per_task: usize,
+) -> Result<Vec<TaskScore>> {
+    let (b, s) = model.fwd_geom()?;
+    let mut out = Vec::new();
+    for (ti, name) in TASK_NAMES.iter().enumerate() {
+        let items = gen_items(lang, name, items_per_task, 0xEA57 + ti as u64);
+        let packed = pack(&items, tok, b, s);
+        let (correct, scored) = score(model, mode, &packed)?;
+        out.push(TaskScore {
+            name: name.to_string(),
+            accuracy: 100.0 * correct as f64 / scored.max(1) as f64,
+            items: scored,
+        });
+    }
+    let avg = out.iter().map(|t| t.accuracy).sum::<f64>() / out.len() as f64;
+    out.push(TaskScore { name: "Avg. Acc.".into(), accuracy: avg, items: 0 });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusSpec;
+
+    fn lang() -> Language {
+        Language::new(CorpusSpec {
+            n_words: 64,
+            n_followers: 8,
+            follow_prob10: 7,
+            word_seed: 1,
+            train_seed: 2,
+            eval_seed: 3,
+            train_chars: 1000,
+            eval_chars: 1000,
+        })
+    }
+
+    #[test]
+    fn items_have_two_distinct_candidates() {
+        let l = lang();
+        for name in TASK_NAMES {
+            let items = gen_items(&l, name, 20, 7);
+            assert!(!items.is_empty(), "{name} generated nothing");
+            for it in &items {
+                assert_eq!(it.candidates.len(), 2, "{name}");
+                assert_ne!(it.candidates[0], it.candidates[1], "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_changes_word() {
+        let mut rng = SplitMix64::new(3);
+        for w in ["ab", "hello", "zz"] {
+            assert_ne!(corrupt(w, &mut rng), w);
+        }
+    }
+
+    #[test]
+    fn packing_respects_geometry() {
+        let l = lang();
+        let tok = Tokenizer::new(crate::config::TokenizerSpec {
+            pad: 0,
+            bos: 1,
+            eos: 2,
+            byte_offset: 3,
+            vocab_size: 272,
+            delimiter_ids: vec![13, 49],
+        });
+        let items = gen_items(&l, "bigram", 16, 7);
+        let p = pack(&items, &tok, 8, 256);
+        assert_eq!(p.tokens.shape, vec![8, 256]);
+        for sg in &p.segments {
+            assert!(sg.start > 0 && sg.end <= 256 && sg.start < sg.end);
+        }
+        assert!(p.n_items >= 8);
+    }
+}

@@ -1,0 +1,33 @@
+//! PrefixQuant reproduction — rust L3 coordinator + quantization pipeline.
+//!
+//! Three-layer architecture (DESIGN.md):
+//!   L1  Pallas kernels  (python, build time, interpret=True)
+//!   L2  JAX model       (python, build time, AOT-lowered to HLO text)
+//!   L3  this crate      (request path: PJRT runtime, quant pipeline,
+//!                        serving coordinator, eval harness)
+//!
+//! Entry points: [`runtime::Engine`] loads artifacts, [`model::Model`] binds a
+//! checkpoint, [`quant::pipeline`] runs the PrefixQuant quantization flow,
+//! [`coordinator`] serves generation requests, [`eval`] scores models.
+
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;
+
+pub use anyhow::Result;
+
+/// Default artifacts directory (relative to the repo root).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("PQ_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

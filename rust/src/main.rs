@@ -1,0 +1,288 @@
+//! `pq` — PrefixQuant CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   info                         — artifacts / manifest summary
+//!   outliers  [--model M] [--rotate] [--prefix]
+//!                                — token-wise outlier report (Figs 2-4)
+//!   quantize  [--model M] [--scheme S] [--eval]
+//!                                — run the quantization pipeline (+PPL)
+//!   eval      [--model M] [--scheme S] [--tasks]
+//!                                — PPL / zero-shot accuracy
+//!   gen       [--model M] [--scheme S] [--prompt TEXT] [--n N]
+//!                                — generate via the serving coordinator
+//!   serve                        — pointer to the serve_batch example
+//!
+//! Schemes: fp16, rtn, quarot, smoothquant, atom, prefixquant-wo-ft,
+//! prefixquant (default bit-widths W4A4KV4; --bits w,a,kv overrides).
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+use prefixquant::coordinator::{GenRequest, Server, ServerConfig};
+use prefixquant::data::{self, Language};
+use prefixquant::eval;
+use prefixquant::model::Model;
+use prefixquant::quant::{outlier, pipeline, SchemeConfig};
+use prefixquant::runtime::Engine;
+use prefixquant::tensor::IntTensor;
+use prefixquant::tokenizer::Tokenizer;
+use prefixquant::util::args::Args;
+use prefixquant::util::table::{f as ff, Table};
+
+fn parse_bits(args: &Args) -> Result<(usize, usize, usize)> {
+    match args.get("bits") {
+        None => Ok((4, 4, 4)),
+        Some(s) => {
+            let parts: Vec<usize> = s
+                .split(',')
+                .map(|p| p.parse().map_err(|e| anyhow!("--bits: {e}")))
+                .collect::<Result<_>>()?;
+            if parts.len() != 3 {
+                bail!("--bits wants w,a,kv");
+            }
+            Ok((parts[0], parts[1], parts[2]))
+        }
+    }
+}
+
+fn scheme_by_name(
+    name: &str,
+    bits: (usize, usize, usize),
+    ft_epochs: usize,
+) -> Result<SchemeConfig> {
+    let (w, a, kv) = bits;
+    Ok(match name {
+        "fp16" => SchemeConfig::fp16(),
+        "rtn" => SchemeConfig::rtn(w, a, kv),
+        "quarot" => SchemeConfig::quarot(w, a, kv),
+        "smoothquant" => SchemeConfig::smoothquant(w, a, kv),
+        "atom" => SchemeConfig::atom(w, a, kv),
+        "prefixquant-wo-ft" => SchemeConfig::prefixquant_wo_ft(w, a, kv),
+        "prefixquant" => SchemeConfig::prefixquant(w, a, kv, ft_epochs),
+        other => bail!("unknown scheme {other:?}"),
+    })
+}
+
+struct Ctx {
+    engine: Rc<Engine>,
+    tok: Tokenizer,
+    lang: Language,
+}
+
+fn ctx() -> Result<Ctx> {
+    let dir = prefixquant::artifacts_dir();
+    let engine = Rc::new(Engine::new(&dir)?);
+    let tok = Tokenizer::new(engine.manifest.tokenizer.clone());
+    let lang = Language::new(engine.manifest.corpus.clone());
+    Ok(Ctx { engine, tok, lang })
+}
+
+fn calib_batch(c: &Ctx, model: &Model) -> Result<IntTensor> {
+    let (b, s) = model.fwd_geom()?;
+    let windows =
+        data::calibration_windows(&c.lang, |t| c.tok.encode(t, false), s, b, c.tok.spec.bos);
+    let data: Vec<i32> = windows.into_iter().flatten().collect();
+    Ok(IntTensor::new(vec![b, s], data)?)
+}
+
+fn eval_windows(c: &Ctx, model: &Model, max: usize) -> Result<Vec<Vec<i32>>> {
+    let (_b, s) = model.fwd_geom()?;
+    let ids = c.tok.encode(&c.lang.eval_text(), false);
+    Ok(data::windows(&ids, s, c.tok.spec.bos, max))
+}
+
+fn quantize_model(c: &Ctx, args: &Args) -> Result<(Model, SchemeConfig)> {
+    let mname = args.get_or("model", "pq-tiny").to_string();
+    let sname = args.get_or("scheme", "prefixquant-wo-ft").to_string();
+    let ft = args.usize_or("ft-epochs", 10)?;
+    let scheme = scheme_by_name(&sname, parse_bits(args)?, ft)?;
+    let mut model = Model::load(c.engine.clone(), &mname)?;
+    let calib = calib_batch(c, &model)?;
+    eprintln!("quantizing {mname} with {}...", scheme.name);
+    let rep = pipeline::quantize(&mut model, &scheme, &calib, &c.tok)?;
+    eprintln!(
+        "  prefix={:?} find={:.2}s grid={:.2}s ft={:.2}s total={:.2}s",
+        rep.prefix_rendered, rep.t_find_prefix, rep.t_grid, rep.t_ft, rep.t_total
+    );
+    Ok((model, scheme))
+}
+
+fn cmd_info(c: &Ctx) -> Result<()> {
+    let m = &c.engine.manifest;
+    println!("artifacts: {:?}", m.dir);
+    println!(
+        "tokenizer: vocab={} delims={:?}",
+        m.tokenizer.vocab_size, m.tokenizer.delimiter_ids
+    );
+    for (name, mm) in &m.models {
+        println!(
+            "model {name}: d={} L={} H={} ff={} | pretrain loss={:?} | {} executables",
+            mm.config.d_model,
+            mm.config.n_layers,
+            mm.config.n_heads,
+            mm.config.d_ff,
+            mm.pretrain_final_loss,
+            mm.executables.len()
+        );
+    }
+    println!("{} kernel executables", m.kernels.len());
+    Ok(())
+}
+
+fn cmd_outliers(c: &Ctx, args: &Args) -> Result<()> {
+    let mname = args.get_or("model", "pq-tiny").to_string();
+    let mut model = Model::load(c.engine.clone(), &mname)?;
+    if args.flag("rotate") {
+        let cfg = model.cfg.clone();
+        prefixquant::quant::rotation::absorb_norm_gains(&cfg, &mut model.weights)?;
+        prefixquant::quant::rotation::fold_rotations(&cfg, &mut model.weights)?;
+        let (r3, r4) = prefixquant::quant::rotation::online_matrices(&model.cfg, true);
+        model.quant.r3 = r3;
+        model.quant.r4 = r4;
+        model.refresh_weights()?;
+    }
+    let calib = calib_batch(c, &model)?;
+    if args.flag("prefix") {
+        let (_obs, rep) = outlier::observe_and_analyze(&model, &calib, outlier::ETA)?;
+        let toks = prefixquant::quant::prefix::select_tokens(&rep, &c.tok);
+        prefixquant::quant::prefix::install(&mut model, &toks, c.tok.spec.pad)?;
+        println!("installed {}", prefixquant::quant::prefix::describe(&model, &c.tok)?);
+    }
+    let (_obs2, rep2) = outlier::observe_and_analyze(&model, &calib, outlier::ETA)?;
+    let mut t = Table::new(
+        &format!(
+            "token-wise max ratios ({mname}{}{})",
+            if args.flag("rotate") { " +rotate" } else { "" },
+            if args.flag("prefix") { " +prefix" } else { "" }
+        ),
+        &["layer", "site", "top1", "median", "min1", "top1/med", "med/min1"],
+    );
+    for (li, row) in rep2.site_stats.iter().enumerate() {
+        for (si, st) in row.iter().enumerate() {
+            t.rowv(vec![
+                li.to_string(),
+                model.cfg.sites[si].clone(),
+                ff(st.top1 as f64),
+                ff(st.median as f64),
+                ff(st.min1 as f64),
+                ff(st.upper_ratio() as f64),
+                ff(st.lower_ratio() as f64),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\noutliers detected (down_in, eta={}): total={} o_per_block={:?} -> o={}",
+        rep2.eta, rep2.total_outliers, rep2.o_per_block, rep2.o
+    );
+    println!(
+        "outlier token frequency (non-initial): {:?}",
+        rep2.freq.iter().map(|&(id, n)| (c.tok.token_repr(id), n)).collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+fn cmd_quantize(c: &Ctx, args: &Args) -> Result<()> {
+    let (model, scheme) = quantize_model(c, args)?;
+    if args.flag("eval") {
+        let windows = eval_windows(c, &model, args.usize_or("windows", 24)?)?;
+        let ppl = eval::perplexity(&model, scheme.mode, &windows)?;
+        println!("{}: eval PPL = {:.4}", scheme.name, ppl);
+    }
+    if let Some(dir) = args.get("save") {
+        prefixquant::quant::model_state::save(&model, scheme.mode, std::path::Path::new(dir))?;
+        println!("quantized model saved to {dir}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(c: &Ctx, args: &Args) -> Result<()> {
+    if let Some(dir) = args.get("load") {
+        // evaluate a previously saved quantized model (no pipeline re-run)
+        let (model, mode) =
+            prefixquant::quant::model_state::load(c.engine.clone(), std::path::Path::new(dir))?;
+        let windows = eval_windows(c, &model, args.usize_or("windows", 24)?)?;
+        let ppl = eval::perplexity(&model, mode, &windows)?;
+        println!("loaded {dir}: PPL = {ppl:.4}");
+        return Ok(());
+    }
+    let (model, scheme) = quantize_model(c, args)?;
+    let windows = eval_windows(c, &model, args.usize_or("windows", 24)?)?;
+    let ppl = eval::perplexity(&model, scheme.mode, &windows)?;
+    println!("{}: PPL = {ppl:.4}", scheme.name);
+    if args.flag("tasks") {
+        let scores = eval::run_all_tasks(
+            &model,
+            scheme.mode,
+            &c.lang,
+            &c.tok,
+            args.usize_or("items", 32)?,
+        )?;
+        let mut t = Table::new("zero-shot tasks", &["task", "acc %", "items"]);
+        for s in &scores {
+            t.rowv(vec![s.name.clone(), format!("{:.2}", s.accuracy), s.items.to_string()]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_gen(c: &Ctx, args: &Args) -> Result<()> {
+    let prompt_text = args.get_or("prompt", "the quick").to_string();
+    let n = args.usize_or("n", 32)?;
+    let mname = args.get_or("model", "pq-tiny").to_string();
+    let sname = args.get_or("scheme", "prefixquant-wo-ft").to_string();
+    let ft = args.usize_or("ft-epochs", 10)?;
+    let scheme = scheme_by_name(&sname, parse_bits(args)?, ft)?;
+    let dir = prefixquant::artifacts_dir();
+    let tok = c.tok.clone();
+    let lang_spec = c.engine.manifest.corpus.clone();
+    let tok2 = tok.clone();
+    let mode = scheme.mode;
+    let server = Server::start(
+        move || {
+            let engine = Rc::new(Engine::new(&dir)?);
+            let lang = Language::new(lang_spec);
+            let mut model = Model::load(engine.clone(), &mname)?;
+            let (b, s) = model.fwd_geom()?;
+            let windows =
+                data::calibration_windows(&lang, |t| tok2.encode(t, false), s, b, tok2.spec.bos);
+            let calib = IntTensor::new(vec![b, s], windows.into_iter().flatten().collect())?;
+            pipeline::quantize(&mut model, &scheme, &calib, &tok2)?;
+            Ok(model)
+        },
+        ServerConfig {
+            mode,
+            max_batch: 8,
+            batch_window: Duration::from_millis(5),
+            bos: tok.spec.bos,
+            pad: tok.spec.pad,
+        },
+    )?;
+    let req = GenRequest { id: 1, prompt: tok.encode(&prompt_text, false), max_new: n };
+    let resp = server.generate(req)?;
+    println!("prompt: {prompt_text:?}");
+    println!("output: {:?}", tok.decode(&resp.tokens));
+    println!("ttft={:.1}ms total={:.1}ms", resp.ttft_s * 1e3, resp.total_s * 1e3);
+    server.shutdown();
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    let c = ctx()?;
+    match cmd {
+        "info" => cmd_info(&c),
+        "outliers" => cmd_outliers(&c, &args),
+        "quantize" => cmd_quantize(&c, &args),
+        "eval" => cmd_eval(&c, &args),
+        "gen" => cmd_gen(&c, &args),
+        "serve" => {
+            println!("see `cargo run --release --example serve_batch`");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (info|outliers|quantize|eval|gen|serve)"),
+    }
+}

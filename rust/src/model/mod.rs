@@ -1,0 +1,299 @@
+//! Host-side model handle: checkpoint + quantization state + prefixed KV.
+//!
+//! A [`Model`] owns the (possibly rotated / weight-quantized) weight store,
+//! its resident device buffers, the activation/KV quantization parameters,
+//! and the prefixed-KV state.  Executable inputs are bound **by name**
+//! against the manifest signature, so rust and the exported HLO cannot drift.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ModelConfig;
+use crate::runtime::{Engine, ExecSig, Out, Value, WeightStore};
+use crate::tensor::{IntTensor, Tensor};
+
+/// Activation/KV quantization mode of the executables to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    /// No activation/KV quantization (observation executables).
+    Fp,
+    /// Per-tensor static activation + per-head static KV (PrefixQuant).
+    Static,
+    /// Per-token dynamic activation + per-token-per-head KV (QuaRot-style).
+    Dynamic,
+}
+
+impl QuantMode {
+    pub fn fwd_exec(&self) -> &'static str {
+        match self {
+            QuantMode::Fp => "fwd_obs",
+            QuantMode::Static => "fwd_static",
+            QuantMode::Dynamic => "fwd_dynamic",
+        }
+    }
+
+    pub fn block_exec(&self) -> &'static str {
+        match self {
+            QuantMode::Fp => "block_fp",
+            QuantMode::Static => "block_static",
+            QuantMode::Dynamic => "block_dynamic",
+        }
+    }
+}
+
+/// qmax for an N-bit symmetric quantizer (2^{N-1} - 1); 16 bit ≈ lossless.
+pub fn qmax_for_bits(bits: usize) -> f32 {
+    ((1i64 << (bits - 1)) - 1) as f32
+}
+
+/// Runtime quantization parameters fed to the executables.
+#[derive(Debug, Clone)]
+pub struct QuantState {
+    pub act_scales: Tensor, // [L, 4]
+    pub kv_scales: Tensor,  // [L, 2, H]
+    pub qmax_act: Tensor,   // scalar
+    pub qmax_kv: Tensor,    // scalar
+    pub r3: Tensor,         // [dh, dh]
+    pub r4: Tensor,         // [F, F]
+    pub rotated: bool,
+}
+
+impl QuantState {
+    pub fn identity(cfg: &ModelConfig) -> Self {
+        Self {
+            act_scales: Tensor::full(&[cfg.n_layers, 4], 1.0),
+            kv_scales: Tensor::full(&[cfg.n_layers, 2, cfg.n_heads], 1.0),
+            qmax_act: Tensor::scalar(qmax_for_bits(16)),
+            qmax_kv: Tensor::scalar(qmax_for_bits(16)),
+            r3: eye(cfg.d_head),
+            r4: eye(cfg.d_ff),
+            rotated: false,
+        }
+    }
+}
+
+/// Prefixed-tokens state (the paper's contribution, held in the KV cache).
+#[derive(Debug, Clone)]
+pub struct PrefixState {
+    pub tokens: Vec<i32>,
+    pub n_prefix: i32,
+    /// sinks occupied by the prefix (offsets the in-graph cumulative count)
+    pub n_ctx_sinks: i32,
+    pub k: Tensor, // [L, H, P, dh]
+    pub v: Tensor, // [L, H, P, dh]
+}
+
+impl PrefixState {
+    pub fn empty(cfg: &ModelConfig) -> Self {
+        let shape = [cfg.n_layers, cfg.n_heads, cfg.max_prefix, cfg.d_head];
+        Self {
+            tokens: Vec::new(),
+            n_prefix: 0,
+            n_ctx_sinks: 0,
+            k: Tensor::zeros(&shape),
+            v: Tensor::zeros(&shape),
+        }
+    }
+}
+
+pub fn eye(n: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        t.data[i * n + i] = 1.0;
+    }
+    t
+}
+
+pub struct Model {
+    pub engine: Rc<Engine>,
+    pub name: String,
+    pub cfg: ModelConfig,
+    pub weights: WeightStore,
+    resident: Vec<xla::PjRtBuffer>,
+    resident_names: Vec<String>,
+    pub quant: QuantState,
+    pub prefix: PrefixState,
+    /// Frozen quant/prefix state as resident device buffers (hot-path
+    /// optimization: see EXPERIMENTS.md §Perf L3-1).  Invalidated by any
+    /// mutation of `quant`/`prefix`; rebuilt by [`Model::freeze`].
+    frozen: Option<FrozenState>,
+}
+
+/// Device-resident copies of the per-call quantization inputs.  After the
+/// pipeline finishes, these never change between requests — uploading them
+/// once removes ~7 host->device transfers from every prefill/decode call.
+struct FrozenState {
+    act_scales: xla::PjRtBuffer,
+    kv_scales: xla::PjRtBuffer,
+    qmax_act: xla::PjRtBuffer,
+    qmax_kv: xla::PjRtBuffer,
+    r3: xla::PjRtBuffer,
+    r4: xla::PjRtBuffer,
+    prefix_k: xla::PjRtBuffer,
+    prefix_v: xla::PjRtBuffer,
+}
+
+impl Model {
+    /// Load a model checkpoint from the artifacts and upload its weights.
+    pub fn load(engine: Rc<Engine>, name: &str) -> Result<Model> {
+        let mm = engine.manifest.model(name)?.clone();
+        let path = engine.manifest.dir.join(&mm.weights_file);
+        let weights = WeightStore::load(&path)?;
+        let cfg = mm.config.clone();
+        let quant = QuantState::identity(&cfg);
+        let prefix = PrefixState::empty(&cfg);
+        let mut model = Model {
+            engine,
+            name: name.to_string(),
+            cfg,
+            weights,
+            resident: Vec::new(),
+            resident_names: Vec::new(),
+            quant,
+            prefix,
+            frozen: None,
+        };
+        model.refresh_weights()?;
+        Ok(model)
+    }
+
+    /// Re-upload the weight store (after rotation folding / weight quant).
+    pub fn refresh_weights(&mut self) -> Result<()> {
+        let mm = self.engine.manifest.model(&self.name)?;
+        let order = mm.weight_names.clone();
+        let tensors = self.weights.ordered(&order)?;
+        self.resident =
+            tensors.iter().map(|t| self.engine.upload(t)).collect::<Result<Vec<_>>>()?;
+        self.resident_names = order;
+        Ok(())
+    }
+
+    pub fn exec(&self, name: &str) -> Result<ExecSig> {
+        Ok(self
+            .engine
+            .manifest
+            .model(&self.name)?
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("model {} has no executable {name:?}", self.name))?
+            .clone())
+    }
+
+    fn resident_buffer(&self, name: &str) -> Option<&xla::PjRtBuffer> {
+        self.resident_names.iter().position(|n| n == name).map(|i| &self.resident[i])
+    }
+
+    /// Upload the quant/prefix state once; subsequent `bind` calls use the
+    /// resident buffers instead of re-transferring per call.  Call after the
+    /// quantization pipeline finishes (any later mutation must call
+    /// [`Model::unfreeze`] first).
+    pub fn freeze(&mut self) -> Result<()> {
+        self.frozen = Some(FrozenState {
+            act_scales: self.engine.upload(&self.quant.act_scales)?,
+            kv_scales: self.engine.upload(&self.quant.kv_scales)?,
+            qmax_act: self.engine.upload(&self.quant.qmax_act)?,
+            qmax_kv: self.engine.upload(&self.quant.qmax_kv)?,
+            r3: self.engine.upload(&self.quant.r3)?,
+            r4: self.engine.upload(&self.quant.r4)?,
+            prefix_k: self.engine.upload(&self.prefix.k)?,
+            prefix_v: self.engine.upload(&self.prefix.v)?,
+        });
+        Ok(())
+    }
+
+    pub fn unfreeze(&mut self) {
+        self.frozen = None;
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        self.frozen.is_some()
+    }
+
+    /// Bind a full-model executable's inputs by name.
+    /// `extra` entries take precedence over the model state.
+    pub fn bind<'a>(
+        &'a self,
+        sig: &ExecSig,
+        extra: &[(&str, Value<'a>)],
+    ) -> Result<Vec<Value<'a>>> {
+        let mut out = Vec::with_capacity(sig.inputs.len());
+        'next: for is in &sig.inputs {
+            for (n, v) in extra {
+                if *n == is.name {
+                    out.push(clone_value(v));
+                    continue 'next;
+                }
+            }
+            let v = match (is.name.as_str(), &self.frozen) {
+                ("prefix_k", Some(f)) => Value::Buf(&f.prefix_k),
+                ("prefix_v", Some(f)) => Value::Buf(&f.prefix_v),
+                ("act_scales", Some(f)) => Value::Buf(&f.act_scales),
+                ("kv_scales", Some(f)) => Value::Buf(&f.kv_scales),
+                ("qmax_act", Some(f)) => Value::Buf(&f.qmax_act),
+                ("qmax_kv", Some(f)) => Value::Buf(&f.qmax_kv),
+                ("r3", Some(f)) => Value::Buf(&f.r3),
+                ("r4", Some(f)) => Value::Buf(&f.r4),
+                ("prefix_k", None) => Value::F32(&self.prefix.k),
+                ("prefix_v", None) => Value::F32(&self.prefix.v),
+                ("act_scales", None) => Value::F32(&self.quant.act_scales),
+                ("kv_scales", None) => Value::F32(&self.quant.kv_scales),
+                ("qmax_act", None) => Value::F32(&self.quant.qmax_act),
+                ("qmax_kv", None) => Value::F32(&self.quant.qmax_kv),
+                ("r3", None) => Value::F32(&self.quant.r3),
+                ("r4", None) => Value::F32(&self.quant.r4),
+                (name, _) => match self.resident_buffer(name) {
+                    Some(b) => Value::Buf(b),
+                    None => bail!("no binding for input {name:?} of {}", sig.file),
+                },
+            };
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Full forward over a [B,S] token batch using the current mode/state.
+    pub fn forward(&self, mode: QuantMode, tokens: &IntTensor) -> Result<Vec<Out>> {
+        let sig = self.exec(mode.fwd_exec())?;
+        let n_prefix = IntTensor::scalar(self.prefix.n_prefix);
+        let n_ctx = IntTensor::scalar(self.prefix.n_ctx_sinks);
+        let inputs = self.bind(
+            &sig,
+            &[
+                ("tokens", Value::I32(tokens)),
+                ("n_prefix", Value::I32(&n_prefix)),
+                ("n_ctx_sinks", Value::I32(&n_ctx)),
+            ],
+        )?;
+        self.engine.run(&sig, &inputs)
+    }
+
+    /// Logits only.
+    pub fn logits(&self, mode: QuantMode, tokens: &IntTensor) -> Result<Tensor> {
+        let sig = self.exec(mode.fwd_exec())?;
+        let idx = sig.output_index("logits")?;
+        let mut outs = self.forward(mode, tokens)?;
+        outs.swap_remove(idx).f32()
+    }
+
+    /// Geometry of the eval/calibration forward executable.
+    pub fn fwd_geom(&self) -> Result<(usize, usize)> {
+        let sig = self.exec("fwd_obs")?;
+        Ok((sig.batch, sig.seq))
+    }
+
+    /// Per-layer weight tensor (e.g. layer_weight(2, "wd")).
+    pub fn layer_weight(&self, layer: usize, t: &str) -> Result<&Tensor> {
+        self.weights
+            .get(&format!("layers.{layer}.{t}"))
+            .ok_or_else(|| anyhow!("missing layers.{layer}.{t}"))
+    }
+}
+
+fn clone_value<'a>(v: &Value<'a>) -> Value<'a> {
+    match v {
+        Value::F32(t) => Value::F32(t),
+        Value::I32(t) => Value::I32(t),
+        Value::Buf(b) => Value::Buf(b),
+    }
+}

@@ -1,0 +1,113 @@
+//! Per-layer block executable driver (grid search + fine-tuning substrate).
+//!
+//! The block executables (`block_static` / `block_dynamic` / `block_fp` /
+//! `block_grads_*`) operate on one transformer block with explicit inputs for
+//! everything the block needs; this module slices the per-layer views out of
+//! the model state and binds them by name.
+
+use anyhow::Result;
+
+use crate::model::{Model, QuantMode};
+use crate::runtime::{ExecSig, Out, Value};
+use crate::tensor::{IntTensor, Tensor};
+
+pub const LAYER_TENSORS: [&str; 9] =
+    ["wq", "wk", "wv", "wo", "wg", "wu", "wd", "ln1", "ln2"];
+
+/// Per-layer views needed by a block executable call.
+pub struct BlockCtx {
+    pub layer: usize,
+    pub act_scales: Tensor,  // [4]
+    pub kv_scales: Tensor,   // [2,H]
+    pub prefix_k: Tensor,    // [H,P,dh]
+    pub prefix_v: Tensor,
+    pub inject_v: Tensor,    // [F]
+    pub n_prefix: IntTensor, // scalar
+}
+
+impl BlockCtx {
+    pub fn from_model(model: &Model, layer: usize) -> Result<BlockCtx> {
+        let iv = model
+            .weights
+            .get("inject_v")
+            .ok_or_else(|| anyhow::anyhow!("missing inject_v"))?;
+        Ok(BlockCtx {
+            layer,
+            act_scales: model.quant.act_scales.index0(layer),
+            kv_scales: model.quant.kv_scales.index0(layer),
+            prefix_k: model.prefix.k.index0(layer),
+            prefix_v: model.prefix.v.index0(layer),
+            inject_v: iv.index0(layer),
+            n_prefix: IntTensor::scalar(model.prefix.n_prefix),
+        })
+    }
+
+    /// Override the per-layer activation scales (grid-search candidates).
+    pub fn with_act_scales(mut self, s: Tensor) -> Self {
+        self.act_scales = s;
+        self
+    }
+
+    pub fn with_kv_scales(mut self, s: Tensor) -> Self {
+        self.kv_scales = s;
+        self
+    }
+}
+
+/// Run one block executable. `x` is the block input [B,S,D], `active` the
+/// sink mask [B,S]; `weights` supplies the 9 layer tensors (usually the
+/// model's, but fine-tuning passes its own working copies); `target` is
+/// required by the grads executables.
+#[allow(clippy::too_many_arguments)]
+pub fn run_block(
+    model: &Model,
+    sig: &ExecSig,
+    ctx: &BlockCtx,
+    x: &Tensor,
+    active: &Tensor,
+    weights: &[&Tensor; 9],
+    target: Option<&Tensor>,
+) -> Result<Vec<Out>> {
+    let mut extra: Vec<(&str, Value)> = vec![
+        ("x", Value::F32(x)),
+        ("active", Value::F32(active)),
+        ("n_prefix", Value::I32(&ctx.n_prefix)),
+        ("prefix_k", Value::F32(&ctx.prefix_k)),
+        ("prefix_v", Value::F32(&ctx.prefix_v)),
+        ("act_scales", Value::F32(&ctx.act_scales)),
+        ("kv_scales", Value::F32(&ctx.kv_scales)),
+        ("inject_v", Value::F32(&ctx.inject_v)),
+    ];
+    for (i, t) in LAYER_TENSORS.iter().enumerate() {
+        extra.push((t, Value::F32(weights[i])));
+    }
+    if let Some(t) = target {
+        extra.push(("target", Value::F32(t)));
+    }
+    let inputs = model.bind(sig, &extra)?;
+    model.engine.run(sig, &inputs)
+}
+
+/// The model's own weights for one layer, in LAYER_TENSORS order.
+pub fn layer_weights<'a>(model: &'a Model, layer: usize) -> Result<[&'a Tensor; 9]> {
+    let mut out: Vec<&Tensor> = Vec::with_capacity(9);
+    for t in LAYER_TENSORS {
+        out.push(model.layer_weight(layer, t)?);
+    }
+    Ok(out.try_into().map_err(|_| anyhow::anyhow!("layer weight arity")).unwrap())
+}
+
+/// Block forward returning only `y` [B,S,D].
+pub fn block_forward(
+    model: &Model,
+    mode: QuantMode,
+    ctx: &BlockCtx,
+    x: &Tensor,
+    active: &Tensor,
+) -> Result<Tensor> {
+    let sig = model.exec(mode.block_exec())?;
+    let w = layer_weights(model, ctx.layer)?;
+    let idx = sig.output_index("y")?;
+    let mut outs = run_block(model, &sig, ctx, x, active, &w, None)?;
+    outs.swap_remove(idx).f32()
+}

@@ -1,0 +1,156 @@
+//! Grid-search initialization of static quantization scales (§6.1).
+//!
+//! Paper protocol: initialize all quantization parameters by grid search on a
+//! small calibration set; minimize *block outputs* for per-tensor activation
+//! scales (coordinate descent over the 4 sites per block) and *layer outputs*
+//! for fine-grained per-head KV scales (host-side population MSE — no
+//! executable round-trip needed, the fp K/V populations are in the
+//! observation).
+
+use anyhow::Result;
+
+use crate::model::{Model, QuantMode};
+use crate::tensor::Tensor;
+
+use super::blockrun::{self, BlockCtx};
+use super::outlier::Observation;
+use super::quantizer;
+
+/// Grid-search configuration.
+#[derive(Debug, Clone)]
+pub struct GridCfg {
+    /// γ grid for activation scales (γ·max|x| / qmax), block-output MSE.
+    pub act_points: usize,
+    pub act_lo: f32,
+    pub act_hi: f32,
+    /// γ grid for per-head KV scales (population MSE).
+    pub kv_points: usize,
+    /// coordinate-descent sweeps over the 4 sites
+    pub sweeps: usize,
+}
+
+impl Default for GridCfg {
+    fn default() -> Self {
+        Self { act_points: 12, act_lo: 0.35, act_hi: 1.0, kv_points: 24, sweeps: 1 }
+    }
+}
+
+/// Max-based initial activation scales from the observed site stats:
+/// scale[l][site] = top1[l][site] / qmax  (RTN-style init).
+pub fn max_init_act_scales(model: &Model, obs: &Observation, qmax_act: f32) -> Tensor {
+    let cfg = &model.cfg;
+    let (l, n_sites) = (cfg.n_layers, cfg.n_sites());
+    let (b, s) = (obs.active.shape[0], obs.active.shape[1]);
+    let mut scales = Tensor::zeros(&[l, 4]);
+    for li in 0..l {
+        for site in 0..4 {
+            let mut top = 0.0f32;
+            for bi in 0..b {
+                for si in 0..s {
+                    top = top.max(obs.stats.data[((li * n_sites + site) * b + bi) * s + si]);
+                }
+            }
+            scales.data[li * 4 + site] = (top / qmax_act).max(1e-8);
+        }
+    }
+    scales
+}
+
+/// Per-head static KV scales by population grid search over the observed fp
+/// K/V values ("layer output" objective — fine-grained per the paper).
+pub fn kv_scales_grid(model: &Model, obs: &Observation, kv_bits: usize, points: usize) -> Tensor {
+    let cfg = &model.cfg;
+    let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+    let b = obs.k_cache.shape[1];
+    let s = obs.k_cache.shape[3];
+    let mut scales = Tensor::zeros(&[l, 2, h]);
+    for li in 0..l {
+        for (ci, cache) in [&obs.k_cache, &obs.v_cache].iter().enumerate() {
+            for hi in 0..h {
+                // gather this head's population across batch and positions
+                let mut vals = Vec::with_capacity(b * s * dh);
+                for bi in 0..b {
+                    for si in 0..s {
+                        let base = (((li * b + bi) * h + hi) * s + si) * dh;
+                        vals.extend_from_slice(&cache.data[base..base + dh]);
+                    }
+                }
+                scales.data[(li * 2 + ci) * h + hi] =
+                    quantizer::search_scale(&vals, kv_bits, points);
+            }
+        }
+    }
+    scales
+}
+
+/// Coordinate-descent grid search of the 4 per-tensor activation scales of
+/// every block, minimizing block-output MSE against the fp captures.
+/// Uses the *quantized-path running input* (x rolls through block_static), as
+/// the paper propagates quantized activations block by block.
+/// Returns the calibrated scales and the per-layer final MSE.
+pub fn act_scales_grid(
+    model: &mut Model,
+    obs: &Observation,
+    grid: &GridCfg,
+) -> Result<Vec<f32>> {
+    let cfg = model.cfg.clone();
+    let l = cfg.n_layers;
+    let mut layer_mse = Vec::with_capacity(l);
+    let mut x = obs.captures.index0(0); // embedding output (identical in quant path)
+    for li in 0..l {
+        let target = obs.captures.index0(li + 1);
+        let mut best_scales = model.quant.act_scales.index0(li);
+        let mut best_mse = eval_block_mse(model, li, &best_scales, &x, &obs.active, &target)?;
+        for _sweep in 0..grid.sweeps {
+            for site in 0..4 {
+                let base = best_scales.data[site];
+                for p in 0..grid.act_points {
+                    let gamma = grid.act_lo
+                        + (grid.act_hi - grid.act_lo) * p as f32
+                            / (grid.act_points - 1).max(1) as f32;
+                    let mut cand = best_scales.clone();
+                    cand.data[site] = base * gamma;
+                    let mse = eval_block_mse(model, li, &cand, &x, &obs.active, &target)?;
+                    if mse < best_mse {
+                        best_mse = mse;
+                        best_scales = cand;
+                    }
+                }
+            }
+        }
+        // write back the winning scales for this layer
+        for site in 0..4 {
+            model.quant.act_scales.data[li * 4 + site] = best_scales.data[site];
+        }
+        layer_mse.push(best_mse);
+        // roll the quantized path forward with the calibrated scales
+        let ctx = BlockCtx::from_model(model, li)?;
+        x = blockrun::block_forward(model, QuantMode::Static, &ctx, &x, &obs.active)?;
+    }
+    Ok(layer_mse)
+}
+
+fn eval_block_mse(
+    model: &Model,
+    layer: usize,
+    act_scales: &Tensor,
+    x: &Tensor,
+    active: &Tensor,
+    target: &Tensor,
+) -> Result<f32> {
+    let ctx = BlockCtx::from_model(model, layer)?.with_act_scales(act_scales.clone());
+    let y = blockrun::block_forward(model, QuantMode::Static, &ctx, x, active)?;
+    Ok(y.mse(target))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_sane() {
+        let g = GridCfg::default();
+        assert!(g.act_lo < g.act_hi);
+        assert!(g.act_points >= 2 && g.kv_points >= 2);
+    }
+}

@@ -1,0 +1,163 @@
+//! Block-wise fine-tuning (§5.2) — EfficientQAT-style.
+//!
+//! Sequentially per transformer block: minimize the MSE between the quantized
+//! block's output and the fp block's output (captured during observation),
+//! training BOTH the quantization step sizes (LSQ gradients, exported in
+//! `block_grads_*`) and the full-precision weights, with separate learning
+//! rates — the paper's recipe.  The running input propagates through the
+//! *quantized* blocks, so later blocks learn to compensate earlier error.
+
+use anyhow::Result;
+
+use crate::model::{Model, QuantMode};
+use crate::tensor::Tensor;
+
+use super::blockrun::{self, BlockCtx, LAYER_TENSORS};
+use super::outlier::Observation;
+
+#[derive(Debug, Clone)]
+pub struct FtCfg {
+    pub epochs: usize,
+    pub lr_scales: f32,
+    pub lr_weights: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// train weights too (EfficientQAT Block-AP); false = scales only
+    pub train_weights: bool,
+}
+
+impl Default for FtCfg {
+    fn default() -> Self {
+        Self {
+            epochs: 10,
+            lr_scales: 5e-4,
+            lr_weights: 5e-5,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            train_weights: true,
+        }
+    }
+}
+
+struct Adam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+}
+
+impl Adam {
+    fn new(n: usize) -> Self {
+        Self { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32, cfg: &FtCfg) {
+        self.t += 1;
+        let b1c = 1.0 - cfg.beta1.powi(self.t as i32);
+        let b2c = 1.0 - cfg.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = cfg.beta1 * self.m[i] + (1.0 - cfg.beta1) * g;
+            self.v[i] = cfg.beta2 * self.v[i] + (1.0 - cfg.beta2) * g * g;
+            let mh = self.m[i] / b1c;
+            let vh = self.v[i] / b2c;
+            params[i] -= lr * mh / (vh.sqrt() + cfg.eps);
+        }
+    }
+}
+
+/// Result of fine-tuning one model: per-layer loss trajectory.
+#[derive(Debug, Clone, Default)]
+pub struct FtReport {
+    /// (layer, first-epoch loss, last-epoch loss)
+    pub layers: Vec<(usize, f32, f32)>,
+}
+
+/// Fine-tune the model in place (static or dynamic activation quant mode).
+/// The observation provides the fp targets; the mode picks the grads
+/// executable (`block_grads_static` / `block_grads_dynamic`).
+pub fn finetune(
+    model: &mut Model,
+    obs: &Observation,
+    mode: QuantMode,
+    cfg: &FtCfg,
+) -> Result<FtReport> {
+    let exec_name = match mode {
+        QuantMode::Static => "block_grads_static",
+        QuantMode::Dynamic => "block_grads_dynamic",
+        QuantMode::Fp => anyhow::bail!("cannot fine-tune the fp path"),
+    };
+    model.unfreeze(); // scales/weights are about to change
+    let sig = model.exec(exec_name)?;
+    let n_layers = model.cfg.n_layers;
+    let mut report = FtReport::default();
+    let mut x = obs.captures.index0(0);
+
+    for li in 0..n_layers {
+        let target = obs.captures.index0(li + 1);
+        // working copies of the trainables
+        let mut act = model.quant.act_scales.index0(li);
+        let mut kv = model.quant.kv_scales.index0(li);
+        let mut weights: Vec<Tensor> = LAYER_TENSORS
+            .iter()
+            .map(|t| model.layer_weight(li, t).map(|w| w.clone()))
+            .collect::<Result<_>>()?;
+        let mut opt_act = Adam::new(act.data.len());
+        let mut opt_kv = Adam::new(kv.data.len());
+        let mut opt_w: Vec<Adam> = weights.iter().map(|w| Adam::new(w.data.len())).collect();
+
+        let (mut first, mut last) = (f32::NAN, f32::NAN);
+        for epoch in 0..cfg.epochs {
+            let ctx = BlockCtx::from_model(model, li)?
+                .with_act_scales(act.clone())
+                .with_kv_scales(kv.clone());
+            let wrefs: [&Tensor; 9] = {
+                let v: Vec<&Tensor> = weights.iter().collect();
+                v.try_into().unwrap()
+            };
+            let outs =
+                blockrun::run_block(model, &sig, &ctx, &x, &obs.active, &wrefs, Some(&target))?;
+            let loss = outs[sig.output_index("loss")?].clone().f32()?.data[0];
+            if epoch == 0 {
+                first = loss;
+            }
+            last = loss;
+            let g_act = outs[sig.output_index("g_act_scales")?].clone().f32()?;
+            let g_kv = outs[sig.output_index("g_kv_scales")?].clone().f32()?;
+            opt_act.step(&mut act.data, &g_act.data, cfg.lr_scales, cfg);
+            opt_kv.step(&mut kv.data, &g_kv.data, cfg.lr_scales, cfg);
+            // step sizes must stay positive
+            for s in act.data.iter_mut().chain(kv.data.iter_mut()) {
+                *s = s.max(1e-8);
+            }
+            if cfg.train_weights {
+                for (wi, t) in LAYER_TENSORS.iter().enumerate() {
+                    let g = outs[sig.output_index(&format!("g_{t}"))?].clone().f32()?;
+                    opt_w[wi].step(&mut weights[wi].data, &g.data, cfg.lr_weights, cfg);
+                }
+            }
+        }
+        // commit the trained parameters
+        for site in 0..act.data.len() {
+            model.quant.act_scales.data[li * act.data.len() + site] = act.data[site];
+        }
+        let kvn = kv.data.len();
+        for i in 0..kvn {
+            model.quant.kv_scales.data[li * kvn + i] = kv.data[i];
+        }
+        if cfg.train_weights {
+            for (wi, t) in LAYER_TENSORS.iter().enumerate() {
+                model.weights.set(&format!("layers.{li}.{t}"), weights[wi].clone());
+            }
+        }
+        report.layers.push((li, first, last));
+        // roll the quantized input forward with the trained block
+        let ctx = BlockCtx::from_model(model, li)?;
+        let fwd_mode = if mode == QuantMode::Dynamic { QuantMode::Dynamic } else { QuantMode::Static };
+        x = blockrun::block_forward(model, fwd_mode, &ctx, &x, &obs.active)?;
+    }
+    // weights changed → refresh resident buffers for full-model executables
+    model.refresh_weights()?;
+    Ok(report)
+}

@@ -1,0 +1,171 @@
+//! The PrefixQuant quantization pipeline (the paper's contribution).
+//!
+//! Submodules:
+//!   * [`quantizer`] — host-side weight quantization (per-channel / per-group,
+//!     RTN and grid-search init).
+//!   * [`rotation`]  — Hadamard generation + absorbable R1/R2 folding and the
+//!     R4 weight-side fold (computational invariance, QuaRot/SpinQuant style).
+//!   * [`outlier`]   — token-wise outlier statistics (Figs 2-4), η-detection,
+//!     outlier-token frequency ranking.
+//!   * [`prefix`]    — prefixed-token selection and prefix-KV materialization
+//!     (§5.1 of the paper).
+//!   * [`blockrun`]  — by-name binding of the block-level executables.
+//!   * [`calibrate`] — grid-search initialization of static activation / KV
+//!     scales against block-output MSE (§6.1 "Grid Search Setting").
+//!   * [`finetune`]  — block-wise fine-tuning with Adam on quantization
+//!     parameters + weights (§5.2, EfficientQAT-style).
+//!   * [`smooth`]    — SmoothQuant-analog channel scaling baseline.
+//!   * [`pipeline`]  — end-to-end orchestration + timing breakdown (Table 10).
+
+pub mod blockrun;
+pub mod model_state;
+pub mod calibrate;
+pub mod finetune;
+pub mod outlier;
+pub mod pipeline;
+pub mod prefix;
+pub mod quantizer;
+pub mod rotation;
+pub mod smooth;
+
+use crate::model::QuantMode;
+
+/// A complete quantization scheme — every baseline and ablation in the paper
+/// is a point in this configuration space (Tables 3-6, 13-15).
+#[derive(Debug, Clone)]
+pub struct SchemeConfig {
+    pub name: String,
+    /// Weight bits (per-channel symmetric; 16 = keep fp).
+    pub w_bits: usize,
+    /// Activation bits (inputs of linear layers; 16 = keep fp).
+    pub a_bits: usize,
+    /// KV-cache bits (16 = keep fp).
+    pub kv_bits: usize,
+    /// Static (per-tensor / per-head) vs dynamic (per-token) act+KV quant.
+    pub mode: QuantMode,
+    /// Hadamard rotations R1-R4 (QuaRot / PrefixQuant substrate).
+    pub rotate: bool,
+    /// Prefix outlier tokens in the KV cache (the paper's contribution).
+    pub use_prefix: bool,
+    /// Override the selected prefix content (None = adaptive top-o + BOS).
+    pub prefix_override: Option<PrefixPolicy>,
+    /// Grid-search initialization of scales (vs plain max/RTN init).
+    pub grid_search: bool,
+    /// Block-wise fine-tuning epochs (0 = off).
+    pub ft_epochs: usize,
+    /// SmoothQuant-style channel scaling baseline.
+    pub smooth: bool,
+    /// Per-group weight quantization group size (Atom-analog; None = per-channel).
+    pub w_group: Option<usize>,
+}
+
+/// Prefix-content policies for the Table 14/15/17 ablations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PrefixPolicy {
+    /// First n of the default selection (Table 14 sweep, incl. 0 = none).
+    FirstN(usize),
+    /// Repeat the single highest-frequency outlier token o times (Table 15).
+    OnlyHighestFreq,
+    /// Random non-delimiter tokens (Table 15).
+    Random(u64),
+    /// Fixed 3 tokens regardless of the measured o (QFeP-analog, Table 17).
+    Fixed3,
+}
+
+impl SchemeConfig {
+    pub fn fp16() -> Self {
+        Self {
+            name: "FP16".into(),
+            w_bits: 16,
+            a_bits: 16,
+            kv_bits: 16,
+            mode: QuantMode::Fp,
+            rotate: false,
+            use_prefix: false,
+            prefix_override: None,
+            grid_search: false,
+            ft_epochs: 0,
+            smooth: false,
+            w_group: None,
+        }
+    }
+
+    /// Round-to-nearest, per-token dynamic (the ablation baseline, Table 6).
+    pub fn rtn(w: usize, a: usize, kv: usize) -> Self {
+        Self {
+            name: format!("RTN W{w}A{a}KV{kv}"),
+            w_bits: w,
+            a_bits: a,
+            kv_bits: kv,
+            mode: QuantMode::Dynamic,
+            rotate: false,
+            use_prefix: false,
+            prefix_override: None,
+            grid_search: false,
+            ft_epochs: 0,
+            smooth: false,
+            w_group: None,
+        }
+    }
+
+    /// QuaRot-analog: Hadamard rotation + per-token dynamic quantization.
+    pub fn quarot(w: usize, a: usize, kv: usize) -> Self {
+        Self { name: format!("QuaRot W{w}A{a}KV{kv}"), rotate: true, ..Self::rtn(w, a, kv) }
+    }
+
+    /// SmoothQuant-analog: channel scaling + static per-tensor activations.
+    pub fn smoothquant(w: usize, a: usize, kv: usize) -> Self {
+        Self {
+            name: format!("SmoothQuant W{w}A{a}KV{kv}"),
+            mode: QuantMode::Static,
+            smooth: true,
+            grid_search: true,
+            ..Self::rtn(w, a, kv)
+        }
+    }
+
+    /// Atom-analog: per-group weights, dynamic activations.
+    pub fn atom(w: usize, a: usize, kv: usize) -> Self {
+        Self { name: format!("Atom W{w}A{a}KV{kv}"), w_group: Some(64), ..Self::rtn(w, a, kv) }
+    }
+
+    /// PrefixQuant without fine-tuning (grid search only).
+    pub fn prefixquant_wo_ft(w: usize, a: usize, kv: usize) -> Self {
+        Self {
+            name: format!("PrefixQuant w/o FT W{w}A{a}KV{kv}"),
+            mode: QuantMode::Static,
+            rotate: true,
+            use_prefix: true,
+            grid_search: true,
+            ..Self::rtn(w, a, kv)
+        }
+    }
+
+    /// Full PrefixQuant with block-wise fine-tuning.
+    pub fn prefixquant(w: usize, a: usize, kv: usize, epochs: usize) -> Self {
+        Self { ft_epochs: epochs, ..Self::prefixquant_wo_ft(w, a, kv) }
+            .renamed(&format!("PrefixQuant W{w}A{a}KV{kv}"))
+    }
+
+    pub fn renamed(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_consistent() {
+        let p = SchemeConfig::prefixquant(4, 4, 4, 10);
+        assert!(p.rotate && p.use_prefix && p.grid_search);
+        assert_eq!(p.mode, QuantMode::Static);
+        assert_eq!(p.ft_epochs, 10);
+        let q = SchemeConfig::quarot(4, 4, 4);
+        assert!(q.rotate && !q.use_prefix);
+        assert_eq!(q.mode, QuantMode::Dynamic);
+        assert_eq!(SchemeConfig::fp16().mode, QuantMode::Fp);
+    }
+}

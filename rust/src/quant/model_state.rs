@@ -1,0 +1,95 @@
+//! Persist / restore a quantized model (the deployable artifact).
+//!
+//! `save` writes the post-pipeline state — folded+quantized weights, static
+//! scales, online rotation matrices, prefixed tokens and their KV — into a
+//! directory; `load` restores a ready-to-serve [`Model`] without re-running
+//! the pipeline (the paper's "quantize once, deploy" story).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{Model, PrefixState, QuantMode, QuantState};
+use crate::runtime::{Engine, WeightStore};
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+
+const STATE_FILE: &str = "quant_state.bin";
+const WEIGHTS_FILE: &str = "weights.bin";
+const META_FILE: &str = "quantized.json";
+
+pub fn save(model: &Model, mode: QuantMode, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    model.weights.save(&dir.join(WEIGHTS_FILE))?;
+    let q = &model.quant;
+    let p = &model.prefix;
+    let state = WeightStore::from_pairs(vec![
+        ("act_scales".into(), q.act_scales.clone()),
+        ("kv_scales".into(), q.kv_scales.clone()),
+        ("qmax_act".into(), q.qmax_act.clone()),
+        ("qmax_kv".into(), q.qmax_kv.clone()),
+        ("r3".into(), q.r3.clone()),
+        ("r4".into(), q.r4.clone()),
+        ("prefix_k".into(), p.k.clone()),
+        ("prefix_v".into(), p.v.clone()),
+    ]);
+    state.save(&dir.join(STATE_FILE))?;
+    let meta = json::obj(vec![
+        ("model", json::s(&model.name)),
+        ("mode", json::s(match mode {
+            QuantMode::Fp => "fp",
+            QuantMode::Static => "static",
+            QuantMode::Dynamic => "dynamic",
+        })),
+        ("rotated", Json::Bool(q.rotated)),
+        (
+            "prefix_tokens",
+            Json::Arr(p.tokens.iter().map(|&t| json::num(t as f64)).collect()),
+        ),
+        ("n_prefix", json::num(p.n_prefix as f64)),
+        ("n_ctx_sinks", json::num(p.n_ctx_sinks as f64)),
+    ]);
+    std::fs::write(dir.join(META_FILE), meta.to_string())?;
+    Ok(())
+}
+
+pub fn load(engine: Rc<Engine>, dir: &Path) -> Result<(Model, QuantMode)> {
+    let meta = Json::parse(&std::fs::read_to_string(dir.join(META_FILE))?)?;
+    let name = meta.get("model")?.as_str()?.to_string();
+    let mode = match meta.get("mode")?.as_str()? {
+        "static" => QuantMode::Static,
+        "dynamic" => QuantMode::Dynamic,
+        _ => QuantMode::Fp,
+    };
+    let mut model = Model::load(engine, &name)?;
+    model.weights = WeightStore::load(&dir.join(WEIGHTS_FILE))?;
+    let state = WeightStore::load(&dir.join(STATE_FILE))?;
+    let get = |n: &str| -> Result<Tensor> {
+        state.get(n).cloned().ok_or_else(|| anyhow!("{STATE_FILE} missing {n}"))
+    };
+    model.quant = QuantState {
+        act_scales: get("act_scales")?,
+        kv_scales: get("kv_scales")?,
+        qmax_act: get("qmax_act")?,
+        qmax_kv: get("qmax_kv")?,
+        r3: get("r3")?,
+        r4: get("r4")?,
+        rotated: meta.get("rotated")?.as_bool()?,
+    };
+    model.prefix = PrefixState {
+        tokens: meta
+            .get("prefix_tokens")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_i64()? as i32))
+            .collect::<Result<_>>()?,
+        n_prefix: meta.get("n_prefix")?.as_i64()? as i32,
+        n_ctx_sinks: meta.get("n_ctx_sinks")?.as_i64()? as i32,
+        k: get("prefix_k")?,
+        v: get("prefix_v")?,
+    };
+    model.refresh_weights()?;
+    model.freeze()?;
+    Ok((model, mode))
+}

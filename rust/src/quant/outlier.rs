@@ -1,0 +1,166 @@
+//! Token-wise outlier statistics and detection (§4, §5.1, Figs 2-4).
+//!
+//! Observation runs the `fwd_obs` executable over a calibration batch; the
+//! graph emits per-(layer, site) token-wise max-|x| stats M[L,S_sites,B,S],
+//! block-input captures, and the fp KV tensors.  Host-side we compute the
+//! paper's top-1/median/min-1 ratios, apply the η-threshold (Eq. 3), count
+//! outlier tokens per block, and rank outlier-token contents by frequency.
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{Model, QuantMode};
+use crate::tensor::{median, IntTensor, Tensor};
+
+/// Default detection threshold η (paper §5.1).
+pub const ETA: f32 = 64.0;
+
+/// Per-(layer, site) distribution summary of token-wise maxima.
+#[derive(Debug, Clone)]
+pub struct SiteStat {
+    pub top1: f32,
+    pub median: f32,
+    pub min1: f32,
+}
+
+impl SiteStat {
+    /// top-1 / median — "upper outliers" (large ⇒ massive activations).
+    pub fn upper_ratio(&self) -> f32 {
+        self.top1 / self.median.max(1e-12)
+    }
+
+    /// median / min-1 — "lower outliers" (large ⇒ vanishing sink tokens).
+    pub fn lower_ratio(&self) -> f32 {
+        self.median / self.min1.max(1e-12)
+    }
+}
+
+/// Raw observation outputs kept for calibration / fine-tuning.
+pub struct Observation {
+    pub tokens: IntTensor,
+    /// M[L, n_sites, B, S]
+    pub stats: Tensor,
+    /// sink mask the graph actually applied [B, S]
+    pub active: Tensor,
+    /// block inputs [L+1, B, S, D]
+    pub captures: Tensor,
+    /// fp KV tensors [L, B, H, S, dh]
+    pub k_cache: Tensor,
+    pub v_cache: Tensor,
+}
+
+#[derive(Debug, Clone)]
+pub struct OutlierReport {
+    /// [L][n_sites]
+    pub site_stats: Vec<Vec<SiteStat>>,
+    /// mean outlier-token count per sequence, per block (paper's O vector)
+    pub o_per_block: Vec<f32>,
+    /// o = ceil(max(O)) — the adaptive prefixed-token count
+    pub o: usize,
+    /// outlier token contents by frequency, initial positions excluded
+    pub freq: Vec<(i32, usize)>,
+    /// (batch, pos) of detected outliers at the detection layer
+    pub positions: Vec<(usize, usize)>,
+    /// total detected outlier-token instances (any layer, down_in site)
+    pub total_outliers: usize,
+    pub eta: f32,
+}
+
+/// Site index of down_proj inputs — the paper's detection site.
+pub fn detect_site(model: &Model) -> Result<usize> {
+    model
+        .cfg
+        .site_index("down_in")
+        .ok_or_else(|| anyhow!("model config has no down_in site"))
+}
+
+/// Run `fwd_obs` on a [B,S] calibration batch with the model's current
+/// rotation/prefix state.
+pub fn observe(model: &Model, tokens: &IntTensor) -> Result<Observation> {
+    let sig = model.exec(QuantMode::Fp.fwd_exec())?;
+    let outs = model.forward(QuantMode::Fp, tokens)?;
+    let pick = |name: &str| -> Result<usize> { sig.output_index(name) };
+    let mut outs: Vec<Option<crate::runtime::Out>> = outs.into_iter().map(Some).collect();
+    let mut take_f32 = |name: &str| -> Result<Tensor> {
+        let i = pick(name)?;
+        outs[i].take().ok_or_else(|| anyhow!("output {name} consumed twice"))?.f32()
+    };
+    let stats = take_f32("stats")?;
+    let active = take_f32("active")?;
+    let captures = take_f32("captures")?;
+    let k_cache = take_f32("k_cache")?;
+    let v_cache = take_f32("v_cache")?;
+    Ok(Observation { tokens: tokens.clone(), stats, active, captures, k_cache, v_cache })
+}
+
+/// Compute the report from an observation (pure host math).
+pub fn analyze(model: &Model, obs: &Observation, eta: f32) -> Result<OutlierReport> {
+    let cfg = &model.cfg;
+    let (l, n_sites) = (cfg.n_layers, cfg.n_sites());
+    let (b, s) = (obs.active.shape[0], obs.active.shape[1]);
+    let st = &obs.stats; // [L, n_sites, B, S]
+    let at = |li: usize, site: usize, bi: usize, si: usize| -> f32 {
+        st.data[((li * n_sites + site) * b + bi) * s + si]
+    };
+
+    let mut site_stats = Vec::with_capacity(l);
+    for li in 0..l {
+        let mut row = Vec::with_capacity(n_sites);
+        for site in 0..n_sites {
+            let vals: Vec<f32> =
+                (0..b).flat_map(|bi| (0..s).map(move |si| (bi, si))).map(|(bi, si)| at(li, site, bi, si)).collect();
+            let mut sorted = vals.clone();
+            sorted.sort_by(|a, c| a.partial_cmp(c).unwrap());
+            row.push(SiteStat {
+                top1: *sorted.last().unwrap(),
+                median: median(&vals),
+                min1: sorted[0],
+            });
+        }
+        site_stats.push(row);
+    }
+
+    // η-detection at down_in, per layer
+    let dsite = detect_site(model)?;
+    let mut o_per_block = Vec::with_capacity(l);
+    let mut freq_map = std::collections::BTreeMap::<i32, usize>::new();
+    let mut positions = Vec::new();
+    let mut total = 0usize;
+    for li in 0..l {
+        let med = site_stats[li][dsite].median.max(1e-12);
+        let mut count = 0usize;
+        for bi in 0..b {
+            for si in 0..s {
+                if at(li, dsite, bi, si) / med > eta {
+                    count += 1;
+                    total += 1;
+                    if li == 0 {
+                        positions.push((bi, si));
+                    }
+                    if si != 0 {
+                        // frequency excludes the initial token (paper fig 4a)
+                        let tok = obs.tokens.data[bi * s + si];
+                        *freq_map.entry(tok).or_insert(0) += 1;
+                    }
+                }
+            }
+        }
+        o_per_block.push(count as f32 / b as f32);
+    }
+    let omax = o_per_block.iter().fold(0.0f32, |m, &v| m.max(v));
+    // room for the [BOS] slot within the padded prefix capacity
+    let o = (omax.ceil() as usize).min(cfg.max_prefix.saturating_sub(1));
+    let mut freq: Vec<(i32, usize)> = freq_map.into_iter().collect();
+    freq.sort_by(|a, c| c.1.cmp(&a.1).then(a.0.cmp(&c.0)));
+    Ok(OutlierReport { site_stats, o_per_block, o, freq, positions, total_outliers: total, eta })
+}
+
+/// Observe + analyze in one call.
+pub fn observe_and_analyze(
+    model: &Model,
+    tokens: &IntTensor,
+    eta: f32,
+) -> Result<(Observation, OutlierReport)> {
+    let obs = observe(model, tokens)?;
+    let rep = analyze(model, &obs, eta)?;
+    Ok((obs, rep))
+}

@@ -1,0 +1,178 @@
+//! End-to-end PrefixQuant pipeline orchestration (+ Table 10 timings).
+//!
+//! Order of operations (paper reproduction):
+//!   1. (baseline) SmoothQuant channel scaling, if configured;
+//!   2. rotation folding (R1/R2/R4 weight-side; R3/R4 online matrices);
+//!   3. observation #1 → outlier report → prefix selection → install
+//!      prefixed KV ("Find Prefixed Outliers", seconds);
+//!   4. observation #2 with the prefix in place → fp captures/targets;
+//!   5. host weight quantization (per-channel RTN or grid);
+//!   6. static-scale initialization: max-init, then per-head KV grid and
+//!      block-output coordinate-descent grid search;
+//!   7. optional block-wise fine-tuning.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model::{qmax_for_bits, Model, QuantMode};
+use crate::tensor::{IntTensor, Tensor};
+use crate::tokenizer::Tokenizer;
+
+use super::calibrate::{self, GridCfg};
+use super::finetune::{self, FtCfg, FtReport};
+use super::outlier::{self, OutlierReport, ETA};
+use super::prefix;
+use super::quantizer;
+use super::rotation;
+use super::smooth;
+use super::SchemeConfig;
+
+/// Everything the repro harness wants to know about one pipeline run.
+pub struct PipelineReport {
+    pub scheme: SchemeConfig,
+    pub pre_report: OutlierReport,
+    pub post_report: Option<OutlierReport>,
+    pub prefix_tokens: Vec<i32>,
+    pub prefix_rendered: String,
+    pub ft: Option<FtReport>,
+    /// Table 10 breakdown (seconds)
+    pub t_find_prefix: f64,
+    pub t_grid: f64,
+    pub t_ft: f64,
+    pub t_total: f64,
+}
+
+/// Weight tensors that get quantized (all linear projections).
+pub const QUANT_WEIGHTS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+/// Quantize the projection weights host-side.
+pub fn quantize_weights(model: &mut Model, scheme: &SchemeConfig) -> Result<()> {
+    if scheme.w_bits >= 16 {
+        return Ok(());
+    }
+    let grid = if scheme.grid_search { 40 } else { 1 };
+    for li in 0..model.cfg.n_layers {
+        for t in QUANT_WEIGHTS {
+            let name = format!("layers.{li}.{t}");
+            let w = model.weights.get_mut(&name).unwrap();
+            match scheme.w_group {
+                Some(g) => quantizer::quant_weight_per_group(w, scheme.w_bits, g, grid),
+                None => {
+                    quantizer::quant_weight_per_channel(w, scheme.w_bits, grid);
+                }
+            }
+        }
+    }
+    model.refresh_weights()?;
+    Ok(())
+}
+
+/// Run the full pipeline for `scheme` on a freshly-loaded model.
+/// `calib` is the [B,S] calibration batch (geometry of `fwd_obs`).
+pub fn quantize(
+    model: &mut Model,
+    scheme: &SchemeConfig,
+    calib: &IntTensor,
+    tok: &Tokenizer,
+) -> Result<PipelineReport> {
+    let t0 = Instant::now();
+
+    // qmax scalars for the executables
+    model.quant.qmax_act = Tensor::scalar(qmax_for_bits(scheme.a_bits.max(2)));
+    model.quant.qmax_kv = Tensor::scalar(qmax_for_bits(scheme.kv_bits.max(2)));
+
+    // 1. SmoothQuant baseline scaling (needs pre-rotation captures)
+    if scheme.smooth {
+        let obs0 = outlier::observe(model, calib)?;
+        smooth::apply(model, &obs0, 0.5)?;
+    }
+
+    // 2. rotation folding
+    if scheme.rotate {
+        rotation::absorb_norm_gains(&model.cfg.clone(), &mut model.weights)?;
+        rotation::fold_rotations(&model.cfg.clone(), &mut model.weights)?;
+        let (r3, r4) = rotation::online_matrices(&model.cfg, true);
+        model.quant.r3 = r3;
+        model.quant.r4 = r4;
+        model.quant.rotated = true;
+        model.refresh_weights()?;
+    }
+
+    // 3. find prefixed outliers (observation + selection + install)
+    let t_find = Instant::now();
+    let (mut obs, pre_report) = outlier::observe_and_analyze(model, calib, ETA)?;
+    let mut prefix_tokens = Vec::new();
+    if scheme.use_prefix {
+        prefix_tokens = match &scheme.prefix_override {
+            Some(p) => prefix::select_with_policy(&pre_report, tok, p),
+            None => prefix::select_tokens(&pre_report, tok),
+        };
+        prefix::install(model, &prefix_tokens, tok.spec.pad)?;
+    }
+    let t_find_prefix = t_find.elapsed().as_secs_f64();
+
+    // 4. re-observe with the prefix installed (fp targets for calibration/FT)
+    let mut post_report = None;
+    if scheme.use_prefix && !prefix_tokens.is_empty() {
+        let (obs2, rep2) = outlier::observe_and_analyze(model, calib, ETA)?;
+        obs = obs2;
+        post_report = Some(rep2);
+    }
+
+    // 5. host weight quantization
+    quantize_weights(model, scheme)?;
+
+    // 6. static scale initialization
+    let t_grid_start = Instant::now();
+    if scheme.mode == QuantMode::Static {
+        let qa = model.quant.qmax_act.data[0];
+        model.quant.act_scales = calibrate::max_init_act_scales(model, &obs, qa);
+        if scheme.kv_bits < 16 {
+            model.quant.kv_scales = calibrate::kv_scales_grid(
+                model,
+                &obs,
+                scheme.kv_bits,
+                if scheme.grid_search { GridCfg::default().kv_points } else { 1 },
+            );
+        } else {
+            // near-lossless 16-bit static: max-based per-head init
+            model.quant.kv_scales =
+                calibrate::kv_scales_grid(model, &obs, 16, 1);
+        }
+        if scheme.grid_search && scheme.a_bits < 16 {
+            calibrate::act_scales_grid(model, &obs, &GridCfg::default())?;
+        }
+    }
+    let t_grid = t_grid_start.elapsed().as_secs_f64();
+
+    // 7. block-wise fine-tuning
+    let t_ft_start = Instant::now();
+    let mut ft = None;
+    if scheme.ft_epochs > 0 {
+        let ft_cfg = FtCfg { epochs: scheme.ft_epochs, ..FtCfg::default() };
+        let mode = if scheme.mode == QuantMode::Dynamic {
+            QuantMode::Dynamic
+        } else {
+            QuantMode::Static
+        };
+        ft = Some(finetune::finetune(model, &obs, mode, &ft_cfg)?);
+    }
+    let t_ft = t_ft_start.elapsed().as_secs_f64();
+
+    // hot-path: park the now-final quant/prefix state on device (§Perf L3-1)
+    model.freeze()?;
+
+    Ok(PipelineReport {
+        scheme: scheme.clone(),
+        pre_report,
+        post_report,
+        prefix_rendered: prefix::render(&prefix_tokens, tok),
+        prefix_tokens,
+        ft,
+        t_find_prefix,
+        t_grid,
+        t_ft,
+        t_total: t0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,0 +1,239 @@
+//! Prefixed-token selection and prefix-KV materialization (§5.1).
+//!
+//! Selection: the top-o high-frequency outlier tokens (frequency measured by
+//! the η-detector, initial positions excluded) followed by [BOS] — Table 1's
+//! recipe.  If no non-initial outliers exist (Llama-3/Qwen-2 pattern), the
+//! prefix is just [BOS].
+//!
+//! Materialization: run the tiny `fwd_prefix` executable over the prefix
+//! tokens alone (no pre-existing prefix, n_ctx_sinks = 0) and keep its fp
+//! K/V as the shared prefixed entries; `n_ctx_sinks` is read back from the
+//! graph's own sink mask so rust and the executables can never disagree on
+//! how many sink slots the prefix fills.
+
+use anyhow::Result;
+
+use crate::model::{Model, PrefixState};
+use crate::runtime::Value;
+use crate::tensor::{IntTensor, Tensor};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::SplitMix64;
+
+use super::outlier::OutlierReport;
+use super::PrefixPolicy;
+
+/// Choose the prefix token ids from an outlier report (default policy).
+///
+/// [BOS] occupies position 0 — the initial-token outlier slot — followed by
+/// the top-(o-1) high-frequency outlier tokens, so the prefix fills exactly
+/// the model's o sink slots.  (The paper renders the same set as
+/// ".\n[BOS]"; sequence order puts the initial-position token first.)
+/// If fewer distinct outlier tokens exist than slots, the top one repeats.
+pub fn select_tokens(report: &OutlierReport, tok: &Tokenizer) -> Vec<i32> {
+    let mut toks = vec![tok.spec.bos];
+    if report.o > 1 {
+        let need = report.o - 1;
+        for i in 0..need {
+            match report.freq.get(i).or_else(|| report.freq.first()) {
+                Some(&(id, _)) => toks.push(id),
+                None => break,
+            }
+        }
+    }
+    toks
+}
+
+/// Apply an ablation policy to the default selection.
+pub fn select_with_policy(
+    report: &OutlierReport,
+    tok: &Tokenizer,
+    policy: &PrefixPolicy,
+) -> Vec<i32> {
+    let default = select_tokens(report, tok);
+    match policy {
+        PrefixPolicy::FirstN(n) => default.into_iter().take(*n).collect(),
+        PrefixPolicy::OnlyHighestFreq => {
+            let top = report.freq.first().map(|&(id, _)| id).unwrap_or(tok.spec.bos);
+            vec![top; default.len()]
+        }
+        PrefixPolicy::Random(seed) => {
+            let mut rng = SplitMix64::new(*seed);
+            (0..default.len())
+                .map(|_| {
+                    // random printable non-delimiter byte tokens
+                    loop {
+                        let id = tok.spec.byte_offset + 33 + rng.below(90) as i32;
+                        if !tok.is_delimiter(id) {
+                            return id;
+                        }
+                    }
+                })
+                .collect()
+        }
+        PrefixPolicy::Fixed3 => {
+            // QFeP-analog: always exactly 3 prefixed tokens
+            let mut t = vec![tok.spec.bos];
+            for i in 0..2 {
+                t.push(report.freq.get(i).or_else(|| report.freq.first()).map(|&(id, _)| id).unwrap_or(tok.spec.bos));
+            }
+            t
+        }
+    }
+}
+
+/// Human-readable prefix content (Table 1 rendering).
+pub fn render(tokens: &[i32], tok: &Tokenizer) -> String {
+    tokens.iter().map(|&t| tok.token_repr(t)).collect::<Vec<_>>().join("")
+}
+
+/// Compute the prefix KV with the model's *current* weights/rotations and
+/// install it on the model.  Pass an empty token list to clear the prefix.
+pub fn install(model: &mut Model, tokens: &[i32], pad_id: i32) -> Result<()> {
+    model.unfreeze(); // prefix state is about to change
+    let cfg = model.cfg.clone();
+    let p = cfg.max_prefix;
+    if tokens.is_empty() {
+        model.prefix = PrefixState::empty(&cfg);
+        return Ok(());
+    }
+    if tokens.len() > p {
+        anyhow::bail!("prefix length {} exceeds padded capacity {p}", tokens.len());
+    }
+    let sig = model.exec("fwd_prefix")?;
+    let mut padded = tokens.to_vec();
+    padded.resize(p, pad_id);
+    let toks = IntTensor::new(vec![1, p], padded)?;
+    // the prefix is computed as a fresh sequence: no prefix, no context sinks
+    let zero = IntTensor::scalar(0);
+    let empty = PrefixState::empty(&cfg);
+    let inputs = model.bind(
+        &sig,
+        &[
+            ("tokens", Value::I32(&toks)),
+            ("n_prefix", Value::I32(&zero)),
+            ("n_ctx_sinks", Value::I32(&zero)),
+            ("prefix_k", Value::F32(&empty.k)),
+            ("prefix_v", Value::F32(&empty.v)),
+        ],
+    )?;
+    let outs = model.engine.run(&sig, &inputs)?;
+    let k_idx = sig.output_index("k_cache")?;
+    let v_idx = sig.output_index("v_cache")?;
+    let a_idx = sig.output_index("active")?;
+    let k = outs[k_idx].clone().f32()?; // [L,1,H,P,dh]
+    let v = outs[v_idx].clone().f32()?;
+    let active = outs[a_idx].clone().f32()?; // [1,P]
+
+    let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
+    let n = tokens.len();
+    // squeeze batch dim and zero the padded slots beyond n
+    let reshaped = |t: &Tensor| -> Result<Tensor> {
+        let mut out = Tensor::zeros(&[l, h, p, dh]);
+        for li in 0..l {
+            for hi in 0..h {
+                for pi in 0..n {
+                    for di in 0..dh {
+                        let src = (((li * 1 + 0) * h + hi) * p + pi) * dh + di;
+                        let dst = ((li * h + hi) * p + pi) * dh + di;
+                        out.data[dst] = t.data[src];
+                    }
+                }
+            }
+        }
+        Ok(out)
+    };
+    let n_ctx_sinks = active.data[..n].iter().filter(|&&a| a > 0.5).count() as i32;
+    model.prefix = PrefixState {
+        tokens: tokens.to_vec(),
+        n_prefix: n as i32,
+        n_ctx_sinks,
+        k: reshaped(&k)?,
+        v: reshaped(&v)?,
+    };
+    Ok(())
+}
+
+/// Quick sanity: with the prefix installed, the first `n_prefix` RoPE
+/// positions are taken, so downstream sequences start at position n_prefix.
+pub fn describe(model: &Model, tok: &Tokenizer) -> Result<String> {
+    let p = &model.prefix;
+    if p.n_prefix == 0 {
+        return Ok("(no prefix)".into());
+    }
+    Ok(format!(
+        "prefix={} (n={}, sinks={})",
+        render(&p.tokens, tok),
+        p.n_prefix,
+        p.n_ctx_sinks
+    ))
+}
+
+#[allow(dead_code)]
+fn _assert_model_send(_m: &Model) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TokenizerSpec;
+    use crate::quant::outlier::{OutlierReport, SiteStat};
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(TokenizerSpec {
+            pad: 0,
+            bos: 1,
+            eos: 2,
+            byte_offset: 3,
+            vocab_size: 272,
+            delimiter_ids: vec![13, 49],
+        })
+    }
+
+    fn report(o: usize, freq: Vec<(i32, usize)>) -> OutlierReport {
+        OutlierReport {
+            site_stats: vec![vec![SiteStat { top1: 1.0, median: 1.0, min1: 1.0 }]],
+            o_per_block: vec![o as f32],
+            o,
+            freq,
+            positions: vec![],
+            total_outliers: 0,
+            eta: 64.0,
+        }
+    }
+
+    #[test]
+    fn default_selection_bos_then_topfreq() {
+        let r = report(3, vec![(49, 10), (13, 4), (100, 1)]);
+        let t = tok();
+        assert_eq!(select_tokens(&r, &t), vec![1, 49, 13]);
+        assert_eq!(render(&[1, 49, 13], &t), "[BOS].\\n");
+    }
+
+    #[test]
+    fn initial_only_models_get_bos() {
+        let r = report(0, vec![]);
+        assert_eq!(select_tokens(&r, &tok()), vec![1]);
+        let r1 = report(1, vec![]);
+        assert_eq!(select_tokens(&r1, &tok()), vec![1]);
+    }
+
+    #[test]
+    fn repeats_top_token_when_few_distinct() {
+        let r = report(3, vec![(49, 10)]);
+        assert_eq!(select_tokens(&r, &tok()), vec![1, 49, 49]);
+    }
+
+    #[test]
+    fn policies() {
+        let r = report(2, vec![(49, 10), (13, 4)]);
+        let t = tok();
+        assert_eq!(select_with_policy(&r, &t, &PrefixPolicy::FirstN(1)), vec![1]);
+        assert_eq!(
+            select_with_policy(&r, &t, &PrefixPolicy::OnlyHighestFreq),
+            vec![49, 49]
+        );
+        let rand = select_with_policy(&r, &t, &PrefixPolicy::Random(7));
+        assert_eq!(rand.len(), 2);
+        assert!(rand.iter().all(|&id| !t.is_delimiter(id)));
+        assert_eq!(select_with_policy(&r, &t, &PrefixPolicy::Fixed3).len(), 3);
+    }
+}

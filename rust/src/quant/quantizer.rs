@@ -1,0 +1,181 @@
+//! Host-side weight quantization (Eq. 1 of the paper).
+//!
+//! Weights are quantized on the host before upload: the executables receive
+//! the already fake-quantized (dequantized) weights, exactly as a real INT4
+//! deployment would hold integer codes + per-channel steps.  Per-channel
+//! symmetric is the paper's setting; per-group is the Atom-analog baseline.
+
+use crate::tensor::Tensor;
+
+/// qmax for N-bit symmetric quantization: 2^{N-1} - 1.
+pub fn qmax(bits: usize) -> f32 {
+    ((1i64 << (bits - 1)) - 1) as f32
+}
+
+/// Fake-quantize one value with step `s` (clamp to [-qmax-1, qmax]).
+#[inline]
+pub fn fq(x: f32, s: f32, qm: f32) -> f32 {
+    let s = s.max(1e-8);
+    (x / s).round().clamp(-qm - 1.0, qm) * s
+}
+
+/// Integer code for one value.
+#[inline]
+pub fn code(x: f32, s: f32, qm: f32) -> f32 {
+    let s = s.max(1e-8);
+    (x / s).round().clamp(-qm - 1.0, qm)
+}
+
+/// Fake-quant a whole slice with one step size; returns sum of squared error.
+pub fn fq_slice(xs: &mut [f32], s: f32, qm: f32) -> f64 {
+    let mut err = 0.0f64;
+    for x in xs.iter_mut() {
+        let q = fq(*x, s, qm);
+        let d = (q - *x) as f64;
+        err += d * d;
+        *x = q;
+    }
+    err
+}
+
+fn sq_err(xs: &[f32], s: f32, qm: f32) -> f64 {
+    xs.iter()
+        .map(|&x| {
+            let d = (fq(x, s, qm) - x) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Grid-search the step size for one slice: s = γ·max|x|/qmax minimizing MSE.
+/// With `grid == 1` this degenerates to RTN (γ = 1).
+pub fn search_scale(xs: &[f32], bits: usize, grid: usize) -> f32 {
+    let qm = qmax(bits);
+    let maxabs = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8);
+    if grid <= 1 {
+        return maxabs / qm;
+    }
+    let mut best = (f64::INFINITY, maxabs / qm);
+    for i in 0..grid {
+        let gamma = 0.15 + 0.85 * (i as f32) / (grid - 1) as f32; // γ ∈ [0.15, 1.0]
+        let s = gamma * maxabs / qm;
+        let e = sq_err(xs, s, qm);
+        if e < best.0 {
+            best = (e, s);
+        }
+    }
+    best.1
+}
+
+/// Per-(output-)channel symmetric weight quantization of w[in, out].
+/// Returns the per-channel steps. `grid==1` → RTN init, else grid search.
+pub fn quant_weight_per_channel(w: &mut Tensor, bits: usize, grid: usize) -> Vec<f32> {
+    assert_eq!(w.rank(), 2, "per-channel quant expects a matrix");
+    if bits >= 16 {
+        return vec![];
+    }
+    let (rows, cols) = (w.shape[0], w.shape[1]);
+    let qm = qmax(bits);
+    let mut steps = vec![0.0f32; cols];
+    for j in 0..cols {
+        let col: Vec<f32> = (0..rows).map(|i| w.data[i * cols + j]).collect();
+        let s = search_scale(&col, bits, grid);
+        steps[j] = s;
+        for i in 0..rows {
+            let v = &mut w.data[i * cols + j];
+            *v = fq(*v, s, qm);
+        }
+    }
+    steps
+}
+
+/// Per-group weight quantization (groups along the input dim, Atom-analog).
+pub fn quant_weight_per_group(w: &mut Tensor, bits: usize, group: usize, grid: usize) {
+    assert_eq!(w.rank(), 2);
+    if bits >= 16 {
+        return;
+    }
+    let (rows, cols) = (w.shape[0], w.shape[1]);
+    let qm = qmax(bits);
+    for j in 0..cols {
+        let mut g0 = 0;
+        while g0 < rows {
+            let g1 = (g0 + group).min(rows);
+            let seg: Vec<f32> = (g0..g1).map(|i| w.data[i * cols + j]).collect();
+            let s = search_scale(&seg, bits, grid);
+            for i in g0..g1 {
+                let v = &mut w.data[i * cols + j];
+                *v = fq(*v, s, qm);
+            }
+            g0 = g1;
+        }
+    }
+}
+
+/// Grid-search a *single* static step for a value population against its own
+/// quantization MSE (used for per-head KV scales — "layer output" objective).
+pub fn search_scale_pop(values: &[f32], bits: usize, grid: usize) -> f32 {
+    search_scale(values, bits, grid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(4), 7.0);
+        assert_eq!(qmax(8), 127.0);
+        assert_eq!(qmax(16), 32767.0);
+    }
+
+    #[test]
+    fn fq_roundtrip_idempotent() {
+        let s = 0.1;
+        for &x in &[0.0f32, 0.04, -0.06, 0.65, -0.7, 100.0] {
+            let q = fq(x, s, 7.0);
+            assert_eq!(fq(q, s, 7.0), q, "fq idempotent at {x}");
+            assert!(q <= 7.0 * s + 1e-6 && q >= -8.0 * s - 1e-6);
+        }
+    }
+
+    #[test]
+    fn grid_beats_rtn_with_outlier() {
+        // a mild outlier over a dense bulk: RTN wastes range, grid clips it
+        let mut xs = vec![0.2f32; 511];
+        xs.push(2.0);
+        let s_rtn = search_scale(&xs, 4, 1);
+        let s_grid = search_scale(&xs, 4, 40);
+        assert!(sq_err(&xs, s_grid, 7.0) <= sq_err(&xs, s_rtn, 7.0));
+        assert!(s_grid < s_rtn);
+    }
+
+    #[test]
+    fn per_channel_reduces_error_vs_shared() {
+        // two columns with very different ranges
+        let w0 = Tensor::new(vec![2, 2], vec![1.0, 0.01, -1.0, -0.01]).unwrap();
+        let mut w = w0.clone();
+        let steps = quant_weight_per_channel(&mut w, 4, 20);
+        assert_eq!(steps.len(), 2);
+        assert!(steps[0] > steps[1]);
+        // small column survives (error << its magnitude)
+        assert!((w.data[1] - 0.01).abs() < 0.005);
+    }
+
+    #[test]
+    fn bits16_is_noop() {
+        let mut w = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let orig = w.clone();
+        let steps = quant_weight_per_channel(&mut w, 16, 20);
+        assert!(steps.is_empty());
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn per_group_groups() {
+        let mut w = Tensor::new(vec![4, 1], vec![0.1, 0.1, 10.0, 10.0]).unwrap();
+        quant_weight_per_group(&mut w, 4, 2, 10);
+        // group 0 keeps fidelity on small values despite group 1's outliers
+        assert!((w.data[0] - 0.1).abs() < 0.02);
+    }
+}

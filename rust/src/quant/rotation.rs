@@ -1,0 +1,205 @@
+//! Hadamard rotations (Sec. C of the paper / QuaRot / SpinQuant).
+//!
+//! Fold plan (computational invariance, checked by integration tests):
+//!   0. absorb RMSNorm gains into the adjacent projections
+//!      (ln1 → wq/wk/wv, ln2 → wg/wu, lnf → head), set gains to 1;
+//!   1. R1 (hidden basis, d_model): emb ← emb·R1; in-projections
+//!      (wq,wk,wv,wg,wu) ← R1ᵀ·w; out-projections (wo, wd) ← w·R1;
+//!      head ← R1ᵀ·head;
+//!   2. R2 (per-head value basis, d_head): wv column-blocks ← block·R2,
+//!      wo row-blocks ← R2ᵀ·block;
+//!   3. R4 (down_proj input, d_ff): wd ← R4ᵀ·wd — the executables apply
+//!      x·R4 *online*, so folding wd keeps the function identical;
+//!   4. R3 (post-RoPE Q/K, d_head) is online-only and self-cancelling in the
+//!      attention inner product — nothing to fold.
+//!
+//! RMSNorm (with unit gain) is equivariant under orthogonal basis change, so
+//! the folded model computes exactly the same function (fp path), while every
+//! quantizer input lives in the outlier-spread Hadamard basis.
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::runtime::WeightStore;
+use crate::tensor::Tensor;
+
+/// Normalized Sylvester-Hadamard matrix (n a power of two): H·Hᵀ = I.
+pub fn hadamard(n: usize) -> Tensor {
+    assert!(n.is_power_of_two(), "hadamard size {n} not a power of 2");
+    let mut h = vec![1.0f32];
+    let mut size = 1;
+    while size < n {
+        let ns = size * 2;
+        let mut nh = vec![0.0f32; ns * ns];
+        for i in 0..size {
+            for j in 0..size {
+                let v = h[i * size + j];
+                nh[i * ns + j] = v;
+                nh[i * ns + j + size] = v;
+                nh[(i + size) * ns + j] = v;
+                nh[(i + size) * ns + j + size] = -v;
+            }
+        }
+        h = nh;
+        size = ns;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    Tensor { shape: vec![n, n], data: h.into_iter().map(|v| v * norm).collect() }
+}
+
+/// Scale row i of a matrix by g[i] (diag(g) · W).
+fn scale_rows(w: &mut Tensor, g: &[f32]) {
+    let (rows, cols) = (w.shape[0], w.shape[1]);
+    assert_eq!(rows, g.len());
+    for i in 0..rows {
+        for j in 0..cols {
+            w.data[i * cols + j] *= g[i];
+        }
+    }
+}
+
+/// Absorb RMSNorm gains into adjacent projections; gains become 1.
+pub fn absorb_norm_gains(cfg: &ModelConfig, ws: &mut WeightStore) -> Result<()> {
+    for l in 0..cfg.n_layers {
+        let ln1 = ws.get(&format!("layers.{l}.ln1")).unwrap().data.clone();
+        for t in ["wq", "wk", "wv"] {
+            scale_rows(ws.get_mut(&format!("layers.{l}.{t}")).unwrap(), &ln1);
+        }
+        let ln2 = ws.get(&format!("layers.{l}.ln2")).unwrap().data.clone();
+        for t in ["wg", "wu"] {
+            scale_rows(ws.get_mut(&format!("layers.{l}.{t}")).unwrap(), &ln2);
+        }
+        ws.set(&format!("layers.{l}.ln1"), Tensor::full(&[cfg.d_model], 1.0));
+        ws.set(&format!("layers.{l}.ln2"), Tensor::full(&[cfg.d_model], 1.0));
+    }
+    let lnf = ws.get("lnf").unwrap().data.clone();
+    scale_rows(ws.get_mut("head").unwrap(), &lnf);
+    ws.set("lnf", Tensor::full(&[cfg.d_model], 1.0));
+    Ok(())
+}
+
+/// Fold the absorbable rotations R1/R2 and the R4 weight-side factor.
+/// Call `absorb_norm_gains` first (checked).
+pub fn fold_rotations(cfg: &ModelConfig, ws: &mut WeightStore) -> Result<()> {
+    for l in 0..cfg.n_layers {
+        let ln1 = ws.get(&format!("layers.{l}.ln1")).unwrap();
+        if ln1.data.iter().any(|&g| (g - 1.0).abs() > 1e-6) {
+            bail!("fold_rotations requires absorbed norm gains (layer {l})");
+        }
+    }
+    let r1 = hadamard(cfg.d_model);
+    let r1t = r1.transpose2();
+    let r2 = hadamard(cfg.d_head);
+    let r2t = r2.transpose2();
+    let r4 = hadamard(cfg.d_ff);
+    let r4t = r4.transpose2();
+
+    // embedding rows into the rotated basis
+    let emb = ws.get("emb").unwrap().clone();
+    ws.set("emb", emb.matmul(&r1));
+    // head maps rotated hidden back to logits
+    let head = ws.get("head").unwrap().clone();
+    ws.set("head", r1t.matmul(&head));
+
+    for l in 0..cfg.n_layers {
+        let name = |t: &str| format!("layers.{l}.{t}");
+        for t in ["wq", "wk", "wv", "wg", "wu"] {
+            let w = ws.get(&name(t)).unwrap().clone();
+            ws.set(&name(t), r1t.matmul(&w));
+        }
+        for t in ["wo", "wd"] {
+            let w = ws.get(&name(t)).unwrap().clone();
+            ws.set(&name(t), w.matmul(&r1));
+        }
+        // R2: per-head value-basis rotation (wv column blocks, wo row blocks)
+        let (d, dh, h) = (cfg.d_model, cfg.d_head, cfg.n_heads);
+        let mut wv = ws.get(&name("wv")).unwrap().clone();
+        for head_i in 0..h {
+            // block = wv[:, hi*dh..(hi+1)*dh] · R2
+            let mut block = Tensor::zeros(&[d, dh]);
+            for i in 0..d {
+                for j in 0..dh {
+                    block.data[i * dh + j] = wv.data[i * d + head_i * dh + j];
+                }
+            }
+            let rotated = block.matmul(&r2);
+            for i in 0..d {
+                for j in 0..dh {
+                    wv.data[i * d + head_i * dh + j] = rotated.data[i * dh + j];
+                }
+            }
+        }
+        ws.set(&name("wv"), wv);
+        let mut wo = ws.get(&name("wo")).unwrap().clone();
+        for head_i in 0..h {
+            let mut block = Tensor::zeros(&[dh, d]);
+            for i in 0..dh {
+                for j in 0..d {
+                    block.data[i * d + j] = wo.data[(head_i * dh + i) * d + j];
+                }
+            }
+            let rotated = r2t.matmul(&block);
+            for i in 0..dh {
+                for j in 0..d {
+                    wo.data[(head_i * dh + i) * d + j] = rotated.data[i * d + j];
+                }
+            }
+        }
+        ws.set(&name("wo"), wo);
+        // R4 weight-side factor (executables apply x·R4 online)
+        let wd = ws.get(&name("wd")).unwrap().clone();
+        ws.set(&name("wd"), r4t.matmul(&wd));
+    }
+    Ok(())
+}
+
+/// Online rotation matrices for the executables (identity when off).
+pub fn online_matrices(cfg: &ModelConfig, rotate: bool) -> (Tensor, Tensor) {
+    if rotate {
+        (hadamard(cfg.d_head), hadamard(cfg.d_ff))
+    } else {
+        (crate::model::eye(cfg.d_head), crate::model::eye(cfg.d_ff))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hadamard_orthogonal() {
+        for n in [2usize, 4, 32, 128] {
+            let h = hadamard(n);
+            let prod = h.matmul(&h.transpose2());
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!(
+                        (prod.data[i * n + j] - want).abs() < 1e-4,
+                        "H Hᵀ != I at ({i},{j}) for n={n}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hadamard_entries_uniform_magnitude() {
+        let h = hadamard(8);
+        let m = 1.0 / (8.0f32).sqrt();
+        assert!(h.data.iter().all(|v| (v.abs() - m).abs() < 1e-6));
+    }
+
+    #[test]
+    #[should_panic]
+    fn hadamard_rejects_non_pow2() {
+        hadamard(12);
+    }
+
+    #[test]
+    fn scale_rows_works() {
+        let mut w = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        scale_rows(&mut w, &[2.0, 0.5]);
+        assert_eq!(w.data, vec![2.0, 4.0, 1.5, 2.0]);
+    }
+}

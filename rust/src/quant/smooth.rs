@@ -1,0 +1,87 @@
+//! SmoothQuant-analog baseline: channel-wise activation→weight scaling.
+//!
+//! s_c = max|X_c|^α / max|W_c|^{1-α}; activations divided by s (folded into
+//! the preceding RMSNorm gain), weights multiplied by s.  Only the norm→linear
+//! pairs (attn_in, mlp_in) can absorb the scaling — like the real method —
+//! while o_in / down_in stay untouched.
+
+use anyhow::Result;
+
+use crate::model::Model;
+use crate::tensor::Tensor;
+
+use super::outlier::Observation;
+
+/// Per-channel abs-max of the post-norm activations, computed host-side from
+/// the captured block inputs (rmsnorm with the current gains).
+fn channel_absmax_postnorm(x: &Tensor, gamma: &Tensor) -> Vec<f32> {
+    let d = *x.shape.last().unwrap();
+    let rows = x.numel() / d;
+    let mut maxes = vec![0.0f32; d];
+    for r in 0..rows {
+        let row = &x.data[r * d..(r + 1) * d];
+        let ms = row.iter().map(|v| (v * v) as f64).sum::<f64>() / d as f64;
+        let inv = 1.0 / ((ms + 1e-5).sqrt() as f32);
+        for c in 0..d {
+            maxes[c] = maxes[c].max((row[c] * inv * gamma.data[c]).abs());
+        }
+    }
+    maxes
+}
+
+fn weight_absmax_rows(w: &Tensor) -> Vec<f32> {
+    let (rows, cols) = (w.shape[0], w.shape[1]);
+    let mut m = vec![0.0f32; rows];
+    for i in 0..rows {
+        for j in 0..cols {
+            m[i] = m[i].max(w.data[i * cols + j].abs());
+        }
+    }
+    m
+}
+
+/// Apply SmoothQuant scaling in place (α = 0.5, the canonical setting).
+pub fn apply(model: &mut Model, obs: &Observation, alpha: f32) -> Result<()> {
+    let cfg = model.cfg.clone();
+    for li in 0..cfg.n_layers {
+        let x = obs.captures.index0(li);
+        for (ln, targets) in
+            [("ln1", vec!["wq", "wk", "wv"]), ("ln2", vec!["wg", "wu"])]
+        {
+            let gamma = model.weights.get(&format!("layers.{li}.{ln}")).unwrap().clone();
+            let act_max = channel_absmax_postnorm(&x, &gamma);
+            // w-side max across all consumers of this activation
+            let mut w_max = vec![0.0f32; cfg.d_model];
+            for t in &targets {
+                let w = model.layer_weight(li, t)?;
+                for (c, m) in weight_absmax_rows(w).into_iter().enumerate() {
+                    w_max[c] = w_max[c].max(m);
+                }
+            }
+            let s: Vec<f32> = act_max
+                .iter()
+                .zip(&w_max)
+                .map(|(&a, &w)| {
+                    (a.max(1e-5).powf(alpha) / w.max(1e-5).powf(1.0 - alpha)).clamp(1e-3, 1e3)
+                })
+                .collect();
+            // gamma' = gamma / s ; W' = diag(s) W
+            let mut g2 = gamma.clone();
+            for c in 0..cfg.d_model {
+                g2.data[c] /= s[c];
+            }
+            model.weights.set(&format!("layers.{li}.{ln}"), g2);
+            for t in &targets {
+                let w = model.weights.get_mut(&format!("layers.{li}.{t}")).unwrap();
+                let cols = w.shape[1];
+                for c in 0..cfg.d_model {
+                    for j in 0..cols {
+                        w.data[c * cols + j] *= s[c];
+                    }
+                }
+            }
+        }
+    }
+    model.refresh_weights()?;
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Experiment report collection: accumulates paper-style tables/figures and
+//! writes them under artifacts/reports/ for EXPERIMENTS.md.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+pub struct ReportSink {
+    dir: PathBuf,
+    buffer: String,
+    name: String,
+}
+
+impl ReportSink {
+    pub fn new(artifacts: &std::path::Path, name: &str) -> Result<Self> {
+        let dir = artifacts.join("reports");
+        std::fs::create_dir_all(&dir)?;
+        Ok(Self { dir, buffer: String::new(), name: name.to_string() })
+    }
+
+    /// Print to stdout AND record for the report file.
+    pub fn emit(&mut self, text: &str) {
+        print!("{text}");
+        let _ = std::io::stdout().flush();
+        self.buffer.push_str(text);
+    }
+
+    pub fn emit_line(&mut self, text: &str) {
+        self.emit(&format!("{text}\n"));
+    }
+
+    pub fn table(&mut self, t: &crate::util::table::Table) {
+        self.emit(&t.render());
+    }
+
+    pub fn save(&self) -> Result<PathBuf> {
+        let path = self.dir.join(format!("{}.txt", self.name));
+        std::fs::write(&path, &self.buffer)?;
+        Ok(path)
+    }
+}

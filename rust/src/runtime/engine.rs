@@ -1,0 +1,221 @@
+//! PJRT execution engine: load HLO text artifacts, compile once, execute.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute_b`.
+//! Weights are uploaded once into resident `PjRtBuffer`s (`ResidentSet`);
+//! per-call inputs (tokens, scales, caches) are uploaded per execute.
+//!
+//! PJRT handles are not `Send`; the coordinator owns the Engine on a single
+//! model thread and talks to it over channels (see coordinator/server.rs).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{DType, ExecSig, Manifest};
+use crate::tensor::{IntTensor, Tensor};
+
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// A per-call input value.
+pub enum Value<'a> {
+    F32(&'a Tensor),
+    I32(&'a IntTensor),
+    /// Pre-uploaded resident buffer (weights).
+    Buf(&'a xla::PjRtBuffer),
+}
+
+/// One output tensor, converted back to host.
+#[derive(Debug, Clone)]
+pub enum Out {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Out {
+    pub fn f32(self) -> Result<Tensor> {
+        match self {
+            Out::F32(t) => Ok(t),
+            Out::I32(_) => bail!("output is i32, expected f32"),
+        }
+    }
+
+    pub fn i32(self) -> Result<IntTensor> {
+        match self {
+            Out::I32(t) => Ok(t),
+            Out::F32(_) => bail!("output is f32, expected i32"),
+        }
+    }
+}
+
+/// Weights resident on device in manifest order.
+pub struct ResidentSet {
+    pub buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) the executable for a manifest entry.
+    pub fn load(&self, sig: &ExecSig) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(&sig.file) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.dir.join(&sig.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+        let rc = Rc::new(exe);
+        self.cache.borrow_mut().insert(sig.file.clone(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Upload a host tensor to a resident device buffer.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let dims = if t.shape.is_empty() { vec![] } else { t.shape.clone() };
+        self.client
+            .buffer_from_host_buffer(&t.data, &dims, None)
+            .map_err(|e| anyhow!("upload f32 {:?}: {e:?}", t.shape))
+    }
+
+    pub fn upload_i32(&self, t: &IntTensor) -> Result<xla::PjRtBuffer> {
+        let dims = if t.shape.is_empty() { vec![] } else { t.shape.clone() };
+        self.client
+            .buffer_from_host_buffer(&t.data, &dims, None)
+            .map_err(|e| anyhow!("upload i32 {:?}: {e:?}", t.shape))
+    }
+
+    /// Upload a weight list (manifest order) into resident buffers.
+    pub fn upload_weights(&self, tensors: &[&Tensor]) -> Result<ResidentSet> {
+        let buffers =
+            tensors.iter().map(|t| self.upload(t)).collect::<Result<Vec<_>>>()?;
+        Ok(ResidentSet { buffers })
+    }
+
+    /// Execute `sig` with inputs given in signature order; validates shapes
+    /// and dtypes against the manifest before launching.
+    pub fn run(&self, sig: &ExecSig, inputs: &[Value]) -> Result<Vec<Out>> {
+        if inputs.len() != sig.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                sig.file,
+                sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        // shape/dtype validation (buffers are trusted — they're weights)
+        for (v, is) in inputs.iter().zip(&sig.inputs) {
+            match v {
+                Value::F32(t) => {
+                    if is.dtype != DType::F32 || t.shape != is.shape {
+                        bail!(
+                            "{}: input {:?} wants {:?} {:?}, got f32 {:?}",
+                            sig.file, is.name, is.dtype, is.shape, t.shape
+                        );
+                    }
+                }
+                Value::I32(t) => {
+                    if is.dtype != DType::I32 || t.shape != is.shape {
+                        bail!(
+                            "{}: input {:?} wants {:?} {:?}, got i32 {:?}",
+                            sig.file, is.name, is.dtype, is.shape, t.shape
+                        );
+                    }
+                }
+                Value::Buf(_) => {}
+            }
+        }
+        let exe = self.load(sig)?;
+        // materialize per-call buffers; weights pass through
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<usize> = Vec::with_capacity(inputs.len()); // index into owned or resident marker
+        enum Slot<'a> {
+            Owned(usize),
+            Resident(&'a xla::PjRtBuffer),
+        }
+        let mut slots: Vec<Slot> = Vec::with_capacity(inputs.len());
+        for v in inputs {
+            match v {
+                Value::F32(t) => {
+                    owned.push(self.upload(t)?);
+                    slots.push(Slot::Owned(owned.len() - 1));
+                }
+                Value::I32(t) => {
+                    owned.push(self.upload_i32(t)?);
+                    slots.push(Slot::Owned(owned.len() - 1));
+                }
+                Value::Buf(b) => slots.push(Slot::Resident(b)),
+            }
+        }
+        let _ = &mut order;
+        let arg_refs: Vec<&xla::PjRtBuffer> = slots
+            .iter()
+            .map(|s| match s {
+                Slot::Owned(i) => &owned[*i],
+                Slot::Resident(b) => *b,
+            })
+            .collect();
+        let results = exe
+            .execute_b(&arg_refs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", sig.file))?;
+        let lit = results[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e:?}", sig.file))?;
+        // exported with return_tuple=True: always a tuple literal
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", sig.file))?;
+        if parts.len() != sig.outputs.len() {
+            bail!(
+                "{}: manifest lists {} outputs, executable returned {}",
+                sig.file,
+                sig.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.into_iter().map(|p| literal_to_out(&p, &sig.file)).collect()
+    }
+
+    /// Convenience: run and pick one named output.
+    pub fn run_get(&self, sig: &ExecSig, inputs: &[Value], output: &str) -> Result<Out> {
+        let idx = sig.output_index(output)?;
+        let mut outs = self.run(sig, inputs)?;
+        Ok(outs.swap_remove(idx))
+    }
+}
+
+fn literal_to_out(lit: &xla::Literal, what: &str) -> Result<Out> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("shape of {what} output: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("{what}: {e:?}"))?;
+            Ok(Out::F32(Tensor::new(dims, data).context(what.to_string())?))
+        }
+        xla::ElementType::S32 => {
+            let data = lit.to_vec::<i32>().map_err(|e| anyhow!("{what}: {e:?}"))?;
+            Ok(Out::I32(IntTensor::new(dims, data).context(what.to_string())?))
+        }
+        xla::ElementType::Pred => {
+            // bool outputs come back as u8; widen to i32
+            let data = lit.to_vec::<u8>().map_err(|e| anyhow!("{what}: {e:?}"))?;
+            Ok(Out::I32(IntTensor::new(dims, data.into_iter().map(|b| b as i32).collect())?))
+        }
+        other => bail!("{what}: unsupported output element type {other:?}"),
+    }
+}

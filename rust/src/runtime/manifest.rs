@@ -1,0 +1,162 @@
+//! Typed view over artifacts/manifest.json.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{CorpusSpec, ModelConfig, TokenizerSpec};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(anyhow!("unsupported dtype {other}")),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<String>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl ExecSig {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("executable {} has no input {name:?}", self.file))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t == name)
+            .ok_or_else(|| anyhow!("executable {} has no output {name:?}", self.file))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub config: ModelConfig,
+    pub weights_file: String,
+    pub weight_names: Vec<String>,
+    pub pretrain_final_loss: Option<f64>,
+    pub executables: BTreeMap<String, ExecSig>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tokenizer: TokenizerSpec,
+    pub corpus: CorpusSpec,
+    pub models: BTreeMap<String, ModelManifest>,
+    pub kernels: BTreeMap<String, ExecSig>,
+}
+
+fn parse_sig(j: &Json) -> Result<ExecSig> {
+    let inputs = j
+        .get("inputs")?
+        .as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSig {
+                name: t.get("name")?.as_str()?.to_string(),
+                dtype: DType::parse(t.get("dtype")?.as_str()?)?,
+                shape: t
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = j
+        .get("outputs")?
+        .as_arr()?
+        .iter()
+        .map(|o| Ok(o.as_str()?.to_string()))
+        .collect::<Result<Vec<_>>>()?;
+    let (batch, seq) = match j.opt("geom") {
+        Some(g) => (g.get("batch")?.as_usize()?, g.get("seq")?.as_usize()?),
+        None => (0, 0),
+    };
+    Ok(ExecSig { file: j.get("file")?.as_str()?.to_string(), inputs, outputs, batch, seq })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow!("reading manifest in {dir:?}: {e} (run `make artifacts`)"))?;
+        let j = Json::parse(&text)?;
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models")?.as_obj()? {
+            let execs = mj
+                .get("executables")?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), parse_sig(v)?)))
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    config: ModelConfig::from_json(mj.get("config")?)?,
+                    weights_file: mj.get("weights_file")?.as_str()?.to_string(),
+                    weight_names: mj
+                        .get("weight_names")?
+                        .as_arr()?
+                        .iter()
+                        .map(|s| Ok(s.as_str()?.to_string()))
+                        .collect::<Result<_>>()?,
+                    pretrain_final_loss: mj
+                        .opt("pretrain")
+                        .and_then(|p| p.opt("final_loss"))
+                        .and_then(|v| v.as_f64().ok()),
+                    executables: execs,
+                },
+            );
+        }
+        let kernels = j
+            .get("kernels")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), parse_sig(v)?)))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            tokenizer: TokenizerSpec::from_json(j.get("tokenizer")?)?,
+            corpus: CorpusSpec::from_json(j.get("corpus")?)?,
+            models,
+            kernels,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models.get(name).ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+
+    pub fn kernel(&self, name: &str) -> Result<&ExecSig> {
+        self.kernels.get(name).ok_or_else(|| anyhow!("kernel {name:?} not in manifest"))
+    }
+}

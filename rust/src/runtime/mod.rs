@@ -1,0 +1,14 @@
+//! PJRT runtime: manifest parsing, weight container, execution engine.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): python lowers jax to HLO *text*
+//! at build time; this module loads the text, compiles it on the PJRT CPU
+//! client and executes it from the rust request path. Python never runs at
+//! serving time.
+
+pub mod engine;
+pub mod manifest;
+pub mod weights;
+
+pub use engine::{Engine, Out, ResidentSet, Value};
+pub use manifest::{DType, ExecSig, Manifest, ModelManifest, TensorSig};
+pub use weights::WeightStore;

@@ -1,0 +1,167 @@
+//! weights.bin reader/writer — bit-exact twin of python/compile/artifact_io.py.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"PQTW";
+const VERSION: u32 = 1;
+
+/// Named f32 tensors in file order plus a name index.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+    index: BTreeMap<String, usize>,
+}
+
+impl WeightStore {
+    pub fn from_pairs(pairs: Vec<(String, Tensor)>) -> Self {
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        let mut index = BTreeMap::new();
+        for (n, t) in pairs {
+            index.insert(n.clone(), names.len());
+            names.push(n);
+            tensors.push(t);
+        }
+        Self { names, tensors, index }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.index.get(name).map(|&i| &mut self.tensors[i])
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        match self.index.get(name) {
+            Some(&i) => self.tensors[i] = t,
+            None => {
+                self.index.insert(name.to_string(), self.names.len());
+                self.names.push(name.to_string());
+                self.tensors.push(t);
+            }
+        }
+    }
+
+    /// Tensors in the canonical order recorded by the manifest.
+    pub fn ordered<'a>(&'a self, order: &[String]) -> Result<Vec<&'a Tensor>> {
+        order
+            .iter()
+            .map(|n| {
+                self.get(n).ok_or_else(|| anyhow::anyhow!("weight {n:?} missing from store"))
+            })
+            .collect()
+    }
+
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: bad magic");
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("{path:?}: unsupported version {version}");
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut pairs = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nlen = read_u16(&mut f)? as usize;
+            let mut nb = vec![0u8; nlen];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let mut hdr = [0u8; 2];
+            f.read_exact(&mut hdr)?;
+            let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+            if dtype != 0 {
+                bail!("{path:?}: tensor {name}: only f32 weights supported, got dtype {dtype}");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut f)? as usize);
+            }
+            let n: usize = dims.iter().product::<usize>().max(1);
+            let mut raw = vec![0u8; 4 * n];
+            f.read_exact(&mut raw)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            pairs.push((name, Tensor::new(dims, data)?));
+        }
+        Ok(WeightStore::from_pairs(pairs))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.names.len() as u32).to_le_bytes())?;
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u16).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&[0u8, t.shape.len() as u8])?;
+            for d in &t.shape {
+                f.write_all(&(*d as u32).to_le_bytes())?;
+            }
+            for v in &t.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("pqtw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        let ws = WeightStore::from_pairs(vec![
+            ("a".into(), Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap()),
+            ("b.c".into(), Tensor::new(vec![3], vec![-1.0, 0.5, 2.5]).unwrap()),
+        ]);
+        ws.save(&p).unwrap();
+        let re = WeightStore::load(&p).unwrap();
+        assert_eq!(re.names, ws.names);
+        assert_eq!(re.get("a").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(re.get("b.c").unwrap().shape, vec![3]);
+    }
+
+    #[test]
+    fn ordered_lookup() {
+        let ws = WeightStore::from_pairs(vec![
+            ("x".into(), Tensor::scalar(1.0)),
+            ("y".into(), Tensor::scalar(2.0)),
+        ]);
+        let o = ws.ordered(&["y".into(), "x".into()]).unwrap();
+        assert_eq!(o[0].data[0], 2.0);
+        assert!(ws.ordered(&["z".into()]).is_err());
+    }
+}

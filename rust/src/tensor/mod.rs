@@ -1,0 +1,258 @@
+//! Minimal host-side dense tensors (row-major f32 / i32).
+//!
+//! Just enough ndarray for the quantization pipeline: shaped storage, index
+//! math, slicing along the leading axes, and the reductions the outlier
+//! detector and host quantizer need.  Device math stays in the AOT
+//! executables; these tensors are the host staging format.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        if numel(&shape) != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel(&shape), data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; numel(shape)] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let st = self.strides();
+        let off: usize = idx.iter().zip(&st).map(|(i, s)| i * s).sum();
+        self.data[off]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let st = self.strides();
+        let off: usize = idx.iter().zip(&st).map(|(i, s)| i * s).sum();
+        self.data[off] = v;
+    }
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        if numel(&shape) != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Slice index `i` along axis 0 (returns an owned copy).
+    pub fn index0(&self, i: usize) -> Tensor {
+        let inner = numel(&self.shape[1..]);
+        let data = self.data[i * inner..(i + 1) * inner].to_vec();
+        Tensor { shape: self.shape[1..].to_vec(), data }
+    }
+
+    /// Slice a contiguous range along axis 0.
+    pub fn slice0(&self, start: usize, end: usize) -> Tensor {
+        let inner = numel(&self.shape[1..]);
+        let mut shape = self.shape.clone();
+        shape[0] = end - start;
+        Tensor { shape, data: self.data[start * inner..end * inner].to_vec() }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// max|x| along the last axis: result shape = shape[..-1].
+    pub fn max_abs_lastdim(&self) -> Tensor {
+        let c = *self.shape.last().expect("rank >= 1");
+        let rows = self.data.len() / c;
+        let mut out = Vec::with_capacity(rows);
+        for r in 0..rows {
+            out.push(self.data[r * c..(r + 1) * c].iter().fold(0.0f32, |m, &v| m.max(v.abs())));
+        }
+        Tensor { shape: self.shape[..self.shape.len() - 1].to_vec(), data: out }
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Mean squared difference against another tensor of identical shape.
+    pub fn mse(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.data.len() as f64;
+        let s: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum();
+        (s / n) as f32
+    }
+
+    /// Matrix product for 2-D tensors (host-side weight folding only).
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(rhs.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &rhs.data[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * row[j];
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor { shape: vec![n, m], data: out }
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        if numel(&shape) != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel(&shape), data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0; numel(shape)] }
+    }
+
+    pub fn scalar(v: i32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Percentile over a copy of the data (nearest-rank). p in [0, 100].
+pub fn percentile(values: &[f32], p: f32) -> f32 {
+    assert!(!values.is_empty());
+    let mut v: Vec<f32> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f32).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn median(values: &[f32]) -> f32 {
+    percentile(values, 50.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn index_and_strides() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.strides(), vec![3, 1]);
+        assert_eq!(t.index0(1).data, vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, -4.0, 2.0, 3.0]).unwrap();
+        assert_eq!(t.max_abs(), 4.0);
+        assert_eq!(t.max_abs_lastdim().data, vec![4.0, 3.0]);
+        assert!((t.mean() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        assert_eq!(a.matmul(&b).data, a.data);
+        let t = a.transpose2();
+        assert_eq!(t.data, vec![1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn mse_and_percentile() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![1.0, 2.0, 5.0]).unwrap();
+        assert!((a.mse(&b) - 4.0 / 3.0).abs() < 1e-6);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 100.0), 4.0);
+    }
+}

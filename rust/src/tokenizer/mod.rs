@@ -1,0 +1,100 @@
+//! Byte-level tokenizer — bit-exact twin of python/compile/tokenizer.py.
+
+use crate::config::TokenizerSpec;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub spec: TokenizerSpec,
+}
+
+impl Tokenizer {
+    pub fn new(spec: TokenizerSpec) -> Self {
+        Self { spec }
+    }
+
+    pub fn encode(&self, text: &str, add_bos: bool) -> Vec<i32> {
+        let mut ids = Vec::with_capacity(text.len() + 1);
+        if add_bos {
+            ids.push(self.spec.bos);
+        }
+        ids.extend(text.bytes().map(|b| b as i32 + self.spec.byte_offset));
+        ids
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&i| i >= self.spec.byte_offset && i < self.spec.byte_offset + 256)
+            .map(|&i| (i - self.spec.byte_offset) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_delimiter(&self, id: i32) -> bool {
+        self.spec.delimiter_ids.contains(&id)
+    }
+
+    /// Human-readable rendering of a token id (outlier reports, Table 1).
+    pub fn token_repr(&self, id: i32) -> String {
+        if id == self.spec.pad {
+            return "[PAD]".into();
+        }
+        if id == self.spec.bos {
+            return "[BOS]".into();
+        }
+        if id == self.spec.eos {
+            return "[EOS]".into();
+        }
+        if id >= self.spec.byte_offset && id < self.spec.byte_offset + 256 {
+            let b = (id - self.spec.byte_offset) as u8;
+            return match b {
+                b'\n' => "\\n".into(),
+                b' ' => "\u{2423}".into(), // ␣
+                32..=126 => (b as char).to_string(),
+                _ => format!("<0x{b:02x}>"),
+            };
+        }
+        format!("<res{id}>")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(TokenizerSpec {
+            pad: 0,
+            bos: 1,
+            eos: 2,
+            byte_offset: 3,
+            vocab_size: 272,
+            delimiter_ids: vec![13, 49],
+        })
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = tok();
+        let ids = t.encode("ab.\n", true);
+        assert_eq!(ids, vec![1, 100, 101, 49, 13]);
+        assert_eq!(t.decode(&ids), "ab.\n");
+    }
+
+    #[test]
+    fn delimiters_and_repr() {
+        let t = tok();
+        assert!(t.is_delimiter(49));
+        assert!(t.is_delimiter(13));
+        assert!(!t.is_delimiter(100));
+        assert_eq!(t.token_repr(1), "[BOS]");
+        assert_eq!(t.token_repr(49), ".");
+        assert_eq!(t.token_repr(13), "\\n");
+    }
+
+    #[test]
+    fn no_bos() {
+        let t = tok();
+        assert_eq!(t.encode("a", false), vec![100]);
+    }
+}

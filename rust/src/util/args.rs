@@ -1,0 +1,104 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.options.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&sv(&["eval", "--model", "pq-tiny", "--fast", "--n=4"]));
+        assert_eq!(a.positional, vec!["eval"]);
+        assert_eq!(a.get("model"), Some("pq-tiny"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = Args::parse(&sv(&["--verbose", "run"]));
+        // "--verbose run": "run" is consumed as the value of --verbose
+        assert_eq!(a.get("verbose"), Some("run"));
+        let b = Args::parse(&sv(&["run", "--verbose"]));
+        assert!(b.flag("verbose"));
+        assert_eq!(b.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]));
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.f32_or("y", 1.5).unwrap(), 1.5);
+    }
+}

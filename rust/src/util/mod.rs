@@ -1,0 +1,7 @@
+//! Hand-rolled substrates for the offline image (see DESIGN.md).
+
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

