@@ -2,13 +2,19 @@
 //! submit a wave of concurrent generation requests, and report latency /
 //! throughput metrics (the paper's Table 5 setting, end to end).
 //!
-//!   cargo run --release --example serve_batch [-- --requests 16 --max-new 12]
+//!   cargo run --release --example serve_batch \
+//!       [-- --engine continuous|batch --requests 16 --max-new 12]
+//!
+//! `--engine continuous` (default) runs the slot-table engine: requests are
+//! admitted mid-flight into free KV slots (mixed prompt lengths welcome) and
+//! tokens stream back as they are produced.  `--engine batch` runs the
+//! run-to-completion baseline behind the dynamic batcher.
 
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-use prefixquant::coordinator::{GenRequest, Server, ServerConfig};
+use anyhow::{bail, Result};
+use prefixquant::coordinator::{EngineKind, GenRequest, Server, ServerConfig, StreamEvent};
 use prefixquant::data::{self, Language};
 use prefixquant::model::Model;
 use prefixquant::quant::{pipeline, SchemeConfig};
@@ -23,6 +29,11 @@ fn main() -> Result<()> {
     let n_requests = args.usize_or("requests", 16)?;
     let max_new = args.usize_or("max-new", 12)?;
     let prompt_chars = args.usize_or("prompt-chars", 63)?;
+    let engine_kind = match args.get_or("engine", "continuous") {
+        "continuous" => EngineKind::Continuous,
+        "batch" => EngineKind::Batch,
+        other => bail!("--engine {other:?}: want continuous|batch"),
+    };
 
     let dir = prefixquant::artifacts_dir();
     // a lightweight engine on the main thread just for specs
@@ -58,6 +69,7 @@ fn main() -> Result<()> {
         },
         ServerConfig {
             mode: prefixquant::model::QuantMode::Static,
+            engine: engine_kind,
             max_batch: 8,
             batch_window: Duration::from_millis(20),
             bos: tok.spec.bos,
@@ -65,40 +77,57 @@ fn main() -> Result<()> {
         },
     )?;
 
-    // build uniform-length prompts from the eval split (bucketable batches)
+    // mixed-length prompts from the eval split: the continuous engine admits
+    // them as slots free; the batch engine buckets them by length
     let text = lang.eval_text();
     let mut rng = SplitMix64::new(0xBA7C4);
     let mut receivers = Vec::new();
     let t0 = Instant::now();
     for id in 0..n_requests {
-        let start = rng.below((text.len() - prompt_chars - 1) as u64) as usize;
-        let prompt = tok.encode(&text[start..start + prompt_chars], false);
-        let rx = server.submit(GenRequest { id: id as u64, prompt, max_new })?;
+        let chars = prompt_chars + (id % 3) * 8; // three length buckets
+        let start = rng.below((text.len() - chars - 1) as u64) as usize;
+        let prompt = tok.encode(&text[start..start + chars], false);
+        let rx = server.submit_stream(GenRequest { id: id as u64, prompt, max_new })?;
         receivers.push((id, rx));
     }
     let mut ok = 0usize;
     for (id, rx) in receivers {
-        match rx.recv() {
-            Ok(Ok(resp)) => {
-                ok += 1;
-                if id < 3 {
-                    println!(
-                        "req {id}: ttft={:.0}ms total={:.0}ms | {:?}",
-                        resp.ttft_s * 1e3,
-                        resp.total_s * 1e3,
-                        tok.decode(&resp.tokens)
-                    );
+        let mut tokens = Vec::new();
+        let mut outcome = None;
+        for ev in rx.iter() {
+            match ev {
+                StreamEvent::Token(t) => tokens.push(t),
+                StreamEvent::Done(resp) => {
+                    outcome = Some(resp);
+                    break;
+                }
+                StreamEvent::Error(e) => {
+                    println!("req {id} failed: {e}");
+                    break;
                 }
             }
-            other => println!("req {id} failed: {other:?}"),
+        }
+        if let Some(resp) = outcome {
+            ok += 1;
+            if id < 3 {
+                println!(
+                    "req {id}: queue={:.0}ms ttft={:.0}ms total={:.0}ms | {:?}",
+                    resp.queue_s * 1e3,
+                    resp.ttft_s * 1e3,
+                    resp.total_s * 1e3,
+                    tok.decode(&tokens)
+                );
+            }
         }
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = server.metrics()?;
     println!(
-        "\nserved {ok}/{n_requests} requests in {wall:.2}s | batches={} mean TTFT={:.0}ms decode {:.1} tok/s",
+        "\nserved {ok}/{n_requests} requests in {wall:.2}s via {engine_kind:?} | \
+         dispatches={} mean TTFT={:.0}ms (queue {:.0}ms) decode {:.1} tok/s",
         m.batches,
         m.mean_ttft() * 1e3,
+        m.mean_queue_wait() * 1e3,
         m.decode_tps()
     );
     server.shutdown();

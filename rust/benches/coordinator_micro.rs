@@ -63,7 +63,7 @@ fn main() {
         let mut kv = KvCache::new(&cfg, 8);
         kv.install_prefix(&prefix).unwrap();
         kv.write_prefill(&kfill, &kfill, 256).unwrap();
-        std::hint::black_box(kv.len);
+        std::hint::black_box(kv.max_len());
     });
     t.rowv(vec![
         "kvcache prefix+prefill (B=8,S=256)".into(),
@@ -72,6 +72,28 @@ fn main() {
             "{:.1}MB/s",
             2.0 * kshape.iter().product::<usize>() as f64 * 4.0 / st.median_s / 1e6
         ),
+    ]);
+
+    // slot churn: admit into one slot, append, retire (continuous engine's
+    // per-request cache work, everything but the model execution)
+    let row_shape = [cfg.n_layers, 1, cfg.n_heads, 256, cfg.d_head];
+    let row_fill = Tensor::full(&row_shape, 1.0);
+    let tok_shape = [cfg.n_layers, cfg.n_heads, cfg.d_head];
+    let tok_fill = Tensor::full(&tok_shape, 2.0);
+    let mut kv = KvCache::new(&cfg, 8);
+    kv.install_prefix(&prefix).unwrap();
+    let st = bench_fn("slot churn", 3, 50, || {
+        kv.write_prefill_row(3, &row_fill, &row_fill, 0, 256).unwrap();
+        for _ in 0..16 {
+            kv.append_token_row(3, &tok_fill, &tok_fill).unwrap();
+        }
+        kv.reset_slot(3).unwrap();
+        std::hint::black_box(kv.row_len(3));
+    });
+    t.rowv(vec![
+        "slot admit+16 appends+retire (S=256)".into(),
+        format!("{:.3}ms", st.per_call_ms()),
+        format!("{:.2}us/token", st.median_s * 1e6 / 16.0),
     ]);
 
     // tokenizer round-trip

@@ -1,53 +1,129 @@
 //! Dynamic batcher: groups pending requests into fixed-geometry batches.
 //!
-//! The decode executable has a fixed batch dimension and a single shared
-//! cache_len, so a batch must have uniform prompt length — the batcher
-//! buckets by length and releases the largest eligible bucket, oldest first
-//! (vLLM-style FCFS within a shape bucket).
+//! The run-to-completion decode path has a fixed batch dimension and a single
+//! shared cache_len, so a batch must have uniform prompt length.  Pending
+//! requests are indexed by prompt length (one FCFS queue per bucket), and
+//! `next_batch` releases the fullest bucket — except that a bucket passed
+//! over `max_skips` times is released first, so a rare-length request can
+//! never starve behind a popular bucket.  Each entry carries its enqueue
+//! time so the server can report per-request queue wait.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Instant;
 
 use super::request::GenRequest;
 
+/// A queued request plus its enqueue timestamp (for queue-wait metrics).
+#[derive(Debug, Clone)]
+pub struct Pending {
+    pub req: GenRequest,
+    pub enqueued: Instant,
+    /// arrival order, monotonically increasing across all buckets
+    pub seq: u64,
+}
+
 pub struct Batcher {
-    pending: VecDeque<GenRequest>,
+    /// prompt length → FCFS queue (BTreeMap for deterministic iteration)
+    buckets: BTreeMap<usize, VecDeque<Pending>>,
+    /// prompt length → times this non-empty bucket was passed over
+    skips: BTreeMap<usize, u32>,
+    count: usize,
+    next_seq: u64,
     pub max_batch: usize,
+    /// a bucket skipped this many times is dispatched before fuller buckets
+    pub max_skips: u32,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize) -> Self {
-        Self { pending: VecDeque::new(), max_batch }
+        Self {
+            buckets: BTreeMap::new(),
+            skips: BTreeMap::new(),
+            count: 0,
+            next_seq: 0,
+            max_batch,
+            max_skips: 4,
+        }
     }
 
     pub fn push(&mut self, req: GenRequest) {
-        self.pending.push_back(req);
+        self.push_at(req, Instant::now());
+    }
+
+    /// Push with an explicit enqueue time (tests, replayed traces).
+    pub fn push_at(&mut self, req: GenRequest, enqueued: Instant) {
+        let len = req.prompt.len();
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.buckets.entry(len).or_default().push_back(Pending { req, enqueued, seq });
+        self.skips.entry(len).or_insert(0);
+        self.count += 1;
     }
 
     pub fn len(&self) -> usize {
-        self.pending.len()
+        self.count
     }
 
     pub fn is_empty(&self) -> bool {
-        self.pending.is_empty()
+        self.count == 0
     }
 
-    /// Pop the next batch: all requests sharing the prompt length of the
-    /// *oldest* pending request (FCFS head-of-line), up to max_batch.
-    pub fn next_batch(&mut self) -> Vec<GenRequest> {
-        let Some(head) = self.pending.front() else {
-            return Vec::new();
-        };
-        let want = head.prompt.len();
-        let mut batch = Vec::with_capacity(self.max_batch);
-        let mut rest = VecDeque::with_capacity(self.pending.len());
-        while let Some(r) = self.pending.pop_front() {
-            if r.prompt.len() == want && batch.len() < self.max_batch {
-                batch.push(r);
-            } else {
-                rest.push_back(r);
+    /// Choose the bucket to dispatch: any bucket skipped `max_skips` times
+    /// wins (oldest head first among those); otherwise the fullest bucket
+    /// (oldest head breaks ties).
+    fn pick_bucket(&self) -> Option<usize> {
+        let mut starving: Option<(u64, usize)> = None; // (head seq, len)
+        let mut fullest: Option<(usize, u64, usize)> = None; // (size, head seq, len)
+        for (&len, q) in &self.buckets {
+            let Some(front) = q.front() else {
+                continue; // unreachable: buckets are pruned when emptied
+            };
+            let head_seq = front.seq;
+            let skips = self.skips.get(&len).copied().unwrap_or(0);
+            if skips >= self.max_skips {
+                match starving {
+                    Some((s, _)) if s <= head_seq => {}
+                    _ => starving = Some((head_seq, len)),
+                }
+            }
+            let better = match fullest {
+                None => true,
+                Some((sz, hs, _)) => q.len() > sz || (q.len() == sz && head_seq < hs),
+            };
+            if better {
+                fullest = Some((q.len(), head_seq, len));
             }
         }
-        self.pending = rest;
+        starving.map(|(_, len)| len).or(fullest.map(|(_, _, len)| len))
+    }
+
+    /// Pop the next uniform-length batch (up to max_batch, FCFS within the
+    /// bucket), and age every bucket that was passed over.
+    pub fn next_batch(&mut self) -> Vec<Pending> {
+        let Some(want) = self.pick_bucket() else {
+            return Vec::new();
+        };
+        let mut batch = Vec::with_capacity(self.max_batch);
+        if let Some(q) = self.buckets.get_mut(&want) {
+            while batch.len() < self.max_batch {
+                match q.pop_front() {
+                    Some(p) => batch.push(p),
+                    None => break,
+                }
+            }
+            if q.is_empty() {
+                self.buckets.remove(&want);
+                self.skips.remove(&want);
+            } else {
+                self.skips.insert(want, 0);
+            }
+        }
+        self.count -= batch.len();
+        for (&len, s) in self.skips.iter_mut() {
+            if len != want {
+                *s += 1;
+            }
+        }
         batch
     }
 }
@@ -60,16 +136,18 @@ mod tests {
         GenRequest { id, prompt: vec![5; len], max_new: 4 }
     }
 
+    fn ids(batch: &[Pending]) -> Vec<u64> {
+        batch.iter().map(|p| p.req.id).collect()
+    }
+
     #[test]
-    fn batches_by_head_length_fcfs() {
+    fn fullest_bucket_first_fcfs_within() {
         let mut b = Batcher::new(4);
         for (id, len) in [(1, 8), (2, 16), (3, 8), (4, 8), (5, 16)] {
             b.push(req(id, len));
         }
-        let first = b.next_batch();
-        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
-        let second = b.next_batch();
-        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 5]);
+        assert_eq!(ids(&b.next_batch()), vec![1, 3, 4]); // bucket 8 is fullest
+        assert_eq!(ids(&b.next_batch()), vec![2, 5]);
         assert!(b.is_empty());
     }
 
@@ -88,5 +166,46 @@ mod tests {
     fn empty_gives_empty() {
         let mut b = Batcher::new(4);
         assert!(b.next_batch().is_empty());
+    }
+
+    #[test]
+    fn rare_length_cannot_starve() {
+        let mut b = Batcher::new(2);
+        b.push(req(99, 16)); // lone rare-length request
+        let mut next_id = 0;
+        for _ in 0..2 {
+            b.push(req(next_id, 8));
+            next_id += 1;
+            b.push(req(next_id, 8));
+            next_id += 1;
+        }
+        let mut dispatches_before_rare = 0;
+        loop {
+            // keep the popular bucket replenished, like a hot serving queue
+            b.push(req(next_id, 8));
+            next_id += 1;
+            b.push(req(next_id, 8));
+            next_id += 1;
+            let batch = b.next_batch();
+            if batch.iter().any(|p| p.req.id == 99) {
+                break;
+            }
+            dispatches_before_rare += 1;
+            assert!(
+                dispatches_before_rare <= b.max_skips as usize + 1,
+                "rare-length request starved for {dispatches_before_rare} dispatches"
+            );
+        }
+    }
+
+    #[test]
+    fn queue_wait_recorded() {
+        let mut b = Batcher::new(4);
+        let t0 = Instant::now();
+        b.push_at(req(1, 8), t0);
+        let batch = b.next_batch();
+        assert_eq!(batch.len(), 1);
+        assert!(batch[0].enqueued.elapsed().as_secs_f64() >= 0.0);
+        assert_eq!(batch[0].seq, 0);
     }
 }

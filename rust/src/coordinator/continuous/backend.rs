@@ -1,0 +1,320 @@
+//! Backend abstraction for the serving engines.
+//!
+//! Both the run-to-completion baseline and the continuous-batching engine
+//! drive generation through [`DecodeBackend`]: prefill a set of slots (mixed
+//! prompt lengths allowed — rows attend only within themselves), then decode
+//! per length-group.  [`ModelBackend`] implements it over the real AOT
+//! executables; `sim::SimBackend` implements it host-side so scheduling
+//! logic, cache lifecycle, and parity can be tested without artifacts.
+//!
+//! The decode executable takes ONE shared `cache_len`, so a decode call
+//! serves the group of rows currently at that length.  The graph writes K/V
+//! at position `cache_len` of EVERY row; [`crate::coordinator::KvCache`]
+//! `append_rows` copies back only the rows that own that position, which is
+//! what makes mixed-length slots safe on a fixed-geometry executable.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::kvcache::KvCache;
+use crate::coordinator::request::{GenRequest, GenResponse};
+use crate::model::{Model, QuantMode};
+use crate::runtime::Value;
+use crate::tensor::IntTensor;
+
+/// Greedy sampling: index of the largest logit.
+pub fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// One prefill assignment: request → cache slot.
+pub struct PrefillJob<'a> {
+    pub slot: usize,
+    pub req: &'a GenRequest,
+}
+
+/// Prefill result for one slot.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    pub slot: usize,
+    /// greedy token at the last prompt position
+    pub first_token: i32,
+    /// materialized sinks (prefix + in-prompt) for the decode path
+    pub n_sinks: i32,
+}
+
+/// A decode step for all rows currently at the same cache length.
+#[derive(Debug, Clone)]
+pub struct DecodeGroup {
+    /// shared cache length of the group's rows
+    pub len: usize,
+    pub rows: Vec<usize>,
+    /// last generated token per row (aligned with `rows`)
+    pub tokens: Vec<i32>,
+    /// materialized sink count per row (aligned with `rows`)
+    pub n_sinks: Vec<i32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    pub row: usize,
+    pub next_token: i32,
+    pub n_sinks: i32,
+}
+
+/// What an engine needs from a model to serve generation requests.
+pub trait DecodeBackend {
+    /// Batch rows (= cache slots) of the fixed-geometry executables.
+    fn batch_slots(&self) -> usize;
+    /// Longest tokenized prompt incl. BOS the prefill pass accepts.
+    fn max_prompt_tokens(&self) -> usize;
+    /// Positions per cache row (incl. prefix).
+    fn cache_capacity(&self) -> usize;
+    /// Fresh cache with the shared prefixed K/V installed in every row.
+    fn new_cache(&self) -> Result<KvCache>;
+    /// Prefill `jobs` (mixed prompt lengths allowed) in one pass: write each
+    /// row's prompt K/V into its slot and return the first greedy token.
+    fn prefill(&self, kv: &mut KvCache, jobs: &[PrefillJob]) -> Result<Vec<PrefillOut>>;
+    /// One decode step for a same-length group of rows.
+    fn decode(&self, kv: &mut KvCache, group: &DecodeGroup) -> Result<Vec<DecodeOut>>;
+}
+
+/// [`DecodeBackend`] over the real model executables (prefill runs the
+/// mode-selected forward; decode always runs the static executable, as in the
+/// original scheduler).
+pub struct ModelBackend<'a> {
+    pub model: &'a Model,
+    pub mode: QuantMode,
+    pub bos: i32,
+    pub pad: i32,
+    b_exec: usize,
+    s_exec: usize,
+}
+
+impl<'a> ModelBackend<'a> {
+    pub fn new(model: &'a Model, mode: QuantMode, bos: i32, pad: i32) -> Result<Self> {
+        let (b_exec, s_exec) = model.fwd_geom()?;
+        Ok(Self { model, mode, bos, pad, b_exec, s_exec })
+    }
+}
+
+impl<'a> DecodeBackend for ModelBackend<'a> {
+    fn batch_slots(&self) -> usize {
+        self.b_exec
+    }
+
+    fn max_prompt_tokens(&self) -> usize {
+        self.s_exec
+    }
+
+    fn cache_capacity(&self) -> usize {
+        self.model.cfg.cache_max
+    }
+
+    fn new_cache(&self) -> Result<KvCache> {
+        let mut kv = KvCache::new(&self.model.cfg, self.b_exec);
+        kv.install_prefix(&self.model.prefix)?;
+        Ok(kv)
+    }
+
+    fn prefill(&self, kv: &mut KvCache, jobs: &[PrefillJob]) -> Result<Vec<PrefillOut>> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if jobs.len() > self.b_exec {
+            bail!("prefill wave {} exceeds executable batch {}", jobs.len(), self.b_exec);
+        }
+        for j in jobs {
+            let plen = j.req.prompt.len() + 1; // +BOS
+            if plen > self.s_exec {
+                bail!("prompt length {plen} exceeds executable seq {}", self.s_exec);
+            }
+            if kv.n_prefix + plen > kv.s_max {
+                bail!("prompt length {plen} exceeds cache capacity {}", kv.s_max);
+            }
+        }
+        // [B, S] token batch: each row BOS + prompt + pad; spare rows
+        // replicate the last job (rows attend only within themselves, so
+        // filler rows cannot perturb real rows).
+        let mut data = Vec::with_capacity(self.b_exec * self.s_exec);
+        for row in 0..self.b_exec {
+            let j = &jobs[row.min(jobs.len() - 1)];
+            data.push(self.bos);
+            data.extend_from_slice(&j.req.prompt);
+            data.resize((row + 1) * self.s_exec, self.pad);
+        }
+        let tokens = IntTensor::new(vec![self.b_exec, self.s_exec], data)?;
+        let sig = self.model.exec(self.mode.fwd_exec())?;
+        let outs = self.model.forward(self.mode, &tokens)?;
+        let logits = outs[sig.output_index("logits")?].clone().f32()?;
+        let k_cache = outs[sig.output_index("k_cache")?].clone().f32()?;
+        let v_cache = outs[sig.output_index("v_cache")?].clone().f32()?;
+        let active = outs[sig.output_index("active")?].clone().f32()?;
+
+        let v_dim = logits.shape[2];
+        let mut results = Vec::with_capacity(jobs.len());
+        for (i, j) in jobs.iter().enumerate() {
+            let plen = j.req.prompt.len() + 1;
+            kv.write_prefill_row(j.slot, &k_cache, &v_cache, i, plen)?;
+            let off = (i * self.s_exec + plen - 1) * v_dim;
+            let first_token = argmax(&logits.data[off..off + v_dim]);
+            let in_prompt: f32 =
+                active.data[i * self.s_exec..i * self.s_exec + plen].iter().sum();
+            results.push(PrefillOut {
+                slot: j.slot,
+                first_token,
+                n_sinks: self.model.prefix.n_ctx_sinks + in_prompt as i32,
+            });
+        }
+        Ok(results)
+    }
+
+    fn decode(&self, kv: &mut KvCache, group: &DecodeGroup) -> Result<Vec<DecodeOut>> {
+        if group.rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let b = kv.batch;
+        let mut toks = vec![self.pad; b];
+        let mut sinks = vec![0i32; b];
+        for (i, &row) in group.rows.iter().enumerate() {
+            toks[row] = group.tokens[i];
+            sinks[row] = group.n_sinks[i];
+        }
+        let dsig = self.model.exec("decode_static")?;
+        let toks_t = IntTensor::new(vec![b, 1], toks)?;
+        let cache_len = IntTensor::scalar(group.len as i32);
+        let sinks_t = IntTensor::new(vec![b], sinks)?;
+        let inputs = self.model.bind(
+            &dsig,
+            &[
+                ("tokens", Value::I32(&toks_t)),
+                ("cache_len", Value::I32(&cache_len)),
+                ("n_sinks", Value::I32(&sinks_t)),
+                ("k_cache", Value::F32(&kv.k)),
+                ("v_cache", Value::F32(&kv.v)),
+            ],
+        )?;
+        let outs = self.model.engine.run(&dsig, &inputs)?;
+        let logits = outs[dsig.output_index("logits")?].clone().f32()?;
+        let new_k = outs[dsig.output_index("k_cache")?].clone().f32()?;
+        let new_v = outs[dsig.output_index("v_cache")?].clone().f32()?;
+        let new_sinks = outs[dsig.output_index("n_sinks")?].clone().i32()?;
+        if group.rows.len() == b {
+            // whole batch advanced together: adopt the output wholesale
+            kv.adopt(new_k, new_v)?;
+        } else {
+            kv.append_rows(&new_k, &new_v, &group.rows, group.len)?;
+        }
+        let v_dim = logits.data.len() / b;
+        Ok(group
+            .rows
+            .iter()
+            .map(|&row| {
+                let off = row * v_dim;
+                DecodeOut {
+                    row,
+                    next_token: argmax(&logits.data[off..off + v_dim]),
+                    n_sinks: new_sinks.data[row],
+                }
+            })
+            .collect())
+    }
+}
+
+/// Run a wave of requests to completion (the baseline scheduling policy):
+/// prefill everything at once, decode until every row has its tokens, no
+/// mid-flight admission.  Mixed prompt lengths and mixed `max_new` are
+/// handled via per-length-group decode calls; a row stops as soon as it has
+/// `max_new` tokens (identical streams to decoding longer and truncating).
+pub fn run_to_completion<B: DecodeBackend>(be: &B, reqs: &[GenRequest]) -> Result<Vec<GenResponse>> {
+    if reqs.is_empty() {
+        return Ok(Vec::new());
+    }
+    if reqs.len() > be.batch_slots() {
+        bail!("batch {} exceeds executable batch {}", reqs.len(), be.batch_slots());
+    }
+    let t0 = Instant::now();
+    let mut kv = be.new_cache()?;
+    let jobs: Vec<PrefillJob> =
+        reqs.iter().enumerate().map(|(i, req)| PrefillJob { slot: i, req }).collect();
+    let pre = be.prefill(&mut kv, &jobs)?;
+    let ttft = t0.elapsed().as_secs_f64();
+
+    let n = reqs.len();
+    let mut tokens: Vec<Vec<i32>> = vec![Vec::new(); n];
+    let mut next = vec![0i32; n];
+    let mut sinks = vec![0i32; n];
+    let mut done = vec![false; n];
+    let mut total = vec![ttft; n];
+    for o in pre {
+        next[o.slot] = o.first_token;
+        sinks[o.slot] = o.n_sinks;
+        tokens[o.slot].push(o.first_token);
+    }
+    for i in 0..n {
+        if tokens[i].len() >= reqs[i].max_new {
+            done[i] = true;
+        }
+    }
+
+    loop {
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        let now = t0.elapsed().as_secs_f64();
+        for i in 0..n {
+            if done[i] {
+                continue;
+            }
+            let len = kv.row_len(i);
+            if len >= kv.s_max {
+                done[i] = true; // cache full: stop with what we have
+                total[i] = now;
+                continue;
+            }
+            groups.entry(len).or_default().push(i);
+        }
+        if groups.is_empty() {
+            break;
+        }
+        for (len, rows) in groups {
+            let group = DecodeGroup {
+                len,
+                tokens: rows.iter().map(|&r| next[r]).collect(),
+                n_sinks: rows.iter().map(|&r| sinks[r]).collect(),
+                rows,
+            };
+            for o in be.decode(&mut kv, &group)? {
+                next[o.row] = o.next_token;
+                sinks[o.row] = o.n_sinks;
+                tokens[o.row].push(o.next_token);
+                if tokens[o.row].len() >= reqs[o.row].max_new {
+                    done[o.row] = true;
+                    total[o.row] = t0.elapsed().as_secs_f64();
+                }
+            }
+        }
+    }
+
+    Ok(reqs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut toks = std::mem::take(&mut tokens[i]);
+            toks.truncate(r.max_new);
+            GenResponse {
+                id: r.id,
+                tokens: toks,
+                ttft_s: ttft,
+                total_s: total[i].max(ttft),
+                queue_s: 0.0,
+            }
+        })
+        .collect())
+}

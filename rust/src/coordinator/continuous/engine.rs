@@ -1,0 +1,356 @@
+//! Continuous-batching engine: a persistent decode loop over a slot table.
+//!
+//! Slot state machine (see rust/DESIGN.md; "prefilling" is transient inside
+//! one admission wave and never observable — see [`SlotPhase`]):
+//!
+//!   Empty ──admit (prefill+install)──▶ Decoding ──max_new / cache full──▶ Done
+//!     ▲                                                                    │
+//!     └──────────────── reset_slot (zero + keep prefix) ◀──────────────────┘
+//!
+//! Between decode rounds the engine admits pending requests into free slots:
+//! one prefill pass serves a whole admission wave (mixed prompt lengths are
+//! fine — rows attend only within themselves), and the shared prefixed K/V
+//! is already resident in every slot, so admission never recomputes it (the
+//! paper's invariant is what makes mid-flight admission cheap).  Completed
+//! slots retire immediately and their tokens stream to the client as they
+//! are produced, so short requests are never held hostage by long ones.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::kvcache::KvCache;
+use crate::coordinator::request::{GenRequest, GenResponse, Metrics, Reply, StreamEvent};
+
+use super::backend::{DecodeBackend, DecodeGroup, PrefillJob};
+
+/// Observable lifecycle phase of a slot.  The engine is single-threaded, so
+/// the transient phases can never be observed from outside: prefill happens
+/// synchronously inside an admission wave, and a slot that reaches its
+/// budget is retired (back to Empty) within the same `step()` call.
+/// [`ContinuousEngine::phases`] therefore only ever reports Empty or
+/// Decoding; Done names the terminal state of the machine in rust/DESIGN.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotPhase {
+    Empty,
+    Decoding,
+    Done,
+}
+
+struct Active {
+    id: u64,
+    max_new: usize,
+    tokens: Vec<i32>,
+    next_token: i32,
+    n_sinks: i32,
+    reply: Reply,
+    submitted: Instant,
+    queue_s: f64,
+    ttft_s: f64,
+}
+
+/// Counters the engine accumulates while serving.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub admitted: usize,
+    pub completed: usize,
+    /// requests dropped at admission (prompt too long for the geometry)
+    pub rejected: usize,
+    pub prefill_calls: usize,
+    /// decode executions (one per length-group per round)
+    pub decode_calls: usize,
+    /// decode rounds (one per step with any active slot)
+    pub decode_rounds: usize,
+    /// requests admitted while at least one other slot was mid-decode
+    pub mid_decode_admissions: usize,
+    pub generated_tokens: usize,
+    pub prefill_tokens: usize,
+    pub sum_ttft_s: f64,
+    pub sum_queue_s: f64,
+    pub sum_total_s: f64,
+    pub t_prefill_s: f64,
+    pub t_decode_s: f64,
+}
+
+pub struct ContinuousEngine<B: DecodeBackend> {
+    backend: B,
+    kv: KvCache,
+    slots: Vec<Option<Active>>,
+    pending: VecDeque<(GenRequest, Reply, Instant)>,
+    pub stats: EngineStats,
+}
+
+impl<B: DecodeBackend> ContinuousEngine<B> {
+    pub fn new(backend: B) -> Result<Self> {
+        let kv = backend.new_cache()?;
+        if kv.batch != backend.batch_slots() {
+            bail!("backend cache batch {} != slots {}", kv.batch, backend.batch_slots());
+        }
+        let slots = (0..backend.batch_slots()).map(|_| None).collect();
+        Ok(Self { backend, kv, slots, pending: VecDeque::new(), stats: EngineStats::default() })
+    }
+
+    /// Queue a request; its output goes to `reply`.  `submitted` anchors the
+    /// queue-wait / TTFT clocks (pass the time the client handed it over).
+    pub fn submit(&mut self, req: GenRequest, reply: Reply, submitted: Instant) {
+        self.pending.push_back((req, reply, submitted));
+    }
+
+    /// Queue a request and stream its tokens over a fresh channel.
+    pub fn submit_stream(&mut self, req: GenRequest) -> Receiver<StreamEvent> {
+        let (tx, rx) = channel();
+        self.submit(req, Reply::Stream(tx), Instant::now());
+        rx
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || self.slots.iter().any(|s| s.is_some())
+    }
+
+    pub fn phases(&self) -> Vec<SlotPhase> {
+        self.slots
+            .iter()
+            .map(|s| if s.is_some() { SlotPhase::Decoding } else { SlotPhase::Empty })
+            .collect()
+    }
+
+    /// Retire slot `i`: deliver the response, zero the row, free the slot.
+    fn finish(&mut self, i: usize) -> Result<()> {
+        let Some(a) = self.slots[i].take() else {
+            return Ok(());
+        };
+        let total_s = a.submitted.elapsed().as_secs_f64();
+        self.stats.completed += 1;
+        self.stats.sum_total_s += total_s;
+        let resp = GenResponse {
+            id: a.id,
+            tokens: a.tokens,
+            ttft_s: a.ttft_s,
+            total_s,
+            queue_s: a.queue_s,
+        };
+        a.reply.done(resp);
+        self.kv.reset_slot(i)?;
+        Ok(())
+    }
+
+    /// Admit pending requests into free slots (one prefill pass per wave).
+    fn admit(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let decoding_before = self.slots.iter().any(|s| s.is_some());
+        let mut free: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].is_none()).collect();
+        if free.is_empty() {
+            return Ok(());
+        }
+        free.reverse(); // pop() hands out the lowest slot first
+
+        let wave_start = Instant::now();
+        let mut wave: Vec<(usize, GenRequest, Reply, Instant)> = Vec::new();
+        while let Some(&slot) = free.last() {
+            let Some((req, reply, submitted)) = self.pending.pop_front() else {
+                break;
+            };
+            let plen = req.prompt.len() + 1; // +BOS
+            if plen > self.backend.max_prompt_tokens()
+                || self.kv.n_prefix + plen > self.backend.cache_capacity()
+            {
+                self.stats.rejected += 1;
+                reply.error(format!(
+                    "prompt of {} tokens exceeds serving geometry (max prompt {}, cache {})",
+                    plen,
+                    self.backend.max_prompt_tokens(),
+                    self.backend.cache_capacity()
+                ));
+                continue; // slot stays free for the next candidate
+            }
+            free.pop();
+            wave.push((slot, req, reply, submitted));
+        }
+        if wave.is_empty() {
+            return Ok(());
+        }
+
+        let jobs: Vec<PrefillJob> =
+            wave.iter().map(|(slot, req, _, _)| PrefillJob { slot: *slot, req }).collect();
+        let pre = match self.backend.prefill(&mut self.kv, &jobs) {
+            Ok(p) => p,
+            Err(e) => {
+                for (_, _, reply, _) in &wave {
+                    reply.error(format!("prefill failed: {e:#}"));
+                }
+                return Err(e);
+            }
+        };
+        drop(jobs);
+        let t_prefill = wave_start.elapsed().as_secs_f64();
+        self.stats.prefill_calls += 1;
+        self.stats.t_prefill_s += t_prefill;
+        self.stats.admitted += wave.len();
+        if decoding_before {
+            self.stats.mid_decode_admissions += wave.len();
+        }
+
+        let mut first = BTreeMap::new();
+        for o in pre {
+            first.insert(o.slot, (o.first_token, o.n_sinks));
+        }
+        // a backend returning outputs for the wrong slots is a contract
+        // violation; error the whole wave so no client is left on a channel
+        // that closes without a terminal event
+        if wave.iter().any(|(slot, _, _, _)| !first.contains_key(slot)) {
+            let msg = "backend prefill returned no output for an admitted slot";
+            for (_, _, reply, _) in &wave {
+                reply.error(msg.to_string());
+            }
+            bail!(msg);
+        }
+        let mut finished: Vec<usize> = Vec::new();
+        for (slot, req, reply, submitted) in wave {
+            let queue_s = wave_start.saturating_duration_since(submitted).as_secs_f64();
+            let ttft_s = submitted.elapsed().as_secs_f64();
+            let (first_token, n_sinks) = first[&slot];
+            self.stats.prefill_tokens += req.prompt.len() + 1;
+            self.stats.sum_queue_s += queue_s;
+            // TTFT is recorded for every admitted request (prefill completion
+            // even when max_new == 0) so its sum pairs with stats.admitted
+            self.stats.sum_ttft_s += ttft_s;
+            let mut tokens = Vec::new();
+            if req.max_new > 0 {
+                tokens.push(first_token);
+                self.stats.generated_tokens += 1;
+                reply.token(first_token);
+            }
+            let done = tokens.len() >= req.max_new;
+            self.slots[slot] = Some(Active {
+                id: req.id,
+                max_new: req.max_new,
+                tokens,
+                next_token: first_token,
+                n_sinks,
+                reply,
+                submitted,
+                queue_s,
+                ttft_s,
+            });
+            if done {
+                finished.push(slot);
+            }
+        }
+        for slot in finished {
+            self.finish(slot)?;
+        }
+        Ok(())
+    }
+
+    /// One engine step: admit into free slots, then run one decode round
+    /// (one backend call per length-group), retiring slots as they complete.
+    /// Returns whether any work remains.
+    pub fn step(&mut self) -> Result<bool> {
+        self.admit()?;
+
+        // Collect rows that can no longer grow (cache full) and retire them.
+        let full: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| self.slots[i].is_some() && self.kv.row_len(i) >= self.kv.s_max)
+            .collect();
+        for i in full {
+            self.finish(i)?;
+        }
+
+        // Group the decoding slots by their current cache length.
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_some() {
+                groups.entry(self.kv.row_len(i)).or_default().push(i);
+            }
+        }
+        if groups.is_empty() {
+            return Ok(self.has_work());
+        }
+        self.stats.decode_rounds += 1;
+
+        for (len, rows) in groups {
+            let t0 = Instant::now();
+            let group = DecodeGroup {
+                len,
+                tokens: rows
+                    .iter()
+                    .map(|&r| self.slots[r].as_ref().map(|a| a.next_token).unwrap_or(0))
+                    .collect(),
+                n_sinks: rows
+                    .iter()
+                    .map(|&r| self.slots[r].as_ref().map(|a| a.n_sinks).unwrap_or(0))
+                    .collect(),
+                rows,
+            };
+            let outs = self.backend.decode(&mut self.kv, &group)?;
+            self.stats.decode_calls += 1;
+            self.stats.t_decode_s += t0.elapsed().as_secs_f64();
+
+            let mut finished: Vec<usize> = Vec::new();
+            for o in outs {
+                let Some(a) = self.slots[o.row].as_mut() else {
+                    continue;
+                };
+                a.next_token = o.next_token;
+                a.n_sinks = o.n_sinks;
+                a.tokens.push(o.next_token);
+                a.reply.token(o.next_token);
+                self.stats.generated_tokens += 1;
+                if a.tokens.len() >= a.max_new {
+                    finished.push(o.row);
+                }
+            }
+            for row in finished {
+                self.finish(row)?;
+            }
+        }
+        Ok(self.has_work())
+    }
+
+    /// Drive the engine until every submitted request has completed.
+    pub fn run_to_idle(&mut self) -> Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+
+    /// Abort everything in flight: every busy slot and every pending request
+    /// gets an error reply, and the slot table is cleared.  Used by the
+    /// server when a backend execution fails mid-round.
+    pub fn fail_all(&mut self, msg: &str) {
+        for i in 0..self.slots.len() {
+            if let Some(a) = self.slots[i].take() {
+                a.reply.error(msg.to_string());
+                let _ = self.kv.reset_slot(i);
+            }
+        }
+        while let Some((_, reply, _)) = self.pending.pop_front() {
+            reply.error(msg.to_string());
+        }
+    }
+
+    /// Translate engine counters into the server's [`Metrics`] shape.
+    /// `requests` counts ADMITTED requests so it pairs with the TTFT and
+    /// queue-wait sums, which are both recorded at admission time (completed
+    /// would understate the denominator while slots are still decoding).
+    pub fn metrics(&self) -> Metrics {
+        Metrics {
+            requests: self.stats.admitted,
+            batches: self.stats.prefill_calls,
+            generated_tokens: self.stats.generated_tokens,
+            prefill_tokens: self.stats.prefill_tokens,
+            sum_ttft_s: self.stats.sum_ttft_s,
+            sum_queue_s: self.stats.sum_queue_s,
+            sum_prefill_s: self.stats.t_prefill_s,
+            sum_busy_s: self.stats.t_prefill_s + self.stats.t_decode_s,
+        }
+    }
+}

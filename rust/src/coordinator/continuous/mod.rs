@@ -1,0 +1,30 @@
+//! Continuous-batching serving engine with slot-based KV admission.
+//!
+//! The run-to-completion scheduler executes one batch end to end: a new
+//! request waits for the whole previous decode loop, and short requests are
+//! held hostage by the longest `max_new` in their batch.  PrefixQuant makes
+//! continuous batching unusually cheap: the prefixed-outlier K/V entries are
+//! computed once and are identical across sequences, so admitting a sequence
+//! mid-flight is just a prefill plus a copy into its cache slot — the shared
+//! prefix rows are already resident in every slot.
+//!
+//! Pieces:
+//! - [`backend`]: the [`backend::DecodeBackend`] trait (prefill a set of
+//!   slots, decode a same-length group), [`backend::ModelBackend`] over the
+//!   real executables, and [`backend::run_to_completion`] — the baseline
+//!   policy, generic over the backend so parity can be asserted.
+//! - [`engine`]: [`engine::ContinuousEngine`], the persistent decode loop
+//!   that owns the slot table, admits pending requests into free slots
+//!   between decode rounds, retires finished slots immediately, and streams
+//!   tokens per request as they are produced.
+//! - [`sim`]: a deterministic artifact-free backend whose next token is a
+//!   hash of the stored cache contents, turning stream parity into a cache
+//!   lifecycle correctness check (used by tests and the throughput bench).
+
+pub mod backend;
+pub mod engine;
+pub mod sim;
+
+pub use backend::{run_to_completion, DecodeBackend, ModelBackend};
+pub use engine::{ContinuousEngine, EngineStats, SlotPhase};
+pub use sim::SimBackend;

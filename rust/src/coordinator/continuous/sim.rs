@@ -1,0 +1,244 @@
+//! Deterministic simulation backend (no artifacts, no PJRT).
+//!
+//! `SimBackend` implements [`DecodeBackend`] host-side: prefill writes a
+//! value derived from (token, position) into every K/V entry of the slot,
+//! and the next token is a hash over the row's *stored cache contents* in
+//! [n_prefix, len).  Because generation reads back through the cache, any
+//! scheduling bug — wrong slot, wrong position, stale data leaking into a
+//! reused slot, a lost append — changes the emitted stream.  That makes
+//! stream parity between the continuous engine and the run-to-completion
+//! baseline a real cache-lifecycle correctness check, not a coincidence.
+//!
+//! Optional per-call busy-wait costs model the fixed-geometry executable
+//! economics (a prefill/decode call costs the same whatever rows are real),
+//! which is what the continuous-vs-batch throughput bench measures.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::coordinator::kvcache::KvCache;
+use crate::model::PrefixState;
+use crate::tensor::Tensor;
+
+use super::backend::{DecodeBackend, DecodeGroup, DecodeOut, PrefillJob, PrefillOut};
+
+/// Burn wall time without sleeping (sub-millisecond precision).
+fn spin(d: Duration) {
+    if d.is_zero() {
+        return;
+    }
+    let t = Instant::now();
+    while t.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+/// K/V storage value for `token` at cache position `pos` (small integers,
+/// exactly representable in f32 so the hash round-trips).
+fn kv_val(token: i32, pos: usize) -> f32 {
+    ((token as i64 * 31 + pos as i64 * 7 + 3).rem_euclid(997)) as f32
+}
+
+pub struct SimBackend {
+    pub cfg: ModelConfig,
+    pub prefix: PrefixState,
+    pub b_exec: usize,
+    pub s_exec: usize,
+    pub bos: i32,
+    /// simulated wall cost of one prefill execution (whole batch)
+    pub prefill_cost: Duration,
+    /// simulated wall cost of one decode execution (whole batch)
+    pub decode_cost: Duration,
+}
+
+impl SimBackend {
+    pub fn new(b_exec: usize, s_exec: usize, n_prefix: usize, cache_max: usize) -> Self {
+        let cfg = ModelConfig {
+            name: "sim".into(),
+            vocab_size: 271,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ff: 16,
+            o_model: n_prefix,
+            inject_amp: 1.0,
+            inject_delta: 0.1,
+            max_prefix: n_prefix.max(1),
+            train_seq: s_exec,
+            eval_seq: s_exec,
+            cache_max,
+            sites: vec!["down_in".into()],
+        };
+        let pshape = [cfg.n_layers, cfg.n_heads, cfg.max_prefix, cfg.d_head];
+        let prefix = PrefixState {
+            tokens: vec![49; n_prefix],
+            n_prefix: n_prefix as i32,
+            n_ctx_sinks: n_prefix as i32,
+            k: Tensor::full(&pshape, 41.5),
+            v: Tensor::full(&pshape, 41.5),
+        };
+        Self {
+            cfg,
+            prefix,
+            b_exec,
+            s_exec,
+            bos: 1,
+            prefill_cost: Duration::ZERO,
+            decode_cost: Duration::ZERO,
+        }
+    }
+
+    pub fn with_costs(mut self, prefill: Duration, decode: Duration) -> Self {
+        self.prefill_cost = prefill;
+        self.decode_cost = decode;
+        self
+    }
+
+    /// FNV-style hash over row `row`'s stored K AND V values in
+    /// [n_prefix, end), across every layer and head — so corruption anywhere
+    /// in the row (wrong layer offset, missed V write, stale reset) changes
+    /// the emitted stream, not just bugs on the (0, 0) plane.
+    fn row_hash(&self, kv: &KvCache, row: usize, end: usize) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for l in 0..kv.n_layers {
+            for hd in 0..kv.n_heads {
+                for s in kv.n_prefix..end {
+                    let off = kv.offset(l, row, hd, s);
+                    let a = kv.k.data[off] as i64 as u64;
+                    let b = kv.v.data[off] as i64 as u64;
+                    h = h.wrapping_mul(0x100000001b3).wrapping_add(a.wrapping_add(1));
+                    h = h.wrapping_mul(0x100000001b3).wrapping_add(b.wrapping_add(2));
+                }
+            }
+        }
+        h
+    }
+
+    fn next_from(&self, h: u64) -> i32 {
+        3 + (h % (self.cfg.vocab_size as u64 - 3)) as i32
+    }
+
+    fn is_sink(tok: i32) -> bool {
+        tok % 29 == 0
+    }
+
+    /// Write one token's K/V into `slot` at its current length.
+    fn write_token(&self, kv: &mut KvCache, slot: usize, token: i32) -> Result<()> {
+        let pos = kv.row_len(slot);
+        let val = kv_val(token, pos);
+        let shape = [self.cfg.n_layers, self.cfg.n_heads, self.cfg.d_head];
+        let t = Tensor::full(&shape, val);
+        kv.append_token_row(slot, &t, &t)
+    }
+}
+
+impl DecodeBackend for SimBackend {
+    fn batch_slots(&self) -> usize {
+        self.b_exec
+    }
+
+    fn max_prompt_tokens(&self) -> usize {
+        self.s_exec
+    }
+
+    fn cache_capacity(&self) -> usize {
+        self.cfg.cache_max
+    }
+
+    fn new_cache(&self) -> Result<KvCache> {
+        let mut kv = KvCache::new(&self.cfg, self.b_exec);
+        kv.install_prefix(&self.prefix)?;
+        Ok(kv)
+    }
+
+    fn prefill(&self, kv: &mut KvCache, jobs: &[PrefillJob]) -> Result<Vec<PrefillOut>> {
+        if jobs.len() > self.b_exec {
+            bail!("prefill wave {} exceeds batch {}", jobs.len(), self.b_exec);
+        }
+        spin(self.prefill_cost);
+        let mut outs = Vec::with_capacity(jobs.len());
+        for j in jobs {
+            let plen = j.req.prompt.len() + 1;
+            if plen > self.s_exec {
+                bail!("prompt length {plen} exceeds seq {}", self.s_exec);
+            }
+            if kv.row_len(j.slot) != kv.n_prefix {
+                bail!("prefill into dirty slot {} (len {})", j.slot, kv.row_len(j.slot));
+            }
+            let mut n_sinks = self.prefix.n_ctx_sinks;
+            self.write_token(kv, j.slot, self.bos)?;
+            if Self::is_sink(self.bos) {
+                n_sinks += 1;
+            }
+            for &tok in &j.req.prompt {
+                self.write_token(kv, j.slot, tok)?;
+                if Self::is_sink(tok) {
+                    n_sinks += 1;
+                }
+            }
+            let h = self.row_hash(kv, j.slot, kv.row_len(j.slot));
+            outs.push(PrefillOut { slot: j.slot, first_token: self.next_from(h), n_sinks });
+        }
+        Ok(outs)
+    }
+
+    fn decode(&self, kv: &mut KvCache, group: &DecodeGroup) -> Result<Vec<DecodeOut>> {
+        spin(self.decode_cost);
+        let mut outs = Vec::with_capacity(group.rows.len());
+        for (i, &row) in group.rows.iter().enumerate() {
+            if kv.row_len(row) != group.len {
+                bail!("decode group len {} but row {row} at {}", group.len, kv.row_len(row));
+            }
+            let tok = group.tokens[i];
+            self.write_token(kv, row, tok)?;
+            let h = self.row_hash(kv, row, kv.row_len(row));
+            let mut n_sinks = group.n_sinks[i];
+            if Self::is_sink(tok) {
+                n_sinks += 1;
+            }
+            outs.push(DecodeOut { row, next_token: self.next_from(h), n_sinks });
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::run_to_completion;
+    use super::*;
+    use crate::coordinator::request::GenRequest;
+
+    fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
+        GenRequest { id, prompt, max_new }
+    }
+
+    #[test]
+    fn deterministic_and_row_independent() {
+        let be = SimBackend::new(3, 16, 2, 48);
+        // same prompt in two rows of one batch → identical streams
+        let reqs =
+            vec![req(0, vec![5, 6, 7], 5), req(1, vec![5, 6, 7], 5), req(2, vec![9, 9], 5)];
+        let r = run_to_completion(&be, &reqs).unwrap();
+        assert_eq!(r[0].tokens, r[1].tokens);
+        assert_eq!(r[0].tokens.len(), 5);
+        // the same request alone → same stream (rows don't interact)
+        let solo = run_to_completion(&be, &[req(7, vec![9, 9], 5)]).unwrap();
+        assert_eq!(solo[0].tokens, r[2].tokens);
+        // different prompts diverge
+        assert_ne!(r[0].tokens, r[2].tokens);
+    }
+
+    #[test]
+    fn respects_max_new_and_cache_bounds() {
+        let be = SimBackend::new(2, 16, 1, 8);
+        // cache 8, prefix 1, prompt 3+BOS → 3 free positions: the stream
+        // stops when the row is full even though max_new asks for more
+        let r = run_to_completion(&be, &[req(0, vec![4, 5, 6], 50)]).unwrap();
+        assert!(r[0].tokens.len() < 50 && !r[0].tokens.is_empty());
+        let r0 = run_to_completion(&be, &[req(0, vec![4, 5, 6], 0)]).unwrap();
+        assert!(r0[0].tokens.is_empty());
+    }
+}

@@ -4,7 +4,14 @@
 //! installed into slots [0, n_prefix) of every sequence's cache — they are
 //! never recomputed, never evicted, and identical across sequences (the
 //! "prefixed outliers in the KV cache" of the title).  Prompt/decoded tokens
-//! occupy slots [n_prefix, cache_len).
+//! occupy positions [n_prefix, row_len(b)).
+//!
+//! Since the continuous-batching engine landed, the batch dimension is a SLOT
+//! TABLE: every row carries its own valid length (`lens`), rows are written
+//! and appended independently, and a retired row is zeroed (except the shared
+//! prefix) before reuse so a stale sequence can never leak into its
+//! successor.  The uniform-length helpers (`write_prefill`, `adopt`) remain
+//! for the run-to-completion path where every row advances in lock-step.
 
 use anyhow::{bail, Result};
 
@@ -21,8 +28,8 @@ pub struct KvCache {
     /// [L, B, H, Smax, dh] storage-domain tensors fed to decode_step
     pub k: Tensor,
     pub v: Tensor,
-    /// valid entries (incl. prefix slots); uniform across the batch
-    pub len: usize,
+    /// valid entries per row (incl. prefix slots)
+    lens: Vec<usize>,
     pub n_prefix: usize,
 }
 
@@ -37,22 +44,56 @@ impl KvCache {
             d_head: cfg.d_head,
             k: Tensor::zeros(&shape),
             v: Tensor::zeros(&shape),
-            len: 0,
+            lens: vec![0; batch],
             n_prefix: 0,
         }
     }
 
-    fn off(&self, l: usize, b: usize, h: usize, s: usize) -> usize {
+    /// Flat offset of position (l, b, h, s) — start of a d_head-long span.
+    pub fn offset(&self, l: usize, b: usize, h: usize, s: usize) -> usize {
         (((l * self.batch + b) * self.n_heads + h) * self.s_max + s) * self.d_head
     }
 
-    /// Install the shared prefix into slots [0, n_prefix) of every row.
+    /// Valid entries (incl. prefix) in row `b`.
+    pub fn row_len(&self, b: usize) -> usize {
+        self.lens[b]
+    }
+
+    pub fn lens(&self) -> &[usize] {
+        &self.lens
+    }
+
+    /// Largest valid length across rows.
+    pub fn max_len(&self) -> usize {
+        self.lens.iter().copied().max().unwrap_or(0)
+    }
+
+    /// The shared length if every row agrees (run-to-completion invariant).
+    pub fn uniform_len(&self) -> Option<usize> {
+        let l0 = self.lens.first().copied()?;
+        self.lens.iter().all(|&l| l == l0).then_some(l0)
+    }
+
+    /// Free positions in row `b`.
+    pub fn remaining_row(&self, b: usize) -> usize {
+        self.s_max - self.lens[b]
+    }
+
+    /// Free positions in the fullest row (conservative batch-wide headroom).
+    pub fn remaining(&self) -> usize {
+        self.s_max - self.max_len()
+    }
+
+    /// Install the shared prefix into positions [0, n_prefix) of every row.
     pub fn install_prefix(&mut self, p: &PrefixState) -> Result<()> {
         let n = p.n_prefix as usize;
         if n == 0 {
-            self.len = 0;
+            self.lens.fill(0);
             self.n_prefix = 0;
             return Ok(());
+        }
+        if n > self.s_max {
+            bail!("prefix {} exceeds cache capacity {}", n, self.s_max);
         }
         let pcap = p.k.shape[2]; // padded prefix capacity P
         let dh = self.d_head;
@@ -61,7 +102,7 @@ impl KvCache {
                 for h in 0..self.n_heads {
                     for s in 0..n {
                         let src = ((l * self.n_heads + h) * pcap + s) * dh;
-                        let dst = self.off(l, b, h, s);
+                        let dst = self.offset(l, b, h, s);
                         self.k.data[dst..dst + dh].copy_from_slice(&p.k.data[src..src + dh]);
                         self.v.data[dst..dst + dh].copy_from_slice(&p.v.data[src..src + dh]);
                     }
@@ -69,54 +110,175 @@ impl KvCache {
             }
         }
         self.n_prefix = n;
-        self.len = n;
+        self.lens.fill(n);
         Ok(())
     }
 
-    /// Write prefill K/V ([L, B, H, S, dh], quantized storage domain from the
-    /// prefill executable) for the first `prompt_len` positions of each row,
-    /// starting at slot n_prefix.  Sets len = n_prefix + prompt_len.
-    pub fn write_prefill(&mut self, k: &Tensor, v: &Tensor, prompt_len: usize) -> Result<()> {
-        let (l, b, h, s, dh) =
-            (k.shape[0], k.shape[1], k.shape[2], k.shape[3], k.shape[4]);
-        if l != self.n_layers || b != self.batch || h != self.n_heads || dh != self.d_head {
+    /// Copy row `src_row` of a prefill executable's K/V output ([L, Bsrc, H,
+    /// Ssrc, dh], storage domain) into slot `slot` for the first `prompt_len`
+    /// positions, starting right after the prefix.  Sets
+    /// row_len(slot) = n_prefix + prompt_len.
+    pub fn write_prefill_row(
+        &mut self,
+        slot: usize,
+        k: &Tensor,
+        v: &Tensor,
+        src_row: usize,
+        prompt_len: usize,
+    ) -> Result<()> {
+        if k.shape.len() != 5 || v.shape != k.shape {
+            bail!("prefill kv shape mismatch: {:?} vs {:?}", k.shape, v.shape);
+        }
+        let (l, b, h, s, dh) = (k.shape[0], k.shape[1], k.shape[2], k.shape[3], k.shape[4]);
+        if l != self.n_layers || h != self.n_heads || dh != self.d_head {
             bail!("prefill kv shape mismatch: {:?}", k.shape);
+        }
+        if slot >= self.batch || src_row >= b {
+            bail!("prefill row out of range: slot {slot}/{}, src {src_row}/{b}", self.batch);
+        }
+        if prompt_len > s {
+            bail!("prompt_len {prompt_len} exceeds prefill output seq {s}");
         }
         if self.n_prefix + prompt_len > self.s_max {
             bail!("prompt too long: {} + {} > {}", self.n_prefix, prompt_len, self.s_max);
         }
+        // clean-slot discipline keeps "positions ≥ row_len are zero" true,
+        // which is what lets reset_slot bound its memset to the used region
+        if self.lens[slot] != self.n_prefix {
+            bail!(
+                "prefill into dirty slot {slot} (len {}, prefix {}): reset_slot first",
+                self.lens[slot],
+                self.n_prefix
+            );
+        }
         for li in 0..l {
-            for bi in 0..b {
-                for hi in 0..h {
-                    for si in 0..prompt_len.min(s) {
-                        let src = (((li * b + bi) * h + hi) * s + si) * dh;
-                        let dst = self.off(li, bi, hi, self.n_prefix + si);
-                        self.k.data[dst..dst + dh].copy_from_slice(&k.data[src..src + dh]);
-                        self.v.data[dst..dst + dh].copy_from_slice(&v.data[src..src + dh]);
-                    }
+            for hi in 0..h {
+                for si in 0..prompt_len {
+                    let src = (((li * b + src_row) * h + hi) * s + si) * dh;
+                    let dst = self.offset(li, slot, hi, self.n_prefix + si);
+                    self.k.data[dst..dst + dh].copy_from_slice(&k.data[src..src + dh]);
+                    self.v.data[dst..dst + dh].copy_from_slice(&v.data[src..src + dh]);
                 }
             }
         }
-        self.len = self.n_prefix + prompt_len;
+        self.lens[slot] = self.n_prefix + prompt_len;
         Ok(())
     }
 
-    /// Adopt the decode executable's updated caches and bump len.
+    /// Uniform-batch prefill (run-to-completion path): write the first
+    /// `prompt_len` positions of every row from a [L, B, H, S, dh] output.
+    pub fn write_prefill(&mut self, k: &Tensor, v: &Tensor, prompt_len: usize) -> Result<()> {
+        if k.shape.len() != 5 || k.shape[1] != self.batch {
+            bail!("prefill kv shape mismatch: {:?}", k.shape);
+        }
+        for row in 0..self.batch {
+            // write_prefill_row rejects prompt_len > S / cache overflow
+            self.write_prefill_row(row, k, v, row, prompt_len)?;
+        }
+        Ok(())
+    }
+
+    /// Adopt the decode executable's updated caches wholesale and bump every
+    /// row (valid only when all rows advanced together, i.e. the decode step
+    /// ran with the whole batch at one shared cache_len).
     pub fn adopt(&mut self, k: Tensor, v: Tensor) -> Result<()> {
         if k.shape != self.k.shape || v.shape != self.v.shape {
             bail!("decode kv shape mismatch");
         }
-        if self.len + 1 > self.s_max {
-            bail!("cache overflow at len {}", self.len);
+        let Some(len) = self.uniform_len() else {
+            bail!("adopt requires uniform row lengths, got {:?}", self.lens);
+        };
+        if len + 1 > self.s_max {
+            bail!("cache overflow at len {len}");
         }
         self.k = k;
         self.v = v;
-        self.len += 1;
+        self.lens.fill(len + 1);
         Ok(())
     }
 
-    pub fn remaining(&self) -> usize {
-        self.s_max - self.len
+    /// Copy the newly-written position `len` of `rows` from a decode
+    /// executable's full-shape K/V output and bump those rows only.  Rows not
+    /// listed keep their previous contents (the decode graph scribbles at
+    /// position `len` of every row; only the listed rows own that position).
+    pub fn append_rows(&mut self, k: &Tensor, v: &Tensor, rows: &[usize], len: usize) -> Result<()> {
+        if k.shape != self.k.shape || v.shape != self.v.shape {
+            bail!("decode kv shape mismatch: {:?}", k.shape);
+        }
+        if len + 1 > self.s_max {
+            bail!("cache overflow at len {len}");
+        }
+        let dh = self.d_head;
+        for &row in rows {
+            if row >= self.batch {
+                bail!("append row {row} out of range");
+            }
+            if self.lens[row] != len {
+                bail!("append_rows: row {row} has len {}, group len {len}", self.lens[row]);
+            }
+            for l in 0..self.n_layers {
+                for h in 0..self.n_heads {
+                    let off = self.offset(l, row, h, len);
+                    self.k.data[off..off + dh].copy_from_slice(&k.data[off..off + dh]);
+                    self.v.data[off..off + dh].copy_from_slice(&v.data[off..off + dh]);
+                }
+            }
+            self.lens[row] = len + 1;
+        }
+        Ok(())
+    }
+
+    /// Append one token's K/V ([L, H, dh] values) to row `slot` at its
+    /// current length (host-computed backends, e.g. the simulation backend).
+    pub fn append_token_row(&mut self, slot: usize, k: &Tensor, v: &Tensor) -> Result<()> {
+        let want = [self.n_layers, self.n_heads, self.d_head];
+        if k.shape != want || v.shape != want {
+            bail!("append_token_row wants {:?}, got {:?}", want, k.shape);
+        }
+        if slot >= self.batch {
+            bail!("append slot {slot} out of range");
+        }
+        let len = self.lens[slot];
+        if len + 1 > self.s_max {
+            bail!("cache overflow at len {len}");
+        }
+        let dh = self.d_head;
+        for l in 0..self.n_layers {
+            for h in 0..self.n_heads {
+                let src = (l * self.n_heads + h) * dh;
+                let dst = self.offset(l, slot, h, len);
+                self.k.data[dst..dst + dh].copy_from_slice(&k.data[src..src + dh]);
+                self.v.data[dst..dst + dh].copy_from_slice(&v.data[src..src + dh]);
+            }
+        }
+        self.lens[slot] = len + 1;
+        Ok(())
+    }
+
+    /// Retire a slot: zero the row's occupied non-prefix positions and reset
+    /// its length to the prefix, so the next occupant starts from a clean row
+    /// and the shared prefix entries survive untouched.  Positions beyond the
+    /// occupied region are zero by construction (fresh caches are zeroed and
+    /// writes only ever advance `lens`), so only [n_prefix, row_len) needs
+    /// the memset — retirement cost scales with what the sequence used, not
+    /// with cache capacity.
+    pub fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        if slot >= self.batch {
+            bail!("reset slot {slot} out of range");
+        }
+        let used = self.lens[slot].min(self.s_max);
+        if self.n_prefix < used {
+            let span = (used - self.n_prefix) * self.d_head;
+            for l in 0..self.n_layers {
+                for h in 0..self.n_heads {
+                    let start = self.offset(l, slot, h, self.n_prefix);
+                    self.k.data[start..start + span].fill(0.0);
+                    self.v.data[start..start + span].fill(0.0);
+                }
+            }
+        }
+        self.lens[slot] = self.n_prefix;
+        Ok(())
     }
 }
 
@@ -164,13 +326,13 @@ mod tests {
         let c = cfg();
         let mut kv = KvCache::new(&c, 3);
         kv.install_prefix(&prefix(&c, 2)).unwrap();
-        assert_eq!(kv.len, 2);
+        assert_eq!(kv.lens(), &[2, 2, 2]);
         // row 0 and row 2 hold identical prefix entries
         for l in 0..c.n_layers {
             for h in 0..c.n_heads {
                 for s in 0..2 {
-                    let a = kv.off(l, 0, h, s);
-                    let b = kv.off(l, 2, h, s);
+                    let a = kv.offset(l, 0, h, s);
+                    let b = kv.offset(l, 2, h, s);
                     assert_eq!(kv.k.data[a..a + 4], kv.k.data[b..b + 4]);
                 }
             }
@@ -185,10 +347,10 @@ mod tests {
         let shape = [c.n_layers, 2, c.n_heads, 5, c.d_head];
         let k = Tensor::full(&shape, 7.0);
         kv.write_prefill(&k, &k, 5).unwrap();
-        assert_eq!(kv.len, 7);
-        let o = kv.off(0, 0, 0, 2);
+        assert_eq!(kv.uniform_len(), Some(7));
+        let o = kv.offset(0, 0, 0, 2);
         assert_eq!(kv.k.data[o], 7.0); // first prompt slot right after prefix
-        let o1 = kv.off(0, 0, 0, 1);
+        let o1 = kv.offset(0, 0, 0, 1);
         assert_ne!(kv.k.data[o1], 7.0); // prefix untouched
     }
 
@@ -199,6 +361,55 @@ mod tests {
         kv.install_prefix(&prefix(&c, 2)).unwrap();
         let shape = [c.n_layers, 1, c.n_heads, 20, c.d_head];
         let k = Tensor::zeros(&shape);
-        assert!(kv.write_prefill(&k, &k, 20).is_err());
+        assert!(kv.write_prefill_row(0, &k, &k, 0, 20).is_err());
+    }
+
+    #[test]
+    fn per_slot_write_and_reset() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c, 3);
+        kv.install_prefix(&prefix(&c, 2)).unwrap();
+        // write a 4-token prompt into slot 1 only, from source row 0
+        let shape = [c.n_layers, 1, c.n_heads, 4, c.d_head];
+        let k = Tensor::full(&shape, 9.0);
+        kv.write_prefill_row(1, &k, &k, 0, 4).unwrap();
+        assert_eq!(kv.lens(), &[2, 6, 2]);
+        // neighbours untouched
+        assert_eq!(kv.k.data[kv.offset(0, 0, 0, 2)], 0.0);
+        assert_eq!(kv.k.data[kv.offset(0, 2, 0, 2)], 0.0);
+        assert_eq!(kv.k.data[kv.offset(0, 1, 0, 2)], 9.0);
+
+        // append one decoded token
+        let step = Tensor::full(&[c.n_layers, c.n_heads, c.d_head], 3.0);
+        kv.append_token_row(1, &step, &step).unwrap();
+        assert_eq!(kv.row_len(1), 7);
+        assert_eq!(kv.k.data[kv.offset(0, 1, 0, 6)], 3.0);
+
+        // retire: non-prefix region zeroed, prefix survives
+        kv.reset_slot(1).unwrap();
+        assert_eq!(kv.row_len(1), 2);
+        for s in 2..kv.s_max {
+            let o = kv.offset(0, 1, 0, s);
+            assert_eq!(kv.k.data[o..o + c.d_head], [0.0; 4]);
+        }
+        let p = kv.offset(0, 1, 0, 1);
+        assert_eq!(kv.k.data[p], kv.k.data[kv.offset(0, 0, 0, 1)]); // prefix intact
+    }
+
+    #[test]
+    fn append_rows_updates_only_group() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c, 2);
+        kv.install_prefix(&prefix(&c, 2)).unwrap();
+        let shape = [c.n_layers, 2, c.n_heads, 3, c.d_head];
+        let k = Tensor::full(&shape, 1.0);
+        kv.write_prefill(&k, &k, 3).unwrap(); // both rows at len 5
+        let full = Tensor::full(&[c.n_layers, 2, c.n_heads, c.cache_max, c.d_head], 5.0);
+        kv.append_rows(&full.clone(), &full, &[0], 5).unwrap();
+        assert_eq!(kv.lens(), &[6, 5]);
+        assert_eq!(kv.k.data[kv.offset(0, 0, 0, 5)], 5.0);
+        assert_eq!(kv.k.data[kv.offset(0, 1, 0, 5)], 0.0); // row 1 untouched
+        // group-length mismatch rejected
+        assert!(kv.append_rows(&full.clone(), &full.clone(), &[0], 5).is_err());
     }
 }

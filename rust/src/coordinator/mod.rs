@@ -1,18 +1,28 @@
 //! L3 serving coordinator: dynamic batcher, prefill/decode scheduler,
-//! KV-cache manager with shared prefixed entries, thread-based server.
+//! KV-cache manager with shared prefixed entries, thread-based server, and
+//! the continuous-batching engine.
 //!
 //! The paper's serving claim (Table 5: static quantization gives 1.2-1.3×
 //! faster prefill than dynamic) is exercised here: the prefill path runs the
 //! static or dynamic executable, and the prefixed K/V entries are installed
-//! into every sequence's cache without recomputation.
+//! into every sequence's cache without recomputation.  Two scheduling
+//! policies share that machinery (see rust/DESIGN.md):
+//!
+//! - run-to-completion ([`scheduler::run_batch`]): one uniform batch end to
+//!   end — the baseline, kept for parity assertions;
+//! - continuous batching ([`continuous::ContinuousEngine`]): a persistent
+//!   decode loop over a slot table that admits requests mid-flight and
+//!   streams tokens as they are produced.
 
 pub mod batcher;
+pub mod continuous;
 pub mod kvcache;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
-pub use batcher::Batcher;
+pub use batcher::{Batcher, Pending};
+pub use continuous::{ContinuousEngine, ModelBackend, SimBackend};
 pub use kvcache::KvCache;
-pub use request::{GenRequest, GenResponse, Metrics};
-pub use server::{Server, ServerConfig};
+pub use request::{GenRequest, GenResponse, Metrics, Reply, StreamEvent};
+pub use server::{EngineKind, Server, ServerConfig};

@@ -1,4 +1,6 @@
-//! Request/response types for the serving coordinator.
+//! Request/response/streaming types for the serving coordinator.
+
+use std::sync::mpsc::Sender;
 
 /// A generation request (prompt already tokenized, no BOS — the scheduler
 /// prepends it so every sequence starts with the initial-position token).
@@ -14,38 +16,151 @@ pub struct GenResponse {
     pub id: u64,
     /// generated continuation tokens (prompt excluded)
     pub tokens: Vec<i32>,
-    /// time to first token (prefill) in seconds, shared across the batch
+    /// time to first token in seconds (queue wait + prefill for served paths;
+    /// prefill only when produced by a bare `run_batch` call)
     pub ttft_s: f64,
-    /// total latency for this request's batch
+    /// total latency for this request (same clock origin as `ttft_s`)
     pub total_s: f64,
+    /// time spent waiting before prefill started (submit → admission)
+    pub queue_s: f64,
 }
 
-/// Aggregate serving metrics (reported by the server / serve_batch example).
-#[derive(Debug, Clone, Default)]
-pub struct Metrics {
-    pub requests: usize,
-    pub batches: usize,
-    pub generated_tokens: usize,
-    pub prefill_tokens: usize,
-    pub sum_ttft_s: f64,
-    pub sum_batch_s: f64,
+/// Incremental output of a streaming generation request.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// One generated token, delivered as soon as it is produced.
+    Token(i32),
+    /// Terminal event: the full response (tokens repeated for convenience).
+    Done(GenResponse),
+    /// Terminal event: the request failed.
+    Error(String),
 }
 
-impl Metrics {
-    pub fn mean_ttft(&self) -> f64 {
-        if self.batches == 0 {
-            0.0
-        } else {
-            self.sum_ttft_s / self.batches as f64
+/// Where a request's output goes: a single aggregate response, or a stream of
+/// per-token events.  Send failures are ignored (client hung up).
+pub enum Reply {
+    Aggregate(Sender<Result<GenResponse, String>>),
+    Stream(Sender<StreamEvent>),
+}
+
+impl Reply {
+    pub fn token(&self, t: i32) {
+        if let Reply::Stream(tx) = self {
+            let _ = tx.send(StreamEvent::Token(t));
         }
     }
 
+    pub fn done(&self, resp: GenResponse) {
+        match self {
+            Reply::Aggregate(tx) => {
+                let _ = tx.send(Ok(resp));
+            }
+            Reply::Stream(tx) => {
+                let _ = tx.send(StreamEvent::Done(resp));
+            }
+        }
+    }
+
+    pub fn error(&self, msg: String) {
+        match self {
+            Reply::Aggregate(tx) => {
+                let _ = tx.send(Err(msg));
+            }
+            Reply::Stream(tx) => {
+                let _ = tx.send(StreamEvent::Error(msg));
+            }
+        }
+    }
+}
+
+/// Aggregate serving metrics (reported by the server / serve_batch example).
+///
+/// TTFT and queue-wait sums are PER REQUEST (every response is recorded);
+/// `sum_prefill_s`/`sum_busy_s` are per dispatch, so decode throughput can be
+/// computed as generated tokens over busy-minus-prefill wall time.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests: usize,
+    /// dispatches: run-to-completion batches, or admission waves (continuous)
+    pub batches: usize,
+    pub generated_tokens: usize,
+    pub prefill_tokens: usize,
+    /// per-request time-to-first-token (queue wait + prefill), summed
+    pub sum_ttft_s: f64,
+    /// per-request queue wait (submit → prefill start), summed
+    pub sum_queue_s: f64,
+    /// wall time spent inside prefill executions
+    pub sum_prefill_s: f64,
+    /// wall time the engine was busy (prefill + decode)
+    pub sum_busy_s: f64,
+}
+
+impl Metrics {
+    /// Mean per-request time-to-first-token (includes queue wait).
+    pub fn mean_ttft(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.sum_ttft_s / self.requests as f64
+        }
+    }
+
+    /// Mean per-request queue wait (submit → prefill start).
+    pub fn mean_queue_wait(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.sum_queue_s / self.requests as f64
+        }
+    }
+
+    /// Aggregate decode throughput over the time the engine spent decoding.
     pub fn decode_tps(&self) -> f64 {
-        let decode_time = self.sum_batch_s - self.sum_ttft_s;
+        let decode_time = self.sum_busy_s - self.sum_prefill_s;
         if decode_time <= 0.0 {
             0.0
         } else {
             self.generated_tokens as f64 / decode_time
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_are_per_request() {
+        let mut m = Metrics::default();
+        // one batch of 4 requests: ttft must average over requests, not batches
+        m.batches = 1;
+        m.requests = 4;
+        for _ in 0..4 {
+            m.sum_ttft_s += 0.010;
+            m.sum_queue_s += 0.002;
+        }
+        m.sum_prefill_s = 0.010;
+        m.sum_busy_s = 0.110;
+        m.generated_tokens = 50;
+        assert!((m.mean_ttft() - 0.010).abs() < 1e-12);
+        assert!((m.mean_queue_wait() - 0.002).abs() < 1e-12);
+        assert!((m.decode_tps() - 500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reply_routes_events() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let r = Reply::Stream(tx);
+        r.token(7);
+        let resp = GenResponse { id: 1, tokens: vec![7], ttft_s: 0.1, total_s: 0.2, queue_s: 0.0 };
+        r.done(resp);
+        assert!(matches!(rx.recv().unwrap(), StreamEvent::Token(7)));
+        assert!(matches!(rx.recv().unwrap(), StreamEvent::Done(_)));
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        let r = Reply::Aggregate(tx);
+        r.token(7); // aggregate replies ignore per-token events
+        r.error("boom".into());
+        assert_eq!(rx.recv().unwrap().unwrap_err(), "boom");
     }
 }

@@ -1,32 +1,28 @@
-//! Prefill/decode scheduler: executes one uniform-length batch end to end.
+//! Prefill/decode scheduler: the run-to-completion baseline policy.
 //!
-//! Prefill runs the full-forward executable (one pass for the whole prompt —
+//! Prefill runs the full-forward executable (one pass for the whole batch —
 //! TTFT, Table 5); its K/V outputs land in the KvCache after the shared
 //! prefixed entries; decode then iterates the decode_step executable with the
 //! cache round-tripping through the engine.
+//!
+//! Since the continuous-batching engine landed, the actual generation loop
+//! lives in [`continuous::run_to_completion`], generic over
+//! [`continuous::DecodeBackend`] — this module binds it to the real model.
+//! The policy is unchanged (whole wave prefilled at once, no mid-flight
+//! admission), which is exactly what makes it the parity baseline for the
+//! continuous engine: same prompts + greedy argmax → identical streams.
+//! Mixed prompt lengths are now legal (rows attend only within themselves;
+//! decode runs per length-group), so the old uniform-length restriction is
+//! gone here too.
 
-use std::time::Instant;
-
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::model::{Model, QuantMode};
-use crate::runtime::Value;
-use crate::tensor::IntTensor;
 
-use super::kvcache::KvCache;
+use super::continuous::{self, ModelBackend};
 use super::request::{GenRequest, GenResponse};
 
-fn argmax(row: &[f32]) -> i32 {
-    let mut best = 0usize;
-    for (i, &v) in row.iter().enumerate() {
-        if v > row[best] {
-            best = i;
-        }
-    }
-    best as i32
-}
-
-/// Run one batch (uniform prompt length, len ≤ exec batch).  `mode` selects
+/// Run one wave of requests to completion (len ≤ exec batch).  `mode` selects
 /// the prefill executable; decode always runs the static executable (with
 /// near-lossless qmax when the model is not statically quantized).
 pub fn run_batch(
@@ -36,108 +32,6 @@ pub fn run_batch(
     bos: i32,
     pad: i32,
 ) -> Result<Vec<GenResponse>> {
-    if reqs.is_empty() {
-        return Ok(Vec::new());
-    }
-    let (b_exec, s_exec) = model.fwd_geom()?;
-    if reqs.len() > b_exec {
-        bail!("batch {} exceeds executable batch {b_exec}", reqs.len());
-    }
-    let prompt_len = reqs[0].prompt.len() + 1; // +BOS
-    if reqs.iter().any(|r| r.prompt.len() + 1 != prompt_len) {
-        bail!("scheduler requires uniform prompt lengths");
-    }
-    if prompt_len > s_exec {
-        bail!("prompt length {prompt_len} exceeds executable seq {s_exec}");
-    }
-    let max_new = reqs.iter().map(|r| r.max_new).max().unwrap();
-
-    let t0 = Instant::now();
-    // ---- prefill ----
-    let mut data = Vec::with_capacity(b_exec * s_exec);
-    for row in 0..b_exec {
-        let r = &reqs[row.min(reqs.len() - 1)]; // replicate last to fill batch
-        data.push(bos);
-        data.extend_from_slice(&r.prompt);
-        data.resize((row + 1) * s_exec, pad);
-    }
-    let tokens = IntTensor::new(vec![b_exec, s_exec], data)?;
-    let sig = model.exec(mode.fwd_exec())?;
-    let outs = model.forward(mode, &tokens)?;
-    let logits = outs[sig.output_index("logits")?].clone().f32()?;
-    let k_cache = outs[sig.output_index("k_cache")?].clone().f32()?;
-    let v_cache = outs[sig.output_index("v_cache")?].clone().f32()?;
-    let active = outs[sig.output_index("active")?].clone().f32()?;
-    let ttft = t0.elapsed().as_secs_f64();
-
-    // ---- build the cache: shared prefix, then prompt K/V ----
-    let mut kv = KvCache::new(&model.cfg, b_exec);
-    kv.install_prefix(&model.prefix)?;
-    kv.write_prefill(&k_cache, &v_cache, prompt_len)?;
-
-    // first generated token = argmax at the last prompt position
-    let v_dim = logits.shape[2];
-    let mut next: Vec<i32> = (0..b_exec)
-        .map(|row| {
-            let off = (row * s_exec + prompt_len - 1) * v_dim;
-            argmax(&logits.data[off..off + v_dim])
-        })
-        .collect();
-    let mut generated: Vec<Vec<i32>> = vec![Vec::new(); b_exec];
-    for (row, g) in generated.iter_mut().enumerate() {
-        g.push(next[row]);
-    }
-
-    // sinks materialized so far per row: prefix sinks + in-prompt sinks
-    let mut n_sinks: Vec<i32> = (0..b_exec)
-        .map(|row| {
-            let in_prompt: f32 =
-                active.data[row * s_exec..row * s_exec + prompt_len].iter().sum();
-            model.prefix.n_ctx_sinks + in_prompt as i32
-        })
-        .collect();
-
-    // ---- decode loop ----
-    let dsig = model.exec("decode_static")?;
-    for _step in 1..max_new {
-        if kv.remaining() == 0 {
-            break;
-        }
-        let toks = IntTensor::new(vec![b_exec, 1], next.clone())?;
-        let cache_len = IntTensor::scalar(kv.len as i32);
-        let sinks = IntTensor::new(vec![b_exec], n_sinks.clone())?;
-        let inputs = model.bind(
-            &dsig,
-            &[
-                ("tokens", Value::I32(&toks)),
-                ("cache_len", Value::I32(&cache_len)),
-                ("n_sinks", Value::I32(&sinks)),
-                ("k_cache", Value::F32(&kv.k)),
-                ("v_cache", Value::F32(&kv.v)),
-            ],
-        )?;
-        let outs = model.engine.run(&dsig, &inputs)?;
-        let logits = outs[dsig.output_index("logits")?].clone().f32()?;
-        let new_k = outs[dsig.output_index("k_cache")?].clone().f32()?;
-        let new_v = outs[dsig.output_index("v_cache")?].clone().f32()?;
-        n_sinks = outs[dsig.output_index("n_sinks")?].clone().i32()?.data;
-        kv.adopt(new_k, new_v)?;
-        for row in 0..b_exec {
-            let off = row * v_dim;
-            next[row] = argmax(&logits.data[off..off + v_dim]);
-            generated[row].push(next[row]);
-        }
-    }
-
-    let total = t0.elapsed().as_secs_f64();
-    Ok(reqs
-        .iter()
-        .enumerate()
-        .map(|(row, r)| GenResponse {
-            id: r.id,
-            tokens: generated[row][..r.max_new.min(generated[row].len())].to_vec(),
-            ttft_s: ttft,
-            total_s: total,
-        })
-        .collect())
+    let backend = ModelBackend::new(model, mode, bos, pad)?;
+    continuous::run_to_completion(&backend, reqs)
 }

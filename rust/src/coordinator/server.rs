@@ -2,23 +2,47 @@
 //!
 //! PJRT handles are not `Send`, so the model lives on a dedicated worker
 //! thread: the server takes a `Send` constructor closure, builds the model
-//! there, and services requests from an mpsc queue through the dynamic
-//! batcher + scheduler.  Clients get responses over per-request channels.
+//! there, and services requests from an mpsc queue.  Two scheduling engines
+//! are selectable per server:
+//!
+//! - [`EngineKind::Batch`]: the run-to-completion baseline — the dynamic
+//!   batcher groups uniform-length requests, each batch runs end to end.
+//!   `batch_window` controls how long the worker waits to fill a batch.
+//! - [`EngineKind::Continuous`]: the slot-table engine — requests are
+//!   admitted into free KV slots between decode rounds regardless of prompt
+//!   length, tokens stream per request as they are produced, and
+//!   `batch_window`/`max_batch` are ignored (admission is greedy, slots come
+//!   from the executable batch geometry).
+//!
+//! Clients get responses over per-request channels: [`Server::submit`] for
+//! one aggregate response, [`Server::submit_stream`] for per-token events.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::model::{Model, QuantMode};
 
 use super::batcher::Batcher;
-use super::request::{GenRequest, GenResponse, Metrics};
+use super::continuous::{ContinuousEngine, ModelBackend};
+use super::request::{GenRequest, GenResponse, Metrics, Reply, StreamEvent};
 use super::scheduler;
 
+/// Which scheduling engine the worker runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// run-to-completion batches (uniform length, no mid-flight admission)
+    Batch,
+    /// continuous batching over the KV slot table, with token streaming
+    Continuous,
+}
+
 enum Msg {
-    Gen(GenRequest, Sender<Result<GenResponse, String>>),
+    Gen(GenRequest, Instant, Sender<Result<GenResponse, String>>),
+    GenStream(GenRequest, Instant, Sender<StreamEvent>),
     Stats(Sender<Metrics>),
     Shutdown,
 }
@@ -30,8 +54,10 @@ pub struct Server {
 
 pub struct ServerConfig {
     pub mode: QuantMode,
+    pub engine: EngineKind,
     pub max_batch: usize,
     /// how long the batcher waits to fill a batch before dispatching
+    /// (run-to-completion engine only)
     pub batch_window: Duration,
     pub bos: i32,
     pub pad: i32,
@@ -56,10 +82,24 @@ impl Server {
         Ok(Server { tx, handle: Some(handle) })
     }
 
-    /// Submit a request; returns a receiver for the response.
+    /// Submit a request; returns a receiver for the aggregate response.
     pub fn submit(&self, req: GenRequest) -> Result<Receiver<Result<GenResponse, String>>> {
         let (tx, rx) = channel();
-        self.tx.send(Msg::Gen(req, tx)).map_err(|_| anyhow!("server is down"))?;
+        self.tx
+            .send(Msg::Gen(req, Instant::now(), tx))
+            .map_err(|_| anyhow!("server is down"))?;
+        Ok(rx)
+    }
+
+    /// Submit a request; returns a receiver of per-token [`StreamEvent`]s
+    /// ending in `Done` or `Error`.  With the continuous engine, tokens
+    /// arrive as they are produced; with the batch engine they arrive in a
+    /// burst when the request's batch completes.
+    pub fn submit_stream(&self, req: GenRequest) -> Result<Receiver<StreamEvent>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::GenStream(req, Instant::now(), tx))
+            .map_err(|_| anyhow!("server is down"))?;
         Ok(rx)
     }
 
@@ -110,9 +150,16 @@ fn worker<F>(
             return;
         }
     };
+    match cfg.engine {
+        EngineKind::Batch => worker_batch(&model, &cfg, rx),
+        EngineKind::Continuous => worker_continuous(&model, &cfg, rx),
+    }
+}
+
+/// Run-to-completion loop: batch, dispatch, deliver.
+fn worker_batch(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
     let mut batcher = Batcher::new(cfg.max_batch);
-    let mut waiters: std::collections::HashMap<u64, Sender<Result<GenResponse, String>>> =
-        std::collections::HashMap::new();
+    let mut waiters: HashMap<u64, Reply> = HashMap::new();
     let mut metrics = Metrics::default();
 
     'outer: loop {
@@ -122,8 +169,8 @@ fn worker<F>(
             Err(_) => break,
         };
         let mut msgs = vec![first];
-        let deadline = std::time::Instant::now() + cfg.batch_window;
-        while let Some(left) = deadline.checked_duration_since(std::time::Instant::now()) {
+        let deadline = Instant::now() + cfg.batch_window;
+        while let Some(left) = deadline.checked_duration_since(Instant::now()) {
             match rx.recv_timeout(left) {
                 Ok(m) => msgs.push(m),
                 Err(_) => break,
@@ -134,9 +181,13 @@ fn worker<F>(
         }
         for m in msgs {
             match m {
-                Msg::Gen(req, tx) => {
-                    waiters.insert(req.id, tx);
-                    batcher.push(req);
+                Msg::Gen(req, submitted, tx) => {
+                    waiters.insert(req.id, Reply::Aggregate(tx));
+                    batcher.push_at(req, submitted);
+                }
+                Msg::GenStream(req, submitted, tx) => {
+                    waiters.insert(req.id, Reply::Stream(tx));
+                    batcher.push_at(req, submitted);
                 }
                 Msg::Stats(tx) => {
                     let _ = tx.send(metrics.clone());
@@ -147,31 +198,149 @@ fn worker<F>(
         // dispatch every ready batch
         while !batcher.is_empty() {
             let batch = batcher.next_batch();
-            let prefill_toks: usize = batch.iter().map(|r| r.prompt.len() + 1).sum();
-            match scheduler::run_batch(&model, cfg.mode, &batch, cfg.bos, cfg.pad) {
+            let reqs: Vec<GenRequest> = batch.iter().map(|p| p.req.clone()).collect();
+            let dispatch_t = Instant::now();
+            let prefill_toks: usize = reqs.iter().map(|r| r.prompt.len() + 1).sum();
+            match scheduler::run_batch(model, cfg.mode, &reqs, cfg.bos, cfg.pad) {
                 Ok(responses) => {
                     metrics.batches += 1;
-                    metrics.requests += batch.len();
+                    metrics.requests += responses.len();
                     metrics.prefill_tokens += prefill_toks;
+                    // one prefill per batch; busy wall = slowest row
                     if let Some(r0) = responses.first() {
-                        metrics.sum_ttft_s += r0.ttft_s;
-                        metrics.sum_batch_s += r0.total_s;
+                        metrics.sum_prefill_s += r0.ttft_s;
                     }
-                    for resp in responses {
+                    metrics.sum_busy_s +=
+                        responses.iter().map(|r| r.total_s).fold(0.0, f64::max);
+                    // responses align with the dispatched batch order
+                    for (p, mut resp) in batch.iter().zip(responses) {
+                        let wait =
+                            dispatch_t.saturating_duration_since(p.enqueued).as_secs_f64();
+                        resp.queue_s = wait;
+                        resp.ttft_s += wait; // client-perspective TTFT
+                        resp.total_s += wait;
                         metrics.generated_tokens += resp.tokens.len();
-                        if let Some(tx) = waiters.remove(&resp.id) {
-                            let _ = tx.send(Ok(resp));
+                        metrics.sum_ttft_s += resp.ttft_s;
+                        metrics.sum_queue_s += resp.queue_s;
+                        if let Some(reply) = waiters.remove(&resp.id) {
+                            for &t in &resp.tokens {
+                                reply.token(t);
+                            }
+                            reply.done(resp);
                         }
                     }
                 }
                 Err(e) => {
-                    for r in &batch {
-                        if let Some(tx) = waiters.remove(&r.id) {
-                            let _ = tx.send(Err(format!("{e:#}")));
+                    for p in &batch {
+                        if let Some(reply) = waiters.remove(&p.req.id) {
+                            reply.error(format!("{e:#}"));
                         }
                     }
                 }
             }
+        }
+    }
+}
+
+/// Continuous loop: admit between decode rounds, stream as tokens appear.
+fn worker_continuous(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
+    let mut engine = match make_engine(model, cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            // nothing can be served; report the error to every caller
+            drain_failing(rx, &format!("engine init failed: {e:#}"));
+            return;
+        }
+    };
+    'outer: loop {
+        // Idle → block for a message; busy → drain whatever is queued and
+        // keep stepping (admission happens inside step()).
+        if !engine.has_work() {
+            match rx.recv() {
+                Ok(m) => {
+                    if handle_msg(m, &mut engine) {
+                        break 'outer;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(m) => {
+                    if handle_msg(m, &mut engine) {
+                        break 'outer;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break 'outer,
+            }
+        }
+        if let Err(e) = engine.step() {
+            let msg = format!("engine step failed: {e:#}");
+            engine.fail_all(&msg);
+            // the cache may be poisoned — rebuild so later requests can run
+            match make_engine(model, cfg) {
+                Ok(fresh) => {
+                    let stats = engine.stats.clone();
+                    engine = fresh;
+                    engine.stats = stats;
+                }
+                Err(e2) => {
+                    // cannot rebuild: keep answering so clients always get a
+                    // terminal Error event instead of a dropped channel
+                    drain_failing(rx, &format!("{msg}; rebuild failed: {e2:#}"));
+                    return;
+                }
+            }
+        }
+    }
+    // shutdown (or channel hang-up) with work in flight: every remaining
+    // request still gets a terminal Error event, never a dropped channel
+    engine.fail_all("server shut down");
+}
+
+fn make_engine<'m>(
+    model: &'m Model,
+    cfg: &ServerConfig,
+) -> Result<ContinuousEngine<ModelBackend<'m>>> {
+    let backend = ModelBackend::new(model, cfg.mode, cfg.bos, cfg.pad)?;
+    ContinuousEngine::new(backend)
+}
+
+/// Feed one message to the engine; returns true on shutdown.
+fn handle_msg(m: Msg, engine: &mut ContinuousEngine<ModelBackend<'_>>) -> bool {
+    match m {
+        Msg::Gen(req, submitted, tx) => {
+            engine.submit(req, Reply::Aggregate(tx), submitted);
+            false
+        }
+        Msg::GenStream(req, submitted, tx) => {
+            engine.submit(req, Reply::Stream(tx), submitted);
+            false
+        }
+        Msg::Stats(tx) => {
+            let _ = tx.send(engine.metrics());
+            false
+        }
+        Msg::Shutdown => true,
+    }
+}
+
+/// Terminal state: answer every incoming request with an error.
+fn drain_failing(rx: Receiver<Msg>, msg: &str) {
+    while let Ok(m) = rx.recv() {
+        match m {
+            Msg::Gen(_, _, tx) => {
+                let _ = tx.send(Err(msg.to_string()));
+            }
+            Msg::GenStream(_, _, tx) => {
+                let _ = tx.send(StreamEvent::Error(msg.to_string()));
+            }
+            Msg::Stats(tx) => {
+                let _ = tx.send(Metrics::default());
+            }
+            Msg::Shutdown => break,
         }
     }
 }

@@ -1,6 +1,7 @@
 //! PrefixQuant reproduction — rust L3 coordinator + quantization pipeline.
 //!
-//! Three-layer architecture (DESIGN.md):
+//! Three-layer architecture (see rust/DESIGN.md for the full picture,
+//! including the continuous-batching engine's slot state machine):
 //!   L1  Pallas kernels  (python, build time, interpret=True)
 //!   L2  JAX model       (python, build time, AOT-lowered to HLO text)
 //!   L3  this crate      (request path: PJRT runtime, quant pipeline,
@@ -8,7 +9,8 @@
 //!
 //! Entry points: [`runtime::Engine`] loads artifacts, [`model::Model`] binds a
 //! checkpoint, [`quant::pipeline`] runs the PrefixQuant quantization flow,
-//! [`coordinator`] serves generation requests, [`eval`] scores models.
+//! [`coordinator`] serves generation requests (run-to-completion or
+//! continuous batching), [`eval`] scores models.
 
 pub mod bench_support;
 pub mod config;

@@ -254,6 +254,7 @@ fn cmd_gen(c: &Ctx, args: &Args) -> Result<()> {
         },
         ServerConfig {
             mode,
+            engine: prefixquant::coordinator::EngineKind::Continuous,
             max_batch: 8,
             batch_window: Duration::from_millis(5),
             bos: tok.spec.bos,

@@ -58,17 +58,17 @@ fn batcher_partition_properties() {
                 if batch.len() > *max_b {
                     return Err(format!("batch of {} > max {max_b}", batch.len()));
                 }
-                let l0 = batch[0].prompt.len();
-                if !batch.iter().all(|r| r.prompt.len() == l0) {
+                let l0 = batch[0].req.prompt.len();
+                if !batch.iter().all(|p| p.req.prompt.len() == l0) {
                     return Err("non-uniform batch".into());
                 }
-                // FCFS within the bucket
+                // FCFS within the bucket (arrival ids are monotone)
                 for w in batch.windows(2) {
-                    if w[0].id > w[1].id {
+                    if w[0].req.id > w[1].req.id {
                         return Err("batch not FCFS-ordered".into());
                     }
                 }
-                seen.extend(batch.iter().map(|r| r.id));
+                seen.extend(batch.iter().map(|p| p.req.id));
                 guard += 1;
                 if guard > 1000 {
                     return Err("batcher did not terminate".into());
@@ -85,8 +85,8 @@ fn batcher_partition_properties() {
     );
 }
 
-/// Cache state machine: len always = n_prefix + written tokens, prefix slots
-/// never overwritten by prefill, overflow always rejected.
+/// Cache state machine: row lengths always = n_prefix + written tokens,
+/// prefix slots never overwritten by prefill, overflow always rejected.
 #[test]
 fn kvcache_state_properties() {
     let cfg = tiny_cfg();
@@ -113,8 +113,8 @@ fn kvcache_state_properties() {
                 v: pk,
             };
             kv.install_prefix(&p).map_err(|e| e.to_string())?;
-            if kv.len != n_prefix {
-                return Err(format!("len {} != n_prefix {n_prefix}", kv.len));
+            if kv.lens() != vec![n_prefix; 2].as_slice() {
+                return Err(format!("lens {:?} != n_prefix {n_prefix}", kv.lens()));
             }
             let shape = [cfg.n_layers, 2, cfg.n_heads, prompt_len, cfg.d_head];
             let k = Tensor::full(&shape, 7.0);
@@ -126,15 +126,158 @@ fn kvcache_state_properties() {
                 return Ok(());
             }
             res.map_err(|e| e.to_string())?;
-            if kv.len != n_prefix + prompt_len {
-                return Err("len not updated".into());
+            if kv.uniform_len() != Some(n_prefix + prompt_len) {
+                return Err("lens not updated".into());
             }
             // prefix slots intact
             if n_prefix > 0 && kv.k.data[0] != 42.0 {
                 return Err("prefix overwritten".into());
             }
-            if kv.remaining() != cfg.cache_max - kv.len {
+            if kv.remaining() != cfg.cache_max - kv.max_len() {
                 return Err("remaining() inconsistent".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Slot lifecycle: prefix install → per-slot prefill → decode appends →
+/// free → reuse.  A shadow model tracks what each slot should hold; after
+/// every operation the prefix rows are intact, each row's contents match its
+/// own writes, and nothing from a retired sequence survives into a reused
+/// slot or leaks into a neighbour.
+#[test]
+fn kvcache_slot_lifecycle_properties() {
+    let cfg = tiny_cfg();
+    const SLOTS: usize = 3;
+
+    #[derive(Debug, Clone, Copy)]
+    enum Op {
+        Prefill(usize, usize), // slot, prompt_len
+        Append(usize),         // slot
+        Free(usize),           // slot
+    }
+
+    check(
+        "kvcache-slot-lifecycle",
+        150,
+        |g: &mut Gen| {
+            let n_prefix = g.usize_in(0, cfg.max_prefix);
+            let n_ops = g.usize_in(1, 24);
+            let ops: Vec<Op> = (0..n_ops)
+                .map(|_| {
+                    let slot = g.usize_in(0, SLOTS - 1);
+                    match g.usize_in(0, 3) {
+                        0 => Op::Free(slot),
+                        1 => Op::Append(slot),
+                        _ => Op::Prefill(slot, g.usize_in(1, 12)),
+                    }
+                })
+                .collect();
+            (n_prefix, ops)
+        },
+        |(n_prefix, ops)| {
+            let n_prefix = *n_prefix;
+            let mut kv = KvCache::new(&cfg, SLOTS);
+            let pshape = [cfg.n_layers, cfg.n_heads, cfg.max_prefix, cfg.d_head];
+            let p = PrefixState {
+                tokens: vec![49; n_prefix],
+                n_prefix: n_prefix as i32,
+                n_ctx_sinks: n_prefix as i32,
+                k: Tensor::full(&pshape, 42.0),
+                v: Tensor::full(&pshape, 42.0),
+            };
+            kv.install_prefix(&p).map_err(|e| e.to_string())?;
+
+            // shadow: per slot, the values its live sequence has written
+            let mut shadow: Vec<Vec<f32>> = vec![Vec::new(); SLOTS];
+            let mut stamp = 100.0f32; // unique value per write
+
+            for op in ops {
+                match *op {
+                    Op::Prefill(slot, plen) => {
+                        // admission convention: prefill only lands in a clean slot
+                        kv.reset_slot(slot).map_err(|e| e.to_string())?;
+                        shadow[slot].clear();
+                        if n_prefix + plen > cfg.cache_max {
+                            continue;
+                        }
+                        let shape = [cfg.n_layers, 1, cfg.n_heads, plen, cfg.d_head];
+                        let src = Tensor::full(&shape, stamp);
+                        kv.write_prefill_row(slot, &src, &src, 0, plen)
+                            .map_err(|e| e.to_string())?;
+                        shadow[slot] = vec![stamp; plen];
+                        stamp += 1.0;
+                    }
+                    Op::Append(slot) => {
+                        let t = Tensor::full(
+                            &[cfg.n_layers, cfg.n_heads, cfg.d_head],
+                            stamp,
+                        );
+                        let res = kv.append_token_row(slot, &t, &t);
+                        if n_prefix + shadow[slot].len() >= cfg.cache_max {
+                            if res.is_ok() {
+                                return Err("append into full row accepted".into());
+                            }
+                        } else {
+                            res.map_err(|e| e.to_string())?;
+                            shadow[slot].push(stamp);
+                            stamp += 1.0;
+                        }
+                    }
+                    Op::Free(slot) => {
+                        kv.reset_slot(slot).map_err(|e| e.to_string())?;
+                        shadow[slot].clear();
+                    }
+                }
+
+                // full-cache invariant check after every operation
+                for s in 0..SLOTS {
+                    let want_len = n_prefix + shadow[s].len();
+                    if kv.row_len(s) != want_len {
+                        return Err(format!(
+                            "slot {s}: row_len {} != shadow {want_len}",
+                            kv.row_len(s)
+                        ));
+                    }
+                    for l in 0..cfg.n_layers {
+                        for h in 0..cfg.n_heads {
+                            // prefix rows intact and shared (K and V)
+                            for pos in 0..n_prefix {
+                                let o = kv.offset(l, s, h, pos);
+                                if kv.k.data[o] != 42.0 || kv.v.data[o] != 42.0 {
+                                    return Err(format!(
+                                        "slot {s}: prefix clobbered at pos {pos}"
+                                    ));
+                                }
+                            }
+                            // live region matches this sequence's own writes
+                            for (i, &val) in shadow[s].iter().enumerate() {
+                                let o = kv.offset(l, s, h, n_prefix + i);
+                                if kv.k.data[o] != val || kv.v.data[o] != val {
+                                    return Err(format!(
+                                        "slot {s}: pos {} holds k={} v={} want {val} \
+                                         (stale or foreign data)",
+                                        n_prefix + i,
+                                        kv.k.data[o],
+                                        kv.v.data[o]
+                                    ));
+                                }
+                            }
+                            // beyond the live region: zero (no stale leakage)
+                            for pos in want_len..cfg.cache_max {
+                                let o = kv.offset(l, s, h, pos);
+                                if kv.k.data[o] != 0.0 || kv.v.data[o] != 0.0 {
+                                    return Err(format!(
+                                        "slot {s}: stale k={} v={} past len at pos {pos}",
+                                        kv.k.data[o],
+                                        kv.v.data[o]
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
             }
             Ok(())
         },

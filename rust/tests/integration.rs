@@ -7,7 +7,8 @@
 
 use std::rc::Rc;
 
-use prefixquant::coordinator::{scheduler, GenRequest};
+use prefixquant::coordinator::continuous::{ContinuousEngine, ModelBackend};
+use prefixquant::coordinator::{scheduler, GenRequest, StreamEvent};
 use prefixquant::data::{self, Language};
 use prefixquant::eval;
 use prefixquant::model::{Model, QuantMode};
@@ -169,10 +170,75 @@ fn check_scheduler(c: &Ctx) {
     assert!(resp.iter().all(|r| r.tokens.len() == 6));
     assert_eq!(resp[0].tokens, resp[1].tokens, "identical prompts decode identically");
     assert!(resp[0].ttft_s > 0.0 && resp[0].total_s >= resp[0].ttft_s);
+
+    check_continuous_parity(c, &model);
+}
+
+/// The continuous engine reproduces run_batch's greedy streams on the REAL
+/// model for a mixed-length, mixed-budget workload, with at least one
+/// admission mid-decode of another request.
+fn check_continuous_parity(c: &Ctx, model: &prefixquant::model::Model) {
+    let (bos, pad) = (c.tok.spec.bos, c.tok.spec.pad);
+    let text = c.lang.eval_text();
+    let be = ModelBackend::new(model, QuantMode::Static, bos, pad).unwrap();
+    let b_exec = {
+        use prefixquant::coordinator::continuous::DecodeBackend;
+        be.batch_slots()
+    };
+    // more requests than slots, staggered budgets → slots free at different
+    // times and later requests are admitted mid-decode
+    let n = b_exec + 4;
+    let reqs: Vec<GenRequest> = (0..n)
+        .map(|i| GenRequest {
+            id: i as u64,
+            prompt: c.tok.encode(&text[i..i + 4 + (i % 7)], false),
+            max_new: 1 + (i % 5),
+        })
+        .collect();
+
+    let mut baseline = std::collections::HashMap::new();
+    for chunk in reqs.chunks(b_exec) {
+        for r in
+            scheduler::run_batch(model, QuantMode::Static, chunk, bos, pad).unwrap()
+        {
+            baseline.insert(r.id, r.tokens);
+        }
+    }
+
+    let mut engine = ContinuousEngine::new(be).unwrap();
+    let mut streams = Vec::new();
+    for r in &reqs {
+        streams.push((r.id, engine.submit_stream(r.clone())));
+    }
+    engine.run_to_idle().unwrap();
+    assert!(
+        engine.stats.mid_decode_admissions > 0,
+        "continuous engine must admit mid-decode; stats: {:?}",
+        engine.stats
+    );
+    for (id, rx) in streams {
+        let mut tokens = Vec::new();
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                StreamEvent::Token(t) => tokens.push(t),
+                StreamEvent::Done(_) => break,
+                StreamEvent::Error(e) => panic!("request {id} failed: {e}"),
+            }
+        }
+        assert_eq!(
+            &tokens,
+            baseline.get(&id).unwrap(),
+            "continuous stream {id} diverged from run_batch"
+        );
+    }
 }
 
 #[test]
 fn full_stack() {
+    if !prefixquant::artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping full_stack: artifacts not built (run `make artifacts`)");
+        return;
+    }
     let c = ctx();
     check_manifest(&c);
     let fp_ppl = check_fp_forward_and_logits(&c);

@@ -25,8 +25,16 @@ fn max_diff(a: &Tensor, b: &Tensor) -> f32 {
     a.data.iter().zip(&b.data).fold(0.0f32, |m, (x, y)| m.max((x - y).abs()))
 }
 
+fn artifacts_ready() -> bool {
+    prefixquant::artifacts_dir().join("manifest.json").exists()
+}
+
 #[test]
 fn pallas_kernels_match_oracles_via_pjrt() {
+    if !artifacts_ready() {
+        eprintln!("skipping pallas parity: artifacts not built (run `make artifacts`)");
+        return;
+    }
     let e = engine();
     let mut rng = SplitMix64::new(0xA11A5);
 
@@ -82,6 +90,10 @@ fn pallas_kernels_match_oracles_via_pjrt() {
 
 #[test]
 fn pallas_chain_matches_ref_chain() {
+    if !artifacts_ready() {
+        eprintln!("skipping pallas chain parity: artifacts not built (run `make artifacts`)");
+        return;
+    }
     // rmsnorm -> hadamard -> fused quant matmul: the full L1 pipeline lowered
     // inside one executable, vs the jnp oracle chain.
     let e = engine();
