@@ -74,6 +74,8 @@ fn main() -> Result<()> {
             batch_window: Duration::from_millis(20),
             bos: tok.spec.bos,
             pad: tok.spec.pad,
+            // paged KV with a dense-equivalent auto-sized pool
+            kv: prefixquant::coordinator::KvLayout::Paged { page_size: 16, n_pages: 0 },
         },
     )?;
 
@@ -130,6 +132,14 @@ fn main() -> Result<()> {
         m.mean_queue_wait() * 1e3,
         m.decode_tps()
     );
+    if m.kv_resident_bytes > 0 {
+        println!(
+            "kv: {:.2}MB resident, {:.2}MB live, {} page-wait deferrals",
+            m.kv_resident_bytes as f64 / 1e6,
+            m.kv_used_bytes as f64 / 1e6,
+            m.deferred_admissions
+        );
+    }
     server.shutdown();
     Ok(())
 }

@@ -1,22 +1,32 @@
-//! Continuous batching vs run-to-completion on a mixed workload.
+//! Continuous batching vs run-to-completion on a mixed workload, plus the
+//! paged-KV capacity study.
 //!
-//! Both engines run over the deterministic SimBackend with per-CALL busy-wait
-//! costs that model the fixed-geometry executable economics: a prefill or
-//! decode execution costs the same wall time however many rows are real, so
-//! a scheduling policy wins by wasting fewer calls and freeing slots sooner.
-//! The workload is a burst of requests with mixed prompt lengths AND mixed
-//! generation budgets — the regime where run-to-completion loses slots to
-//! uniform-length bucketing and holds short requests hostage to the longest
-//! `max_new` in their batch.
+//! Part 1 — scheduling: both engines run over the deterministic SimBackend
+//! with per-CALL busy-wait costs that model the fixed-geometry executable
+//! economics: a prefill or decode execution costs the same wall time however
+//! many rows are real, so a scheduling policy wins by wasting fewer calls
+//! and freeing slots sooner.  The workload is a burst of requests with mixed
+//! prompt lengths AND mixed generation budgets — the regime where
+//! run-to-completion loses slots to uniform-length bucketing and holds short
+//! requests hostage to the longest `max_new` in their batch.
 //!
-//!   cargo bench --bench continuous_throughput
+//! Part 2 — paging: a long-tail burst (mostly short sequences, a few long)
+//! served at FIXED KV memory.  The dense cache pins worst-case rows, so its
+//! slot count is memory-bound; the paged cache admits by actual page demand,
+//! so the same bytes serve far more concurrent sequences — and at EQUAL
+//! concurrency, a working-set-sized pool serves the same streams in half the
+//! resident bytes.
 //!
-//! No artifacts required.
+//!   cargo bench --bench continuous_throughput            # full run
+//!   cargo bench --bench continuous_throughput -- --smoke # CI perf trail
+//!
+//! Emits `BENCH_continuous_throughput.json`.  No artifacts required.
 
 use std::time::{Duration, Instant};
 
+use prefixquant::bench_support::{emit_bench_json, smoke_mode};
 use prefixquant::coordinator::continuous::{run_to_completion, ContinuousEngine, SimBackend};
-use prefixquant::coordinator::{Batcher, GenRequest, StreamEvent};
+use prefixquant::coordinator::{Batcher, GenRequest, KvLayout, StreamEvent};
 use prefixquant::util::rng::SplitMix64;
 use prefixquant::util::table::Table;
 
@@ -24,23 +34,29 @@ const B_EXEC: usize = 4;
 const S_EXEC: usize = 48;
 const N_PREFIX: usize = 3;
 const CACHE_MAX: usize = 96;
-const N_REQUESTS: usize = 32;
 /// simulated cost of one prefill execution (B×S forward)
 const PREFILL_COST: Duration = Duration::from_micros(4000);
 /// simulated cost of one decode execution (B×1 step)
 const DECODE_COST: Duration = Duration::from_micros(1500);
 
-fn backend() -> SimBackend {
-    SimBackend::new(B_EXEC, S_EXEC, N_PREFIX, CACHE_MAX).with_costs(PREFILL_COST, DECODE_COST)
+fn backend(n_requests: usize) -> SimBackend {
+    // smoke runs shrink the workload; keep call costs only for full runs so
+    // CI measures scheduling structure, not spin loops
+    let (p, d) = if n_requests < 32 {
+        (Duration::ZERO, Duration::ZERO)
+    } else {
+        (PREFILL_COST, DECODE_COST)
+    };
+    SimBackend::new(B_EXEC, S_EXEC, N_PREFIX, CACHE_MAX).with_costs(p, d)
 }
 
 /// Burst workload: prompt lengths alternate between two buckets, budgets
 /// cycle through [24, 2, 6, 2] (mean 8.5 — mostly short requests sharing
 /// batches with occasional long ones).
-fn workload() -> Vec<GenRequest> {
+fn workload(n: usize) -> Vec<GenRequest> {
     let mut rng = SplitMix64::new(0xBEBC4);
     let budgets = [24usize, 2, 6, 2];
-    (0..N_REQUESTS)
+    (0..n)
         .map(|i| {
             let plen = if i % 2 == 0 { 8 } else { 12 };
             GenRequest {
@@ -70,7 +86,7 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
 /// Baseline: dynamic batcher (uniform-length buckets) + run-to-completion,
 /// batches dispatched strictly one after another.
 fn run_baseline(reqs: &[GenRequest]) -> RunStats {
-    let be = backend();
+    let be = backend(reqs.len());
     let mut batcher = Batcher::new(B_EXEC);
     let t0 = Instant::now();
     for r in reqs {
@@ -99,7 +115,7 @@ fn run_baseline(reqs: &[GenRequest]) -> RunStats {
 
 /// Continuous engine: everything submitted at t0, slots admit as they free.
 fn run_continuous(reqs: &[GenRequest]) -> RunStats {
-    let mut engine = ContinuousEngine::new(backend()).expect("engine");
+    let mut engine = ContinuousEngine::new(backend(reqs.len())).expect("engine");
     let t0 = Instant::now();
     let streams: Vec<_> = reqs.iter().map(|r| engine.submit_stream(r.clone())).collect();
     engine.run_to_idle().expect("continuous run");
@@ -127,17 +143,88 @@ fn run_continuous(reqs: &[GenRequest]) -> RunStats {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Part 2: paged-KV capacity study on a long-tail burst
+// ---------------------------------------------------------------------------
+
+/// geometry of the capacity study (page_size divides CACHE_MAX)
+const LT_PAGE: usize = 8;
+/// slots a dense cache of the reference memory budget can hold
+const LT_B_DENSE: usize = 4;
+/// slots offered to the paged engine over the SAME memory budget
+const LT_B_PAGED: usize = 16;
+/// pages equal in bytes to the dense reference (LT_B_DENSE full rows)
+const LT_POOL_EQUAL_MEM: usize = LT_B_DENSE * CACHE_MAX / LT_PAGE;
+/// working-set-sized pool for the equal-concurrency comparison
+const LT_POOL_SMALL: usize = LT_B_DENSE * CACHE_MAX / LT_PAGE / 2;
+
+/// Long-tail burst: ~87% short requests (4-8 prompt, 2-6 new), ~13% long
+/// (24-32 prompt, 24-32 new).  Mean sequence ≪ CACHE_MAX, which is exactly
+/// when dense worst-case rows waste memory.
+fn longtail_workload(n: usize) -> Vec<GenRequest> {
+    let mut rng = SplitMix64::new(0x17A11);
+    (0..n)
+        .map(|i| {
+            let long = i % 8 == 5;
+            let plen = if long { 24 + (i % 3) * 4 } else { 4 + i % 5 };
+            let max_new = if long { 24 + (i % 2) * 8 } else { 2 + i % 5 };
+            GenRequest {
+                id: i as u64,
+                prompt: (0..plen).map(|_| 3 + rng.below(260) as i32).collect(),
+                max_new,
+            }
+        })
+        .collect()
+}
+
+struct LongtailStats {
+    wall_s: f64,
+    peak_slots: usize,
+    resident_bytes: usize,
+    deferred: usize,
+    tokens: Vec<(u64, Vec<i32>)>,
+}
+
+fn run_longtail(b_exec: usize, layout: KvLayout, reqs: &[GenRequest]) -> LongtailStats {
+    let be = SimBackend::new(b_exec, S_EXEC, N_PREFIX, CACHE_MAX).with_kv_layout(layout);
+    let mut engine = ContinuousEngine::new(be).expect("engine");
+    let t0 = Instant::now();
+    let streams: Vec<_> = reqs.iter().map(|r| (r.id, engine.submit_stream(r.clone()))).collect();
+    engine.run_to_idle().expect("longtail run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut tokens = Vec::new();
+    for (id, rx) in streams {
+        let mut toks = Vec::new();
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                StreamEvent::Token(t) => toks.push(t),
+                StreamEvent::Done(_) => break,
+                StreamEvent::Error(e) => panic!("longtail request {id} failed: {e}"),
+            }
+        }
+        tokens.push((id, toks));
+    }
+    LongtailStats {
+        wall_s,
+        peak_slots: engine.stats.peak_active_slots,
+        resident_bytes: engine.kv().resident_kv_bytes(),
+        deferred: engine.stats.deferred_admissions,
+        tokens,
+    }
+}
+
 fn main() {
-    let reqs = workload();
+    let smoke = smoke_mode();
+    let n_requests = if smoke { 16 } else { 32 };
+    let reqs = workload(n_requests);
     let total_budget: usize = reqs.iter().map(|r| r.max_new).sum();
     println!(
         "workload: {} requests, prompt lens 8/12, budgets 24/2/6/2 ({} tokens total); \
-         prefill {:?}/call, decode {:?}/call, {} slots",
+         {} slots{}",
         reqs.len(),
         total_budget,
-        PREFILL_COST,
-        DECODE_COST,
-        B_EXEC
+        B_EXEC,
+        if smoke { " [smoke]" } else { "" }
     );
 
     // warm both paths once (page in code, stabilize the spin calibration)
@@ -151,10 +238,12 @@ fn main() {
         "continuous batching vs run-to-completion (mixed lengths + budgets)",
         &["engine", "wall s", "tokens", "agg tok/s", "mean TTFT ms", "p90 TTFT ms"],
     );
+    let mut ttft_means = Vec::new();
     for (name, st) in [("run-to-completion", &base), ("continuous", &cont)] {
         let mut sorted = st.ttfts_s.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mean = sorted.iter().sum::<f64>() / sorted.len().max(1) as f64;
+        ttft_means.push(mean);
         t.rowv(vec![
             name.into(),
             format!("{:.3}", st.wall_s),
@@ -169,12 +258,94 @@ fn main() {
     println!("continuous: {}", cont.dispatches);
 
     let tok_gain = (cont.generated as f64 / cont.wall_s) / (base.generated as f64 / base.wall_s);
-    let base_mean = base.ttfts_s.iter().sum::<f64>() / base.ttfts_s.len().max(1) as f64;
-    let cont_mean = cont.ttfts_s.iter().sum::<f64>() / cont.ttfts_s.len().max(1) as f64;
     println!(
         "\ncontinuous vs baseline: {:.2}x aggregate decode throughput, {:.2}x mean TTFT",
         tok_gain,
-        base_mean / cont_mean.max(1e-9)
+        ttft_means[0] / ttft_means[1].max(1e-9)
     );
     assert_eq!(base.generated, cont.generated, "both engines must serve the full workload");
+
+    // ---- part 2: long-tail capacity at fixed KV memory ---------------------
+    let lt = longtail_workload(if smoke { 24 } else { 64 });
+    let dense = run_longtail(LT_B_DENSE, KvLayout::Dense, &lt);
+    let paged = run_longtail(
+        LT_B_PAGED,
+        KvLayout::Paged { page_size: LT_PAGE, n_pages: LT_POOL_EQUAL_MEM },
+        &lt,
+    );
+    // equal concurrency (dense slot count), working-set-sized pool
+    let lean = run_longtail(
+        LT_B_DENSE,
+        KvLayout::Paged { page_size: LT_PAGE, n_pages: LT_POOL_SMALL },
+        &lt,
+    );
+
+    // streams are layout- and admission-order-independent: all three runs
+    // must serve identical tokens per request
+    for other in [&paged, &lean] {
+        for ((ida, a), (idb, b)) in dense.tokens.iter().zip(&other.tokens) {
+            assert_eq!(ida, idb);
+            assert_eq!(a, b, "request {ida} diverged across cache layouts");
+        }
+    }
+
+    let mut t2 = Table::new(
+        "paged vs dense on a long-tail burst",
+        &["cache", "slots", "peak active", "resident KV MB", "wall s", "page waits"],
+    );
+    for (name, slots, st) in [
+        ("dense (worst-case rows)", LT_B_DENSE, &dense),
+        ("paged (= memory)", LT_B_PAGED, &paged),
+        ("paged (= concurrency)", LT_B_DENSE, &lean),
+    ] {
+        t2.rowv(vec![
+            name.into(),
+            slots.to_string(),
+            st.peak_slots.to_string(),
+            format!("{:.2}", st.resident_bytes as f64 / 1e6),
+            format!("{:.3}", st.wall_s),
+            st.deferred.to_string(),
+        ]);
+    }
+    t2.print();
+
+    let capacity_ratio = paged.peak_slots as f64 / dense.peak_slots.max(1) as f64;
+    // the lean pool run may lazily materialize the gather view; SimBackend
+    // never does, so resident bytes are the pool itself
+    let resident_ratio = lean.resident_bytes as f64 / dense.resident_bytes.max(1) as f64;
+    println!(
+        "\npaged vs dense at equal KV memory: {capacity_ratio:.2}x admission capacity; \
+         at equal concurrency: {:.0}% of the resident bytes",
+        resident_ratio * 100.0
+    );
+    assert!(
+        capacity_ratio >= 1.5,
+        "paged cache must admit ≥1.5x concurrent sequences at fixed KV memory \
+         (got {capacity_ratio:.2}x)"
+    );
+    assert!(
+        resident_ratio <= 0.6,
+        "working-set pool must cut resident KV bytes at equal concurrency \
+         (got {resident_ratio:.2})"
+    );
+
+    emit_bench_json(
+        "continuous_throughput",
+        &[
+            ("wall_s_baseline", base.wall_s),
+            ("wall_s_continuous", cont.wall_s),
+            ("tok_s_baseline", base.generated as f64 / base.wall_s),
+            ("tok_s_continuous", cont.generated as f64 / cont.wall_s),
+            ("mean_ttft_ms_baseline", ttft_means[0] * 1e3),
+            ("mean_ttft_ms_continuous", ttft_means[1] * 1e3),
+            ("longtail_peak_slots_dense", dense.peak_slots as f64),
+            ("longtail_peak_slots_paged", paged.peak_slots as f64),
+            ("longtail_capacity_ratio", capacity_ratio),
+            ("longtail_resident_mb_dense", dense.resident_bytes as f64 / 1e6),
+            ("longtail_resident_mb_paged_lean", lean.resident_bytes as f64 / 1e6),
+            ("longtail_resident_ratio", resident_ratio),
+            ("longtail_page_waits", (paged.deferred + lean.deferred) as f64),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
 }

@@ -1,18 +1,43 @@
-//! Coordinator micro-benchmarks: batcher throughput, KV-cache operations,
-//! tokenizer, corpus generation.  No artifacts required.
+//! Coordinator micro-benchmarks: batcher throughput, KV-cache operations
+//! (dense vs paged slot churn, retirement isolation), tokenizer, corpus
+//! generation.  No artifacts required.
 //!
-//!   cargo bench --bench coordinator_micro
+//!   cargo bench --bench coordinator_micro            # full run
+//!   cargo bench --bench coordinator_micro -- --smoke # CI perf trail
+//!
+//! Emits `BENCH_coordinator_micro.json` (and a `BENCH_JSON` stdout line) so
+//! CI can track the retirement cost trajectory.
 
-use prefixquant::bench_support::bench_fn;
+use std::time::Instant;
+
+use prefixquant::bench_support::{bench_fn, emit_bench_json, smoke_mode};
 use prefixquant::config::{CorpusSpec, ModelConfig, TokenizerSpec};
-use prefixquant::coordinator::{Batcher, GenRequest, KvCache};
+use prefixquant::coordinator::{Batcher, GenRequest, KvCache, KvLayout};
 use prefixquant::data::Language;
 use prefixquant::model::PrefixState;
 use prefixquant::tensor::Tensor;
 use prefixquant::tokenizer::Tokenizer;
 use prefixquant::util::table::Table;
 
+/// Median nanoseconds of `reset_slot` after filling `plen` prompt positions:
+/// the retirement cost in isolation (the admit write is outside the timer).
+fn retire_ns(kv: &mut KvCache, plen: usize, samples: usize) -> f64 {
+    let shape = [kv.n_layers, 1, kv.n_heads, plen, kv.d_head];
+    let fill = Tensor::full(&shape, 1.0);
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        kv.write_prefill_row(3, &fill, &fill, 0, plen).unwrap();
+        let t = Instant::now();
+        kv.reset_slot(3).unwrap();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2] * 1e9
+}
+
 fn main() {
+    let smoke = smoke_mode();
+    let samples = if smoke { 10 } else { 50 };
     let mut t = Table::new("coordinator micro-benchmarks", &["op", "median", "per-unit"]);
 
     // batcher: push+drain 1024 mixed-length requests
@@ -75,26 +100,62 @@ fn main() {
     ]);
 
     // slot churn: admit into one slot, append, retire (continuous engine's
-    // per-request cache work, everything but the model execution)
+    // per-request cache work, everything but the model execution) — dense
+    // baseline vs paged cache
     let row_shape = [cfg.n_layers, 1, cfg.n_heads, 256, cfg.d_head];
     let row_fill = Tensor::full(&row_shape, 1.0);
     let tok_shape = [cfg.n_layers, cfg.n_heads, cfg.d_head];
     let tok_fill = Tensor::full(&tok_shape, 2.0);
-    let mut kv = KvCache::new(&cfg, 8);
-    kv.install_prefix(&prefix).unwrap();
-    let st = bench_fn("slot churn", 3, 50, || {
-        kv.write_prefill_row(3, &row_fill, &row_fill, 0, 256).unwrap();
-        for _ in 0..16 {
-            kv.append_token_row(3, &tok_fill, &tok_fill).unwrap();
-        }
-        kv.reset_slot(3).unwrap();
-        std::hint::black_box(kv.row_len(3));
-    });
-    t.rowv(vec![
-        "slot admit+16 appends+retire (S=256)".into(),
-        format!("{:.3}ms", st.per_call_ms()),
-        format!("{:.2}us/token", st.median_s * 1e6 / 16.0),
-    ]);
+    let mut churn_ms = Vec::new();
+    for (name, layout) in [
+        ("dense", KvLayout::Dense),
+        ("paged", KvLayout::Paged { page_size: 16, n_pages: 0 }),
+    ] {
+        let mut kv = KvCache::with_layout(&cfg, 8, layout);
+        kv.install_prefix(&prefix).unwrap();
+        let st = bench_fn("slot churn", 3, samples, || {
+            kv.write_prefill_row(3, &row_fill, &row_fill, 0, 256).unwrap();
+            for _ in 0..16 {
+                kv.append_token_row(3, &tok_fill, &tok_fill).unwrap();
+            }
+            kv.reset_slot(3).unwrap();
+            std::hint::black_box(kv.row_len(3));
+        });
+        t.rowv(vec![
+            format!("{name} slot admit+16 appends+retire (S=256)"),
+            format!("{:.3}ms", st.per_call_ms()),
+            format!("{:.2}us/token", st.median_s * 1e6 / 16.0),
+        ]);
+        churn_ms.push(st.per_call_ms());
+    }
+
+    // retirement in isolation: the dense memset scales with what the
+    // sequence used; paged retirement only drops page refs — O(1) per page,
+    // no KV byte touched — so its cost stays flat as sequences grow
+    let mut kv_dense = KvCache::new(&cfg, 8);
+    kv_dense.install_prefix(&prefix).unwrap();
+    let mut kv_paged = KvCache::with_layout(&cfg, 8, KvLayout::Paged { page_size: 16, n_pages: 0 });
+    kv_paged.install_prefix(&prefix).unwrap();
+    let dense_64 = retire_ns(&mut kv_dense, 64, samples);
+    let dense_256 = retire_ns(&mut kv_dense, 256, samples);
+    let paged_64 = retire_ns(&mut kv_paged, 64, samples);
+    let paged_256 = retire_ns(&mut kv_paged, 256, samples);
+    for (name, s64, s256) in [("dense", dense_64, dense_256), ("paged", paged_64, paged_256)] {
+        t.rowv(vec![
+            format!("{name} slot retirement"),
+            format!("{:.0}ns @S=64", s64),
+            format!("{:.0}ns @S=256", s256),
+        ]);
+    }
+    println!(
+        "retirement at S=256: paged {paged_256:.0}ns vs dense {dense_256:.0}ns \
+         ({:.0}x cheaper; no per-token memset)",
+        dense_256 / paged_256.max(1.0)
+    );
+    assert!(
+        paged_256 < dense_256,
+        "paged retirement (no memset) must beat the dense memset at S=256"
+    );
 
     // tokenizer round-trip
     let tok = Tokenizer::new(TokenizerSpec {
@@ -136,4 +197,18 @@ fn main() {
     ]);
 
     t.print();
+
+    emit_bench_json(
+        "coordinator_micro",
+        &[
+            ("churn_ms_dense", churn_ms[0]),
+            ("churn_ms_paged", churn_ms[1]),
+            ("retire_ns_dense_s64", dense_64),
+            ("retire_ns_dense_s256", dense_256),
+            ("retire_ns_paged_s64", paged_64),
+            ("retire_ns_paged_s256", paged_256),
+            ("retire_speedup_s256", dense_256 / paged_256.max(1.0)),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
 }

@@ -50,6 +50,33 @@ pub fn auto_samples(probe_s: f64, budget_s: f64, min: usize, max: usize) -> usiz
     ((budget_s / probe_s.max(1e-9)) as usize).clamp(min, max)
 }
 
+/// True when the bench binary was invoked with `--smoke` (CI runs a reduced
+/// workload so the perf trail is recorded on every push without burning
+/// minutes).
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// Emit a machine-readable bench result: writes `BENCH_<name>.json` in the
+/// working directory and prints a greppable `BENCH_JSON <name> {...}` line.
+/// Values are (key, value) pairs; non-finite values are serialized as 0 so
+/// the output stays valid JSON.
+pub fn emit_bench_json(name: &str, fields: &[(&str, f64)]) {
+    use crate::util::json::{num, obj};
+    let j = obj(
+        fields
+            .iter()
+            .map(|&(k, v)| (k, num(if v.is_finite() { v } else { 0.0 })))
+            .collect(),
+    );
+    let text = j.to_string();
+    let path = format!("BENCH_{name}.json");
+    if let Err(e) = std::fs::write(&path, &text) {
+        eprintln!("warning: could not write {path}: {e}");
+    }
+    println!("BENCH_JSON {name} {text}");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

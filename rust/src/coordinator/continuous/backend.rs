@@ -12,13 +12,21 @@
 //! at position `cache_len` of EVERY row; [`crate::coordinator::KvCache`]
 //! `append_rows` copies back only the rows that own that position, which is
 //! what makes mixed-length slots safe on a fixed-geometry executable.
+//!
+//! The executables only understand dense `[L, B, H, Smax, dh]` buffers, so
+//! when the cache is PAGED, [`ModelBackend`] runs a gather/scatter shim at
+//! this boundary: `KvCache::gather_dense` materializes an incrementally
+//! mirrored dense view for the decode group (only positions written since the
+//! row's last gather are copied), and `KvCache::append_rows` scatters back
+//! just the newly written position.  The simulation backend needs no shim —
+//! it reads pages directly through `KvCache::k_at`/`v_at`.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::kvcache::KvCache;
+use crate::coordinator::kvcache::{KvCache, KvLayout};
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::model::{Model, QuantMode};
 use crate::runtime::Value;
@@ -97,12 +105,20 @@ pub struct ModelBackend<'a> {
     pub pad: i32,
     b_exec: usize,
     s_exec: usize,
+    kv_layout: KvLayout,
 }
 
 impl<'a> ModelBackend<'a> {
+    /// Dense-layout backend (the run-to-completion baseline keeps this; the
+    /// serving path selects paged via [`ModelBackend::with_kv_layout`]).
     pub fn new(model: &'a Model, mode: QuantMode, bos: i32, pad: i32) -> Result<Self> {
         let (b_exec, s_exec) = model.fwd_geom()?;
-        Ok(Self { model, mode, bos, pad, b_exec, s_exec })
+        Ok(Self { model, mode, bos, pad, b_exec, s_exec, kv_layout: KvLayout::Dense })
+    }
+
+    pub fn with_kv_layout(mut self, layout: KvLayout) -> Self {
+        self.kv_layout = layout;
+        self
     }
 }
 
@@ -120,7 +136,7 @@ impl<'a> DecodeBackend for ModelBackend<'a> {
     }
 
     fn new_cache(&self) -> Result<KvCache> {
-        let mut kv = KvCache::new(&self.model.cfg, self.b_exec);
+        let mut kv = KvCache::with_layout(&self.model.cfg, self.b_exec, self.kv_layout);
         kv.install_prefix(&self.model.prefix)?;
         Ok(kv)
     }
@@ -192,25 +208,32 @@ impl<'a> DecodeBackend for ModelBackend<'a> {
         let toks_t = IntTensor::new(vec![b, 1], toks)?;
         let cache_len = IntTensor::scalar(group.len as i32);
         let sinks_t = IntTensor::new(vec![b], sinks)?;
-        let inputs = self.model.bind(
-            &dsig,
-            &[
-                ("tokens", Value::I32(&toks_t)),
-                ("cache_len", Value::I32(&cache_len)),
-                ("n_sinks", Value::I32(&sinks_t)),
-                ("k_cache", Value::F32(&kv.k)),
-                ("v_cache", Value::F32(&kv.v)),
-            ],
-        )?;
-        let outs = self.model.engine.run(&dsig, &inputs)?;
+        let outs = {
+            // gather: dense layout hands over its storage; paged layout
+            // materializes the incrementally-mirrored dense view for the
+            // group's rows (only newly written positions are copied)
+            let (kt, vt) = kv.gather_dense(&group.rows)?;
+            let inputs = self.model.bind(
+                &dsig,
+                &[
+                    ("tokens", Value::I32(&toks_t)),
+                    ("cache_len", Value::I32(&cache_len)),
+                    ("n_sinks", Value::I32(&sinks_t)),
+                    ("k_cache", Value::F32(kt)),
+                    ("v_cache", Value::F32(vt)),
+                ],
+            )?;
+            self.model.engine.run(&dsig, &inputs)?
+        };
         let logits = outs[dsig.output_index("logits")?].clone().f32()?;
         let new_k = outs[dsig.output_index("k_cache")?].clone().f32()?;
         let new_v = outs[dsig.output_index("v_cache")?].clone().f32()?;
         let new_sinks = outs[dsig.output_index("n_sinks")?].clone().i32()?;
-        if group.rows.len() == b {
-            // whole batch advanced together: adopt the output wholesale
+        if !kv.is_paged() && group.rows.len() == b {
+            // whole dense batch advanced together: adopt the output wholesale
             kv.adopt(new_k, new_v)?;
         } else {
+            // scatter back only the newly written position of the group rows
             kv.append_rows(&new_k, &new_v, &group.rows, group.len)?;
         }
         let v_dim = logits.data.len() / b;

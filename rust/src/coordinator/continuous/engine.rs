@@ -14,6 +14,15 @@
 //! paper's invariant is what makes mid-flight admission cheap).  Completed
 //! slots retire immediately and their tokens stream to the client as they
 //! are produced, so short requests are never held hostage by long ones.
+//!
+//! On a paged cache, admission is additionally a PAGE-availability check:
+//! each admitted request reserves its worst-case page count (prompt + budget,
+//! capped by row capacity) so mid-flight appends can never fail, a request
+//! that doesn't fit the free pool WAITS at the head of the queue (FCFS — it
+//! is not skipped), and retirement releases the slot's pages in O(pages) with
+//! no memset.  Because long-tail sequences only hold the pages they use, the
+//! engine can run many more slots than dense worst-case sizing would allow
+//! over the same KV memory.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver};
@@ -56,8 +65,14 @@ struct Active {
 pub struct EngineStats {
     pub admitted: usize,
     pub completed: usize,
-    /// requests dropped at admission (prompt too long for the geometry)
+    /// requests dropped at admission (prompt too long for the geometry, or a
+    /// shape the page pool could never hold)
     pub rejected: usize,
+    /// requests that waited at the queue head for free pages (each throttled
+    /// request counts once, however many rounds it waited)
+    pub deferred_admissions: usize,
+    /// most slots simultaneously decoding (admission capacity actually used)
+    pub peak_active_slots: usize,
     pub prefill_calls: usize,
     /// decode executions (one per length-group per round)
     pub decode_calls: usize,
@@ -79,6 +94,9 @@ pub struct ContinuousEngine<B: DecodeBackend> {
     kv: KvCache,
     slots: Vec<Option<Active>>,
     pending: VecDeque<(GenRequest, Reply, Instant)>,
+    /// id of the request currently waiting at the queue head for pages, so
+    /// `deferred_admissions` counts throttled requests, not polls
+    last_deferred: Option<u64>,
     pub stats: EngineStats,
 }
 
@@ -89,7 +107,14 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
             bail!("backend cache batch {} != slots {}", kv.batch, backend.batch_slots());
         }
         let slots = (0..backend.batch_slots()).map(|_| None).collect();
-        Ok(Self { backend, kv, slots, pending: VecDeque::new(), stats: EngineStats::default() })
+        Ok(Self {
+            backend,
+            kv,
+            slots,
+            pending: VecDeque::new(),
+            last_deferred: None,
+            stats: EngineStats::default(),
+        })
     }
 
     /// Queue a request; its output goes to `reply`.  `submitted` anchors the
@@ -107,6 +132,11 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
 
     pub fn free_slots(&self) -> usize {
         self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    /// The engine's KV cache (capacity reporting, benches).
+    pub fn kv(&self) -> &KvCache {
+        &self.kv
     }
 
     pub fn has_work(&self) -> bool {
@@ -171,6 +201,38 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
                     self.backend.cache_capacity()
                 ));
                 continue; // slot stays free for the next candidate
+            }
+            if !self.kv.admission_feasible(plen, req.max_new) {
+                self.stats.rejected += 1;
+                reply.error(format!(
+                    "request needs more KV pages than the pool holds \
+                     (prompt {} + max_new {} exceeds pool capacity): \
+                     lower max_new or grow the page pool",
+                    plen, req.max_new
+                ));
+                continue; // waiting would wedge the queue forever
+            }
+            if !self.kv.can_admit(plen, req.max_new) {
+                // not enough free pages yet: wait at the head of the queue
+                // (FCFS — retiring slots will release pages), don't skip
+                // ahead.  Counted once per throttled REQUEST, not once per
+                // poll — admit() re-checks the head every decode round.
+                if self.last_deferred != Some(req.id) {
+                    self.stats.deferred_admissions += 1;
+                    self.last_deferred = Some(req.id);
+                }
+                self.pending.push_front((req, reply, submitted));
+                break;
+            }
+            if let Err(e) = self.kv.reserve(slot, plen, req.max_new) {
+                // can_admit passed, so this is an engine invariant violation;
+                // fail the wave the way a prefill error would
+                let msg = format!("page reservation failed: {e:#}");
+                reply.error(msg.clone());
+                for (_, _, r, _) in &wave {
+                    r.error(msg.clone());
+                }
+                return Err(e);
             }
             free.pop();
             wave.push((slot, req, reply, submitted));
@@ -256,6 +318,10 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
     /// Returns whether any work remains.
     pub fn step(&mut self) -> Result<bool> {
         self.admit()?;
+        let active = self.slots.iter().filter(|s| s.is_some()).count();
+        if active > self.stats.peak_active_slots {
+            self.stats.peak_active_slots = active;
+        }
 
         // Collect rows that can no longer grow (cache full) and retire them.
         let full: Vec<usize> = (0..self.slots.len())
@@ -325,13 +391,19 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
     /// Abort everything in flight: every busy slot and every pending request
     /// gets an error reply, and the slot table is cleared.  Used by the
     /// server when a backend execution fails mid-round.
+    ///
+    /// EVERY slot is reset, not just occupied ones: a failed admission wave
+    /// can leave a slot with a page reservation (and partially written rows)
+    /// but no `Active` entry, and those pages must go back to the pool or
+    /// later admissions would see permanently shrunken capacity.
     pub fn fail_all(&mut self, msg: &str) {
         for i in 0..self.slots.len() {
             if let Some(a) = self.slots[i].take() {
                 a.reply.error(msg.to_string());
-                let _ = self.kv.reset_slot(i);
             }
+            let _ = self.kv.reset_slot(i);
         }
+        self.last_deferred = None;
         while let Some((_, reply, _)) = self.pending.pop_front() {
             reply.error(msg.to_string());
         }
@@ -351,6 +423,10 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
             sum_queue_s: self.stats.sum_queue_s,
             sum_prefill_s: self.stats.t_prefill_s,
             sum_busy_s: self.stats.t_prefill_s + self.stats.t_decode_s,
+            active_slots: self.slots.iter().filter(|s| s.is_some()).count(),
+            kv_resident_bytes: self.kv.resident_kv_bytes(),
+            kv_used_bytes: self.kv.used_kv_bytes(),
+            deferred_admissions: self.stats.deferred_admissions,
         }
     }
 }

@@ -8,11 +8,17 @@
 //! mid-flight is just a prefill plus a copy into its cache slot — the shared
 //! prefix rows are already resident in every slot.
 //!
+//! Since the paged KV cache landed, the prefix is not even copied per slot:
+//! it lives in refcounted pages mapped into every slot's page table, and
+//! admission is a page-availability check, so long-tail sequences stop
+//! pinning dense worst-case capacity (see `coordinator::kvcache`).
+//!
 //! Pieces:
 //! - [`backend`]: the [`backend::DecodeBackend`] trait (prefill a set of
 //!   slots, decode a same-length group), [`backend::ModelBackend`] over the
-//!   real executables, and [`backend::run_to_completion`] — the baseline
-//!   policy, generic over the backend so parity can be asserted.
+//!   real executables (with the dense gather/scatter shim for the paged
+//!   layout), and [`backend::run_to_completion`] — the baseline policy,
+//!   generic over the backend so parity can be asserted.
 //! - [`engine`]: [`engine::ContinuousEngine`], the persistent decode loop
 //!   that owns the slot table, admits pending requests into free slots
 //!   between decode rounds, retires finished slots immediately, and streams

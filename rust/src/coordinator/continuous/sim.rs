@@ -9,6 +9,13 @@
 //! stream parity between the continuous engine and the run-to-completion
 //! baseline a real cache-lifecycle correctness check, not a coincidence.
 //!
+//! The backend defaults to the PAGED cache layout and reads it directly
+//! through `KvCache::k_at`/`v_at` (no dense materialization), so the parity
+//! tests exercise the page tables themselves: a wrong page mapping, a leaked
+//! or prematurely-freed page, or a stale mirror would corrupt the hash and
+//! diverge the stream.  Use [`SimBackend::with_kv_layout`] to pin the dense
+//! baseline or size a page pool explicitly.
+//!
 //! Optional per-call busy-wait costs model the fixed-geometry executable
 //! economics (a prefill/decode call costs the same whatever rows are real),
 //! which is what the continuous-vs-batch throughput bench measures.
@@ -18,7 +25,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::config::ModelConfig;
-use crate::coordinator::kvcache::KvCache;
+use crate::coordinator::kvcache::{KvCache, KvLayout};
 use crate::model::PrefixState;
 use crate::tensor::Tensor;
 
@@ -51,6 +58,8 @@ pub struct SimBackend {
     pub prefill_cost: Duration,
     /// simulated wall cost of one decode execution (whole batch)
     pub decode_cost: Duration,
+    /// cache layout for [`DecodeBackend::new_cache`] (paged by default)
+    pub kv_layout: KvLayout,
 }
 
 impl SimBackend {
@@ -88,12 +97,18 @@ impl SimBackend {
             bos: 1,
             prefill_cost: Duration::ZERO,
             decode_cost: Duration::ZERO,
+            kv_layout: KvLayout::Paged { page_size: 8, n_pages: 0 },
         }
     }
 
     pub fn with_costs(mut self, prefill: Duration, decode: Duration) -> Self {
         self.prefill_cost = prefill;
         self.decode_cost = decode;
+        self
+    }
+
+    pub fn with_kv_layout(mut self, layout: KvLayout) -> Self {
+        self.kv_layout = layout;
         self
     }
 
@@ -106,9 +121,10 @@ impl SimBackend {
         for l in 0..kv.n_layers {
             for hd in 0..kv.n_heads {
                 for s in kv.n_prefix..end {
-                    let off = kv.offset(l, row, hd, s);
-                    let a = kv.k.data[off] as i64 as u64;
-                    let b = kv.v.data[off] as i64 as u64;
+                    // reads go through the layout's own mapping (page tables
+                    // for the paged store), so a mapping bug diverges streams
+                    let a = kv.k_at(l, row, hd, s)[0] as i64 as u64;
+                    let b = kv.v_at(l, row, hd, s)[0] as i64 as u64;
                     h = h.wrapping_mul(0x100000001b3).wrapping_add(a.wrapping_add(1));
                     h = h.wrapping_mul(0x100000001b3).wrapping_add(b.wrapping_add(2));
                 }
@@ -149,7 +165,7 @@ impl DecodeBackend for SimBackend {
     }
 
     fn new_cache(&self) -> Result<KvCache> {
-        let mut kv = KvCache::new(&self.cfg, self.b_exec);
+        let mut kv = KvCache::with_layout(&self.cfg, self.b_exec, self.kv_layout);
         kv.install_prefix(&self.prefix)?;
         Ok(kv)
     }
@@ -229,6 +245,21 @@ mod tests {
         assert_eq!(solo[0].tokens, r[2].tokens);
         // different prompts diverge
         assert_ne!(r[0].tokens, r[2].tokens);
+    }
+
+    #[test]
+    fn paged_and_dense_layouts_agree() {
+        // the stream hashes stored cache contents, so layout-independent
+        // streams mean the page tables map exactly what the dense rows hold
+        let reqs =
+            vec![req(0, vec![5, 6, 7, 8, 9], 6), req(1, vec![4, 4], 3), req(2, vec![30], 5)];
+        let paged = SimBackend::new(3, 16, 2, 48); // paged by default
+        let dense = SimBackend::new(3, 16, 2, 48).with_kv_layout(KvLayout::Dense);
+        let a = run_to_completion(&paged, &reqs).unwrap();
+        let b = run_to_completion(&dense, &reqs).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens, "layouts diverged for request {}", x.id);
+        }
     }
 
     #[test]

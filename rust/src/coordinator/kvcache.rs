@@ -1,17 +1,36 @@
 //! KV-cache manager with shared prefixed entries (the paper's mechanism).
 //!
 //! The prefixed tokens' K/V are computed ONCE at model-quantization time and
-//! installed into slots [0, n_prefix) of every sequence's cache — they are
-//! never recomputed, never evicted, and identical across sequences (the
-//! "prefixed outliers in the KV cache" of the title).  Prompt/decoded tokens
-//! occupy positions [n_prefix, row_len(b)).
+//! occupy positions [0, n_prefix) of every sequence's cache — they are never
+//! recomputed, never evicted, and identical across sequences (the "prefixed
+//! outliers in the KV cache" of the title).  Prompt/decoded tokens occupy
+//! positions [n_prefix, row_len(b)).
 //!
-//! Since the continuous-batching engine landed, the batch dimension is a SLOT
-//! TABLE: every row carries its own valid length (`lens`), rows are written
-//! and appended independently, and a retired row is zeroed (except the shared
-//! prefix) before reuse so a stale sequence can never leak into its
-//! successor.  The uniform-length helpers (`write_prefill`, `adopt`) remain
-//! for the run-to-completion path where every row advances in lock-step.
+//! Two storage layouts implement that contract behind one API
+//! ([`KvLayout`]):
+//!
+//! - **Dense** (the original slot table): one `[L, B, H, Smax, dh]` block per
+//!   K and V, every row reserving worst-case capacity.  The prefix is
+//!   physically copied into every row and a retired row is zeroed (except the
+//!   prefix) before reuse.  Kept as the baseline for parity tests and the
+//!   paging benches.
+//! - **Paged**: a fixed [`PagePool`] of `[L, H, page_size, dh]` pages plus a
+//!   per-slot page table.  The prefixed K/V is written into refcounted
+//!   *prefix pages* exactly once and MAPPED (not copied) into every slot —
+//!   the sharing the paper's invariant makes correct, since every sequence's
+//!   prefix entries are identical.  A slot's own positions take pages on
+//!   demand, retirement drops its page refs with NO memset (freed pages are
+//!   reused as-is; writers always write a position before any reader can see
+//!   it), and admission becomes a page-availability check, so long-tail
+//!   sequences stop pinning worst-case capacity.
+//!
+//! The decode/prefill executables still expect dense `[L, B, H, Smax, dh]`
+//! inputs, so the paged layout offers [`KvCache::gather_dense`]: an
+//! incrementally-mirrored dense view materialized per decode group at the
+//! `ModelBackend` boundary, with only the newly written position scattered
+//! back ([`KvCache::append_rows`]).  The simulation backend reads the paged
+//! layout directly through [`KvCache::k_at`] so parity tests exercise the
+//! page tables themselves.
 
 use anyhow::{bail, Result};
 
@@ -19,39 +38,361 @@ use crate::config::ModelConfig;
 use crate::model::PrefixState;
 use crate::tensor::Tensor;
 
+fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Flat offset of position (l, b, h, s) in a dense [L, B, H, Smax, dh] block.
+fn dense_offset(
+    batch: usize,
+    n_heads: usize,
+    s_max: usize,
+    d_head: usize,
+    l: usize,
+    b: usize,
+    h: usize,
+    s: usize,
+) -> usize {
+    (((l * batch + b) * n_heads + h) * s_max + s) * d_head
+}
+
+/// Which storage layout a [`KvCache`] uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvLayout {
+    /// one dense [L, B, H, Smax, dh] block per K/V (worst-case per row)
+    Dense,
+    /// fixed page pool + per-slot page tables; `n_pages == 0` auto-sizes the
+    /// pool to dense-equivalent worst case `(batch + 1) * ceil(Smax / page)`
+    Paged { page_size: usize, n_pages: usize },
+}
+
+/// Fixed pool of refcounted KV pages.  One page holds `page_size` consecutive
+/// cache positions across EVERY layer and head (`[L, H, page_size, dh]` for K
+/// and for V), so mapping a page into a slot maps those positions everywhere
+/// at once — which is what lets the prefixed K/V be shared as whole pages.
+///
+/// Freed pages are pushed on a LIFO free list and handed out again WITHOUT
+/// zeroing: every writer fills a position before any reader can observe it
+/// (row lengths only advance past written positions), so a page can carry a
+/// retired sequence's stale bytes harmlessly.
+pub struct PagePool {
+    pub n_pages: usize,
+    pub page_size: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_head: usize,
+    k: Vec<f32>, // [n_pages, L, H, page_size, dh]
+    v: Vec<f32>,
+    refcount: Vec<u32>,
+    free: Vec<u32>,
+}
+
+impl PagePool {
+    pub fn new(
+        n_pages: usize,
+        page_size: usize,
+        n_layers: usize,
+        n_heads: usize,
+        d_head: usize,
+    ) -> Self {
+        let elems = n_pages * n_layers * n_heads * page_size * d_head;
+        Self {
+            n_pages,
+            page_size,
+            n_layers,
+            n_heads,
+            d_head,
+            k: vec![0.0; elems],
+            v: vec![0.0; elems],
+            refcount: vec![0; n_pages],
+            free: (0..n_pages as u32).rev().collect(),
+        }
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.n_pages - self.free.len()
+    }
+
+    /// Refcount of `page` (0 = on the free list).
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.refcount[page as usize]
+    }
+
+    /// Take a page off the free list with refcount 1.
+    pub fn alloc(&mut self) -> Result<u32> {
+        let Some(p) = self.free.pop() else {
+            bail!("page pool exhausted ({} pages)", self.n_pages);
+        };
+        self.refcount[p as usize] = 1;
+        Ok(p)
+    }
+
+    /// Add a reference to a live page (e.g. a slot mapping a prefix page).
+    pub fn incref(&mut self, page: u32) -> Result<()> {
+        if page as usize >= self.n_pages {
+            bail!("incref of page {page} out of range ({})", self.n_pages);
+        }
+        if self.refcount[page as usize] == 0 {
+            bail!("incref of free page {page}");
+        }
+        self.refcount[page as usize] += 1;
+        Ok(())
+    }
+
+    /// Drop a reference; returns true when the page went back on the free
+    /// list.  Dropping a reference on a free page is an error (double free).
+    pub fn decref(&mut self, page: u32) -> Result<bool> {
+        if page as usize >= self.n_pages {
+            bail!("decref of page {page} out of range ({})", self.n_pages);
+        }
+        if self.refcount[page as usize] == 0 {
+            bail!("double free of page {page}");
+        }
+        self.refcount[page as usize] -= 1;
+        if self.refcount[page as usize] == 0 {
+            self.free.push(page);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Flat offset of (page, l, h, position-in-page) — start of a dh span.
+    fn slab_offset(&self, page: u32, l: usize, h: usize, po: usize) -> usize {
+        (((page as usize * self.n_layers + l) * self.n_heads + h) * self.page_size + po)
+            * self.d_head
+    }
+
+    /// K + V bytes of one page.
+    pub fn page_bytes(&self) -> usize {
+        2 * 4 * self.n_layers * self.n_heads * self.page_size * self.d_head
+    }
+}
+
+/// Incrementally-mirrored dense view of a paged cache (the gather half of the
+/// `ModelBackend` shim).  `mirrored[row]` positions of `row` are already
+/// materialized for generation `gen[row]`; a gather copies only the delta.
+struct DenseView {
+    k: Tensor,
+    v: Tensor,
+    mirrored: Vec<usize>,
+    gen: Vec<u64>,
+}
+
+/// Paged store: pool + page tables.
+struct Paged {
+    pool: PagePool,
+    /// pages holding positions [0, n_prefix), shared by every slot; the cache
+    /// holds one base reference and every slot holds one mapping reference,
+    /// so a live prefix page's refcount is always `batch + 1` — it can never
+    /// be freed by slot churn
+    prefix_pages: Vec<u32>,
+    /// per-slot own pages for positions [n_prefix, ...), in order
+    own: Vec<Vec<u32>>,
+    /// per-slot worst-case own-page reservation made at admission (0 when the
+    /// slot was filled without a reservation, e.g. run-to-completion)
+    reserved: Vec<usize>,
+    /// bumped on retirement so dense mirrors of the old occupant invalidate
+    generation: Vec<u64>,
+    view: Option<DenseView>,
+}
+
+impl Paged {
+    /// Pages promised to admitted slots but not yet allocated.  The admission
+    /// invariant `free_pages >= uncommitted()` guarantees an admitted slot's
+    /// appends can never fail.
+    fn uncommitted(&self) -> usize {
+        self.own
+            .iter()
+            .zip(&self.reserved)
+            .map(|(o, &r)| r.saturating_sub(o.len()))
+            .sum()
+    }
+
+    /// Page holding own-region index `idx` of `slot`, allocating it if this
+    /// is the next unallocated index.  Allocations beyond the slot's
+    /// reservation must leave every other slot's outstanding reservation
+    /// honorable.
+    fn ensure_own_page(&mut self, slot: usize, idx: usize) -> Result<u32> {
+        if idx < self.own[slot].len() {
+            return Ok(self.own[slot][idx]);
+        }
+        if idx > self.own[slot].len() {
+            bail!("non-contiguous page allocation for slot {slot}");
+        }
+        if self.own[slot].len() >= self.reserved[slot]
+            && self.pool.free_pages() <= self.uncommitted()
+        {
+            bail!(
+                "page pool exhausted ({} pages, {} free, {} promised)",
+                self.pool.n_pages,
+                self.pool.free_pages(),
+                self.uncommitted()
+            );
+        }
+        let page = self.pool.alloc()?;
+        self.own[slot].push(page);
+        Ok(page)
+    }
+
+    /// (page, in-page offset) of logical position `pos` of `slot`.
+    fn locate(&self, n_prefix: usize, slot: usize, pos: usize) -> Result<(u32, usize)> {
+        let ps = self.pool.page_size;
+        if pos < n_prefix {
+            return Ok((self.prefix_pages[pos / ps], pos % ps));
+        }
+        let rel = pos - n_prefix;
+        match self.own[slot].get(rel / ps) {
+            Some(&page) => Ok((page, rel % ps)),
+            None => bail!("position {pos} unmapped in slot {slot}"),
+        }
+    }
+}
+
+/// Copy positions [start, end) of `row` from pages into a dense view, one
+/// memcpy per (layer, head, page-contiguous span).
+#[allow(clippy::too_many_arguments)]
+fn copy_pages_to_dense(
+    pool: &PagePool,
+    prefix_pages: &[u32],
+    own: &[u32],
+    n_prefix: usize,
+    row: usize,
+    start: usize,
+    end: usize,
+    dk: &mut Tensor,
+    dv: &mut Tensor,
+    batch: usize,
+    s_max: usize,
+) -> Result<()> {
+    let (ps, dh) = (pool.page_size, pool.d_head);
+    for l in 0..pool.n_layers {
+        for h in 0..pool.n_heads {
+            let mut pos = start;
+            while pos < end {
+                // chunk bounded by the page holding `pos` and by the
+                // prefix/own region boundary
+                let (page, po, limit) = if pos < n_prefix {
+                    (prefix_pages[pos / ps], pos % ps, n_prefix.min(end))
+                } else {
+                    let rel = pos - n_prefix;
+                    let Some(&page) = own.get(rel / ps) else {
+                        bail!("position {pos} unmapped in gather of row {row}");
+                    };
+                    (page, rel % ps, end)
+                };
+                let take = (ps - po).min(limit - pos);
+                let src = pool.slab_offset(page, l, h, po);
+                let dst = dense_offset(batch, pool.n_heads, s_max, dh, l, row, h, pos);
+                dk.data[dst..dst + take * dh].copy_from_slice(&pool.k[src..src + take * dh]);
+                dv.data[dst..dst + take * dh].copy_from_slice(&pool.v[src..src + take * dh]);
+                pos += take;
+            }
+        }
+    }
+    Ok(())
+}
+
+enum Store {
+    Dense { k: Tensor, v: Tensor },
+    Paged(Paged),
+}
+
 pub struct KvCache {
     pub n_layers: usize,
     pub batch: usize,
     pub n_heads: usize,
     pub s_max: usize,
     pub d_head: usize,
-    /// [L, B, H, Smax, dh] storage-domain tensors fed to decode_step
-    pub k: Tensor,
-    pub v: Tensor,
     /// valid entries per row (incl. prefix slots)
     lens: Vec<usize>,
     pub n_prefix: usize,
+    store: Store,
 }
 
 impl KvCache {
+    /// Dense-layout cache (the baseline; engines default to paged).
     pub fn new(cfg: &ModelConfig, batch: usize) -> Self {
-        let shape = [cfg.n_layers, batch, cfg.n_heads, cfg.cache_max, cfg.d_head];
+        Self::with_layout(cfg, batch, KvLayout::Dense)
+    }
+
+    pub fn with_layout(cfg: &ModelConfig, batch: usize, layout: KvLayout) -> Self {
+        let store = match layout {
+            KvLayout::Dense => {
+                let shape = [cfg.n_layers, batch, cfg.n_heads, cfg.cache_max, cfg.d_head];
+                Store::Dense { k: Tensor::zeros(&shape), v: Tensor::zeros(&shape) }
+            }
+            KvLayout::Paged { page_size, n_pages } => {
+                let ps = page_size.max(1);
+                let np = if n_pages == 0 {
+                    (batch + 1) * div_ceil(cfg.cache_max, ps)
+                } else {
+                    n_pages
+                };
+                Store::Paged(Paged {
+                    pool: PagePool::new(np, ps, cfg.n_layers, cfg.n_heads, cfg.d_head),
+                    prefix_pages: Vec::new(),
+                    own: vec![Vec::new(); batch],
+                    reserved: vec![0; batch],
+                    generation: vec![0; batch],
+                    view: None,
+                })
+            }
+        };
         Self {
             n_layers: cfg.n_layers,
             batch,
             n_heads: cfg.n_heads,
             s_max: cfg.cache_max,
             d_head: cfg.d_head,
-            k: Tensor::zeros(&shape),
-            v: Tensor::zeros(&shape),
             lens: vec![0; batch],
             n_prefix: 0,
+            store,
         }
     }
 
-    /// Flat offset of position (l, b, h, s) — start of a d_head-long span.
-    pub fn offset(&self, l: usize, b: usize, h: usize, s: usize) -> usize {
-        (((l * self.batch + b) * self.n_heads + h) * self.s_max + s) * self.d_head
+    pub fn is_paged(&self) -> bool {
+        matches!(self.store, Store::Paged(_))
+    }
+
+    /// dh-long K span at position (l, b, h, s).  Works on both layouts; the
+    /// simulation backend and tests read the paged layout directly through
+    /// this (no dense materialization).  Panics on an unmapped position, like
+    /// out-of-range dense indexing would.
+    pub fn k_at(&self, l: usize, b: usize, h: usize, s: usize) -> &[f32] {
+        let dh = self.d_head;
+        match &self.store {
+            Store::Dense { k, .. } => {
+                let o = dense_offset(self.batch, self.n_heads, self.s_max, dh, l, b, h, s);
+                &k.data[o..o + dh]
+            }
+            Store::Paged(p) => {
+                let (page, po) =
+                    p.locate(self.n_prefix, b, s).expect("read of unmapped cache position");
+                let o = p.pool.slab_offset(page, l, h, po);
+                &p.pool.k[o..o + dh]
+            }
+        }
+    }
+
+    /// dh-long V span at position (l, b, h, s) (see [`KvCache::k_at`]).
+    pub fn v_at(&self, l: usize, b: usize, h: usize, s: usize) -> &[f32] {
+        let dh = self.d_head;
+        match &self.store {
+            Store::Dense { v, .. } => {
+                let o = dense_offset(self.batch, self.n_heads, self.s_max, dh, l, b, h, s);
+                &v.data[o..o + dh]
+            }
+            Store::Paged(p) => {
+                let (page, po) =
+                    p.locate(self.n_prefix, b, s).expect("read of unmapped cache position");
+                let o = p.pool.slab_offset(page, l, h, po);
+                &p.pool.v[o..o + dh]
+            }
+        }
     }
 
     /// Valid entries (incl. prefix) in row `b`.
@@ -84,28 +425,131 @@ impl KvCache {
         self.s_max - self.max_len()
     }
 
+    /// Worst-case own pages a request of `plen` prompt tokens and `max_new`
+    /// budget can consume (0 for the dense layout).
+    fn worst_own_pages(&self, plen: usize, max_new: usize) -> usize {
+        match &self.store {
+            Store::Dense { .. } => 0,
+            Store::Paged(p) => {
+                let end = (self.n_prefix + plen + max_new).min(self.s_max);
+                div_ceil(end.saturating_sub(self.n_prefix), p.pool.page_size)
+            }
+        }
+    }
+
+    /// Can a request of this shape be admitted NOW without endangering any
+    /// already-admitted slot's reservation?  Dense rows always can (slot
+    /// availability is the engine's concern); paged admission is a
+    /// page-availability check.
+    pub fn can_admit(&self, plen: usize, max_new: usize) -> bool {
+        match &self.store {
+            Store::Dense { .. } => true,
+            Store::Paged(p) => {
+                p.pool.free_pages() >= p.uncommitted() + self.worst_own_pages(plen, max_new)
+            }
+        }
+    }
+
+    /// Could a request of this shape EVER be admitted (even into an idle
+    /// cache)?  False means waiting for pages is pointless — reject it.
+    pub fn admission_feasible(&self, plen: usize, max_new: usize) -> bool {
+        match &self.store {
+            Store::Dense { .. } => true,
+            Store::Paged(p) => {
+                p.prefix_pages.len() + self.worst_own_pages(plen, max_new) <= p.pool.n_pages
+            }
+        }
+    }
+
+    /// Reserve worst-case pages for an admitted request in `slot` so its
+    /// prefill/appends can never fail mid-flight.  No-op on the dense layout.
+    pub fn reserve(&mut self, slot: usize, plen: usize, max_new: usize) -> Result<()> {
+        if slot >= self.batch {
+            bail!("reserve slot {slot} out of range");
+        }
+        let worst = self.worst_own_pages(plen, max_new);
+        let clean = self.lens[slot] == self.n_prefix;
+        match &mut self.store {
+            Store::Dense { .. } => Ok(()),
+            Store::Paged(p) => {
+                if !clean || !p.own[slot].is_empty() {
+                    bail!("reserve on a dirty slot {slot}");
+                }
+                if p.pool.free_pages() < p.uncommitted() + worst {
+                    bail!(
+                        "cannot reserve {worst} pages for slot {slot} ({} free, {} promised)",
+                        p.pool.free_pages(),
+                        p.uncommitted()
+                    );
+                }
+                p.reserved[slot] = worst;
+                Ok(())
+            }
+        }
+    }
+
     /// Install the shared prefix into positions [0, n_prefix) of every row.
+    /// Dense: physically copied per row.  Paged: written once into refcounted
+    /// prefix pages mapped into every slot (one cache ref + one ref per slot).
     pub fn install_prefix(&mut self, p: &PrefixState) -> Result<()> {
         let n = p.n_prefix as usize;
-        if n == 0 {
-            self.lens.fill(0);
-            self.n_prefix = 0;
-            return Ok(());
-        }
         if n > self.s_max {
             bail!("prefix {} exceeds cache capacity {}", n, self.s_max);
         }
         let pcap = p.k.shape[2]; // padded prefix capacity P
         let dh = self.d_head;
-        for l in 0..self.n_layers {
-            for b in 0..self.batch {
-                for h in 0..self.n_heads {
-                    for s in 0..n {
-                        let src = ((l * self.n_heads + h) * pcap + s) * dh;
-                        let dst = self.offset(l, b, h, s);
-                        self.k.data[dst..dst + dh].copy_from_slice(&p.k.data[src..src + dh]);
-                        self.v.data[dst..dst + dh].copy_from_slice(&p.v.data[src..src + dh]);
+        match &mut self.store {
+            Store::Dense { k, v } => {
+                for l in 0..self.n_layers {
+                    for b in 0..self.batch {
+                        for h in 0..self.n_heads {
+                            // positions are contiguous in s on both sides:
+                            // one memcpy per (layer, row, head) span
+                            let src = (l * self.n_heads + h) * pcap * dh;
+                            let dst =
+                                dense_offset(self.batch, self.n_heads, self.s_max, dh, l, b, h, 0);
+                            let span = n * dh;
+                            k.data[dst..dst + span].copy_from_slice(&p.k.data[src..src + span]);
+                            v.data[dst..dst + span].copy_from_slice(&p.v.data[src..src + span]);
+                        }
                     }
+                }
+            }
+            Store::Paged(pg) => {
+                if pg.own.iter().any(|o| !o.is_empty()) {
+                    bail!("install_prefix on a cache with live slots");
+                }
+                // release any previous prefix mapping: the cache's base ref
+                // plus one mapping ref per slot
+                for page in std::mem::take(&mut pg.prefix_pages) {
+                    for _ in 0..self.batch + 1 {
+                        pg.pool.decref(page)?;
+                    }
+                }
+                let ps = pg.pool.page_size;
+                for i in 0..div_ceil(n, ps) {
+                    let page = pg.pool.alloc()?; // cache base ref
+                    for _ in 0..self.batch {
+                        pg.pool.incref(page)?; // one mapping ref per slot
+                    }
+                    let s0 = i * ps;
+                    let cnt = (n - s0).min(ps);
+                    for l in 0..self.n_layers {
+                        for h in 0..self.n_heads {
+                            let src = ((l * self.n_heads + h) * pcap + s0) * dh;
+                            let dst = pg.pool.slab_offset(page, l, h, 0);
+                            let span = cnt * dh;
+                            pg.pool.k[dst..dst + span]
+                                .copy_from_slice(&p.k.data[src..src + span]);
+                            pg.pool.v[dst..dst + span]
+                                .copy_from_slice(&p.v.data[src..src + span]);
+                        }
+                    }
+                    pg.prefix_pages.push(page);
+                }
+                // dense mirrors of the previous prefix are stale
+                for g in pg.generation.iter_mut() {
+                    *g += 1;
                 }
             }
         }
@@ -142,8 +586,9 @@ impl KvCache {
         if self.n_prefix + prompt_len > self.s_max {
             bail!("prompt too long: {} + {} > {}", self.n_prefix, prompt_len, self.s_max);
         }
-        // clean-slot discipline keeps "positions ≥ row_len are zero" true,
-        // which is what lets reset_slot bound its memset to the used region
+        // clean-slot discipline: dense rows rely on it to bound the
+        // retirement memset; paged slots rely on it so page tables only ever
+        // grow from empty
         if self.lens[slot] != self.n_prefix {
             bail!(
                 "prefill into dirty slot {slot} (len {}, prefix {}): reset_slot first",
@@ -151,13 +596,52 @@ impl KvCache {
                 self.n_prefix
             );
         }
-        for li in 0..l {
-            for hi in 0..h {
-                for si in 0..prompt_len {
-                    let src = (((li * b + src_row) * h + hi) * s + si) * dh;
-                    let dst = self.offset(li, slot, hi, self.n_prefix + si);
-                    self.k.data[dst..dst + dh].copy_from_slice(&k.data[src..src + dh]);
-                    self.v.data[dst..dst + dh].copy_from_slice(&v.data[src..src + dh]);
+        match &mut self.store {
+            Store::Dense { k: kc, v: vc } => {
+                for li in 0..l {
+                    for hi in 0..h {
+                        // positions are contiguous in s on both sides: one
+                        // memcpy per (layer, head) span
+                        let src = ((li * b + src_row) * h + hi) * s * dh;
+                        let dst = dense_offset(
+                            self.batch,
+                            self.n_heads,
+                            self.s_max,
+                            dh,
+                            li,
+                            slot,
+                            hi,
+                            self.n_prefix,
+                        );
+                        let span = prompt_len * dh;
+                        kc.data[dst..dst + span].copy_from_slice(&k.data[src..src + span]);
+                        vc.data[dst..dst + span].copy_from_slice(&v.data[src..src + span]);
+                    }
+                }
+            }
+            Store::Paged(pg) => {
+                let ps = pg.pool.page_size;
+                for idx in 0..div_ceil(prompt_len, ps) {
+                    pg.ensure_own_page(slot, idx)?;
+                }
+                for li in 0..l {
+                    for hi in 0..h {
+                        let src_base = ((li * b + src_row) * h + hi) * s * dh;
+                        let mut rel = 0;
+                        while rel < prompt_len {
+                            let (idx, po) = (rel / ps, rel % ps);
+                            let take = (ps - po).min(prompt_len - rel);
+                            let page = pg.own[slot][idx];
+                            let dst = pg.pool.slab_offset(page, li, hi, po);
+                            let src = src_base + rel * dh;
+                            let span = take * dh;
+                            pg.pool.k[dst..dst + span]
+                                .copy_from_slice(&k.data[src..src + span]);
+                            pg.pool.v[dst..dst + span]
+                                .copy_from_slice(&v.data[src..src + span]);
+                            rel += take;
+                        }
+                    }
                 }
             }
         }
@@ -179,30 +663,35 @@ impl KvCache {
     }
 
     /// Adopt the decode executable's updated caches wholesale and bump every
-    /// row (valid only when all rows advanced together, i.e. the decode step
-    /// ran with the whole batch at one shared cache_len).
+    /// row (valid only when all rows advanced together on the DENSE layout —
+    /// the paged store scatters per row via [`KvCache::append_rows`]).
     pub fn adopt(&mut self, k: Tensor, v: Tensor) -> Result<()> {
-        if k.shape != self.k.shape || v.shape != self.v.shape {
-            bail!("decode kv shape mismatch");
-        }
         let Some(len) = self.uniform_len() else {
             bail!("adopt requires uniform row lengths, got {:?}", self.lens);
         };
         if len + 1 > self.s_max {
             bail!("cache overflow at len {len}");
         }
-        self.k = k;
-        self.v = v;
+        let Store::Dense { k: kc, v: vc } = &mut self.store else {
+            bail!("adopt requires the dense layout");
+        };
+        if k.shape != kc.shape || v.shape != vc.shape {
+            bail!("decode kv shape mismatch");
+        }
+        *kc = k;
+        *vc = v;
         self.lens.fill(len + 1);
         Ok(())
     }
 
-    /// Copy the newly-written position `len` of `rows` from a decode
-    /// executable's full-shape K/V output and bump those rows only.  Rows not
-    /// listed keep their previous contents (the decode graph scribbles at
-    /// position `len` of every row; only the listed rows own that position).
+    /// Scatter the newly-written position `len` of `rows` from a decode
+    /// executable's full-shape [L, B, H, Smax, dh] K/V output and bump those
+    /// rows only.  Rows not listed keep their previous contents (the decode
+    /// graph scribbles at position `len` of every row; only the listed rows
+    /// own that position).  This is the scatter half of the paged shim.
     pub fn append_rows(&mut self, k: &Tensor, v: &Tensor, rows: &[usize], len: usize) -> Result<()> {
-        if k.shape != self.k.shape || v.shape != self.v.shape {
+        let want = vec![self.n_layers, self.batch, self.n_heads, self.s_max, self.d_head];
+        if k.shape != want || v.shape != want {
             bail!("decode kv shape mismatch: {:?}", k.shape);
         }
         if len + 1 > self.s_max {
@@ -216,11 +705,50 @@ impl KvCache {
             if self.lens[row] != len {
                 bail!("append_rows: row {row} has len {}, group len {len}", self.lens[row]);
             }
-            for l in 0..self.n_layers {
-                for h in 0..self.n_heads {
-                    let off = self.offset(l, row, h, len);
-                    self.k.data[off..off + dh].copy_from_slice(&k.data[off..off + dh]);
-                    self.v.data[off..off + dh].copy_from_slice(&v.data[off..off + dh]);
+            if len < self.n_prefix {
+                bail!("append_rows into the prefix region (len {len})");
+            }
+            match &mut self.store {
+                Store::Dense { k: kc, v: vc } => {
+                    for l in 0..self.n_layers {
+                        for h in 0..self.n_heads {
+                            let off = dense_offset(
+                                self.batch,
+                                self.n_heads,
+                                self.s_max,
+                                dh,
+                                l,
+                                row,
+                                h,
+                                len,
+                            );
+                            kc.data[off..off + dh].copy_from_slice(&k.data[off..off + dh]);
+                            vc.data[off..off + dh].copy_from_slice(&v.data[off..off + dh]);
+                        }
+                    }
+                }
+                Store::Paged(pg) => {
+                    let ps = pg.pool.page_size;
+                    let rel = len - self.n_prefix;
+                    let page = pg.ensure_own_page(row, rel / ps)?;
+                    let po = rel % ps;
+                    for l in 0..self.n_layers {
+                        for h in 0..self.n_heads {
+                            let src = dense_offset(
+                                self.batch,
+                                self.n_heads,
+                                self.s_max,
+                                dh,
+                                l,
+                                row,
+                                h,
+                                len,
+                            );
+                            let dst = pg.pool.slab_offset(page, l, h, po);
+                            pg.pool.k[dst..dst + dh].copy_from_slice(&k.data[src..src + dh]);
+                            pg.pool.v[dst..dst + dh].copy_from_slice(&v.data[src..src + dh]);
+                        }
+                    }
                 }
             }
             self.lens[row] = len + 1;
@@ -243,42 +771,211 @@ impl KvCache {
             bail!("cache overflow at len {len}");
         }
         let dh = self.d_head;
-        for l in 0..self.n_layers {
-            for h in 0..self.n_heads {
-                let src = (l * self.n_heads + h) * dh;
-                let dst = self.offset(l, slot, h, len);
-                self.k.data[dst..dst + dh].copy_from_slice(&k.data[src..src + dh]);
-                self.v.data[dst..dst + dh].copy_from_slice(&v.data[src..src + dh]);
+        match &mut self.store {
+            Store::Dense { k: kc, v: vc } => {
+                for l in 0..self.n_layers {
+                    for h in 0..self.n_heads {
+                        let src = (l * self.n_heads + h) * dh;
+                        let dst =
+                            dense_offset(self.batch, self.n_heads, self.s_max, dh, l, slot, h, len);
+                        kc.data[dst..dst + dh].copy_from_slice(&k.data[src..src + dh]);
+                        vc.data[dst..dst + dh].copy_from_slice(&v.data[src..src + dh]);
+                    }
+                }
+            }
+            Store::Paged(pg) => {
+                let ps = pg.pool.page_size;
+                let rel = len - self.n_prefix;
+                let page = pg.ensure_own_page(slot, rel / ps)?;
+                let po = rel % ps;
+                for l in 0..self.n_layers {
+                    for h in 0..self.n_heads {
+                        let src = (l * self.n_heads + h) * dh;
+                        let dst = pg.pool.slab_offset(page, l, h, po);
+                        pg.pool.k[dst..dst + dh].copy_from_slice(&k.data[src..src + dh]);
+                        pg.pool.v[dst..dst + dh].copy_from_slice(&v.data[src..src + dh]);
+                    }
+                }
             }
         }
         self.lens[slot] = len + 1;
         Ok(())
     }
 
-    /// Retire a slot: zero the row's occupied non-prefix positions and reset
-    /// its length to the prefix, so the next occupant starts from a clean row
-    /// and the shared prefix entries survive untouched.  Positions beyond the
-    /// occupied region are zero by construction (fresh caches are zeroed and
-    /// writes only ever advance `lens`), so only [n_prefix, row_len) needs
-    /// the memset — retirement cost scales with what the sequence used, not
-    /// with cache capacity.
+    /// Retire a slot so the next occupant starts clean with the shared prefix
+    /// intact.
+    ///
+    /// Dense: zero the row's occupied non-prefix positions (cost scales with
+    /// what the sequence used).  Paged: drop the slot's own-page references —
+    /// prefix pages keep the cache's base ref plus every OTHER slot's mapping
+    /// ref, freed pages go back to the pool unzeroed, and no KV byte is
+    /// touched: retirement is O(pages held), independent of tokens stored.
     pub fn reset_slot(&mut self, slot: usize) -> Result<()> {
         if slot >= self.batch {
             bail!("reset slot {slot} out of range");
         }
-        let used = self.lens[slot].min(self.s_max);
-        if self.n_prefix < used {
-            let span = (used - self.n_prefix) * self.d_head;
-            for l in 0..self.n_layers {
-                for h in 0..self.n_heads {
-                    let start = self.offset(l, slot, h, self.n_prefix);
-                    self.k.data[start..start + span].fill(0.0);
-                    self.v.data[start..start + span].fill(0.0);
+        match &mut self.store {
+            Store::Dense { k, v } => {
+                let used = self.lens[slot].min(self.s_max);
+                if self.n_prefix < used {
+                    let span = (used - self.n_prefix) * self.d_head;
+                    for l in 0..self.n_layers {
+                        for h in 0..self.n_heads {
+                            let start = dense_offset(
+                                self.batch,
+                                self.n_heads,
+                                self.s_max,
+                                self.d_head,
+                                l,
+                                slot,
+                                h,
+                                self.n_prefix,
+                            );
+                            k.data[start..start + span].fill(0.0);
+                            v.data[start..start + span].fill(0.0);
+                        }
+                    }
                 }
+            }
+            Store::Paged(pg) => {
+                while let Some(page) = pg.own[slot].pop() {
+                    pg.pool.decref(page)?;
+                }
+                pg.reserved[slot] = 0;
+                pg.generation[slot] += 1;
             }
         }
         self.lens[slot] = self.n_prefix;
         Ok(())
+    }
+
+    /// Dense view of the cache for the fixed-geometry executables (the gather
+    /// half of the `ModelBackend` shim).  Dense layout: the storage itself.
+    /// Paged: an incrementally-mirrored [L, B, H, Smax, dh] scratch — only
+    /// positions written since the last gather of each requested row are
+    /// copied, so steady-state decode gathers O(1) positions per row.
+    pub fn gather_dense(&mut self, rows: &[usize]) -> Result<(&Tensor, &Tensor)> {
+        let (batch, s_max) = (self.batch, self.s_max);
+        let shape = [self.n_layers, batch, self.n_heads, s_max, self.d_head];
+        let n_prefix = self.n_prefix;
+        let lens = &self.lens;
+        match &mut self.store {
+            Store::Dense { k, v } => Ok((&*k, &*v)),
+            Store::Paged(pg) => {
+                if pg.view.is_none() {
+                    pg.view = Some(DenseView {
+                        k: Tensor::zeros(&shape),
+                        v: Tensor::zeros(&shape),
+                        mirrored: vec![0; batch],
+                        // generation counters start at 0: force a full first copy
+                        gen: vec![u64::MAX; batch],
+                    });
+                }
+                let Paged { pool, prefix_pages, own, generation, view, .. } = pg;
+                let view = view.as_mut().expect("view allocated above");
+                for &row in rows {
+                    if row >= batch {
+                        bail!("gather row {row} out of range");
+                    }
+                    let len = lens[row];
+                    let start = if view.gen[row] == generation[row] {
+                        view.mirrored[row].min(len)
+                    } else {
+                        0
+                    };
+                    copy_pages_to_dense(
+                        pool,
+                        prefix_pages,
+                        &own[row],
+                        n_prefix,
+                        row,
+                        start,
+                        len,
+                        &mut view.k,
+                        &mut view.v,
+                        batch,
+                        s_max,
+                    )?;
+                    view.mirrored[row] = len;
+                    view.gen[row] = generation[row];
+                }
+                Ok((&view.k, &view.v))
+            }
+        }
+    }
+
+    // ---- capacity reporting ------------------------------------------------
+
+    /// Bytes resident for KV storage (dense block, or page pool plus the
+    /// dense shim scratch when one has been materialized).
+    pub fn resident_kv_bytes(&self) -> usize {
+        match &self.store {
+            Store::Dense { k, .. } => 2 * 4 * k.data.len(),
+            Store::Paged(p) => {
+                let mut bytes = p.pool.n_pages * p.pool.page_bytes();
+                if let Some(view) = &p.view {
+                    bytes += 2 * 4 * view.k.data.len();
+                }
+                bytes
+            }
+        }
+    }
+
+    /// Bytes of KV actually holding live sequence state (dense: live
+    /// positions; paged: mapped pages).
+    pub fn used_kv_bytes(&self) -> usize {
+        match &self.store {
+            Store::Dense { .. } => {
+                let pos_bytes = 2 * 4 * self.n_layers * self.n_heads * self.d_head;
+                self.lens.iter().sum::<usize>() * pos_bytes
+            }
+            Store::Paged(p) => p.pool.used_pages() * p.pool.page_bytes(),
+        }
+    }
+
+    pub fn page_size(&self) -> Option<usize> {
+        match &self.store {
+            Store::Dense { .. } => None,
+            Store::Paged(p) => Some(p.pool.page_size),
+        }
+    }
+
+    pub fn total_pages(&self) -> Option<usize> {
+        match &self.store {
+            Store::Dense { .. } => None,
+            Store::Paged(p) => Some(p.pool.n_pages),
+        }
+    }
+
+    pub fn free_pages(&self) -> Option<usize> {
+        match &self.store {
+            Store::Dense { .. } => None,
+            Store::Paged(p) => Some(p.pool.free_pages()),
+        }
+    }
+
+    /// Page ids of the shared prefix (paged layout; empty for dense).
+    pub fn prefix_page_ids(&self) -> &[u32] {
+        match &self.store {
+            Store::Dense { .. } => &[],
+            Store::Paged(p) => &p.prefix_pages,
+        }
+    }
+
+    /// Refcount of `page` (paged layout only).
+    pub fn page_refcount(&self, page: u32) -> Option<u32> {
+        match &self.store {
+            Store::Dense { .. } => None,
+            Store::Paged(p) => Some(p.pool.refcount(page)),
+        }
+    }
+
+    /// Page ids mapped into `slot`'s own (non-prefix) region.
+    pub fn own_page_ids(&self, slot: usize) -> &[u32] {
+        match &self.store {
+            Store::Dense { .. } => &[],
+            Store::Paged(p) => &p.own[slot],
+        }
     }
 }
 
@@ -321,51 +1018,76 @@ mod tests {
         }
     }
 
+    fn paged(page_size: usize) -> KvLayout {
+        KvLayout::Paged { page_size, n_pages: 0 }
+    }
+
+    fn layouts() -> [KvLayout; 2] {
+        [KvLayout::Dense, paged(4)]
+    }
+
     #[test]
     fn prefix_shared_across_rows() {
         let c = cfg();
-        let mut kv = KvCache::new(&c, 3);
-        kv.install_prefix(&prefix(&c, 2)).unwrap();
-        assert_eq!(kv.lens(), &[2, 2, 2]);
-        // row 0 and row 2 hold identical prefix entries
-        for l in 0..c.n_layers {
-            for h in 0..c.n_heads {
-                for s in 0..2 {
-                    let a = kv.offset(l, 0, h, s);
-                    let b = kv.offset(l, 2, h, s);
-                    assert_eq!(kv.k.data[a..a + 4], kv.k.data[b..b + 4]);
+        for layout in layouts() {
+            let mut kv = KvCache::with_layout(&c, 3, layout);
+            kv.install_prefix(&prefix(&c, 2)).unwrap();
+            assert_eq!(kv.lens(), &[2, 2, 2]);
+            // row 0 and row 2 hold identical prefix entries
+            for l in 0..c.n_layers {
+                for h in 0..c.n_heads {
+                    for s in 0..2 {
+                        assert_eq!(kv.k_at(l, 0, h, s), kv.k_at(l, 2, h, s));
+                    }
                 }
             }
         }
     }
 
     #[test]
+    fn paged_prefix_is_mapped_not_copied() {
+        let c = cfg();
+        let mut kv = KvCache::with_layout(&c, 3, paged(4));
+        kv.install_prefix(&prefix(&c, 2)).unwrap();
+        // one physical page serves all three slots: refcount = slots + cache
+        assert_eq!(kv.prefix_page_ids().len(), 1);
+        let pg = kv.prefix_page_ids()[0];
+        assert_eq!(kv.page_refcount(pg), Some(4));
+        // retiring a slot must not release the shared prefix
+        kv.reset_slot(1).unwrap();
+        assert_eq!(kv.page_refcount(pg), Some(4));
+        assert_eq!(kv.k_at(0, 1, 0, 0), kv.k_at(0, 0, 0, 0));
+    }
+
+    #[test]
     fn prefill_goes_after_prefix() {
         let c = cfg();
-        let mut kv = KvCache::new(&c, 2);
-        kv.install_prefix(&prefix(&c, 2)).unwrap();
-        let shape = [c.n_layers, 2, c.n_heads, 5, c.d_head];
-        let k = Tensor::full(&shape, 7.0);
-        kv.write_prefill(&k, &k, 5).unwrap();
-        assert_eq!(kv.uniform_len(), Some(7));
-        let o = kv.offset(0, 0, 0, 2);
-        assert_eq!(kv.k.data[o], 7.0); // first prompt slot right after prefix
-        let o1 = kv.offset(0, 0, 0, 1);
-        assert_ne!(kv.k.data[o1], 7.0); // prefix untouched
+        for layout in layouts() {
+            let mut kv = KvCache::with_layout(&c, 2, layout);
+            kv.install_prefix(&prefix(&c, 2)).unwrap();
+            let shape = [c.n_layers, 2, c.n_heads, 5, c.d_head];
+            let k = Tensor::full(&shape, 7.0);
+            kv.write_prefill(&k, &k, 5).unwrap();
+            assert_eq!(kv.uniform_len(), Some(7));
+            assert_eq!(kv.k_at(0, 0, 0, 2)[0], 7.0); // first prompt slot after prefix
+            assert_ne!(kv.k_at(0, 0, 0, 1)[0], 7.0); // prefix untouched
+        }
     }
 
     #[test]
     fn overflow_rejected() {
         let c = cfg();
-        let mut kv = KvCache::new(&c, 1);
-        kv.install_prefix(&prefix(&c, 2)).unwrap();
-        let shape = [c.n_layers, 1, c.n_heads, 20, c.d_head];
-        let k = Tensor::zeros(&shape);
-        assert!(kv.write_prefill_row(0, &k, &k, 0, 20).is_err());
+        for layout in layouts() {
+            let mut kv = KvCache::with_layout(&c, 1, layout);
+            kv.install_prefix(&prefix(&c, 2)).unwrap();
+            let shape = [c.n_layers, 1, c.n_heads, 20, c.d_head];
+            let k = Tensor::zeros(&shape);
+            assert!(kv.write_prefill_row(0, &k, &k, 0, 20).is_err());
+        }
     }
 
     #[test]
-    fn per_slot_write_and_reset() {
+    fn per_slot_write_and_reset_dense() {
         let c = cfg();
         let mut kv = KvCache::new(&c, 3);
         kv.install_prefix(&prefix(&c, 2)).unwrap();
@@ -375,41 +1097,156 @@ mod tests {
         kv.write_prefill_row(1, &k, &k, 0, 4).unwrap();
         assert_eq!(kv.lens(), &[2, 6, 2]);
         // neighbours untouched
-        assert_eq!(kv.k.data[kv.offset(0, 0, 0, 2)], 0.0);
-        assert_eq!(kv.k.data[kv.offset(0, 2, 0, 2)], 0.0);
-        assert_eq!(kv.k.data[kv.offset(0, 1, 0, 2)], 9.0);
+        assert_eq!(kv.k_at(0, 0, 0, 2)[0], 0.0);
+        assert_eq!(kv.k_at(0, 2, 0, 2)[0], 0.0);
+        assert_eq!(kv.k_at(0, 1, 0, 2)[0], 9.0);
 
         // append one decoded token
         let step = Tensor::full(&[c.n_layers, c.n_heads, c.d_head], 3.0);
         kv.append_token_row(1, &step, &step).unwrap();
         assert_eq!(kv.row_len(1), 7);
-        assert_eq!(kv.k.data[kv.offset(0, 1, 0, 6)], 3.0);
+        assert_eq!(kv.k_at(0, 1, 0, 6)[0], 3.0);
 
         // retire: non-prefix region zeroed, prefix survives
         kv.reset_slot(1).unwrap();
         assert_eq!(kv.row_len(1), 2);
         for s in 2..kv.s_max {
-            let o = kv.offset(0, 1, 0, s);
-            assert_eq!(kv.k.data[o..o + c.d_head], [0.0; 4]);
+            assert_eq!(kv.k_at(0, 1, 0, s), [0.0; 4]);
         }
-        let p = kv.offset(0, 1, 0, 1);
-        assert_eq!(kv.k.data[p], kv.k.data[kv.offset(0, 0, 0, 1)]); // prefix intact
+        assert_eq!(kv.k_at(0, 1, 0, 1), kv.k_at(0, 0, 0, 1)); // prefix intact
+    }
+
+    #[test]
+    fn paged_slot_lifecycle_reuses_pages_without_memset() {
+        let c = cfg();
+        let mut kv = KvCache::with_layout(&c, 2, paged(4));
+        kv.install_prefix(&prefix(&c, 2)).unwrap();
+        let free0 = kv.free_pages().unwrap();
+
+        let shape = [c.n_layers, 1, c.n_heads, 6, c.d_head];
+        let k = Tensor::full(&shape, 9.0);
+        kv.write_prefill_row(1, &k, &k, 0, 6).unwrap();
+        assert_eq!(kv.row_len(1), 8);
+        // 6 own positions after a 2-token prefix at page_size 4 → 2 pages
+        let pages: Vec<u32> = kv.own_page_ids(1).to_vec();
+        assert_eq!(pages.len(), 2);
+        assert_eq!(kv.free_pages().unwrap(), free0 - 2);
+        assert_eq!(kv.k_at(0, 1, 0, 5)[0], 9.0);
+
+        // O(1) retirement: pages return to the pool, nothing is zeroed
+        kv.reset_slot(1).unwrap();
+        assert_eq!(kv.row_len(1), 2);
+        assert_eq!(kv.free_pages().unwrap(), free0);
+        for &p in &pages {
+            assert_eq!(kv.page_refcount(p), Some(0));
+        }
+
+        // the next occupant reuses the freed pages (LIFO) and its own writes
+        // fully determine what it reads back
+        let k2 = Tensor::full(&shape, 5.0);
+        kv.write_prefill_row(1, &k2, &k2, 0, 6).unwrap();
+        let reused: Vec<u32> = kv.own_page_ids(1).to_vec();
+        assert!(reused.iter().all(|p| pages.contains(p)), "freed pages must be reused");
+        for s in 2..8 {
+            assert_eq!(kv.k_at(0, 1, 0, s), [5.0; 4]);
+        }
     }
 
     #[test]
     fn append_rows_updates_only_group() {
         let c = cfg();
-        let mut kv = KvCache::new(&c, 2);
+        for layout in layouts() {
+            let mut kv = KvCache::with_layout(&c, 2, layout);
+            kv.install_prefix(&prefix(&c, 2)).unwrap();
+            let shape = [c.n_layers, 2, c.n_heads, 3, c.d_head];
+            let k = Tensor::full(&shape, 1.0);
+            kv.write_prefill(&k, &k, 3).unwrap(); // both rows at len 5
+            let full = Tensor::full(&[c.n_layers, 2, c.n_heads, c.cache_max, c.d_head], 5.0);
+            kv.append_rows(&full.clone(), &full, &[0], 5).unwrap();
+            assert_eq!(kv.lens(), &[6, 5]);
+            assert_eq!(kv.k_at(0, 0, 0, 5)[0], 5.0);
+            assert_eq!(kv.k_at(0, 1, 0, 4)[0], 1.0); // row 1 untouched
+            // group-length mismatch rejected
+            assert!(kv.append_rows(&full.clone(), &full.clone(), &[0], 5).is_err());
+        }
+    }
+
+    #[test]
+    fn paged_admission_accounting() {
+        let c = cfg(); // cache_max 16
+        // pool of 7 pages at page_size 4; prefix takes 1
+        let mut kv = KvCache::with_layout(&c, 4, KvLayout::Paged { page_size: 4, n_pages: 7 });
         kv.install_prefix(&prefix(&c, 2)).unwrap();
-        let shape = [c.n_layers, 2, c.n_heads, 3, c.d_head];
-        let k = Tensor::full(&shape, 1.0);
-        kv.write_prefill(&k, &k, 3).unwrap(); // both rows at len 5
-        let full = Tensor::full(&[c.n_layers, 2, c.n_heads, c.cache_max, c.d_head], 5.0);
+        assert_eq!(kv.free_pages(), Some(6));
+
+        // plen 5 + max_new 3 → span 8 → 2 pages
+        assert!(kv.can_admit(5, 3));
+        kv.reserve(0, 5, 3).unwrap();
+        kv.reserve(1, 5, 3).unwrap();
+        kv.reserve(2, 5, 3).unwrap();
+        // 6 pages promised: a fourth reservation must be refused
+        assert!(!kv.can_admit(5, 3));
+        assert!(kv.reserve(3, 5, 3).is_err());
+        // every free page is promised, so even a one-page request must wait
+        assert!(!kv.can_admit(1, 1));
+        // feasibility is about the POOL, not the current free count: the
+        // worst shape (span capped at s_max → 4 own pages + 1 prefix ≤ 7)
+        // still fits this pool, but not a 4-page pool
+        assert!(kv.admission_feasible(16, 16));
+        let mut tiny = KvCache::with_layout(&c, 4, KvLayout::Paged { page_size: 4, n_pages: 4 });
+        tiny.install_prefix(&prefix(&c, 2)).unwrap();
+        assert!(!tiny.admission_feasible(16, 16)); // 1 prefix + 4 own > 4
+        assert!(tiny.admission_feasible(5, 3));
+
+        // writes inside the reservation always succeed
+        let shape = [c.n_layers, 1, c.n_heads, 5, c.d_head];
+        let k = Tensor::full(&shape, 2.0);
+        kv.write_prefill_row(0, &k, &k, 0, 5).unwrap();
+        let step = Tensor::full(&[c.n_layers, c.n_heads, c.d_head], 3.0);
+        kv.append_token_row(0, &step, &step).unwrap();
+
+        // retiring releases both pages and the reservation
+        kv.reset_slot(0).unwrap();
+        kv.reset_slot(1).unwrap();
+        kv.reset_slot(2).unwrap();
+        assert_eq!(kv.free_pages(), Some(6));
+        assert!(kv.can_admit(5, 3));
+    }
+
+    #[test]
+    fn gather_dense_mirrors_pages() {
+        let c = cfg();
+        let mut kv = KvCache::with_layout(&c, 2, paged(4));
+        kv.install_prefix(&prefix(&c, 2)).unwrap();
+        let shape = [c.n_layers, 1, c.n_heads, 3, c.d_head];
+        let k = Tensor::full(&shape, 6.0);
+        kv.write_prefill_row(0, &k, &k, 0, 3).unwrap();
+
+        let want_prefix: Vec<f32> = kv.k_at(0, 0, 0, 1).to_vec();
+        {
+            let (dk, _dv) = kv.gather_dense(&[0]).unwrap();
+            assert_eq!(dk.shape, vec![c.n_layers, 2, c.n_heads, c.cache_max, c.d_head]);
+            let o = dense_offset(2, c.n_heads, c.cache_max, c.d_head, 0, 0, 0, 2);
+            assert_eq!(dk.data[o], 6.0);
+            let op = dense_offset(2, c.n_heads, c.cache_max, c.d_head, 0, 0, 0, 1);
+            assert_eq!(&dk.data[op..op + c.d_head], want_prefix.as_slice());
+        }
+
+        // scatter one decode position back, then re-gather: the view picks up
+        // exactly the new position
+        let full = Tensor::full(&[c.n_layers, 2, c.n_heads, c.cache_max, c.d_head], 8.0);
         kv.append_rows(&full.clone(), &full, &[0], 5).unwrap();
-        assert_eq!(kv.lens(), &[6, 5]);
-        assert_eq!(kv.k.data[kv.offset(0, 0, 0, 5)], 5.0);
-        assert_eq!(kv.k.data[kv.offset(0, 1, 0, 5)], 0.0); // row 1 untouched
-        // group-length mismatch rejected
-        assert!(kv.append_rows(&full.clone(), &full.clone(), &[0], 5).is_err());
+        let (dk, _dv) = kv.gather_dense(&[0]).unwrap();
+        let o5 = dense_offset(2, c.n_heads, c.cache_max, c.d_head, 0, 0, 0, 5);
+        assert_eq!(dk.data[o5], 8.0);
+
+        // slot reuse invalidates the mirror: a fresh occupant's gather must
+        // not show the old sequence
+        kv.reset_slot(0).unwrap();
+        let k2 = Tensor::full(&shape, 1.5);
+        kv.write_prefill_row(0, &k2, &k2, 0, 3).unwrap();
+        let (dk, _dv) = kv.gather_dense(&[0]).unwrap();
+        let o2 = dense_offset(2, c.n_heads, c.cache_max, c.d_head, 0, 0, 0, 2);
+        assert_eq!(dk.data[o2], 1.5);
     }
 }

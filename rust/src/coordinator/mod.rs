@@ -1,6 +1,7 @@
 //! L3 serving coordinator: dynamic batcher, prefill/decode scheduler,
-//! KV-cache manager with shared prefixed entries, thread-based server, and
-//! the continuous-batching engine.
+//! KV-cache manager with shared prefixed entries (dense or paged layout —
+//! see [`kvcache::KvLayout`]), thread-based server, and the
+//! continuous-batching engine.
 //!
 //! The paper's serving claim (Table 5: static quantization gives 1.2-1.3×
 //! faster prefill than dynamic) is exercised here: the prefill path runs the
@@ -23,6 +24,6 @@ pub mod server;
 
 pub use batcher::{Batcher, Pending};
 pub use continuous::{ContinuousEngine, ModelBackend, SimBackend};
-pub use kvcache::KvCache;
+pub use kvcache::{KvCache, KvLayout, PagePool};
 pub use request::{GenRequest, GenResponse, Metrics, Reply, StreamEvent};
 pub use server::{EngineKind, Server, ServerConfig};

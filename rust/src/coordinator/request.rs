@@ -93,6 +93,14 @@ pub struct Metrics {
     pub sum_prefill_s: f64,
     /// wall time the engine was busy (prefill + decode)
     pub sum_busy_s: f64,
+    /// slots decoding at report time (continuous engine; 0 for batch)
+    pub active_slots: usize,
+    /// bytes resident for KV storage (page pool or dense block + shim view)
+    pub kv_resident_bytes: usize,
+    /// bytes of KV holding live sequence state (mapped pages / live rows)
+    pub kv_used_bytes: usize,
+    /// admissions that waited at the queue head for free KV pages
+    pub deferred_admissions: usize,
 }
 
 impl Metrics {

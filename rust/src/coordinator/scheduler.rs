@@ -20,11 +20,16 @@ use anyhow::Result;
 use crate::model::{Model, QuantMode};
 
 use super::continuous::{self, ModelBackend};
+use super::kvcache::KvLayout;
 use super::request::{GenRequest, GenResponse};
 
 /// Run one wave of requests to completion (len ≤ exec batch).  `mode` selects
 /// the prefill executable; decode always runs the static executable (with
 /// near-lossless qmax when the model is not statically quantized).
+///
+/// Pinned to the DENSE cache layout: this is the parity baseline, so the
+/// continuous engine's paged cache is checked against an independent storage
+/// implementation, not against itself.
 pub fn run_batch(
     model: &Model,
     mode: QuantMode,
@@ -32,6 +37,6 @@ pub fn run_batch(
     bos: i32,
     pad: i32,
 ) -> Result<Vec<GenResponse>> {
-    let backend = ModelBackend::new(model, mode, bos, pad)?;
+    let backend = ModelBackend::new(model, mode, bos, pad)?.with_kv_layout(KvLayout::Dense);
     continuous::run_to_completion(&backend, reqs)
 }

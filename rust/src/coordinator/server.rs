@@ -12,7 +12,10 @@
 //!   admitted into free KV slots between decode rounds regardless of prompt
 //!   length, tokens stream per request as they are produced, and
 //!   `batch_window`/`max_batch` are ignored (admission is greedy, slots come
-//!   from the executable batch geometry).
+//!   from the executable batch geometry).  Its cache layout comes from
+//!   `ServerConfig::kv` (paged by default in the binaries); [`Server::metrics`]
+//!   reports resident/used KV bytes and page back-pressure so operators can
+//!   size the pool.
 //!
 //! Clients get responses over per-request channels: [`Server::submit`] for
 //! one aggregate response, [`Server::submit_stream`] for per-token events.
@@ -28,6 +31,7 @@ use crate::model::{Model, QuantMode};
 
 use super::batcher::Batcher;
 use super::continuous::{ContinuousEngine, ModelBackend};
+use super::kvcache::KvLayout;
 use super::request::{GenRequest, GenResponse, Metrics, Reply, StreamEvent};
 use super::scheduler;
 
@@ -61,6 +65,9 @@ pub struct ServerConfig {
     pub batch_window: Duration,
     pub bos: i32,
     pub pad: i32,
+    /// KV storage layout for the continuous engine (the batch engine always
+    /// runs the dense baseline via `scheduler::run_batch`)
+    pub kv: KvLayout,
 }
 
 impl Server {
@@ -304,7 +311,7 @@ fn make_engine<'m>(
     model: &'m Model,
     cfg: &ServerConfig,
 ) -> Result<ContinuousEngine<ModelBackend<'m>>> {
-    let backend = ModelBackend::new(model, cfg.mode, cfg.bos, cfg.pad)?;
+    let backend = ModelBackend::new(model, cfg.mode, cfg.bos, cfg.pad)?.with_kv_layout(cfg.kv);
     ContinuousEngine::new(backend)
 }
 

@@ -259,6 +259,8 @@ fn cmd_gen(c: &Ctx, args: &Args) -> Result<()> {
             batch_window: Duration::from_millis(5),
             bos: tok.spec.bos,
             pad: tok.spec.pad,
+            // paged KV with a dense-equivalent auto-sized pool
+            kv: prefixquant::coordinator::KvLayout::Paged { page_size: 16, n_pages: 0 },
         },
     )?;
     let req = GenRequest { id: 1, prompt: tok.encode(&prompt_text, false), max_new: n };

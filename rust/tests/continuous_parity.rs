@@ -9,11 +9,13 @@
 use std::collections::HashMap;
 
 use prefixquant::coordinator::continuous::{run_to_completion, ContinuousEngine, SimBackend};
-use prefixquant::coordinator::{GenRequest, StreamEvent};
+use prefixquant::coordinator::{GenRequest, KvLayout, StreamEvent};
 use prefixquant::util::rng::SplitMix64;
 
 const B_EXEC: usize = 4;
 
+/// Paged cache by default (SimBackend reads the page tables directly), so
+/// every parity assertion in this file exercises the paged layout.
 fn make_backend() -> SimBackend {
     SimBackend::new(B_EXEC, 24, 3, 64)
 }
@@ -92,6 +94,112 @@ fn continuous_engine_matches_sequential_baseline() {
         assert_eq!(tokens.len(), max_new, "whole budget generated");
         assert!(done.total_s >= done.ttft_s && done.ttft_s >= done.queue_s);
     }
+}
+
+/// The paged engine must emit the streams the dense engine emits, request by
+/// request, on the mid-flight-admission workload: the page tables are a pure
+/// storage change, invisible in the token streams.
+#[test]
+fn paged_engine_matches_dense_engine() {
+    let reqs = workload();
+    let mut streams_by_layout = Vec::new();
+    for layout in [KvLayout::Dense, KvLayout::Paged { page_size: 8, n_pages: 0 }] {
+        let mut engine =
+            ContinuousEngine::new(make_backend().with_kv_layout(layout)).unwrap();
+        let rxs: Vec<_> = reqs.iter().map(|r| (r.id, engine.submit_stream(r.clone()))).collect();
+        engine.run_to_idle().unwrap();
+        let mut streams: HashMap<u64, Vec<i32>> = HashMap::new();
+        for (id, rx) in rxs {
+            let mut tokens = Vec::new();
+            while let Ok(ev) = rx.try_recv() {
+                match ev {
+                    StreamEvent::Token(t) => tokens.push(t),
+                    StreamEvent::Done(_) => break,
+                    StreamEvent::Error(e) => panic!("request {id} failed: {e}"),
+                }
+            }
+            streams.insert(id, tokens);
+        }
+        streams_by_layout.push(streams);
+    }
+    for r in &reqs {
+        assert_eq!(
+            streams_by_layout[0][&r.id], streams_by_layout[1][&r.id],
+            "request {} diverged between dense and paged layouts",
+            r.id
+        );
+    }
+}
+
+/// A page pool too small for full-slot concurrency throttles admission (FCFS
+/// head-of-queue wait) without corrupting, reordering, or dropping streams.
+#[test]
+fn page_pressure_defers_admission_without_corruption() {
+    // prefix 3 → 1 page; each request spans ≤ (5+1)+6 = 12 own positions →
+    // 2 pages at page_size 8; a 5-page budget beyond the prefix admits at
+    // most two requests concurrently even though four slots exist
+    let be = SimBackend::new(B_EXEC, 24, 3, 64)
+        .with_kv_layout(KvLayout::Paged { page_size: 8, n_pages: 6 });
+    let solo = SimBackend::new(B_EXEC, 24, 3, 64);
+    let reqs: Vec<GenRequest> = (0..10)
+        .map(|id| GenRequest {
+            id,
+            prompt: vec![4 + id as i32, 9, 2 + (id % 3) as i32, 7, 5],
+            max_new: 6,
+        })
+        .collect();
+
+    let mut engine = ContinuousEngine::new(be).unwrap();
+    let streams: Vec<_> = reqs.iter().map(|r| (r.id, engine.submit_stream(r.clone()))).collect();
+    engine.run_to_idle().unwrap();
+
+    assert_eq!(engine.stats.completed, reqs.len());
+    assert_eq!(engine.stats.rejected, 0);
+    assert!(
+        engine.stats.deferred_admissions > 0,
+        "pool of 6 pages must throttle admission; stats: {:?}",
+        engine.stats
+    );
+    assert!(engine.stats.peak_active_slots <= 2, "2-page requests over 5 spare pages");
+    for (id, rx) in streams {
+        let want = run_to_completion(&solo, &[reqs[id as usize].clone()]).unwrap();
+        let mut tokens = Vec::new();
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                StreamEvent::Token(t) => tokens.push(t),
+                StreamEvent::Done(_) => break,
+                StreamEvent::Error(e) => panic!("request {id} failed: {e}"),
+            }
+        }
+        assert_eq!(tokens, want[0].tokens, "request {id} corrupted under page pressure");
+    }
+    // every page is back in the pool once the engine drains
+    let kv = engine.kv();
+    assert_eq!(kv.free_pages(), Some(kv.total_pages().unwrap() - kv.prefix_page_ids().len()));
+}
+
+/// A request whose worst-case span could never fit the pool is rejected
+/// outright (waiting would wedge the FCFS queue forever).
+#[test]
+fn infeasible_page_span_is_rejected_not_wedged() {
+    let be = SimBackend::new(2, 24, 3, 64)
+        .with_kv_layout(KvLayout::Paged { page_size: 8, n_pages: 6 });
+    let mut engine = ContinuousEngine::new(be).unwrap();
+    // span 11 + 60 capped at s_max 64 → 8 pages > 5 spare: infeasible
+    let bad = engine.submit_stream(GenRequest { id: 1, prompt: vec![5; 10], max_new: 60 });
+    let good = engine.submit_stream(GenRequest { id: 2, prompt: vec![5, 6], max_new: 2 });
+    engine.run_to_idle().unwrap();
+    assert!(matches!(bad.try_recv().unwrap(), StreamEvent::Error(_)));
+    let mut saw_done = false;
+    while let Ok(ev) = good.try_recv() {
+        if let StreamEvent::Done(r) = ev {
+            assert_eq!(r.tokens.len(), 2);
+            saw_done = true;
+        }
+    }
+    assert!(saw_done, "infeasible request must not block the queue behind it");
+    assert_eq!(engine.stats.rejected, 1);
+    assert_eq!(engine.stats.completed, 1);
 }
 
 #[test]

@@ -2,7 +2,7 @@
 //! is not available offline; see util::prop).  No artifacts required.
 
 use prefixquant::config::ModelConfig;
-use prefixquant::coordinator::{Batcher, GenRequest, KvCache};
+use prefixquant::coordinator::{Batcher, GenRequest, KvCache, KvLayout, PagePool};
 use prefixquant::model::PrefixState;
 use prefixquant::quant::quantizer;
 use prefixquant::tensor::Tensor;
@@ -130,7 +130,7 @@ fn kvcache_state_properties() {
                 return Err("lens not updated".into());
             }
             // prefix slots intact
-            if n_prefix > 0 && kv.k.data[0] != 42.0 {
+            if n_prefix > 0 && kv.k_at(0, 0, 0, 0)[0] != 42.0 {
                 return Err("prefix overwritten".into());
             }
             if kv.remaining() != cfg.cache_max - kv.max_len() {
@@ -141,11 +141,15 @@ fn kvcache_state_properties() {
     );
 }
 
-/// Slot lifecycle: prefix install → per-slot prefill → decode appends →
-/// free → reuse.  A shadow model tracks what each slot should hold; after
-/// every operation the prefix rows are intact, each row's contents match its
-/// own writes, and nothing from a retired sequence survives into a reused
-/// slot or leaks into a neighbour.
+/// Slot lifecycle on BOTH storage layouts: prefix install → per-slot prefill
+/// → decode appends → free → reuse.  A shadow model tracks what each slot
+/// should hold; after every operation the prefix rows are intact, each row's
+/// contents match its own writes, and nothing from a retired sequence
+/// survives into a reused slot or leaks into a neighbour.  Dense additionally
+/// keeps "positions ≥ row_len are zero" (the retirement-memset discipline);
+/// paged additionally keeps the page accounting exact: prefix-page refcounts
+/// pinned at slots+1 (never below the number of live slots), own pages
+/// single-referenced, and mapped + free pages always partition the pool.
 #[test]
 fn kvcache_slot_lifecycle_properties() {
     let cfg = tiny_cfg();
@@ -160,8 +164,13 @@ fn kvcache_slot_lifecycle_properties() {
 
     check(
         "kvcache-slot-lifecycle",
-        150,
+        300,
         |g: &mut Gen| {
+            let layout = if g.bool() {
+                KvLayout::Paged { page_size: *g.choose(&[1usize, 3, 4, 8]), n_pages: 0 }
+            } else {
+                KvLayout::Dense
+            };
             let n_prefix = g.usize_in(0, cfg.max_prefix);
             let n_ops = g.usize_in(1, 24);
             let ops: Vec<Op> = (0..n_ops)
@@ -174,11 +183,11 @@ fn kvcache_slot_lifecycle_properties() {
                     }
                 })
                 .collect();
-            (n_prefix, ops)
+            (layout, n_prefix, ops)
         },
-        |(n_prefix, ops)| {
+        |(layout, n_prefix, ops)| {
             let n_prefix = *n_prefix;
-            let mut kv = KvCache::new(&cfg, SLOTS);
+            let mut kv = KvCache::with_layout(&cfg, SLOTS, *layout);
             let pshape = [cfg.n_layers, cfg.n_heads, cfg.max_prefix, cfg.d_head];
             let p = PrefixState {
                 tokens: vec![49; n_prefix],
@@ -188,6 +197,8 @@ fn kvcache_slot_lifecycle_properties() {
                 v: Tensor::full(&pshape, 42.0),
             };
             kv.install_prefix(&p).map_err(|e| e.to_string())?;
+            let paged = kv.is_paged();
+            let n_prefix_pages = kv.prefix_page_ids().len();
 
             // shadow: per slot, the values its live sequence has written
             let mut shadow: Vec<Vec<f32>> = vec![Vec::new(); SLOTS];
@@ -231,6 +242,44 @@ fn kvcache_slot_lifecycle_properties() {
                     }
                 }
 
+                // paged-only: exact page accounting after every operation
+                if paged {
+                    // prefix pages shared and pinned: slots + the cache's
+                    // base ref, invariant under churn (so never below the
+                    // number of live slots)
+                    for &pg in kv.prefix_page_ids() {
+                        let rc = kv.page_refcount(pg).unwrap();
+                        if rc != SLOTS as u32 + 1 {
+                            return Err(format!(
+                                "prefix page {pg}: refcount {rc} != slots+1 ({})",
+                                SLOTS + 1
+                            ));
+                        }
+                    }
+                    // no leaks: mapped own + prefix + free == pool
+                    let own_pages: usize =
+                        (0..SLOTS).map(|s| kv.own_page_ids(s).len()).sum();
+                    let total = kv.total_pages().unwrap();
+                    if own_pages + n_prefix_pages + kv.free_pages().unwrap() != total {
+                        return Err(format!(
+                            "page leak: {own_pages} own + {n_prefix_pages} prefix + {} \
+                             free != {total}",
+                            kv.free_pages().unwrap()
+                        ));
+                    }
+                    // every own page mapped exactly once
+                    for s in 0..SLOTS {
+                        for &pg in kv.own_page_ids(s) {
+                            if kv.page_refcount(pg) != Some(1) {
+                                return Err(format!(
+                                    "own page {pg} of slot {s}: refcount {:?} != 1",
+                                    kv.page_refcount(pg)
+                                ));
+                            }
+                        }
+                    }
+                }
+
                 // full-cache invariant check after every operation
                 for s in 0..SLOTS {
                     let want_len = n_prefix + shadow[s].len();
@@ -244,8 +293,8 @@ fn kvcache_slot_lifecycle_properties() {
                         for h in 0..cfg.n_heads {
                             // prefix rows intact and shared (K and V)
                             for pos in 0..n_prefix {
-                                let o = kv.offset(l, s, h, pos);
-                                if kv.k.data[o] != 42.0 || kv.v.data[o] != 42.0 {
+                                let (k0, v0) = (kv.k_at(l, s, h, pos)[0], kv.v_at(l, s, h, pos)[0]);
+                                if k0 != 42.0 || v0 != 42.0 {
                                     return Err(format!(
                                         "slot {s}: prefix clobbered at pos {pos}"
                                     ));
@@ -253,35 +302,182 @@ fn kvcache_slot_lifecycle_properties() {
                             }
                             // live region matches this sequence's own writes
                             for (i, &val) in shadow[s].iter().enumerate() {
-                                let o = kv.offset(l, s, h, n_prefix + i);
-                                if kv.k.data[o] != val || kv.v.data[o] != val {
+                                let pos = n_prefix + i;
+                                let (k0, v0) = (kv.k_at(l, s, h, pos)[0], kv.v_at(l, s, h, pos)[0]);
+                                if k0 != val || v0 != val {
                                     return Err(format!(
-                                        "slot {s}: pos {} holds k={} v={} want {val} \
-                                         (stale or foreign data)",
-                                        n_prefix + i,
-                                        kv.k.data[o],
-                                        kv.v.data[o]
+                                        "slot {s}: pos {pos} holds k={k0} v={v0} want {val} \
+                                         (stale or foreign data)"
                                     ));
                                 }
                             }
-                            // beyond the live region: zero (no stale leakage)
-                            for pos in want_len..cfg.cache_max {
-                                let o = kv.offset(l, s, h, pos);
-                                if kv.k.data[o] != 0.0 || kv.v.data[o] != 0.0 {
-                                    return Err(format!(
-                                        "slot {s}: stale k={} v={} past len at pos {pos}",
-                                        kv.k.data[o],
-                                        kv.v.data[o]
-                                    ));
+                            // beyond the live region: zero — the DENSE
+                            // retirement-memset discipline (paged pages are
+                            // deliberately reused unzeroed, and reads past
+                            // row_len may even be unmapped there)
+                            if !paged {
+                                for pos in want_len..cfg.cache_max {
+                                    let (k0, v0) =
+                                        (kv.k_at(l, s, h, pos)[0], kv.v_at(l, s, h, pos)[0]);
+                                    if k0 != 0.0 || v0 != 0.0 {
+                                        return Err(format!(
+                                            "slot {s}: stale k={k0} v={v0} past len at pos {pos}"
+                                        ));
+                                    }
                                 }
                             }
                         }
                     }
                 }
             }
+
+            // paged-only drain: retiring every slot returns the pool to
+            // prefix-only occupancy (slot churn leaked nothing)
+            if paged {
+                for s in 0..SLOTS {
+                    kv.reset_slot(s).map_err(|e| e.to_string())?;
+                }
+                if kv.free_pages().unwrap() != kv.total_pages().unwrap() - n_prefix_pages {
+                    return Err("slot churn leaked pages after full drain".into());
+                }
+            }
             Ok(())
         },
     );
+}
+
+/// Page allocator: alloc/incref/decref cycles against a shadow refcount
+/// model — no double free, freed pages are reused, and the pool never leaks
+/// (live set + free list always partition the pool).
+#[test]
+fn page_pool_properties() {
+    #[derive(Debug, Clone, Copy)]
+    enum Op {
+        Alloc,
+        Incref(usize), // index into the live set
+        Decref(usize),
+        DoubleFree, // decref a known-free page: must error
+    }
+
+    check(
+        "page-pool",
+        200,
+        |g: &mut Gen| {
+            let n_pages = g.usize_in(1, 12);
+            let n_ops = g.usize_in(1, 60);
+            let ops: Vec<Op> = (0..n_ops)
+                .map(|_| match g.usize_in(0, 9) {
+                    0..=3 => Op::Alloc,
+                    4..=5 => Op::Incref(g.usize_in(0, 15)),
+                    6..=8 => Op::Decref(g.usize_in(0, 15)),
+                    _ => Op::DoubleFree,
+                })
+                .collect();
+            (n_pages, ops)
+        },
+        |(n_pages, ops)| {
+            let n_pages = *n_pages;
+            let mut pool = PagePool::new(n_pages, 4, 1, 1, 2);
+            // shadow: refcount per page (0 = free)
+            let mut shadow = vec![0u32; n_pages];
+            let mut ever_freed: Vec<u32> = Vec::new();
+            let mut reused_a_freed_page = false;
+            for op in ops {
+                match *op {
+                    Op::Alloc => {
+                        let free_before = shadow.iter().filter(|&&r| r == 0).count();
+                        match pool.alloc() {
+                            Ok(p) => {
+                                if free_before == 0 {
+                                    return Err("alloc succeeded on a full pool".into());
+                                }
+                                if shadow[p as usize] != 0 {
+                                    return Err(format!("alloc handed out live page {p}"));
+                                }
+                                shadow[p as usize] = 1;
+                                if ever_freed.contains(&p) {
+                                    reused_a_freed_page = true;
+                                }
+                            }
+                            Err(_) => {
+                                if free_before > 0 {
+                                    return Err("alloc failed with free pages".into());
+                                }
+                            }
+                        }
+                    }
+                    Op::Incref(i) => {
+                        let live: Vec<u32> = (0..n_pages as u32)
+                            .filter(|&p| shadow[p as usize] > 0)
+                            .collect();
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let p = live[i % live.len()];
+                        pool.incref(p).map_err(|e| e.to_string())?;
+                        shadow[p as usize] += 1;
+                    }
+                    Op::Decref(i) => {
+                        let live: Vec<u32> = (0..n_pages as u32)
+                            .filter(|&p| shadow[p as usize] > 0)
+                            .collect();
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let p = live[i % live.len()];
+                        let freed = pool.decref(p).map_err(|e| e.to_string())?;
+                        shadow[p as usize] -= 1;
+                        if freed != (shadow[p as usize] == 0) {
+                            return Err(format!("decref({p}) freed={freed} vs shadow"));
+                        }
+                        if freed {
+                            ever_freed.push(p);
+                        }
+                    }
+                    Op::DoubleFree => {
+                        let Some(free) = (0..n_pages as u32).find(|&p| shadow[p as usize] == 0)
+                        else {
+                            continue;
+                        };
+                        if pool.decref(free).is_ok() {
+                            return Err(format!("double free of page {free} accepted"));
+                        }
+                    }
+                }
+                // the free list and the shadow always agree (no leak, no
+                // phantom free)
+                let want_free = shadow.iter().filter(|&&r| r == 0).count();
+                if pool.free_pages() != want_free {
+                    return Err(format!(
+                        "free list {} != shadow {want_free} (leaked or phantom pages)",
+                        pool.free_pages()
+                    ));
+                }
+                for p in 0..n_pages as u32 {
+                    if pool.refcount(p) != shadow[p as usize] {
+                        return Err(format!(
+                            "page {p}: refcount {} != shadow {}",
+                            pool.refcount(p),
+                            shadow[p as usize]
+                        ));
+                    }
+                }
+            }
+            // (freed-page reuse is asserted deterministically below; here it
+            // just must never produce a live page, checked in Op::Alloc)
+            let _ = reused_a_freed_page;
+            Ok(())
+        },
+    );
+
+    // deterministic reuse check: free a page, the next alloc hands it back
+    let mut pool = PagePool::new(3, 4, 1, 1, 2);
+    let a = pool.alloc().unwrap();
+    let b = pool.alloc().unwrap();
+    assert!(pool.decref(a).unwrap());
+    assert_eq!(pool.alloc().unwrap(), a, "freed page must be reused");
+    pool.incref(b).unwrap();
+    assert!(!pool.decref(b).unwrap(), "multi-ref page must survive one decref");
 }
 
 /// Host quantizer invariants: idempotence, symmetry, bounded error,

@@ -176,11 +176,16 @@ fn check_scheduler(c: &Ctx) {
 
 /// The continuous engine reproduces run_batch's greedy streams on the REAL
 /// model for a mixed-length, mixed-budget workload, with at least one
-/// admission mid-decode of another request.
+/// admission mid-decode of another request.  The engine runs on the PAGED
+/// cache (gather/scatter shim over the dense executables) while run_batch
+/// stays dense, so this is cross-layout parity on real executables.
 fn check_continuous_parity(c: &Ctx, model: &prefixquant::model::Model) {
+    use prefixquant::coordinator::KvLayout;
     let (bos, pad) = (c.tok.spec.bos, c.tok.spec.pad);
     let text = c.lang.eval_text();
-    let be = ModelBackend::new(model, QuantMode::Static, bos, pad).unwrap();
+    let be = ModelBackend::new(model, QuantMode::Static, bos, pad)
+        .unwrap()
+        .with_kv_layout(KvLayout::Paged { page_size: 8, n_pages: 0 });
     let b_exec = {
         use prefixquant::coordinator::continuous::DecodeBackend;
         be.batch_slots()
