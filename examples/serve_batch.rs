@@ -3,18 +3,30 @@
 //! throughput metrics (the paper's Table 5 setting, end to end).
 //!
 //!   cargo run --release --example serve_batch \
-//!       [-- --engine continuous|batch --requests 16 --max-new 12]
+//!       [-- --engine continuous|batch --requests 16 --max-new 12 \
+//!           --policy fcfs|priority --interactive-frac 0.25 --cancel-rate 0.1]
 //!
 //! `--engine continuous` (default) runs the slot-table engine: requests are
 //! admitted mid-flight into free KV slots (mixed prompt lengths welcome) and
 //! tokens stream back as they are produced.  `--engine batch` runs the
 //! run-to-completion baseline behind the dynamic batcher.
+//!
+//! Mixed-priority mode: `--interactive-frac F` marks a fraction of the
+//! workload `Priority::Interactive` (the rest stays `Batch`), `--policy
+//! priority` schedules with `PriorityPreempt` (class-ordered admission with
+//! aging, preemption of Decoding slots, chunked prefill), and
+//! `--cancel-rate C` cancels a fraction of requests mid-flight through their
+//! handles.  The report breaks TTFT / queue wait down per class from the
+//! server's per-class metrics.
 
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
-use prefixquant::coordinator::{EngineKind, GenRequest, Server, ServerConfig, StreamEvent};
+use prefixquant::coordinator::{
+    EngineKind, FinishReason, GenRequest, Priority, PriorityPreempt, Server, ServerConfig,
+    StreamEvent,
+};
 use prefixquant::data::{self, Language};
 use prefixquant::model::Model;
 use prefixquant::quant::{pipeline, SchemeConfig};
@@ -29,11 +41,14 @@ fn main() -> Result<()> {
     let n_requests = args.usize_or("requests", 16)?;
     let max_new = args.usize_or("max-new", 12)?;
     let prompt_chars = args.usize_or("prompt-chars", 63)?;
+    let interactive_frac = args.f32_or("interactive-frac", 0.0)?;
+    let cancel_rate = args.f32_or("cancel-rate", 0.0)?;
     let engine_kind = match args.get_or("engine", "continuous") {
         "continuous" => EngineKind::Continuous,
         "batch" => EngineKind::Batch,
         other => bail!("--engine {other:?}: want continuous|batch"),
     };
+    let policy_name = args.get_or("policy", "fcfs").to_string();
 
     let dir = prefixquant::artifacts_dir();
     // a lightweight engine on the main thread just for specs
@@ -45,6 +60,19 @@ fn main() -> Result<()> {
     let tok_worker = tok.clone();
     let dir_worker = dir.clone();
     let spec = lang.spec.clone();
+    let mut cfg = ServerConfig::builder(prefixquant::model::QuantMode::Static)
+        .engine(engine_kind)
+        .max_batch(8)
+        .batch_window(Duration::from_millis(20))
+        .bos(tok.spec.bos)
+        .pad(tok.spec.pad)
+        // paged KV with a dense-equivalent auto-sized pool
+        .kv(prefixquant::coordinator::KvLayout::Paged { page_size: 16, n_pages: 0 });
+    cfg = match policy_name.as_str() {
+        "fcfs" => cfg,
+        "priority" => cfg.policy(Box::new(PriorityPreempt::default())),
+        other => bail!("--policy {other:?}: want fcfs|priority"),
+    };
     let server = Server::start(
         move || {
             let engine = Rc::new(Engine::new(&dir_worker)?);
@@ -67,36 +95,46 @@ fn main() -> Result<()> {
             );
             Ok(model)
         },
-        ServerConfig {
-            mode: prefixquant::model::QuantMode::Static,
-            engine: engine_kind,
-            max_batch: 8,
-            batch_window: Duration::from_millis(20),
-            bos: tok.spec.bos,
-            pad: tok.spec.pad,
-            // paged KV with a dense-equivalent auto-sized pool
-            kv: prefixquant::coordinator::KvLayout::Paged { page_size: 16, n_pages: 0 },
-        },
+        cfg.build(),
     )?;
 
     // mixed-length prompts from the eval split: the continuous engine admits
     // them as slots free; the batch engine buckets them by length
     let text = lang.eval_text();
     let mut rng = SplitMix64::new(0xBA7C4);
-    let mut receivers = Vec::new();
+    let mut handles = Vec::new();
     let t0 = Instant::now();
     for id in 0..n_requests {
         let chars = prompt_chars + (id % 3) * 8; // three length buckets
         let start = rng.below((text.len() - chars - 1) as u64) as usize;
         let prompt = tok.encode(&text[start..start + chars], false);
-        let rx = server.submit_stream(GenRequest { id: id as u64, prompt, max_new })?;
-        receivers.push((id, rx));
+        let priority = if rng.range_f32(0.0, 1.0) < interactive_frac {
+            Priority::Interactive
+        } else {
+            Priority::Batch
+        };
+        let req = GenRequest::builder(id as u64)
+            .prompt(prompt)
+            .max_new(max_new)
+            .priority(priority)
+            .build();
+        let handle = server.submit_stream(req)?;
+        let cancel = rng.range_f32(0.0, 1.0) < cancel_rate;
+        handles.push((id, priority, cancel, handle));
     }
+    // cancellations fire through the handles while the engine is serving
+    for (_, _, cancel, handle) in &handles {
+        if *cancel {
+            let _ = handle.cancel();
+        }
+    }
+
     let mut ok = 0usize;
-    for (id, rx) in receivers {
+    let mut cancelled = 0usize;
+    for (id, priority, _, handle) in handles {
         let mut tokens = Vec::new();
         let mut outcome = None;
-        for ev in rx.iter() {
+        for ev in handle.receiver().iter() {
             match ev {
                 StreamEvent::Token(t) => tokens.push(t),
                 StreamEvent::Done(resp) => {
@@ -110,13 +148,19 @@ fn main() -> Result<()> {
             }
         }
         if let Some(resp) = outcome {
+            if resp.finish == FinishReason::Cancelled {
+                cancelled += 1;
+                continue;
+            }
             ok += 1;
             if id < 3 {
                 println!(
-                    "req {id}: queue={:.0}ms ttft={:.0}ms total={:.0}ms | {:?}",
+                    "req {id} [{}]: queue={:.0}ms ttft={:.0}ms total={:.0}ms finish={} | {:?}",
+                    priority.name(),
                     resp.queue_s * 1e3,
                     resp.ttft_s * 1e3,
                     resp.total_s * 1e3,
+                    resp.finish.name(),
                     tok.decode(&tokens)
                 );
             }
@@ -125,19 +169,39 @@ fn main() -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let m = server.metrics()?;
     println!(
-        "\nserved {ok}/{n_requests} requests in {wall:.2}s via {engine_kind:?} | \
-         dispatches={} mean TTFT={:.0}ms (queue {:.0}ms) decode {:.1} tok/s",
+        "\nserved {ok}/{n_requests} requests ({cancelled} cancelled) in {wall:.2}s via \
+         {engine_kind:?}/{policy_name} | dispatches={} mean TTFT={:.0}ms (queue {:.0}ms) \
+         decode {:.1} tok/s",
         m.batches,
         m.mean_ttft() * 1e3,
         m.mean_queue_wait() * 1e3,
         m.decode_tps()
     );
+    for p in Priority::all() {
+        let c = m.class(p);
+        if c.requests == 0 && c.cancelled == 0 {
+            continue;
+        }
+        println!(
+            "  class {:>12}: {} served, {} preempted, {} cancelled | \
+             TTFT {:.0}ms queue {:.0}ms",
+            p.name(),
+            c.completed,
+            c.preemptions,
+            c.cancelled,
+            c.mean_ttft() * 1e3,
+            c.mean_queue_wait() * 1e3
+        );
+    }
     if m.kv_resident_bytes > 0 {
         println!(
-            "kv: {:.2}MB resident, {:.2}MB live, {} page-wait deferrals",
+            "kv: {:.2}MB resident, {:.2}MB live, {} page-wait deferrals, {} preemptions, \
+             {} retries",
             m.kv_resident_bytes as f64 / 1e6,
             m.kv_used_bytes as f64 / 1e6,
-            m.deferred_admissions
+            m.deferred_admissions,
+            m.preemptions,
+            m.retries
         );
     }
     server.shutdown();

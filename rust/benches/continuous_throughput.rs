@@ -59,11 +59,11 @@ fn workload(n: usize) -> Vec<GenRequest> {
     (0..n)
         .map(|i| {
             let plen = if i % 2 == 0 { 8 } else { 12 };
-            GenRequest {
-                id: i as u64,
-                prompt: (0..plen).map(|_| 3 + rng.below(260) as i32).collect(),
-                max_new: budgets[i % budgets.len()],
-            }
+            GenRequest::new(
+                i as u64,
+                (0..plen).map(|_| 3 + rng.below(260) as i32).collect(),
+                budgets[i % budgets.len()],
+            )
         })
         .collect()
 }
@@ -168,11 +168,11 @@ fn longtail_workload(n: usize) -> Vec<GenRequest> {
             let long = i % 8 == 5;
             let plen = if long { 24 + (i % 3) * 4 } else { 4 + i % 5 };
             let max_new = if long { 24 + (i % 2) * 8 } else { 2 + i % 5 };
-            GenRequest {
-                id: i as u64,
-                prompt: (0..plen).map(|_| 3 + rng.below(260) as i32).collect(),
+            GenRequest::new(
+                i as u64,
+                (0..plen).map(|_| 3 + rng.below(260) as i32).collect(),
                 max_new,
-            }
+            )
         })
         .collect()
 }

@@ -44,7 +44,7 @@ fn main() {
     let st = bench_fn("batcher", 3, 50, || {
         let mut b = Batcher::new(8);
         for i in 0..1024u64 {
-            b.push(GenRequest { id: i, prompt: vec![5; 8 * (1 + (i % 4) as usize)], max_new: 4 });
+            b.push(GenRequest::new(i, vec![5; 8 * (1 + (i % 4) as usize)], 4));
         }
         while !b.is_empty() {
             std::hint::black_box(b.next_batch());

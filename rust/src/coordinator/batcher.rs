@@ -60,6 +60,29 @@ impl Batcher {
         self.count += 1;
     }
 
+    /// Remove a queued request by id (serving-API cancellation).  Returns
+    /// the pending entry when it was still waiting; `None` when the request
+    /// was already dispatched (run-to-completion batches are not interrupted)
+    /// or never queued.
+    pub fn cancel(&mut self, id: u64) -> Option<Pending> {
+        let mut hit: Option<(usize, usize)> = None; // (bucket len, index)
+        for (&len, q) in &self.buckets {
+            if let Some(idx) = q.iter().position(|p| p.req.id == id) {
+                hit = Some((len, idx));
+                break;
+            }
+        }
+        let (len, idx) = hit?;
+        let q = self.buckets.get_mut(&len)?;
+        let p = q.remove(idx)?;
+        if q.is_empty() {
+            self.buckets.remove(&len);
+            self.skips.remove(&len);
+        }
+        self.count -= 1;
+        Some(p)
+    }
+
     pub fn len(&self) -> usize {
         self.count
     }
@@ -133,7 +156,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64, len: usize) -> GenRequest {
-        GenRequest { id, prompt: vec![5; len], max_new: 4 }
+        GenRequest::new(id, vec![5; len], 4)
     }
 
     fn ids(batch: &[Pending]) -> Vec<u64> {
@@ -196,6 +219,23 @@ mod tests {
                 "rare-length request starved for {dispatches_before_rare} dispatches"
             );
         }
+    }
+
+    #[test]
+    fn cancel_removes_only_the_target() {
+        let mut b = Batcher::new(4);
+        for (id, len) in [(1, 8), (2, 8), (3, 16)] {
+            b.push(req(id, len));
+        }
+        assert_eq!(b.cancel(99), None, "unknown id is a no-op");
+        let p = b.cancel(2).expect("queued request is cancellable");
+        assert_eq!(p.req.id, 2);
+        assert_eq!(b.len(), 2);
+        // the lone bucket-16 entry cancels cleanly and prunes its bucket
+        assert_eq!(b.cancel(3).unwrap().req.id, 3);
+        assert_eq!(ids(&b.next_batch()), vec![1]);
+        assert!(b.is_empty());
+        assert_eq!(b.cancel(1), None, "dispatched requests are gone");
     }
 
     #[test]

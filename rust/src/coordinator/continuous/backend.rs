@@ -27,7 +27,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::coordinator::kvcache::{KvCache, KvLayout};
-use crate::coordinator::request::{GenRequest, GenResponse};
+use crate::coordinator::request::{FinishReason, GenRequest, GenResponse};
 use crate::model::{Model, QuantMode};
 use crate::runtime::Value;
 use crate::tensor::IntTensor;
@@ -43,19 +43,47 @@ pub fn argmax(row: &[f32]) -> i32 {
     best as i32
 }
 
-/// One prefill assignment: request → cache slot.
+/// One prefill assignment: request → cache slot, over a token span.
+///
+/// The row's full token sequence is `BOS + prompt + resumed` (`resumed`
+/// holds tokens generated before a preemption, so re-admission reconstructs
+/// the exact cache state without recomputing the shared prefix).  `start..
+/// end` selects the span written by THIS call — chunked prefill issues one
+/// contiguous span per engine step so a long prompt cannot stall decode
+/// rounds for its whole length.  Only the call whose `end` reaches
+/// [`PrefillJob::total_tokens`] yields a first token.
 pub struct PrefillJob<'a> {
     pub slot: usize,
     pub req: &'a GenRequest,
+    /// tokens generated before a preemption, re-prefilled after the prompt
+    pub resumed: &'a [i32],
+    /// first token position (of the full sequence) written by this call
+    pub start: usize,
+    /// one past the last token position written by this call
+    pub end: usize,
+}
+
+impl<'a> PrefillJob<'a> {
+    /// Whole-sequence job for `req` in `slot` (no chunking, no resume).
+    pub fn full(slot: usize, req: &'a GenRequest) -> Self {
+        PrefillJob { slot, req, resumed: &[], start: 0, end: req.prompt.len() + 1 }
+    }
+
+    /// Tokens in the row's full sequence: BOS + prompt + resumed.
+    pub fn total_tokens(&self) -> usize {
+        1 + self.req.prompt.len() + self.resumed.len()
+    }
 }
 
 /// Prefill result for one slot.
 #[derive(Debug, Clone)]
 pub struct PrefillOut {
     pub slot: usize,
-    /// greedy token at the last prompt position
-    pub first_token: i32,
-    /// materialized sinks (prefix + in-prompt) for the decode path
+    /// greedy token at the last prompt position; `None` while the job's span
+    /// has not yet reached the end of the sequence (chunked prefill)
+    pub first_token: Option<i32>,
+    /// materialized sinks (prefix + in-prompt) for the decode path; only
+    /// meaningful when `first_token` is `Some`
     pub n_sinks: i32,
 }
 
@@ -88,8 +116,9 @@ pub trait DecodeBackend {
     fn cache_capacity(&self) -> usize;
     /// Fresh cache with the shared prefixed K/V installed in every row.
     fn new_cache(&self) -> Result<KvCache>;
-    /// Prefill `jobs` (mixed prompt lengths allowed) in one pass: write each
-    /// row's prompt K/V into its slot and return the first greedy token.
+    /// Prefill `jobs` (mixed prompt lengths and mixed spans allowed) in one
+    /// pass: write each job's token span into its slot, and return the first
+    /// greedy token for every job whose span completes its sequence.
     fn prefill(&self, kv: &mut KvCache, jobs: &[PrefillJob]) -> Result<Vec<PrefillOut>>;
     /// One decode step for a same-length group of rows.
     fn decode(&self, kv: &mut KvCache, group: &DecodeGroup) -> Result<Vec<DecodeOut>>;
@@ -149,22 +178,31 @@ impl<'a> DecodeBackend for ModelBackend<'a> {
             bail!("prefill wave {} exceeds executable batch {}", jobs.len(), self.b_exec);
         }
         for j in jobs {
-            let plen = j.req.prompt.len() + 1; // +BOS
-            if plen > self.s_exec {
-                bail!("prompt length {plen} exceeds executable seq {}", self.s_exec);
+            let total = j.total_tokens();
+            if total > self.s_exec {
+                bail!("prompt length {total} exceeds executable seq {}", self.s_exec);
             }
-            if kv.n_prefix + plen > kv.s_max {
-                bail!("prompt length {plen} exceeds cache capacity {}", kv.s_max);
+            if kv.n_prefix + total > kv.s_max {
+                bail!("prompt length {total} exceeds cache capacity {}", kv.s_max);
+            }
+            if j.start >= j.end || j.end > total {
+                bail!("invalid prefill span [{}, {}) of {total} tokens", j.start, j.end);
             }
         }
-        // [B, S] token batch: each row BOS + prompt + pad; spare rows
-        // replicate the last job (rows attend only within themselves, so
-        // filler rows cannot perturb real rows).
+        // [B, S] token batch: each row BOS + prompt (+ resumed tokens when
+        // re-admitting a preempted request) + pad; spare rows replicate the
+        // last job (rows attend only within themselves, so filler rows cannot
+        // perturb real rows).  The fixed-geometry forward has no partial
+        // variant, so a chunked job re-runs the whole row and commits only
+        // its span — chunking bounds the per-step K/V WRITE and the decode
+        // stall, not the FLOPs (causal attention makes positions [0, end)
+        // independent of later tokens, so every chunk's K/V is final).
         let mut data = Vec::with_capacity(self.b_exec * self.s_exec);
         for row in 0..self.b_exec {
             let j = &jobs[row.min(jobs.len() - 1)];
             data.push(self.bos);
             data.extend_from_slice(&j.req.prompt);
+            data.extend_from_slice(j.resumed);
             data.resize((row + 1) * self.s_exec, self.pad);
         }
         let tokens = IntTensor::new(vec![self.b_exec, self.s_exec], data)?;
@@ -178,15 +216,19 @@ impl<'a> DecodeBackend for ModelBackend<'a> {
         let v_dim = logits.shape[2];
         let mut results = Vec::with_capacity(jobs.len());
         for (i, j) in jobs.iter().enumerate() {
-            let plen = j.req.prompt.len() + 1;
-            kv.write_prefill_row(j.slot, &k_cache, &v_cache, i, plen)?;
-            let off = (i * self.s_exec + plen - 1) * v_dim;
+            let total = j.total_tokens();
+            kv.write_prefill_span(j.slot, &k_cache, &v_cache, i, j.start, j.end)?;
+            if j.end < total {
+                results.push(PrefillOut { slot: j.slot, first_token: None, n_sinks: 0 });
+                continue;
+            }
+            let off = (i * self.s_exec + total - 1) * v_dim;
             let first_token = argmax(&logits.data[off..off + v_dim]);
             let in_prompt: f32 =
-                active.data[i * self.s_exec..i * self.s_exec + plen].iter().sum();
+                active.data[i * self.s_exec..i * self.s_exec + total].iter().sum();
             results.push(PrefillOut {
                 slot: j.slot,
-                first_token,
+                first_token: Some(first_token),
                 n_sinks: self.model.prefix.n_ctx_sinks + in_prompt as i32,
             });
         }
@@ -256,7 +298,9 @@ impl<'a> DecodeBackend for ModelBackend<'a> {
 /// prefill everything at once, decode until every row has its tokens, no
 /// mid-flight admission.  Mixed prompt lengths and mixed `max_new` are
 /// handled via per-length-group decode calls; a row stops as soon as it has
-/// `max_new` tokens (identical streams to decoding longer and truncating).
+/// `max_new` tokens (identical streams to decoding longer and truncating),
+/// emits a stop token (`FinishReason::Stop`, token included), or fills its
+/// cache row (`FinishReason::CacheFull`).
 pub fn run_to_completion<B: DecodeBackend>(be: &B, reqs: &[GenRequest]) -> Result<Vec<GenResponse>> {
     if reqs.is_empty() {
         return Ok(Vec::new());
@@ -267,7 +311,7 @@ pub fn run_to_completion<B: DecodeBackend>(be: &B, reqs: &[GenRequest]) -> Resul
     let t0 = Instant::now();
     let mut kv = be.new_cache()?;
     let jobs: Vec<PrefillJob> =
-        reqs.iter().enumerate().map(|(i, req)| PrefillJob { slot: i, req }).collect();
+        reqs.iter().enumerate().map(|(i, req)| PrefillJob::full(i, req)).collect();
     let pre = be.prefill(&mut kv, &jobs)?;
     let ttft = t0.elapsed().as_secs_f64();
 
@@ -276,11 +320,21 @@ pub fn run_to_completion<B: DecodeBackend>(be: &B, reqs: &[GenRequest]) -> Resul
     let mut next = vec![0i32; n];
     let mut sinks = vec![0i32; n];
     let mut done = vec![false; n];
+    let mut finish = vec![FinishReason::Length; n];
     let mut total = vec![ttft; n];
     for o in pre {
-        next[o.slot] = o.first_token;
+        let Some(first) = o.first_token else {
+            bail!("full prefill returned no first token for slot {}", o.slot);
+        };
+        next[o.slot] = first;
         sinks[o.slot] = o.n_sinks;
-        tokens[o.slot].push(o.first_token);
+        if reqs[o.slot].max_new > 0 {
+            tokens[o.slot].push(first);
+            if reqs[o.slot].stop_tokens.contains(&first) {
+                done[o.slot] = true;
+                finish[o.slot] = FinishReason::Stop;
+            }
+        }
     }
     for i in 0..n {
         if tokens[i].len() >= reqs[i].max_new {
@@ -298,6 +352,7 @@ pub fn run_to_completion<B: DecodeBackend>(be: &B, reqs: &[GenRequest]) -> Resul
             let len = kv.row_len(i);
             if len >= kv.s_max {
                 done[i] = true; // cache full: stop with what we have
+                finish[i] = FinishReason::CacheFull;
                 total[i] = now;
                 continue;
             }
@@ -317,7 +372,11 @@ pub fn run_to_completion<B: DecodeBackend>(be: &B, reqs: &[GenRequest]) -> Resul
                 next[o.row] = o.next_token;
                 sinks[o.row] = o.n_sinks;
                 tokens[o.row].push(o.next_token);
-                if tokens[o.row].len() >= reqs[o.row].max_new {
+                if reqs[o.row].stop_tokens.contains(&o.next_token) {
+                    done[o.row] = true;
+                    finish[o.row] = FinishReason::Stop;
+                    total[o.row] = t0.elapsed().as_secs_f64();
+                } else if tokens[o.row].len() >= reqs[o.row].max_new {
                     done[o.row] = true;
                     total[o.row] = t0.elapsed().as_secs_f64();
                 }
@@ -337,6 +396,7 @@ pub fn run_to_completion<B: DecodeBackend>(be: &B, reqs: &[GenRequest]) -> Resul
                 ttft_s: ttft,
                 total_s: total[i].max(ttft),
                 queue_s: 0.0,
+                finish: finish[i],
             }
         })
         .collect())

@@ -1,77 +1,149 @@
-//! Continuous-batching engine: a persistent decode loop over a slot table.
+//! Continuous-batching engine: a persistent decode loop over a slot table,
+//! with scheduling decisions delegated to a pluggable
+//! [`SchedulePolicy`](crate::coordinator::policy::SchedulePolicy).
 //!
-//! Slot state machine (see rust/DESIGN.md; "prefilling" is transient inside
-//! one admission wave and never observable — see [`SlotPhase`]):
+//! Slot state machine (see rust/DESIGN.md):
 //!
-//!   Empty ──admit (prefill+install)──▶ Decoding ──max_new / cache full──▶ Done
-//!     ▲                                                                    │
-//!     └──────────────── reset_slot (zero + keep prefix) ◀──────────────────┘
+//!   Empty ──admit (reserve + first chunk)──▶ Prefilling ──last chunk──▶ Decoding
+//!     ▲                                          │                        │
+//!     │                                  cancel  │     budget / stop /    │
+//!     │                                          ▼     cache full /       │
+//!     └───────── reset_slot (pages released) ◀── Done ◀── cancel ─────────┘
+//!                                                ▲
+//!                 Decoding ──preempt (pages released, requeue with
+//!                 generated tokens)──▶ pending ──resume (re-prefill
+//!                 prompt + generated)──▶ Prefilling
 //!
-//! Between decode rounds the engine admits pending requests into free slots:
-//! one prefill pass serves a whole admission wave (mixed prompt lengths are
-//! fine — rows attend only within themselves), and the shared prefixed K/V
-//! is already resident in every slot, so admission never recomputes it (the
-//! paper's invariant is what makes mid-flight admission cheap).  Completed
-//! slots retire immediately and their tokens stream to the client as they
-//! are produced, so short requests are never held hostage by long ones.
+//! Between decode rounds the engine admits pending requests into free slots.
+//! WHICH request is admitted next, WHETHER a Decoding slot is preempted to
+//! make room, and HOW MANY prompt tokens one step may prefill are all policy
+//! decisions; the engine owns the mechanism.  One prefill pass serves a
+//! whole admission wave (mixed prompt lengths are fine — rows attend only
+//! within themselves), and the shared prefixed K/V is already resident in
+//! every slot, so admission never recomputes it (the paper's invariant is
+//! what makes mid-flight admission — and cheap preemption resume — work:
+//! the outlier prefix survives slot churn untouched).
+//!
+//! Preemption resume re-prefills `BOS + prompt + generated tokens`; causal
+//! attention makes the reconstructed cache identical to the evicted one, so
+//! the resumed stream continues exactly where it stopped (asserted by the
+//! scheduler_policy test suite on the simulation backend).
 //!
 //! On a paged cache, admission is additionally a PAGE-availability check:
 //! each admitted request reserves its worst-case page count (prompt + budget,
 //! capped by row capacity) so mid-flight appends can never fail, a request
-//! that doesn't fit the free pool WAITS at the head of the queue (FCFS — it
-//! is not skipped), and retirement releases the slot's pages in O(pages) with
-//! no memset.  Because long-tail sequences only hold the pages they use, the
-//! engine can run many more slots than dense worst-case sizing would allow
-//! over the same KV memory.
+//! that doesn't fit the free pool WAITS in the policy's order (it is not
+//! skipped), and retirement/preemption releases the slot's pages in O(pages)
+//! with no memset.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::kvcache::KvCache;
-use crate::coordinator::request::{GenRequest, GenResponse, Metrics, Reply, StreamEvent};
+use crate::coordinator::policy::{Fcfs, QueueView, SchedulePolicy, SlotView};
+use crate::coordinator::request::{
+    ClassMetrics, FinishReason, GenRequest, GenResponse, Metrics, Priority, Reply, StreamEvent,
+};
 
 use super::backend::{DecodeBackend, DecodeGroup, PrefillJob};
 
-/// Observable lifecycle phase of a slot.  The engine is single-threaded, so
-/// the transient phases can never be observed from outside: prefill happens
-/// synchronously inside an admission wave, and a slot that reaches its
-/// budget is retired (back to Empty) within the same `step()` call.
-/// [`ContinuousEngine::phases`] therefore only ever reports Empty or
-/// Decoding; Done names the terminal state of the machine in rust/DESIGN.md.
+/// Observable lifecycle phase of a slot.  `Prefilling` is observable only
+/// under a chunking policy (an unchunked admission completes its prefill
+/// inside the same `step()`); `Done` names the terminal state of the machine
+/// in rust/DESIGN.md — a finished slot is retired to Empty within the same
+/// call, so [`ContinuousEngine::phases`] never reports it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SlotPhase {
     Empty,
+    Prefilling,
     Decoding,
     Done,
 }
 
+/// A queued request with its reply channel and scheduling bookkeeping.
+struct PendingReq {
+    req: GenRequest,
+    reply: Reply,
+    submitted: Instant,
+    /// tokens generated before a preemption (re-prefilled on resume)
+    generated: Vec<i32>,
+    /// TTFT recorded at the first emitted token (survives preemption)
+    ttft_s: Option<f64>,
+    /// queue wait recorded at the first admission (survives preemption)
+    queue_s: Option<f64>,
+    /// engine-rebuild resubmissions so far
+    attempts: usize,
+    /// preemptions suffered so far (the policy's thrash guard reads this)
+    times_preempted: usize,
+    /// arrival order, monotone across the engine's lifetime
+    seq: u64,
+    /// engine round at which the request (re)entered the queue
+    enqueued_round: u64,
+}
+
 struct Active {
-    id: u64,
-    max_new: usize,
+    req: GenRequest,
+    /// ALL generated tokens, including those produced before a preemption
     tokens: Vec<i32>,
     next_token: i32,
     n_sinks: i32,
     reply: Reply,
     submitted: Instant,
     queue_s: f64,
-    ttft_s: f64,
+    /// set when the first token was emitted (possibly a previous occupancy)
+    ttft: Option<f64>,
+    attempts: usize,
+    times_preempted: usize,
+    seq: u64,
+    admitted_round: u64,
+    /// tokens of (BOS + prompt + resumed) written so far (chunked prefill)
+    prefill_written: usize,
+    prefill_total: usize,
+    finish: Option<FinishReason>,
+}
+
+impl Active {
+    fn decoding(&self) -> bool {
+        self.prefill_written >= self.prefill_total
+    }
+}
+
+/// A request handed back by [`ContinuousEngine::drain_for_recovery`] for
+/// resubmission into a rebuilt engine.
+pub struct RetryReq {
+    pub req: GenRequest,
+    pub reply: Reply,
+    pub submitted: Instant,
+    /// resubmissions so far (incremented by the drain)
+    pub attempts: usize,
+    /// queue wait recorded at the first admission, when the request had
+    /// already been admitted before the failure — preserved so re-admission
+    /// does not double-count it in `admitted`/`sum_queue_s`
+    pub queue_s: Option<f64>,
+    /// tokens generated before a preemption (a preempted request drained
+    /// from the QUEUE resumes in the fresh engine exactly like a normal
+    /// preemption resume — re-prefill does not depend on the dead cache)
+    pub generated: Vec<i32>,
+    /// TTFT recorded at the first emitted token, preserved across rebuilds
+    pub ttft_s: Option<f64>,
 }
 
 /// Counters the engine accumulates while serving.
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
+    /// first admissions (a preemption resume is counted in `resumed`, not here)
     pub admitted: usize,
     pub completed: usize,
     /// requests dropped at admission (prompt too long for the geometry, or a
     /// shape the page pool could never hold)
     pub rejected: usize,
-    /// requests that waited at the queue head for free pages (each throttled
+    /// requests that waited in the queue for free pages (each throttled
     /// request counts once, however many rounds it waited)
     pub deferred_admissions: usize,
-    /// most slots simultaneously decoding (admission capacity actually used)
+    /// most slots simultaneously occupied (admission capacity actually used)
     pub peak_active_slots: usize,
     pub prefill_calls: usize,
     /// decode executions (one per length-group per round)
@@ -80,27 +152,62 @@ pub struct EngineStats {
     pub decode_rounds: usize,
     /// requests admitted while at least one other slot was mid-decode
     pub mid_decode_admissions: usize,
+    /// Decoding slots evicted for a higher class (pages released, requeued)
+    pub preemptions: usize,
+    /// re-admissions: preemption resumes (re-prefill of prompt + generated)
+    /// and rebuild retries of previously-admitted requests
+    pub resumed: usize,
+    /// requests cancelled via [`ContinuousEngine::cancel`]
+    pub cancelled: usize,
+    /// token-less requests resubmitted after an engine rebuild
+    pub retries: usize,
     pub generated_tokens: usize,
     pub prefill_tokens: usize,
     pub sum_ttft_s: f64,
     pub sum_queue_s: f64,
     pub sum_total_s: f64,
+    /// per admission wave: the longest submit→dispatch wait in the wave
+    pub sum_dispatch_skew_s: f64,
     pub t_prefill_s: f64,
     pub t_decode_s: f64,
+    /// per-priority-class counters (index = `Priority::index()`)
+    pub per_class: [ClassMetrics; Priority::COUNT],
+}
+
+/// Backend prefill contract check, shared by the admission wave and the
+/// chunk-continuation path so the two can never drift: every expected slot
+/// has an output, and a span that completes its sequence carries a first
+/// token.  `spans` yields `(slot, end, total)`.
+fn prefill_covers(
+    first: &BTreeMap<usize, (Option<i32>, i32)>,
+    spans: impl IntoIterator<Item = (usize, usize, usize)>,
+) -> bool {
+    spans.into_iter().all(|(slot, end, total)| match first.get(&slot) {
+        None => false,
+        Some(&(ft, _)) => end < total || ft.is_some(),
+    })
 }
 
 pub struct ContinuousEngine<B: DecodeBackend> {
     backend: B,
     kv: KvCache,
     slots: Vec<Option<Active>>,
-    pending: VecDeque<(GenRequest, Reply, Instant)>,
-    /// id of the request currently waiting at the queue head for pages, so
-    /// `deferred_admissions` counts throttled requests, not polls
-    last_deferred: Option<u64>,
+    pending: VecDeque<PendingReq>,
+    policy: Box<dyn SchedulePolicy>,
+    /// ids counted in `deferred_admissions` during their CURRENT stay in the
+    /// queue, so the counter is once per throttled queue episode, not per
+    /// poll — a set (not just the last id) because a non-FCFS policy can
+    /// interleave blocked picks; ids are removed when the request leaves the
+    /// queue, so the set is bounded by the pending-queue length
+    deferred_ids: HashSet<u64>,
+    next_seq: u64,
+    /// engine rounds so far (drives policy aging deterministically)
+    round: u64,
     pub stats: EngineStats,
 }
 
 impl<B: DecodeBackend> ContinuousEngine<B> {
+    /// Engine with the [`Fcfs`] policy (the pre-policy behavior).
     pub fn new(backend: B) -> Result<Self> {
         let kv = backend.new_cache()?;
         if kv.batch != backend.batch_slots() {
@@ -112,15 +219,42 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
             kv,
             slots,
             pending: VecDeque::new(),
-            last_deferred: None,
+            policy: Box::new(Fcfs),
+            deferred_ids: HashSet::new(),
+            next_seq: 0,
+            round: 0,
             stats: EngineStats::default(),
         })
+    }
+
+    /// Replace the scheduling policy (admission order, preemption, prefill
+    /// chunking).  Call before submitting work.
+    pub fn with_policy(mut self, policy: Box<dyn SchedulePolicy>) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
     }
 
     /// Queue a request; its output goes to `reply`.  `submitted` anchors the
     /// queue-wait / TTFT clocks (pass the time the client handed it over).
     pub fn submit(&mut self, req: GenRequest, reply: Reply, submitted: Instant) {
-        self.pending.push_back((req, reply, submitted));
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push_back(PendingReq {
+            req,
+            reply,
+            submitted,
+            generated: Vec::new(),
+            ttft_s: None,
+            queue_s: None,
+            attempts: 0,
+            times_preempted: 0,
+            seq,
+            enqueued_round: self.round,
+        });
     }
 
     /// Queue a request and stream its tokens over a fresh channel.
@@ -128,6 +262,70 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
         let (tx, rx) = channel();
         self.submit(req, Reply::Stream(tx), Instant::now());
         rx
+    }
+
+    /// Resubmit a request drained by [`ContinuousEngine::drain_for_recovery`]
+    /// (server engine-rebuild path).  A previously-admitted request keeps its
+    /// first-admission markers so it is not counted as admitted twice.
+    pub fn resubmit(&mut self, r: RetryReq) {
+        self.stats.retries += 1;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push_back(PendingReq {
+            req: r.req,
+            reply: r.reply,
+            submitted: r.submitted,
+            generated: r.generated,
+            ttft_s: r.ttft_s,
+            queue_s: r.queue_s,
+            attempts: r.attempts,
+            times_preempted: 0,
+            seq,
+            enqueued_round: self.round,
+        });
+    }
+
+    /// Cancel a request wherever it is: pending (removed from the queue) or
+    /// occupying a slot (slot retired, pages released).  The client receives
+    /// a normal `Done` response with `FinishReason::Cancelled` and the tokens
+    /// generated so far.  Returns false when the id is unknown (already
+    /// completed, or never submitted).
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        for i in 0..self.slots.len() {
+            let hit = matches!(&self.slots[i], Some(a) if a.req.id == id);
+            if hit {
+                if let Some(a) = self.slots[i].as_mut() {
+                    a.finish = Some(FinishReason::Cancelled);
+                }
+                self.finish(i)?;
+                return Ok(true);
+            }
+        }
+        if let Some(pos) = self.pending.iter().position(|p| p.req.id == id) {
+            let p = self.pending.remove(pos).expect("position is in range");
+            self.stats.cancelled += 1;
+            self.stats.per_class[p.req.priority.index()].cancelled += 1;
+            let total_s = p.submitted.elapsed().as_secs_f64();
+            if p.queue_s.is_some() && p.ttft_s.is_none() {
+                // admitted in a past epoch but never reached a first token
+                // (rebuild-retried mid-prefill): keep sum_ttft_s paired with
+                // stats.admitted by recording the termination time
+                self.stats.sum_ttft_s += total_s;
+                self.stats.per_class[p.req.priority.index()].sum_ttft_s += total_s;
+            }
+            let resp = GenResponse {
+                id: p.req.id,
+                tokens: p.generated,
+                ttft_s: p.ttft_s.unwrap_or(0.0),
+                total_s,
+                queue_s: p.queue_s.unwrap_or(total_s),
+                finish: FinishReason::Cancelled,
+            };
+            p.reply.done(resp);
+            self.deferred_ids.remove(&id);
+            return Ok(true);
+        }
+        Ok(false)
     }
 
     pub fn free_slots(&self) -> usize {
@@ -143,111 +341,304 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
         !self.pending.is_empty() || self.slots.iter().any(|s| s.is_some())
     }
 
+    /// Ids of the requests currently occupying slots (slot order) — test and
+    /// operator observability for preemption/cancellation.
+    pub fn active_ids(&self) -> Vec<u64> {
+        self.slots.iter().filter_map(|s| s.as_ref().map(|a| a.req.id)).collect()
+    }
+
+    /// Ids of the requests waiting in the queue (queue order).
+    pub fn pending_ids(&self) -> Vec<u64> {
+        self.pending.iter().map(|p| p.req.id).collect()
+    }
+
     pub fn phases(&self) -> Vec<SlotPhase> {
         self.slots
             .iter()
-            .map(|s| if s.is_some() { SlotPhase::Decoding } else { SlotPhase::Empty })
+            .map(|s| match s {
+                None => SlotPhase::Empty,
+                Some(a) if !a.decoding() => SlotPhase::Prefilling,
+                Some(_) => SlotPhase::Decoding,
+            })
             .collect()
     }
 
-    /// Retire slot `i`: deliver the response, zero the row, free the slot.
+    /// Retire slot `i`: deliver the response (with the slot's recorded
+    /// finish reason), release its pages, free the slot.
     fn finish(&mut self, i: usize) -> Result<()> {
-        let Some(a) = self.slots[i].take() else {
+        let Some(mut a) = self.slots[i].take() else {
             return Ok(());
         };
         let total_s = a.submitted.elapsed().as_secs_f64();
-        self.stats.completed += 1;
-        self.stats.sum_total_s += total_s;
+        let reason = a.finish.unwrap_or(FinishReason::Length);
+        if a.ttft.is_none() {
+            // admitted but terminated before its first token (a cancel
+            // mid-chunked-prefill): record termination time as the TTFT
+            // entry so sum_ttft_s keeps pairing 1:1 with stats.admitted
+            a.ttft = Some(total_s);
+            self.stats.sum_ttft_s += total_s;
+            self.stats.per_class[a.req.priority.index()].sum_ttft_s += total_s;
+        }
+        if reason == FinishReason::Cancelled {
+            self.stats.cancelled += 1;
+            self.stats.per_class[a.req.priority.index()].cancelled += 1;
+        } else {
+            self.stats.completed += 1;
+            self.stats.sum_total_s += total_s;
+            self.stats.per_class[a.req.priority.index()].completed += 1;
+        }
         let resp = GenResponse {
-            id: a.id,
+            id: a.req.id,
             tokens: a.tokens,
-            ttft_s: a.ttft_s,
+            ttft_s: a.ttft.unwrap_or(0.0),
             total_s,
             queue_s: a.queue_s,
+            finish: reason,
         };
         a.reply.done(resp);
         self.kv.reset_slot(i)?;
         Ok(())
     }
 
-    /// Admit pending requests into free slots (one prefill pass per wave).
+    /// Evict a Decoding slot: release its pages and requeue the request with
+    /// its generated tokens preserved.  Resume re-prefills prompt + generated
+    /// and continues the stream exactly where it stopped.
+    fn preempt(&mut self, slot: usize) -> Result<()> {
+        let Some(a) = self.slots[slot].take() else {
+            return Ok(());
+        };
+        self.stats.preemptions += 1;
+        self.stats.per_class[a.req.priority.index()].preemptions += 1;
+        self.kv.reset_slot(slot)?;
+        self.pending.push_back(PendingReq {
+            req: a.req,
+            reply: a.reply,
+            submitted: a.submitted,
+            generated: a.tokens,
+            ttft_s: a.ttft,
+            queue_s: Some(a.queue_s),
+            attempts: a.attempts,
+            times_preempted: a.times_preempted + 1,
+            seq: a.seq,
+            enqueued_round: self.round,
+        });
+        Ok(())
+    }
+
+    /// `now` is the admission wave's single clock snapshot — one read per
+    /// wave, not one per pending request per loop iteration.
+    fn queue_view(&self, now: Instant, p: &PendingReq) -> QueueView {
+        QueueView {
+            id: p.req.id,
+            priority: p.req.priority,
+            waited_rounds: self.round.saturating_sub(p.enqueued_round),
+            deadline_remaining_s: p.req.deadline.map(|d| {
+                d.as_secs_f64() - now.saturating_duration_since(p.submitted).as_secs_f64()
+            }),
+            seq: p.seq,
+            prompt_tokens: 1 + p.req.prompt.len() + p.generated.len(),
+            remaining_new: p.req.max_new.saturating_sub(p.generated.len()),
+            resumed: !p.generated.is_empty(),
+        }
+    }
+
+    /// Decoding slots a policy may preempt: mid-prefill slots are excluded,
+    /// as is any slot whose resume could not fit the prefill geometry again.
+    fn evictable_views(&self) -> Vec<SlotView> {
+        let mut v = Vec::new();
+        for (i, s) in self.slots.iter().enumerate() {
+            let Some(a) = s else { continue };
+            if !a.decoding() {
+                continue;
+            }
+            let resume_total = 1 + a.req.prompt.len() + a.tokens.len();
+            if resume_total > self.backend.max_prompt_tokens()
+                || self.kv.n_prefix + resume_total > self.backend.cache_capacity()
+            {
+                continue;
+            }
+            v.push(SlotView {
+                slot: i,
+                id: a.req.id,
+                priority: a.req.priority,
+                generated: a.tokens.len(),
+                remaining_new: a.req.max_new.saturating_sub(a.tokens.len()),
+                admitted_round: a.admitted_round,
+                decoding: true,
+                times_preempted: a.times_preempted,
+            });
+        }
+        v
+    }
+
+    /// Complete a slot's prefill: record TTFT (first admission only), emit
+    /// the first token, and return whether the request is already done.
+    fn complete_prefill(&mut self, slot: usize, first_token: i32, n_sinks: i32) -> bool {
+        let Some(a) = self.slots[slot].as_mut() else {
+            return false;
+        };
+        a.next_token = first_token;
+        a.n_sinks = n_sinks;
+        if a.ttft.is_none() {
+            // TTFT is recorded for every admitted request (prefill completion
+            // even when max_new == 0) so its sum pairs with stats.admitted
+            let ttft_s = a.submitted.elapsed().as_secs_f64();
+            a.ttft = Some(ttft_s);
+            self.stats.sum_ttft_s += ttft_s;
+            self.stats.per_class[a.req.priority.index()].sum_ttft_s += ttft_s;
+        }
+        let mut done = false;
+        if a.tokens.len() < a.req.max_new {
+            a.tokens.push(first_token);
+            a.reply.token(first_token);
+            self.stats.generated_tokens += 1;
+            if a.req.stop_tokens.contains(&first_token) {
+                a.finish = Some(FinishReason::Stop);
+                done = true;
+            } else if a.tokens.len() >= a.req.max_new {
+                a.finish = Some(FinishReason::Length);
+                done = true;
+            }
+        } else {
+            // max_new == 0, or a resume raced budget exhaustion
+            a.finish = Some(FinishReason::Length);
+            done = true;
+        }
+        done
+    }
+
+    /// Admit pending requests into free slots in the policy's order,
+    /// preempting Decoding slots when the policy asks for it.  One prefill
+    /// pass serves the whole wave; each admitted request prefills at most
+    /// one policy chunk here (the rest continues across later steps).
     fn admit(&mut self) -> Result<()> {
         if self.pending.is_empty() {
             return Ok(());
         }
         let decoding_before = self.slots.iter().any(|s| s.is_some());
-        let mut free: Vec<usize> =
-            (0..self.slots.len()).filter(|&i| self.slots[i].is_none()).collect();
-        if free.is_empty() {
-            return Ok(());
-        }
-        free.reverse(); // pop() hands out the lowest slot first
-
+        let chunk = self.policy.prefill_chunk().max(1);
         let wave_start = Instant::now();
-        let mut wave: Vec<(usize, GenRequest, Reply, Instant)> = Vec::new();
-        while let Some(&slot) = free.last() {
-            let Some((req, reply, submitted)) = self.pending.pop_front() else {
+        let mut claimed = vec![false; self.slots.len()];
+        let mut wave: Vec<(usize, PendingReq)> = Vec::new();
+
+        loop {
+            if self.pending.is_empty() {
+                break;
+            }
+            // views are rebuilt per iteration because every continue-path
+            // mutates pending; iterations are bounded by slots + rejections
+            // + preemptions, so a wave is O(that × pending).  If backlogs
+            // ever reach the tens of thousands, patch the vec incrementally
+            // instead of rebuilding.
+            let views: Vec<QueueView> =
+                self.pending.iter().map(|p| self.queue_view(wave_start, p)).collect();
+            let Some(pick) = self.policy.next_candidate(self.round, &views) else {
                 break;
             };
-            let plen = req.prompt.len() + 1; // +BOS
-            if plen > self.backend.max_prompt_tokens()
-                || self.kv.n_prefix + plen > self.backend.cache_capacity()
+            if pick >= self.pending.len() {
+                break; // defensive: a policy returned a stale index
+            }
+            let total = views[pick].prompt_tokens;
+            let remaining = views[pick].remaining_new;
+            if total > self.backend.max_prompt_tokens()
+                || self.kv.n_prefix + total > self.backend.cache_capacity()
             {
+                let p = self.pending.remove(pick).expect("pick is in range");
+                self.deferred_ids.remove(&p.req.id);
                 self.stats.rejected += 1;
-                reply.error(format!(
+                p.reply.error(format!(
                     "prompt of {} tokens exceeds serving geometry (max prompt {}, cache {})",
-                    plen,
+                    total,
                     self.backend.max_prompt_tokens(),
                     self.backend.cache_capacity()
                 ));
-                continue; // slot stays free for the next candidate
+                continue; // no slot consumed; try the next candidate
             }
-            if !self.kv.admission_feasible(plen, req.max_new) {
+            if !self.kv.admission_feasible(total, remaining) {
+                let p = self.pending.remove(pick).expect("pick is in range");
+                self.deferred_ids.remove(&p.req.id);
                 self.stats.rejected += 1;
-                reply.error(format!(
+                p.reply.error(format!(
                     "request needs more KV pages than the pool holds \
                      (prompt {} + max_new {} exceeds pool capacity): \
                      lower max_new or grow the page pool",
-                    plen, req.max_new
+                    total, remaining
                 ));
                 continue; // waiting would wedge the queue forever
             }
-            if !self.kv.can_admit(plen, req.max_new) {
-                // not enough free pages yet: wait at the head of the queue
-                // (FCFS — retiring slots will release pages), don't skip
-                // ahead.  Counted once per throttled REQUEST, not once per
-                // poll — admit() re-checks the head every decode round.
-                if self.last_deferred != Some(req.id) {
-                    self.stats.deferred_admissions += 1;
-                    self.last_deferred = Some(req.id);
+            let free_slot =
+                (0..self.slots.len()).find(|&i| self.slots[i].is_none() && !claimed[i]);
+            let blocked_pages = !self.kv.can_admit(total, remaining);
+            if free_slot.is_none() || blocked_pages {
+                // ask the policy for a preemption victim to make room; when
+                // the blocker is PAGES, the eviction must actually cover the
+                // shortfall — destroying a victim's progress without
+                // unblocking the candidate would be pure lost work (a
+                // multi-victim eviction chain is deliberately not attempted:
+                // the candidate waits instead, losing nothing)
+                let busy = self.evictable_views();
+                let victim = self
+                    .policy
+                    .preempt_victim(&views[pick], &busy)
+                    .filter(|&v| v < self.slots.len() && !claimed[v])
+                    .filter(|&v| matches!(&self.slots[v], Some(a) if a.decoding()))
+                    .filter(|&v| {
+                        !blocked_pages || self.kv.can_admit_after_evicting(v, total, remaining)
+                    });
+                if let Some(v) = victim {
+                    self.preempt(v)?;
+                    continue; // re-evaluate the same candidate with freed room
                 }
-                self.pending.push_front((req, reply, submitted));
+                // blocked with no victim: the candidate waits in the queue
+                // (the policy's order is its head-of-line discipline).
+                // Counted once per throttled REQUEST, not once per poll.
+                if blocked_pages && self.deferred_ids.insert(views[pick].id) {
+                    self.stats.deferred_admissions += 1;
+                }
                 break;
             }
-            if let Err(e) = self.kv.reserve(slot, plen, req.max_new) {
+            let slot = free_slot.expect("checked above");
+            let p = self.pending.remove(pick).expect("pick is in range");
+            self.deferred_ids.remove(&p.req.id);
+            if let Err(e) = self.kv.reserve(slot, total, remaining) {
                 // can_admit passed, so this is an engine invariant violation;
                 // fail the wave the way a prefill error would
                 let msg = format!("page reservation failed: {e:#}");
-                reply.error(msg.clone());
-                for (_, _, r, _) in &wave {
-                    r.error(msg.clone());
+                p.reply.error(msg.clone());
+                for (_, w) in &wave {
+                    w.reply.error(msg.clone());
                 }
                 return Err(e);
             }
-            free.pop();
-            wave.push((slot, req, reply, submitted));
+            claimed[slot] = true;
+            wave.push((slot, p));
         }
         if wave.is_empty() {
             return Ok(());
         }
 
-        let jobs: Vec<PrefillJob> =
-            wave.iter().map(|(slot, req, _, _)| PrefillJob { slot: *slot, req }).collect();
+        let jobs: Vec<PrefillJob> = wave
+            .iter()
+            .map(|(slot, p)| {
+                let total = 1 + p.req.prompt.len() + p.generated.len();
+                PrefillJob {
+                    slot: *slot,
+                    req: &p.req,
+                    resumed: &p.generated,
+                    start: 0,
+                    end: chunk.min(total),
+                }
+            })
+            .collect();
         let pre = match self.backend.prefill(&mut self.kv, &jobs) {
             Ok(p) => p,
             Err(e) => {
-                for (_, _, reply, _) in &wave {
-                    reply.error(format!("prefill failed: {e:#}"));
+                // a failed wave is requeued (order preserved) so the server's
+                // recovery path can retry token-less requests after a rebuild
+                drop(jobs);
+                for (slot, p) in wave.into_iter().rev() {
+                    let _ = self.kv.reset_slot(slot);
+                    self.pending.push_front(p);
                 }
                 return Err(e);
             }
@@ -256,7 +647,6 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
         let t_prefill = wave_start.elapsed().as_secs_f64();
         self.stats.prefill_calls += 1;
         self.stats.t_prefill_s += t_prefill;
-        self.stats.admitted += wave.len();
         if decoding_before {
             self.stats.mid_decode_admissions += wave.len();
         }
@@ -265,46 +655,138 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
         for o in pre {
             first.insert(o.slot, (o.first_token, o.n_sinks));
         }
-        // a backend returning outputs for the wrong slots is a contract
-        // violation; error the whole wave so no client is left on a channel
-        // that closes without a terminal event
-        if wave.iter().any(|(slot, _, _, _)| !first.contains_key(slot)) {
-            let msg = "backend prefill returned no output for an admitted slot";
-            for (_, _, reply, _) in &wave {
-                reply.error(msg.to_string());
+        // a backend returning outputs for the wrong slots — or completing a
+        // span without a first token — is a contract violation; error the
+        // whole wave so no client is left on a channel that closes without a
+        // terminal event
+        let covered = prefill_covers(
+            &first,
+            wave.iter().map(|(slot, p)| {
+                let total = 1 + p.req.prompt.len() + p.generated.len();
+                (*slot, chunk.min(total), total)
+            }),
+        );
+        if !covered {
+            let msg = "backend prefill output does not cover the admitted wave";
+            for (_, p) in &wave {
+                p.reply.error(msg.to_string());
+            }
+            bail!(msg);
+        }
+
+        let mut skew = 0.0f64;
+        let mut finished: Vec<usize> = Vec::new();
+        for (slot, p) in wave {
+            let total = 1 + p.req.prompt.len() + p.generated.len();
+            let end = chunk.min(total);
+            let (first_token, n_sinks) = first[&slot];
+            let fresh = p.queue_s.is_none();
+            let queue_s = p.queue_s.unwrap_or_else(|| {
+                wave_start.saturating_duration_since(p.submitted).as_secs_f64()
+            });
+            if fresh {
+                self.stats.admitted += 1;
+                self.stats.sum_queue_s += queue_s;
+                let cls = &mut self.stats.per_class[p.req.priority.index()];
+                cls.requests += 1;
+                cls.sum_queue_s += queue_s;
+                skew = skew.max(queue_s);
+            } else {
+                self.stats.resumed += 1;
+            }
+            self.stats.prefill_tokens += end;
+            self.slots[slot] = Some(Active {
+                req: p.req,
+                tokens: p.generated,
+                next_token: 0,
+                n_sinks: 0,
+                reply: p.reply,
+                submitted: p.submitted,
+                queue_s,
+                ttft: p.ttft_s,
+                attempts: p.attempts,
+                times_preempted: p.times_preempted,
+                seq: p.seq,
+                admitted_round: self.round,
+                prefill_written: end,
+                prefill_total: total,
+                finish: None,
+            });
+            if end == total {
+                let ft = first_token.expect("wave contract validated above");
+                if self.complete_prefill(slot, ft, n_sinks) {
+                    finished.push(slot);
+                }
+            }
+        }
+        self.stats.sum_dispatch_skew_s += skew;
+        for slot in finished {
+            self.finish(slot)?;
+        }
+        Ok(())
+    }
+
+    /// Advance every mid-prefill slot by one policy chunk (one backend call
+    /// for all of them), emitting first tokens for the ones that complete.
+    fn continue_prefill(&mut self) -> Result<()> {
+        let chunk = self.policy.prefill_chunk().max(1);
+        let rows: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| matches!(&self.slots[i], Some(a) if !a.decoding()))
+            .collect();
+        if rows.is_empty() {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let mut jobs: Vec<PrefillJob> = Vec::with_capacity(rows.len());
+        let mut spans: Vec<(usize, usize, usize)> = Vec::with_capacity(rows.len());
+        for &i in &rows {
+            let a = self.slots[i].as_ref().expect("filtered to occupied rows");
+            let end = a.prefill_written.saturating_add(chunk).min(a.prefill_total);
+            spans.push((i, end, a.prefill_total));
+            jobs.push(PrefillJob {
+                slot: i,
+                req: &a.req,
+                resumed: &a.tokens,
+                start: a.prefill_written,
+                end,
+            });
+        }
+        // on a prefill error the slots stay in place: the server's recovery
+        // path drains them (retrying token-less requests) after a rebuild
+        let pre = self.backend.prefill(&mut self.kv, &jobs)?;
+        drop(jobs);
+        self.stats.prefill_calls += 1;
+        self.stats.t_prefill_s += t0.elapsed().as_secs_f64();
+
+        let mut first = BTreeMap::new();
+        for o in pre {
+            first.insert(o.slot, (o.first_token, o.n_sinks));
+        }
+        // contract violation: error every chunked slot before touching any,
+        // so no client is left on a channel without a terminal event
+        if !prefill_covers(&first, spans.iter().copied()) {
+            let msg = "backend prefill output does not cover the chunked slots";
+            for &(slot, _, _) in &spans {
+                if let Some(a) = self.slots[slot].take() {
+                    a.reply.error(msg.to_string());
+                }
+                let _ = self.kv.reset_slot(slot);
             }
             bail!(msg);
         }
         let mut finished: Vec<usize> = Vec::new();
-        for (slot, req, reply, submitted) in wave {
-            let queue_s = wave_start.saturating_duration_since(submitted).as_secs_f64();
-            let ttft_s = submitted.elapsed().as_secs_f64();
+        for (slot, end, total) in spans {
             let (first_token, n_sinks) = first[&slot];
-            self.stats.prefill_tokens += req.prompt.len() + 1;
-            self.stats.sum_queue_s += queue_s;
-            // TTFT is recorded for every admitted request (prefill completion
-            // even when max_new == 0) so its sum pairs with stats.admitted
-            self.stats.sum_ttft_s += ttft_s;
-            let mut tokens = Vec::new();
-            if req.max_new > 0 {
-                tokens.push(first_token);
-                self.stats.generated_tokens += 1;
-                reply.token(first_token);
+            {
+                let a = self.slots[slot].as_mut().expect("slot occupied");
+                self.stats.prefill_tokens += end - a.prefill_written;
+                a.prefill_written = end;
             }
-            let done = tokens.len() >= req.max_new;
-            self.slots[slot] = Some(Active {
-                id: req.id,
-                max_new: req.max_new,
-                tokens,
-                next_token: first_token,
-                n_sinks,
-                reply,
-                submitted,
-                queue_s,
-                ttft_s,
-            });
-            if done {
-                finished.push(slot);
+            if end == total {
+                let ft = first_token.expect("chunk contract validated above");
+                if self.complete_prefill(slot, ft, n_sinks) {
+                    finished.push(slot);
+                }
             }
         }
         for slot in finished {
@@ -313,10 +795,13 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
         Ok(())
     }
 
-    /// One engine step: admit into free slots, then run one decode round
-    /// (one backend call per length-group), retiring slots as they complete.
+    /// One engine step: advance chunked prefills, admit into free slots
+    /// (policy order, possibly preempting), then run one decode round (one
+    /// backend call per length-group), retiring slots as they complete.
     /// Returns whether any work remains.
     pub fn step(&mut self) -> Result<bool> {
+        self.round += 1;
+        self.continue_prefill()?;
         self.admit()?;
         let active = self.slots.iter().filter(|s| s.is_some()).count();
         if active > self.stats.peak_active_slots {
@@ -325,16 +810,23 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
 
         // Collect rows that can no longer grow (cache full) and retire them.
         let full: Vec<usize> = (0..self.slots.len())
-            .filter(|&i| self.slots[i].is_some() && self.kv.row_len(i) >= self.kv.s_max)
+            .filter(|&i| {
+                matches!(&self.slots[i], Some(a) if a.decoding())
+                    && self.kv.row_len(i) >= self.kv.s_max
+            })
             .collect();
         for i in full {
+            if let Some(a) = self.slots[i].as_mut() {
+                a.finish = Some(FinishReason::CacheFull);
+            }
             self.finish(i)?;
         }
 
-        // Group the decoding slots by their current cache length.
+        // Group the decoding slots by their current cache length
+        // (mid-prefill slots sit out the round).
         let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
         for i in 0..self.slots.len() {
-            if self.slots[i].is_some() {
+            if matches!(&self.slots[i], Some(a) if a.decoding()) {
                 groups.entry(self.kv.row_len(i)).or_default().push(i);
             }
         }
@@ -371,7 +863,11 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
                 a.tokens.push(o.next_token);
                 a.reply.token(o.next_token);
                 self.stats.generated_tokens += 1;
-                if a.tokens.len() >= a.max_new {
+                if a.req.stop_tokens.contains(&o.next_token) {
+                    a.finish = Some(FinishReason::Stop);
+                    finished.push(o.row);
+                } else if a.tokens.len() >= a.req.max_new {
+                    a.finish = Some(FinishReason::Length);
                     finished.push(o.row);
                 }
             }
@@ -390,7 +886,7 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
 
     /// Abort everything in flight: every busy slot and every pending request
     /// gets an error reply, and the slot table is cleared.  Used by the
-    /// server when a backend execution fails mid-round.
+    /// server at shutdown and when recovery is impossible.
     ///
     /// EVERY slot is reset, not just occupied ones: a failed admission wave
     /// can leave a slot with a page reservation (and partially written rows)
@@ -403,15 +899,69 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
             }
             let _ = self.kv.reset_slot(i);
         }
-        self.last_deferred = None;
-        while let Some((_, reply, _)) = self.pending.pop_front() {
-            reply.error(msg.to_string());
+        self.deferred_ids.clear();
+        while let Some(p) = self.pending.pop_front() {
+            p.reply.error(msg.to_string());
         }
+    }
+
+    /// Drain the engine after a backend failure, for an engine rebuild:
+    ///
+    /// - ACTIVE slots that already streamed tokens get `msg` errors — their
+    ///   mid-decode state died with the backend and the v2 contract is
+    ///   conservative about half-delivered in-flight streams;
+    /// - token-less active slots (mid-chunked-prefill) and EVERY queued
+    ///   request — including preempted ones carrying generated tokens,
+    ///   whose resume re-prefill does not depend on the dead cache — are
+    ///   returned for [`ContinuousEngine::resubmit`] into the fresh engine
+    ///   while their resubmission count is below `max_retries`;
+    /// - the rest error out with the retry budget noted.
+    ///
+    /// Every slot is reset (reservations and partial prefills included).
+    pub fn drain_for_recovery(&mut self, msg: &str, max_retries: usize) -> Vec<RetryReq> {
+        let mut retry = Vec::new();
+        for i in 0..self.slots.len() {
+            if let Some(a) = self.slots[i].take() {
+                if !a.tokens.is_empty() {
+                    a.reply.error(msg.to_string());
+                } else if a.attempts < max_retries {
+                    retry.push(RetryReq {
+                        req: a.req,
+                        reply: a.reply,
+                        submitted: a.submitted,
+                        attempts: a.attempts + 1,
+                        queue_s: Some(a.queue_s),
+                        generated: Vec::new(),
+                        ttft_s: None,
+                    });
+                } else {
+                    a.reply.error(format!("{msg} (after {} retries)", a.attempts));
+                }
+            }
+            let _ = self.kv.reset_slot(i);
+        }
+        while let Some(p) = self.pending.pop_front() {
+            if p.attempts < max_retries {
+                retry.push(RetryReq {
+                    req: p.req,
+                    reply: p.reply,
+                    submitted: p.submitted,
+                    attempts: p.attempts + 1,
+                    queue_s: p.queue_s,
+                    generated: p.generated,
+                    ttft_s: p.ttft_s,
+                });
+            } else {
+                p.reply.error(format!("{msg} (after {} retries)", p.attempts));
+            }
+        }
+        self.deferred_ids.clear();
+        retry
     }
 
     /// Translate engine counters into the server's [`Metrics`] shape.
     /// `requests` counts ADMITTED requests so it pairs with the TTFT and
-    /// queue-wait sums, which are both recorded at admission time (completed
+    /// queue-wait sums, which are both recorded at first admission (completed
     /// would understate the denominator while slots are still decoding).
     pub fn metrics(&self) -> Metrics {
         Metrics {
@@ -422,11 +972,17 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
             sum_ttft_s: self.stats.sum_ttft_s,
             sum_queue_s: self.stats.sum_queue_s,
             sum_prefill_s: self.stats.t_prefill_s,
+            sum_decode_s: self.stats.t_decode_s,
             sum_busy_s: self.stats.t_prefill_s + self.stats.t_decode_s,
+            sum_dispatch_skew_s: self.stats.sum_dispatch_skew_s,
             active_slots: self.slots.iter().filter(|s| s.is_some()).count(),
             kv_resident_bytes: self.kv.resident_kv_bytes(),
             kv_used_bytes: self.kv.used_kv_bytes(),
             deferred_admissions: self.stats.deferred_admissions,
+            preemptions: self.stats.preemptions,
+            cancelled: self.stats.cancelled,
+            retries: self.stats.retries,
+            by_class: self.stats.per_class,
         }
     }
 }

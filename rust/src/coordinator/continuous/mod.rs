@@ -31,6 +31,8 @@ pub mod backend;
 pub mod engine;
 pub mod sim;
 
-pub use backend::{run_to_completion, DecodeBackend, ModelBackend};
-pub use engine::{ContinuousEngine, EngineStats, SlotPhase};
+pub use backend::{
+    run_to_completion, DecodeBackend, DecodeGroup, DecodeOut, ModelBackend, PrefillJob, PrefillOut,
+};
+pub use engine::{ContinuousEngine, EngineStats, RetryReq, SlotPhase};
 pub use sim::SimBackend;

@@ -177,26 +177,51 @@ impl DecodeBackend for SimBackend {
         spin(self.prefill_cost);
         let mut outs = Vec::with_capacity(jobs.len());
         for j in jobs {
-            let plen = j.req.prompt.len() + 1;
-            if plen > self.s_exec {
-                bail!("prompt length {plen} exceeds seq {}", self.s_exec);
+            // the row's full sequence is BOS + prompt + resumed tokens (the
+            // latter re-prefilled after a preemption); this call writes the
+            // job's [start, end) span of it
+            let total = j.total_tokens();
+            if total > self.s_exec {
+                bail!("prompt length {total} exceeds seq {}", self.s_exec);
             }
-            if kv.row_len(j.slot) != kv.n_prefix {
-                bail!("prefill into dirty slot {} (len {})", j.slot, kv.row_len(j.slot));
+            if j.start >= j.end || j.end > total {
+                bail!("invalid prefill span [{}, {}) of {total} tokens", j.start, j.end);
             }
+            if kv.row_len(j.slot) != kv.n_prefix + j.start {
+                bail!(
+                    "prefill span start {} into slot {} at len {} (chunks must be contiguous)",
+                    j.start,
+                    j.slot,
+                    kv.row_len(j.slot)
+                );
+            }
+            for pos in j.start..j.end {
+                let tok = if pos == 0 {
+                    self.bos
+                } else if pos - 1 < j.req.prompt.len() {
+                    j.req.prompt[pos - 1]
+                } else {
+                    j.resumed[pos - 1 - j.req.prompt.len()]
+                };
+                self.write_token(kv, j.slot, tok)?;
+            }
+            if j.end < total {
+                outs.push(PrefillOut { slot: j.slot, first_token: None, n_sinks: 0 });
+                continue;
+            }
+            // sinks accumulate over the whole sequence, like the incremental
+            // decode path would have counted them
             let mut n_sinks = self.prefix.n_ctx_sinks;
-            self.write_token(kv, j.slot, self.bos)?;
             if Self::is_sink(self.bos) {
                 n_sinks += 1;
             }
-            for &tok in &j.req.prompt {
-                self.write_token(kv, j.slot, tok)?;
+            for &tok in j.req.prompt.iter().chain(j.resumed.iter()) {
                 if Self::is_sink(tok) {
                     n_sinks += 1;
                 }
             }
             let h = self.row_hash(kv, j.slot, kv.row_len(j.slot));
-            outs.push(PrefillOut { slot: j.slot, first_token: self.next_from(h), n_sinks });
+            outs.push(PrefillOut { slot: j.slot, first_token: Some(self.next_from(h)), n_sinks });
         }
         Ok(outs)
     }
@@ -225,10 +250,10 @@ impl DecodeBackend for SimBackend {
 mod tests {
     use super::super::backend::run_to_completion;
     use super::*;
-    use crate::coordinator::request::GenRequest;
+    use crate::coordinator::request::{FinishReason, GenRequest};
 
     fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
-        GenRequest { id, prompt, max_new }
+        GenRequest::new(id, prompt, max_new)
     }
 
     #[test]
@@ -269,7 +294,56 @@ mod tests {
         // stops when the row is full even though max_new asks for more
         let r = run_to_completion(&be, &[req(0, vec![4, 5, 6], 50)]).unwrap();
         assert!(r[0].tokens.len() < 50 && !r[0].tokens.is_empty());
+        assert_eq!(r[0].finish, FinishReason::CacheFull);
         let r0 = run_to_completion(&be, &[req(0, vec![4, 5, 6], 0)]).unwrap();
         assert!(r0[0].tokens.is_empty());
+    }
+
+    #[test]
+    fn stop_tokens_end_streams_early() {
+        let be = SimBackend::new(2, 16, 2, 48);
+        // discover the free-running stream, then re-run stopping at one of
+        // its tokens: the stopped stream must be the prefix up to and
+        // including the first occurrence of the stop token
+        let free = run_to_completion(&be, &[req(0, vec![5, 6, 7], 6)]).unwrap();
+        assert_eq!(free[0].finish, FinishReason::Length);
+        let stop_at = free[0].tokens[2];
+        let first = free[0].tokens.iter().position(|&t| t == stop_at).unwrap();
+        let mut r = req(0, vec![5, 6, 7], 6);
+        r.stop_tokens = vec![stop_at];
+        let stopped = run_to_completion(&be, &[r]).unwrap();
+        assert_eq!(stopped[0].finish, FinishReason::Stop);
+        assert_eq!(stopped[0].tokens, free[0].tokens[..=first].to_vec());
+    }
+
+    /// Chunked prefill through the backend: writing a prompt in bounded
+    /// spans yields the same first token and row contents as one full pass.
+    #[test]
+    fn chunked_prefill_matches_full() {
+        let be = SimBackend::new(2, 24, 2, 48);
+        let r = req(0, vec![5, 9, 6, 7, 8, 4, 11, 3], 4);
+        let total = r.prompt.len() + 1;
+
+        let mut kv_full = be.new_cache().unwrap();
+        let full =
+            be.prefill(&mut kv_full, &[PrefillJob::full(0, &r)]).unwrap().remove(0);
+
+        let mut kv_chunk = be.new_cache().unwrap();
+        let mut written = 0usize;
+        let mut last = None;
+        while written < total {
+            let end = (written + 3).min(total);
+            let job = PrefillJob { slot: 0, req: &r, resumed: &[], start: written, end };
+            let out = be.prefill(&mut kv_chunk, &[job]).unwrap().remove(0);
+            if end < total {
+                assert!(out.first_token.is_none(), "incomplete span must not emit");
+            }
+            last = Some(out);
+            written = end;
+        }
+        let last = last.unwrap();
+        assert_eq!(last.first_token, full.first_token);
+        assert_eq!(last.n_sinks, full.n_sinks);
+        assert_eq!(kv_chunk.row_len(0), kv_full.row_len(0));
     }
 }

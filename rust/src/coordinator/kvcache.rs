@@ -461,6 +461,29 @@ impl KvCache {
         }
     }
 
+    /// Would [`KvCache::can_admit`] hold if `slot` were retired first?  Lets
+    /// the engine check that preempting a Decoding slot actually unblocks a
+    /// page-starved candidate BEFORE destroying the victim's progress (an
+    /// eviction that cannot cover the shortfall is pure lost work).
+    pub fn can_admit_after_evicting(&self, slot: usize, plen: usize, max_new: usize) -> bool {
+        match &self.store {
+            Store::Dense { .. } => true,
+            Store::Paged(p) => {
+                if slot >= self.batch {
+                    return false;
+                }
+                // retiring the slot returns its mapped own pages to the free
+                // list and drops its outstanding (unfilled) reservation from
+                // the promised total
+                let own = p.own[slot].len();
+                let outstanding = p.reserved[slot].saturating_sub(own);
+                p.pool.free_pages() + own
+                    >= p.uncommitted().saturating_sub(outstanding)
+                        + self.worst_own_pages(plen, max_new)
+            }
+        }
+    }
+
     /// Reserve worst-case pages for an admitted request in `slot` so its
     /// prefill/appends can never fail mid-flight.  No-op on the dense layout.
     pub fn reserve(&mut self, slot: usize, plen: usize, max_new: usize) -> Result<()> {
@@ -570,6 +593,25 @@ impl KvCache {
         src_row: usize,
         prompt_len: usize,
     ) -> Result<()> {
+        self.write_prefill_span(slot, k, v, src_row, 0, prompt_len)
+    }
+
+    /// Chunked-prefill write: copy token positions [start, end) of source row
+    /// `src_row` (token domain: 0 = first prompt position) into slot `slot`
+    /// at cache positions [n_prefix + start, n_prefix + end).  Chunks must be
+    /// contiguous — the row's length must sit exactly at `n_prefix + start`
+    /// (for `start == 0` this is the clean-slot discipline) — and the write
+    /// advances row_len(slot) to `n_prefix + end`, so a partially-prefilled
+    /// row can never be decoded past what was written.
+    pub fn write_prefill_span(
+        &mut self,
+        slot: usize,
+        k: &Tensor,
+        v: &Tensor,
+        src_row: usize,
+        start: usize,
+        end: usize,
+    ) -> Result<()> {
         if k.shape.len() != 5 || v.shape != k.shape {
             bail!("prefill kv shape mismatch: {:?} vs {:?}", k.shape, v.shape);
         }
@@ -580,29 +622,35 @@ impl KvCache {
         if slot >= self.batch || src_row >= b {
             bail!("prefill row out of range: slot {slot}/{}, src {src_row}/{b}", self.batch);
         }
-        if prompt_len > s {
-            bail!("prompt_len {prompt_len} exceeds prefill output seq {s}");
+        if start > end {
+            bail!("prefill span [{start}, {end}) is inverted");
         }
-        if self.n_prefix + prompt_len > self.s_max {
-            bail!("prompt too long: {} + {} > {}", self.n_prefix, prompt_len, self.s_max);
+        if end > s {
+            bail!("prefill span end {end} exceeds prefill output seq {s}");
         }
-        // clean-slot discipline: dense rows rely on it to bound the
-        // retirement memset; paged slots rely on it so page tables only ever
-        // grow from empty
-        if self.lens[slot] != self.n_prefix {
+        if self.n_prefix + end > self.s_max {
+            bail!("prompt too long: {} + {} > {}", self.n_prefix, end, self.s_max);
+        }
+        // contiguity discipline: chunk N+1 lands exactly where chunk N ended.
+        // For start == 0 this is the clean-slot rule dense rows rely on to
+        // bound the retirement memset and paged slots rely on so page tables
+        // only ever grow from empty.
+        if self.lens[slot] != self.n_prefix + start {
             bail!(
-                "prefill into dirty slot {slot} (len {}, prefix {}): reset_slot first",
+                "prefill span start {start} into slot {slot} at len {} (prefix {}): \
+                 chunks must be contiguous (reset_slot first for a fresh row)",
                 self.lens[slot],
                 self.n_prefix
             );
         }
+        let span_len = end - start;
         match &mut self.store {
             Store::Dense { k: kc, v: vc } => {
                 for li in 0..l {
                     for hi in 0..h {
                         // positions are contiguous in s on both sides: one
                         // memcpy per (layer, head) span
-                        let src = ((li * b + src_row) * h + hi) * s * dh;
+                        let src = (((li * b + src_row) * h + hi) * s + start) * dh;
                         let dst = dense_offset(
                             self.batch,
                             self.n_heads,
@@ -611,9 +659,9 @@ impl KvCache {
                             li,
                             slot,
                             hi,
-                            self.n_prefix,
+                            self.n_prefix + start,
                         );
-                        let span = prompt_len * dh;
+                        let span = span_len * dh;
                         kc.data[dst..dst + span].copy_from_slice(&k.data[src..src + span]);
                         vc.data[dst..dst + span].copy_from_slice(&v.data[src..src + span]);
                     }
@@ -621,16 +669,16 @@ impl KvCache {
             }
             Store::Paged(pg) => {
                 let ps = pg.pool.page_size;
-                for idx in 0..div_ceil(prompt_len, ps) {
+                for idx in 0..div_ceil(end, ps) {
                     pg.ensure_own_page(slot, idx)?;
                 }
                 for li in 0..l {
                     for hi in 0..h {
                         let src_base = ((li * b + src_row) * h + hi) * s * dh;
-                        let mut rel = 0;
-                        while rel < prompt_len {
+                        let mut rel = start;
+                        while rel < end {
                             let (idx, po) = (rel / ps, rel % ps);
-                            let take = (ps - po).min(prompt_len - rel);
+                            let take = (ps - po).min(end - rel);
                             let page = pg.own[slot][idx];
                             let dst = pg.pool.slab_offset(page, li, hi, po);
                             let src = src_base + rel * dh;
@@ -645,7 +693,7 @@ impl KvCache {
                 }
             }
         }
-        self.lens[slot] = self.n_prefix + prompt_len;
+        self.lens[slot] = self.n_prefix + end;
         Ok(())
     }
 
@@ -1071,6 +1119,45 @@ mod tests {
             assert_eq!(kv.uniform_len(), Some(7));
             assert_eq!(kv.k_at(0, 0, 0, 2)[0], 7.0); // first prompt slot after prefix
             assert_ne!(kv.k_at(0, 0, 0, 1)[0], 7.0); // prefix untouched
+        }
+    }
+
+    /// Chunked prefill: contiguous spans land at the right cache positions
+    /// on both layouts, non-contiguous spans are rejected, and the row is
+    /// byte-identical to a single full-row write.
+    #[test]
+    fn prefill_span_chunks_are_contiguous() {
+        let c = cfg();
+        for layout in layouts() {
+            let mut kv = KvCache::with_layout(&c, 2, layout);
+            kv.install_prefix(&prefix(&c, 2)).unwrap();
+            let shape = [c.n_layers, 1, c.n_heads, 7, c.d_head];
+            let mut src = Tensor::zeros(&shape);
+            for (i, v) in src.data.iter_mut().enumerate() {
+                *v = i as f32;
+            }
+            // full-row reference in slot 0
+            kv.write_prefill_row(0, &src, &src, 0, 7).unwrap();
+            // three chunks into slot 1
+            kv.write_prefill_span(1, &src, &src, 0, 0, 3).unwrap();
+            assert_eq!(kv.row_len(1), 2 + 3);
+            // a gap or a replay is rejected (chunks must be contiguous)
+            assert!(kv.write_prefill_span(1, &src, &src, 0, 4, 7).is_err());
+            assert!(kv.write_prefill_span(1, &src, &src, 0, 0, 3).is_err());
+            kv.write_prefill_span(1, &src, &src, 0, 3, 5).unwrap();
+            kv.write_prefill_span(1, &src, &src, 0, 5, 7).unwrap();
+            assert_eq!(kv.row_len(1), kv.row_len(0));
+            for l in 0..c.n_layers {
+                for h in 0..c.n_heads {
+                    for s in 0..kv.row_len(0) {
+                        assert_eq!(
+                            kv.k_at(l, 0, h, s),
+                            kv.k_at(l, 1, h, s),
+                            "chunked row diverged at (l={l}, h={h}, s={s})"
+                        );
+                    }
+                }
+            }
         }
     }
 

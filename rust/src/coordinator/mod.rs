@@ -7,17 +7,26 @@
 //! faster prefill than dynamic) is exercised here: the prefill path runs the
 //! static or dynamic executable, and the prefixed K/V entries are installed
 //! into every sequence's cache without recomputation.  Two scheduling
-//! policies share that machinery (see rust/DESIGN.md):
+//! engines share that machinery (see rust/DESIGN.md):
 //!
 //! - run-to-completion ([`scheduler::run_batch`]): one uniform batch end to
 //!   end — the baseline, kept for parity assertions;
 //! - continuous batching ([`continuous::ContinuousEngine`]): a persistent
 //!   decode loop over a slot table that admits requests mid-flight and
-//!   streams tokens as they are produced.
+//!   streams tokens as they are produced.  Its scheduling DECISIONS —
+//!   admission order, preemption, prefill chunking — live behind the
+//!   [`policy::SchedulePolicy`] trait ([`policy::Fcfs`] parity baseline,
+//!   [`policy::PriorityPreempt`] for mixed-priority traffic).
+//!
+//! Serving API v2: requests are built via [`request::GenRequest::builder`]
+//! (priority class, deadline hint, stop tokens), submissions return a
+//! [`server::RequestHandle`] with `cancel()`, and responses carry a
+//! [`request::FinishReason`].
 
 pub mod batcher;
 pub mod continuous;
 pub mod kvcache;
+pub mod policy;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -25,5 +34,9 @@ pub mod server;
 pub use batcher::{Batcher, Pending};
 pub use continuous::{ContinuousEngine, ModelBackend, SimBackend};
 pub use kvcache::{KvCache, KvLayout, PagePool};
-pub use request::{GenRequest, GenResponse, Metrics, Reply, StreamEvent};
-pub use server::{EngineKind, Server, ServerConfig};
+pub use policy::{Fcfs, PriorityPreempt, QueueView, SchedulePolicy, SlotView};
+pub use request::{
+    ClassMetrics, FinishReason, GenRequest, GenRequestBuilder, GenResponse, Metrics, Priority,
+    Reply, StreamEvent,
+};
+pub use server::{EngineKind, RequestHandle, Server, ServerConfig, ServerConfigBuilder};

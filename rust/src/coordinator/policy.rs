@@ -1,0 +1,370 @@
+//! Pluggable scheduling policy for the continuous engine.
+//!
+//! The engine owns the *mechanism* — slot table, page reservations, chunked
+//! prefill plumbing, preemption/resume bookkeeping — and delegates every
+//! *decision* to a [`SchedulePolicy`]:
+//!
+//! - **admission order**: which pending request to try next
+//!   ([`SchedulePolicy::next_candidate`]);
+//! - **preemption**: which Decoding slot, if any, to evict when the chosen
+//!   candidate cannot be admitted ([`SchedulePolicy::preempt_victim`]);
+//! - **prefill chunking**: how many prompt tokens one engine step may
+//!   prefill for a single request ([`SchedulePolicy::prefill_chunk`]), which
+//!   bounds how long a long-prompt admission can stall decode rounds.
+//!
+//! Two implementations ship: [`Fcfs`] reproduces the pre-policy engine
+//! exactly (head-of-queue order, never preempts, unbounded chunk) and is the
+//! parity baseline; [`PriorityPreempt`] orders by [`Priority`] with
+//! round-based aging (so sustained high-priority load cannot starve lower
+//! classes), preempts lower-priority Decoding slots for Interactive
+//! arrivals, and bounds prefill chunks.
+//!
+//! Aging and admission bookkeeping are measured in ENGINE ROUNDS, not wall
+//! time, so policy decisions are deterministic and testable on the
+//! simulation backend.
+
+use super::request::Priority;
+
+/// A pending request as a policy sees it.
+#[derive(Debug, Clone)]
+pub struct QueueView {
+    pub id: u64,
+    pub priority: Priority,
+    /// engine rounds spent waiting in the pending queue
+    pub waited_rounds: u64,
+    /// seconds until the request's deadline hint elapses (negative = past
+    /// due); `None` when the request has no deadline
+    pub deadline_remaining_s: Option<f64>,
+    /// arrival order, monotone across the engine's lifetime
+    pub seq: u64,
+    /// tokens the admission prefill must write (BOS + prompt + any tokens
+    /// re-prefilled after a preemption)
+    pub prompt_tokens: usize,
+    /// generation budget still owed
+    pub remaining_new: usize,
+    /// true when this is a preempted request awaiting resume
+    pub resumed: bool,
+}
+
+/// A busy slot as a policy sees it (preemption-victim candidate).
+#[derive(Debug, Clone, Copy)]
+pub struct SlotView {
+    pub slot: usize,
+    pub id: u64,
+    pub priority: Priority,
+    /// tokens generated so far (lost work ≈ resume re-prefill cost)
+    pub generated: usize,
+    /// generation budget still owed
+    pub remaining_new: usize,
+    /// engine round at which the slot was (re)admitted
+    pub admitted_round: u64,
+    /// finished (chunked) prefill and is decoding
+    pub decoding: bool,
+    /// times this request has already been preempted (thrash guard:
+    /// [`PriorityPreempt`] never evicts a request twice, which bounds the
+    /// work a sustained high-priority flood can steal from a victim)
+    pub times_preempted: usize,
+}
+
+/// Scheduling decisions for the continuous engine.  Implementations must be
+/// `Send` (the policy crosses into the server's worker thread).
+pub trait SchedulePolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// A fresh instance with the same configuration (the server rebuilds the
+    /// engine — and its policy — after a backend failure).
+    fn fresh(&self) -> Box<dyn SchedulePolicy>;
+
+    /// Index into `queue` of the next admission candidate, or `None` to stop
+    /// admitting this round.  Called repeatedly within one admission round
+    /// with already-admitted requests removed; returning a blocked candidate
+    /// ends the round (the engine never skips past a blocked pick, so a
+    /// policy's order is also its head-of-line discipline).
+    fn next_candidate(&mut self, round: u64, queue: &[QueueView]) -> Option<usize>;
+
+    /// Slot to preempt so `candidate` can be admitted, or `None` to leave
+    /// the candidate waiting.  `busy` holds only slots the engine considers
+    /// evictable (Decoding, resume-feasible).  Preempted slots release their
+    /// pages and requeue with generated-so-far tokens preserved.
+    fn preempt_victim(&mut self, candidate: &QueueView, busy: &[SlotView]) -> Option<usize> {
+        let _ = (candidate, busy);
+        None
+    }
+
+    /// Maximum prompt tokens one engine step may prefill for one request.
+    /// `usize::MAX` disables chunking (whole prompt in the admission wave).
+    fn prefill_chunk(&self) -> usize {
+        usize::MAX
+    }
+}
+
+/// Strict first-come-first-served: admission in arrival order, a blocked
+/// head request blocks the queue (it is never skipped), no preemption, no
+/// prefill chunking.  This is byte-for-byte the pre-policy engine behavior
+/// and the parity baseline for the continuous test suite.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fcfs;
+
+impl SchedulePolicy for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn fresh(&self) -> Box<dyn SchedulePolicy> {
+        Box::new(Fcfs)
+    }
+
+    fn next_candidate(&mut self, _round: u64, queue: &[QueueView]) -> Option<usize> {
+        if queue.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+}
+
+/// Priority scheduling with round-based aging, preemption, and bounded
+/// prefill chunks.
+///
+/// - **Order**: highest *effective* class first, where a request's class is
+///   promoted one level per `age_rounds` rounds waited (capped at
+///   Interactive) — sustained Interactive load therefore cannot starve Batch
+///   beyond `2 * age_rounds` rounds.  Within a class: tighter deadline
+///   first, then arrival order.
+/// - **Preemption**: when the chosen candidate cannot be admitted, the
+///   lowest-RAW-priority Decoding slot below the candidate's raw class is
+///   evicted (ties: fewest generated tokens — cheapest resume — then most
+///   recently admitted).  Raw priority, not aged: aging grants queue
+///   position, never eviction rights, so an aged Batch request cannot churn
+///   other Batch slots.  A request is never evicted twice (`times_preempted`
+///   guard), so a sustained Interactive flood cannot preempt a resumed
+///   victim forever — combined with aging this BOUNDS Batch starvation.
+/// - **Chunking**: at most `chunk` prompt tokens prefilled per step per
+///   request, so one long prompt stalls concurrent decode rounds by at most
+///   one chunk.
+#[derive(Debug, Clone, Copy)]
+pub struct PriorityPreempt {
+    /// rounds waited per one-class promotion (anti-starvation aging)
+    pub age_rounds: u64,
+    /// max prompt tokens prefilled per engine step per request
+    pub chunk: usize,
+}
+
+impl Default for PriorityPreempt {
+    fn default() -> Self {
+        PriorityPreempt { age_rounds: 32, chunk: 16 }
+    }
+}
+
+impl PriorityPreempt {
+    /// Aging level: one per `age_rounds` waited (uncapped — also the
+    /// class-tie breaker, so an aged request cannot be starved by a stream
+    /// of fresh same-effective-class arrivals carrying deadline hints).
+    fn boost(&self, q: &QueueView) -> u64 {
+        if self.age_rounds == 0 {
+            0
+        } else {
+            q.waited_rounds / self.age_rounds
+        }
+    }
+
+    /// Effective class index after aging (0..=2).
+    fn effective(&self, q: &QueueView) -> usize {
+        (q.priority.index() + self.boost(q) as usize).min(Priority::Interactive.index())
+    }
+}
+
+impl SchedulePolicy for PriorityPreempt {
+    fn name(&self) -> &'static str {
+        "priority-preempt"
+    }
+
+    fn fresh(&self) -> Box<dyn SchedulePolicy> {
+        Box::new(*self)
+    }
+
+    fn next_candidate(&mut self, _round: u64, queue: &[QueueView]) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, q) in queue.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let bq = &queue[b];
+                    let (eff_b, eff_q) = (self.effective(bq), self.effective(q));
+                    if eff_q != eff_b {
+                        eff_q > eff_b
+                    } else if self.boost(q) != self.boost(bq) {
+                        // longer-aged wins the class tie BEFORE deadlines, so
+                        // a boosted request cannot be starved by a stream of
+                        // fresh deadline-carrying arrivals (the aging bound
+                        // holds whether or not clients set deadlines)
+                        self.boost(q) > self.boost(bq)
+                    } else {
+                        // tighter deadline first (None sorts last), then FCFS
+                        let dq = q.deadline_remaining_s.unwrap_or(f64::INFINITY);
+                        let db = bq.deadline_remaining_s.unwrap_or(f64::INFINITY);
+                        if dq != db {
+                            dq < db
+                        } else {
+                            q.seq < bq.seq
+                        }
+                    }
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    fn preempt_victim(&mut self, candidate: &QueueView, busy: &[SlotView]) -> Option<usize> {
+        let mut victim: Option<SlotView> = None;
+        for s in busy {
+            if !s.decoding || s.priority >= candidate.priority || s.times_preempted > 0 {
+                continue;
+            }
+            let better = match &victim {
+                None => true,
+                Some(v) => {
+                    (s.priority, s.generated, std::cmp::Reverse(s.admitted_round))
+                        < (v.priority, v.generated, std::cmp::Reverse(v.admitted_round))
+                }
+            };
+            if better {
+                victim = Some(*s);
+            }
+        }
+        victim.map(|v| v.slot)
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        self.chunk.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qv(id: u64, priority: Priority, waited: u64, seq: u64) -> QueueView {
+        QueueView {
+            id,
+            priority,
+            waited_rounds: waited,
+            deadline_remaining_s: None,
+            seq,
+            prompt_tokens: 4,
+            remaining_new: 4,
+            resumed: false,
+        }
+    }
+
+    fn sv(slot: usize, priority: Priority, generated: usize, round: u64) -> SlotView {
+        SlotView {
+            slot,
+            id: 100 + slot as u64,
+            priority,
+            generated,
+            remaining_new: 8,
+            admitted_round: round,
+            decoding: true,
+            times_preempted: 0,
+        }
+    }
+
+    #[test]
+    fn fcfs_is_head_of_queue() {
+        let mut p = Fcfs;
+        assert_eq!(p.next_candidate(0, &[]), None);
+        let q = [qv(1, Priority::BestEffort, 0, 0), qv(2, Priority::Interactive, 0, 1)];
+        assert_eq!(p.next_candidate(0, &q), Some(0), "fcfs ignores priority");
+        assert_eq!(p.preempt_victim(&q[1], &[sv(0, Priority::BestEffort, 0, 0)]), None);
+        assert_eq!(p.prefill_chunk(), usize::MAX);
+    }
+
+    #[test]
+    fn priority_orders_classes_then_fcfs() {
+        let mut p = PriorityPreempt::default();
+        let q = [
+            qv(1, Priority::Batch, 0, 0),
+            qv(2, Priority::Interactive, 0, 1),
+            qv(3, Priority::Interactive, 0, 2),
+            qv(4, Priority::BestEffort, 0, 3),
+        ];
+        // highest class first; FCFS within class
+        assert_eq!(p.next_candidate(0, &q), Some(1));
+    }
+
+    #[test]
+    fn aging_promotes_waiting_requests() {
+        let mut p = PriorityPreempt { age_rounds: 10, chunk: 16 };
+        // a Batch request that waited 10+ rounds ties Interactive and wins on
+        // arrival order
+        let q = [qv(1, Priority::Interactive, 0, 5), qv(2, Priority::Batch, 10, 1)];
+        assert_eq!(p.next_candidate(0, &q), Some(1));
+        // under the aging threshold, Interactive still wins
+        let q = [qv(1, Priority::Interactive, 0, 5), qv(2, Priority::Batch, 9, 1)];
+        assert_eq!(p.next_candidate(0, &q), Some(0));
+    }
+
+    #[test]
+    fn aged_request_beats_fresh_deadline_carriers() {
+        // the aging guarantee must hold even when the competing fresh
+        // arrivals carry deadline hints: boost outranks deadline in the tie
+        let mut p = PriorityPreempt { age_rounds: 10, chunk: 16 };
+        let mut fresh = qv(1, Priority::Interactive, 0, 50);
+        fresh.deadline_remaining_s = Some(0.010);
+        let aged = qv(2, Priority::Batch, 10, 1); // boost 1, no deadline
+        assert_eq!(p.next_candidate(0, &[fresh, aged]), Some(1));
+    }
+
+    #[test]
+    fn deadline_breaks_ties_within_class() {
+        let mut p = PriorityPreempt::default();
+        let mut a = qv(1, Priority::Interactive, 0, 0);
+        let mut b = qv(2, Priority::Interactive, 0, 1);
+        a.deadline_remaining_s = None;
+        b.deadline_remaining_s = Some(0.05);
+        assert_eq!(p.next_candidate(0, &[a, b]), Some(1), "deadline beats arrival order");
+    }
+
+    #[test]
+    fn preemption_picks_lowest_class_cheapest_resume() {
+        let mut p = PriorityPreempt::default();
+        let cand = qv(9, Priority::Interactive, 0, 9);
+        let busy = [
+            sv(0, Priority::Batch, 2, 1),
+            sv(1, Priority::BestEffort, 5, 2),
+            sv(2, Priority::BestEffort, 1, 3),
+        ];
+        // lowest class first, then fewest generated tokens
+        assert_eq!(p.preempt_victim(&cand, &busy), Some(2));
+        // equals are not preempted: an Interactive slot never evicts another
+        let peers = [sv(0, Priority::Interactive, 0, 1)];
+        assert_eq!(p.preempt_victim(&cand, &peers), None);
+        // a Batch candidate does not evict Batch slots (raw priority rule)
+        let batch_cand = qv(8, Priority::Batch, 1000, 8);
+        assert_eq!(p.preempt_victim(&batch_cand, &[sv(0, Priority::Batch, 0, 1)]), None);
+    }
+
+    #[test]
+    fn non_decoding_slots_are_not_victims() {
+        let mut p = PriorityPreempt::default();
+        let cand = qv(9, Priority::Interactive, 0, 9);
+        let mut s = sv(0, Priority::BestEffort, 0, 1);
+        s.decoding = false;
+        assert_eq!(p.preempt_victim(&cand, &[s]), None);
+    }
+
+    #[test]
+    fn already_preempted_slots_are_not_victims_again() {
+        let mut p = PriorityPreempt::default();
+        let cand = qv(9, Priority::Interactive, 0, 9);
+        let mut s = sv(0, Priority::Batch, 2, 1);
+        s.times_preempted = 1;
+        assert_eq!(p.preempt_victim(&cand, &[s]), None, "thrash guard");
+        s.times_preempted = 0;
+        assert_eq!(p.preempt_victim(&cand, &[s]), Some(0));
+    }
+}

@@ -1,14 +1,150 @@
-//! Request/response/streaming types for the serving coordinator.
+//! Request/response/streaming types for the serving coordinator (API v2).
+//!
+//! A request carries a scheduling class ([`Priority`]), an optional deadline
+//! hint, and stop tokens; responses carry a [`FinishReason`] so clients can
+//! tell a budget-exhausted stream from a stop-token hit, a cache-full
+//! truncation, or a cancellation.  Construct requests through
+//! [`GenRequest::new`] (defaults) or [`GenRequest::builder`].
 
 use std::sync::mpsc::Sender;
+use std::time::Duration;
+
+/// Scheduling class of a request.  Declaration order is priority order
+/// (derived `Ord`: `BestEffort < Batch < Interactive`), which is what the
+/// scheduling policies compare.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// throughput filler: runs when nothing better is waiting
+    BestEffort = 0,
+    /// default class: offline/bulk work with no latency target
+    #[default]
+    Batch = 1,
+    /// latency-sensitive: admitted first, may preempt lower classes
+    Interactive = 2,
+}
+
+impl Priority {
+    /// Number of classes (sizes the per-class metric arrays).
+    pub const COUNT: usize = 3;
+
+    /// Index into per-class arrays (0 = BestEffort .. 2 = Interactive).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::BestEffort => "best-effort",
+            Priority::Batch => "batch",
+            Priority::Interactive => "interactive",
+        }
+    }
+
+    /// All classes, lowest priority first (array order).
+    pub fn all() -> [Priority; Priority::COUNT] {
+        [Priority::BestEffort, Priority::Batch, Priority::Interactive]
+    }
+}
+
+/// Why a generation stream ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// `max_new` tokens generated (the normal completion)
+    Length,
+    /// a stop token was emitted (the stop token is included in the stream)
+    Stop,
+    /// the cache row filled before the budget was reached
+    CacheFull,
+    /// cancelled via a request handle; tokens generated so far are returned
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::CacheFull => "cache-full",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
 
 /// A generation request (prompt already tokenized, no BOS — the scheduler
 /// prepends it so every sequence starts with the initial-position token).
+///
+/// Construct with [`GenRequest::new`] for the defaults (Batch priority, no
+/// deadline, no stop tokens) or [`GenRequest::builder`] for the full surface.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new: usize,
+    /// scheduling class (admission order, preemption rights)
+    pub priority: Priority,
+    /// latency budget from submission, used by policies as an ordering hint
+    /// (a tighter deadline sorts earlier within a class); requests are NOT
+    /// killed on expiry
+    pub deadline: Option<Duration>,
+    /// generation ends early when one of these tokens is emitted (the stop
+    /// token itself is delivered, `FinishReason::Stop`)
+    pub stop_tokens: Vec<i32>,
+}
+
+impl GenRequest {
+    /// A request with default scheduling (Batch class, no deadline, no stop
+    /// tokens) — the v1 constructor shape.
+    pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt,
+            max_new,
+            priority: Priority::default(),
+            deadline: None,
+            stop_tokens: Vec::new(),
+        }
+    }
+
+    pub fn builder(id: u64) -> GenRequestBuilder {
+        GenRequestBuilder { req: GenRequest::new(id, Vec::new(), 0) }
+    }
+}
+
+/// Builder for [`GenRequest`] (see [`GenRequest::builder`]).
+#[derive(Debug, Clone)]
+pub struct GenRequestBuilder {
+    req: GenRequest,
+}
+
+impl GenRequestBuilder {
+    pub fn prompt(mut self, prompt: Vec<i32>) -> Self {
+        self.req.prompt = prompt;
+        self
+    }
+
+    pub fn max_new(mut self, max_new: usize) -> Self {
+        self.req.max_new = max_new;
+        self
+    }
+
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.req.priority = priority;
+        self
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.req.deadline = Some(deadline);
+        self
+    }
+
+    pub fn stop_tokens(mut self, stop_tokens: Vec<i32>) -> Self {
+        self.req.stop_tokens = stop_tokens;
+        self
+    }
+
+    pub fn build(self) -> GenRequest {
+        self.req
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -23,6 +159,8 @@ pub struct GenResponse {
     pub total_s: f64,
     /// time spent waiting before prefill started (submit → admission)
     pub queue_s: f64,
+    /// why the stream ended
+    pub finish: FinishReason,
 }
 
 /// Incremental output of a streaming generation request.
@@ -73,11 +211,44 @@ impl Reply {
     }
 }
 
+/// Per-priority-class serving counters (one entry per [`Priority`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassMetrics {
+    /// requests admitted (first admission; preemption resumes not recounted)
+    pub requests: usize,
+    pub completed: usize,
+    /// per-request time-to-first-token, summed (recorded at first admission)
+    pub sum_ttft_s: f64,
+    /// per-request queue wait, summed (recorded at first admission)
+    pub sum_queue_s: f64,
+    /// times a request of this class was preempted mid-decode
+    pub preemptions: usize,
+    pub cancelled: usize,
+}
+
+impl ClassMetrics {
+    pub fn mean_ttft(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.sum_ttft_s / self.requests as f64
+        }
+    }
+
+    pub fn mean_queue_wait(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.sum_queue_s / self.requests as f64
+        }
+    }
+}
+
 /// Aggregate serving metrics (reported by the server / serve_batch example).
 ///
 /// TTFT and queue-wait sums are PER REQUEST (every response is recorded);
-/// `sum_prefill_s`/`sum_busy_s` are per dispatch, so decode throughput can be
-/// computed as generated tokens over busy-minus-prefill wall time.
+/// `sum_prefill_s`/`sum_decode_s`/`sum_busy_s` are per dispatch, so decode
+/// throughput is generated tokens over directly-measured decode wall time.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub requests: usize,
@@ -91,8 +262,15 @@ pub struct Metrics {
     pub sum_queue_s: f64,
     /// wall time spent inside prefill executions
     pub sum_prefill_s: f64,
+    /// wall time spent inside decode executions (measured directly, so
+    /// [`Metrics::decode_tps`] never divides by a raced busy−prefill residue)
+    pub sum_decode_s: f64,
     /// wall time the engine was busy (prefill + decode)
     pub sum_busy_s: f64,
+    /// per-dispatch queue→dispatch skew (longest enqueue-to-dispatch wait in
+    /// each dispatched batch, summed) — the part of `sum_ttft_s` that is
+    /// queueing rather than engine work
+    pub sum_dispatch_skew_s: f64,
     /// slots decoding at report time (continuous engine; 0 for batch)
     pub active_slots: usize,
     /// bytes resident for KV storage (page pool or dense block + shim view)
@@ -101,6 +279,15 @@ pub struct Metrics {
     pub kv_used_bytes: usize,
     /// admissions that waited at the queue head for free KV pages
     pub deferred_admissions: usize,
+    /// Decoding slots preempted for a higher class (pages released, request
+    /// requeued with its generated tokens preserved)
+    pub preemptions: usize,
+    /// requests cancelled via their handle (in-queue or mid-decode)
+    pub cancelled: usize,
+    /// token-less in-flight requests resubmitted after an engine rebuild
+    pub retries: usize,
+    /// per-priority-class breakdown (index = `Priority::index()`)
+    pub by_class: [ClassMetrics; Priority::COUNT],
 }
 
 impl Metrics {
@@ -122,9 +309,23 @@ impl Metrics {
         }
     }
 
+    /// Per-class counters for `p`.
+    pub fn class(&self, p: Priority) -> &ClassMetrics {
+        &self.by_class[p.index()]
+    }
+
     /// Aggregate decode throughput over the time the engine spent decoding.
+    ///
+    /// Uses the directly-accumulated `sum_decode_s`; falls back to
+    /// `sum_busy_s - sum_prefill_s` (clamped at zero) for metrics produced
+    /// before the decode clock existed, so a stats probe racing a long batch
+    /// window can never observe a negative decode time.
     pub fn decode_tps(&self) -> f64 {
-        let decode_time = self.sum_busy_s - self.sum_prefill_s;
+        let decode_time = if self.sum_decode_s > 0.0 {
+            self.sum_decode_s
+        } else {
+            (self.sum_busy_s - self.sum_prefill_s).max(0.0)
+        };
         if decode_time <= 0.0 {
             0.0
         } else {
@@ -148,6 +349,7 @@ mod tests {
             m.sum_queue_s += 0.002;
         }
         m.sum_prefill_s = 0.010;
+        m.sum_decode_s = 0.100;
         m.sum_busy_s = 0.110;
         m.generated_tokens = 50;
         assert!((m.mean_ttft() - 0.010).abs() < 1e-12);
@@ -155,12 +357,67 @@ mod tests {
         assert!((m.decode_tps() - 500.0).abs() < 1e-6);
     }
 
+    /// Regression: a stats probe racing a long batch window used to observe
+    /// `sum_busy_s < sum_prefill_s` (busy recorded per dispatch, prefill
+    /// already charged) and report a NEGATIVE decode throughput.  The direct
+    /// decode clock makes the fallback unreachable in served paths, and the
+    /// fallback itself clamps at zero.
+    #[test]
+    fn decode_tps_never_negative() {
+        let mut m = Metrics::default();
+        m.generated_tokens = 10;
+        m.sum_prefill_s = 0.5;
+        m.sum_busy_s = 0.2; // raced probe: busy lags prefill
+        assert_eq!(m.decode_tps(), 0.0, "clamped fallback, not negative");
+        m.sum_decode_s = 0.1; // direct clock wins over the residue
+        assert!((m.decode_tps() - 100.0).abs() < 1e-9);
+        assert!(m.decode_tps() >= 0.0);
+    }
+
+    #[test]
+    fn priority_orders_and_indexes() {
+        assert!(Priority::Interactive > Priority::Batch);
+        assert!(Priority::Batch > Priority::BestEffort);
+        assert_eq!(Priority::default(), Priority::Batch);
+        for (i, p) in Priority::all().iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+    }
+
+    #[test]
+    fn builder_sets_all_fields() {
+        let r = GenRequest::builder(7)
+            .prompt(vec![1, 2, 3])
+            .max_new(5)
+            .priority(Priority::Interactive)
+            .deadline(Duration::from_millis(50))
+            .stop_tokens(vec![9])
+            .build();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new, 5);
+        assert_eq!(r.priority, Priority::Interactive);
+        assert_eq!(r.deadline, Some(Duration::from_millis(50)));
+        assert_eq!(r.stop_tokens, vec![9]);
+        // `new` keeps the v1 defaults
+        let d = GenRequest::new(1, vec![4], 2);
+        assert_eq!(d.priority, Priority::Batch);
+        assert!(d.deadline.is_none() && d.stop_tokens.is_empty());
+    }
+
     #[test]
     fn reply_routes_events() {
         let (tx, rx) = std::sync::mpsc::channel();
         let r = Reply::Stream(tx);
         r.token(7);
-        let resp = GenResponse { id: 1, tokens: vec![7], ttft_s: 0.1, total_s: 0.2, queue_s: 0.0 };
+        let resp = GenResponse {
+            id: 1,
+            tokens: vec![7],
+            ttft_s: 0.1,
+            total_s: 0.2,
+            queue_s: 0.0,
+            finish: FinishReason::Length,
+        };
         r.done(resp);
         assert!(matches!(rx.recv().unwrap(), StreamEvent::Token(7)));
         assert!(matches!(rx.recv().unwrap(), StreamEvent::Done(_)));

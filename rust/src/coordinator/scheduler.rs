@@ -25,7 +25,9 @@ use super::request::{GenRequest, GenResponse};
 
 /// Run one wave of requests to completion (len ≤ exec batch).  `mode` selects
 /// the prefill executable; decode always runs the static executable (with
-/// near-lossless qmax when the model is not statically quantized).
+/// near-lossless qmax when the model is not statically quantized).  Stop
+/// tokens are honored (`FinishReason::Stop`, token included), so responses
+/// here remain stream-identical to the continuous engine under `Fcfs`.
 ///
 /// Pinned to the DENSE cache layout: this is the parity baseline, so the
 /// continuous engine's paged cache is checked against an independent storage

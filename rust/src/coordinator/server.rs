@@ -11,14 +11,22 @@
 //! - [`EngineKind::Continuous`]: the slot-table engine — requests are
 //!   admitted into free KV slots between decode rounds regardless of prompt
 //!   length, tokens stream per request as they are produced, and
-//!   `batch_window`/`max_batch` are ignored (admission is greedy, slots come
-//!   from the executable batch geometry).  Its cache layout comes from
-//!   `ServerConfig::kv` (paged by default in the binaries); [`Server::metrics`]
-//!   reports resident/used KV bytes and page back-pressure so operators can
-//!   size the pool.
+//!   `batch_window`/`max_batch` are ignored.  Admission order, preemption,
+//!   and prefill chunking come from `ServerConfig::policy` (a
+//!   [`SchedulePolicy`]; [`Fcfs`] by default), the cache layout from
+//!   `ServerConfig::kv`; [`Server::metrics`] reports resident/used KV bytes,
+//!   page back-pressure, preemptions, and per-class latency so operators can
+//!   size pools and tune policies.
 //!
-//! Clients get responses over per-request channels: [`Server::submit`] for
+//! Clients get a [`RequestHandle`] per submission: [`Server::submit`] for
 //! one aggregate response, [`Server::submit_stream`] for per-token events.
+//! The handle exposes the reply channel and `cancel()`, honored both
+//! in-queue and mid-decode (slot retired, pages released,
+//! `FinishReason::Cancelled`).
+//!
+//! After a backend failure the worker rebuilds the engine; in-flight
+//! requests that have produced no tokens are resubmitted into the fresh
+//! engine (bounded by `ServerConfig::max_retries`) instead of errored.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -32,7 +40,8 @@ use crate::model::{Model, QuantMode};
 use super::batcher::Batcher;
 use super::continuous::{ContinuousEngine, ModelBackend};
 use super::kvcache::KvLayout;
-use super::request::{GenRequest, GenResponse, Metrics, Reply, StreamEvent};
+use super::policy::{Fcfs, SchedulePolicy};
+use super::request::{FinishReason, GenRequest, GenResponse, Metrics, Reply, StreamEvent};
 use super::scheduler;
 
 /// Which scheduling engine the worker runs.
@@ -47,8 +56,50 @@ pub enum EngineKind {
 enum Msg {
     Gen(GenRequest, Instant, Sender<Result<GenResponse, String>>),
     GenStream(GenRequest, Instant, Sender<StreamEvent>),
+    Cancel(u64),
     Stats(Sender<Metrics>),
     Shutdown,
+}
+
+/// Client-side handle for one submitted request: the reply channel plus
+/// `cancel()`.  Cancellation is honored wherever the request currently is —
+/// queued (removed, `FinishReason::Cancelled` with no tokens) or mid-decode
+/// (slot retired, pages released, tokens-so-far delivered).  A cancel that
+/// races completion is a no-op.
+pub struct RequestHandle<T> {
+    id: u64,
+    rx: Receiver<T>,
+    tx: Sender<Msg>,
+}
+
+impl<T> RequestHandle<T> {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Ask the server to cancel this request.  Asynchronous: the terminal
+    /// event still arrives on the reply channel (`Done` with
+    /// `FinishReason::Cancelled`, or the natural completion if the cancel
+    /// raced it).
+    pub fn cancel(&self) -> Result<()> {
+        self.tx.send(Msg::Cancel(self.id)).map_err(|_| anyhow!("server is down"))
+    }
+
+    /// The reply channel (iterate for streaming events).
+    pub fn receiver(&self) -> &Receiver<T> {
+        &self.rx
+    }
+
+    /// Block for the next reply event.
+    pub fn recv(&self) -> Result<T> {
+        self.rx.recv().map_err(|_| anyhow!("server dropped request"))
+    }
+
+    /// Consume the handle, keeping only the reply channel (cancellation is
+    /// no longer possible).
+    pub fn into_receiver(self) -> Receiver<T> {
+        self.rx
+    }
 }
 
 pub struct Server {
@@ -56,6 +107,7 @@ pub struct Server {
     handle: Option<JoinHandle<()>>,
 }
 
+/// Server configuration.  Construct with [`ServerConfig::builder`].
 pub struct ServerConfig {
     pub mode: QuantMode,
     pub engine: EngineKind,
@@ -68,6 +120,84 @@ pub struct ServerConfig {
     /// KV storage layout for the continuous engine (the batch engine always
     /// runs the dense baseline via `scheduler::run_batch`)
     pub kv: KvLayout,
+    /// scheduling policy for the continuous engine (admission order,
+    /// preemption, prefill chunking); `Fcfs` by default
+    pub policy: Box<dyn SchedulePolicy>,
+    /// resubmissions allowed per request across engine rebuilds (only
+    /// requests that have produced no tokens are ever resubmitted)
+    pub max_retries: usize,
+}
+
+impl ServerConfig {
+    /// Typed builder with serving defaults: continuous engine, paged KV
+    /// (auto-sized pool, page 16), FCFS policy, one rebuild retry,
+    /// `max_batch` 8 with a 10ms window, BOS 1 / PAD 0.
+    pub fn builder(mode: QuantMode) -> ServerConfigBuilder {
+        ServerConfigBuilder {
+            cfg: ServerConfig {
+                mode,
+                engine: EngineKind::Continuous,
+                max_batch: 8,
+                batch_window: Duration::from_millis(10),
+                bos: 1,
+                pad: 0,
+                kv: KvLayout::Paged { page_size: 16, n_pages: 0 },
+                policy: Box::new(Fcfs),
+                max_retries: 1,
+            },
+        }
+    }
+}
+
+/// Builder for [`ServerConfig`] (see [`ServerConfig::builder`]).
+pub struct ServerConfigBuilder {
+    cfg: ServerConfig,
+}
+
+impl ServerConfigBuilder {
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.cfg.engine = engine;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.cfg.max_batch = max_batch;
+        self
+    }
+
+    pub fn batch_window(mut self, window: Duration) -> Self {
+        self.cfg.batch_window = window;
+        self
+    }
+
+    pub fn bos(mut self, bos: i32) -> Self {
+        self.cfg.bos = bos;
+        self
+    }
+
+    pub fn pad(mut self, pad: i32) -> Self {
+        self.cfg.pad = pad;
+        self
+    }
+
+    pub fn kv(mut self, kv: KvLayout) -> Self {
+        self.cfg.kv = kv;
+        self
+    }
+
+    pub fn policy(mut self, policy: Box<dyn SchedulePolicy>) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn max_retries(mut self, max_retries: usize) -> Self {
+        self.cfg.max_retries = max_retries;
+        self
+    }
+
+    pub fn build(self) -> ServerConfig {
+        self.cfg
+    }
 }
 
 impl Server {
@@ -89,31 +219,35 @@ impl Server {
         Ok(Server { tx, handle: Some(handle) })
     }
 
-    /// Submit a request; returns a receiver for the aggregate response.
-    pub fn submit(&self, req: GenRequest) -> Result<Receiver<Result<GenResponse, String>>> {
+    /// Submit a request; the handle carries the aggregate-response channel
+    /// and `cancel()`.
+    pub fn submit(&self, req: GenRequest) -> Result<RequestHandle<Result<GenResponse, String>>> {
         let (tx, rx) = channel();
+        let id = req.id;
         self.tx
             .send(Msg::Gen(req, Instant::now(), tx))
             .map_err(|_| anyhow!("server is down"))?;
-        Ok(rx)
+        Ok(RequestHandle { id, rx, tx: self.tx.clone() })
     }
 
-    /// Submit a request; returns a receiver of per-token [`StreamEvent`]s
-    /// ending in `Done` or `Error`.  With the continuous engine, tokens
-    /// arrive as they are produced; with the batch engine they arrive in a
-    /// burst when the request's batch completes.
-    pub fn submit_stream(&self, req: GenRequest) -> Result<Receiver<StreamEvent>> {
+    /// Submit a request; the handle carries a channel of per-token
+    /// [`StreamEvent`]s ending in `Done` or `Error`, and `cancel()`.  With
+    /// the continuous engine, tokens arrive as they are produced; with the
+    /// batch engine they arrive in a burst when the request's batch
+    /// completes.
+    pub fn submit_stream(&self, req: GenRequest) -> Result<RequestHandle<StreamEvent>> {
         let (tx, rx) = channel();
+        let id = req.id;
         self.tx
             .send(Msg::GenStream(req, Instant::now(), tx))
             .map_err(|_| anyhow!("server is down"))?;
-        Ok(rx)
+        Ok(RequestHandle { id, rx, tx: self.tx.clone() })
     }
 
     /// Blocking convenience call.
     pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
-        let rx = self.submit(req)?;
-        rx.recv().map_err(|_| anyhow!("server dropped request"))?.map_err(|e| anyhow!(e))
+        let handle = self.submit(req)?;
+        handle.recv()?.map_err(|e| anyhow!(e))
     }
 
     pub fn metrics(&self) -> Result<Metrics> {
@@ -196,6 +330,24 @@ fn worker_batch(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
                     waiters.insert(req.id, Reply::Stream(tx));
                     batcher.push_at(req, submitted);
                 }
+                Msg::Cancel(id) => {
+                    // in-queue only: a dispatched batch runs to completion
+                    if let Some(p) = batcher.cancel(id) {
+                        if let Some(reply) = waiters.remove(&id) {
+                            let waited = p.enqueued.elapsed().as_secs_f64();
+                            metrics.cancelled += 1;
+                            metrics.by_class[p.req.priority.index()].cancelled += 1;
+                            reply.done(GenResponse {
+                                id,
+                                tokens: Vec::new(),
+                                ttft_s: 0.0,
+                                total_s: waited,
+                                queue_s: waited,
+                                finish: FinishReason::Cancelled,
+                            });
+                        }
+                    }
+                }
                 Msg::Stats(tx) => {
                     let _ = tx.send(metrics.clone());
                 }
@@ -205,6 +357,9 @@ fn worker_batch(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
         // dispatch every ready batch
         while !batcher.is_empty() {
             let batch = batcher.next_batch();
+            if batch.is_empty() {
+                break;
+            }
             let reqs: Vec<GenRequest> = batch.iter().map(|p| p.req.clone()).collect();
             let dispatch_t = Instant::now();
             let prefill_toks: usize = reqs.iter().map(|r| r.prompt.len() + 1).sum();
@@ -213,12 +368,22 @@ fn worker_batch(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
                     metrics.batches += 1;
                     metrics.requests += responses.len();
                     metrics.prefill_tokens += prefill_toks;
-                    // one prefill per batch; busy wall = slowest row
-                    if let Some(r0) = responses.first() {
-                        metrics.sum_prefill_s += r0.ttft_s;
-                    }
-                    metrics.sum_busy_s +=
+                    // one prefill per batch; busy wall = slowest row; decode
+                    // wall recorded directly so a stats probe racing a long
+                    // window can never see a negative busy−prefill residue
+                    let prefill_s = responses.first().map(|r| r.ttft_s).unwrap_or(0.0);
+                    let busy_s =
                         responses.iter().map(|r| r.total_s).fold(0.0, f64::max);
+                    metrics.sum_prefill_s += prefill_s;
+                    metrics.sum_busy_s += busy_s;
+                    metrics.sum_decode_s += (busy_s - prefill_s).max(0.0);
+                    // queue→dispatch skew of this dispatch (longest wait)
+                    metrics.sum_dispatch_skew_s += batch
+                        .iter()
+                        .map(|p| {
+                            dispatch_t.saturating_duration_since(p.enqueued).as_secs_f64()
+                        })
+                        .fold(0.0, f64::max);
                     // responses align with the dispatched batch order
                     for (p, mut resp) in batch.iter().zip(responses) {
                         let wait =
@@ -229,6 +394,11 @@ fn worker_batch(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
                         metrics.generated_tokens += resp.tokens.len();
                         metrics.sum_ttft_s += resp.ttft_s;
                         metrics.sum_queue_s += resp.queue_s;
+                        let cls = &mut metrics.by_class[p.req.priority.index()];
+                        cls.requests += 1;
+                        cls.completed += 1;
+                        cls.sum_ttft_s += resp.ttft_s;
+                        cls.sum_queue_s += resp.queue_s;
                         if let Some(reply) = waiters.remove(&resp.id) {
                             for &t in &resp.tokens {
                                 reply.token(t);
@@ -255,7 +425,7 @@ fn worker_continuous(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
         Ok(e) => e,
         Err(e) => {
             // nothing can be served; report the error to every caller
-            drain_failing(rx, &format!("engine init failed: {e:#}"));
+            drain_failing(rx, &format!("engine init failed: {e:#}"), Metrics::default());
             return;
         }
     };
@@ -285,18 +455,24 @@ fn worker_continuous(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
         }
         if let Err(e) = engine.step() {
             let msg = format!("engine step failed: {e:#}");
-            engine.fail_all(&msg);
-            // the cache may be poisoned — rebuild so later requests can run
+            // the cache may be poisoned — rebuild so later requests can run,
+            // and resubmit token-less in-flight requests (bounded attempts)
             match make_engine(model, cfg) {
-                Ok(fresh) => {
-                    let stats = engine.stats.clone();
+                Ok(mut fresh) => {
+                    fresh.stats = engine.stats.clone();
+                    for r in engine.drain_for_recovery(&msg, cfg.max_retries) {
+                        fresh.resubmit(r);
+                    }
                     engine = fresh;
-                    engine.stats = stats;
                 }
                 Err(e2) => {
                     // cannot rebuild: keep answering so clients always get a
-                    // terminal Error event instead of a dropped channel
-                    drain_failing(rx, &format!("{msg}; rebuild failed: {e2:#}"));
+                    // terminal Error event instead of a dropped channel, and
+                    // keep reporting the LAST accumulated metrics rather
+                    // than zeroed counters
+                    engine.fail_all(&msg);
+                    let last = engine.metrics();
+                    drain_failing(rx, &format!("{msg}; rebuild failed: {e2:#}"), last);
                     return;
                 }
             }
@@ -312,7 +488,7 @@ fn make_engine<'m>(
     cfg: &ServerConfig,
 ) -> Result<ContinuousEngine<ModelBackend<'m>>> {
     let backend = ModelBackend::new(model, cfg.mode, cfg.bos, cfg.pad)?.with_kv_layout(cfg.kv);
-    ContinuousEngine::new(backend)
+    Ok(ContinuousEngine::new(backend)?.with_policy(cfg.policy.fresh()))
 }
 
 /// Feed one message to the engine; returns true on shutdown.
@@ -326,6 +502,11 @@ fn handle_msg(m: Msg, engine: &mut ContinuousEngine<ModelBackend<'_>>) -> bool {
             engine.submit(req, Reply::Stream(tx), submitted);
             false
         }
+        Msg::Cancel(id) => {
+            // an unknown id already completed (cancel raced the finish)
+            let _ = engine.cancel(id);
+            false
+        }
         Msg::Stats(tx) => {
             let _ = tx.send(engine.metrics());
             false
@@ -334,8 +515,10 @@ fn handle_msg(m: Msg, engine: &mut ContinuousEngine<ModelBackend<'_>>) -> bool {
     }
 }
 
-/// Terminal state: answer every incoming request with an error.
-fn drain_failing(rx: Receiver<Msg>, msg: &str) {
+/// Terminal state: answer every incoming request with an error, and stats
+/// probes with the last metrics accumulated before the failure (operators
+/// must not see zeroed counters after a crash).
+fn drain_failing(rx: Receiver<Msg>, msg: &str, last_metrics: Metrics) {
     while let Ok(m) = rx.recv() {
         match m {
             Msg::Gen(_, _, tx) => {
@@ -344,8 +527,9 @@ fn drain_failing(rx: Receiver<Msg>, msg: &str) {
             Msg::GenStream(_, _, tx) => {
                 let _ = tx.send(StreamEvent::Error(msg.to_string()));
             }
+            Msg::Cancel(_) => {}
             Msg::Stats(tx) => {
-                let _ = tx.send(Metrics::default());
+                let _ = tx.send(last_metrics.clone());
             }
             Msg::Shutdown => break,
         }

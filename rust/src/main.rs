@@ -252,22 +252,30 @@ fn cmd_gen(c: &Ctx, args: &Args) -> Result<()> {
             pipeline::quantize(&mut model, &scheme, &calib, &tok2)?;
             Ok(model)
         },
-        ServerConfig {
-            mode,
-            engine: prefixquant::coordinator::EngineKind::Continuous,
-            max_batch: 8,
-            batch_window: Duration::from_millis(5),
-            bos: tok.spec.bos,
-            pad: tok.spec.pad,
+        ServerConfig::builder(mode)
+            .engine(prefixquant::coordinator::EngineKind::Continuous)
+            .max_batch(8)
+            .batch_window(Duration::from_millis(5))
+            .bos(tok.spec.bos)
+            .pad(tok.spec.pad)
             // paged KV with a dense-equivalent auto-sized pool
-            kv: prefixquant::coordinator::KvLayout::Paged { page_size: 16, n_pages: 0 },
-        },
+            .kv(prefixquant::coordinator::KvLayout::Paged { page_size: 16, n_pages: 0 })
+            .build(),
     )?;
-    let req = GenRequest { id: 1, prompt: tok.encode(&prompt_text, false), max_new: n };
+    let req = GenRequest::builder(1)
+        .prompt(tok.encode(&prompt_text, false))
+        .max_new(n)
+        .priority(prefixquant::coordinator::Priority::Interactive)
+        .build();
     let resp = server.generate(req)?;
     println!("prompt: {prompt_text:?}");
     println!("output: {:?}", tok.decode(&resp.tokens));
-    println!("ttft={:.1}ms total={:.1}ms", resp.ttft_s * 1e3, resp.total_s * 1e3);
+    println!(
+        "ttft={:.1}ms total={:.1}ms finish={}",
+        resp.ttft_s * 1e3,
+        resp.total_s * 1e3,
+        resp.finish.name()
+    );
     server.shutdown();
     Ok(())
 }

@@ -30,10 +30,12 @@ fn workload() -> Vec<GenRequest> {
         .iter()
         .zip(max_news)
         .enumerate()
-        .map(|(id, (&plen, max_new))| GenRequest {
-            id: id as u64,
-            prompt: (0..plen).map(|_| 3 + rng.below(260) as i32).collect(),
-            max_new,
+        .map(|(id, (&plen, max_new))| {
+            GenRequest::new(
+                id as u64,
+                (0..plen).map(|_| 3 + rng.below(260) as i32).collect(),
+                max_new,
+            )
         })
         .collect()
 }
@@ -142,11 +144,7 @@ fn page_pressure_defers_admission_without_corruption() {
         .with_kv_layout(KvLayout::Paged { page_size: 8, n_pages: 6 });
     let solo = SimBackend::new(B_EXEC, 24, 3, 64);
     let reqs: Vec<GenRequest> = (0..10)
-        .map(|id| GenRequest {
-            id,
-            prompt: vec![4 + id as i32, 9, 2 + (id % 3) as i32, 7, 5],
-            max_new: 6,
-        })
+        .map(|id| GenRequest::new(id, vec![4 + id as i32, 9, 2 + (id % 3) as i32, 7, 5], 6))
         .collect();
 
     let mut engine = ContinuousEngine::new(be).unwrap();
@@ -186,8 +184,8 @@ fn infeasible_page_span_is_rejected_not_wedged() {
         .with_kv_layout(KvLayout::Paged { page_size: 8, n_pages: 6 });
     let mut engine = ContinuousEngine::new(be).unwrap();
     // span 11 + 60 capped at s_max 64 → 8 pages > 5 spare: infeasible
-    let bad = engine.submit_stream(GenRequest { id: 1, prompt: vec![5; 10], max_new: 60 });
-    let good = engine.submit_stream(GenRequest { id: 2, prompt: vec![5, 6], max_new: 2 });
+    let bad = engine.submit_stream(GenRequest::new(1, vec![5; 10], 60));
+    let good = engine.submit_stream(GenRequest::new(2, vec![5, 6], 2));
     engine.run_to_idle().unwrap();
     assert!(matches!(bad.try_recv().unwrap(), StreamEvent::Error(_)));
     let mut saw_done = false;
@@ -205,8 +203,8 @@ fn infeasible_page_span_is_rejected_not_wedged() {
 #[test]
 fn oversized_prompt_is_rejected_not_wedged() {
     let mut engine = ContinuousEngine::new(SimBackend::new(2, 8, 1, 16)).unwrap();
-    let bad = engine.submit_stream(GenRequest { id: 9, prompt: vec![5; 40], max_new: 3 });
-    let good = engine.submit_stream(GenRequest { id: 10, prompt: vec![5, 6], max_new: 2 });
+    let bad = engine.submit_stream(GenRequest::new(9, vec![5; 40], 3));
+    let good = engine.submit_stream(GenRequest::new(10, vec![5, 6], 2));
     engine.run_to_idle().unwrap();
     assert!(matches!(bad.try_recv().unwrap(), StreamEvent::Error(_)));
     // the rejection must not block the request behind it
@@ -228,10 +226,8 @@ fn oversized_prompt_is_rejected_not_wedged() {
 #[test]
 fn slot_reuse_preserves_streams() {
     let reqs: Vec<GenRequest> = (0..20)
-        .map(|id| GenRequest {
-            id,
-            prompt: vec![3 + id as i32, 7, 11 + (id % 5) as i32],
-            max_new: 1 + (id as usize % 4),
+        .map(|id| {
+            GenRequest::new(id, vec![3 + id as i32, 7, 11 + (id % 5) as i32], 1 + (id as usize % 4))
         })
         .collect();
 

@@ -46,7 +46,7 @@ fn batcher_partition_properties() {
         |(max_b, reqs)| {
             let mut b = Batcher::new(*max_b);
             for &(id, len) in reqs {
-                b.push(GenRequest { id, prompt: vec![7; len], max_new: 1 });
+                b.push(GenRequest::new(id, vec![7; len], 1));
             }
             let mut seen = Vec::new();
             let mut guard = 0;

@@ -160,9 +160,8 @@ fn check_scheduler(c: &Ctx) {
     assert_eq!(a.data, b.data, "saved+reloaded model must be bit-identical");
     drop(reloaded);
     let prompt = c.tok.encode("hello world", false);
-    let reqs: Vec<GenRequest> = (0..3)
-        .map(|id| GenRequest { id, prompt: prompt.clone(), max_new: 6 })
-        .collect();
+    let reqs: Vec<GenRequest> =
+        (0..3).map(|id| GenRequest::new(id, prompt.clone(), 6)).collect();
     let resp =
         scheduler::run_batch(&model, QuantMode::Static, &reqs, c.tok.spec.bos, c.tok.spec.pad)
             .unwrap();
@@ -194,10 +193,8 @@ fn check_continuous_parity(c: &Ctx, model: &prefixquant::model::Model) {
     // times and later requests are admitted mid-decode
     let n = b_exec + 4;
     let reqs: Vec<GenRequest> = (0..n)
-        .map(|i| GenRequest {
-            id: i as u64,
-            prompt: c.tok.encode(&text[i..i + 4 + (i % 7)], false),
-            max_new: 1 + (i % 5),
+        .map(|i| {
+            GenRequest::new(i as u64, c.tok.encode(&text[i..i + 4 + (i % 7)], false), 1 + (i % 5))
         })
         .collect();
 

@@ -1,0 +1,494 @@
+//! Serving API v2 lifecycle tests on the deterministic simulation backend:
+//! policy-driven admission, preemption with stream-intact resume, chunked
+//! prefill that cannot stall decode rounds, cancellation without page leaks,
+//! anti-starvation aging under sustained high-priority load, and the
+//! engine-rebuild retry path.  No artifacts required.
+//!
+//! Because SimBackend's next token is a hash of the STORED cache contents,
+//! every stream-equality assertion here doubles as a cache-lifecycle check:
+//! a preemption that leaked or mis-restored a single K/V entry would diverge
+//! the resumed stream.
+
+use std::cell::Cell;
+use std::rc::Rc;
+use std::sync::mpsc::Receiver;
+
+use anyhow::Result;
+use prefixquant::coordinator::continuous::{
+    run_to_completion, ContinuousEngine, DecodeBackend, DecodeGroup, DecodeOut, PrefillJob,
+    PrefillOut, SimBackend, SlotPhase,
+};
+use prefixquant::coordinator::{
+    Fcfs, FinishReason, GenRequest, GenResponse, KvCache, KvLayout, Priority, PriorityPreempt,
+    StreamEvent,
+};
+use prefixquant::util::prop::{check, Gen};
+
+const B_EXEC: usize = 4;
+
+fn make_backend() -> SimBackend {
+    SimBackend::new(B_EXEC, 24, 3, 64)
+}
+
+/// Drain everything currently buffered on a stream.
+fn drain(rx: &Receiver<StreamEvent>) -> (Vec<i32>, Option<GenResponse>) {
+    let mut tokens = Vec::new();
+    let mut done = None;
+    while let Ok(ev) = rx.try_recv() {
+        match ev {
+            StreamEvent::Token(t) => tokens.push(t),
+            StreamEvent::Done(r) => done = Some(r),
+            StreamEvent::Error(e) => panic!("request failed: {e}"),
+        }
+    }
+    (tokens, done)
+}
+
+fn solo_stream(req: &GenRequest) -> Vec<i32> {
+    run_to_completion(&make_backend(), &[req.clone()]).unwrap()[0].tokens.clone()
+}
+
+/// (c) The default policy is Fcfs, and an explicit Fcfs engine emits token
+/// streams identical to the default-constructed engine — the redesigned
+/// engine under Fcfs IS the pre-redesign engine (the continuous_parity suite
+/// then pins both to the sequential baseline on both KV layouts).
+#[test]
+fn default_policy_is_fcfs_and_identical() {
+    let reqs: Vec<GenRequest> = (0..10)
+        .map(|i| {
+            GenRequest::new(
+                i as u64,
+                vec![3 + (i % 7) as i32, 9, 4 + (i % 3) as i32, 8],
+                1 + (i % 5),
+            )
+        })
+        .collect();
+    let mut default_engine = ContinuousEngine::new(make_backend()).unwrap();
+    assert_eq!(default_engine.policy_name(), "fcfs");
+    let mut explicit_engine =
+        ContinuousEngine::new(make_backend()).unwrap().with_policy(Box::new(Fcfs));
+    let mut streams = Vec::new();
+    for engine in [&mut default_engine, &mut explicit_engine] {
+        let rxs: Vec<_> = reqs.iter().map(|r| engine.submit_stream(r.clone())).collect();
+        engine.run_to_idle().unwrap();
+        streams.push(rxs.iter().map(|rx| drain(rx).0).collect::<Vec<_>>());
+    }
+    assert_eq!(streams[0], streams[1]);
+}
+
+/// Acceptance: a Decoding slot is preempted for an Interactive arrival, its
+/// pages are released and reacquired, and the preempted request completes
+/// with ALL tokens intact (the resumed stream equals the uninterrupted solo
+/// stream, token for token).
+#[test]
+fn preemption_resumes_with_all_tokens_intact() {
+    let mut engine = ContinuousEngine::new(SimBackend::new(2, 24, 3, 64))
+        .unwrap()
+        .with_policy(Box::new(PriorityPreempt { age_rounds: 1_000_000, chunk: usize::MAX }));
+    let batch0 = GenRequest::new(0, vec![5, 7, 9], 10);
+    let batch1 = GenRequest::new(1, vec![6, 8, 4], 10);
+    let inter = GenRequest::builder(100)
+        .prompt(vec![4, 4])
+        .max_new(3)
+        .priority(Priority::Interactive)
+        .build();
+
+    let rx0 = engine.submit_stream(batch0.clone());
+    let rx1 = engine.submit_stream(batch1.clone());
+    engine.step().unwrap();
+    engine.step().unwrap();
+    assert_eq!(engine.active_ids(), vec![0, 1], "both slots decoding");
+    let used_before = engine.kv().free_pages();
+
+    let rx_i = engine.submit_stream(inter.clone());
+    engine.step().unwrap();
+    assert_eq!(engine.stats.preemptions, 1, "a Decoding slot must be preempted");
+    assert!(
+        engine.active_ids().contains(&100),
+        "interactive admitted into the preempted slot: {:?}",
+        engine.active_ids()
+    );
+    assert_eq!(engine.pending_ids(), vec![0], "victim requeued with its tokens");
+
+    engine.run_to_idle().unwrap();
+    assert_eq!(engine.stats.resumed, 1, "victim re-admitted");
+    assert_eq!(engine.stats.completed, 3);
+
+    // streams: every request token-identical to its uninterrupted solo run
+    let sb = SimBackend::new(2, 24, 3, 64);
+    for (req, rx) in [(&batch0, &rx0), (&batch1, &rx1), (&inter, &rx_i)] {
+        let solo = run_to_completion(&sb, &[req.clone()]).unwrap();
+        let (tokens, done) = drain(rx);
+        let done = done.expect("stream must end with Done");
+        assert_eq!(tokens, solo[0].tokens, "request {} diverged across preemption", req.id);
+        assert_eq!(done.tokens, tokens);
+        assert_eq!(done.finish, FinishReason::Length);
+    }
+
+    // pages released at preemption and at retirement: the pool drains clean
+    let kv = engine.kv();
+    assert_eq!(kv.free_pages(), Some(kv.total_pages().unwrap() - kv.prefix_page_ids().len()));
+    // the mid-flight probe saw fewer free pages than the drained pool
+    assert!(used_before.unwrap() < kv.free_pages().unwrap());
+}
+
+/// Acceptance: with a chunking policy, admitting a long prompt cannot stall
+/// concurrent decode rounds for more than one chunk — the already-decoding
+/// request emits exactly one token per engine step throughout the admission,
+/// and the long request's stream is unaffected by being chunked.
+#[test]
+fn chunked_prefill_does_not_stall_decode_rounds() {
+    let mkbe = || SimBackend::new(2, 40, 3, 96);
+    let mut engine = ContinuousEngine::new(mkbe())
+        .unwrap()
+        .with_policy(Box::new(PriorityPreempt { age_rounds: 1_000_000, chunk: 4 }));
+    let short = GenRequest::new(1, vec![5, 6], 30);
+    let long = GenRequest::new(2, vec![7; 20], 3); // 21 tokens incl. BOS → 6 chunks of 4
+
+    let rx_s = engine.submit_stream(short.clone());
+    engine.step().unwrap(); // short admitted (fits one chunk) and decoding
+    let (mut short_tokens, _) = drain(&rx_s);
+    assert_eq!(short_tokens.len(), 2, "prefill token + one decode round");
+
+    let rx_l = engine.submit_stream(long.clone());
+    // admission chunk + 4 continuation chunks: 20 of 21 tokens written
+    for stepno in 0..5 {
+        engine.step().unwrap();
+        let (s_new, _) = drain(&rx_s);
+        assert_eq!(
+            s_new.len(),
+            1,
+            "decode stalled during chunked admission (continuation step {stepno})"
+        );
+        short_tokens.extend(s_new);
+        let (l_new, _) = drain(&rx_l);
+        assert!(l_new.is_empty(), "long request emitted before its prefill completed");
+        assert!(
+            engine.phases().contains(&SlotPhase::Prefilling),
+            "long request must be observably mid-prefill"
+        );
+    }
+    // final chunk: prefill completes, first token + same-step decode round
+    engine.step().unwrap();
+    let (l_new, _) = drain(&rx_l);
+    assert_eq!(l_new.len(), 2, "completion emits the first token and joins the round");
+
+    engine.run_to_idle().unwrap();
+    let (s_rest, s_done) = drain(&rx_s);
+    short_tokens.extend(s_rest);
+    let (mut long_tokens, l_done) = drain(&rx_l);
+    let mut l_all = l_new;
+    l_all.append(&mut long_tokens);
+
+    assert_eq!(short_tokens, run_to_completion(&mkbe(), &[short]).unwrap()[0].tokens);
+    assert_eq!(l_all, run_to_completion(&mkbe(), &[long]).unwrap()[0].tokens);
+    assert_eq!(s_done.unwrap().finish, FinishReason::Length);
+    assert_eq!(l_done.unwrap().finish, FinishReason::Length);
+    assert_eq!(engine.stats.preemptions, 0);
+}
+
+/// (a) Property: sustained Interactive load never starves Batch — the
+/// round-based aging promotes a waiting Batch request, the thrash guard
+/// prevents endless re-preemption, and the request completes within a bound
+/// derived from the aging parameter.
+#[test]
+fn sustained_interactive_load_cannot_starve_batch() {
+    check(
+        "no-starvation-aging",
+        15,
+        |g: &mut Gen| {
+            let age_rounds = g.usize_in(2, 6) as u64;
+            let per_round = g.usize_in(1, 2);
+            let batch_new = g.usize_in(2, 5);
+            (age_rounds, per_round, batch_new)
+        },
+        |&(age_rounds, per_round, batch_new)| {
+            let be = SimBackend::new(2, 24, 3, 200);
+            let mut engine = ContinuousEngine::new(be)
+                .map_err(|e| e.to_string())?
+                .with_policy(Box::new(PriorityPreempt { age_rounds, chunk: usize::MAX }));
+            let batch_rx = engine.submit_stream(GenRequest::new(0, vec![5, 6], batch_new));
+            let mut inter_rxs = Vec::new();
+            let mut next_id = 1000u64;
+            // generous bound: two aged admissions (admit + one possible
+            // preemption + re-admit) plus decode time and slot churn
+            let cap = 8 * age_rounds as usize + 10 * batch_new + 40;
+            for _round in 0..cap {
+                for _ in 0..per_round {
+                    let r = GenRequest::builder(next_id)
+                        .prompt(vec![4, 9])
+                        .max_new(2)
+                        .priority(Priority::Interactive)
+                        .build();
+                    // keep the streams alive without reading them
+                    inter_rxs.push(engine.submit_stream(r));
+                    next_id += 1;
+                }
+                engine.step().map_err(|e| e.to_string())?;
+                loop {
+                    match batch_rx.try_recv() {
+                        Ok(StreamEvent::Done(r)) => {
+                            if r.tokens.len() != batch_new {
+                                return Err(format!(
+                                    "batch finished with {} of {batch_new} tokens",
+                                    r.tokens.len()
+                                ));
+                            }
+                            return Ok(());
+                        }
+                        Ok(StreamEvent::Error(e)) => return Err(format!("batch errored: {e}")),
+                        Ok(StreamEvent::Token(_)) => {}
+                        Err(_) => break,
+                    }
+                }
+            }
+            Err(format!(
+                "batch request starved for {cap} rounds under sustained interactive load \
+                 (age_rounds={age_rounds}, {per_round}/round)"
+            ))
+        },
+    );
+}
+
+/// (b) Property: cancellation — in-queue or mid-decode, on BOTH KV layouts —
+/// delivers `FinishReason::Cancelled` with the tokens generated so far,
+/// never corrupts the surviving streams, and leaks no pages (the pool drains
+/// back to prefix-only occupancy, the PR 2 leak-freedom invariant).
+#[test]
+fn cancellation_releases_slots_and_leaks_no_pages() {
+    check(
+        "cancel-leak-freedom",
+        30,
+        |g: &mut Gen| {
+            let layout = if g.bool() {
+                KvLayout::Paged { page_size: *g.choose(&[4usize, 8]), n_pages: 0 }
+            } else {
+                KvLayout::Dense
+            };
+            let n = g.usize_in(6, 8);
+            let steps_before = g.usize_in(1, 4);
+            let target = g.usize_in(0, n - 1) as u64;
+            (layout, n, steps_before, target)
+        },
+        |&(layout, n, steps_before, target)| {
+            let reqs: Vec<GenRequest> = (0..n)
+                .map(|id| GenRequest::new(id as u64, vec![4 + id as i32, 9, 7], 4 + (id % 3)))
+                .collect();
+            let be = SimBackend::new(B_EXEC, 24, 3, 64).with_kv_layout(layout);
+            let mut engine = ContinuousEngine::new(be).map_err(|e| e.to_string())?;
+            let rxs: Vec<_> =
+                reqs.iter().map(|r| (r.id, engine.submit_stream(r.clone()))).collect();
+            for _ in 0..steps_before {
+                engine.step().map_err(|e| e.to_string())?;
+            }
+            engine.cancel(target).map_err(|e| e.to_string())?;
+            engine.run_to_idle().map_err(|e| e.to_string())?;
+
+            let mut cancelled_seen = 0usize;
+            for (id, rx) in &rxs {
+                let mut tokens = Vec::new();
+                let mut done = None;
+                while let Ok(ev) = rx.try_recv() {
+                    match ev {
+                        StreamEvent::Token(t) => tokens.push(t),
+                        StreamEvent::Done(r) => done = Some(r),
+                        StreamEvent::Error(e) => return Err(format!("req {id} errored: {e}")),
+                    }
+                }
+                let done = done.ok_or_else(|| format!("req {id} never finished"))?;
+                let solo = solo_stream(&reqs[*id as usize]);
+                if done.finish == FinishReason::Cancelled {
+                    if *id != target {
+                        return Err(format!("req {id} cancelled but target was {target}"));
+                    }
+                    cancelled_seen += 1;
+                    if !solo.starts_with(&tokens) {
+                        return Err(format!(
+                            "cancelled req {id} stream is not a prefix of its solo run"
+                        ));
+                    }
+                } else if tokens != solo {
+                    return Err(format!("req {id} corrupted by a neighbour's cancellation"));
+                }
+            }
+            // target may legitimately have completed before the cancel landed
+            if engine.stats.cancelled != cancelled_seen {
+                return Err(format!(
+                    "stats.cancelled {} != observed {cancelled_seen}",
+                    engine.stats.cancelled
+                ));
+            }
+            if engine.kv().is_paged() {
+                let kv = engine.kv();
+                let want = kv.total_pages().unwrap() - kv.prefix_page_ids().len();
+                if kv.free_pages() != Some(want) {
+                    return Err(format!(
+                        "page leak after cancellation: {:?} free of {want}",
+                        kv.free_pages()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Stop tokens retire a Decoding slot mid-stream with `FinishReason::Stop`
+/// (token included) and release its pages.
+#[test]
+fn stop_tokens_retire_slots_mid_decode() {
+    let free = run_to_completion(&make_backend(), &[GenRequest::new(0, vec![5, 6, 7], 6)])
+        .unwrap();
+    let stop_at = free[0].tokens[3];
+    let first = free[0].tokens.iter().position(|&t| t == stop_at).unwrap();
+    let req = GenRequest::builder(0)
+        .prompt(vec![5, 6, 7])
+        .max_new(6)
+        .stop_tokens(vec![stop_at])
+        .build();
+    let mut engine = ContinuousEngine::new(make_backend()).unwrap();
+    let rx = engine.submit_stream(req);
+    engine.run_to_idle().unwrap();
+    let (tokens, done) = drain(&rx);
+    let done = done.expect("stream must end with Done");
+    assert_eq!(done.finish, FinishReason::Stop);
+    assert_eq!(tokens, free[0].tokens[..=first].to_vec());
+    let kv = engine.kv();
+    assert_eq!(kv.free_pages(), Some(kv.total_pages().unwrap() - kv.prefix_page_ids().len()));
+}
+
+/// A backend wrapper that fails its `fail_on_call`-th prefill (counter
+/// shared across instances, so a rebuilt engine sees the fault as
+/// transient).
+struct FlakyPrefill {
+    inner: SimBackend,
+    calls: Rc<Cell<usize>>,
+    fail_on_call: usize,
+}
+
+impl DecodeBackend for FlakyPrefill {
+    fn batch_slots(&self) -> usize {
+        self.inner.batch_slots()
+    }
+    fn max_prompt_tokens(&self) -> usize {
+        self.inner.max_prompt_tokens()
+    }
+    fn cache_capacity(&self) -> usize {
+        self.inner.cache_capacity()
+    }
+    fn new_cache(&self) -> Result<KvCache> {
+        self.inner.new_cache()
+    }
+    fn prefill(&self, kv: &mut KvCache, jobs: &[PrefillJob]) -> Result<Vec<PrefillOut>> {
+        let n = self.calls.get();
+        self.calls.set(n + 1);
+        if n == self.fail_on_call {
+            anyhow::bail!("injected prefill fault");
+        }
+        self.inner.prefill(kv, jobs)
+    }
+    fn decode(&self, kv: &mut KvCache, group: &DecodeGroup) -> Result<Vec<DecodeOut>> {
+        self.inner.decode(kv, group)
+    }
+}
+
+/// Engine-rebuild retry: a token-less request hit by a transient backend
+/// fault is drained, resubmitted into a fresh engine, and completes with the
+/// exact solo stream; with a zero retry budget it errors instead.  A request
+/// that already produced tokens always errors.
+#[test]
+fn engine_rebuild_retries_tokenless_requests() {
+    let calls = Rc::new(Cell::new(0usize));
+    let req = GenRequest::new(7, vec![5, 6, 4], 4);
+
+    let mut engine = ContinuousEngine::new(FlakyPrefill {
+        inner: SimBackend::new(2, 24, 3, 64),
+        calls: calls.clone(),
+        fail_on_call: 0,
+    })
+    .unwrap();
+    let rx = engine.submit_stream(req.clone());
+    assert!(engine.step().is_err(), "injected prefill fault must surface");
+    let retry = engine.drain_for_recovery("engine step failed", 1);
+    assert_eq!(retry.len(), 1, "token-less request is retryable");
+    assert_eq!(retry[0].attempts, 1);
+
+    let mut fresh = ContinuousEngine::new(FlakyPrefill {
+        inner: SimBackend::new(2, 24, 3, 64),
+        calls: calls.clone(),
+        fail_on_call: 0, // already past call 0: the fault was transient
+    })
+    .unwrap();
+    fresh.stats = engine.stats.clone();
+    for r in retry {
+        fresh.resubmit(r);
+    }
+    fresh.run_to_idle().unwrap();
+    assert_eq!(fresh.stats.retries, 1);
+
+    let (tokens, done) = drain(&rx);
+    assert_eq!(tokens, solo_stream(&req), "retried stream must match the solo run");
+    assert_eq!(done.expect("Done after retry").finish, FinishReason::Length);
+
+    // zero retry budget: the drain errors the request instead
+    let mut e2 = ContinuousEngine::new(FlakyPrefill {
+        inner: SimBackend::new(2, 24, 3, 64),
+        calls: Rc::new(Cell::new(0)),
+        fail_on_call: 0,
+    })
+    .unwrap();
+    let rx2 = e2.submit_stream(GenRequest::new(8, vec![5], 2));
+    assert!(e2.step().is_err());
+    assert!(e2.drain_for_recovery("fault", 0).is_empty());
+    assert!(matches!(rx2.try_recv().unwrap(), StreamEvent::Error(_)));
+}
+
+/// A flaky DECODE (after tokens have streamed) must error the request at
+/// recovery — a stream that already emitted tokens cannot be restarted.
+struct FlakyDecode {
+    inner: SimBackend,
+    calls: Rc<Cell<usize>>,
+    fail_on_call: usize,
+}
+
+impl DecodeBackend for FlakyDecode {
+    fn batch_slots(&self) -> usize {
+        self.inner.batch_slots()
+    }
+    fn max_prompt_tokens(&self) -> usize {
+        self.inner.max_prompt_tokens()
+    }
+    fn cache_capacity(&self) -> usize {
+        self.inner.cache_capacity()
+    }
+    fn new_cache(&self) -> Result<KvCache> {
+        self.inner.new_cache()
+    }
+    fn prefill(&self, kv: &mut KvCache, jobs: &[PrefillJob]) -> Result<Vec<PrefillOut>> {
+        self.inner.prefill(kv, jobs)
+    }
+    fn decode(&self, kv: &mut KvCache, group: &DecodeGroup) -> Result<Vec<DecodeOut>> {
+        let n = self.calls.get();
+        self.calls.set(n + 1);
+        if n == self.fail_on_call {
+            anyhow::bail!("injected decode fault");
+        }
+        self.inner.decode(kv, group)
+    }
+}
+
+#[test]
+fn recovery_never_replays_streams_with_tokens() {
+    let mut engine = ContinuousEngine::new(FlakyDecode {
+        inner: SimBackend::new(2, 24, 3, 64),
+        calls: Rc::new(Cell::new(0)),
+        fail_on_call: 0,
+    })
+    .unwrap();
+    let rx = engine.submit_stream(GenRequest::new(9, vec![5, 6], 4));
+    assert!(engine.step().is_err(), "decode fault must surface");
+    // the prefill already emitted a first token → not retryable
+    assert!(engine.drain_for_recovery("decode failed", 5).is_empty());
+    assert!(matches!(rx.try_recv().unwrap(), StreamEvent::Token(_)));
+    assert!(matches!(rx.try_recv().unwrap(), StreamEvent::Error(_)));
+}
