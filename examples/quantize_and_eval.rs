@@ -16,7 +16,7 @@ use anyhow::Result;
 use prefixquant::data::{self, Language};
 use prefixquant::eval;
 use prefixquant::model::Model;
-use prefixquant::quant::{pipeline, SchemeConfig};
+use prefixquant::quant::{Precision, Recipe};
 use prefixquant::report::ReportSink;
 use prefixquant::runtime::Engine;
 use prefixquant::tensor::IntTensor;
@@ -43,37 +43,38 @@ fn main() -> Result<()> {
     let eval_ids = tok.encode(&lang.eval_text(), false);
     let windows = data::windows(&eval_ids, s, tok.spec.bos, n_windows);
 
-    let schemes = vec![
-        SchemeConfig::fp16(),
-        SchemeConfig::rtn(4, 4, 4),
-        SchemeConfig::quarot(4, 4, 4),
-        SchemeConfig::prefixquant_wo_ft(4, 4, 4),
-        SchemeConfig::prefixquant(4, 4, 4, ft_epochs),
+    let p = Precision::new(4, 4, 4);
+    let recipes = vec![
+        Recipe::fp16(),
+        Recipe::rtn(p),
+        Recipe::quarot(p),
+        Recipe::prefixquant_wo_ft(p),
+        Recipe::prefixquant(p, ft_epochs),
     ];
 
     let mut table = Table::new(
         "W4A4KV4 on pq-tiny (Table 3 protocol)",
         &["Method", "Quant Type", "PPL", "Avg. Acc.", "prefix", "pipeline s"],
     );
-    for scheme in schemes {
+    for recipe in recipes {
         let t0 = Instant::now();
         let mut model = Model::load(engine.clone(), "pq-tiny")?;
-        let rep = pipeline::quantize(&mut model, &scheme, &calib, &tok)?;
-        let ppl = eval::perplexity(&model, scheme.mode, &windows)?;
-        let scores = eval::run_all_tasks(&model, scheme.mode, &lang, &tok, items)?;
+        let rep = recipe.run(&mut model, &calib, &tok)?;
+        let ppl = eval::perplexity(&model, recipe.mode, &windows)?;
+        let scores = eval::run_all_tasks(&model, recipe.mode, &lang, &tok, items)?;
         let avg = scores.last().unwrap().accuracy;
-        let qt = match scheme.mode {
+        let qt = match recipe.mode {
             prefixquant::model::QuantMode::Fp => "-",
             prefixquant::model::QuantMode::Static => "static",
             prefixquant::model::QuantMode::Dynamic => "dynamic",
         };
         sink.emit_line(&format!(
             "{:<32} ppl={ppl:.4} acc={avg:.2} ({:.1}s)",
-            scheme.name,
+            recipe.name,
             t0.elapsed().as_secs_f64()
         ));
         table.rowv(vec![
-            scheme.name.clone(),
+            recipe.name.clone(),
             qt.into(),
             format!("{ppl:.4}"),
             format!("{avg:.2}"),

@@ -9,7 +9,7 @@ use anyhow::Result;
 use prefixquant::data::{self, Language};
 use prefixquant::eval;
 use prefixquant::model::Model;
-use prefixquant::quant::{pipeline, SchemeConfig};
+use prefixquant::quant::{Precision, Recipe};
 use prefixquant::runtime::Engine;
 use prefixquant::tensor::IntTensor;
 use prefixquant::tokenizer::Tokenizer;
@@ -34,17 +34,16 @@ fn main() -> Result<()> {
     let calib_w =
         data::calibration_windows(&lang, |t| tok.encode(t, false), s, b, tok.spec.bos);
     let calib = IntTensor::new(vec![b, s], calib_w.into_iter().flatten().collect())?;
-    let scheme = SchemeConfig::prefixquant_wo_ft(4, 4, 4);
-    let report = pipeline::quantize(&mut model, &scheme, &calib, &tok)?;
+    let recipe = Recipe::prefixquant_wo_ft(Precision::new(4, 4, 4));
+    let report = recipe.run(&mut model, &calib, &tok)?;
     println!(
         "prefixed tokens   = {:?} (o={}, sinks={})",
-        report.prefix_rendered, report.pre_report.o, model.prefix.n_ctx_sinks
+        report.prefix_rendered,
+        report.pre_report.as_ref().map_or(0, |r| r.o),
+        model.prefix.n_ctx_sinks
     );
-    println!(
-        "pipeline time     = find {:.2}s | grid {:.2}s | total {:.2}s",
-        report.t_find_prefix, report.t_grid, report.t_total
-    );
-    let q_ppl = eval::perplexity(&model, scheme.mode, &windows)?;
+    println!("pipeline time     = {}", report.timing_summary());
+    let q_ppl = eval::perplexity(&model, recipe.mode, &windows)?;
     println!("W4A4KV4 static PPL = {q_ppl:.4}  (vs FP {fp_ppl:.4})");
     Ok(())
 }

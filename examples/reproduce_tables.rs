@@ -6,6 +6,9 @@
 //!            table11, table12, table13, table14, table15, table16, table17,
 //!            all }  (default: all)
 //!
+//! Every scheme is a [`Recipe`] (preset constructors for the named methods,
+//! `Recipe::builder` for the ablation points); per-stage timing comes from
+//! the recipe's own `StageReport`s, so Table 10 generalizes to any recipe.
 //! Timing tables 5/8/9 live in `cargo bench` (rust/benches/).  Reports are
 //! saved under artifacts/reports/ and summarized in EXPERIMENTS.md.
 
@@ -16,7 +19,9 @@ use anyhow::Result;
 use prefixquant::data::{self, Language};
 use prefixquant::eval;
 use prefixquant::model::{Model, QuantMode};
-use prefixquant::quant::{outlier, pipeline, prefix, rotation, PrefixPolicy, SchemeConfig};
+use prefixquant::quant::{
+    outlier, prefix, rotation, Granularity, Precision, PrefixPolicy, Recipe, RecipeReport,
+};
 use prefixquant::report::ReportSink;
 use prefixquant::runtime::Engine;
 use prefixquant::tensor::IntTensor;
@@ -38,7 +43,7 @@ struct Harness {
 struct Row {
     ppl: f64,
     acc: Option<f64>,
-    rep: pipeline::PipelineReport,
+    rep: RecipeReport,
 }
 
 impl Harness {
@@ -72,26 +77,26 @@ impl Harness {
         Model::load(self.engine.clone(), &self.model_name)
     }
 
-    fn run(&self, scheme: &SchemeConfig, with_acc: bool) -> Result<Row> {
+    fn run(&self, recipe: &Recipe, with_acc: bool) -> Result<Row> {
         let t0 = Instant::now();
         let mut model = self.fresh()?;
-        let rep = pipeline::quantize(&mut model, scheme, &self.calib, &self.tok)?;
-        let ppl = eval::perplexity(&model, scheme.mode, &self.windows)?;
+        let rep = recipe.run(&mut model, &self.calib, &self.tok)?;
+        let ppl = eval::perplexity(&model, recipe.mode, &self.windows)?;
         let acc = if with_acc {
-            let s = eval::run_all_tasks(&model, scheme.mode, &self.lang, &self.tok, self.items)?;
+            let s = eval::run_all_tasks(&model, recipe.mode, &self.lang, &self.tok, self.items)?;
             Some(s.last().unwrap().accuracy)
         } else {
             None
         };
-        eprintln!("    {:<40} ppl={ppl:.4} ({:.1}s)", scheme.name, t0.elapsed().as_secs_f64());
+        eprintln!("    {:<40} ppl={ppl:.4} ({:.1}s)", recipe.name, t0.elapsed().as_secs_f64());
         Ok(Row { ppl, acc, rep })
     }
 
-    fn run_detail(&self, scheme: &SchemeConfig) -> Result<(Row, Vec<eval::TaskScore>)> {
+    fn run_detail(&self, recipe: &Recipe) -> Result<(Row, Vec<eval::TaskScore>)> {
         let mut model = self.fresh()?;
-        let rep = pipeline::quantize(&mut model, scheme, &self.calib, &self.tok)?;
-        let ppl = eval::perplexity(&model, scheme.mode, &self.windows)?;
-        let scores = eval::run_all_tasks(&model, scheme.mode, &self.lang, &self.tok, self.items)?;
+        let rep = recipe.run(&mut model, &self.calib, &self.tok)?;
+        let ppl = eval::perplexity(&model, recipe.mode, &self.windows)?;
+        let scores = eval::run_all_tasks(&model, recipe.mode, &self.lang, &self.tok, self.items)?;
         let acc = scores.last().unwrap().accuracy;
         Ok((Row { ppl, acc: Some(acc), rep }, scores))
     }
@@ -205,25 +210,22 @@ fn table1(h: &Harness, sink: &mut ReportSink) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn table2(h: &Harness, sink: &mut ReportSink) -> Result<()> {
-    let fp = h.run(&SchemeConfig::fp16(), false)?.ppl;
+    let fp = h.run(&Recipe::fp16(), false)?.ppl;
     let mut t = Table::new(
         "Table 2: static quantization needs prefixed outliers (PPL)",
         &["precision", "original", "+ rotation", "+ prefixed"],
     );
-    for (label, a_bits, kv_bits) in [("W16A4KV16 (static)", 4usize, 16usize), ("W16A16KV4 (static)", 16, 4)] {
-        let mk = |rotate: bool, use_prefix: bool| SchemeConfig {
-            name: format!("{label} rot={rotate} pre={use_prefix}"),
-            w_bits: 16,
-            a_bits,
-            kv_bits,
-            mode: QuantMode::Static,
-            rotate,
-            use_prefix,
-            prefix_override: None,
-            grid_search: true,
-            ft_epochs: 0,
-            smooth: false,
-            w_group: None,
+    for (label, a_bits, kv_bits) in
+        [("W16A4KV16 (static)", 4usize, 16usize), ("W16A16KV4 (static)", 16, 4)]
+    {
+        let mk = |rotate: bool, use_prefix: bool| {
+            Recipe::builder(Precision::new(16, a_bits, kv_bits))
+                .name(&format!("{label} rot={rotate} pre={use_prefix}"))
+                .mode(QuantMode::Static)
+                .rotate(rotate)
+                .prefix(use_prefix)
+                .grid_search(true)
+                .build()
         };
         let orig = h.run(&mk(false, false), false)?.ppl;
         let rot = h.run(&mk(true, false), false)?.ppl;
@@ -246,38 +248,38 @@ fn main_comparison(
     bits: (usize, usize, usize),
     detail: bool,
 ) -> Result<()> {
-    let (w, a, kv) = bits;
-    let schemes = vec![
-        SchemeConfig::fp16(),
-        SchemeConfig::atom(w, a, kv),
-        SchemeConfig::rtn(w, a, kv),
-        SchemeConfig::quarot(w, a, kv),
-        SchemeConfig::smoothquant(w, a, kv),
-        SchemeConfig::prefixquant_wo_ft(w, a, kv),
-        SchemeConfig::prefixquant(w, a, kv, h.ft_epochs),
+    let p = Precision::new(bits.0, bits.1, bits.2);
+    let recipes = vec![
+        Recipe::fp16(),
+        Recipe::atom(p),
+        Recipe::rtn(p),
+        Recipe::quarot(p),
+        Recipe::smoothquant(p),
+        Recipe::prefixquant_wo_ft(p),
+        Recipe::prefixquant(p, h.ft_epochs),
     ];
     let mut t = Table::new(title, &["Method", "Quant Type", "Wiki PPL", "Avg. Acc."]);
     let mut detail_t = Table::new(
         &format!("{title} — per-task detail (Table 18 analog)"),
         &["Method", "completion", "bigram", "delimiter", "spelling", "next-word", "Avg"],
     );
-    for scheme in schemes {
+    for recipe in recipes {
         if detail {
-            let (row, scores) = h.run_detail(&scheme)?;
+            let (row, scores) = h.run_detail(&recipe)?;
             t.rowv(vec![
-                scheme.name.clone(),
-                mode_str(scheme.mode).into(),
+                recipe.name.clone(),
+                mode_str(recipe.mode).into(),
                 ff(row.ppl),
                 format!("{:.2}", row.acc.unwrap()),
             ]);
-            let mut cells = vec![scheme.name.clone()];
+            let mut cells = vec![recipe.name.clone()];
             cells.extend(scores.iter().map(|s| format!("{:.1}", s.accuracy)));
             detail_t.rowv(cells);
         } else {
-            let row = h.run(&scheme, true)?;
+            let row = h.run(&recipe, true)?;
             t.rowv(vec![
-                scheme.name.clone(),
-                mode_str(scheme.mode).into(),
+                recipe.name.clone(),
+                mode_str(recipe.mode).into(),
                 ff(row.ppl),
                 format!("{:.2}", row.acc.unwrap()),
             ]);
@@ -300,43 +302,44 @@ fn table6(h: &Harness, sink: &mut ReportSink) -> Result<()> {
         "Table 6: ablation on quantization techniques (PPL)",
         &["Method", "Act Quant", "W8A8KV8", "W4A8KV4", "W4A4KV4"],
     );
-    let steps: Vec<(&str, &str, Box<dyn Fn(usize, usize, usize) -> SchemeConfig>)> = vec![
-        ("RTN", "dynamic", Box::new(|w, a, kv| SchemeConfig::rtn(w, a, kv))),
-        ("+ rotation", "dynamic", Box::new(|w, a, kv| SchemeConfig::quarot(w, a, kv))),
+    type Mk = Box<dyn Fn(Precision) -> Recipe>;
+    let steps: Vec<(&str, &str, Mk)> = vec![
+        ("RTN", "dynamic", Box::new(Recipe::rtn)),
+        ("+ rotation", "dynamic", Box::new(Recipe::quarot)),
         (
             "+ grid search",
             "dynamic",
-            Box::new(|w, a, kv| {
-                let mut s = SchemeConfig::quarot(w, a, kv);
-                s.grid_search = true;
-                s
+            Box::new(|p| {
+                Recipe::builder(p)
+                    .name(&format!("QuaRot+grid {}", p.label()))
+                    .rotate(true)
+                    .grid_search(true)
+                    .build()
             }),
         ),
         (
             "+ static quantization",
             "static",
-            Box::new(|w, a, kv| {
-                let mut s = SchemeConfig::quarot(w, a, kv);
-                s.grid_search = true;
-                s.mode = QuantMode::Static;
-                s
+            Box::new(|p| {
+                Recipe::builder(p)
+                    .name(&format!("QuaRot+grid+static {}", p.label()))
+                    .rotate(true)
+                    .grid_search(true)
+                    .mode(QuantMode::Static)
+                    .build()
             }),
         ),
-        (
-            "+ prefixed outliers",
-            "static",
-            Box::new(|w, a, kv| SchemeConfig::prefixquant_wo_ft(w, a, kv)),
-        ),
+        ("+ prefixed outliers", "static", Box::new(Recipe::prefixquant_wo_ft)),
         (
             "+ block-wise fine-tuning",
             "static",
-            Box::new(|w, a, kv| SchemeConfig::prefixquant(w, a, kv, 4)),
+            Box::new(|p| Recipe::prefixquant(p, 4)),
         ),
     ];
     for (name, act, mk) in steps {
         let mut cells = vec![name.to_string(), act.to_string()];
         for (_p, (w, a, kv)) in precisions {
-            let row = h.run(&mk(w, a, kv), false)?;
+            let row = h.run(&mk(Precision::new(w, a, kv)), false)?;
             cells.push(ff(row.ppl));
         }
         t.rowv(cells);
@@ -346,23 +349,25 @@ fn table6(h: &Harness, sink: &mut ReportSink) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
-// Table 10: quantization time
+// Table 10: quantization time (per-pass stage reports)
 // ---------------------------------------------------------------------------
 
 fn table10(h: &Harness, sink: &mut ReportSink) -> Result<()> {
-    let scheme = SchemeConfig::prefixquant(4, 4, 4, h.ft_epochs);
-    let row = h.run(&scheme, false)?;
+    let recipe = Recipe::prefixquant(Precision::new(4, 4, 4), h.ft_epochs);
+    let row = h.run(&recipe, false)?;
     let mut t = Table::new(
         "Table 10: quantization time breakdown",
         &["Model", "Find Prefixed Outliers", "Grid-search init", "Fine-tuning"],
     );
     t.rowv(vec![
         h.model_name.clone(),
-        format!("{:.2}s", row.rep.t_find_prefix),
-        format!("{:.2}s", row.rep.t_grid),
-        format!("{:.2}s", row.rep.t_ft),
+        format!("{:.2}s", row.rep.t_find_prefix()),
+        format!("{:.2}s", row.rep.t_grid()),
+        format!("{:.2}s", row.rep.t_ft()),
     ]);
     sink.table(&t);
+    // the generalized breakdown: one timed entry per pass, any recipe
+    sink.emit_line(&format!("per-pass: {}", row.rep.timing_summary()));
     Ok(())
 }
 
@@ -379,17 +384,19 @@ fn table11(h: &Harness, sink: &mut ReportSink) -> Result<()> {
     let probe = h.fresh()?;
     let (b, s) = probe.fwd_geom()?;
     drop(probe);
-    for (name, seed) in
-        [("pile (train split)", h.lang.spec.train_seed), ("c4-like (seed+7)", h.lang.spec.train_seed + 7), ("redpajama-like (seed+13)", h.lang.spec.train_seed + 13)]
-    {
+    for (name, seed) in [
+        ("pile (train split)", h.lang.spec.train_seed),
+        ("c4-like (seed+7)", h.lang.spec.train_seed + 7),
+        ("redpajama-like (seed+13)", h.lang.spec.train_seed + 13),
+    ] {
         let text = h.lang.generate(seed, h.lang.spec.train_chars / 4);
         let ids = h.tok.encode(&text, false);
         let cw = data::windows(&ids, s, h.tok.spec.bos, b);
         let calib = IntTensor::new(vec![b, s], cw.into_iter().flatten().collect())?;
         let mut model = h.fresh()?;
-        let scheme = SchemeConfig::prefixquant(4, 4, 4, h.ft_epochs);
-        pipeline::quantize(&mut model, &scheme, &calib, &h.tok)?;
-        let ppl = eval::perplexity(&model, scheme.mode, &h.windows)?;
+        let recipe = Recipe::prefixquant(Precision::new(4, 4, 4), h.ft_epochs);
+        recipe.run(&mut model, &calib, &h.tok)?;
+        let ppl = eval::perplexity(&model, recipe.mode, &h.windows)?;
         t.rowv(vec![name.into(), ff(ppl)]);
         eprintln!("    table11 {name}: {ppl:.4}");
     }
@@ -398,19 +405,18 @@ fn table11(h: &Harness, sink: &mut ReportSink) -> Result<()> {
 }
 
 fn table12(h: &Harness, sink: &mut ReportSink) -> Result<()> {
-    let mut t = Table::new(
-        "Table 12: fine-tuning epochs",
-        &["Epochs", "W4A8KV4", "W4A4KV4"],
-    );
+    let mut t = Table::new("Table 12: fine-tuning epochs", &["Epochs", "W4A8KV4", "W4A4KV4"]);
     for epochs in [0usize, 2, 4, 8] {
-        let mut cells = vec![if epochs == 0 { "0 (w/o FT)".to_string() } else { epochs.to_string() }];
+        let mut cells =
+            vec![if epochs == 0 { "0 (w/o FT)".to_string() } else { epochs.to_string() }];
         for bits in [(4, 8, 4), (4, 4, 4)] {
-            let scheme = if epochs == 0 {
-                SchemeConfig::prefixquant_wo_ft(bits.0, bits.1, bits.2)
+            let p = Precision::new(bits.0, bits.1, bits.2);
+            let recipe = if epochs == 0 {
+                Recipe::prefixquant_wo_ft(p)
             } else {
-                SchemeConfig::prefixquant(bits.0, bits.1, bits.2, epochs)
+                Recipe::prefixquant(p, epochs)
             };
-            let row = h.run(&scheme, false)?;
+            let row = h.run(&recipe, false)?;
             cells.push(ff(row.ppl));
         }
         t.rowv(cells);
@@ -432,23 +438,27 @@ fn table13(h: &Harness, sink: &mut ReportSink) -> Result<()> {
         for dynamic in [true, false] {
             let mut cells = vec![
                 if ft { "Yes".to_string() } else { "No".to_string() },
-                if dynamic { "token-wise dynamic".into() } else { "tensor-wise static".to_string() },
+                if dynamic {
+                    "token-wise dynamic".into()
+                } else {
+                    "tensor-wise static".to_string()
+                },
             ];
             for bits in [(4usize, 8usize, 4usize), (4, 4, 4)] {
-                let mut scheme = SchemeConfig::prefixquant_wo_ft(bits.0, bits.1, bits.2);
-                if dynamic {
-                    scheme.mode = QuantMode::Dynamic;
-                }
-                if ft {
-                    scheme.ft_epochs = h.ft_epochs;
-                }
-                scheme.name = format!(
-                    "prefix {} {} {:?}",
-                    if dynamic { "dyn" } else { "static" },
-                    if ft { "ft" } else { "noft" },
-                    bits
-                );
-                let row = h.run(&scheme, false)?;
+                let recipe = Recipe::builder(Precision::new(bits.0, bits.1, bits.2))
+                    .name(&format!(
+                        "prefix {} {} {:?}",
+                        if dynamic { "dyn" } else { "static" },
+                        if ft { "ft" } else { "noft" },
+                        bits
+                    ))
+                    .mode(if dynamic { QuantMode::Dynamic } else { QuantMode::Static })
+                    .rotate(true)
+                    .prefix(true)
+                    .grid_search(true)
+                    .finetune(if ft { h.ft_epochs } else { 0 })
+                    .build();
+                let row = h.run(&recipe, false)?;
                 cells.push(ff(row.ppl));
             }
             t.rowv(cells);
@@ -468,13 +478,15 @@ fn table14(h: &Harness, sink: &mut ReportSink) -> Result<()> {
         &["n prefixed", "PrefixQuant w/o FT"],
     );
     for n in 0..=4usize {
-        let mut scheme = SchemeConfig::prefixquant_wo_ft(4, 4, 4);
-        scheme.prefix_override = Some(PrefixPolicy::FirstN(n));
-        if n == 0 {
-            scheme.use_prefix = false;
+        let mut b = Recipe::builder(Precision::new(4, 4, 4))
+            .name(&format!("prefix n={n}"))
+            .mode(QuantMode::Static)
+            .rotate(true)
+            .grid_search(true);
+        if n > 0 {
+            b = b.prefix(true).prefix_policy(PrefixPolicy::FirstN(n));
         }
-        scheme.name = format!("prefix n={n}");
-        let row = h.run(&scheme, false)?;
+        let row = h.run(&b.build(), false)?;
         t.rowv(vec![n.to_string(), ff(row.ppl)]);
     }
     sink.table(&t);
@@ -493,10 +505,16 @@ fn table15(h: &Harness, sink: &mut ReportSink) -> Result<()> {
         ("random (seed 2)", Some(PrefixPolicy::Random(2))),
     ];
     for (name, policy) in policies {
-        let mut scheme = SchemeConfig::prefixquant_wo_ft(4, 4, 4);
-        scheme.prefix_override = policy;
-        scheme.name = format!("content {name}");
-        let row = h.run(&scheme, false)?;
+        let mut b = Recipe::builder(Precision::new(4, 4, 4))
+            .name(&format!("content {name}"))
+            .mode(QuantMode::Static)
+            .rotate(true)
+            .prefix(true)
+            .grid_search(true);
+        if let Some(p) = policy {
+            b = b.prefix_policy(p);
+        }
+        let row = h.run(&b.build(), false)?;
         t.rowv(vec![name.into(), row.rep.prefix_rendered.clone(), ff(row.ppl)]);
     }
     sink.table(&t);
@@ -515,21 +533,15 @@ fn table16(h: &Harness, sink: &mut ReportSink) -> Result<()> {
     for (label, wbits) in [("W3A16g64", 3usize), ("W2A16g64", 2usize)] {
         let mut cells = vec![label.to_string()];
         for use_prefix in [false, true] {
-            let scheme = SchemeConfig {
-                name: format!("{label} prefix={use_prefix}"),
-                w_bits: wbits,
-                a_bits: 16,
-                kv_bits: 16,
-                mode: QuantMode::Static,
-                rotate: false,
-                use_prefix,
-                prefix_override: None,
-                grid_search: true,
-                ft_epochs: h.ft_epochs,
-                smooth: false,
-                w_group: Some(64),
-            };
-            let row = h.run(&scheme, false)?;
+            let recipe = Recipe::builder(Precision::new(wbits, 16, 16))
+                .name(&format!("{label} prefix={use_prefix}"))
+                .mode(QuantMode::Static)
+                .granularity(Granularity::PerGroup(64))
+                .grid_search(true)
+                .prefix(use_prefix)
+                .finetune(h.ft_epochs)
+                .build();
+            let row = h.run(&recipe, false)?;
             cells.push(ff(row.ppl));
         }
         t.rowv(cells);
@@ -553,10 +565,16 @@ fn table17(h: &Harness, sink: &mut ReportSink) -> Result<()> {
         ("CushionCache-analog (highest-freq)", Some(PrefixPolicy::OnlyHighestFreq)),
     ];
     for (name, policy) in variants {
-        let mut scheme = SchemeConfig::prefixquant_wo_ft(8, 8, 8);
-        scheme.prefix_override = policy;
-        scheme.name = format!("t17 {name}");
-        let row = h.run(&scheme, false)?;
+        let mut b = Recipe::builder(Precision::new(8, 8, 8))
+            .name(&format!("t17 {name}"))
+            .mode(QuantMode::Static)
+            .rotate(true)
+            .prefix(true)
+            .grid_search(true);
+        if let Some(p) = policy {
+            b = b.prefix_policy(p);
+        }
+        let row = h.run(&b.build(), false)?;
         t.rowv(vec![name.into(), row.rep.prefix_rendered.clone(), ff(row.ppl)]);
     }
     sink.table(&t);

@@ -1,9 +1,12 @@
-//! Serving demo: quantize W4A4KV4 with PrefixQuant, start the coordinator,
-//! submit a wave of concurrent generation requests, and report latency /
-//! throughput metrics (the paper's Table 5 setting, end to end).
+//! Serving demo: quantize W4A4KV4 with PrefixQuant ONCE, save the versioned
+//! QuantArtifact, boot N server workers from it (cold start = O(read), no
+//! per-worker pipeline), submit a wave of concurrent generation requests
+//! round-robin, and report latency / throughput metrics plus the
+//! artifact-boot cold-start speedup (the paper's Table 5 setting plus its
+//! "quantize once, deploy" story, end to end).
 //!
 //!   cargo run --release --example serve_batch \
-//!       [-- --engine continuous|batch --requests 16 --max-new 12 \
+//!       [-- --engine continuous|batch --workers 2 --requests 16 --max-new 12 \
 //!           --policy fcfs|priority --interactive-frac 0.25 --cancel-rate 0.1]
 //!
 //! `--engine continuous` (default) runs the slot-table engine: requests are
@@ -11,36 +14,42 @@
 //! tokens stream back as they are produced.  `--engine batch` runs the
 //! run-to-completion baseline behind the dynamic batcher.
 //!
+//! Every worker loads the SAME artifact directory; its prefixed K/V installs
+//! into the paged cache's refcounted shared-prefix pages on each worker.  A
+//! post-failure model reload re-reads the artifact too (see
+//! `Server::start_from_artifact`).
+//!
 //! Mixed-priority mode: `--interactive-frac F` marks a fraction of the
 //! workload `Priority::Interactive` (the rest stays `Batch`), `--policy
-//! priority` schedules with `PriorityPreempt` (class-ordered admission with
-//! aging, preemption of Decoding slots, chunked prefill), and
-//! `--cancel-rate C` cancels a fraction of requests mid-flight through their
-//! handles.  The report breaks TTFT / queue wait down per class from the
-//! server's per-class metrics.
+//! priority` schedules with `PriorityPreempt`, and `--cancel-rate C` cancels
+//! a fraction of requests mid-flight through their handles.  The report
+//! breaks TTFT / queue wait down per class from the per-class metrics,
+//! aggregated across workers.
 
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 use prefixquant::coordinator::{
-    EngineKind, FinishReason, GenRequest, Priority, PriorityPreempt, Server, ServerConfig,
-    StreamEvent,
+    EngineKind, FinishReason, GenRequest, Metrics, Priority, PriorityPreempt, Server,
+    ServerConfig, StreamEvent,
 };
 use prefixquant::data::{self, Language};
 use prefixquant::model::Model;
-use prefixquant::quant::{pipeline, SchemeConfig};
+use prefixquant::quant::{Precision, QuantArtifact, Recipe};
 use prefixquant::runtime::Engine;
 use prefixquant::tensor::IntTensor;
 use prefixquant::tokenizer::Tokenizer;
 use prefixquant::util::args::Args;
 use prefixquant::util::rng::SplitMix64;
+use prefixquant::util::table::Table;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     let n_requests = args.usize_or("requests", 16)?;
     let max_new = args.usize_or("max-new", 12)?;
     let prompt_chars = args.usize_or("prompt-chars", 63)?;
+    let n_workers = args.usize_or("workers", 2)?.max(1);
     let interactive_frac = args.f32_or("interactive-frac", 0.0)?;
     let cancel_rate = args.f32_or("cancel-rate", 0.0)?;
     let engine_kind = match args.get_or("engine", "continuous") {
@@ -49,54 +58,56 @@ fn main() -> Result<()> {
         other => bail!("--engine {other:?}: want continuous|batch"),
     };
     let policy_name = args.get_or("policy", "fcfs").to_string();
+    if policy_name != "fcfs" && policy_name != "priority" {
+        bail!("--policy {policy_name:?}: want fcfs|priority");
+    }
 
     let dir = prefixquant::artifacts_dir();
-    // a lightweight engine on the main thread just for specs
-    let probe_engine = Rc::new(Engine::new(&dir)?);
-    let tok = Tokenizer::new(probe_engine.manifest.tokenizer.clone());
-    let lang = Language::new(probe_engine.manifest.corpus.clone());
-    drop(probe_engine);
 
-    let tok_worker = tok.clone();
-    let dir_worker = dir.clone();
-    let spec = lang.spec.clone();
-    let mut cfg = ServerConfig::builder(prefixquant::model::QuantMode::Static)
-        .engine(engine_kind)
-        .max_batch(8)
-        .batch_window(Duration::from_millis(20))
-        .bos(tok.spec.bos)
-        .pad(tok.spec.pad)
-        // paged KV with a dense-equivalent auto-sized pool
-        .kv(prefixquant::coordinator::KvLayout::Paged { page_size: 16, n_pages: 0 });
-    cfg = match policy_name.as_str() {
-        "fcfs" => cfg,
-        "priority" => cfg.policy(Box::new(PriorityPreempt::default())),
-        other => bail!("--policy {other:?}: want fcfs|priority"),
-    };
-    let server = Server::start(
-        move || {
-            let engine = Rc::new(Engine::new(&dir_worker)?);
-            let lang = Language::new(spec);
-            let mut model = Model::load(engine.clone(), "pq-tiny")?;
-            let (b, s) = model.fwd_geom()?;
-            let w = data::calibration_windows(
-                &lang,
-                |t| tok_worker.encode(t, false),
-                s,
-                b,
-                tok_worker.spec.bos,
-            );
-            let calib = IntTensor::new(vec![b, s], w.into_iter().flatten().collect())?;
-            let scheme = SchemeConfig::prefixquant_wo_ft(4, 4, 4);
-            let rep = pipeline::quantize(&mut model, &scheme, &calib, &tok_worker)?;
-            eprintln!(
-                "worker ready: prefix={:?} ({} sinks), pipeline {:.1}s",
-                rep.prefix_rendered, model.prefix.n_ctx_sinks, rep.t_total
-            );
-            Ok(model)
-        },
-        cfg.build(),
-    )?;
+    // --- offline: quantize ONCE on the main thread, save the artifact ----
+    let engine = Rc::new(Engine::new(&dir)?);
+    let tok = Tokenizer::new(engine.manifest.tokenizer.clone());
+    let lang = Language::new(engine.manifest.corpus.clone());
+    let recipe = Recipe::prefixquant_wo_ft(Precision::new(4, 4, 4));
+    let t_q = Instant::now();
+    let mut model = Model::load(engine.clone(), "pq-tiny")?;
+    let (b, s) = model.fwd_geom()?;
+    let w = data::calibration_windows(&lang, |t| tok.encode(t, false), s, b, tok.spec.bos);
+    let calib = IntTensor::new(vec![b, s], w.into_iter().flatten().collect())?;
+    let rep = recipe.run(&mut model, &calib, &tok)?;
+    let quantize_s = t_q.elapsed().as_secs_f64();
+    let artifact_dir =
+        std::env::temp_dir().join(format!("pq_serve_artifact_{}", std::process::id()));
+    QuantArtifact::save_model(&model, recipe.mode, Some(&rep), &artifact_dir)?;
+    eprintln!(
+        "quantized once in {quantize_s:.2}s (prefix={:?}, {} sinks) → {artifact_dir:?}",
+        rep.prefix_rendered,
+        model.prefix.n_ctx_sinks
+    );
+    drop(model);
+    drop(engine);
+
+    // --- online: boot every worker from the SHARED artifact --------------
+    let mut servers = Vec::new();
+    let mut boot_s = Vec::new();
+    for _ in 0..n_workers {
+        let mut cfg = ServerConfig::builder(recipe.mode)
+            .engine(engine_kind)
+            .max_batch(8)
+            .batch_window(Duration::from_millis(20))
+            .bos(tok.spec.bos)
+            .pad(tok.spec.pad)
+            // paged KV with a dense-equivalent auto-sized pool
+            .kv(prefixquant::coordinator::KvLayout::Paged { page_size: 16, n_pages: 0 });
+        if policy_name == "priority" {
+            cfg = cfg.policy(Box::new(PriorityPreempt::default()));
+        }
+        let t = Instant::now();
+        let server = Server::start_from_artifact(dir.clone(), artifact_dir.clone(), cfg.build())?;
+        boot_s.push(t.elapsed().as_secs_f64());
+        servers.push(server);
+    }
+    let mean_boot = boot_s.iter().sum::<f64>() / boot_s.len() as f64;
 
     // mixed-length prompts from the eval split: the continuous engine admits
     // them as slots free; the batch engine buckets them by length
@@ -118,11 +129,11 @@ fn main() -> Result<()> {
             .max_new(max_new)
             .priority(priority)
             .build();
-        let handle = server.submit_stream(req)?;
+        let handle = servers[id % servers.len()].submit_stream(req)?;
         let cancel = rng.range_f32(0.0, 1.0) < cancel_rate;
         handles.push((id, priority, cancel, handle));
     }
-    // cancellations fire through the handles while the engine is serving
+    // cancellations fire through the handles while the engines are serving
     for (_, _, cancel, handle) in &handles {
         if *cancel {
             let _ = handle.cancel();
@@ -167,11 +178,14 @@ fn main() -> Result<()> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let m = server.metrics()?;
+    let mut m = Metrics::default();
+    for server in &servers {
+        m.merge(&server.metrics()?);
+    }
     println!(
         "\nserved {ok}/{n_requests} requests ({cancelled} cancelled) in {wall:.2}s via \
-         {engine_kind:?}/{policy_name} | dispatches={} mean TTFT={:.0}ms (queue {:.0}ms) \
-         decode {:.1} tok/s",
+         {n_workers}x {engine_kind:?}/{policy_name} | dispatches={} mean TTFT={:.0}ms \
+         (queue {:.0}ms) decode {:.1} tok/s",
         m.batches,
         m.mean_ttft() * 1e3,
         m.mean_queue_wait() * 1e3,
@@ -196,14 +210,40 @@ fn main() -> Result<()> {
     if m.kv_resident_bytes > 0 {
         println!(
             "kv: {:.2}MB resident, {:.2}MB live, {} page-wait deferrals, {} preemptions, \
-             {} retries",
+             {} retries, {} model reloads",
             m.kv_resident_bytes as f64 / 1e6,
             m.kv_used_bytes as f64 / 1e6,
             m.deferred_admissions,
             m.preemptions,
-            m.retries
+            m.retries,
+            m.model_reloads
         );
     }
-    server.shutdown();
+
+    // cold start: one offline recipe run vs per-worker artifact boots
+    let mut t = Table::new(
+        "cold start: inline quantize vs boot-from-artifact",
+        &["path", "seconds", "speedup"],
+    );
+    t.rowv(vec![
+        "inline quantize (once, offline)".into(),
+        format!("{quantize_s:.3}"),
+        "1.0x".into(),
+    ]);
+    t.rowv(vec![
+        format!("artifact boot (mean of {n_workers} workers)"),
+        format!("{mean_boot:.3}"),
+        format!("{:.1}x", quantize_s / mean_boot.max(1e-9)),
+    ]);
+    t.print();
+    println!(
+        "per-worker boots: {:?} s — every worker shares one artifact instead of \
+         re-running the pipeline",
+        boot_s.iter().map(|s| (s * 1e3).round() / 1e3).collect::<Vec<_>>()
+    );
+
+    for server in servers {
+        server.shutdown();
+    }
     Ok(())
 }

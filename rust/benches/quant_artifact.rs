@@ -1,0 +1,258 @@
+//! Cold-start bench: serve-boot from a saved QuantArtifact vs booting with
+//! an inline quantization run (the v1 server-factory behavior).
+//!
+//!   cargo bench --bench quant_artifact            # full run
+//!   cargo bench --bench quant_artifact -- --smoke # CI perf trail
+//!
+//! Artifact-free leg (always runs, asserted in CI): a pq-tiny-shaped
+//! synthetic checkpoint is quantized host-side — rotation folding (R1/R2/R4)
+//! + per-channel grid weight quantization, the FLOOR of what an inline
+//! `quantize()` must pay before any observation/grid/fine-tuning — and
+//! compared against a full `QuantArtifact::load` (metadata + content-hash
+//! verification + both tensor stores) plus installing the prefix K/V into a
+//! paged KV cache's shared-prefix pages.  ASSERTS boot-from-artifact is
+//! ≥5x faster than even that floor (the real pipeline adds observation,
+//! calibration, and fine-tuning on top, so end-to-end the gap is larger —
+//! see serve_batch's cold-start table for live numbers).
+//!
+//! With real artifacts AND a real PJRT runtime, an end-to-end comparison
+//! (full recipe run vs artifact load through the engine) also runs; it
+//! skips gracefully under the vendored execute-less xla stub.
+//!
+//! Emits `BENCH_quant_artifact.json`.
+
+use prefixquant::bench_support::{bench_fn, emit_bench_json, smoke_mode};
+use prefixquant::config::ModelConfig;
+use prefixquant::coordinator::{KvCache, KvLayout};
+use prefixquant::model::QuantMode;
+use prefixquant::quant::pipeline::QUANT_WEIGHTS;
+use prefixquant::quant::{
+    quantizer, rotation, ArtifactMeta, Precision, QuantArtifact, FORMAT_VERSION,
+};
+use prefixquant::runtime::WeightStore;
+use prefixquant::tensor::Tensor;
+use prefixquant::util::rng::SplitMix64;
+use prefixquant::util::table::Table;
+
+fn synth_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "pq-bench-synth".into(),
+        vocab_size: 272,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_head: 32,
+        d_ff: 256,
+        o_model: 3,
+        inject_amp: 0.0,
+        inject_delta: 0.0,
+        max_prefix: 4,
+        train_seq: 64,
+        eval_seq: 64,
+        cache_max: 96,
+        sites: vec!["attn_in".into(), "o_in".into(), "mlp_in".into(), "down_in".into()],
+    }
+}
+
+fn rt(rng: &mut SplitMix64, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape.to_vec(), (0..n).map(|_| rng.range_f32(-0.5, 0.5)).collect()).unwrap()
+}
+
+/// A pq-tiny-shaped synthetic checkpoint (everything rotation folding touches).
+fn synth_weights(cfg: &ModelConfig, rng: &mut SplitMix64) -> WeightStore {
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let mut pairs: Vec<(String, Tensor)> = vec![
+        ("emb".into(), rt(rng, &[cfg.vocab_size, d])),
+        ("head".into(), rt(rng, &[d, cfg.vocab_size])),
+        ("lnf".into(), Tensor::full(&[d], 1.0)),
+    ];
+    for l in 0..cfg.n_layers {
+        for t in ["wq", "wk", "wv", "wo"] {
+            pairs.push((format!("layers.{l}.{t}"), rt(rng, &[d, d])));
+        }
+        for t in ["wg", "wu"] {
+            pairs.push((format!("layers.{l}.{t}"), rt(rng, &[d, ff])));
+        }
+        pairs.push((format!("layers.{l}.wd"), rt(rng, &[ff, d])));
+        pairs.push((format!("layers.{l}.ln1"), Tensor::full(&[d], 1.0)));
+        pairs.push((format!("layers.{l}.ln2"), Tensor::full(&[d], 1.0)));
+    }
+    WeightStore::from_pairs(pairs)
+}
+
+/// The host-side floor of an inline quantize: rotation folding + per-channel
+/// grid weight quantization (observation / grid-init / FT come on top).
+fn inline_quantize_floor(cfg: &ModelConfig, base: &WeightStore) -> WeightStore {
+    let mut ws = base.clone();
+    rotation::absorb_norm_gains(cfg, &mut ws).unwrap();
+    rotation::fold_rotations(cfg, &mut ws).unwrap();
+    for l in 0..cfg.n_layers {
+        for t in QUANT_WEIGHTS {
+            let w = ws.get_mut(&format!("layers.{l}.{t}")).unwrap();
+            quantizer::quant_weight_per_channel(w, 4, 40);
+        }
+    }
+    ws
+}
+
+fn synth_artifact(cfg: &ModelConfig, weights: WeightStore, rng: &mut SplitMix64) -> QuantArtifact {
+    let (l, h, dh, p) = (cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.max_prefix);
+    let state = WeightStore::from_pairs(vec![
+        ("act_scales".into(), rt(rng, &[l, 4])),
+        ("kv_scales".into(), rt(rng, &[l, 2, h])),
+        ("qmax_act".into(), Tensor::scalar(7.0)),
+        ("qmax_kv".into(), Tensor::scalar(7.0)),
+        ("r3".into(), rotation::hadamard(dh)),
+        ("r4".into(), rotation::hadamard(cfg.d_ff)),
+        ("prefix_k".into(), rt(rng, &[l, h, p, dh])),
+        ("prefix_v".into(), rt(rng, &[l, h, p, dh])),
+    ]);
+    QuantArtifact {
+        meta: ArtifactMeta {
+            format_version: FORMAT_VERSION,
+            model: cfg.name.clone(),
+            mode: QuantMode::Static,
+            recipe: "PrefixQuant w/o FT W4A4KV4".into(),
+            passes: vec!["rotate".into(), "find-prefix".into(), "grid-init".into()],
+            stage_seconds: vec![0.0, 0.0, 0.0],
+            precision: Some(Precision::new(4, 4, 4)),
+            rotated: true,
+            prefix_tokens: vec![1, 49, 49],
+            n_prefix: 3,
+            n_ctx_sinks: 3,
+            content_hash: 0,
+        },
+        weights,
+        state,
+    }
+}
+
+/// End-to-end comparison on the real artifacts (needs a PJRT runtime that
+/// can execute the AOT graphs; the vendored stub cannot, so this skips).
+fn real_model_comparison(smoke: bool) -> anyhow::Result<(f64, f64)> {
+    use prefixquant::data::{self, Language};
+    use prefixquant::model::Model;
+    use prefixquant::quant::{model_state, Recipe};
+    use prefixquant::runtime::Engine;
+    use prefixquant::tensor::IntTensor;
+    use prefixquant::tokenizer::Tokenizer;
+    use std::rc::Rc;
+    use std::time::Instant;
+
+    let dir = prefixquant::artifacts_dir();
+    let engine = Rc::new(Engine::new(&dir)?);
+    let tok = Tokenizer::new(engine.manifest.tokenizer.clone());
+    let lang = Language::new(engine.manifest.corpus.clone());
+    let recipe = Recipe::prefixquant_wo_ft(Precision::new(4, 4, 4));
+    let t_q = Instant::now();
+    let mut model = Model::load(engine.clone(), "pq-tiny")?;
+    let (b, s) = model.fwd_geom()?;
+    let w = data::calibration_windows(&lang, |t| tok.encode(t, false), s, b, tok.spec.bos);
+    let calib = IntTensor::new(vec![b, s], w.into_iter().flatten().collect())?;
+    recipe.run(&mut model, &calib, &tok)?;
+    let quantize_s = t_q.elapsed().as_secs_f64();
+
+    let adir = std::env::temp_dir().join(format!("pq_bench_artifact_{}", std::process::id()));
+    QuantArtifact::save_model(&model, recipe.mode, None, &adir)?;
+    drop(model);
+    let samples = if smoke { 3 } else { 10 };
+    let mut best = f64::INFINITY;
+    for _ in 0..samples {
+        let t = Instant::now();
+        let (m, _mode) = model_state::load(engine.clone(), &adir)?;
+        best = best.min(t.elapsed().as_secs_f64());
+        drop(m);
+    }
+    Ok((quantize_s, best))
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let cfg = synth_cfg();
+    let mut rng = SplitMix64::new(0xA27);
+    let base = synth_weights(&cfg, &mut rng);
+
+    // --- inline-quantize floor -----------------------------------------
+    let (warm, samples) = if smoke { (1, 5) } else { (2, 15) };
+    let inline = bench_fn("inline quantize (host floor)", warm, samples, || {
+        std::hint::black_box(inline_quantize_floor(&cfg, &base));
+    });
+
+    // --- boot from artifact ---------------------------------------------
+    let quantized = inline_quantize_floor(&cfg, &base);
+    let mut art = synth_artifact(&cfg, quantized, &mut rng);
+    let adir = std::env::temp_dir().join(format!("pq_art_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&adir);
+    art.save(&adir).expect("bench artifact save");
+    let (warm_a, samples_a) = if smoke { (2, 10) } else { (5, 50) };
+    let boot = bench_fn("boot from artifact (load+verify+prefix pages)", warm_a, samples_a, || {
+        let loaded = QuantArtifact::load(&adir).expect("artifact load");
+        let ps = loaded.prefix_state(&cfg).expect("prefix state");
+        let mut kv = KvCache::with_layout(&cfg, 4, KvLayout::Paged { page_size: 16, n_pages: 0 });
+        kv.install_prefix(&ps).expect("install prefix");
+        std::hint::black_box(kv.row_len(0));
+    });
+
+    let speedup = inline.median_s / boot.median_s.max(1e-9);
+    let mut t = Table::new(
+        "serve cold start: inline quantize vs QuantArtifact boot (synthetic pq-tiny shape)",
+        &["path", "median ms", "p10 ms", "p90 ms"],
+    );
+    for s in [&inline, &boot] {
+        t.rowv(vec![
+            s.name.clone(),
+            format!("{:.2}", s.median_s * 1e3),
+            format!("{:.2}", s.p10_s * 1e3),
+            format!("{:.2}", s.p90_s * 1e3),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nboot-from-artifact is {speedup:.1}x faster than the inline-quantize FLOOR \
+         (rotation fold + weight grid only; the full pipeline adds observation, \
+         calibration, and fine-tuning)"
+    );
+    assert!(
+        speedup >= 5.0,
+        "artifact boot must be ≥5x faster than inline quantization (got {speedup:.2}x)"
+    );
+
+    // --- optional end-to-end on real artifacts ---------------------------
+    let mut real_quant_s = 0.0;
+    let mut real_boot_s = 0.0;
+    if prefixquant::artifacts_dir().join("manifest.json").exists() {
+        match real_model_comparison(smoke) {
+            Ok((q, l)) => {
+                real_quant_s = q;
+                real_boot_s = l;
+                println!(
+                    "real model: inline quantize {q:.2}s vs artifact boot {l:.3}s \
+                     ({:.1}x)",
+                    q / l.max(1e-9)
+                );
+                assert!(
+                    q / l.max(1e-9) >= 5.0,
+                    "real-model artifact boot must be ≥5x faster (got {:.2}x)",
+                    q / l.max(1e-9)
+                );
+            }
+            Err(e) => println!("skipping real-model comparison: {e:#}"),
+        }
+    } else {
+        println!("(real artifacts absent — synthetic floor only; run `make artifacts` for more)");
+    }
+
+    emit_bench_json(
+        "quant_artifact",
+        &[
+            ("inline_quantize_floor_ms", inline.median_s * 1e3),
+            ("artifact_boot_ms", boot.median_s * 1e3),
+            ("cold_start_speedup", speedup),
+            ("real_inline_quantize_s", real_quant_s),
+            ("real_artifact_boot_s", real_boot_s),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
+}

@@ -161,6 +161,9 @@ pub struct EngineStats {
     pub cancelled: usize,
     /// token-less requests resubmitted after an engine rebuild
     pub retries: usize,
+    /// model-level reloads by the server on this engine's lineage (stats are
+    /// carried across rebuilds, so the counter survives the engine swap)
+    pub model_reloads: usize,
     pub generated_tokens: usize,
     pub prefill_tokens: usize,
     pub sum_ttft_s: f64,
@@ -172,6 +175,36 @@ pub struct EngineStats {
     pub t_decode_s: f64,
     /// per-priority-class counters (index = `Priority::index()`)
     pub per_class: [ClassMetrics; Priority::COUNT],
+}
+
+impl EngineStats {
+    /// Server-facing snapshot of the accumulated counters.  Live-engine
+    /// fields (`active_slots`, KV byte gauges) are zero here — only
+    /// [`ContinuousEngine::metrics`] can fill them; this is the single
+    /// mapping both it and the server's no-engine paths share.
+    pub fn to_metrics(&self) -> Metrics {
+        Metrics {
+            requests: self.admitted,
+            batches: self.prefill_calls,
+            generated_tokens: self.generated_tokens,
+            prefill_tokens: self.prefill_tokens,
+            sum_ttft_s: self.sum_ttft_s,
+            sum_queue_s: self.sum_queue_s,
+            sum_prefill_s: self.t_prefill_s,
+            sum_decode_s: self.t_decode_s,
+            sum_busy_s: self.t_prefill_s + self.t_decode_s,
+            sum_dispatch_skew_s: self.sum_dispatch_skew_s,
+            active_slots: 0,
+            kv_resident_bytes: 0,
+            kv_used_bytes: 0,
+            deferred_admissions: self.deferred_admissions,
+            preemptions: self.preemptions,
+            cancelled: self.cancelled,
+            retries: self.retries,
+            model_reloads: self.model_reloads,
+            by_class: self.per_class,
+        }
+    }
 }
 
 /// Backend prefill contract check, shared by the admission wave and the
@@ -964,25 +997,10 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
     /// queue-wait sums, which are both recorded at first admission (completed
     /// would understate the denominator while slots are still decoding).
     pub fn metrics(&self) -> Metrics {
-        Metrics {
-            requests: self.stats.admitted,
-            batches: self.stats.prefill_calls,
-            generated_tokens: self.stats.generated_tokens,
-            prefill_tokens: self.stats.prefill_tokens,
-            sum_ttft_s: self.stats.sum_ttft_s,
-            sum_queue_s: self.stats.sum_queue_s,
-            sum_prefill_s: self.stats.t_prefill_s,
-            sum_decode_s: self.stats.t_decode_s,
-            sum_busy_s: self.stats.t_prefill_s + self.stats.t_decode_s,
-            sum_dispatch_skew_s: self.stats.sum_dispatch_skew_s,
-            active_slots: self.slots.iter().filter(|s| s.is_some()).count(),
-            kv_resident_bytes: self.kv.resident_kv_bytes(),
-            kv_used_bytes: self.kv.used_kv_bytes(),
-            deferred_admissions: self.stats.deferred_admissions,
-            preemptions: self.stats.preemptions,
-            cancelled: self.stats.cancelled,
-            retries: self.stats.retries,
-            by_class: self.stats.per_class,
-        }
+        let mut m = self.stats.to_metrics();
+        m.active_slots = self.slots.iter().filter(|s| s.is_some()).count();
+        m.kv_resident_bytes = self.kv.resident_kv_bytes();
+        m.kv_used_bytes = self.kv.used_kv_bytes();
+        m
     }
 }

@@ -286,11 +286,48 @@ pub struct Metrics {
     pub cancelled: usize,
     /// token-less in-flight requests resubmitted after an engine rebuild
     pub retries: usize,
+    /// model-level reloads: the worker re-invoked its model factory (e.g.
+    /// re-read the QuantArtifact) after an engine rebuild on the same model
+    /// failed — the pipeline never re-runs on this path
+    pub model_reloads: usize,
     /// per-priority-class breakdown (index = `Priority::index()`)
     pub by_class: [ClassMetrics; Priority::COUNT],
 }
 
 impl Metrics {
+    /// Accumulate another worker's counters into this one (multi-server
+    /// aggregation).  Lives next to the struct so a new field cannot be
+    /// silently dropped from aggregates — extend this when extending
+    /// `Metrics`.
+    pub fn merge(&mut self, m: &Metrics) {
+        self.requests += m.requests;
+        self.batches += m.batches;
+        self.generated_tokens += m.generated_tokens;
+        self.prefill_tokens += m.prefill_tokens;
+        self.sum_ttft_s += m.sum_ttft_s;
+        self.sum_queue_s += m.sum_queue_s;
+        self.sum_prefill_s += m.sum_prefill_s;
+        self.sum_decode_s += m.sum_decode_s;
+        self.sum_busy_s += m.sum_busy_s;
+        self.sum_dispatch_skew_s += m.sum_dispatch_skew_s;
+        self.active_slots += m.active_slots;
+        self.kv_resident_bytes += m.kv_resident_bytes;
+        self.kv_used_bytes += m.kv_used_bytes;
+        self.deferred_admissions += m.deferred_admissions;
+        self.preemptions += m.preemptions;
+        self.cancelled += m.cancelled;
+        self.retries += m.retries;
+        self.model_reloads += m.model_reloads;
+        for (d, c) in self.by_class.iter_mut().zip(&m.by_class) {
+            d.requests += c.requests;
+            d.completed += c.completed;
+            d.sum_ttft_s += c.sum_ttft_s;
+            d.sum_queue_s += c.sum_queue_s;
+            d.preemptions += c.preemptions;
+            d.cancelled += c.cancelled;
+        }
+    }
+
     /// Mean per-request time-to-first-token (includes queue wait).
     pub fn mean_ttft(&self) -> f64 {
         if self.requests == 0 {
@@ -372,6 +409,26 @@ mod tests {
         m.sum_decode_s = 0.1; // direct clock wins over the residue
         assert!((m.decode_tps() - 100.0).abs() < 1e-9);
         assert!(m.decode_tps() >= 0.0);
+    }
+
+    #[test]
+    fn merge_aggregates_counters_and_classes() {
+        let mut a = Metrics::default();
+        a.requests = 1;
+        a.model_reloads = 1;
+        a.sum_ttft_s = 0.5;
+        a.by_class[Priority::Interactive.index()].completed = 1;
+        let mut b = Metrics::default();
+        b.requests = 2;
+        b.generated_tokens = 7;
+        b.sum_ttft_s = 0.25;
+        b.by_class[Priority::Interactive.index()].completed = 4;
+        a.merge(&b);
+        assert_eq!(a.requests, 3);
+        assert_eq!(a.generated_tokens, 7);
+        assert_eq!(a.model_reloads, 1);
+        assert!((a.sum_ttft_s - 0.75).abs() < 1e-12);
+        assert_eq!(a.by_class[Priority::Interactive.index()].completed, 5);
     }
 
     #[test]

@@ -27,18 +27,28 @@
 //! After a backend failure the worker rebuilds the engine; in-flight
 //! requests that have produced no tokens are resubmitted into the fresh
 //! engine (bounded by `ServerConfig::max_retries`) instead of errored.
+//! When even the engine rebuild fails on the current model, the worker
+//! re-invokes its model FACTORY (the `make_model` closure is `FnMut`) and
+//! serves on the fresh model — with an artifact-backed factory (see
+//! [`Server::start_from_artifact`]) that reload is O(read): the quantization
+//! pipeline never runs on the recovery path.  Consecutive no-progress
+//! reloads are bounded so a deterministically-broken model cannot loop.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::model::{Model, QuantMode};
+use crate::quant::model_state::{self, ArtifactMeta};
+use crate::runtime::Engine;
 
 use super::batcher::Batcher;
-use super::continuous::{ContinuousEngine, ModelBackend};
+use super::continuous::{ContinuousEngine, EngineStats, ModelBackend, RetryReq};
 use super::kvcache::KvLayout;
 use super::policy::{Fcfs, SchedulePolicy};
 use super::request::{FinishReason, GenRequest, GenResponse, Metrics, Reply, StreamEvent};
@@ -202,10 +212,13 @@ impl ServerConfigBuilder {
 
 impl Server {
     /// Start the worker thread. `make_model` runs on the worker (PJRT state
-    /// is created there and never crosses threads).
+    /// is created there and never crosses threads).  The factory is `FnMut`:
+    /// the continuous worker re-invokes it to RELOAD the model when an
+    /// engine rebuild on the current model fails (see the module docs) — an
+    /// artifact-backed factory makes that reload O(read).
     pub fn start<F>(make_model: F, cfg: ServerConfig) -> Result<Server>
     where
-        F: FnOnce() -> Result<Model> + Send + 'static,
+        F: FnMut() -> Result<Model> + Send + 'static,
     {
         let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
@@ -217,6 +230,40 @@ impl Server {
             .map_err(|_| anyhow!("worker died during startup"))?
             .map_err(|e| anyhow!("model init failed: {e}"))?;
         Ok(Server { tx, handle: Some(handle) })
+    }
+
+    /// Boot a server from a saved `QuantArtifact`: the worker loads the
+    /// artifact in O(read) — the quantization pipeline never runs — and the
+    /// same load is what a model-level recovery replays.  `cfg.mode` is
+    /// overridden with the artifact's recorded mode so the serving
+    /// executables can never mismatch the quantization that produced the
+    /// weights.  Metadata problems (wrong format version, legacy layout)
+    /// surface synchronously on the calling thread.
+    pub fn start_from_artifact(
+        artifacts_dir: PathBuf,
+        artifact_dir: PathBuf,
+        mut cfg: ServerConfig,
+    ) -> Result<Server> {
+        let meta = ArtifactMeta::peek(&artifact_dir)?;
+        cfg.mode = meta.mode;
+        let boot_mode = meta.mode;
+        Server::start(
+            move || {
+                let engine = Rc::new(Engine::new(&artifacts_dir)?);
+                let (model, mode) = model_state::load(engine, &artifact_dir)?;
+                if mode != boot_mode {
+                    // the artifact was re-quantized under a different scheme
+                    // while this server was up: the executables configured at
+                    // boot would silently mis-serve the new weights
+                    bail!(
+                        "artifact at {artifact_dir:?} changed quant mode \
+                         ({mode:?} != boot-time {boot_mode:?}); restart the server"
+                    );
+                }
+                Ok(model)
+            },
+            cfg,
+        )
     }
 
     /// Submit a request; the handle carries the aggregate-response channel
@@ -274,12 +321,12 @@ impl Drop for Server {
 }
 
 fn worker<F>(
-    make_model: F,
+    mut make_model: F,
     cfg: ServerConfig,
     rx: Receiver<Msg>,
     ready: Sender<Result<(), String>>,
 ) where
-    F: FnOnce() -> Result<Model>,
+    F: FnMut() -> Result<Model>,
 {
     let model = match make_model() {
         Ok(m) => {
@@ -293,7 +340,7 @@ fn worker<F>(
     };
     match cfg.engine {
         EngineKind::Batch => worker_batch(&model, &cfg, rx),
-        EngineKind::Continuous => worker_continuous(&model, &cfg, rx),
+        EngineKind::Continuous => worker_continuous(model, make_model, &cfg, rx),
     }
 }
 
@@ -419,16 +466,132 @@ fn worker_batch(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
     }
 }
 
-/// Continuous loop: admit between decode rounds, stream as tokens appear.
-fn worker_continuous(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
+/// How the serving loop for ONE model instance ended.
+enum ServeOutcome {
+    /// shutdown, or every client hung up — the worker is done
+    Done,
+    /// engine recovery on the current model failed: reload the model via the
+    /// factory and resume with the carried state
+    ReloadModel(Box<ModelReload>),
+}
+
+/// State carried across a model reload.
+struct ModelReload {
+    err: String,
+    /// requests to resubmit into the next model's engine
+    retry: Vec<RetryReq>,
+    /// accumulated engine counters (survive both engine and model swaps)
+    stats: EngineStats,
+    /// last metrics snapshot, for terminal reporting if the reload fails
+    last_metrics: Metrics,
+}
+
+/// Consecutive no-progress model reloads tolerated before the worker gives
+/// up (a deterministically-broken model must not reload forever).
+const MAX_MODEL_RELOADS: usize = 3;
+
+/// Decides whether the worker may reload its model again: reloads that made
+/// progress (the failed generation served at least one prefill/decode
+/// round) reset the budget; `MAX_MODEL_RELOADS` consecutive no-progress
+/// reloads end the worker.
+struct ReloadGovernor {
+    consecutive: usize,
+}
+
+impl ReloadGovernor {
+    fn new() -> ReloadGovernor {
+        ReloadGovernor { consecutive: 0 }
+    }
+
+    /// Record one reload request; returns whether reloading is still allowed.
+    fn allow(&mut self, progressed: bool) -> bool {
+        self.consecutive = if progressed { 1 } else { self.consecutive + 1 };
+        self.consecutive <= MAX_MODEL_RELOADS
+    }
+}
+
+/// Continuous worker: serve on a model until shutdown, reloading the model
+/// through the (FnMut) factory when engine-level recovery fails.  With an
+/// artifact-backed factory the reload re-reads the artifact — O(read), no
+/// pipeline.
+fn worker_continuous<F>(mut model: Model, mut make_model: F, cfg: &ServerConfig, rx: Receiver<Msg>)
+where
+    F: FnMut() -> Result<Model>,
+{
+    let mut carry: Vec<RetryReq> = Vec::new();
+    let mut carry_stats = EngineStats::default();
+    let mut governor = ReloadGovernor::new();
+    loop {
+        let progress_before = carry_stats.prefill_calls + carry_stats.decode_rounds;
+        match serve_on_model(&model, cfg, &rx, std::mem::take(&mut carry), carry_stats) {
+            ServeOutcome::Done => return,
+            ServeOutcome::ReloadModel(reload) => {
+                let ModelReload { err, retry, mut stats, last_metrics } = *reload;
+                let progressed = stats.prefill_calls + stats.decode_rounds > progress_before;
+                if !governor.allow(progressed) {
+                    let msg = format!(
+                        "{err}; giving up after {MAX_MODEL_RELOADS} model reloads \
+                         without progress"
+                    );
+                    for r in retry {
+                        r.reply.error(msg.clone());
+                    }
+                    drain_failing(&rx, &msg, last_metrics);
+                    return;
+                }
+                match make_model() {
+                    Ok(fresh) => {
+                        stats.model_reloads += 1;
+                        model = fresh;
+                        carry = retry;
+                        carry_stats = stats;
+                    }
+                    Err(e2) => {
+                        // cannot even reload the model: keep answering so
+                        // clients always get a terminal Error event, and keep
+                        // reporting the LAST accumulated metrics rather than
+                        // zeroed counters
+                        let msg = format!("{err}; model reload failed: {e2:#}");
+                        for r in retry {
+                            r.reply.error(msg.clone());
+                        }
+                        drain_failing(&rx, &msg, last_metrics);
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Serve on one model instance: admit between decode rounds, stream as
+/// tokens appear, rebuild the engine in place after a backend failure.
+/// Returns `ReloadModel` when recovery needs a fresh model.
+fn serve_on_model(
+    model: &Model,
+    cfg: &ServerConfig,
+    rx: &Receiver<Msg>,
+    carry: Vec<RetryReq>,
+    carry_stats: EngineStats,
+) -> ServeOutcome {
     let mut engine = match make_engine(model, cfg) {
         Ok(e) => e,
         Err(e) => {
-            // nothing can be served; report the error to every caller
-            drain_failing(rx, &format!("engine init failed: {e:#}"), Metrics::default());
-            return;
+            // the engine cannot even be built on this model (e.g. the prefix
+            // K/V no longer fits the cache): ask for a model reload, keeping
+            // the carried requests alive
+            return ServeOutcome::ReloadModel(Box::new(ModelReload {
+                err: format!("engine init failed: {e:#}"),
+                retry: carry,
+                last_metrics: carry_stats.to_metrics(),
+                stats: carry_stats,
+            }));
         }
     };
+    engine.stats = carry_stats;
+    for r in carry {
+        engine.resubmit(r);
+    }
     'outer: loop {
         // Idle → block for a message; busy → drain whatever is queued and
         // keep stepping (admission happens inside step()).
@@ -466,14 +629,18 @@ fn worker_continuous(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
                     engine = fresh;
                 }
                 Err(e2) => {
-                    // cannot rebuild: keep answering so clients always get a
-                    // terminal Error event instead of a dropped channel, and
-                    // keep reporting the LAST accumulated metrics rather
-                    // than zeroed counters
-                    engine.fail_all(&msg);
+                    // the MODEL itself may be poisoned: capture everything
+                    // recoverable and ask the worker to reload it (with an
+                    // artifact-backed factory this re-reads the artifact —
+                    // it never re-runs the pipeline)
                     let last = engine.metrics();
-                    drain_failing(rx, &format!("{msg}; rebuild failed: {e2:#}"), last);
-                    return;
+                    let retry = engine.drain_for_recovery(&msg, cfg.max_retries);
+                    return ServeOutcome::ReloadModel(Box::new(ModelReload {
+                        err: format!("{msg}; engine rebuild failed: {e2:#}"),
+                        retry,
+                        stats: engine.stats.clone(),
+                        last_metrics: last,
+                    }));
                 }
             }
         }
@@ -481,6 +648,7 @@ fn worker_continuous(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
     // shutdown (or channel hang-up) with work in flight: every remaining
     // request still gets a terminal Error event, never a dropped channel
     engine.fail_all("server shut down");
+    ServeOutcome::Done
 }
 
 fn make_engine<'m>(
@@ -518,7 +686,7 @@ fn handle_msg(m: Msg, engine: &mut ContinuousEngine<ModelBackend<'_>>) -> bool {
 /// Terminal state: answer every incoming request with an error, and stats
 /// probes with the last metrics accumulated before the failure (operators
 /// must not see zeroed counters after a crash).
-fn drain_failing(rx: Receiver<Msg>, msg: &str, last_metrics: Metrics) {
+fn drain_failing(rx: &Receiver<Msg>, msg: &str, last_metrics: Metrics) {
     while let Ok(m) = rx.recv() {
         match m {
             Msg::Gen(_, _, tx) => {
@@ -533,5 +701,63 @@ fn drain_failing(rx: Receiver<Msg>, msg: &str, last_metrics: Metrics) {
             }
             Msg::Shutdown => break,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn factory_error_surfaces_at_start() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c2 = calls.clone();
+        let r = Server::start(
+            move || {
+                c2.fetch_add(1, Ordering::SeqCst);
+                Err(anyhow!("no model in this test"))
+            },
+            ServerConfig::builder(QuantMode::Fp).build(),
+        );
+        let err = format!("{:#}", r.err().expect("start must fail"));
+        assert!(err.contains("no model in this test"), "got: {err}");
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "factory runs exactly once at startup");
+    }
+
+    #[test]
+    fn reload_governor_bounds_no_progress_loops() {
+        let mut g = ReloadGovernor::new();
+        for i in 0..MAX_MODEL_RELOADS {
+            assert!(g.allow(false), "reload {i} within the budget must be allowed");
+        }
+        assert!(
+            !g.allow(false),
+            "must give up after {MAX_MODEL_RELOADS} consecutive no-progress reloads"
+        );
+
+        // any progress resets the budget, so an occasionally-failing model
+        // that keeps serving can reload indefinitely
+        let mut g = ReloadGovernor::new();
+        for _ in 0..10 {
+            assert!(g.allow(true));
+        }
+        assert!(g.allow(false) && g.allow(false), "budget restarts after progress");
+        assert!(!g.allow(false));
+    }
+
+    #[test]
+    fn start_from_artifact_validates_metadata_synchronously() {
+        let dir = std::env::temp_dir().join("pq_server_no_artifact_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = Server::start_from_artifact(
+            PathBuf::from("artifacts"),
+            dir,
+            ServerConfig::builder(QuantMode::Static).build(),
+        );
+        let err = format!("{:#}", r.err().expect("must fail on a non-artifact dir"));
+        assert!(err.contains("not a quantization artifact"), "got: {err}");
     }
 }

@@ -4,17 +4,22 @@
 //!   info                         — artifacts / manifest summary
 //!   outliers  [--model M] [--rotate] [--prefix]
 //!                                — token-wise outlier report (Figs 2-4)
-//!   quantize  [--model M] [--scheme S] [--eval]
-//!                                — run the quantization pipeline (+PPL)
-//!   eval      [--model M] [--scheme S] [--tasks]
-//!                                — PPL / zero-shot accuracy
-//!   gen       [--model M] [--scheme S] [--prompt TEXT] [--n N]
-//!                                — generate via the serving coordinator
+//!   quantize  [--model M] [--scheme S] [--eval] [--save DIR]
+//!                                — run a quantization recipe; `--save`
+//!                                  writes a versioned QuantArtifact
+//!   eval      [--model M] [--scheme S] [--load DIR] [--tasks]
+//!                                — PPL / zero-shot accuracy (from a fresh
+//!                                  recipe run, or a saved artifact)
+//!   gen       [--model M] [--scheme S] [--load DIR] [--prompt TEXT] [--n N]
+//!                                — generate via the serving coordinator;
+//!                                  the server always boots from an artifact
+//!                                  (`--load`, or quantize-once + save)
 //!   serve                        — pointer to the serve_batch example
 //!
 //! Schemes: fp16, rtn, quarot, smoothquant, atom, prefixquant-wo-ft,
 //! prefixquant (default bit-widths W4A4KV4; --bits w,a,kv overrides).
 
+use std::path::PathBuf;
 use std::rc::Rc;
 use std::time::Duration;
 
@@ -23,16 +28,16 @@ use prefixquant::coordinator::{GenRequest, Server, ServerConfig};
 use prefixquant::data::{self, Language};
 use prefixquant::eval;
 use prefixquant::model::Model;
-use prefixquant::quant::{outlier, pipeline, SchemeConfig};
+use prefixquant::quant::{model_state, outlier, Precision, QuantArtifact, Recipe};
 use prefixquant::runtime::Engine;
 use prefixquant::tensor::IntTensor;
 use prefixquant::tokenizer::Tokenizer;
 use prefixquant::util::args::Args;
 use prefixquant::util::table::{f as ff, Table};
 
-fn parse_bits(args: &Args) -> Result<(usize, usize, usize)> {
+fn parse_bits(args: &Args) -> Result<Precision> {
     match args.get("bits") {
-        None => Ok((4, 4, 4)),
+        None => Ok(Precision::new(4, 4, 4)),
         Some(s) => {
             let parts: Vec<usize> = s
                 .split(',')
@@ -41,25 +46,20 @@ fn parse_bits(args: &Args) -> Result<(usize, usize, usize)> {
             if parts.len() != 3 {
                 bail!("--bits wants w,a,kv");
             }
-            Ok((parts[0], parts[1], parts[2]))
+            Ok(Precision::new(parts[0], parts[1], parts[2]))
         }
     }
 }
 
-fn scheme_by_name(
-    name: &str,
-    bits: (usize, usize, usize),
-    ft_epochs: usize,
-) -> Result<SchemeConfig> {
-    let (w, a, kv) = bits;
+fn recipe_by_name(name: &str, p: Precision, ft_epochs: usize) -> Result<Recipe> {
     Ok(match name {
-        "fp16" => SchemeConfig::fp16(),
-        "rtn" => SchemeConfig::rtn(w, a, kv),
-        "quarot" => SchemeConfig::quarot(w, a, kv),
-        "smoothquant" => SchemeConfig::smoothquant(w, a, kv),
-        "atom" => SchemeConfig::atom(w, a, kv),
-        "prefixquant-wo-ft" => SchemeConfig::prefixquant_wo_ft(w, a, kv),
-        "prefixquant" => SchemeConfig::prefixquant(w, a, kv, ft_epochs),
+        "fp16" => Recipe::fp16(),
+        "rtn" => Recipe::rtn(p),
+        "quarot" => Recipe::quarot(p),
+        "smoothquant" => Recipe::smoothquant(p),
+        "atom" => Recipe::atom(p),
+        "prefixquant-wo-ft" => Recipe::prefixquant_wo_ft(p),
+        "prefixquant" => Recipe::prefixquant(p, ft_epochs),
         other => bail!("unknown scheme {other:?}"),
     })
 }
@@ -92,20 +92,24 @@ fn eval_windows(c: &Ctx, model: &Model, max: usize) -> Result<Vec<Vec<i32>>> {
     Ok(data::windows(&ids, s, c.tok.spec.bos, max))
 }
 
-fn quantize_model(c: &Ctx, args: &Args) -> Result<(Model, SchemeConfig)> {
+fn quantize_model(
+    c: &Ctx,
+    args: &Args,
+) -> Result<(Model, Recipe, prefixquant::quant::RecipeReport)> {
     let mname = args.get_or("model", "pq-tiny").to_string();
     let sname = args.get_or("scheme", "prefixquant-wo-ft").to_string();
     let ft = args.usize_or("ft-epochs", 10)?;
-    let scheme = scheme_by_name(&sname, parse_bits(args)?, ft)?;
+    let recipe = recipe_by_name(&sname, parse_bits(args)?, ft)?;
     let mut model = Model::load(c.engine.clone(), &mname)?;
     let calib = calib_batch(c, &model)?;
-    eprintln!("quantizing {mname} with {}...", scheme.name);
-    let rep = pipeline::quantize(&mut model, &scheme, &calib, &c.tok)?;
     eprintln!(
-        "  prefix={:?} find={:.2}s grid={:.2}s ft={:.2}s total={:.2}s",
-        rep.prefix_rendered, rep.t_find_prefix, rep.t_grid, rep.t_ft, rep.t_total
+        "quantizing {mname} with {} (passes: {})...",
+        recipe.name,
+        recipe.pass_names().join(" → ")
     );
-    Ok((model, scheme))
+    let rep = recipe.run(&mut model, &calib, &c.tok)?;
+    eprintln!("  prefix={:?} | {}", rep.prefix_rendered, rep.timing_summary());
+    Ok((model, recipe, rep))
 }
 
 fn cmd_info(c: &Ctx) -> Result<()> {
@@ -184,37 +188,43 @@ fn cmd_outliers(c: &Ctx, args: &Args) -> Result<()> {
 }
 
 fn cmd_quantize(c: &Ctx, args: &Args) -> Result<()> {
-    let (model, scheme) = quantize_model(c, args)?;
+    let (model, recipe, rep) = quantize_model(c, args)?;
     if args.flag("eval") {
         let windows = eval_windows(c, &model, args.usize_or("windows", 24)?)?;
-        let ppl = eval::perplexity(&model, scheme.mode, &windows)?;
-        println!("{}: eval PPL = {:.4}", scheme.name, ppl);
+        let ppl = eval::perplexity(&model, recipe.mode, &windows)?;
+        println!("{}: eval PPL = {:.4}", recipe.name, ppl);
     }
     if let Some(dir) = args.get("save") {
-        prefixquant::quant::model_state::save(&model, scheme.mode, std::path::Path::new(dir))?;
-        println!("quantized model saved to {dir}");
+        let hash =
+            QuantArtifact::save_model(&model, recipe.mode, Some(&rep), std::path::Path::new(dir))?;
+        println!(
+            "artifact v{} saved to {dir} (recipe {:?}, {} passes, hash {hash:016x})",
+            prefixquant::quant::FORMAT_VERSION,
+            rep.recipe,
+            rep.stages.len()
+        );
     }
     Ok(())
 }
 
 fn cmd_eval(c: &Ctx, args: &Args) -> Result<()> {
-    if let Some(dir) = args.get("load") {
-        // evaluate a previously saved quantized model (no pipeline re-run)
-        let (model, mode) =
-            prefixquant::quant::model_state::load(c.engine.clone(), std::path::Path::new(dir))?;
-        let windows = eval_windows(c, &model, args.usize_or("windows", 24)?)?;
-        let ppl = eval::perplexity(&model, mode, &windows)?;
-        println!("loaded {dir}: PPL = {ppl:.4}");
-        return Ok(());
-    }
-    let (model, scheme) = quantize_model(c, args)?;
+    // either load a saved artifact (O(read), no pipeline) or run a recipe
+    let (model, mode, label) = if let Some(dir) = args.get("load") {
+        let (model, mode) = model_state::load(c.engine.clone(), std::path::Path::new(dir))?;
+        (model, mode, format!("loaded {dir}"))
+    } else {
+        let (model, recipe, _rep) = quantize_model(c, args)?;
+        let label = recipe.name.clone();
+        (model, recipe.mode, label)
+    };
     let windows = eval_windows(c, &model, args.usize_or("windows", 24)?)?;
-    let ppl = eval::perplexity(&model, scheme.mode, &windows)?;
-    println!("{}: PPL = {ppl:.4}", scheme.name);
+    let ppl = eval::perplexity(&model, mode, &windows)?;
+    println!("{label}: PPL = {ppl:.4}");
+    // --tasks runs for BOTH paths (the --load early-return used to skip it)
     if args.flag("tasks") {
         let scores = eval::run_all_tasks(
             &model,
-            scheme.mode,
+            mode,
             &c.lang,
             &c.tok,
             args.usize_or("items", 32)?,
@@ -231,28 +241,29 @@ fn cmd_eval(c: &Ctx, args: &Args) -> Result<()> {
 fn cmd_gen(c: &Ctx, args: &Args) -> Result<()> {
     let prompt_text = args.get_or("prompt", "the quick").to_string();
     let n = args.usize_or("n", 32)?;
-    let mname = args.get_or("model", "pq-tiny").to_string();
-    let sname = args.get_or("scheme", "prefixquant-wo-ft").to_string();
-    let ft = args.usize_or("ft-epochs", 10)?;
-    let scheme = scheme_by_name(&sname, parse_bits(args)?, ft)?;
-    let dir = prefixquant::artifacts_dir();
+    // the server always boots from a QuantArtifact: either one saved earlier
+    // (--load) or one produced right now by a single offline recipe run —
+    // the worker (and any post-failure model reload) only ever pays O(read)
+    let artifact_dir: PathBuf = match args.get("load") {
+        Some(dir) => PathBuf::from(dir),
+        None => {
+            let (model, recipe, rep) = quantize_model(c, args)?;
+            let dir = match args.get("save") {
+                Some(d) => PathBuf::from(d),
+                None => std::env::temp_dir().join(format!("pq_gen_art_{}", std::process::id())),
+            };
+            QuantArtifact::save_model(&model, recipe.mode, Some(&rep), &dir)?;
+            eprintln!("quantized once → artifact at {dir:?}; serving boots from it");
+            dir
+        }
+    };
     let tok = c.tok.clone();
-    let lang_spec = c.engine.manifest.corpus.clone();
-    let tok2 = tok.clone();
-    let mode = scheme.mode;
-    let server = Server::start(
-        move || {
-            let engine = Rc::new(Engine::new(&dir)?);
-            let lang = Language::new(lang_spec);
-            let mut model = Model::load(engine.clone(), &mname)?;
-            let (b, s) = model.fwd_geom()?;
-            let windows =
-                data::calibration_windows(&lang, |t| tok2.encode(t, false), s, b, tok2.spec.bos);
-            let calib = IntTensor::new(vec![b, s], windows.into_iter().flatten().collect())?;
-            pipeline::quantize(&mut model, &scheme, &calib, &tok2)?;
-            Ok(model)
-        },
-        ServerConfig::builder(mode)
+    // the serving mode comes from the artifact itself: start_from_artifact
+    // peeks the metadata and overrides the builder's mode seed
+    let server = Server::start_from_artifact(
+        prefixquant::artifacts_dir(),
+        artifact_dir,
+        ServerConfig::builder(prefixquant::model::QuantMode::Static)
             .engine(prefixquant::coordinator::EngineKind::Continuous)
             .max_batch(8)
             .batch_window(Duration::from_millis(5))

@@ -15,7 +15,17 @@
 //!   * [`finetune`]  — block-wise fine-tuning with Adam on quantization
 //!     parameters + weights (§5.2, EfficientQAT-style).
 //!   * [`smooth`]    — SmoothQuant-analog channel scaling baseline.
-//!   * [`pipeline`]  — end-to-end orchestration + timing breakdown (Table 10).
+//!   * [`recipe`]    — Quantization API v2: the composable pass pipeline
+//!     ([`recipe::QuantPass`] over a shared [`recipe::QuantCtx`]), typed
+//!     config ([`recipe::Precision`], [`recipe::Granularity`]) compiled by
+//!     [`recipe::Recipe::builder`] into an ordered pass list, all paper
+//!     presets as recipe constructors, per-pass timing in
+//!     [`recipe::RecipeReport`].
+//!   * [`model_state`] — the versioned [`model_state::QuantArtifact`]
+//!     (weights + scales + rotation + prefixed KV + recipe provenance +
+//!     content hash): the offline/online boundary serving boots from.
+//!   * [`pipeline`]  — `quantize()` entry point (bridges [`SchemeConfig`]
+//!     to a recipe) + the frozen v1 `quantize_legacy` golden reference.
 
 pub mod blockrun;
 pub mod model_state;
@@ -25,13 +35,25 @@ pub mod outlier;
 pub mod pipeline;
 pub mod prefix;
 pub mod quantizer;
+pub mod recipe;
 pub mod rotation;
 pub mod smooth;
+
+pub use model_state::{ArtifactMeta, QuantArtifact, FORMAT_VERSION};
+pub use recipe::{
+    Granularity, Precision, QuantCtx, QuantPass, Recipe, RecipeBuilder, RecipeReport, StageReport,
+};
 
 use crate::model::QuantMode;
 
 /// A complete quantization scheme — every baseline and ablation in the paper
 /// is a point in this configuration space (Tables 3-6, 13-15).
+///
+/// This is the LEGACY (v1) flat configuration, retained so
+/// `pipeline::quantize_legacy` stays frozen for the golden parity suite and
+/// old call sites keep working through `pipeline::quantize` (which bridges
+/// via [`Recipe::from_scheme`]).  New code should use [`Recipe`] presets or
+/// [`Recipe::builder`] with typed [`Precision`]/[`Granularity`] instead.
 #[derive(Debug, Clone)]
 pub struct SchemeConfig {
     pub name: String,

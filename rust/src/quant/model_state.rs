@@ -1,30 +1,245 @@
-//! Persist / restore a quantized model (the deployable artifact).
+//! The versioned, deployable quantization artifact ([`QuantArtifact`]).
 //!
-//! `save` writes the post-pipeline state — folded+quantized weights, static
-//! scales, online rotation matrices, prefixed tokens and their KV — into a
-//! directory; `load` restores a ready-to-serve [`Model`] without re-running
-//! the pipeline (the paper's "quantize once, deploy" story).
+//! Quantization API v2 makes the quantized model a first-class asset — the
+//! offline/online boundary of the system: a recipe run produces weights +
+//! static act/KV scales + rotation state + prefixed tokens and their
+//! materialized K/V + recipe provenance, all captured into a directory that
+//! serving loads in O(read) instead of re-running the pipeline (the paper's
+//! "quantize once, deploy" story; IntactKV and CushionCache treat the tuned
+//! prefix the same way).
+//!
+//! On disk:
+//!
+//! ```text
+//!   <dir>/artifact.json     — ArtifactMeta: format version, model name,
+//!                             mode, recipe provenance (pass names + per-pass
+//!                             seconds), precision, prefix tokens, content
+//!                             hash of the tensor files
+//!   <dir>/weights.bin       — folded + fake-quantized weights (WeightStore)
+//!   <dir>/quant_state.bin   — act/KV scales, qmax, R3/R4, prefix K/V
+//! ```
+//!
+//! Versioning rules: [`FORMAT_VERSION`] is checked on load and a mismatch is
+//! a hard, descriptive error (no silent best-effort reads).  The content
+//! hash (FNV-1a over both tensor files) is verified on load, so a truncated
+//! or bit-flipped artifact is rejected before any tensor reaches a model.
+//! [`ArtifactMeta::peek`] reads metadata only (mode lookup for server
+//! configs) without paying for tensors or hashing.
+//!
+//! The artifact's prefix K/V is exactly what
+//! `KvCache::install_prefix` writes into the paged cache's refcounted
+//! shared-prefix pages — [`QuantArtifact::prefix_state`] hands it over
+//! without a `Model` in the loop.
 
 use std::path::Path;
 use std::rc::Rc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use crate::config::ModelConfig;
 use crate::model::{Model, PrefixState, QuantMode, QuantState};
 use crate::runtime::{Engine, WeightStore};
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
 
+use super::recipe::{Precision, RecipeReport};
+
+/// Artifact format version written by this build (and the only one it reads).
+pub const FORMAT_VERSION: u32 = 2;
+
 const STATE_FILE: &str = "quant_state.bin";
 const WEIGHTS_FILE: &str = "weights.bin";
-const META_FILE: &str = "quantized.json";
+const META_FILE: &str = "artifact.json";
+/// Metadata file of the pre-v2 (PR 0-3) save format, detected for a clear
+/// migration error.
+const LEGACY_META_FILE: &str = "quantized.json";
 
-pub fn save(model: &Model, mode: QuantMode, dir: &Path) -> Result<()> {
-    std::fs::create_dir_all(dir)?;
-    model.weights.save(&dir.join(WEIGHTS_FILE))?;
+fn mode_to_str(mode: QuantMode) -> &'static str {
+    match mode {
+        QuantMode::Fp => "fp",
+        QuantMode::Static => "static",
+        QuantMode::Dynamic => "dynamic",
+    }
+}
+
+fn mode_from_str(s: &str) -> Result<QuantMode> {
+    match s {
+        "fp" => Ok(QuantMode::Fp),
+        "static" => Ok(QuantMode::Static),
+        "dynamic" => Ok(QuantMode::Dynamic),
+        other => bail!("artifact metadata has unknown quant mode {other:?}"),
+    }
+}
+
+/// FNV-1a 64-bit, chained across calls via `h`.
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Content hash over the artifact's serialized tensor stores (order:
+/// weights, state).
+fn content_hash(weights_bytes: &[u8], state_bytes: &[u8]) -> u64 {
+    fnv1a(fnv1a(FNV_OFFSET, weights_bytes), state_bytes)
+}
+
+/// Provenance + identity of a [`QuantArtifact`] (the `artifact.json` body).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub format_version: u32,
+    /// base checkpoint name in the artifacts manifest
+    pub model: String,
+    /// activation/KV mode the serving executables must run
+    pub mode: QuantMode,
+    /// recipe name that produced this artifact ("(unrecorded)" for captures
+    /// without a report)
+    pub recipe: String,
+    /// ordered pass names of the producing recipe
+    pub passes: Vec<String>,
+    /// wall seconds per pass, aligned with `passes` (Table 10 provenance)
+    pub stage_seconds: Vec<f64>,
+    pub precision: Option<Precision>,
+    pub rotated: bool,
+    pub prefix_tokens: Vec<i32>,
+    pub n_prefix: i32,
+    pub n_ctx_sinks: i32,
+    /// FNV-1a over weights.bin + quant_state.bin, verified on load
+    pub content_hash: u64,
+}
+
+impl ArtifactMeta {
+    /// Read ONLY the metadata of an artifact directory: format-version
+    /// checked, content hash NOT verified (no tensor IO).  Use for cheap
+    /// mode/provenance lookups; a full [`QuantArtifact::load`] still
+    /// verifies integrity before any tensor is used.
+    pub fn peek(dir: &Path) -> Result<ArtifactMeta> {
+        let meta_path = dir.join(META_FILE);
+        if !meta_path.exists() {
+            if dir.join(LEGACY_META_FILE).exists() {
+                bail!(
+                    "{dir:?} holds a pre-v2 quantized model ({LEGACY_META_FILE}); \
+                     re-run `pq quantize --save` to produce a versioned artifact"
+                );
+            }
+            bail!("{dir:?} is not a quantization artifact (no {META_FILE})");
+        }
+        let text = std::fs::read_to_string(&meta_path)?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("{META_FILE} in {dir:?} is not valid JSON"))?;
+        // gate on the version BEFORE the full field parse, so a future
+        // format with a different schema still gets the descriptive
+        // version error rather than a missing-key parse failure
+        let version = j.get("format_version")?.as_i64()? as u32;
+        if version != FORMAT_VERSION {
+            bail!(
+                "artifact {dir:?} has format v{version}, this build reads v{FORMAT_VERSION}; \
+                 re-create it with a matching `pq quantize --save`"
+            );
+        }
+        ArtifactMeta::from_json(&j).with_context(|| format!("{META_FILE} in {dir:?} is malformed"))
+    }
+
+    fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        let precision = match j.opt("precision") {
+            Some(Json::Null) | None => None,
+            Some(p) => Some(Precision::new(
+                p.get("w")?.as_usize()?,
+                p.get("a")?.as_usize()?,
+                p.get("kv")?.as_usize()?,
+            )),
+        };
+        let hash_text = j.get("content_hash")?.as_str()?;
+        let content_hash = u64::from_str_radix(hash_text, 16)
+            .map_err(|e| anyhow!("bad content_hash {hash_text:?}: {e}"))?;
+        Ok(ArtifactMeta {
+            format_version: j.get("format_version")?.as_i64()? as u32,
+            model: j.get("model")?.as_str()?.to_string(),
+            mode: mode_from_str(j.get("mode")?.as_str()?)?,
+            recipe: j.get("recipe")?.as_str()?.to_string(),
+            passes: j
+                .get("passes")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            stage_seconds: j
+                .get("stage_seconds")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64())
+                .collect::<Result<_>>()?,
+            precision,
+            rotated: j.get("rotated")?.as_bool()?,
+            prefix_tokens: j
+                .get("prefix_tokens")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_i64()? as i32))
+                .collect::<Result<_>>()?,
+            n_prefix: j.get("n_prefix")?.as_i64()? as i32,
+            n_ctx_sinks: j.get("n_ctx_sinks")?.as_i64()? as i32,
+            content_hash,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("format_version", json::num(self.format_version as f64)),
+            ("model", json::s(&self.model)),
+            ("mode", json::s(mode_to_str(self.mode))),
+            ("recipe", json::s(&self.recipe)),
+            (
+                "passes",
+                Json::Arr(self.passes.iter().map(|p| json::s(p)).collect()),
+            ),
+            (
+                "stage_seconds",
+                Json::Arr(self.stage_seconds.iter().map(|&s| json::num(s)).collect()),
+            ),
+            (
+                "precision",
+                match &self.precision {
+                    None => Json::Null,
+                    Some(p) => json::obj(vec![
+                        ("w", json::num(p.w as f64)),
+                        ("a", json::num(p.a as f64)),
+                        ("kv", json::num(p.kv as f64)),
+                    ]),
+                },
+            ),
+            ("rotated", Json::Bool(self.rotated)),
+            (
+                "prefix_tokens",
+                Json::Arr(self.prefix_tokens.iter().map(|&t| json::num(t as f64)).collect()),
+            ),
+            ("n_prefix", json::num(self.n_prefix as f64)),
+            ("n_ctx_sinks", json::num(self.n_ctx_sinks as f64)),
+            ("content_hash", json::s(&format!("{:016x}", self.content_hash))),
+        ])
+    }
+}
+
+/// A complete quantized deployment: metadata + the two tensor stores.
+#[derive(Debug)]
+pub struct QuantArtifact {
+    pub meta: ArtifactMeta,
+    /// folded + fake-quantized model weights
+    pub weights: WeightStore,
+    /// act/KV scales, qmax scalars, online rotations, prefix K/V
+    pub state: WeightStore,
+}
+
+/// The quant/prefix state tensors as a store (small: scales, qmax,
+/// rotations, prefix K/V).
+fn state_store(model: &Model) -> WeightStore {
     let q = &model.quant;
     let p = &model.prefix;
-    let state = WeightStore::from_pairs(vec![
+    WeightStore::from_pairs(vec![
         ("act_scales".into(), q.act_scales.clone()),
         ("kv_scales".into(), q.kv_scales.clone()),
         ("qmax_act".into(), q.qmax_act.clone()),
@@ -33,63 +248,180 @@ pub fn save(model: &Model, mode: QuantMode, dir: &Path) -> Result<()> {
         ("r4".into(), q.r4.clone()),
         ("prefix_k".into(), p.k.clone()),
         ("prefix_v".into(), p.v.clone()),
-    ]);
-    state.save(&dir.join(STATE_FILE))?;
-    let meta = json::obj(vec![
-        ("model", json::s(&model.name)),
-        ("mode", json::s(match mode {
-            QuantMode::Fp => "fp",
-            QuantMode::Static => "static",
-            QuantMode::Dynamic => "dynamic",
-        })),
-        ("rotated", Json::Bool(q.rotated)),
-        (
-            "prefix_tokens",
-            Json::Arr(p.tokens.iter().map(|&t| json::num(t as f64)).collect()),
-        ),
-        ("n_prefix", json::num(p.n_prefix as f64)),
-        ("n_ctx_sinks", json::num(p.n_ctx_sinks as f64)),
-    ]);
-    std::fs::write(dir.join(META_FILE), meta.to_string())?;
-    Ok(())
+    ])
 }
 
+/// Provenance metadata for a model + optional recipe report (hash unset).
+fn meta_of(model: &Model, mode: QuantMode, report: Option<&RecipeReport>) -> ArtifactMeta {
+    let (recipe, passes, stage_seconds, precision) = match report {
+        Some(r) => (
+            r.recipe.clone(),
+            r.stages.iter().map(|s| s.pass.clone()).collect(),
+            r.stages.iter().map(|s| s.seconds).collect(),
+            Some(r.precision),
+        ),
+        None => ("(unrecorded)".to_string(), Vec::new(), Vec::new(), None),
+    };
+    ArtifactMeta {
+        format_version: FORMAT_VERSION,
+        model: model.name.clone(),
+        mode,
+        recipe,
+        passes,
+        stage_seconds,
+        precision,
+        rotated: model.quant.rotated,
+        prefix_tokens: model.prefix.tokens.clone(),
+        n_prefix: model.prefix.n_prefix,
+        n_ctx_sinks: model.prefix.n_ctx_sinks,
+        content_hash: 0, // recorded by save, verified by load
+    }
+}
+
+/// Serialize + hash + write one artifact (single serialization, no
+/// read-back); returns the meta with the hash recorded.
+fn write_artifact(
+    mut meta: ArtifactMeta,
+    weights: &WeightStore,
+    state: &WeightStore,
+    dir: &Path,
+) -> Result<u64> {
+    std::fs::create_dir_all(dir)?;
+    let wb = weights.to_bytes();
+    let sb = state.to_bytes();
+    let hash = content_hash(&wb, &sb);
+    std::fs::write(dir.join(WEIGHTS_FILE), &wb)?;
+    std::fs::write(dir.join(STATE_FILE), &sb)?;
+    meta.content_hash = hash;
+    std::fs::write(dir.join(META_FILE), meta.to_json().to_string())?;
+    Ok(hash)
+}
+
+impl QuantArtifact {
+    /// Snapshot a quantized model (post-recipe) into an OWNED artifact
+    /// (clones the weight store — use [`QuantArtifact::save_model`] to write
+    /// straight from a model without the clone).  Pass the recipe's report
+    /// to record provenance (recipe name, pass list, per-pass seconds,
+    /// precision); `None` records "(unrecorded)".
+    pub fn capture(model: &Model, mode: QuantMode, report: Option<&RecipeReport>) -> QuantArtifact {
+        QuantArtifact {
+            meta: meta_of(model, mode, report),
+            weights: model.weights.clone(),
+            state: state_store(model),
+        }
+    }
+
+    /// Serialize a quantized model directly to `dir` — the peak-memory-
+    /// friendly save path (no weight-store clone): the model's tensors are
+    /// serialized and hashed in place.  Returns the recorded content hash.
+    pub fn save_model(
+        model: &Model,
+        mode: QuantMode,
+        report: Option<&RecipeReport>,
+        dir: &Path,
+    ) -> Result<u64> {
+        write_artifact(meta_of(model, mode, report), &model.weights, &state_store(model), dir)
+    }
+
+    /// Write the artifact; records the content hash in both the metadata
+    /// file and `self.meta`, and returns it.  The hash is computed over the
+    /// exact serialized bytes that hit the disk (single serialization — no
+    /// read-back).
+    pub fn save(&mut self, dir: &Path) -> Result<u64> {
+        let hash = write_artifact(self.meta.clone(), &self.weights, &self.state, dir)?;
+        self.meta.content_hash = hash;
+        Ok(hash)
+    }
+
+    /// Load and VALIDATE an artifact: metadata parse, format-version check,
+    /// content-hash verification, then the tensor stores — each file read
+    /// from disk exactly once (hashing and parsing share the buffer).
+    /// Every failure mode is a descriptive error (wrong version,
+    /// corruption, missing files, legacy format) — never a silently wrong
+    /// model.
+    pub fn load(dir: &Path) -> Result<QuantArtifact> {
+        let meta = ArtifactMeta::peek(dir)?;
+        let wpath = dir.join(WEIGHTS_FILE);
+        let spath = dir.join(STATE_FILE);
+        let wb = std::fs::read(&wpath)
+            .with_context(|| format!("artifact {dir:?} is missing {WEIGHTS_FILE}"))?;
+        let sb = std::fs::read(&spath)
+            .with_context(|| format!("artifact {dir:?} is missing {STATE_FILE}"))?;
+        let actual = content_hash(&wb, &sb);
+        if actual != meta.content_hash {
+            bail!(
+                "artifact {dir:?} is corrupted: content hash {actual:016x} does not match \
+                 recorded {:016x} (re-create the artifact)",
+                meta.content_hash
+            );
+        }
+        let weights = WeightStore::from_bytes(&wb, &wpath)?;
+        let state = WeightStore::from_bytes(&sb, &spath)?;
+        Ok(QuantArtifact { meta, weights, state })
+    }
+
+    /// The prefixed-tokens state carried by this artifact, ready for
+    /// `KvCache::install_prefix` (which maps it into the paged cache's
+    /// refcounted shared-prefix pages) — no `Model` required.
+    pub fn prefix_state(&self, cfg: &ModelConfig) -> Result<PrefixState> {
+        let get = |n: &str| -> Result<Tensor> {
+            self.state.get(n).cloned().ok_or_else(|| anyhow!("{STATE_FILE} missing {n}"))
+        };
+        let k = get("prefix_k")?;
+        let want = [cfg.n_layers, cfg.n_heads, cfg.max_prefix, cfg.d_head];
+        if k.shape != want {
+            bail!("artifact prefix K shape {:?} does not match model geometry {want:?}", k.shape);
+        }
+        Ok(PrefixState {
+            tokens: self.meta.prefix_tokens.clone(),
+            n_prefix: self.meta.n_prefix,
+            n_ctx_sinks: self.meta.n_ctx_sinks,
+            k,
+            v: get("prefix_v")?,
+        })
+    }
+
+    /// Bind the artifact to an engine: load the base checkpoint shell,
+    /// overwrite weights + quant/prefix state, upload, freeze.  This is the
+    /// serving boot path — O(read + upload), no pipeline.
+    pub fn into_model(self, engine: Rc<Engine>) -> Result<(Model, QuantMode)> {
+        let QuantArtifact { meta, weights, state } = self;
+        let mut model = Model::load(engine, &meta.model)
+            .with_context(|| format!("artifact's base model {:?} not in manifest", meta.model))?;
+        model.weights = weights;
+        let get = |n: &str| -> Result<Tensor> {
+            state.get(n).cloned().ok_or_else(|| anyhow!("{STATE_FILE} missing {n}"))
+        };
+        model.quant = QuantState {
+            act_scales: get("act_scales")?,
+            kv_scales: get("kv_scales")?,
+            qmax_act: get("qmax_act")?,
+            qmax_kv: get("qmax_kv")?,
+            r3: get("r3")?,
+            r4: get("r4")?,
+            rotated: meta.rotated,
+        };
+        model.prefix = PrefixState {
+            tokens: meta.prefix_tokens.clone(),
+            n_prefix: meta.n_prefix,
+            n_ctx_sinks: meta.n_ctx_sinks,
+            k: get("prefix_k")?,
+            v: get("prefix_v")?,
+        };
+        model.refresh_weights()?;
+        model.freeze()?;
+        Ok((model, meta.mode))
+    }
+}
+
+/// Save a quantized model without recipe provenance (v1-compatible shape).
+/// Prefer [`QuantArtifact::save_model`] with a report.
+pub fn save(model: &Model, mode: QuantMode, dir: &Path) -> Result<()> {
+    QuantArtifact::save_model(model, mode, None, dir).map(|_| ())
+}
+
+/// Load a ready-to-serve model from an artifact directory (O(read), the
+/// pipeline never runs): validate, bind to `engine`, freeze.
 pub fn load(engine: Rc<Engine>, dir: &Path) -> Result<(Model, QuantMode)> {
-    let meta = Json::parse(&std::fs::read_to_string(dir.join(META_FILE))?)?;
-    let name = meta.get("model")?.as_str()?.to_string();
-    let mode = match meta.get("mode")?.as_str()? {
-        "static" => QuantMode::Static,
-        "dynamic" => QuantMode::Dynamic,
-        _ => QuantMode::Fp,
-    };
-    let mut model = Model::load(engine, &name)?;
-    model.weights = WeightStore::load(&dir.join(WEIGHTS_FILE))?;
-    let state = WeightStore::load(&dir.join(STATE_FILE))?;
-    let get = |n: &str| -> Result<Tensor> {
-        state.get(n).cloned().ok_or_else(|| anyhow!("{STATE_FILE} missing {n}"))
-    };
-    model.quant = QuantState {
-        act_scales: get("act_scales")?,
-        kv_scales: get("kv_scales")?,
-        qmax_act: get("qmax_act")?,
-        qmax_kv: get("qmax_kv")?,
-        r3: get("r3")?,
-        r4: get("r4")?,
-        rotated: meta.get("rotated")?.as_bool()?,
-    };
-    model.prefix = PrefixState {
-        tokens: meta
-            .get("prefix_tokens")?
-            .as_arr()?
-            .iter()
-            .map(|v| Ok(v.as_i64()? as i32))
-            .collect::<Result<_>>()?,
-        n_prefix: meta.get("n_prefix")?.as_i64()? as i32,
-        n_ctx_sinks: meta.get("n_ctx_sinks")?.as_i64()? as i32,
-        k: get("prefix_k")?,
-        v: get("prefix_v")?,
-    };
-    model.refresh_weights()?;
-    model.freeze()?;
-    Ok((model, mode))
+    QuantArtifact::load(dir)?.into_model(engine)
 }

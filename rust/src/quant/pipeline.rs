@@ -1,19 +1,17 @@
-//! End-to-end PrefixQuant pipeline orchestration (+ Table 10 timings).
+//! Pipeline entry points (Quantization API v2).
 //!
-//! Order of operations (paper reproduction):
-//!   1. (baseline) SmoothQuant channel scaling, if configured;
-//!   2. rotation folding (R1/R2/R4 weight-side; R3/R4 online matrices);
-//!   3. observation #1 → outlier report → prefix selection → install
-//!      prefixed KV ("Find Prefixed Outliers", seconds);
-//!   4. observation #2 with the prefix in place → fp captures/targets;
-//!   5. host weight quantization (per-channel RTN or grid);
-//!   6. static-scale initialization: max-init, then per-head KV grid and
-//!      block-output coordinate-descent grid search;
-//!   7. optional block-wise fine-tuning.
+//! [`quantize`] is the one-call surface: it bridges a legacy
+//! [`SchemeConfig`] through [`Recipe::from_scheme`] and runs the composable
+//! pass pipeline (see [`super::recipe`]).  New code should construct a
+//! [`Recipe`] directly (presets or builder) and call `Recipe::run`.
+//!
+//! [`quantize_legacy`] is the frozen v1 implementation — the golden
+//! reference the parity suite (`tests/recipe_parity.rs`) compares every
+//! preset recipe against.  Do not modify it; change recipes instead.
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::model::{qmax_for_bits, Model, QuantMode};
 use crate::tensor::{IntTensor, Tensor};
@@ -24,11 +22,70 @@ use super::finetune::{self, FtCfg, FtReport};
 use super::outlier::{self, OutlierReport, ETA};
 use super::prefix;
 use super::quantizer;
+use super::recipe::{Recipe, RecipeReport};
 use super::rotation;
 use super::smooth;
 use super::SchemeConfig;
 
-/// Everything the repro harness wants to know about one pipeline run.
+/// Run the quantization pass pipeline for a legacy `SchemeConfig` on a
+/// freshly-loaded model.  `calib` is the [B,S] calibration batch (geometry
+/// of `fwd_obs`).  Equivalent to `Recipe::from_scheme(scheme).run(...)`.
+pub fn quantize(
+    model: &mut Model,
+    scheme: &SchemeConfig,
+    calib: &IntTensor,
+    tok: &Tokenizer,
+) -> Result<RecipeReport> {
+    Recipe::from_scheme(scheme).run(model, calib, tok)
+}
+
+/// Weight tensors that get quantized (all linear projections).
+pub const QUANT_WEIGHTS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+/// Quantize the projection weights host-side (legacy config surface).
+pub fn quantize_weights(model: &mut Model, scheme: &SchemeConfig) -> Result<()> {
+    quantize_weights_raw(
+        model,
+        scheme.w_bits,
+        scheme.w_group,
+        if scheme.grid_search { 40 } else { 1 },
+    )
+}
+
+/// Quantize the projection weights host-side: `w_bits` per-channel symmetric
+/// (or per-`group` along the input dim), `grid` scale candidates (1 = RTN).
+pub fn quantize_weights_raw(
+    model: &mut Model,
+    w_bits: usize,
+    w_group: Option<usize>,
+    grid: usize,
+) -> Result<()> {
+    if w_bits >= 16 {
+        return Ok(());
+    }
+    for li in 0..model.cfg.n_layers {
+        for t in QUANT_WEIGHTS {
+            let name = format!("layers.{li}.{t}");
+            let w = model.weights.get_mut(&name).ok_or_else(|| {
+                anyhow!("quantize_weights: tensor {name:?} missing from the model's weight store")
+            })?;
+            match w_group {
+                Some(g) => quantizer::quant_weight_per_group(w, w_bits, g, grid),
+                None => {
+                    quantizer::quant_weight_per_channel(w, w_bits, grid);
+                }
+            }
+        }
+    }
+    model.refresh_weights()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Frozen v1 pipeline (golden reference for the recipe parity suite)
+// ---------------------------------------------------------------------------
+
+/// Everything the v1 harness reported about one pipeline run.
 pub struct PipelineReport {
     pub scheme: SchemeConfig,
     pub pre_report: OutlierReport,
@@ -43,34 +100,20 @@ pub struct PipelineReport {
     pub t_total: f64,
 }
 
-/// Weight tensors that get quantized (all linear projections).
-pub const QUANT_WEIGHTS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
-
-/// Quantize the projection weights host-side.
-pub fn quantize_weights(model: &mut Model, scheme: &SchemeConfig) -> Result<()> {
-    if scheme.w_bits >= 16 {
-        return Ok(());
-    }
-    let grid = if scheme.grid_search { 40 } else { 1 };
-    for li in 0..model.cfg.n_layers {
-        for t in QUANT_WEIGHTS {
-            let name = format!("layers.{li}.{t}");
-            let w = model.weights.get_mut(&name).unwrap();
-            match scheme.w_group {
-                Some(g) => quantizer::quant_weight_per_group(w, scheme.w_bits, g, grid),
-                None => {
-                    quantizer::quant_weight_per_channel(w, scheme.w_bits, grid);
-                }
-            }
-        }
-    }
-    model.refresh_weights()?;
-    Ok(())
-}
-
-/// Run the full pipeline for `scheme` on a freshly-loaded model.
-/// `calib` is the [B,S] calibration batch (geometry of `fwd_obs`).
-pub fn quantize(
+/// The frozen v1 monolithic pipeline.  Kept verbatim as the golden reference
+/// that `tests/recipe_parity.rs` compares every preset [`Recipe`] against
+/// (identical PPL, prefix tokens, scales).  Order of operations:
+///
+///   1. (baseline) SmoothQuant channel scaling, if configured;
+///   2. rotation folding (R1/R2/R4 weight-side; R3/R4 online matrices);
+///   3. observation #1 → outlier report → prefix selection → install
+///      prefixed KV ("Find Prefixed Outliers", seconds);
+///   4. observation #2 with the prefix in place → fp captures/targets;
+///   5. host weight quantization (per-channel RTN or grid);
+///   6. static-scale initialization: max-init, then per-head KV grid and
+///      block-output coordinate-descent grid search;
+///   7. optional block-wise fine-tuning.
+pub fn quantize_legacy(
     model: &mut Model,
     scheme: &SchemeConfig,
     calib: &IntTensor,
@@ -137,8 +180,7 @@ pub fn quantize(
             );
         } else {
             // near-lossless 16-bit static: max-based per-head init
-            model.quant.kv_scales =
-                calibrate::kv_scales_grid(model, &obs, 16, 1);
+            model.quant.kv_scales = calibrate::kv_scales_grid(model, &obs, 16, 1);
         }
         if scheme.grid_search && scheme.a_bits < 16 {
             calibrate::act_scales_grid(model, &obs, &GridCfg::default())?;

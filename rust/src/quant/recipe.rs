@@ -1,0 +1,815 @@
+//! Composable quantization pass pipeline (Quantization API v2).
+//!
+//! The monolithic `pipeline::quantize()` is re-expressed as an ordered list
+//! of small passes over a shared [`QuantCtx`]:
+//!
+//! ```text
+//!   Recipe (typed config: Precision + Granularity + flags)
+//!     │  RecipeBuilder::build() compiles the config into passes
+//!     ▼
+//!   [smooth] → [rotate] → [find-prefix] → [re-observe]
+//!            → [weight-quant] → [grid-init] → [finetune]
+//!     │  each pass: run(&mut QuantCtx) -> StageReport (timed by the runner)
+//!     ▼
+//!   RecipeReport (per-pass timing — Table 10 generalized to any recipe —
+//!                 + outlier reports + prefix tokens + FT trajectory)
+//! ```
+//!
+//! [`QuantCtx`] owns a cached calibration observation (`fwd_obs` capture +
+//! outlier analysis).  Passes read it through [`QuantCtx::with_observation`];
+//! a pass that changes the model function (weights, rotations, prefix)
+//! declares [`QuantPass::invalidates_observation`] and the runner drops the
+//! cache after it.  This is what removes the redundant `observe_and_analyze`
+//! runs of the v1 pipeline: a pure-dynamic recipe (RTN/QuaRot/Atom without
+//! fine-tuning) now runs ZERO observations, and every other recipe runs
+//! exactly as many as its passes consume.
+//!
+//! All paper presets are recipe constructors ([`Recipe::fp16`],
+//! [`Recipe::rtn`], [`Recipe::quarot`], [`Recipe::smoothquant`],
+//! [`Recipe::atom`], [`Recipe::prefixquant_wo_ft`], [`Recipe::prefixquant`]);
+//! [`Recipe::from_scheme`] bridges the legacy [`SchemeConfig`] so the golden
+//! parity suite can compare against `pipeline::quantize_legacy`.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model::{qmax_for_bits, Model, QuantMode};
+use crate::tensor::{IntTensor, Tensor};
+use crate::tokenizer::Tokenizer;
+
+use super::calibrate::{self, GridCfg};
+use super::finetune::{self, FtCfg, FtReport};
+use super::outlier::{self, Observation, OutlierReport, ETA};
+use super::pipeline;
+use super::prefix;
+use super::rotation;
+use super::smooth;
+use super::{PrefixPolicy, SchemeConfig};
+
+/// Bit-widths of one scheme (weights / activations / KV cache; 16 = keep fp).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Precision {
+    pub w: usize,
+    pub a: usize,
+    pub kv: usize,
+}
+
+impl Precision {
+    /// Full precision (no quantization anywhere).
+    pub const FP16: Precision = Precision { w: 16, a: 16, kv: 16 };
+
+    pub fn new(w: usize, a: usize, kv: usize) -> Precision {
+        Precision { w, a, kv }
+    }
+
+    /// The paper's "W{w}A{a}KV{kv}" rendering.
+    pub fn label(&self) -> String {
+        format!("W{}A{}KV{}", self.w, self.a, self.kv)
+    }
+}
+
+/// Weight-quantization granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// per-output-channel symmetric (the paper's setting)
+    PerChannel,
+    /// per-group along the input dim (Atom-analog baseline)
+    PerGroup(usize),
+}
+
+/// What one pass did and how long it took (the runner stamps `seconds`, so a
+/// pass only fills `pass` and `detail`).  A [`RecipeReport`] holds one per
+/// executed pass — Table 10's breakdown generalized to any recipe.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub pass: String,
+    pub seconds: f64,
+    /// one-line summary of what the pass did
+    pub detail: String,
+}
+
+impl StageReport {
+    fn new(pass: &str, detail: String) -> StageReport {
+        StageReport { pass: pass.to_string(), seconds: 0.0, detail }
+    }
+}
+
+/// Shared state the passes operate on: the model being quantized, the
+/// calibration batch, and a cached observation (calibration forward capture +
+/// outlier analysis) so consecutive passes never re-run `fwd_obs` unless a
+/// pass invalidated it.
+pub struct QuantCtx<'a> {
+    pub model: &'a mut Model,
+    pub calib: &'a IntTensor,
+    pub tok: &'a Tokenizer,
+    pub precision: Precision,
+    pub mode: QuantMode,
+    /// outlier-detection threshold (η)
+    pub eta: f32,
+    /// analysis of the FIRST observation (legacy `pre_report`)
+    pub pre_report: Option<OutlierReport>,
+    /// analysis of the re-observation after a non-empty prefix was installed
+    pub post_report: Option<OutlierReport>,
+    /// prefixed tokens selected/installed by the find-prefix pass
+    pub prefix_tokens: Vec<i32>,
+    /// fine-tuning trajectory, when a finetune pass ran
+    pub ft: Option<FtReport>,
+    /// `fwd_obs` executions so far (the cache-efficiency observable)
+    observation_runs: usize,
+    cache: Option<(Observation, OutlierReport)>,
+}
+
+impl QuantCtx<'_> {
+    fn ensure_observed(&mut self) -> Result<()> {
+        if self.cache.is_none() {
+            let pair = outlier::observe_and_analyze(self.model, self.calib, self.eta)?;
+            self.observation_runs += 1;
+            self.cache = Some(pair);
+        }
+        Ok(())
+    }
+
+    /// Run `f` with the model and the current (cached) observation.  The
+    /// observation is captured on first use and reused until a pass
+    /// invalidates it.
+    pub fn with_observation<T>(
+        &mut self,
+        f: impl FnOnce(&mut Model, &Observation, &OutlierReport) -> Result<T>,
+    ) -> Result<T> {
+        self.ensure_observed()?;
+        let (obs, rep) = self.cache.take().expect("ensured above");
+        let out = f(&mut *self.model, &obs, &rep);
+        self.cache = Some((obs, rep));
+        out
+    }
+
+    /// The current observation's outlier analysis (cached like
+    /// [`QuantCtx::with_observation`]).
+    pub fn report(&mut self) -> Result<OutlierReport> {
+        self.ensure_observed()?;
+        Ok(self.cache.as_ref().expect("ensured above").1.clone())
+    }
+
+    /// Drop the cached observation (the model function changed).  The runner
+    /// calls this after every pass whose
+    /// [`QuantPass::invalidates_observation`] is true; a pass may also call
+    /// it directly for finer-grained control.
+    pub fn invalidate_observation(&mut self) {
+        self.cache = None;
+    }
+
+    pub fn observation_runs(&self) -> usize {
+        self.observation_runs
+    }
+}
+
+/// One composable quantization pass.
+pub trait QuantPass {
+    /// Stable pass name (keys [`RecipeReport::stage_seconds`]).
+    fn name(&self) -> &str;
+
+    /// Whether this pass changes the model function (weights, rotations,
+    /// prefix), so cached observations must be re-captured afterwards.
+    /// Passes that only set quantization scales return false: observations
+    /// run the fp `fwd_obs` path, which ignores them.
+    fn invalidates_observation(&self) -> bool {
+        false
+    }
+
+    /// Execute the pass.  `seconds` of the returned report is stamped by the
+    /// runner (wall time of this call).
+    fn run(&self, ctx: &mut QuantCtx) -> Result<StageReport>;
+}
+
+// ---------------------------------------------------------------------------
+// The seven passes
+// ---------------------------------------------------------------------------
+
+/// SmoothQuant-analog channel scaling (baseline; uses pre-rotation captures).
+struct SmoothPass {
+    alpha: f32,
+}
+
+impl QuantPass for SmoothPass {
+    fn name(&self) -> &str {
+        "smooth"
+    }
+
+    fn invalidates_observation(&self) -> bool {
+        true // norm gains and weights change
+    }
+
+    fn run(&self, ctx: &mut QuantCtx) -> Result<StageReport> {
+        let alpha = self.alpha;
+        ctx.with_observation(|model, obs, _| smooth::apply(model, obs, alpha))?;
+        Ok(StageReport::new(self.name(), format!("α={alpha} channel scaling (norm→linear)")))
+    }
+}
+
+/// Hadamard rotation folding (R1/R2/R4 weight-side, R3/R4 online).
+struct RotatePass;
+
+impl QuantPass for RotatePass {
+    fn name(&self) -> &str {
+        "rotate"
+    }
+
+    fn invalidates_observation(&self) -> bool {
+        true // weights move into the rotated basis
+    }
+
+    fn run(&self, ctx: &mut QuantCtx) -> Result<StageReport> {
+        let cfg = ctx.model.cfg.clone();
+        rotation::absorb_norm_gains(&cfg, &mut ctx.model.weights)?;
+        rotation::fold_rotations(&cfg, &mut ctx.model.weights)?;
+        let (r3, r4) = rotation::online_matrices(&ctx.model.cfg, true);
+        ctx.model.quant.r3 = r3;
+        ctx.model.quant.r4 = r4;
+        ctx.model.quant.rotated = true;
+        ctx.model.refresh_weights()?;
+        Ok(StageReport::new(self.name(), "R1/R2/R4 folded, R3/R4 online".into()))
+    }
+}
+
+/// Observe → select prefixed outlier tokens → materialize + install their KV
+/// (§5.1 "Find Prefixed Outliers"; the paper's ~1-minute offline step).
+struct FindPrefixPass {
+    policy: Option<PrefixPolicy>,
+}
+
+impl QuantPass for FindPrefixPass {
+    fn name(&self) -> &str {
+        "find-prefix"
+    }
+
+    // Invalidation is conditional (declared inside run): an EMPTY selection
+    // (the FirstN(0) ablation) leaves the model function unchanged, so the
+    // cached observation stays valid — exactly the v1 behavior.
+
+    fn run(&self, ctx: &mut QuantCtx) -> Result<StageReport> {
+        let report = ctx.report()?;
+        let toks = match &self.policy {
+            Some(p) => prefix::select_with_policy(&report, ctx.tok, p),
+            None => prefix::select_tokens(&report, ctx.tok),
+        };
+        prefix::install(ctx.model, &toks, ctx.tok.spec.pad)?;
+        let detail = if toks.is_empty() {
+            "(empty prefix — policy selected no tokens)".to_string()
+        } else {
+            // a non-empty prefix changes every downstream capture
+            ctx.invalidate_observation();
+            format!("prefix={:?} (o={})", prefix::render(&toks, ctx.tok), report.o)
+        };
+        ctx.pre_report = Some(report);
+        ctx.prefix_tokens = toks;
+        Ok(StageReport::new(self.name(), detail))
+    }
+}
+
+/// Materialize the observation later passes consume as fp targets (block
+/// captures + fp KV).  After a find-prefix pass this is the re-observation
+/// with the prefix in place; for prefix-less recipes it is the first (and
+/// only) observation.
+struct ReObservePass;
+
+impl QuantPass for ReObservePass {
+    fn name(&self) -> &str {
+        "re-observe"
+    }
+
+    fn run(&self, ctx: &mut QuantCtx) -> Result<StageReport> {
+        let report = ctx.report()?;
+        let detail = format!(
+            "fp targets captured ({} in-sequence outliers)",
+            report.total_outliers
+        );
+        if ctx.pre_report.is_none() {
+            ctx.pre_report = Some(report);
+        } else if !ctx.prefix_tokens.is_empty() {
+            ctx.post_report = Some(report);
+        }
+        Ok(StageReport::new(self.name(), detail))
+    }
+}
+
+/// Host-side weight quantization (per-channel RTN/grid, or per-group).
+struct WeightQuantPass {
+    granularity: Granularity,
+    grid_search: bool,
+}
+
+impl QuantPass for WeightQuantPass {
+    fn name(&self) -> &str {
+        "weight-quant"
+    }
+
+    // Deliberately does NOT invalidate: the fp targets for grid-init and
+    // fine-tuning are captured BEFORE weight quantization (v1 semantics).
+
+    fn run(&self, ctx: &mut QuantCtx) -> Result<StageReport> {
+        let grid = if self.grid_search { 40 } else { 1 };
+        let group = match self.granularity {
+            Granularity::PerChannel => None,
+            Granularity::PerGroup(g) => Some(g),
+        };
+        pipeline::quantize_weights_raw(ctx.model, ctx.precision.w, group, grid)?;
+        Ok(StageReport::new(
+            self.name(),
+            format!("w{} {:?} grid={grid}", ctx.precision.w, self.granularity),
+        ))
+    }
+}
+
+/// Static activation/KV scale initialization (max-init + per-head KV grid +
+/// block-output coordinate-descent act grid, §6.1).
+struct GridInitPass {
+    grid_search: bool,
+}
+
+impl QuantPass for GridInitPass {
+    fn name(&self) -> &str {
+        "grid-init"
+    }
+
+    fn run(&self, ctx: &mut QuantCtx) -> Result<StageReport> {
+        let precision = ctx.precision;
+        let grid_search = self.grid_search;
+        ctx.with_observation(|model, obs, _| {
+            let qa = model.quant.qmax_act.data[0];
+            model.quant.act_scales = calibrate::max_init_act_scales(model, obs, qa);
+            if precision.kv < 16 {
+                model.quant.kv_scales = calibrate::kv_scales_grid(
+                    model,
+                    obs,
+                    precision.kv,
+                    if grid_search { GridCfg::default().kv_points } else { 1 },
+                );
+            } else {
+                // near-lossless 16-bit static: max-based per-head init
+                model.quant.kv_scales = calibrate::kv_scales_grid(model, obs, 16, 1);
+            }
+            if grid_search && precision.a < 16 {
+                calibrate::act_scales_grid(model, obs, &GridCfg::default())?;
+            }
+            Ok(())
+        })?;
+        Ok(StageReport::new(
+            self.name(),
+            format!(
+                "static scales (kv grid={}, act grid={})",
+                precision.kv < 16 && grid_search,
+                precision.a < 16 && grid_search
+            ),
+        ))
+    }
+}
+
+/// Block-wise fine-tuning of step sizes + weights (§5.2).
+struct FinetunePass {
+    epochs: usize,
+}
+
+impl QuantPass for FinetunePass {
+    fn name(&self) -> &str {
+        "finetune"
+    }
+
+    fn invalidates_observation(&self) -> bool {
+        true // weights change (irrelevant for the last pass, but honest)
+    }
+
+    fn run(&self, ctx: &mut QuantCtx) -> Result<StageReport> {
+        let ft_cfg = FtCfg { epochs: self.epochs, ..FtCfg::default() };
+        let ft_mode = if ctx.mode == QuantMode::Dynamic {
+            QuantMode::Dynamic
+        } else {
+            QuantMode::Static
+        };
+        let rep = ctx.with_observation(|m, obs, _| finetune::finetune(m, obs, ft_mode, &ft_cfg))?;
+        let detail = format!("{} epochs over {} blocks", self.epochs, rep.layers.len());
+        ctx.ft = Some(rep);
+        Ok(StageReport::new(self.name(), detail))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recipe: typed config compiled to an ordered pass list
+// ---------------------------------------------------------------------------
+
+/// An ordered, named quantization pass list.  Construct via the presets or
+/// [`Recipe::builder`]; execute with [`Recipe::run`].
+pub struct Recipe {
+    pub name: String,
+    pub precision: Precision,
+    /// activation/KV quantization mode of the serving executables
+    pub mode: QuantMode,
+    passes: Vec<Box<dyn QuantPass>>,
+}
+
+/// Builder for [`Recipe`] (mirrors `ServerConfig::builder`): typed knobs in,
+/// ordered pass list out.  `build()` compiles the configuration into the
+/// canonical order smooth → rotate → find-prefix → re-observe → weight-quant
+/// → grid-init → finetune, including only the passes the config needs.
+pub struct RecipeBuilder {
+    name: Option<String>,
+    precision: Precision,
+    mode: QuantMode,
+    rotate: bool,
+    smooth: bool,
+    use_prefix: bool,
+    prefix_policy: Option<PrefixPolicy>,
+    grid_search: bool,
+    ft_epochs: usize,
+    granularity: Granularity,
+}
+
+impl Recipe {
+    /// Builder with RTN-like defaults: dynamic mode, per-channel weights,
+    /// no rotation/smooth/prefix/grid/fine-tuning.
+    pub fn builder(precision: Precision) -> RecipeBuilder {
+        RecipeBuilder {
+            name: None,
+            precision,
+            mode: QuantMode::Dynamic,
+            rotate: false,
+            smooth: false,
+            use_prefix: false,
+            prefix_policy: None,
+            grid_search: false,
+            ft_epochs: 0,
+            granularity: Granularity::PerChannel,
+        }
+    }
+
+    // --- paper presets (Tables 3-6) -------------------------------------
+
+    pub fn fp16() -> Recipe {
+        Recipe::builder(Precision::FP16).mode(QuantMode::Fp).name("FP16").build()
+    }
+
+    /// Round-to-nearest, per-token dynamic (the ablation baseline, Table 6).
+    pub fn rtn(p: Precision) -> Recipe {
+        Recipe::builder(p).name(&format!("RTN {}", p.label())).build()
+    }
+
+    /// QuaRot-analog: Hadamard rotation + per-token dynamic quantization.
+    pub fn quarot(p: Precision) -> Recipe {
+        Recipe::builder(p).rotate(true).name(&format!("QuaRot {}", p.label())).build()
+    }
+
+    /// SmoothQuant-analog: channel scaling + static per-tensor activations.
+    pub fn smoothquant(p: Precision) -> Recipe {
+        Recipe::builder(p)
+            .mode(QuantMode::Static)
+            .smooth(true)
+            .grid_search(true)
+            .name(&format!("SmoothQuant {}", p.label()))
+            .build()
+    }
+
+    /// Atom-analog: per-group weights, dynamic activations.
+    pub fn atom(p: Precision) -> Recipe {
+        Recipe::builder(p)
+            .granularity(Granularity::PerGroup(64))
+            .name(&format!("Atom {}", p.label()))
+            .build()
+    }
+
+    /// PrefixQuant without fine-tuning (grid search only).
+    pub fn prefixquant_wo_ft(p: Precision) -> Recipe {
+        Recipe::builder(p)
+            .mode(QuantMode::Static)
+            .rotate(true)
+            .prefix(true)
+            .grid_search(true)
+            .name(&format!("PrefixQuant w/o FT {}", p.label()))
+            .build()
+    }
+
+    /// Full PrefixQuant with block-wise fine-tuning.
+    pub fn prefixquant(p: Precision, epochs: usize) -> Recipe {
+        Recipe::builder(p)
+            .mode(QuantMode::Static)
+            .rotate(true)
+            .prefix(true)
+            .grid_search(true)
+            .finetune(epochs)
+            .name(&format!("PrefixQuant {}", p.label()))
+            .build()
+    }
+
+    /// Bridge from the legacy v1 [`SchemeConfig`] (exact semantics, any
+    /// combination of the ten fields) — used by `pipeline::quantize` and the
+    /// golden parity suite.
+    pub fn from_scheme(s: &SchemeConfig) -> Recipe {
+        let mut b = Recipe::builder(Precision::new(s.w_bits, s.a_bits, s.kv_bits))
+            .name(&s.name)
+            .mode(s.mode)
+            .rotate(s.rotate)
+            .smooth(s.smooth)
+            .prefix(s.use_prefix)
+            .grid_search(s.grid_search)
+            .finetune(s.ft_epochs);
+        if let Some(g) = s.w_group {
+            b = b.granularity(Granularity::PerGroup(g));
+        }
+        if let Some(p) = &s.prefix_override {
+            b = b.prefix_policy(p.clone());
+        }
+        b.build()
+    }
+
+    /// Ordered pass names (the compiled plan).
+    pub fn pass_names(&self) -> Vec<&str> {
+        self.passes.iter().map(|p| p.name()).collect()
+    }
+
+    /// Execute the recipe on a freshly-loaded model.  `calib` is the [B,S]
+    /// calibration batch (geometry of `fwd_obs`).  Sets the qmax scalars,
+    /// runs every pass (timing each), and freezes the final state on device.
+    pub fn run(
+        &self,
+        model: &mut Model,
+        calib: &IntTensor,
+        tok: &Tokenizer,
+    ) -> Result<RecipeReport> {
+        let t0 = Instant::now();
+        model.quant.qmax_act = Tensor::scalar(qmax_for_bits(self.precision.a.max(2)));
+        model.quant.qmax_kv = Tensor::scalar(qmax_for_bits(self.precision.kv.max(2)));
+        let mut ctx = QuantCtx {
+            model,
+            calib,
+            tok,
+            precision: self.precision,
+            mode: self.mode,
+            eta: ETA,
+            pre_report: None,
+            post_report: None,
+            prefix_tokens: Vec::new(),
+            ft: None,
+            observation_runs: 0,
+            cache: None,
+        };
+        let mut stages = Vec::with_capacity(self.passes.len());
+        for pass in &self.passes {
+            let t = Instant::now();
+            let mut sr = pass.run(&mut ctx)?;
+            sr.seconds = t.elapsed().as_secs_f64();
+            if pass.invalidates_observation() {
+                ctx.invalidate_observation();
+            }
+            stages.push(sr);
+        }
+        let QuantCtx {
+            model,
+            pre_report,
+            post_report,
+            prefix_tokens,
+            ft,
+            observation_runs,
+            ..
+        } = ctx;
+        // hot-path: park the now-final quant/prefix state on device
+        model.freeze()?;
+        Ok(RecipeReport {
+            recipe: self.name.clone(),
+            precision: self.precision,
+            mode: self.mode,
+            prefix_rendered: prefix::render(&prefix_tokens, tok),
+            stages,
+            pre_report,
+            post_report,
+            prefix_tokens,
+            ft,
+            observation_runs,
+            t_total: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Everything a harness wants to know about one recipe run.
+pub struct RecipeReport {
+    pub recipe: String,
+    pub precision: Precision,
+    pub mode: QuantMode,
+    /// one entry per executed pass, in order, with wall time
+    pub stages: Vec<StageReport>,
+    /// analysis of the first observation (None for recipes that observe
+    /// nothing, e.g. pure-dynamic RTN without fine-tuning)
+    pub pre_report: Option<OutlierReport>,
+    /// re-observation after a non-empty prefix was installed
+    pub post_report: Option<OutlierReport>,
+    pub prefix_tokens: Vec<i32>,
+    pub prefix_rendered: String,
+    pub ft: Option<FtReport>,
+    /// `fwd_obs` executions across the run (cache-efficiency observable)
+    pub observation_runs: usize,
+    pub t_total: f64,
+}
+
+impl RecipeReport {
+    /// Wall seconds of the named pass (0.0 when the recipe did not run it).
+    pub fn stage_seconds(&self, pass: &str) -> f64 {
+        self.stages.iter().filter(|s| s.pass == pass).map(|s| s.seconds).sum()
+    }
+
+    /// Table 10's "Find Prefixed Outliers" column.
+    pub fn t_find_prefix(&self) -> f64 {
+        self.stage_seconds("find-prefix")
+    }
+
+    /// Table 10's "Grid-search init" column.
+    pub fn t_grid(&self) -> f64 {
+        self.stage_seconds("grid-init")
+    }
+
+    /// Table 10's "Fine-tuning" column.
+    pub fn t_ft(&self) -> f64 {
+        self.stage_seconds("finetune")
+    }
+
+    /// One-line per-pass timing breakdown (Table 10 for any recipe).
+    pub fn timing_summary(&self) -> String {
+        let mut parts: Vec<String> =
+            self.stages.iter().map(|s| format!("{} {:.2}s", s.pass, s.seconds)).collect();
+        parts.push(format!("total {:.2}s", self.t_total));
+        parts.join(" | ")
+    }
+}
+
+impl RecipeBuilder {
+    pub fn name(mut self, name: &str) -> Self {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    pub fn mode(mut self, mode: QuantMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn rotate(mut self, on: bool) -> Self {
+        self.rotate = on;
+        self
+    }
+
+    pub fn smooth(mut self, on: bool) -> Self {
+        self.smooth = on;
+        self
+    }
+
+    /// Include the find-prefix pass (select + install prefixed outliers).
+    pub fn prefix(mut self, on: bool) -> Self {
+        self.use_prefix = on;
+        self
+    }
+
+    /// Override the prefix content (Table 14/15/17 ablations).  Only
+    /// meaningful with `prefix(true)`.
+    pub fn prefix_policy(mut self, policy: PrefixPolicy) -> Self {
+        self.prefix_policy = Some(policy);
+        self
+    }
+
+    pub fn grid_search(mut self, on: bool) -> Self {
+        self.grid_search = on;
+        self
+    }
+
+    /// Block-wise fine-tuning epochs (0 = no finetune pass).
+    pub fn finetune(mut self, epochs: usize) -> Self {
+        self.ft_epochs = epochs;
+        self
+    }
+
+    pub fn granularity(mut self, granularity: Granularity) -> Self {
+        self.granularity = granularity;
+        self
+    }
+
+    /// Compile the typed config into the ordered pass list.
+    pub fn build(self) -> Recipe {
+        let mut passes: Vec<Box<dyn QuantPass>> = Vec::new();
+        if self.smooth {
+            passes.push(Box::new(SmoothPass { alpha: 0.5 }));
+        }
+        if self.rotate {
+            passes.push(Box::new(RotatePass));
+        }
+        if self.use_prefix {
+            passes.push(Box::new(FindPrefixPass { policy: self.prefix_policy }));
+        }
+        // fp targets are consumed by grid-init and finetune, and the
+        // re-observation after a prefix install is part of the paper's flow
+        let needs_obs = self.mode == QuantMode::Static || self.ft_epochs > 0 || self.use_prefix;
+        if needs_obs {
+            passes.push(Box::new(ReObservePass));
+        }
+        if self.precision.w < 16 {
+            passes.push(Box::new(WeightQuantPass {
+                granularity: self.granularity,
+                grid_search: self.grid_search,
+            }));
+        }
+        if self.mode == QuantMode::Static {
+            passes.push(Box::new(GridInitPass { grid_search: self.grid_search }));
+        }
+        if self.ft_epochs > 0 {
+            passes.push(Box::new(FinetunePass { epochs: self.ft_epochs }));
+        }
+        let name = self.name.unwrap_or_else(|| format!("custom {}", self.precision.label()));
+        Recipe { name, precision: self.precision, mode: self.mode, passes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_compile_to_expected_passes() {
+        assert!(Recipe::fp16().pass_names().is_empty());
+        assert_eq!(Recipe::rtn(Precision::new(4, 4, 4)).pass_names(), ["weight-quant"]);
+        assert_eq!(
+            Recipe::quarot(Precision::new(4, 4, 4)).pass_names(),
+            ["rotate", "weight-quant"]
+        );
+        assert_eq!(
+            Recipe::smoothquant(Precision::new(4, 4, 4)).pass_names(),
+            ["smooth", "re-observe", "weight-quant", "grid-init"]
+        );
+        assert_eq!(Recipe::atom(Precision::new(4, 4, 4)).pass_names(), ["weight-quant"]);
+        assert_eq!(
+            Recipe::prefixquant_wo_ft(Precision::new(4, 4, 4)).pass_names(),
+            ["rotate", "find-prefix", "re-observe", "weight-quant", "grid-init"]
+        );
+        assert_eq!(
+            Recipe::prefixquant(Precision::new(4, 4, 4), 10).pass_names(),
+            ["rotate", "find-prefix", "re-observe", "weight-quant", "grid-init", "finetune"]
+        );
+    }
+
+    #[test]
+    fn presets_match_legacy_names_and_modes() {
+        let p = Precision::new(4, 4, 4);
+        let pairs: Vec<(SchemeConfig, Recipe)> = vec![
+            (SchemeConfig::fp16(), Recipe::fp16()),
+            (SchemeConfig::rtn(4, 4, 4), Recipe::rtn(p)),
+            (SchemeConfig::quarot(4, 4, 4), Recipe::quarot(p)),
+            (SchemeConfig::smoothquant(4, 4, 4), Recipe::smoothquant(p)),
+            (SchemeConfig::atom(4, 4, 4), Recipe::atom(p)),
+            (SchemeConfig::prefixquant_wo_ft(4, 4, 4), Recipe::prefixquant_wo_ft(p)),
+            (SchemeConfig::prefixquant(4, 4, 4, 10), Recipe::prefixquant(p, 10)),
+        ];
+        for (scheme, recipe) in pairs {
+            assert_eq!(scheme.name, recipe.name);
+            assert_eq!(scheme.mode, recipe.mode);
+            assert_eq!(
+                Precision::new(scheme.w_bits, scheme.a_bits, scheme.kv_bits),
+                recipe.precision
+            );
+            // from_scheme must compile to the same plan as the preset
+            let bridged = Recipe::from_scheme(&scheme);
+            assert_eq!(bridged.name, recipe.name);
+            assert_eq!(bridged.mode, recipe.mode);
+            assert_eq!(bridged.precision, recipe.precision);
+            assert_eq!(bridged.pass_names(), recipe.pass_names());
+        }
+    }
+
+    #[test]
+    fn fp16_and_w16_skip_weight_quant() {
+        // a W16 static scheme (Table 2 shape) has no weight-quant pass
+        let r = Recipe::builder(Precision::new(16, 4, 16))
+            .mode(QuantMode::Static)
+            .grid_search(true)
+            .build();
+        assert_eq!(r.pass_names(), ["re-observe", "grid-init"]);
+        assert_eq!(r.name, "custom W16A4KV16");
+    }
+
+    #[test]
+    fn builder_knobs_map_to_passes() {
+        let r = Recipe::builder(Precision::new(3, 16, 16))
+            .mode(QuantMode::Static)
+            .granularity(Granularity::PerGroup(64))
+            .grid_search(true)
+            .prefix(true)
+            .finetune(2)
+            .build();
+        assert_eq!(
+            r.pass_names(),
+            ["find-prefix", "re-observe", "weight-quant", "grid-init", "finetune"]
+        );
+        // dynamic without fine-tuning needs no observation at all
+        let dynamic = Recipe::builder(Precision::new(4, 4, 4)).rotate(true).build();
+        assert_eq!(dynamic.pass_names(), ["rotate", "weight-quant"]);
+    }
+
+    #[test]
+    fn precision_label() {
+        assert_eq!(Precision::new(4, 8, 4).label(), "W4A8KV4");
+        assert_eq!(Precision::FP16, Precision::new(16, 16, 16));
+    }
+}

@@ -63,19 +63,31 @@ impl WeightStore {
 
     pub fn load(path: &Path) -> Result<WeightStore> {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Self::read_from(&mut f, path)
+    }
+
+    /// Parse the weights.bin format from an in-memory buffer (one disk read
+    /// shared between integrity hashing and parsing — see
+    /// `quant::model_state`).  `origin` labels errors.
+    pub fn from_bytes(bytes: &[u8], origin: &Path) -> Result<WeightStore> {
+        let mut cursor = bytes;
+        Self::read_from(&mut cursor, origin)
+    }
+
+    fn read_from(f: &mut impl Read, path: &Path) -> Result<WeightStore> {
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
         if &magic != MAGIC {
             bail!("{path:?}: bad magic");
         }
-        let version = read_u32(&mut f)?;
+        let version = read_u32(&mut *f)?;
         if version != VERSION {
             bail!("{path:?}: unsupported version {version}");
         }
-        let count = read_u32(&mut f)? as usize;
+        let count = read_u32(&mut *f)? as usize;
         let mut pairs = Vec::with_capacity(count);
         for _ in 0..count {
-            let nlen = read_u16(&mut f)? as usize;
+            let nlen = read_u16(&mut *f)? as usize;
             let mut nb = vec![0u8; nlen];
             f.read_exact(&mut nb)?;
             let name = String::from_utf8(nb)?;
@@ -87,7 +99,7 @@ impl WeightStore {
             }
             let mut dims = Vec::with_capacity(ndim);
             for _ in 0..ndim {
-                dims.push(read_u32(&mut f)? as usize);
+                dims.push(read_u32(&mut *f)? as usize);
             }
             let n: usize = dims.iter().product::<usize>().max(1);
             let mut raw = vec![0u8; 4 * n];
@@ -101,23 +113,34 @@ impl WeightStore {
         Ok(WeightStore::from_pairs(pairs))
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
-        f.write_all(&(self.names.len() as u32).to_le_bytes())?;
+    /// Serialize to the weights.bin format in memory (lets callers hash and
+    /// write the same buffer without a read-back).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload: usize =
+            self.tensors.iter().map(|t| 2 + 4 * t.shape.len() + 4 * t.data.len()).sum();
+        let names: usize = self.names.iter().map(|n| 2 + n.len()).sum();
+        let mut out = Vec::with_capacity(12 + names + payload);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.names.len() as u32).to_le_bytes());
         for (name, t) in self.names.iter().zip(&self.tensors) {
             let nb = name.as_bytes();
-            f.write_all(&(nb.len() as u16).to_le_bytes())?;
-            f.write_all(nb)?;
-            f.write_all(&[0u8, t.shape.len() as u8])?;
+            out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            out.extend_from_slice(nb);
+            out.extend_from_slice(&[0u8, t.shape.len() as u8]);
             for d in &t.shape {
-                f.write_all(&(*d as u32).to_le_bytes())?;
+                out.extend_from_slice(&(*d as u32).to_le_bytes());
             }
             for v in &t.data {
-                f.write_all(&v.to_le_bytes())?;
+                out.extend_from_slice(&v.to_le_bytes());
             }
         }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(&self.to_bytes())?;
         Ok(())
     }
 }
@@ -152,6 +175,11 @@ mod tests {
         assert_eq!(re.names, ws.names);
         assert_eq!(re.get("a").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(re.get("b.c").unwrap().shape, vec![3]);
+        // the in-memory serialization is the on-disk format
+        assert_eq!(ws.to_bytes(), std::fs::read(&p).unwrap());
+        let mem = WeightStore::from_bytes(&ws.to_bytes(), &p).unwrap();
+        assert_eq!(mem.names, ws.names);
+        assert_eq!(mem.get("a").unwrap().data, re.get("a").unwrap().data);
     }
 
     #[test]

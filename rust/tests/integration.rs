@@ -136,21 +136,22 @@ fn check_static_beats_dynamic(c: &Ctx, fp_ppl: f64) {
 }
 
 /// The serving scheduler produces identical continuations for identical
-/// prompts across rows, and respects max_new.  Also: a saved quantized model
-/// reloads bit-identically (deploy artifact roundtrip).
+/// prompts across rows, and respects max_new.  Also: the versioned
+/// QuantArtifact round-trips (bit-identical logits, token-identical
+/// generation), validates its content hash, and boots a server with no
+/// pipeline re-run.
 fn check_scheduler(c: &Ctx) {
-    let mut model = Model::load(c.engine.clone(), "pq-tiny").unwrap();
-    pipeline::quantize(
-        &mut model,
-        &SchemeConfig::prefixquant_wo_ft(4, 4, 4),
-        &c.calib,
-        &c.tok,
-    )
-    .unwrap();
+    use prefixquant::coordinator::{Server, ServerConfig};
+    use prefixquant::quant::{QuantArtifact, Recipe, FORMAT_VERSION};
 
-    // save → load → identical logits
+    let mut model = Model::load(c.engine.clone(), "pq-tiny").unwrap();
+    let recipe = Recipe::prefixquant_wo_ft(prefixquant::quant::Precision::new(4, 4, 4));
+    let rep = recipe.run(&mut model, &c.calib, &c.tok).unwrap();
+
+    // save (with recipe provenance) → load → identical logits
     let dir = std::env::temp_dir().join("pq_saved_model");
-    prefixquant::quant::model_state::save(&model, QuantMode::Static, &dir).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    QuantArtifact::save_model(&model, recipe.mode, Some(&rep), &dir).unwrap();
     let (reloaded, mode) =
         prefixquant::quant::model_state::load(c.engine.clone(), &dir).unwrap();
     assert_eq!(mode, QuantMode::Static);
@@ -158,7 +159,7 @@ fn check_scheduler(c: &Ctx) {
     let a = model.logits(QuantMode::Static, &c.calib).unwrap();
     let b = reloaded.logits(QuantMode::Static, &c.calib).unwrap();
     assert_eq!(a.data, b.data, "saved+reloaded model must be bit-identical");
-    drop(reloaded);
+
     let prompt = c.tok.encode("hello world", false);
     let reqs: Vec<GenRequest> =
         (0..3).map(|id| GenRequest::new(id, prompt.clone(), 6)).collect();
@@ -169,6 +170,45 @@ fn check_scheduler(c: &Ctx) {
     assert!(resp.iter().all(|r| r.tokens.len() == 6));
     assert_eq!(resp[0].tokens, resp[1].tokens, "identical prompts decode identically");
     assert!(resp[0].ttft_s > 0.0 && resp[0].total_s >= resp[0].ttft_s);
+
+    // token-identical generation from the reloaded artifact
+    let resp_re =
+        scheduler::run_batch(&reloaded, mode, &reqs, c.tok.spec.bos, c.tok.spec.pad).unwrap();
+    for (orig, re) in resp.iter().zip(&resp_re) {
+        assert_eq!(orig.tokens, re.tokens, "artifact reload must generate identical tokens");
+    }
+    drop(reloaded);
+
+    // provenance + integrity of the on-disk artifact
+    let art = QuantArtifact::load(&dir).unwrap();
+    assert_eq!(art.meta.format_version, FORMAT_VERSION);
+    assert_eq!(art.meta.recipe, recipe.name);
+    assert_eq!(art.meta.passes, recipe.pass_names());
+    assert_eq!(art.meta.prefix_tokens, model.prefix.tokens);
+    let wpath = dir.join("weights.bin");
+    let pristine = std::fs::read(&wpath).unwrap();
+    let mut bad = pristine.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0xFF;
+    std::fs::write(&wpath, &bad).unwrap();
+    let err = format!("{:#}", QuantArtifact::load(&dir).unwrap_err());
+    assert!(err.contains("corrupted"), "corrupt artifact must be rejected: {err}");
+    std::fs::write(&wpath, &pristine).unwrap();
+
+    // a server boots from the artifact — O(read), no pipeline — and decodes
+    // the same greedy stream as the in-process model
+    let server = Server::start_from_artifact(
+        prefixquant::artifacts_dir(),
+        dir.clone(),
+        ServerConfig::builder(QuantMode::Static)
+            .bos(c.tok.spec.bos)
+            .pad(c.tok.spec.pad)
+            .build(),
+    )
+    .unwrap();
+    let served = server.generate(GenRequest::new(9, prompt.clone(), 6)).unwrap();
+    assert_eq!(served.tokens, resp[0].tokens, "artifact-booted server must match run_batch");
+    server.shutdown();
 
     check_continuous_parity(c, &model);
 }

@@ -1,0 +1,294 @@
+//! QuantArtifact round-trip + validation suite (runs WITHOUT artifacts: the
+//! artifact format is pure host-side IO).
+//!
+//! - property-style round trip over randomized geometries: save → load →
+//!   bit-identical tensors and metadata, stable content hash;
+//! - corruption rejection: any flipped/truncated byte in either tensor file
+//!   fails the content-hash check with a descriptive error;
+//! - version gating: a future format_version is refused, a pre-v2 layout
+//!   gets a migration hint, a random directory is "not an artifact";
+//! - the artifact's prefix K/V installs into the PAGED KV cache's
+//!   refcounted shared-prefix pages (one physical page set, mapped into
+//!   every slot) byte-for-byte.
+//!
+//! The artifact-dependent halves (identical PPL and token-identical `gen`
+//! after reload, server boot from artifact) live in tests/integration.rs.
+
+use std::path::{Path, PathBuf};
+
+use prefixquant::config::ModelConfig;
+use prefixquant::coordinator::{KvCache, KvLayout};
+use prefixquant::model::QuantMode;
+use prefixquant::quant::{ArtifactMeta, Precision, QuantArtifact, FORMAT_VERSION};
+use prefixquant::runtime::WeightStore;
+use prefixquant::tensor::Tensor;
+use prefixquant::util::json::Json;
+use prefixquant::util::rng::SplitMix64;
+
+fn tdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pq_artifact_test_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn rt(rng: &mut SplitMix64, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+    Tensor::new(shape.to_vec(), data).unwrap()
+}
+
+fn synth_cfg(l: usize, h: usize, dh: usize, max_prefix: usize) -> ModelConfig {
+    ModelConfig {
+        name: "synth".into(),
+        vocab_size: 272,
+        d_model: h * dh,
+        n_layers: l,
+        n_heads: h,
+        d_head: dh,
+        d_ff: 2 * h * dh,
+        o_model: max_prefix.saturating_sub(1),
+        inject_amp: 0.0,
+        inject_delta: 0.0,
+        max_prefix,
+        train_seq: 16,
+        eval_seq: 16,
+        cache_max: 8,
+        sites: vec!["attn_in".into(), "o_in".into(), "mlp_in".into(), "down_in".into()],
+    }
+}
+
+/// A synthetic but shape-consistent artifact for `cfg`.
+fn synth_artifact(rng: &mut SplitMix64, cfg: &ModelConfig, n_prefix: usize) -> QuantArtifact {
+    let (l, h, dh, p) = (cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.max_prefix);
+    let weights = WeightStore::from_pairs(vec![
+        ("emb".into(), rt(rng, &[cfg.vocab_size, cfg.d_model])),
+        ("layers.0.wq".into(), rt(rng, &[cfg.d_model, cfg.d_model])),
+        ("head".into(), rt(rng, &[cfg.d_model, cfg.vocab_size])),
+    ]);
+    let state = WeightStore::from_pairs(vec![
+        ("act_scales".into(), rt(rng, &[l, 4])),
+        ("kv_scales".into(), rt(rng, &[l, 2, h])),
+        ("qmax_act".into(), Tensor::scalar(7.0)),
+        ("qmax_kv".into(), Tensor::scalar(7.0)),
+        ("r3".into(), rt(rng, &[dh, dh])),
+        ("r4".into(), rt(rng, &[cfg.d_ff, cfg.d_ff])),
+        ("prefix_k".into(), rt(rng, &[l, h, p, dh])),
+        ("prefix_v".into(), rt(rng, &[l, h, p, dh])),
+    ]);
+    QuantArtifact {
+        meta: ArtifactMeta {
+            format_version: FORMAT_VERSION,
+            model: cfg.name.clone(),
+            mode: QuantMode::Static,
+            recipe: "PrefixQuant w/o FT W4A4KV4".into(),
+            passes: vec!["rotate".into(), "find-prefix".into(), "grid-init".into()],
+            stage_seconds: vec![0.1, 0.2, 0.3],
+            precision: Some(Precision::new(4, 4, 4)),
+            rotated: true,
+            prefix_tokens: (0..n_prefix as i32).map(|i| i + 1).collect(),
+            n_prefix: n_prefix as i32,
+            n_ctx_sinks: n_prefix as i32,
+            content_hash: 0,
+        },
+        weights,
+        state,
+    }
+}
+
+#[test]
+fn roundtrip_property_randomized_geometries() {
+    for seed in 1u64..=5 {
+        let mut rng = SplitMix64::new(seed);
+        let l = 1 + (rng.below(3) as usize);
+        let h = 1 + (rng.below(3) as usize);
+        let dh = [4usize, 8][rng.below(2) as usize];
+        let max_prefix = 2 + (rng.below(3) as usize);
+        let cfg = synth_cfg(l, h, dh, max_prefix);
+        let mut art = synth_artifact(&mut rng, &cfg, max_prefix.min(2));
+        let dir = tdir(&format!("roundtrip_{seed}"));
+        let hash = art.save(&dir).unwrap();
+        assert_ne!(hash, 0, "content hash recorded");
+
+        let re = QuantArtifact::load(&dir).unwrap();
+        assert_eq!(re.meta.format_version, FORMAT_VERSION);
+        assert_eq!(re.meta.model, art.meta.model);
+        assert_eq!(re.meta.mode, QuantMode::Static);
+        assert_eq!(re.meta.recipe, art.meta.recipe);
+        assert_eq!(re.meta.passes, art.meta.passes);
+        assert_eq!(re.meta.stage_seconds, art.meta.stage_seconds);
+        assert_eq!(re.meta.precision, art.meta.precision);
+        assert_eq!(re.meta.rotated, art.meta.rotated);
+        assert_eq!(re.meta.prefix_tokens, art.meta.prefix_tokens);
+        assert_eq!(re.meta.n_prefix, art.meta.n_prefix);
+        assert_eq!(re.meta.n_ctx_sinks, art.meta.n_ctx_sinks);
+        assert_eq!(re.meta.content_hash, hash, "loaded hash matches save's");
+        assert_eq!(re.weights.names, art.weights.names);
+        for n in &art.weights.names {
+            assert_eq!(re.weights.get(n), art.weights.get(n), "weight {n} bit-identical");
+        }
+        for n in &art.state.names {
+            assert_eq!(re.state.get(n), art.state.get(n), "state {n} bit-identical");
+        }
+        // loading twice is stable
+        let re2 = QuantArtifact::load(&dir).unwrap();
+        assert_eq!(re2.meta.content_hash, hash);
+    }
+}
+
+fn flip_middle_byte(path: &Path) {
+    let mut bytes = std::fs::read(path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(path, bytes).unwrap();
+}
+
+#[test]
+fn corrupted_files_rejected_with_clear_errors() {
+    let mut rng = SplitMix64::new(77);
+    let cfg = synth_cfg(2, 2, 4, 3);
+    let mut art = synth_artifact(&mut rng, &cfg, 2);
+    let dir = tdir("corrupt");
+    art.save(&dir).unwrap();
+
+    for file in ["weights.bin", "quant_state.bin"] {
+        let path = dir.join(file);
+        let pristine = std::fs::read(&path).unwrap();
+
+        flip_middle_byte(&path);
+        let err = format!("{:#}", QuantArtifact::load(&dir).unwrap_err());
+        assert!(err.contains("corrupted"), "flipped {file}: got {err}");
+        assert!(err.contains("hash"), "error names the hash check: {err}");
+
+        // truncation is also a hash mismatch
+        std::fs::write(&path, &pristine[..pristine.len() / 2]).unwrap();
+        let err = format!("{:#}", QuantArtifact::load(&dir).unwrap_err());
+        assert!(err.contains("corrupted"), "truncated {file}: got {err}");
+
+        std::fs::write(&path, &pristine).unwrap();
+        QuantArtifact::load(&dir).expect("restored artifact loads again");
+    }
+
+    // a deleted tensor file is a descriptive miss, not a panic
+    std::fs::remove_file(dir.join("quant_state.bin")).unwrap();
+    let err = format!("{:#}", QuantArtifact::load(&dir).unwrap_err());
+    assert!(err.contains("missing"), "got {err}");
+}
+
+#[test]
+fn version_mismatch_rejected() {
+    let mut rng = SplitMix64::new(5);
+    let cfg = synth_cfg(1, 1, 4, 2);
+    let mut art = synth_artifact(&mut rng, &cfg, 1);
+    let dir = tdir("version");
+    art.save(&dir).unwrap();
+
+    // bump the recorded format version to a future one
+    let meta_path = dir.join("artifact.json");
+    let text = std::fs::read_to_string(&meta_path).unwrap();
+    let mut j = Json::parse(&text).unwrap();
+    if let Json::Obj(m) = &mut j {
+        m.insert("format_version".into(), Json::Num(99.0));
+    } else {
+        panic!("artifact.json must be an object");
+    }
+    std::fs::write(&meta_path, j.to_string()).unwrap();
+
+    let err = format!("{:#}", QuantArtifact::load(&dir).unwrap_err());
+    assert!(err.contains("format v99"), "got {err}");
+    assert!(err.contains(&format!("v{FORMAT_VERSION}")), "names the supported version: {err}");
+    // peek applies the same gate
+    assert!(ArtifactMeta::peek(&dir).is_err());
+}
+
+#[test]
+fn non_artifact_directories_rejected() {
+    let dir = tdir("notart");
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = format!("{:#}", QuantArtifact::load(&dir).unwrap_err());
+    assert!(err.contains("not a quantization artifact"), "got {err}");
+
+    // the pre-v2 layout gets a migration hint
+    std::fs::write(dir.join("quantized.json"), "{}").unwrap();
+    let err = format!("{:#}", QuantArtifact::load(&dir).unwrap_err());
+    assert!(err.contains("pre-v2"), "got {err}");
+}
+
+#[test]
+fn peek_reads_metadata_without_tensor_io() {
+    let mut rng = SplitMix64::new(9);
+    let cfg = synth_cfg(2, 1, 4, 2);
+    let mut art = synth_artifact(&mut rng, &cfg, 2);
+    let dir = tdir("peek");
+    art.save(&dir).unwrap();
+
+    flip_middle_byte(&dir.join("weights.bin"));
+    // peek still works (metadata only, documented) ...
+    let meta = ArtifactMeta::peek(&dir).unwrap();
+    assert_eq!(meta.mode, QuantMode::Static);
+    assert_eq!(meta.recipe, "PrefixQuant w/o FT W4A4KV4");
+    // ... while a full load still verifies integrity
+    assert!(QuantArtifact::load(&dir).is_err());
+}
+
+#[test]
+fn prefix_installs_into_shared_paged_pages() {
+    let cfg = synth_cfg(2, 2, 4, 3);
+    let (l, h, dh, p) = (cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.max_prefix);
+    let mut rng = SplitMix64::new(42);
+    let mut art = synth_artifact(&mut rng, &cfg, 2);
+    // distinctive prefix K/V so any index slip is visible
+    let mut k = Tensor::zeros(&[l, h, p, dh]);
+    let mut v = Tensor::zeros(&[l, h, p, dh]);
+    for li in 0..l {
+        for hi in 0..h {
+            for pi in 0..p {
+                for di in 0..dh {
+                    let idx = ((li * h + hi) * p + pi) * dh + di;
+                    k.data[idx] = (li * 1000 + hi * 100 + pi * 10 + di) as f32;
+                    v.data[idx] = -(k.data[idx]);
+                }
+            }
+        }
+    }
+    art.state.set("prefix_k", k.clone());
+    art.state.set("prefix_v", v.clone());
+    let dir = tdir("pages");
+    art.save(&dir).unwrap();
+
+    let loaded = QuantArtifact::load(&dir).unwrap();
+    let ps = loaded.prefix_state(&cfg).unwrap();
+    assert_eq!(ps.n_prefix, 2);
+    assert_eq!(ps.tokens, loaded.meta.prefix_tokens);
+
+    let batch = 3;
+    let page_size = 2;
+    let mut kv = KvCache::with_layout(&cfg, batch, KvLayout::Paged { page_size, n_pages: 0 });
+    let total_pages = (batch + 1) * ((cfg.cache_max + page_size - 1) / page_size);
+    kv.install_prefix(&ps).unwrap();
+
+    // the prefix K/V reads back bit-identically from every slot's pages
+    let n = ps.n_prefix as usize;
+    for b in 0..batch {
+        assert_eq!(kv.row_len(b), n, "every row starts at the prefix length");
+        for li in 0..l {
+            for hi in 0..h {
+                for pi in 0..n {
+                    let src = ((li * h + hi) * p + pi) * dh;
+                    assert_eq!(
+                        kv.k_at(li, b, hi, pi),
+                        &k.data[src..src + dh],
+                        "K (l={li}, b={b}, h={hi}, s={pi})"
+                    );
+                    assert_eq!(kv.v_at(li, b, hi, pi), &v.data[src..src + dh]);
+                }
+            }
+        }
+    }
+    // ONE physical page holds the 2-token prefix, mapped into all 3 slots:
+    // only a single page left the free list
+    assert_eq!(
+        kv.free_pages(),
+        Some(total_pages - 1),
+        "shared prefix must occupy one refcounted page, not one per slot"
+    );
+}

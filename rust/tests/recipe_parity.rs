@@ -1,0 +1,169 @@
+//! Golden parity: every preset [`Recipe`] must reproduce the frozen v1
+//! pipeline (`pipeline::quantize_legacy`) EXACTLY — same prefix tokens, same
+//! quantization state, same logits, same PPL — for all seven paper schemes.
+//! Also asserts the v2 observation-cache economy (pure-dynamic recipes run
+//! zero observations; prefix recipes run exactly two) and the per-stage
+//! report structure.
+//!
+//! Requires `make artifacts` (skips cleanly otherwise), like the
+//! integration suite.
+
+use std::rc::Rc;
+
+use prefixquant::data::{self, Language};
+use prefixquant::eval;
+use prefixquant::model::Model;
+use prefixquant::quant::{pipeline, Precision, Recipe, SchemeConfig};
+use prefixquant::runtime::Engine;
+use prefixquant::tensor::IntTensor;
+use prefixquant::tokenizer::Tokenizer;
+
+struct Ctx {
+    engine: Rc<Engine>,
+    tok: Tokenizer,
+    calib: IntTensor,
+    windows: Vec<Vec<i32>>,
+}
+
+fn ctx() -> Ctx {
+    let dir = prefixquant::artifacts_dir();
+    let engine = Rc::new(Engine::new(&dir).expect("run `make artifacts` first"));
+    let tok = Tokenizer::new(engine.manifest.tokenizer.clone());
+    let lang = Language::new(engine.manifest.corpus.clone());
+    let model = Model::load(engine.clone(), "pq-tiny").unwrap();
+    let (b, s) = model.fwd_geom().unwrap();
+    let w = data::calibration_windows(&lang, |t| tok.encode(t, false), s, b, tok.spec.bos);
+    let calib = IntTensor::new(vec![b, s], w.into_iter().flatten().collect()).unwrap();
+    let ids = tok.encode(&lang.eval_text(), false);
+    let windows = data::windows(&ids, s, tok.spec.bos, 8);
+    Ctx { engine, tok, calib, windows }
+}
+
+/// The seven paper presets, paired legacy/recipe (FT epochs kept small).
+fn presets() -> Vec<(SchemeConfig, Recipe, Vec<&'static str>, usize)> {
+    let p = Precision::new(4, 4, 4);
+    vec![
+        (SchemeConfig::fp16(), Recipe::fp16(), vec![], 0),
+        (SchemeConfig::rtn(4, 4, 4), Recipe::rtn(p), vec!["weight-quant"], 0),
+        (
+            SchemeConfig::quarot(4, 4, 4),
+            Recipe::quarot(p),
+            vec!["rotate", "weight-quant"],
+            0,
+        ),
+        (
+            SchemeConfig::smoothquant(4, 4, 4),
+            Recipe::smoothquant(p),
+            vec!["smooth", "re-observe", "weight-quant", "grid-init"],
+            2,
+        ),
+        (SchemeConfig::atom(4, 4, 4), Recipe::atom(p), vec!["weight-quant"], 0),
+        (
+            SchemeConfig::prefixquant_wo_ft(4, 4, 4),
+            Recipe::prefixquant_wo_ft(p),
+            vec!["rotate", "find-prefix", "re-observe", "weight-quant", "grid-init"],
+            2,
+        ),
+        (
+            SchemeConfig::prefixquant(4, 4, 4, 2),
+            Recipe::prefixquant(p, 2),
+            vec!["rotate", "find-prefix", "re-observe", "weight-quant", "grid-init", "finetune"],
+            2,
+        ),
+    ]
+}
+
+#[test]
+fn recipe_golden_parity() {
+    if !prefixquant::artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping recipe_golden_parity: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let c = ctx();
+    for (scheme, recipe, expected_passes, expected_obs_runs) in presets() {
+        assert_eq!(scheme.name, recipe.name, "preset names must match");
+        assert_eq!(scheme.mode, recipe.mode, "{}: preset modes must match", scheme.name);
+        assert_eq!(recipe.pass_names(), expected_passes, "{}: compiled pass plan", recipe.name);
+
+        // legacy golden reference
+        let mut legacy = Model::load(c.engine.clone(), "pq-tiny").unwrap();
+        let lrep = pipeline::quantize_legacy(&mut legacy, &scheme, &c.calib, &c.tok).unwrap();
+
+        // recipe under test
+        let mut fresh = Model::load(c.engine.clone(), "pq-tiny").unwrap();
+        let rrep = recipe.run(&mut fresh, &c.calib, &c.tok).unwrap();
+
+        // observable state parity: prefix, quant state, function, PPL
+        assert_eq!(
+            lrep.prefix_tokens,
+            rrep.prefix_tokens,
+            "{}: prefix tokens diverged",
+            recipe.name
+        );
+        assert_eq!(lrep.prefix_rendered, rrep.prefix_rendered, "{}", recipe.name);
+        assert_eq!(
+            legacy.prefix.tokens,
+            fresh.prefix.tokens,
+            "{}: installed prefix diverged",
+            recipe.name
+        );
+        assert_eq!(
+            legacy.quant.act_scales.data,
+            fresh.quant.act_scales.data,
+            "{}: act scales diverged",
+            recipe.name
+        );
+        assert_eq!(
+            legacy.quant.kv_scales.data,
+            fresh.quant.kv_scales.data,
+            "{}: kv scales diverged",
+            recipe.name
+        );
+        assert_eq!(
+            legacy.prefix.k.data,
+            fresh.prefix.k.data,
+            "{}: prefix K diverged",
+            recipe.name
+        );
+        let la = legacy.logits(scheme.mode, &c.calib).unwrap();
+        let lb = fresh.logits(recipe.mode, &c.calib).unwrap();
+        assert_eq!(la.data, lb.data, "{}: logits diverged", recipe.name);
+        let ppl_a = eval::perplexity(&legacy, scheme.mode, &c.windows).unwrap();
+        let ppl_b = eval::perplexity(&fresh, recipe.mode, &c.windows).unwrap();
+        assert_eq!(ppl_a, ppl_b, "{}: PPL diverged", recipe.name);
+
+        // per-stage report structure + the v2 observation economy
+        assert_eq!(rrep.stages.len(), expected_passes.len(), "{}", recipe.name);
+        for s in &rrep.stages {
+            assert!(s.seconds >= 0.0 && !s.detail.is_empty(), "{}: stage {s:?}", recipe.name);
+        }
+        assert_eq!(
+            rrep.observation_runs,
+            expected_obs_runs,
+            "{}: observation-cache economy",
+            recipe.name
+        );
+        if scheme.use_prefix {
+            assert!(rrep.t_find_prefix() > 0.0, "{}: find-prefix must be timed", recipe.name);
+            assert!(
+                rrep.pre_report.is_some() && rrep.post_report.is_some(),
+                "{}: prefix recipes report pre+post outliers",
+                recipe.name
+            );
+            // legacy reports the same totals
+            assert_eq!(
+                lrep.post_report.as_ref().map(|r| r.total_outliers),
+                rrep.post_report.as_ref().map(|r| r.total_outliers),
+                "{}",
+                recipe.name
+            );
+        }
+        if scheme.ft_epochs > 0 {
+            let lf = lrep.ft.as_ref().expect("legacy ft report");
+            let rf = rrep.ft.as_ref().expect("recipe ft report");
+            assert_eq!(lf.layers, rf.layers, "{}: FT trajectory diverged", recipe.name);
+        }
+        let runs = rrep.observation_runs;
+        eprintln!("parity ok: {:<28} ppl={ppl_b:.4} obs_runs={runs}", recipe.name);
+    }
+}
