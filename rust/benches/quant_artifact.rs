@@ -122,6 +122,7 @@ fn synth_artifact(cfg: &ModelConfig, weights: WeightStore, rng: &mut SplitMix64)
             prefix_tokens: vec![1, 49, 49],
             n_prefix: 3,
             n_ctx_sinks: 3,
+            weight_quant: vec![],
             content_hash: 0,
         },
         weights,

@@ -1,0 +1,139 @@
+//! In-place fast Walsh–Hadamard transform (normalized, O(n log n)).
+//!
+//! The Sylvester–Hadamard matrix `H = hadamard(n)` (see `quant::rotation`)
+//! is the Kronecker power of `[[1,1],[1,-1]]/√2`, which factors into log₂ n
+//! butterfly stages; applying the stages in place replaces every
+//! O(n²)-per-row explicit-matrix product of rotation folding with an
+//! O(n log n) pass.  `H` is symmetric, so `x·H` (row transform) and `Hᵀ·W =
+//! H·W` (column transform) are both the same per-vector butterfly.
+//!
+//! Parity with the explicit matrices is pinned by `tests/kernel_parity.rs`
+//! (≤1e-5 max-normalized error; the FWHT is the *better*-conditioned side —
+//! log-depth summation instead of length-n dot products).
+//!
+//! Threading follows the layer's determinism contract: workers partition
+//! rows (or, for column transforms, the transposed rows), never a single
+//! butterfly, so results are bit-identical for every `PQ_THREADS`.
+
+use super::{gemm, par_bands};
+
+/// Normalized in-place FWHT of the column sub-range [c0, c0+len) of every
+/// row of a row-major [rows, cols] buffer — equivalent to right-multiplying
+/// that column block by `hadamard(len)` (used per head for the R2 fold).
+/// `len` must be a power of two.
+pub fn fwht_rows_sub_nt(
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    c0: usize,
+    len: usize,
+    nthreads: usize,
+) {
+    assert!(len.is_power_of_two(), "fwht length {len} not a power of 2");
+    assert!(c0 + len <= cols, "fwht column range out of bounds");
+    assert_eq!(data.len(), rows * cols, "fwht element count");
+    let norm = 1.0 / (len as f32).sqrt();
+    let nt = super::useful_threads(nthreads, rows, rows * len);
+    par_bands(data, rows, cols, nt, |_r0, band| {
+        for row in band.chunks_mut(cols) {
+            let x = &mut row[c0..c0 + len];
+            fwht_inplace(x);
+            for v in x.iter_mut() {
+                *v *= norm;
+            }
+        }
+    });
+}
+
+/// Normalized in-place FWHT of every full row — `W ← W·hadamard(cols)`.
+pub fn fwht_rows_nt(data: &mut [f32], rows: usize, cols: usize, nthreads: usize) {
+    fwht_rows_sub_nt(data, rows, cols, 0, cols, nthreads);
+}
+
+/// Normalized in-place FWHT down every column — `W ← hadamard(rows)ᵀ·W`
+/// (= `hadamard(rows)·W`; H is symmetric).  Implemented as transpose →
+/// row FWHT → transpose back, which keeps the butterflies contiguous and
+/// the parallelism banded.
+pub fn fwht_cols_nt(data: &mut [f32], rows: usize, cols: usize, nthreads: usize) {
+    assert_eq!(data.len(), rows * cols, "fwht element count");
+    let mut t = gemm::transpose_nt(data, rows, cols, nthreads);
+    fwht_rows_nt(&mut t, cols, rows, nthreads);
+    data.copy_from_slice(&gemm::transpose_nt(&t, cols, rows, nthreads));
+}
+
+/// Unnormalized butterfly (smallest stride first; stage order is
+/// irrelevant because the per-stage factors I ⊗ H₂ ⊗ I commute).
+fn fwht_inplace(x: &mut [f32]) {
+    let n = x.len();
+    let mut h = 1;
+    while h < n {
+        let step = h * 2;
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += step;
+        }
+        h = step;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwht_length_two_matches_hand_math() {
+        // [a b]·H₂ = [(a+b)/√2, (a−b)/√2]
+        let mut d = vec![3.0f32, 1.0];
+        fwht_rows_nt(&mut d, 1, 2, 1);
+        let r = 1.0 / 2.0f32.sqrt();
+        assert!((d[0] - 4.0 * r).abs() < 1e-6);
+        assert!((d[1] - 2.0 * r).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fwht_is_involutive() {
+        // H·H = I for the normalized symmetric H: applying twice restores.
+        let orig: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut d = orig.clone();
+        fwht_rows_nt(&mut d, 2, 16, 2);
+        fwht_rows_nt(&mut d, 2, 16, 2);
+        for (a, b) in d.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fwht_preserves_energy() {
+        let orig: Vec<f32> = (0..64).map(|i| ((i * 7 % 13) as f32) - 6.0).collect();
+        let mut d = orig.clone();
+        fwht_cols_nt(&mut d, 16, 4, 3);
+        let e0: f64 = orig.iter().map(|&v| (v * v) as f64).sum();
+        let e1: f64 = d.iter().map(|&v| (v * v) as f64).sum();
+        assert!(((e0 - e1) / e0).abs() < 1e-5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fwht_rejects_non_pow2() {
+        let mut d = vec![0.0f32; 12];
+        fwht_rows_nt(&mut d, 1, 12, 1);
+    }
+
+    #[test]
+    fn fwht_sub_range_leaves_rest_untouched() {
+        let mut d = vec![1.0f32; 16]; // 2 rows × 8 cols
+        fwht_rows_sub_nt(&mut d, 2, 8, 4, 4, 2);
+        for row in d.chunks(8) {
+            assert_eq!(&row[..4], &[1.0; 4]);
+            // all-ones block: first WHT coefficient = 4/√4 = 2, rest 0
+            assert!((row[4] - 2.0).abs() < 1e-6);
+            assert!(row[5..].iter().all(|&v| v.abs() < 1e-6));
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Cache-blocked, multithreaded dense matmul + blocked transpose.
+//!
+//! The backend of `Tensor::matmul` / `Tensor::transpose2` and of the fused
+//! weight quantizer's panel transposes.  Row-major f32 throughout.
+//!
+//! Blocking: the k and n loops are tiled ([`KC`] × [`NC`], ≈256 KB of B per
+//! panel) so a band's active B panel stays cache-resident instead of being
+//! re-streamed from memory for every output row — the naive kernel's
+//! failure mode.  The inner loop is the axpy form (broadcast `a[i][p]`,
+//! stream a contiguous B row slice), which auto-vectorizes and keeps each
+//! output element's accumulation in strictly increasing-k order: the same
+//! order as the naive triple loop and the same order for every thread
+//! count / band split (see the determinism contract in [`super`]).
+
+use super::par_bands;
+
+/// k-dimension tile.
+const KC: usize = 128;
+/// n-dimension tile (KC×NC×4 bytes ≈ 256 KB B panel).
+const NC: usize = 512;
+/// Transpose tile edge.
+const TB: usize = 32;
+
+/// out[m,n] = a[m,k] · b[k,n], parallelized over row bands with the
+/// session-default thread count.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_nt(a, b, m, k, n, super::threads())
+}
+
+/// [`matmul`] with an explicit worker count (the parity tests sweep this to
+/// pin thread-count independence).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, nthreads: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul lhs element count");
+    assert_eq!(b.len(), k * n, "matmul rhs element count");
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let nt = super::useful_threads(nthreads, m, m * k * n);
+    par_bands(&mut out, m, n, nt, |r0, oband| {
+        let rows = oband.len() / n;
+        band_matmul(&a[r0 * k..(r0 + rows) * k], b, oband, k, n);
+    });
+    out
+}
+
+/// One row band: k/n-tiled axpy kernel (accumulation order fixed per
+/// element regardless of tiling — tiles advance k monotonically).
+fn band_matmul(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    let rows = out.len() / n;
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        let mut n0 = 0;
+        while n0 < n {
+            let n1 = (n0 + NC).min(n);
+            for r in 0..rows {
+                let arow = &a[r * k..(r + 1) * k];
+                let orow = &mut out[r * n + n0..r * n + n1];
+                for p in k0..k1 {
+                    let x = arow[p];
+                    let brow = &b[p * n + n0..p * n + n1];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += x * bv;
+                    }
+                }
+            }
+            n0 = n1;
+        }
+        k0 = k1;
+    }
+}
+
+/// Blocked transpose of a row-major [rows, cols] buffer → [cols, rows],
+/// session-default thread count.
+pub fn transpose2(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    transpose_nt(src, rows, cols, super::threads())
+}
+
+/// [`transpose2`] with an explicit worker count.  Tiled ([`TB`]²) so both
+/// sides touch cache lines coherently; parallel over output row bands
+/// (= source column bands).
+pub fn transpose_nt(src: &[f32], rows: usize, cols: usize, nthreads: usize) -> Vec<f32> {
+    assert_eq!(src.len(), rows * cols, "transpose element count");
+    let mut out = vec![0.0f32; src.len()];
+    if rows == 0 || cols == 0 {
+        return out;
+    }
+    let nt = super::useful_threads(nthreads, cols, rows * cols);
+    par_bands(&mut out, cols, rows, nt, |c0, oband| {
+        let cn = oband.len() / rows;
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + TB).min(rows);
+            let mut cc = 0;
+            while cc < cn {
+                let cend = (cc + TB).min(cn);
+                for r in r0..r1 {
+                    let srow = &src[r * cols + c0 + cc..r * cols + c0 + cend];
+                    for (ci, &v) in srow.iter().enumerate() {
+                        oband[(cc + ci) * rows + r] = v;
+                    }
+                }
+                cc = cend;
+            }
+            r0 = r1;
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity_and_shapes() {
+        let a: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0];
+        let eye: Vec<f32> = vec![1.0, 0.0, 0.0, 1.0];
+        for nt in [1usize, 2, 7] {
+            assert_eq!(matmul_nt(&a, &eye, 2, 2, 2, nt), a);
+        }
+    }
+
+    #[test]
+    fn matmul_rectangular_known_values() {
+        // [1 2 3; 4 5 6] · [1 0; 0 1; 1 1] = [4 5; 10 11]
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        assert_eq!(matmul_nt(&a, &b, 2, 3, 2, 3), vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let src: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        for nt in [1usize, 2, 5] {
+            let t = transpose_nt(&src, 3, 4, nt);
+            assert_eq!(t[0], 0.0);
+            assert_eq!(t[1], 4.0);
+            let back = transpose_nt(&t, 4, 3, nt);
+            assert_eq!(back, src);
+        }
+    }
+
+    #[test]
+    fn empty_dims_are_fine() {
+        let b = vec![0.0f32; 12];
+        assert!(matmul_nt(&[], &b, 0, 3, 4, 2).is_empty());
+        assert!(transpose_nt(&[], 0, 5, 2).is_empty());
+    }
+}

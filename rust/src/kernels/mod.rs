@@ -1,0 +1,144 @@
+//! Host kernel layer: the shared compute substrate of the quantize path.
+//!
+//! Everything the pipeline computes host-side — rotation folding, weight
+//! quantization, scale search, smoothing statistics, the fine-tune
+//! optimizer — routes through this module (see rust/DESIGN.md "Host kernel
+//! layer"):
+//!
+//!   * [`gemm`]     — cache-blocked, multithreaded matmul and blocked
+//!     transpose (the `Tensor::matmul` / `Tensor::transpose2` backends);
+//!   * [`fwht`]     — in-place O(n log n) fast Walsh–Hadamard transform,
+//!     row- and column-wise, replacing the explicit Hadamard-matrix
+//!     products in rotation folding;
+//!   * [`quantize`] — fused single-pass weight quantizer: scale search with
+//!     a lossless clip-bound pruned γ grid + fake-quant over channel-major
+//!     panels, reciprocal multiplies in the inner loop;
+//!   * [`ops`]      — misc element-wise kernels (row scaling, abs-max
+//!     reductions, the fused Adam update of block fine-tuning);
+//!   * [`naive`]    — FROZEN pre-kernel-layer implementations, the golden
+//!     references of `tests/kernel_parity.rs` and the baselines of
+//!     `benches/quant_speed.rs`.
+//!
+//! ## Threading and determinism contract
+//!
+//! Worker count comes from the `PQ_THREADS` env var (default:
+//! `available_parallelism`), re-read on every kernel call so tests can pin
+//! it.  Threads only ever partition OUTPUT elements into disjoint
+//! contiguous bands; no kernel splits a single output's reduction across
+//! threads, and all blocking constants are fixed.  Every output element
+//! therefore sees the exact same sequence of floating-point operations for
+//! every thread count: results are bit-identical under any `PQ_THREADS`
+//! (CI pins this by re-running the suite with `PQ_THREADS=1`).
+//!
+//! Both `pipeline::quantize_legacy` and the v2 recipe passes call these
+//! kernels through the same shared entry points (`rotation::fold_rotations`,
+//! `quantizer::quant_weight_*`, `calibrate`, `finetune`), so the golden
+//! `recipe_parity` suite stays green by construction: legacy and v2 share
+//! summation order, not just algorithms.
+
+pub mod fwht;
+pub mod gemm;
+pub mod naive;
+pub mod ops;
+pub mod quantize;
+
+/// Hard cap on worker threads (a `PQ_THREADS=100000` typo should not fork
+/// bomb the host).
+pub const MAX_THREADS: usize = 64;
+
+/// Minimum elementary operations a band must amortize before another
+/// worker thread pays for itself (spawn+join ≈ tens of µs).
+const MIN_WORK_PER_THREAD: usize = 16 * 1024;
+
+/// Cap a requested worker count by the problem size: at most one worker
+/// per item, and at most one per [`MIN_WORK_PER_THREAD`] units of
+/// `total_work` — small tensors run serial instead of paying spawn
+/// overhead.  Purely a performance cap; results are identical for every
+/// thread count (see the determinism contract above).
+pub(crate) fn useful_threads(nthreads: usize, items: usize, total_work: usize) -> usize {
+    let by_work = (total_work / MIN_WORK_PER_THREAD).max(1);
+    nthreads.clamp(1, items.max(1)).min(by_work)
+}
+
+/// Worker-thread count for the host kernels: `PQ_THREADS` when set to a
+/// positive integer, else `available_parallelism`, clamped to
+/// [`MAX_THREADS`].  Read on every call (cheap next to any kernel) so the
+/// knob works mid-process.
+pub fn threads() -> usize {
+    match std::env::var("PQ_THREADS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(t) if t >= 1 => t.min(MAX_THREADS),
+            _ => default_threads(),
+        },
+        Err(_) => default_threads(),
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(MAX_THREADS)
+}
+
+/// Run `f(first_item, band)` over contiguous bands of `items` fixed-size
+/// items (`item_len` elements each), one scoped worker per band.  Bands
+/// partition the buffer, so this is safe-Rust data parallelism; per-element
+/// work is unchanged by the banding, which is what makes every kernel's
+/// output independent of the thread count.  This is the pure banding
+/// mechanism — entry points pick `nthreads` via [`useful_threads`] so tiny
+/// workloads stay serial.
+pub(crate) fn par_bands<F>(data: &mut [f32], items: usize, item_len: usize, nthreads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(data.len(), items * item_len);
+    if items == 0 || item_len == 0 {
+        return;
+    }
+    let nt = nthreads.clamp(1, items);
+    if nt <= 1 {
+        f(0, data);
+        return;
+    }
+    let band = (items + nt - 1) / nt;
+    std::thread::scope(|s| {
+        for (bi, chunk) in data.chunks_mut(band * item_len).enumerate() {
+            let f = &f;
+            s.spawn(move || f(bi * band, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_is_positive_and_capped() {
+        let t = threads();
+        assert!(t >= 1 && t <= MAX_THREADS);
+    }
+
+    #[test]
+    fn par_bands_covers_every_item_once() {
+        for items in [1usize, 2, 3, 7, 64] {
+            for nt in [1usize, 2, 3, 16, 100] {
+                let mut data = vec![0.0f32; items * 3];
+                par_bands(&mut data, items, 3, nt, |i0, band| {
+                    for (off, row) in band.chunks_mut(3).enumerate() {
+                        for v in row {
+                            *v += (i0 + off) as f32 + 1.0;
+                        }
+                    }
+                });
+                for (i, row) in data.chunks(3).enumerate() {
+                    assert!(row.iter().all(|&v| v == (i + 1) as f32), "item {i} nt={nt}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_bands_empty_is_noop() {
+        let mut data: Vec<f32> = vec![];
+        par_bands(&mut data, 0, 4, 8, |_, _| panic!("no bands expected"));
+    }
+}

@@ -1,0 +1,197 @@
+//! FROZEN naive host kernels — the pre-kernel-layer implementations.
+//!
+//! Kept verbatim (modulo the shared scalar quantization primitive, see
+//! below) as (a) the golden references `tests/kernel_parity.rs` compares
+//! the blocked / FWHT / fused kernels against, and (b) the baselines
+//! `benches/quant_speed.rs` measures speedups over.  Do not optimize or
+//! "fix" anything here: being slow and simple is the point.
+//!
+//! The quantizer reference intentionally shares
+//! [`super::quantize::fq_scalar`] (reciprocal form) with the fused kernel
+//! so parity over steps and codes is bit-exact; what is frozen is the
+//! STRUCTURE — column-strided gather into a fresh `Vec` per channel,
+//! full-grid O(grid·n) scale scan in γ order, second quantize pass.
+
+use anyhow::Result;
+
+use super::quantize::{self, candidate_step, STEP_FLOOR};
+use crate::config::ModelConfig;
+use crate::runtime::WeightStore;
+use crate::tensor::Tensor;
+
+/// The seed repo's triple-loop matmul (axpy inner loop, zero-skip branch).
+pub fn matmul(a: &Tensor, rhs: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(rhs.rank(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+    assert_eq!(k, k2, "matmul inner dim");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.data[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let row = &rhs.data[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(row) {
+                *o += av * bv;
+            }
+        }
+    }
+    Tensor { shape: vec![m, n], data: out }
+}
+
+/// The seed repo's element-at-a-time transpose.
+pub fn transpose2(t: &Tensor) -> Tensor {
+    assert_eq!(t.rank(), 2);
+    let (m, n) = (t.shape[0], t.shape[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = t.data[i * n + j];
+        }
+    }
+    Tensor { shape: vec![n, m], data: out }
+}
+
+/// Full-grid scale scan (no pruning, γ-index order, first strict minimum).
+pub fn search_scale(xs: &[f32], qm: f32, grid: usize) -> f32 {
+    let maxabs = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8);
+    let rtn = (maxabs / qm).max(STEP_FLOOR);
+    if grid <= 1 {
+        return rtn;
+    }
+    let mut best = (f64::INFINITY, rtn);
+    for i in 0..grid {
+        let s = candidate_step(maxabs, qm, grid, i);
+        let e = quantize::sse(xs, s, 1.0 / s, qm);
+        if e < best.0 {
+            best = (e, s);
+        }
+    }
+    best.1
+}
+
+/// The old two-pass per-channel weight quantizer: gather each column into a
+/// fresh Vec, search, then re-walk the column to fake-quantize.
+pub fn quant_weight_per_channel(w: &mut Tensor, qm: f32, grid: usize) -> Vec<f32> {
+    assert_eq!(w.rank(), 2);
+    let (rows, cols) = (w.shape[0], w.shape[1]);
+    let mut steps = vec![0.0f32; cols];
+    for j in 0..cols {
+        let col: Vec<f32> = (0..rows).map(|i| w.data[i * cols + j]).collect();
+        let s = search_scale(&col, qm, grid);
+        steps[j] = s;
+        let rinv = 1.0 / s;
+        for i in 0..rows {
+            let v = &mut w.data[i * cols + j];
+            *v = quantize::fq_scalar(*v, s, rinv, qm);
+        }
+    }
+    steps
+}
+
+/// The old two-pass per-group weight quantizer (groups along the input
+/// dim); returns steps channel-major like the fused kernel.
+pub fn quant_weight_per_group(w: &mut Tensor, qm: f32, group: usize, grid: usize) -> Vec<f32> {
+    assert_eq!(w.rank(), 2);
+    let (rows, cols) = (w.shape[0], w.shape[1]);
+    let group = group.max(1);
+    let mut steps = Vec::new();
+    for j in 0..cols {
+        let mut g0 = 0;
+        while g0 < rows {
+            let g1 = (g0 + group).min(rows);
+            let seg: Vec<f32> = (g0..g1).map(|i| w.data[i * cols + j]).collect();
+            let s = search_scale(&seg, qm, grid);
+            steps.push(s);
+            let rinv = 1.0 / s;
+            for i in g0..g1 {
+                let v = &mut w.data[i * cols + j];
+                *v = quantize::fq_scalar(*v, s, rinv, qm);
+            }
+            g0 = g1;
+        }
+    }
+    steps
+}
+
+/// Rotation folding via explicit Hadamard-matrix products (the old
+/// `fold_rotations` body driven by the naive matmul).  Assumes norm gains
+/// were already absorbed.
+pub fn fold_rotations(cfg: &ModelConfig, ws: &mut WeightStore) -> Result<()> {
+    let r1 = crate::quant::rotation::hadamard(cfg.d_model);
+    let r1t = transpose2(&r1);
+    let r2 = crate::quant::rotation::hadamard(cfg.d_head);
+    let r2t = transpose2(&r2);
+    let r4 = crate::quant::rotation::hadamard(cfg.d_ff);
+    let r4t = transpose2(&r4);
+
+    let emb = ws.get("emb").unwrap().clone();
+    ws.set("emb", matmul(&emb, &r1));
+    let head = ws.get("head").unwrap().clone();
+    ws.set("head", matmul(&r1t, &head));
+
+    for l in 0..cfg.n_layers {
+        let name = |t: &str| format!("layers.{l}.{t}");
+        for t in ["wq", "wk", "wv", "wg", "wu"] {
+            let w = ws.get(&name(t)).unwrap().clone();
+            ws.set(&name(t), matmul(&r1t, &w));
+        }
+        for t in ["wo", "wd"] {
+            let w = ws.get(&name(t)).unwrap().clone();
+            ws.set(&name(t), matmul(&w, &r1));
+        }
+        let (d, dh, h) = (cfg.d_model, cfg.d_head, cfg.n_heads);
+        let mut wv = ws.get(&name("wv")).unwrap().clone();
+        for head_i in 0..h {
+            let mut block = Tensor::zeros(&[d, dh]);
+            for i in 0..d {
+                for j in 0..dh {
+                    block.data[i * dh + j] = wv.data[i * d + head_i * dh + j];
+                }
+            }
+            let rotated = matmul(&block, &r2);
+            for i in 0..d {
+                for j in 0..dh {
+                    wv.data[i * d + head_i * dh + j] = rotated.data[i * dh + j];
+                }
+            }
+        }
+        ws.set(&name("wv"), wv);
+        let mut wo = ws.get(&name("wo")).unwrap().clone();
+        for head_i in 0..h {
+            let mut block = Tensor::zeros(&[dh, d]);
+            for i in 0..dh {
+                for j in 0..d {
+                    block.data[i * d + j] = wo.data[(head_i * dh + i) * d + j];
+                }
+            }
+            let rotated = matmul(&r2t, &block);
+            for i in 0..dh {
+                for j in 0..d {
+                    wo.data[(head_i * dh + i) * d + j] = rotated.data[i * d + j];
+                }
+            }
+        }
+        ws.set(&name("wo"), wo);
+        let wd = ws.get(&name("wd")).unwrap().clone();
+        ws.set(&name("wd"), matmul(&r4t, &wd));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_matmul_identity() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let eye = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        assert_eq!(matmul(&a, &eye).data, a.data);
+        assert_eq!(transpose2(&a).data, vec![1.0, 3.0, 2.0, 4.0]);
+    }
+}

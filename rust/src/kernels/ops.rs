@@ -1,0 +1,160 @@
+//! Misc element-wise host kernels: row scaling, abs-max reductions, and the
+//! fused Adam update of block fine-tuning.  All banded over outputs per the
+//! layer's determinism contract (max is exactly associative/commutative and
+//! the Adam update is element-independent, so any band split is
+//! bit-identical).
+
+use super::par_bands;
+
+/// Scale row r of a row-major [rows, cols] buffer by `g[r]` (diag(g)·W).
+pub fn scale_rows_nt(data: &mut [f32], rows: usize, cols: usize, g: &[f32], nthreads: usize) {
+    assert_eq!(data.len(), rows * cols, "scale_rows element count");
+    assert_eq!(g.len(), rows, "scale_rows gain count");
+    let nt = super::useful_threads(nthreads, rows, rows * cols);
+    par_bands(data, rows, cols, nt, |r0, band| {
+        for (row, &gv) in band.chunks_mut(cols).zip(&g[r0..]) {
+            for v in row {
+                *v *= gv;
+            }
+        }
+    });
+}
+
+/// Per-row abs-max of a row-major [rows, cols] buffer.
+pub fn absmax_rows_nt(data: &[f32], rows: usize, cols: usize, nthreads: usize) -> Vec<f32> {
+    assert_eq!(data.len(), rows * cols, "absmax_rows element count");
+    let mut out = vec![0.0f32; rows];
+    if cols == 0 {
+        return out;
+    }
+    let nt = super::useful_threads(nthreads, rows, rows * cols);
+    par_bands(&mut out, rows, 1, nt, |r0, oband| {
+        for (o, row) in oband.iter_mut().zip(data[r0 * cols..].chunks(cols)) {
+            *o = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        }
+    });
+    out
+}
+
+/// Hyperparameters of one fused Adam update (bias corrections precomputed
+/// by the caller from the step counter).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamStep {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// 1 − β₁ᵗ
+    pub b1c: f32,
+    /// 1 − β₂ᵗ
+    pub b2c: f32,
+}
+
+/// Element-wise Adam update of `params` (with moments `m`/`v` and gradient
+/// `grads`), parallelized over parameter bands.
+pub fn adam_step_nt(
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    grads: &[f32],
+    k: AdamStep,
+    nthreads: usize,
+) {
+    let n = params.len();
+    assert!(m.len() == n && v.len() == n && grads.len() == n, "adam buffer lengths");
+    if n == 0 {
+        return;
+    }
+    let nt = super::useful_threads(nthreads, n, n);
+    if nt <= 1 {
+        adam_band(params, m, v, grads, k);
+        return;
+    }
+    let band = (n + nt - 1) / nt;
+    std::thread::scope(|s| {
+        let pm = params.chunks_mut(band).zip(m.chunks_mut(band));
+        let vg = v.chunks_mut(band).zip(grads.chunks(band));
+        for ((p, mm), (vv, g)) in pm.zip(vg) {
+            s.spawn(move || adam_band(p, mm, vv, g, k));
+        }
+    });
+}
+
+/// Banded column-max reduce: split the `rows` of a row-major [rows, cols]
+/// buffer into worker bands, run `f(band) -> Vec<f32>` (must return `cols`
+/// values — e.g. a fused per-row transform + column abs-max), and merge
+/// the per-band vectors with element-wise max.  Max is exactly associative
+/// and commutative over non-NaN f32, so the merge is bit-identical for
+/// every thread count.
+pub fn rowband_max_nt<F>(data: &[f32], rows: usize, cols: usize, nthreads: usize, f: F) -> Vec<f32>
+where
+    F: Fn(&[f32]) -> Vec<f32> + Sync,
+{
+    assert_eq!(data.len(), rows * cols, "rowband_max element count");
+    if rows == 0 || cols == 0 {
+        return vec![0.0; cols];
+    }
+    let nt = super::useful_threads(nthreads, rows, rows * cols);
+    if nt <= 1 {
+        return f(data);
+    }
+    let band = (rows + nt - 1) / nt;
+    let mut out = vec![0.0f32; cols];
+    std::thread::scope(|s| {
+        let handles: Vec<_> = data
+            .chunks(band * cols)
+            .map(|chunk| {
+                let f = &f;
+                s.spawn(move || f(chunk))
+            })
+            .collect();
+        for handle in handles {
+            let part = handle.join().expect("rowband_max worker panicked");
+            for (o, p) in out.iter_mut().zip(part) {
+                *o = o.max(p);
+            }
+        }
+    });
+    out
+}
+
+fn adam_band(params: &mut [f32], m: &mut [f32], v: &mut [f32], grads: &[f32], k: AdamStep) {
+    for ((p, mm), (vv, &g)) in
+        params.iter_mut().zip(m.iter_mut()).zip(v.iter_mut().zip(grads.iter()))
+    {
+        *mm = k.beta1 * *mm + (1.0 - k.beta1) * g;
+        *vv = k.beta2 * *vv + (1.0 - k.beta2) * g * g;
+        let mh = *mm / k.b1c;
+        let vh = *vv / k.b2c;
+        *p -= k.lr * mh / (vh.sqrt() + k.eps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_and_absmax() {
+        let mut d = vec![1.0f32, -2.0, 3.0, -4.0];
+        scale_rows_nt(&mut d, 2, 2, &[2.0, 0.5], 2);
+        assert_eq!(d, vec![2.0, -4.0, 1.5, -2.0]);
+        assert_eq!(absmax_rows_nt(&d, 2, 2, 3), vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn adam_matches_scalar_reference_for_any_thread_count() {
+        // n above the serial-fallback work threshold so bands really split
+        let n = 50_000;
+        let k = AdamStep { lr: 0.1, beta1: 0.9, beta2: 0.95, eps: 1e-8, b1c: 0.1, b2c: 0.05 };
+        let grads: Vec<f32> = (0..n).map(|i| (i as f32 * 0.13).sin()).collect();
+        let init: Vec<f32> = (0..n).map(|i| (i % 1000) as f32 * 0.01).collect();
+        let mut want = (init.clone(), vec![0.0f32; n], vec![0.0f32; n]);
+        adam_band(&mut want.0, &mut want.1, &mut want.2, &grads, k);
+        for nt in [1usize, 2, 3, 16] {
+            let mut got = (init.clone(), vec![0.0f32; n], vec![0.0f32; n]);
+            adam_step_nt(&mut got.0, &mut got.1, &mut got.2, &grads, k, nt);
+            assert_eq!(got, want, "nt={nt}");
+        }
+    }
+}

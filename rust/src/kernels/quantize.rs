@@ -1,0 +1,307 @@
+//! Fused single-pass weight quantizer + lossless pruned scale search.
+//!
+//! The old path walked each output channel column-strided, gathered it into
+//! a fresh `Vec`, ran an O(grid·n) MSE scan, then re-walked the column to
+//! fake-quantize.  This kernel transposes the weight ONCE into channel-major
+//! panels (contiguous channels), fuses scale search + fake-quant into a
+//! single pass per channel, multiplies by precomputed reciprocal steps
+//! instead of dividing, and parallelizes across channels.
+//!
+//! The γ grid search is EXACT: it picks the same step the naive full scan
+//! picks (first strict minimum in γ order), but evaluates candidates
+//! coarse-to-fine and skips any candidate whose clip-error lower bound —
+//! computed in O(log n) from sorted-magnitude prefix sums — already exceeds
+//! the incumbent.  Elements with |x| > (qmax+1.5)·s quantize to magnitude
+//! ≤ (qmax+1)·s, so Σ(|x|−(qmax+1)·s)² over them bounds the true SSE from
+//! below; a qm-scaled slack on the comparison absorbs the floating-point
+//! rounding on both sides (see `search_step`).
+//! `tests/kernel_parity.rs` pins step/code identity against the frozen
+//! two-pass reference.
+
+use super::gemm;
+
+/// Minimum step size — the old per-element `s.max(1e-8)` clamp of `fq`,
+/// hoisted to step CONSTRUCTION so inner loops take pre-clamped steps and
+/// their reciprocals.
+pub const STEP_FLOOR: f32 = 1e-8;
+
+/// Fake-quantize one value: round(x·rinv) clamped to [-qmax-1, qmax], times
+/// s.  `rinv` must be `1.0 / s` for a pre-clamped positive `s`.
+#[inline]
+pub fn fq_scalar(x: f32, s: f32, rinv: f32, qm: f32) -> f32 {
+    (x * rinv).round().clamp(-qm - 1.0, qm) * s
+}
+
+/// Fake-quant a slice in place; returns the summed squared error (f64,
+/// accumulated in index order — part of the determinism contract).
+pub fn fq_slice(xs: &mut [f32], s: f32, rinv: f32, qm: f32) -> f64 {
+    let mut err = 0.0f64;
+    for x in xs.iter_mut() {
+        let q = fq_scalar(*x, s, rinv, qm);
+        let d = (q - *x) as f64;
+        err += d * d;
+        *x = q;
+    }
+    err
+}
+
+/// Summed squared quantization error of a slice under step `s` (read-only
+/// twin of [`fq_slice`]; same accumulation order).
+pub fn sse(xs: &[f32], s: f32, rinv: f32, qm: f32) -> f64 {
+    xs.iter()
+        .map(|&x| {
+            let d = (fq_scalar(x, s, rinv, qm) - x) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Candidate step i of the γ grid: γ·max|x|/qmax with γ ∈ [0.15, 1.0]
+/// evenly spaced over `grid` points, floored to [`STEP_FLOOR`].
+/// Requires `grid >= 2`.
+#[inline]
+pub fn candidate_step(maxabs: f32, qm: f32, grid: usize, i: usize) -> f32 {
+    let gamma = 0.15 + 0.85 * (i as f32) / (grid - 1) as f32;
+    (gamma * maxabs / qm).max(STEP_FLOOR)
+}
+
+/// Coarse-to-fine evaluation order over the γ grid: every 4th index (plus
+/// the last) first — landing a strong incumbent early so the clip bound
+/// prunes most of the fine pass — then the remaining indices.
+fn eval_order(grid: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..grid).step_by(4).collect();
+    if grid > 0 && (grid - 1) % 4 != 0 {
+        order.push(grid - 1);
+    }
+    let mut seen = vec![false; grid];
+    for &i in &order {
+        seen[i] = true;
+    }
+    for (i, s) in seen.iter().enumerate() {
+        if !*s {
+            order.push(i);
+        }
+    }
+    order
+}
+
+/// Grid-search the step minimizing quantization SSE — exactly the step the
+/// naive full scan returns (first strict minimum in γ order), with pruning.
+/// `grid <= 1` degenerates to RTN (γ = 1).
+pub fn search_step(xs: &[f32], qm: f32, grid: usize) -> f32 {
+    let maxabs = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8);
+    let rtn = (maxabs / qm).max(STEP_FLOOR);
+    if grid <= 1 || xs.is_empty() {
+        return rtn;
+    }
+    // sorted-descending magnitudes + prefix sums Σ|x|, Σx² over the top-t
+    // (total_cmp: a NaN weight must not panic a worker — like the old
+    // scan, NaN SSEs lose every `<` comparison and the RTN default wins)
+    let mut mags: Vec<f32> = xs.iter().map(|v| v.abs()).collect();
+    mags.sort_unstable_by(|a, b| b.total_cmp(a));
+    let mut ps1 = Vec::with_capacity(mags.len() + 1);
+    let mut ps2 = Vec::with_capacity(mags.len() + 1);
+    let (mut s1, mut s2) = (0.0f64, 0.0f64);
+    ps1.push(0.0);
+    ps2.push(0.0);
+    for &m in &mags {
+        let m = m as f64;
+        s1 += m;
+        s2 += m * m;
+        ps1.push(s1);
+        ps2.push(s2);
+    }
+    let mut best_err = f64::INFINITY;
+    let mut best_i = usize::MAX;
+    let mut best_s = rtn;
+    // Pruning slack: the closed-form bound uses the exact (qm+1)·s dequant
+    // magnitude while fq_scalar rounds it to f32, so a near-clip element's
+    // true error term can undershoot the bound by up to ~2(qm+1)·2⁻²⁴
+    // relative (≈3e-5 at 8-bit).  Scale the guard with qm, with ~4x
+    // headroom on top — still prunes the low-γ candidates, whose bounds
+    // exceed the incumbent by orders of magnitude, not parts per thousand.
+    let slack = 4e-6 * (qm as f64 + 2.0);
+    for i in eval_order(grid) {
+        let s = candidate_step(maxabs, qm, grid, i);
+        let clip = (qm as f64 + 1.5) * s as f64;
+        let t = mags.partition_point(|&m| m as f64 > clip);
+        let kk = (qm as f64 + 1.0) * s as f64;
+        let lb = ps2[t] - 2.0 * kk * ps1[t] + t as f64 * kk * kk;
+        if lb > best_err * (1.0 + slack) {
+            continue; // provably cannot beat the incumbent
+        }
+        let e = sse(xs, s, 1.0 / s, qm);
+        // lexicographic (error, γ index) min == the full scan's
+        // first-strict-minimum winner, independent of evaluation order
+        if e < best_err || (e == best_err && i < best_i) {
+            best_err = e;
+            best_i = i;
+            best_s = s;
+        }
+    }
+    best_s
+}
+
+#[derive(Clone, Copy)]
+struct Spec {
+    qm: f32,
+    grid: usize,
+    /// rows per group (== rows for per-channel)
+    group: usize,
+}
+
+/// Per-channel (column) symmetric quantization of a row-major [rows, cols]
+/// weight buffer; returns one step per channel.
+pub fn quant_per_channel_nt(
+    w: &mut [f32],
+    rows: usize,
+    cols: usize,
+    qm: f32,
+    grid: usize,
+    nthreads: usize,
+) -> Vec<f32> {
+    let mut steps = vec![0.0f32; cols];
+    quant_panels(w, rows, cols, Spec { qm, grid, group: rows.max(1) }, &mut steps, nthreads);
+    steps
+}
+
+/// Per-group variant: `group` consecutive input rows per step within each
+/// channel.  Steps are channel-major: all groups of channel 0, then
+/// channel 1, …  (⌈rows/group⌉ steps per channel).
+pub fn quant_per_group_nt(
+    w: &mut [f32],
+    rows: usize,
+    cols: usize,
+    qm: f32,
+    group: usize,
+    grid: usize,
+    nthreads: usize,
+) -> Vec<f32> {
+    let group = group.max(1);
+    let groups_per = ((rows + group - 1) / group).max(1);
+    let mut steps = vec![0.0f32; cols * groups_per];
+    quant_panels(w, rows, cols, Spec { qm, grid, group }, &mut steps, nthreads);
+    steps
+}
+
+fn quant_panels(
+    w: &mut [f32],
+    rows: usize,
+    cols: usize,
+    spec: Spec,
+    steps: &mut [f32],
+    nthreads: usize,
+) {
+    assert_eq!(w.len(), rows * cols, "quant element count");
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let groups_per = (rows + spec.group - 1) / spec.group;
+    debug_assert_eq!(steps.len(), cols * groups_per);
+    let mut panel = gemm::transpose_nt(w, rows, cols, nthreads);
+    let nt = super::useful_threads(nthreads, cols, rows * cols * spec.grid.max(1));
+    if nt <= 1 {
+        quant_band(&mut panel, rows, spec, steps);
+    } else {
+        let band = (cols + nt - 1) / nt;
+        std::thread::scope(|s| {
+            let sbands = steps.chunks_mut(band * groups_per);
+            for (pband, sband) in panel.chunks_mut(band * rows).zip(sbands) {
+                s.spawn(move || quant_band(pband, rows, spec, sband));
+            }
+        });
+    }
+    w.copy_from_slice(&gemm::transpose_nt(&panel, cols, rows, nthreads));
+}
+
+/// Search + fake-quant each (channel × group) segment of a channel-major
+/// panel in one pass.
+fn quant_band(panel: &mut [f32], rows: usize, spec: Spec, steps: &mut [f32]) {
+    let groups_per = (rows + spec.group - 1) / spec.group;
+    for (chan, srow) in panel.chunks_mut(rows).zip(steps.chunks_mut(groups_per)) {
+        for (seg, st) in chan.chunks_mut(spec.group).zip(srow.iter_mut()) {
+            let s = search_step(seg, spec.qm, spec.grid);
+            fq_slice(seg, s, 1.0 / s, spec.qm);
+            *st = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_scan(xs: &[f32], qm: f32, grid: usize) -> f32 {
+        let maxabs = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8);
+        if grid <= 1 {
+            return (maxabs / qm).max(STEP_FLOOR);
+        }
+        let mut best = (f64::INFINITY, (maxabs / qm).max(STEP_FLOOR));
+        for i in 0..grid {
+            let s = candidate_step(maxabs, qm, grid, i);
+            let e = sse(xs, s, 1.0 / s, qm);
+            if e < best.0 {
+                best = (e, s);
+            }
+        }
+        best.1
+    }
+
+    #[test]
+    fn eval_order_is_a_permutation() {
+        for grid in [1usize, 2, 3, 4, 5, 7, 40] {
+            let mut o = eval_order(grid);
+            o.sort_unstable();
+            assert_eq!(o, (0..grid).collect::<Vec<_>>(), "grid={grid}");
+        }
+    }
+
+    #[test]
+    fn pruned_search_matches_full_scan() {
+        let mut state = 0x12345u64;
+        let mut rnd = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        for case in 0..60 {
+            let n = 16 + (case * 37) % 500;
+            let mut xs: Vec<f32> = (0..n).map(|_| rnd() * 3.0).collect();
+            if case % 3 == 0 {
+                xs[0] *= 40.0; // outlier
+            }
+            if case % 7 == 0 {
+                xs.iter_mut().for_each(|v| *v = 0.0); // degenerate
+            }
+            for grid in [1usize, 7, 40] {
+                let a = search_step(&xs, 7.0, grid);
+                let b = full_scan(&xs, 7.0, grid);
+                assert_eq!(a, b, "case {case} grid {grid}");
+            }
+        }
+    }
+
+    #[test]
+    fn fq_scalar_clamps_asymmetrically() {
+        // 4-bit: codes live in [-8, 7]
+        assert_eq!(fq_scalar(100.0, 1.0, 1.0, 7.0), 7.0);
+        assert_eq!(fq_scalar(-100.0, 1.0, 1.0, 7.0), -8.0);
+        // round(0.26·10) = 3 → 3·0.1
+        assert!((fq_scalar(0.26, 0.1, 10.0, 7.0) - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_group_step_layout_is_channel_major() {
+        // 4 rows × 2 cols, groups of 2 → 2 steps per channel
+        let mut w = vec![
+            0.1, 8.0, //
+            0.1, 8.0, //
+            4.0, 0.2, //
+            4.0, 0.2,
+        ];
+        let steps = quant_per_group_nt(&mut w, 4, 2, 7.0, 2, 1, 2);
+        assert_eq!(steps.len(), 4);
+        // channel 0: groups (0.1,0.1) then (4,4); channel 1: (8,8) then (0.2,0.2)
+        assert!(steps[0] < steps[1]);
+        assert!(steps[2] > steps[3]);
+    }
+}

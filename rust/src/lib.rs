@@ -10,13 +10,16 @@
 //! Entry points: [`runtime::Engine`] loads artifacts, [`model::Model`] binds a
 //! checkpoint, [`quant::pipeline`] runs the PrefixQuant quantization flow,
 //! [`coordinator`] serves generation requests (run-to-completion or
-//! continuous batching), [`eval`] scores models.
+//! continuous batching), [`eval`] scores models.  All host-side compute of
+//! the quantize path (matmul, rotation folding, weight quantization, …)
+//! routes through the threaded [`kernels`] layer (`PQ_THREADS` knob).
 
 pub mod bench_support;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod kernels;
 pub mod model;
 pub mod quant;
 pub mod report;

@@ -58,28 +58,36 @@ pub fn max_init_act_scales(model: &Model, obs: &Observation, qmax_act: f32) -> T
 
 /// Per-head static KV scales by population grid search over the observed fp
 /// K/V values ("layer output" objective — fine-grained per the paper).
+/// Parallelized over the (layer × cache × head) scale slots via the host
+/// kernel layer; each slot's gather + pruned search is independent, so the
+/// result is identical for every `PQ_THREADS`.
 pub fn kv_scales_grid(model: &Model, obs: &Observation, kv_bits: usize, points: usize) -> Tensor {
     let cfg = &model.cfg;
     let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.d_head);
     let b = obs.k_cache.shape[1];
     let s = obs.k_cache.shape[3];
     let mut scales = Tensor::zeros(&[l, 2, h]);
-    for li in 0..l {
-        for (ci, cache) in [&obs.k_cache, &obs.v_cache].iter().enumerate() {
-            for hi in 0..h {
-                // gather this head's population across batch and positions
-                let mut vals = Vec::with_capacity(b * s * dh);
-                for bi in 0..b {
-                    for si in 0..s {
-                        let base = (((li * b + bi) * h + hi) * s + si) * dh;
-                        vals.extend_from_slice(&cache.data[base..base + dh]);
-                    }
+    let caches = [&obs.k_cache, &obs.v_cache];
+    let units = l * 2 * h;
+    // few slots, heavy gathers: size the worker count by total elements
+    let nt = crate::kernels::useful_threads(crate::kernels::threads(), units, units * b * s * dh);
+    crate::kernels::par_bands(&mut scales.data, units, 1, nt, |u0, band| {
+        for (off, slot) in band.iter_mut().enumerate() {
+            // slot u = (li·2 + ci)·h + hi — same layout as the serial scan
+            let u = u0 + off;
+            let (li, ci, hi) = (u / (2 * h), (u / h) % 2, u % h);
+            let cache = caches[ci];
+            // gather this head's population across batch and positions
+            let mut vals = Vec::with_capacity(b * s * dh);
+            for bi in 0..b {
+                for si in 0..s {
+                    let base = (((li * b + bi) * h + hi) * s + si) * dh;
+                    vals.extend_from_slice(&cache.data[base..base + dh]);
                 }
-                scales.data[(li * 2 + ci) * h + hi] =
-                    quantizer::search_scale(&vals, kv_bits, points);
             }
+            *slot = quantizer::search_scale(&vals, kv_bits, points);
         }
-    }
+    });
     scales
 }
 

@@ -9,6 +9,7 @@
 
 use anyhow::Result;
 
+use crate::kernels::{self, ops};
 use crate::model::{Model, QuantMode};
 use crate::tensor::Tensor;
 
@@ -52,18 +53,21 @@ impl Adam {
         Self { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
     }
 
+    /// One fused, banded-parallel Adam update (`kernels::ops::adam_step_nt`;
+    /// element-independent, so bit-identical for every `PQ_THREADS`).  The
+    /// weight tensors of every block step through here each epoch — the
+    /// host-side hot loop of fine-tuning.
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32, cfg: &FtCfg) {
         self.t += 1;
-        let b1c = 1.0 - cfg.beta1.powi(self.t as i32);
-        let b2c = 1.0 - cfg.beta2.powi(self.t as i32);
-        for i in 0..params.len() {
-            let g = grads[i];
-            self.m[i] = cfg.beta1 * self.m[i] + (1.0 - cfg.beta1) * g;
-            self.v[i] = cfg.beta2 * self.v[i] + (1.0 - cfg.beta2) * g * g;
-            let mh = self.m[i] / b1c;
-            let vh = self.v[i] / b2c;
-            params[i] -= lr * mh / (vh.sqrt() + cfg.eps);
-        }
+        let k = ops::AdamStep {
+            lr,
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            b1c: 1.0 - cfg.beta1.powi(self.t as i32),
+            b2c: 1.0 - cfg.beta2.powi(self.t as i32),
+        };
+        ops::adam_step_nt(params, &mut self.m, &mut self.v, grads, k, kernels::threads());
     }
 }
 

@@ -2,9 +2,11 @@
 //!
 //! Submodules:
 //!   * [`quantizer`] — host-side weight quantization (per-channel / per-group,
-//!     RTN and grid-search init).
+//!     RTN and grid-search init), backed by the fused single-pass kernels in
+//!     [`crate::kernels::quantize`].
 //!   * [`rotation`]  — Hadamard generation + absorbable R1/R2 folding and the
-//!     R4 weight-side fold (computational invariance, QuaRot/SpinQuant style).
+//!     R4 weight-side fold (computational invariance, QuaRot/SpinQuant style),
+//!     folded via in-place FWHTs ([`crate::kernels::fwht`]).
 //!   * [`outlier`]   — token-wise outlier statistics (Figs 2-4), η-detection,
 //!     outlier-token frequency ranking.
 //!   * [`prefix`]    — prefixed-token selection and prefix-KV materialization
@@ -39,7 +41,8 @@ pub mod recipe;
 pub mod rotation;
 pub mod smooth;
 
-pub use model_state::{ArtifactMeta, QuantArtifact, FORMAT_VERSION};
+pub use model_state::{ArtifactMeta, QuantArtifact, WeightStepsMeta, FORMAT_VERSION};
+pub use pipeline::{TensorSteps, WeightQuantReport};
 pub use recipe::{
     Granularity, Precision, QuantCtx, QuantPass, Recipe, RecipeBuilder, RecipeReport, StageReport,
 };

@@ -42,6 +42,7 @@ use crate::runtime::{Engine, WeightStore};
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
 
+use super::pipeline::WeightQuantReport;
 use super::recipe::{Precision, RecipeReport};
 
 /// Artifact format version written by this build (and the only one it reads).
@@ -88,6 +89,19 @@ fn content_hash(weights_bytes: &[u8], state_bytes: &[u8]) -> u64 {
     fnv1a(fnv1a(FNV_OFFSET, weights_bytes), state_bytes)
 }
 
+/// Weight-step provenance of one quantized tensor: the compact
+/// `artifact.json` record (granularity + step count + range).  The full
+/// step vector rides in `quant_state.bin` as a `wsteps.<tensor>` entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightStepsMeta {
+    pub tensor: String,
+    /// input-dim group size (None = per-channel)
+    pub group: Option<usize>,
+    pub n_steps: usize,
+    pub step_min: f64,
+    pub step_max: f64,
+}
+
 /// Provenance + identity of a [`QuantArtifact`] (the `artifact.json` body).
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
@@ -108,6 +122,11 @@ pub struct ArtifactMeta {
     pub prefix_tokens: Vec<i32>,
     pub n_prefix: i32,
     pub n_ctx_sinks: i32,
+    /// weight-quantization provenance: one summary per quantized tensor,
+    /// recorded when the producing recipe reported step sizes (empty for
+    /// fp-weight or unrecorded artifacts; absent in pre-PR5 v2 artifacts,
+    /// which still load)
+    pub weight_quant: Vec<WeightStepsMeta>,
     /// FNV-1a over weights.bin + quant_state.bin, verified on load
     pub content_hash: u64,
 }
@@ -156,6 +175,34 @@ impl ArtifactMeta {
         let hash_text = j.get("content_hash")?.as_str()?;
         let content_hash = u64::from_str_radix(hash_text, 16)
             .map_err(|e| anyhow!("bad content_hash {hash_text:?}: {e}"))?;
+        // optional: absent in artifacts written before weight-step
+        // provenance existed (same format version — purely additive), but
+        // a PRESENT malformed value is rejected like every other field
+        let weight_quant = match j.opt("weight_quant") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|it| {
+                    Ok(WeightStepsMeta {
+                        tensor: it.get("tensor")?.as_str()?.to_string(),
+                        group: match it.opt("group") {
+                            Some(Json::Null) | None => None,
+                            Some(g) => {
+                                let g = g.as_i64()?;
+                                if g < 0 {
+                                    bail!("weight_quant group must be non-negative, got {g}");
+                                }
+                                Some(g as usize)
+                            }
+                        },
+                        n_steps: it.get("n_steps")?.as_usize()?,
+                        step_min: it.get("step_min")?.as_f64()?,
+                        step_max: it.get("step_max")?.as_f64()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            Some(other) => bail!("weight_quant must be an array, got {other:?}"),
+        };
         Ok(ArtifactMeta {
             format_version: j.get("format_version")?.as_i64()? as u32,
             model: j.get("model")?.as_str()?.to_string(),
@@ -183,6 +230,7 @@ impl ArtifactMeta {
                 .collect::<Result<_>>()?,
             n_prefix: j.get("n_prefix")?.as_i64()? as i32,
             n_ctx_sinks: j.get("n_ctx_sinks")?.as_i64()? as i32,
+            weight_quant,
             content_hash,
         })
     }
@@ -219,6 +267,29 @@ impl ArtifactMeta {
             ),
             ("n_prefix", json::num(self.n_prefix as f64)),
             ("n_ctx_sinks", json::num(self.n_ctx_sinks as f64)),
+            (
+                "weight_quant",
+                Json::Arr(
+                    self.weight_quant
+                        .iter()
+                        .map(|w| {
+                            json::obj(vec![
+                                ("tensor", json::s(&w.tensor)),
+                                (
+                                    "group",
+                                    match w.group {
+                                        None => Json::Null,
+                                        Some(g) => json::num(g as f64),
+                                    },
+                                ),
+                                ("n_steps", json::num(w.n_steps as f64)),
+                                ("step_min", json::num(w.step_min)),
+                                ("step_max", json::num(w.step_max)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("content_hash", json::s(&format!("{:016x}", self.content_hash))),
         ])
     }
@@ -235,11 +306,12 @@ pub struct QuantArtifact {
 }
 
 /// The quant/prefix state tensors as a store (small: scales, qmax,
-/// rotations, prefix K/V).
-fn state_store(model: &Model) -> WeightStore {
+/// rotations, prefix K/V), plus — when the producing recipe reported them —
+/// the full weight step vectors as `wsteps.<tensor>` entries.
+fn state_store(model: &Model, report: Option<&RecipeReport>) -> WeightStore {
     let q = &model.quant;
     let p = &model.prefix;
-    WeightStore::from_pairs(vec![
+    let mut pairs = vec![
         ("act_scales".into(), q.act_scales.clone()),
         ("kv_scales".into(), q.kv_scales.clone()),
         ("qmax_act".into(), q.qmax_act.clone()),
@@ -248,7 +320,40 @@ fn state_store(model: &Model) -> WeightStore {
         ("r4".into(), q.r4.clone()),
         ("prefix_k".into(), p.k.clone()),
         ("prefix_v".into(), p.v.clone()),
-    ])
+    ];
+    if let Some(wq) = report.and_then(|r| r.weight_quant.as_ref()) {
+        for t in &wq.tensors {
+            let steps = Tensor { shape: vec![t.steps.len()], data: t.steps.clone() };
+            pairs.push((format!("wsteps.{}", t.name), steps));
+        }
+    }
+    WeightStore::from_pairs(pairs)
+}
+
+/// Compact per-tensor summaries of a weight-quant report (the
+/// `artifact.json` side of the step provenance).
+fn steps_meta_of(wq: &WeightQuantReport) -> Vec<WeightStepsMeta> {
+    wq.tensors
+        .iter()
+        .map(|t| {
+            let mut lo = f64::MAX;
+            let mut hi = 0.0f64;
+            for &s in &t.steps {
+                lo = lo.min(s as f64);
+                hi = hi.max(s as f64);
+            }
+            if t.steps.is_empty() {
+                lo = 0.0;
+            }
+            WeightStepsMeta {
+                tensor: t.name.clone(),
+                group: t.group,
+                n_steps: t.steps.len(),
+                step_min: lo,
+                step_max: hi,
+            }
+        })
+        .collect()
 }
 
 /// Provenance metadata for a model + optional recipe report (hash unset).
@@ -262,6 +367,8 @@ fn meta_of(model: &Model, mode: QuantMode, report: Option<&RecipeReport>) -> Art
         ),
         None => ("(unrecorded)".to_string(), Vec::new(), Vec::new(), None),
     };
+    let weight_quant =
+        report.and_then(|r| r.weight_quant.as_ref()).map(steps_meta_of).unwrap_or_default();
     ArtifactMeta {
         format_version: FORMAT_VERSION,
         model: model.name.clone(),
@@ -274,6 +381,7 @@ fn meta_of(model: &Model, mode: QuantMode, report: Option<&RecipeReport>) -> Art
         prefix_tokens: model.prefix.tokens.clone(),
         n_prefix: model.prefix.n_prefix,
         n_ctx_sinks: model.prefix.n_ctx_sinks,
+        weight_quant,
         content_hash: 0, // recorded by save, verified by load
     }
 }
@@ -307,7 +415,7 @@ impl QuantArtifact {
         QuantArtifact {
             meta: meta_of(model, mode, report),
             weights: model.weights.clone(),
-            state: state_store(model),
+            state: state_store(model, report),
         }
     }
 
@@ -320,7 +428,8 @@ impl QuantArtifact {
         report: Option<&RecipeReport>,
         dir: &Path,
     ) -> Result<u64> {
-        write_artifact(meta_of(model, mode, report), &model.weights, &state_store(model), dir)
+        let state = state_store(model, report);
+        write_artifact(meta_of(model, mode, report), &model.weights, &state, dir)
     }
 
     /// Write the artifact; records the content hash in both the metadata

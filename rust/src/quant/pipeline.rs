@@ -42,8 +42,32 @@ pub fn quantize(
 /// Weight tensors that get quantized (all linear projections).
 pub const QUANT_WEIGHTS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
 
+/// The step sizes one quantized tensor ended up with: per output channel,
+/// or per (channel × input-group) in channel-major order when `group` is
+/// set.
+#[derive(Debug, Clone)]
+pub struct TensorSteps {
+    /// weight-store name, e.g. "layers.0.wq"
+    pub name: String,
+    /// group size along the input dim (None = per-channel)
+    pub group: Option<usize>,
+    pub steps: Vec<f32>,
+}
+
+/// What weight quantization did: the configuration plus every tensor's
+/// chosen steps.  Returned by [`quantize_weights_raw`], carried through
+/// [`super::RecipeReport`], and recorded into [`super::QuantArtifact`]
+/// provenance (summaries in `artifact.json`, full step vectors as
+/// `wsteps.*` tensors in the state store).
+#[derive(Debug, Clone, Default)]
+pub struct WeightQuantReport {
+    pub w_bits: usize,
+    pub grid: usize,
+    pub tensors: Vec<TensorSteps>,
+}
+
 /// Quantize the projection weights host-side (legacy config surface).
-pub fn quantize_weights(model: &mut Model, scheme: &SchemeConfig) -> Result<()> {
+pub fn quantize_weights(model: &mut Model, scheme: &SchemeConfig) -> Result<WeightQuantReport> {
     quantize_weights_raw(
         model,
         scheme.w_bits,
@@ -54,14 +78,17 @@ pub fn quantize_weights(model: &mut Model, scheme: &SchemeConfig) -> Result<()> 
 
 /// Quantize the projection weights host-side: `w_bits` per-channel symmetric
 /// (or per-`group` along the input dim), `grid` scale candidates (1 = RTN).
+/// Returns the per-tensor step sizes (per-group steps included — they used
+/// to be silently discarded).
 pub fn quantize_weights_raw(
     model: &mut Model,
     w_bits: usize,
     w_group: Option<usize>,
     grid: usize,
-) -> Result<()> {
+) -> Result<WeightQuantReport> {
+    let mut report = WeightQuantReport { w_bits, grid, tensors: Vec::new() };
     if w_bits >= 16 {
-        return Ok(());
+        return Ok(report);
     }
     for li in 0..model.cfg.n_layers {
         for t in QUANT_WEIGHTS {
@@ -69,16 +96,15 @@ pub fn quantize_weights_raw(
             let w = model.weights.get_mut(&name).ok_or_else(|| {
                 anyhow!("quantize_weights: tensor {name:?} missing from the model's weight store")
             })?;
-            match w_group {
+            let steps = match w_group {
                 Some(g) => quantizer::quant_weight_per_group(w, w_bits, g, grid),
-                None => {
-                    quantizer::quant_weight_per_channel(w, w_bits, grid);
-                }
-            }
+                None => quantizer::quant_weight_per_channel(w, w_bits, grid),
+            };
+            report.tensors.push(TensorSteps { name, group: w_group, steps });
         }
     }
     model.refresh_weights()?;
-    Ok(())
+    Ok(report)
 }
 
 // ---------------------------------------------------------------------------

@@ -4,7 +4,16 @@
 //! the already fake-quantized (dequantized) weights, exactly as a real INT4
 //! deployment would hold integer codes + per-channel steps.  Per-channel
 //! symmetric is the paper's setting; per-group is the Atom-analog baseline.
+//!
+//! Since the host-kernel layer (see `crate::kernels`), the heavy lifting —
+//! panel transposes, fused scale-search + fake-quant, the lossless pruned
+//! γ grid, channel-level threading — lives in `kernels::quantize`; this
+//! module is the `Tensor`-level surface the pipeline calls.  Step sizes are
+//! pre-clamped at construction (≥ `kernels::quantize::STEP_FLOOR`), so the
+//! per-element `s.max(1e-8)` clamp of the old `fq` is gone and inner loops
+//! multiply by precomputed reciprocals instead of dividing.
 
+use crate::kernels::{self, quantize as kq};
 use crate::tensor::Tensor;
 
 /// qmax for N-bit symmetric quantization: 2^{N-1} - 1.
@@ -13,58 +22,31 @@ pub fn qmax(bits: usize) -> f32 {
 }
 
 /// Fake-quantize one value with step `s` (clamp to [-qmax-1, qmax]).
+/// `s` must be positive and pre-clamped — every step produced by
+/// [`search_scale`] / the weight quantizers is.
 #[inline]
 pub fn fq(x: f32, s: f32, qm: f32) -> f32 {
-    let s = s.max(1e-8);
-    (x / s).round().clamp(-qm - 1.0, qm) * s
+    kq::fq_scalar(x, s, 1.0 / s, qm)
 }
 
-/// Integer code for one value.
+/// Integer code for one value (same pre-clamped `s` contract as [`fq`]).
 #[inline]
 pub fn code(x: f32, s: f32, qm: f32) -> f32 {
-    let s = s.max(1e-8);
-    (x / s).round().clamp(-qm - 1.0, qm)
+    (x * (1.0 / s)).round().clamp(-qm - 1.0, qm)
 }
 
-/// Fake-quant a whole slice with one step size; returns sum of squared error.
-pub fn fq_slice(xs: &mut [f32], s: f32, qm: f32) -> f64 {
-    let mut err = 0.0f64;
-    for x in xs.iter_mut() {
-        let q = fq(*x, s, qm);
-        let d = (q - *x) as f64;
-        err += d * d;
-        *x = q;
-    }
-    err
+/// Fake-quant a whole slice with one pre-clamped step and its precomputed
+/// reciprocal; returns the sum of squared error.  This is the fused weight
+/// quantizer's (and any fine-tune host path's) inner loop.
+pub fn fq_slice(xs: &mut [f32], s: f32, rinv: f32, qm: f32) -> f64 {
+    kq::fq_slice(xs, s, rinv, qm)
 }
 
-fn sq_err(xs: &[f32], s: f32, qm: f32) -> f64 {
-    xs.iter()
-        .map(|&x| {
-            let d = (fq(x, s, qm) - x) as f64;
-            d * d
-        })
-        .sum()
-}
-
-/// Grid-search the step size for one slice: s = γ·max|x|/qmax minimizing MSE.
+/// Grid-search the step size for one slice: s = γ·max|x|/qmax minimizing
+/// MSE (lossless pruned search — identical winner to the full scan).
 /// With `grid == 1` this degenerates to RTN (γ = 1).
 pub fn search_scale(xs: &[f32], bits: usize, grid: usize) -> f32 {
-    let qm = qmax(bits);
-    let maxabs = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8);
-    if grid <= 1 {
-        return maxabs / qm;
-    }
-    let mut best = (f64::INFINITY, maxabs / qm);
-    for i in 0..grid {
-        let gamma = 0.15 + 0.85 * (i as f32) / (grid - 1) as f32; // γ ∈ [0.15, 1.0]
-        let s = gamma * maxabs / qm;
-        let e = sq_err(xs, s, qm);
-        if e < best.0 {
-            best = (e, s);
-        }
-    }
-    best.1
+    kq::search_step(xs, qmax(bits), grid)
 }
 
 /// Per-(output-)channel symmetric weight quantization of w[in, out].
@@ -75,41 +57,19 @@ pub fn quant_weight_per_channel(w: &mut Tensor, bits: usize, grid: usize) -> Vec
         return vec![];
     }
     let (rows, cols) = (w.shape[0], w.shape[1]);
-    let qm = qmax(bits);
-    let mut steps = vec![0.0f32; cols];
-    for j in 0..cols {
-        let col: Vec<f32> = (0..rows).map(|i| w.data[i * cols + j]).collect();
-        let s = search_scale(&col, bits, grid);
-        steps[j] = s;
-        for i in 0..rows {
-            let v = &mut w.data[i * cols + j];
-            *v = fq(*v, s, qm);
-        }
-    }
-    steps
+    kq::quant_per_channel_nt(&mut w.data, rows, cols, qmax(bits), grid, kernels::threads())
 }
 
 /// Per-group weight quantization (groups along the input dim, Atom-analog).
-pub fn quant_weight_per_group(w: &mut Tensor, bits: usize, group: usize, grid: usize) {
+/// Returns the per-group steps, channel-major (all groups of output
+/// channel 0, then channel 1, …; ⌈rows/group⌉ per channel).
+pub fn quant_weight_per_group(w: &mut Tensor, bits: usize, group: usize, grid: usize) -> Vec<f32> {
     assert_eq!(w.rank(), 2);
     if bits >= 16 {
-        return;
+        return vec![];
     }
     let (rows, cols) = (w.shape[0], w.shape[1]);
-    let qm = qmax(bits);
-    for j in 0..cols {
-        let mut g0 = 0;
-        while g0 < rows {
-            let g1 = (g0 + group).min(rows);
-            let seg: Vec<f32> = (g0..g1).map(|i| w.data[i * cols + j]).collect();
-            let s = search_scale(&seg, bits, grid);
-            for i in g0..g1 {
-                let v = &mut w.data[i * cols + j];
-                *v = fq(*v, s, qm);
-            }
-            g0 = g1;
-        }
-    }
+    kq::quant_per_group_nt(&mut w.data, rows, cols, qmax(bits), group, grid, kernels::threads())
 }
 
 /// Grid-search a *single* static step for a value population against its own
@@ -121,6 +81,10 @@ pub fn search_scale_pop(values: &[f32], bits: usize, grid: usize) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn sq_err(xs: &[f32], s: f32, qm: f32) -> f64 {
+        kq::sse(xs, s, 1.0 / s, qm)
+    }
 
     #[test]
     fn qmax_values() {
@@ -172,10 +136,22 @@ mod tests {
     }
 
     #[test]
-    fn per_group_groups() {
+    fn per_group_groups_and_returns_steps() {
         let mut w = Tensor::new(vec![4, 1], vec![0.1, 0.1, 10.0, 10.0]).unwrap();
-        quant_weight_per_group(&mut w, 4, 2, 10);
+        let steps = quant_weight_per_group(&mut w, 4, 2, 10);
         // group 0 keeps fidelity on small values despite group 1's outliers
         assert!((w.data[0] - 0.1).abs() < 0.02);
+        // one step per (channel × group), small group's step much smaller
+        assert_eq!(steps.len(), 2);
+        assert!(steps[0] < steps[1]);
+    }
+
+    #[test]
+    fn steps_are_pre_clamped() {
+        // an all-zero channel must yield the floored step, not a denormal
+        let mut w = Tensor::new(vec![3, 1], vec![0.0, 0.0, 0.0]).unwrap();
+        let steps = quant_weight_per_channel(&mut w, 4, 40);
+        assert!(steps[0] >= kq::STEP_FLOOR);
+        assert_eq!(w.data, vec![0.0, 0.0, 0.0]);
     }
 }

@@ -41,7 +41,7 @@ use crate::tokenizer::Tokenizer;
 use super::calibrate::{self, GridCfg};
 use super::finetune::{self, FtCfg, FtReport};
 use super::outlier::{self, Observation, OutlierReport, ETA};
-use super::pipeline;
+use super::pipeline::{self, WeightQuantReport};
 use super::prefix;
 use super::rotation;
 use super::smooth;
@@ -115,6 +115,9 @@ pub struct QuantCtx<'a> {
     pub prefix_tokens: Vec<i32>,
     /// fine-tuning trajectory, when a finetune pass ran
     pub ft: Option<FtReport>,
+    /// per-tensor step sizes chosen by the weight-quant pass (artifact
+    /// provenance)
+    pub weight_quant: Option<WeightQuantReport>,
     /// `fwd_obs` executions so far (the cache-efficiency observable)
     observation_runs: usize,
     cache: Option<(Observation, OutlierReport)>,
@@ -313,11 +316,12 @@ impl QuantPass for WeightQuantPass {
             Granularity::PerChannel => None,
             Granularity::PerGroup(g) => Some(g),
         };
-        pipeline::quantize_weights_raw(ctx.model, ctx.precision.w, group, grid)?;
-        Ok(StageReport::new(
-            self.name(),
-            format!("w{} {:?} grid={grid}", ctx.precision.w, self.granularity),
-        ))
+        let rep = pipeline::quantize_weights_raw(ctx.model, ctx.precision.w, group, grid)?;
+        let n_tensors = rep.tensors.len();
+        ctx.weight_quant = Some(rep);
+        let w = ctx.precision.w;
+        let detail = format!("w{w} {:?} grid={grid} ({n_tensors} tensors)", self.granularity);
+        Ok(StageReport::new(self.name(), detail))
     }
 }
 
@@ -548,6 +552,7 @@ impl Recipe {
             post_report: None,
             prefix_tokens: Vec::new(),
             ft: None,
+            weight_quant: None,
             observation_runs: 0,
             cache: None,
         };
@@ -567,6 +572,7 @@ impl Recipe {
             post_report,
             prefix_tokens,
             ft,
+            weight_quant,
             observation_runs,
             ..
         } = ctx;
@@ -582,6 +588,7 @@ impl Recipe {
             post_report,
             prefix_tokens,
             ft,
+            weight_quant,
             observation_runs,
             t_total: t0.elapsed().as_secs_f64(),
         })
@@ -603,6 +610,9 @@ pub struct RecipeReport {
     pub prefix_tokens: Vec<i32>,
     pub prefix_rendered: String,
     pub ft: Option<FtReport>,
+    /// per-tensor weight step sizes (None when no weight-quant pass ran);
+    /// recorded into [`super::QuantArtifact`] provenance on save
+    pub weight_quant: Option<WeightQuantReport>,
     /// `fwd_obs` executions across the run (cache-efficiency observable)
     pub observation_runs: usize,
     pub t_total: f64,

@@ -16,10 +16,19 @@
 //! RMSNorm (with unit gain) is equivariant under orthogonal basis change, so
 //! the folded model computes exactly the same function (fp path), while every
 //! quantizer input lives in the outlier-spread Hadamard basis.
+//!
+//! Since the host-kernel layer, the folds are O(n log n) in-place fast
+//! Walsh–Hadamard transforms (`kernels::fwht`) instead of explicit
+//! Hadamard-matrix products — H is the Kronecker power of H₂ and symmetric,
+//! so `·R1` is a row-wise butterfly and `R1ᵀ·` a column-wise one.  The
+//! explicit [`hadamard`] matrix stays as the online-rotation upload and the
+//! parity reference (`tests/kernel_parity.rs`,
+//! `kernels::naive::fold_rotations`).
 
 use anyhow::{bail, Result};
 
 use crate::config::ModelConfig;
+use crate::kernels::{self, fwht, ops};
 use crate::runtime::WeightStore;
 use crate::tensor::Tensor;
 
@@ -47,15 +56,11 @@ pub fn hadamard(n: usize) -> Tensor {
     Tensor { shape: vec![n, n], data: h.into_iter().map(|v| v * norm).collect() }
 }
 
-/// Scale row i of a matrix by g[i] (diag(g) · W).
+/// Scale row i of a matrix by g[i] (diag(g) · W), threaded.
 fn scale_rows(w: &mut Tensor, g: &[f32]) {
     let (rows, cols) = (w.shape[0], w.shape[1]);
     assert_eq!(rows, g.len());
-    for i in 0..rows {
-        for j in 0..cols {
-            w.data[i * cols + j] *= g[i];
-        }
-    }
+    ops::scale_rows_nt(&mut w.data, rows, cols, g, kernels::threads());
 }
 
 /// Absorb RMSNorm gains into adjacent projections; gains become 1.
@@ -78,7 +83,8 @@ pub fn absorb_norm_gains(cfg: &ModelConfig, ws: &mut WeightStore) -> Result<()> 
     Ok(())
 }
 
-/// Fold the absorbable rotations R1/R2 and the R4 weight-side factor.
+/// Fold the absorbable rotations R1/R2 and the R4 weight-side factor, all
+/// as in-place FWHTs (no Hadamard matrix is ever materialized here).
 /// Call `absorb_norm_gains` first (checked).
 pub fn fold_rotations(cfg: &ModelConfig, ws: &mut WeightStore) -> Result<()> {
     for l in 0..cfg.n_layers {
@@ -87,68 +93,46 @@ pub fn fold_rotations(cfg: &ModelConfig, ws: &mut WeightStore) -> Result<()> {
             bail!("fold_rotations requires absorbed norm gains (layer {l})");
         }
     }
-    let r1 = hadamard(cfg.d_model);
-    let r1t = r1.transpose2();
-    let r2 = hadamard(cfg.d_head);
-    let r2t = r2.transpose2();
-    let r4 = hadamard(cfg.d_ff);
-    let r4t = r4.transpose2();
+    let nt = kernels::threads();
+    let (d, dh, h, ff) = (cfg.d_model, cfg.d_head, cfg.n_heads, cfg.d_ff);
 
-    // embedding rows into the rotated basis
-    let emb = ws.get("emb").unwrap().clone();
-    ws.set("emb", emb.matmul(&r1));
-    // head maps rotated hidden back to logits
-    let head = ws.get("head").unwrap().clone();
-    ws.set("head", r1t.matmul(&head));
+    // embedding rows into the rotated basis (emb ← emb·R1)
+    let emb = ws.get_mut("emb").unwrap();
+    let vocab = emb.shape[0];
+    fwht::fwht_rows_nt(&mut emb.data, vocab, d, nt);
+    // head maps rotated hidden back to logits (head ← R1ᵀ·head)
+    let head = ws.get_mut("head").unwrap();
+    let head_cols = head.shape[1];
+    fwht::fwht_cols_nt(&mut head.data, d, head_cols, nt);
 
     for l in 0..cfg.n_layers {
         let name = |t: &str| format!("layers.{l}.{t}");
         for t in ["wq", "wk", "wv", "wg", "wu"] {
-            let w = ws.get(&name(t)).unwrap().clone();
-            ws.set(&name(t), r1t.matmul(&w));
+            let w = ws.get_mut(&name(t)).unwrap();
+            let cols = w.shape[1];
+            fwht::fwht_cols_nt(&mut w.data, d, cols, nt); // w ← R1ᵀ·w
         }
         for t in ["wo", "wd"] {
-            let w = ws.get(&name(t)).unwrap().clone();
-            ws.set(&name(t), w.matmul(&r1));
+            let w = ws.get_mut(&name(t)).unwrap();
+            let rows = w.shape[0];
+            fwht::fwht_rows_nt(&mut w.data, rows, d, nt); // w ← w·R1
         }
-        // R2: per-head value-basis rotation (wv column blocks, wo row blocks)
-        let (d, dh, h) = (cfg.d_model, cfg.d_head, cfg.n_heads);
-        let mut wv = ws.get(&name("wv")).unwrap().clone();
+        // R2: per-head value-basis rotation — each wv column block ·R2 is a
+        // row-wise FWHT on that head's column slice; each wo row block R2ᵀ·
+        // is a column-wise FWHT on that head's row slab.
+        let wv = ws.get_mut(&name("wv")).unwrap();
         for head_i in 0..h {
-            // block = wv[:, hi*dh..(hi+1)*dh] · R2
-            let mut block = Tensor::zeros(&[d, dh]);
-            for i in 0..d {
-                for j in 0..dh {
-                    block.data[i * dh + j] = wv.data[i * d + head_i * dh + j];
-                }
-            }
-            let rotated = block.matmul(&r2);
-            for i in 0..d {
-                for j in 0..dh {
-                    wv.data[i * d + head_i * dh + j] = rotated.data[i * dh + j];
-                }
-            }
+            fwht::fwht_rows_sub_nt(&mut wv.data, d, d, head_i * dh, dh, nt);
         }
-        ws.set(&name("wv"), wv);
-        let mut wo = ws.get(&name("wo")).unwrap().clone();
+        let wo = ws.get_mut(&name("wo")).unwrap();
         for head_i in 0..h {
-            let mut block = Tensor::zeros(&[dh, d]);
-            for i in 0..dh {
-                for j in 0..d {
-                    block.data[i * d + j] = wo.data[(head_i * dh + i) * d + j];
-                }
-            }
-            let rotated = r2t.matmul(&block);
-            for i in 0..dh {
-                for j in 0..d {
-                    wo.data[(head_i * dh + i) * d + j] = rotated.data[i * d + j];
-                }
-            }
+            let blk = &mut wo.data[head_i * dh * d..(head_i + 1) * dh * d];
+            fwht::fwht_cols_nt(blk, dh, d, nt);
         }
-        ws.set(&name("wo"), wo);
         // R4 weight-side factor (executables apply x·R4 online)
-        let wd = ws.get(&name("wd")).unwrap().clone();
-        ws.set(&name("wd"), r4t.matmul(&wd));
+        let wd = ws.get_mut(&name("wd")).unwrap();
+        let wd_cols = wd.shape[1];
+        fwht::fwht_cols_nt(&mut wd.data, ff, wd_cols, nt);
     }
     Ok(())
 }
@@ -201,5 +185,24 @@ mod tests {
         let mut w = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
         scale_rows(&mut w, &[2.0, 0.5]);
         assert_eq!(w.data, vec![2.0, 4.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn fwht_fold_matches_explicit_hadamard_product() {
+        // y = x·H via FWHT must match the explicit matrix product
+        let n = 64;
+        let h = hadamard(n);
+        let x = Tensor::new(
+            vec![3, n],
+            (0..3 * n).map(|i| ((i * 37 % 101) as f32) / 50.0 - 1.0).collect(),
+        )
+        .unwrap();
+        let want = x.matmul(&h);
+        let mut got = x.clone();
+        fwht::fwht_rows_nt(&mut got.data, 3, n, 2);
+        let scale = want.max_abs().max(1.0);
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() <= 1e-5 * scale, "{a} vs {b}");
+        }
     }
 }

@@ -4,57 +4,59 @@
 //! the preceding RMSNorm gain), weights multiplied by s.  Only the norm→linear
 //! pairs (attn_in, mlp_in) can absorb the scaling — like the real method —
 //! while o_in / down_in stay untouched.
+//!
+//! Statistics and the weight scaling run on the host-kernel layer
+//! (`crate::kernels`): the post-norm abs-max scan is banded over capture
+//! rows (max is exactly associative, so the band merge is bit-identical for
+//! any `PQ_THREADS`), and the diag(s)·W application is the threaded
+//! row-scaling kernel.
 
 use anyhow::Result;
 
+use crate::kernels::{self, ops};
 use crate::model::Model;
 use crate::tensor::Tensor;
 
 use super::outlier::Observation;
 
 /// Per-channel abs-max of the post-norm activations, computed host-side from
-/// the captured block inputs (rmsnorm with the current gains).
-fn channel_absmax_postnorm(x: &Tensor, gamma: &Tensor) -> Vec<f32> {
+/// the captured block inputs (rmsnorm with the current gains).  The fused
+/// rmsnorm+gamma column-max runs per row band under the kernel layer's
+/// banded max-reduce (per-row math identical to the serial scan; max merge
+/// exactly associative).
+fn channel_absmax_postnorm(x: &Tensor, gamma: &Tensor, nthreads: usize) -> Vec<f32> {
     let d = *x.shape.last().unwrap();
     let rows = x.numel() / d;
-    let mut maxes = vec![0.0f32; d];
-    for r in 0..rows {
-        let row = &x.data[r * d..(r + 1) * d];
-        let ms = row.iter().map(|v| (v * v) as f64).sum::<f64>() / d as f64;
-        let inv = 1.0 / ((ms + 1e-5).sqrt() as f32);
-        for c in 0..d {
-            maxes[c] = maxes[c].max((row[c] * inv * gamma.data[c]).abs());
+    ops::rowband_max_nt(&x.data, rows, d, nthreads, |chunk: &[f32]| {
+        let mut maxes = vec![0.0f32; d];
+        for row in chunk.chunks(d) {
+            let ms = row.iter().map(|v| (v * v) as f64).sum::<f64>() / d as f64;
+            let inv = 1.0 / ((ms + 1e-5).sqrt() as f32);
+            for (mx, (&v, g)) in maxes.iter_mut().zip(row.iter().zip(&gamma.data)) {
+                *mx = mx.max((v * inv * g).abs());
+            }
         }
-    }
-    maxes
-}
-
-fn weight_absmax_rows(w: &Tensor) -> Vec<f32> {
-    let (rows, cols) = (w.shape[0], w.shape[1]);
-    let mut m = vec![0.0f32; rows];
-    for i in 0..rows {
-        for j in 0..cols {
-            m[i] = m[i].max(w.data[i * cols + j].abs());
-        }
-    }
-    m
+        maxes
+    })
 }
 
 /// Apply SmoothQuant scaling in place (α = 0.5, the canonical setting).
 pub fn apply(model: &mut Model, obs: &Observation, alpha: f32) -> Result<()> {
     let cfg = model.cfg.clone();
+    let nt = kernels::threads();
     for li in 0..cfg.n_layers {
         let x = obs.captures.index0(li);
         for (ln, targets) in
             [("ln1", vec!["wq", "wk", "wv"]), ("ln2", vec!["wg", "wu"])]
         {
             let gamma = model.weights.get(&format!("layers.{li}.{ln}")).unwrap().clone();
-            let act_max = channel_absmax_postnorm(&x, &gamma);
+            let act_max = channel_absmax_postnorm(&x, &gamma, nt);
             // w-side max across all consumers of this activation
             let mut w_max = vec![0.0f32; cfg.d_model];
             for t in &targets {
                 let w = model.layer_weight(li, t)?;
-                for (c, m) in weight_absmax_rows(w).into_iter().enumerate() {
+                let rows = ops::absmax_rows_nt(&w.data, w.shape[0], w.shape[1], nt);
+                for (c, m) in rows.into_iter().enumerate() {
                     w_max[c] = w_max[c].max(m);
                 }
             }
@@ -74,11 +76,7 @@ pub fn apply(model: &mut Model, obs: &Observation, alpha: f32) -> Result<()> {
             for t in &targets {
                 let w = model.weights.get_mut(&format!("layers.{li}.{t}")).unwrap();
                 let cols = w.shape[1];
-                for c in 0..cfg.d_model {
-                    for j in 0..cols {
-                        w.data[c * cols + j] *= s[c];
-                    }
-                }
+                ops::scale_rows_nt(&mut w.data, cfg.d_model, cols, &s, nt);
             }
         }
     }

@@ -136,39 +136,25 @@ impl Tensor {
     }
 
     /// Matrix product for 2-D tensors (host-side weight folding only).
+    /// Backed by the cache-blocked, multithreaded kernel layer
+    /// (`kernels::gemm`, `PQ_THREADS` knob): same accumulation order as the
+    /// frozen naive triple loop, so results are f32-equal to it and
+    /// bit-identical across thread counts.
     pub fn matmul(&self, rhs: &Tensor) -> Tensor {
         assert_eq!(self.rank(), 2);
         assert_eq!(rhs.rank(), 2);
         let (m, k) = (self.shape[0], self.shape[1]);
         let (k2, n) = (rhs.shape[0], rhs.shape[1]);
         assert_eq!(k, k2, "matmul inner dim");
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for p in 0..k {
-                let a = self.data[i * k + p];
-                if a == 0.0 {
-                    continue;
-                }
-                let row = &rhs.data[p * n..(p + 1) * n];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * row[j];
-                }
-            }
-        }
-        Tensor { shape: vec![m, n], data: out }
+        let data = crate::kernels::gemm::matmul(&self.data, &rhs.data, m, k, n);
+        Tensor { shape: vec![m, n], data }
     }
 
     pub fn transpose2(&self) -> Tensor {
         assert_eq!(self.rank(), 2);
         let (m, n) = (self.shape[0], self.shape[1]);
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for j in 0..n {
-                out[j * m + i] = self.data[i * n + j];
-            }
-        }
-        Tensor { shape: vec![n, m], data: out }
+        let data = crate::kernels::gemm::transpose2(&self.data, m, n);
+        Tensor { shape: vec![n, m], data }
     }
 
     pub fn scale_inplace(&mut self, s: f32) {

@@ -1,0 +1,348 @@
+//! Host-kernel parity properties (runs WITHOUT artifacts — pure host math).
+//!
+//! The kernel layer's contract, pinned property-style (`util::prop`):
+//!   * blocked multithreaded matmul ≡ the frozen naive triple loop
+//!     (f32-equal: same accumulation order by construction);
+//!   * blocked transpose ≡ naive transpose, and involutes;
+//!   * FWHT rotation folds ≡ explicit Hadamard-matrix products
+//!     (≤1e-5 max-normalized — the transforms differ only in summation
+//!     depth), including the full `fold_rotations` vs the frozen
+//!     explicit-matrix reference;
+//!   * the fused single-pass weight quantizer produces IDENTICAL steps and
+//!     codes to the frozen two-pass column-strided reference (the pruned γ
+//!     search is lossless);
+//!   * every kernel is bit-identical for every thread count, and the
+//!     `PQ_THREADS` env knob routes through the same code path.
+
+use prefixquant::config::ModelConfig;
+use prefixquant::kernels::{self, fwht, gemm, naive, quantize as kq};
+use prefixquant::quant::{quantizer, rotation};
+use prefixquant::runtime::WeightStore;
+use prefixquant::tensor::Tensor;
+use prefixquant::util::prop::{check, Gen};
+use prefixquant::util::rng::SplitMix64;
+
+fn tensor_from(g: &mut Gen, rows: usize, cols: usize) -> Tensor {
+    let mut data = g.vec_normal(rows * cols, 1.0);
+    // sprinkle exact zeros so the naive kernel's zero-skip branch runs
+    for i in (0..data.len()).step_by(7) {
+        data[i] = 0.0;
+    }
+    Tensor::new(vec![rows, cols], data).unwrap()
+}
+
+#[test]
+fn blocked_matmul_matches_naive() {
+    check(
+        "blocked-matmul≡naive",
+        20,
+        |g: &mut Gen| {
+            // include shapes that cross the k-tile (KC=128) boundary
+            let m = g.usize_in(1, 40);
+            let k = *g.choose(&[1usize, 3, 17, 64, 129, 300]);
+            let n = g.usize_in(1, 48);
+            let a = tensor_from(g, m, k);
+            let b = tensor_from(g, k, n);
+            (a, b)
+        },
+        |(a, b)| {
+            let want = naive::matmul(a, b);
+            for nt in [1usize, 2, 3, 8] {
+                let got = gemm::matmul_nt(&a.data, &b.data, a.shape[0], a.shape[1], b.shape[1], nt);
+                for (x, y) in got.iter().zip(&want.data) {
+                    if x != y {
+                        return Err(format!("nt={nt}: {x} != {y}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn blocked_transpose_matches_naive_and_involutes() {
+    check(
+        "blocked-transpose≡naive",
+        30,
+        |g: &mut Gen| {
+            let rows = g.usize_in(1, 70);
+            let cols = g.usize_in(1, 70);
+            tensor_from(g, rows, cols)
+        },
+        |t| {
+            let want = naive::transpose2(t);
+            for nt in [1usize, 2, 5] {
+                let got = gemm::transpose_nt(&t.data, t.shape[0], t.shape[1], nt);
+                if got != want.data {
+                    return Err(format!("transpose diverged (nt={nt})"));
+                }
+                let back = gemm::transpose_nt(&got, t.shape[1], t.shape[0], nt);
+                if back != t.data {
+                    return Err("transpose does not involute".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fwht_matches_explicit_hadamard_matmul() {
+    check(
+        "fwht≡H-matmul",
+        20,
+        |g: &mut Gen| {
+            let n = *g.choose(&[2usize, 4, 8, 16, 64, 128]);
+            let rows = g.usize_in(1, 6);
+            tensor_from(g, rows, n)
+        },
+        |x| {
+            let n = x.shape[1];
+            let h = rotation::hadamard(n);
+            // rows: x·H
+            let want = x.matmul(&h);
+            let scale = want.max_abs().max(1.0);
+            for nt in [1usize, 2, 4] {
+                let mut got = x.clone();
+                fwht::fwht_rows_nt(&mut got.data, x.shape[0], n, nt);
+                for (a, b) in got.data.iter().zip(&want.data) {
+                    if (a - b).abs() > 1e-5 * scale {
+                        return Err(format!("row fwht nt={nt}: {a} vs {b}"));
+                    }
+                }
+            }
+            // cols: Hᵀ·xᵀ on the transposed view
+            let xt = x.transpose2();
+            let want_c = h.transpose2().matmul(&xt);
+            let mut got_c = xt.clone();
+            fwht::fwht_cols_nt(&mut got_c.data, n, x.shape[0], 2);
+            let scale_c = want_c.max_abs().max(1.0);
+            for (a, b) in got_c.data.iter().zip(&want_c.data) {
+                if (a - b).abs() > 1e-5 * scale_c {
+                    return Err(format!("col fwht: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn synth_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "kparity".into(),
+        vocab_size: 48,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_head: 8,
+        d_ff: 64,
+        o_model: 2,
+        inject_amp: 0.0,
+        inject_delta: 0.0,
+        max_prefix: 3,
+        train_seq: 16,
+        eval_seq: 16,
+        cache_max: 8,
+        sites: vec!["attn_in".into(), "o_in".into(), "mlp_in".into(), "down_in".into()],
+    }
+}
+
+fn synth_weights(cfg: &ModelConfig, rng: &mut SplitMix64) -> WeightStore {
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let mut rt = |shape: &[usize]| -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape.to_vec(), (0..n).map(|_| rng.range_f32(-0.5, 0.5)).collect()).unwrap()
+    };
+    let mut pairs: Vec<(String, Tensor)> = vec![
+        ("emb".into(), rt(&[cfg.vocab_size, d])),
+        ("head".into(), rt(&[d, cfg.vocab_size])),
+        ("lnf".into(), Tensor::full(&[d], 1.0)),
+    ];
+    for l in 0..cfg.n_layers {
+        for t in ["wq", "wk", "wv", "wo"] {
+            pairs.push((format!("layers.{l}.{t}"), rt(&[d, d])));
+        }
+        for t in ["wg", "wu"] {
+            pairs.push((format!("layers.{l}.{t}"), rt(&[d, ff])));
+        }
+        pairs.push((format!("layers.{l}.wd"), rt(&[ff, d])));
+        pairs.push((format!("layers.{l}.ln1"), Tensor::full(&[d], 1.0)));
+        pairs.push((format!("layers.{l}.ln2"), Tensor::full(&[d], 1.0)));
+    }
+    WeightStore::from_pairs(pairs)
+}
+
+#[test]
+fn fwht_fold_matches_explicit_matrix_fold() {
+    let cfg = synth_cfg();
+    let mut rng = SplitMix64::new(0xF01D);
+    let base = synth_weights(&cfg, &mut rng);
+
+    let mut via_fwht = base.clone();
+    rotation::fold_rotations(&cfg, &mut via_fwht).unwrap();
+    let mut via_matmul = base.clone();
+    naive::fold_rotations(&cfg, &mut via_matmul).unwrap();
+
+    for name in &via_matmul.names {
+        let want = via_matmul.get(name).unwrap();
+        let got = via_fwht.get(name).unwrap();
+        assert_eq!(got.shape, want.shape, "{name}: shape");
+        let scale = want.max_abs().max(1.0);
+        for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+            assert!(
+                (a - b).abs() <= 2e-5 * scale,
+                "{name}[{i}]: fwht {a} vs explicit {b} (scale {scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_quantizer_matches_frozen_two_pass() {
+    check(
+        "fused-quant≡two-pass",
+        20,
+        |g: &mut Gen| {
+            let rows = g.usize_in(1, 96);
+            let cols = g.usize_in(1, 40);
+            let bits = *g.choose(&[2usize, 3, 4, 8]);
+            let grid = *g.choose(&[1usize, 7, 40]);
+            let mut w = tensor_from(g, rows, cols);
+            // adversarial channels: an all-zero column and an outlier column
+            if cols >= 2 {
+                for r in 0..rows {
+                    w.data[r * cols] = 0.0;
+                }
+                w.data[cols - 1] *= 50.0;
+            }
+            (w, bits, grid)
+        },
+        |(w, bits, grid)| {
+            let qm = quantizer::qmax(*bits);
+            let mut frozen = w.clone();
+            let want_steps = naive::quant_weight_per_channel(&mut frozen, qm, *grid);
+            for nt in [1usize, 2, 5] {
+                let mut fused = w.clone();
+                let (rows, cols) = (w.shape[0], w.shape[1]);
+                let steps = kq::quant_per_channel_nt(&mut fused.data, rows, cols, qm, *grid, nt);
+                if steps != want_steps {
+                    return Err(format!("steps diverged (nt={nt})"));
+                }
+                if fused.data != frozen.data {
+                    return Err(format!("codes diverged (nt={nt})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fused_group_quantizer_matches_frozen_two_pass() {
+    check(
+        "fused-group-quant≡two-pass",
+        20,
+        |g: &mut Gen| {
+            let rows = g.usize_in(2, 80);
+            let cols = g.usize_in(1, 24);
+            let group = *g.choose(&[2usize, 8, 64]);
+            let grid = *g.choose(&[1usize, 40]);
+            (tensor_from(g, rows, cols), group, grid)
+        },
+        |(w, group, grid)| {
+            let qm = quantizer::qmax(4);
+            let mut frozen = w.clone();
+            let want_steps = naive::quant_weight_per_group(&mut frozen, qm, *group, *grid);
+            let mut fused = w.clone();
+            let (rows, cols) = (w.shape[0], w.shape[1]);
+            let steps = kq::quant_per_group_nt(&mut fused.data, rows, cols, qm, *group, *grid, 3);
+            if steps != want_steps {
+                return Err("group steps diverged".into());
+            }
+            if fused.data != frozen.data {
+                return Err("group codes diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Bit-exact thread-count independence of every kernel (the determinism
+/// contract CI pins with a `PQ_THREADS=1` run).  Sizes sit well above the
+/// kernels' serial-fallback work threshold so the multi-band paths really
+/// run; the single-thread results are additionally cross-checked against
+/// the frozen naive references, pinning multi-band parity too.
+#[test]
+fn kernels_are_thread_count_independent() {
+    let mut rng = SplitMix64::new(0x715_7EAD);
+    let m = 300;
+    let k = 150;
+    let n = 230;
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+    let f: Vec<f32> = (0..1100 * 64).map(|_| rng.normal_f32()).collect();
+    let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+
+    let mm1 = gemm::matmul_nt(&a, &b, m, k, n, 1);
+    let mut fw1 = f.clone();
+    fwht::fwht_rows_nt(&mut fw1, 1100, 64, 1);
+    let mut q1 = a.clone();
+    let s1 = kq::quant_per_channel_nt(&mut q1, m, k, 7.0, 40, 1);
+    let t1 = gemm::transpose_nt(&a, m, k, 1);
+    for nt in [2usize, 3, 8, 64] {
+        let mm = gemm::matmul_nt(&a, &b, m, k, n, nt);
+        assert_eq!(bits(&mm), bits(&mm1), "matmul nt={nt}");
+        let mut fw = f.clone();
+        fwht::fwht_rows_nt(&mut fw, 1100, 64, nt);
+        assert_eq!(bits(&fw), bits(&fw1), "fwht nt={nt}");
+        let mut q = a.clone();
+        let s = kq::quant_per_channel_nt(&mut q, m, k, 7.0, 40, nt);
+        assert_eq!(bits(&q), bits(&q1), "quant codes nt={nt}");
+        assert_eq!(bits(&s), bits(&s1), "quant steps nt={nt}");
+        assert_eq!(bits(&gemm::transpose_nt(&a, m, k, nt)), bits(&t1), "transpose nt={nt}");
+    }
+
+    // multi-band results equal the frozen naive references at this size too
+    let ta = Tensor::new(vec![m, k], a.clone()).unwrap();
+    let tb = Tensor::new(vec![k, n], b.clone()).unwrap();
+    assert!(mm1.iter().zip(&naive::matmul(&ta, &tb).data).all(|(x, y)| x == y));
+    assert_eq!(t1, naive::transpose2(&ta).data);
+    let mut qn = ta.clone();
+    let sn = naive::quant_weight_per_channel(&mut qn, 7.0, 40);
+    assert_eq!(q1, qn.data, "multi-band fused quant == naive");
+    assert_eq!(s1, sn, "multi-band fused steps == naive");
+    let tf = Tensor::new(vec![1100, 64], f.clone()).unwrap();
+    let want = naive::matmul(&tf, &rotation::hadamard(64));
+    let scale = want.max_abs().max(1.0);
+    for (x, y) in fw1.iter().zip(&want.data) {
+        assert!((x - y).abs() <= 1e-5 * scale, "multi-band fwht vs H-matmul: {x} vs {y}");
+    }
+}
+
+/// The PQ_THREADS env knob reaches the default entry points and cannot
+/// change results (only speed).  The previous value is restored on every
+/// path so a suite-wide pin (CI's `PQ_THREADS=1` leg) survives this test;
+/// concurrent readers only ever see *some* valid setting, which the
+/// determinism contract makes harmless (all env access stays on rust's
+/// locked std::env path).
+#[test]
+fn pq_threads_env_knob_is_result_invariant() {
+    assert!(kernels::threads() >= 1);
+    let prior = std::env::var("PQ_THREADS").ok();
+    let mut rng = SplitMix64::new(0xE27);
+    let a = Tensor::new(vec![19, 33], (0..19 * 33).map(|_| rng.normal_f32()).collect()).unwrap();
+    let b = Tensor::new(vec![33, 21], (0..33 * 21).map(|_| rng.normal_f32()).collect()).unwrap();
+    let want = gemm::matmul_nt(&a.data, &b.data, 19, 33, 21, 1);
+    for setting in ["1", "2", "7", "not-a-number", "0"] {
+        std::env::set_var("PQ_THREADS", setting);
+        assert!(kernels::threads() >= 1, "PQ_THREADS={setting}");
+        let got = a.matmul(&b); // env-driven path
+        assert_eq!(got.data, want, "PQ_THREADS={setting}");
+    }
+    match prior {
+        Some(v) => std::env::set_var("PQ_THREADS", v),
+        None => std::env::remove_var("PQ_THREADS"),
+    }
+}

@@ -19,7 +19,9 @@ use std::path::{Path, PathBuf};
 use prefixquant::config::ModelConfig;
 use prefixquant::coordinator::{KvCache, KvLayout};
 use prefixquant::model::QuantMode;
-use prefixquant::quant::{ArtifactMeta, Precision, QuantArtifact, FORMAT_VERSION};
+use prefixquant::quant::{
+    ArtifactMeta, Precision, QuantArtifact, WeightStepsMeta, FORMAT_VERSION,
+};
 use prefixquant::runtime::WeightStore;
 use prefixquant::tensor::Tensor;
 use prefixquant::util::json::Json;
@@ -74,6 +76,9 @@ fn synth_artifact(rng: &mut SplitMix64, cfg: &ModelConfig, n_prefix: usize) -> Q
         ("r4".into(), rt(rng, &[cfg.d_ff, cfg.d_ff])),
         ("prefix_k".into(), rt(rng, &[l, h, p, dh])),
         ("prefix_v".into(), rt(rng, &[l, h, p, dh])),
+        // full weight-step vector (provenance satellite of the host-kernel
+        // layer); summarized in meta.weight_quant below
+        ("wsteps.layers.0.wq".into(), rt(rng, &[cfg.d_model])),
     ]);
     QuantArtifact {
         meta: ArtifactMeta {
@@ -88,6 +93,13 @@ fn synth_artifact(rng: &mut SplitMix64, cfg: &ModelConfig, n_prefix: usize) -> Q
             prefix_tokens: (0..n_prefix as i32).map(|i| i + 1).collect(),
             n_prefix: n_prefix as i32,
             n_ctx_sinks: n_prefix as i32,
+            weight_quant: vec![WeightStepsMeta {
+                tensor: "layers.0.wq".into(),
+                group: None,
+                n_steps: cfg.d_model,
+                step_min: 0.001,
+                step_max: 0.25,
+            }],
             content_hash: 0,
         },
         weights,
@@ -121,6 +133,7 @@ fn roundtrip_property_randomized_geometries() {
         assert_eq!(re.meta.prefix_tokens, art.meta.prefix_tokens);
         assert_eq!(re.meta.n_prefix, art.meta.n_prefix);
         assert_eq!(re.meta.n_ctx_sinks, art.meta.n_ctx_sinks);
+        assert_eq!(re.meta.weight_quant, art.meta.weight_quant, "step provenance round-trips");
         assert_eq!(re.meta.content_hash, hash, "loaded hash matches save's");
         assert_eq!(re.weights.names, art.weights.names);
         for n in &art.weights.names {
