@@ -1,13 +1,14 @@
 //! Serving demo: quantize W4A4KV4 with PrefixQuant ONCE, save the versioned
 //! QuantArtifact, boot N server workers from it (cold start = O(read), no
-//! per-worker pipeline), submit a wave of concurrent generation requests
-//! round-robin, and report latency / throughput metrics plus the
-//! artifact-boot cold-start speedup (the paper's Table 5 setting plus its
-//! "quantize once, deploy" story, end to end).
+//! per-worker pipeline), front the fleet with the cluster `Router`, submit a
+//! wave of concurrent generation requests, and report latency / throughput
+//! metrics plus the artifact-boot cold-start speedup (the paper's Table 5
+//! setting plus its "quantize once, deploy" story, end to end).
 //!
 //!   cargo run --release --example serve_batch \
 //!       [-- --engine continuous|batch --workers 2 --requests 16 --max-new 12 \
-//!           --policy fcfs|priority --interactive-frac 0.25 --cancel-rate 0.1]
+//!           --policy fcfs|priority --interactive-frac 0.25 --cancel-rate 0.1 \
+//!           --dispatch round-robin|least-loaded|prefix-affinity]
 //!
 //! `--engine continuous` (default) runs the slot-table engine: requests are
 //! admitted mid-flight into free KV slots (mixed prompt lengths welcome) and
@@ -19,20 +20,26 @@
 //! post-failure model reload re-reads the artifact too (see
 //! `Server::start_from_artifact`).
 //!
+//! Two policy layers: `--policy fcfs|priority` is each WORKER's scheduling
+//! policy (admission order, preemption); `--dispatch` is the CLUSTER's
+//! dispatch policy — which worker a request lands on (see
+//! `coordinator::cluster`).  The router health-checks workers, so a wave
+//! survives a worker loss by redistribution.
+//!
 //! Mixed-priority mode: `--interactive-frac F` marks a fraction of the
 //! workload `Priority::Interactive` (the rest stays `Batch`), `--policy
 //! priority` schedules with `PriorityPreempt`, and `--cancel-rate C` cancels
 //! a fraction of requests mid-flight through their handles.  The report
 //! breaks TTFT / queue wait down per class from the per-class metrics,
-//! aggregated across workers.
+//! merged across workers via `Metrics::merge`.
 
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 use prefixquant::coordinator::{
-    EngineKind, FinishReason, GenRequest, Metrics, Priority, PriorityPreempt, Server,
-    ServerConfig, StreamEvent,
+    DispatchPolicy, EngineKind, FinishReason, GenRequest, LeastLoaded, PrefixAffinity, Priority,
+    PriorityPreempt, RoundRobin, Router, RouterConfig, Server, ServerConfig, StreamEvent,
 };
 use prefixquant::data::{self, Language};
 use prefixquant::model::Model;
@@ -61,6 +68,13 @@ fn main() -> Result<()> {
     if policy_name != "fcfs" && policy_name != "priority" {
         bail!("--policy {policy_name:?}: want fcfs|priority");
     }
+    let dispatch_name = args.get_or("dispatch", "round-robin").to_string();
+    let dispatch: Box<dyn DispatchPolicy> = match dispatch_name.as_str() {
+        "round-robin" => Box::new(RoundRobin::new()),
+        "least-loaded" => Box::new(LeastLoaded::new()),
+        "prefix-affinity" => Box::new(PrefixAffinity::new()),
+        other => bail!("--dispatch {other:?}: want round-robin|least-loaded|prefix-affinity"),
+    };
 
     let dir = prefixquant::artifacts_dir();
 
@@ -109,6 +123,9 @@ fn main() -> Result<()> {
     }
     let mean_boot = boot_s.iter().sum::<f64>() / boot_s.len() as f64;
 
+    // the router owns the fleet: dispatch, health checks, fleet metrics
+    let router = Router::new(servers, RouterConfig::default().policy(dispatch))?;
+
     // mixed-length prompts from the eval split: the continuous engine admits
     // them as slots free; the batch engine buckets them by length
     let text = lang.eval_text();
@@ -129,7 +146,7 @@ fn main() -> Result<()> {
             .max_new(max_new)
             .priority(priority)
             .build();
-        let handle = servers[id % servers.len()].submit_stream(req)?;
+        let handle = router.submit(req)?;
         let cancel = rng.range_f32(0.0, 1.0) < cancel_rate;
         handles.push((id, priority, cancel, handle));
     }
@@ -178,19 +195,27 @@ fn main() -> Result<()> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let mut m = Metrics::default();
-    for server in &servers {
-        m.merge(&server.metrics()?);
-    }
+    let report = router.report()?;
+    let m = &report.merged;
     println!(
         "\nserved {ok}/{n_requests} requests ({cancelled} cancelled) in {wall:.2}s via \
-         {n_workers}x {engine_kind:?}/{policy_name} | dispatches={} mean TTFT={:.0}ms \
-         (queue {:.0}ms) decode {:.1} tok/s",
+         {n_workers}x {engine_kind:?}/{policy_name} ({dispatch_name} dispatch) | \
+         dispatches={} mean TTFT={:.0}ms (queue {:.0}ms) decode {:.1} tok/s",
         m.batches,
         m.mean_ttft() * 1e3,
         m.mean_queue_wait() * 1e3,
         m.decode_tps()
     );
+    for w in &report.workers {
+        println!(
+            "  worker {}: {} ({} dispatched, {} affinity hits, {} completed)",
+            w.worker,
+            w.state.name(),
+            w.dispatched,
+            w.affinity_hits,
+            w.completed
+        );
+    }
     for p in Priority::all() {
         let c = m.class(p);
         if c.requests == 0 && c.cancelled == 0 {
@@ -242,8 +267,6 @@ fn main() -> Result<()> {
         boot_s.iter().map(|s| (s * 1e3).round() / 1e3).collect::<Vec<_>>()
     );
 
-    for server in servers {
-        server.shutdown();
-    }
+    router.shutdown();
     Ok(())
 }

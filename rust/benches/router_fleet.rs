@@ -1,0 +1,280 @@
+//! Cluster dispatch-policy bench: RoundRobin vs LeastLoaded vs
+//! PrefixAffinity over a 4-worker sim fleet under a shared-prefix workload
+//! (75% of requests drawn from 8 conversation groups that share a 24-token
+//! prompt prefix, 25% fully unique).
+//!
+//! The page-hit accounting is policy-independent: a per-worker radix-cache
+//! model (bounded LRU of 8-token prefix blocks, capacity 12 blocks — small
+//! enough that one worker cannot hold all 8 groups) is fed with each
+//! worker's ACTUAL dispatch assignment, taken from the namespaced response
+//! ids.  Prefix-affinity keeps each group's blocks hot on one worker;
+//! round-robin smears every group across all caches and thrashes the
+//! capacity bound.  The same model scores every policy, so the comparison
+//! is honest — the router's own affinity counters are reported separately.
+//!
+//!   cargo bench --bench router_fleet            # full run
+//!   cargo bench --bench router_fleet -- --smoke # CI perf trail
+//!
+//! Emits `BENCH_router_fleet.json` and ASSERTS the headline win:
+//! PrefixAffinity ≥1.3x the shared-prefix page-hit rate of RoundRobin, with
+//! strictly fewer net (cold) prefill tokens.  No artifacts required.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use prefixquant::bench_support::{emit_bench_json, smoke_mode};
+use prefixquant::coordinator::request::request_id;
+use prefixquant::coordinator::{
+    DispatchPolicy, GenRequest, LeastLoaded, PrefixAffinity, RoundRobin, Router, RouterConfig,
+    Server, ServerConfig, SimBackend,
+};
+use prefixquant::model::QuantMode;
+use prefixquant::util::args::Args;
+use prefixquant::util::rng::SplitMix64;
+use prefixquant::util::table::{f as ff, Table};
+
+const N_WORKERS: usize = 4;
+const B_EXEC: usize = 4;
+const S_EXEC: usize = 48;
+const N_PREFIX: usize = 2;
+const CACHE_MAX: usize = 96;
+const N_GROUPS: usize = 8;
+const GROUP_PREFIX: usize = 24;
+const TAIL: usize = 4;
+const MAX_NEW: usize = 8;
+/// radix-model block size (tokens per cached prefix block)
+const BLOCK: usize = 8;
+/// radix-model capacity per worker, in blocks: holds 4 of the 8 groups
+const CACHE_BLOCKS: usize = 12;
+
+fn sim_worker() -> Server {
+    let cfg = ServerConfig::builder(QuantMode::Static)
+        .batch_window(Duration::from_millis(1))
+        .build();
+    Server::start_sim(
+        move || {
+            Ok(SimBackend::new(B_EXEC, S_EXEC, N_PREFIX, CACHE_MAX)
+                .with_costs(Duration::from_micros(300), Duration::from_micros(200)))
+        },
+        cfg,
+    )
+    .expect("sim worker boots")
+}
+
+/// 75% shared-prefix requests (8 groups × 24-token prefix + unique 4-token
+/// tail), 25% fully unique — the "≥50% share a prompt prefix" workload from
+/// the acceptance criteria, with headroom.
+fn workload(n: usize, seed: u64) -> Vec<GenRequest> {
+    let mut rng = SplitMix64::new(seed);
+    let groups: Vec<Vec<i32>> = (0..N_GROUPS)
+        .map(|_| (0..GROUP_PREFIX).map(|_| 10 + rng.below(200) as i32).collect())
+        .collect();
+    (0..n)
+        .map(|i| {
+            let shared = rng.below(4) < 3;
+            let prompt: Vec<i32> = if shared {
+                let g = rng.below(N_GROUPS as u64) as usize;
+                let mut p = groups[g].clone();
+                for _ in 0..TAIL {
+                    p.push(10 + rng.below(200) as i32);
+                }
+                p
+            } else {
+                (0..GROUP_PREFIX + TAIL).map(|_| 10 + rng.below(200) as i32).collect()
+            };
+            GenRequest::new(i as u64, prompt, MAX_NEW)
+        })
+        .collect()
+}
+
+/// FNV-1a chain over the prompt, one hash per completed BLOCK — the same
+/// block identity a radix cache would key pages by.
+fn block_hashes(prompt: &[i32]) -> Vec<u64> {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut out = Vec::new();
+    for (i, &t) in prompt.iter().enumerate() {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        if (i + 1) % BLOCK == 0 {
+            out.push(h);
+        }
+    }
+    out
+}
+
+/// Bounded LRU of prefix blocks: the radix-cache stand-in for one worker.
+struct BlockCache {
+    order: VecDeque<u64>,
+}
+
+impl BlockCache {
+    fn new() -> BlockCache {
+        BlockCache { order: VecDeque::new() }
+    }
+
+    /// Longest run of leading blocks already cached (the pages a radix cache
+    /// would serve hot), then install/refresh every block.
+    fn hit_blocks_and_insert(&mut self, hashes: &[u64]) -> usize {
+        let mut hits = 0;
+        for h in hashes {
+            if self.order.contains(h) {
+                hits += 1;
+            } else {
+                break;
+            }
+        }
+        for &h in hashes {
+            if let Some(pos) = self.order.iter().position(|&x| x == h) {
+                self.order.remove(pos);
+            }
+            self.order.push_back(h);
+            if self.order.len() > CACHE_BLOCKS {
+                self.order.pop_front();
+            }
+        }
+        hits
+    }
+}
+
+struct PolicyRun {
+    name: &'static str,
+    /// modeled page-hit rate: hit prefill tokens / total prefill tokens
+    hit_rate: f64,
+    hit_tokens: usize,
+    total_tokens: usize,
+    /// prefill tokens a worker had to compute cold under the radix model
+    net_prefill_tokens: usize,
+    wall_s: f64,
+    mean_ttft_ms: f64,
+    /// the router's own affinity accounting (0 for policies without a tracker)
+    router_hit_rate: f64,
+}
+
+fn run(name: &'static str, policy: Box<dyn DispatchPolicy>, reqs: &[GenRequest]) -> PolicyRun {
+    let workers: Vec<Server> = (0..N_WORKERS).map(|_| sim_worker()).collect();
+    let router = Router::new(workers, RouterConfig::default().policy(policy)).expect("router");
+    let t0 = Instant::now();
+    let handles: Vec<_> =
+        reqs.iter().map(|r| router.submit(r.clone()).expect("submit")).collect();
+    let mut served = Vec::with_capacity(reqs.len());
+    for h in handles {
+        let resp = h.collect().expect("bench stream completes");
+        served.push(request_id::worker_of(resp.id).expect("namespaced id"));
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let report = router.report().expect("fleet report");
+    assert_eq!(report.fleet.unresolved(), 0, "{name}: ledger must balance");
+    router.shutdown();
+
+    // score the dispatch assignment against the policy-independent model
+    let mut caches: Vec<BlockCache> = (0..N_WORKERS).map(|_| BlockCache::new()).collect();
+    let mut hit_tokens = 0usize;
+    let mut total_tokens = 0usize;
+    for (req, &w) in reqs.iter().zip(&served) {
+        let hashes = block_hashes(&req.prompt);
+        hit_tokens += caches[w].hit_blocks_and_insert(&hashes) * BLOCK;
+        total_tokens += 1 + req.prompt.len(); // BOS included, as dispatched
+    }
+    PolicyRun {
+        name,
+        hit_rate: hit_tokens as f64 / total_tokens as f64,
+        hit_tokens,
+        total_tokens,
+        net_prefill_tokens: total_tokens - hit_tokens,
+        wall_s,
+        mean_ttft_ms: report.merged.mean_ttft() * 1e3,
+        router_hit_rate: report.fleet.prefix_hit_rate(),
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = smoke_mode();
+    let n_requests = args.usize_or("requests", if smoke { 48 } else { 160 }).expect("--requests");
+    let reqs = workload(n_requests, 0xF1EE7);
+
+    println!(
+        "router fleet bench{}: {n_requests} requests, {N_WORKERS} workers x {B_EXEC} slots, \
+         {N_GROUPS} groups sharing {GROUP_PREFIX}-token prefixes",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let rr = run("round-robin", Box::new(RoundRobin::new()), &reqs);
+    let ll = run("least-loaded", Box::new(LeastLoaded::new()), &reqs);
+    let pa = run(
+        "prefix-affinity",
+        Box::new(PrefixAffinity::new().with_block(BLOCK).with_capacity(CACHE_BLOCKS)),
+        &reqs,
+    );
+
+    let mut t = Table::new(
+        "dispatch policy vs shared-prefix page hits (modeled radix cache)",
+        &["policy", "hit rate", "hit tok", "net prefill tok", "wall s", "mean ttft ms"],
+    );
+    for r in [&rr, &ll, &pa] {
+        t.rowv(vec![
+            r.name.to_string(),
+            format!("{:.1}%", r.hit_rate * 100.0),
+            r.hit_tokens.to_string(),
+            r.net_prefill_tokens.to_string(),
+            ff(r.wall_s),
+            ff(r.mean_ttft_ms),
+        ]);
+    }
+    t.print();
+    println!(
+        "router-native affinity hit rates: rr={:.1}% ll={:.1}% pa={:.1}% (total prefill \
+         dispatched: {} tokens)",
+        rr.router_hit_rate * 100.0,
+        ll.router_hit_rate * 100.0,
+        pa.router_hit_rate * 100.0,
+        pa.total_tokens
+    );
+
+    let ratio = pa.hit_rate / rr.hit_rate.max(1e-9);
+    emit_bench_json(
+        "router_fleet",
+        &[
+            ("requests", n_requests as f64),
+            ("workers", N_WORKERS as f64),
+            ("rr_hit_rate", rr.hit_rate),
+            ("ll_hit_rate", ll.hit_rate),
+            ("pa_hit_rate", pa.hit_rate),
+            ("pa_over_rr_hit_ratio", ratio),
+            ("rr_net_prefill_tokens", rr.net_prefill_tokens as f64),
+            ("ll_net_prefill_tokens", ll.net_prefill_tokens as f64),
+            ("pa_net_prefill_tokens", pa.net_prefill_tokens as f64),
+            ("rr_wall_s", rr.wall_s),
+            ("ll_wall_s", ll.wall_s),
+            ("pa_wall_s", pa.wall_s),
+            ("rr_mean_ttft_ms", rr.mean_ttft_ms),
+            ("pa_mean_ttft_ms", pa.mean_ttft_ms),
+            ("pa_router_hit_rate", pa.router_hit_rate),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
+
+    // headline win: affinity routing keeps shared prefixes hot
+    assert!(
+        pa.hit_rate >= 1.3 * rr.hit_rate,
+        "PrefixAffinity page-hit rate {:.3} must be ≥1.3x RoundRobin {:.3}",
+        pa.hit_rate,
+        rr.hit_rate
+    );
+    assert!(
+        pa.net_prefill_tokens < rr.net_prefill_tokens,
+        "PrefixAffinity must prefill fewer cold tokens ({} vs {})",
+        pa.net_prefill_tokens,
+        rr.net_prefill_tokens
+    );
+    println!(
+        "headline: prefix-affinity {:.1}% vs round-robin {:.1}% page-hit rate ({:.2}x), \
+         {} fewer cold prefill tokens",
+        pa.hit_rate * 100.0,
+        rr.hit_rate * 100.0,
+        ratio,
+        rr.net_prefill_tokens - pa.net_prefill_tokens
+    );
+}

@@ -1,0 +1,384 @@
+//! Dispatch policies: which worker gets the next request.
+//!
+//! The router calls [`DispatchPolicy::pick`] with the load view of every
+//! ALIVE worker (draining and lost workers are already filtered out).  Three
+//! built-ins:
+//!
+//! - [`RoundRobin`] — rotate through the alive set; the baseline.
+//! - [`LeastLoaded`] — minimize [`WorkerLoad::score`] (active slots +
+//!   queued-token backlog from the last probe, plus what the router
+//!   dispatched since that probe, so a probe-staleness window cannot pile
+//!   everything onto one worker).
+//! - [`PrefixAffinity`] — hash the prompt at block boundaries and send the
+//!   request to the worker whose tracked-prefix LRU holds the LONGEST
+//!   matching prefix: that worker's paged KV most likely still has the
+//!   shared prefix's refcounted pages resident (the PrefixQuant prefix
+//!   itself is resident in every slot of every worker; this targets the
+//!   PROMPT prefix above it).  Falls back to least-loaded on a miss, or
+//!   when the matched worker is overloaded past `max_lag`.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::coordinator::request::GenRequest;
+
+/// Router-side load view of one alive worker: probe gauges plus the
+/// dispatches made since that probe refreshed them.
+#[derive(Debug, Clone)]
+pub struct WorkerLoad {
+    pub worker: usize,
+    /// slots decoding at the last probe
+    pub active_slots: usize,
+    /// requests queued at the last probe
+    pub queued_requests: usize,
+    /// token footprint of the queue at the last probe
+    pub queued_tokens: usize,
+    /// requests dispatched since the last probe (not yet in the gauges)
+    pub dispatched_since_probe: usize,
+    /// dispatched and not yet terminal (router-side, always current)
+    pub outstanding: usize,
+    pub slots_total: usize,
+}
+
+/// Tokens a decoding slot or an unprobed dispatch is charged in the load
+/// score (a slot's backlog is unknown, so it weighs like a medium request).
+const SLOT_COST_TOKENS: usize = 64;
+
+impl WorkerLoad {
+    /// Scalar load score (lower = less loaded): probed token backlog plus a
+    /// per-slot charge for decoding slots and the dispatches the probe has
+    /// not seen yet.
+    pub fn score(&self) -> usize {
+        self.queued_tokens
+            + (self.active_slots + self.queued_requests + self.dispatched_since_probe)
+                * SLOT_COST_TOKENS
+    }
+}
+
+/// A dispatch decision.
+#[derive(Debug, Clone, Copy)]
+pub struct Pick {
+    pub worker: usize,
+    /// chosen by a tracked prompt-prefix match (not by rotation/load)
+    pub affinity_hit: bool,
+    /// prompt tokens (incl. BOS) covered by the matched prefix
+    pub hit_tokens: usize,
+}
+
+impl Pick {
+    fn cold(worker: usize) -> Pick {
+        Pick { worker, affinity_hit: false, hit_tokens: 0 }
+    }
+}
+
+/// Which alive worker serves the next request.  `workers` is non-empty and
+/// holds only alive workers; `pick` must return one of their ids.
+pub trait DispatchPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    fn pick(&mut self, req: &GenRequest, workers: &[WorkerLoad]) -> Pick;
+
+    /// A worker left the fleet for good: drop any per-worker state (tracked
+    /// prefixes must not keep routing at a dead worker).
+    fn forget_worker(&mut self, _worker: usize) {}
+}
+
+/// Rotate through the alive workers in id order.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl DispatchPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, _req: &GenRequest, workers: &[WorkerLoad]) -> Pick {
+        let w = workers[self.cursor % workers.len()].worker;
+        self.cursor = self.cursor.wrapping_add(1);
+        Pick::cold(w)
+    }
+}
+
+/// Minimize [`WorkerLoad::score`] (ties broken by lowest worker id).
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl LeastLoaded {
+    pub fn new() -> LeastLoaded {
+        LeastLoaded
+    }
+
+    fn least(workers: &[WorkerLoad]) -> usize {
+        workers
+            .iter()
+            .min_by_key(|l| (l.score(), l.worker))
+            .expect("pick is called with a non-empty alive set")
+            .worker
+    }
+}
+
+impl DispatchPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn pick(&mut self, _req: &GenRequest, workers: &[WorkerLoad]) -> Pick {
+        Pick::cold(LeastLoaded::least(workers))
+    }
+}
+
+/// FNV-1a over the first `n` prompt tokens (block-boundary prefix hashes).
+fn prefix_hashes(prompt: &[i32], block: usize) -> Vec<u64> {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut hashes = Vec::new();
+    for (i, &t) in prompt.iter().enumerate() {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        if (i + 1) % block == 0 {
+            hashes.push(h);
+        }
+    }
+    hashes
+}
+
+/// Bounded per-worker LRU of prefix-block hashes — a stand-in for the slice
+/// of a radix/page cache a worker can realistically keep hot.  The bound is
+/// what makes policies comparable: a policy that sprays one prefix group
+/// over every worker thrashes each worker's small tracked set, exactly like
+/// spraying requests thrashes real per-worker page pools.
+#[derive(Debug, Default)]
+struct LruSet {
+    order: VecDeque<u64>,
+}
+
+impl LruSet {
+    fn contains(&self, h: u64) -> bool {
+        self.order.contains(&h)
+    }
+
+    fn touch(&mut self, h: u64, capacity: usize) {
+        if let Some(pos) = self.order.iter().position(|&x| x == h) {
+            self.order.remove(pos);
+        }
+        self.order.push_back(h);
+        while self.order.len() > capacity {
+            self.order.pop_front();
+        }
+    }
+}
+
+/// Send requests to the worker already tracking their longest prompt prefix;
+/// fall back to least-loaded on a miss or when the matched worker is
+/// overloaded.
+#[derive(Debug)]
+pub struct PrefixAffinity {
+    /// tokens per hashed prefix block
+    block: usize,
+    /// tracked prefix blocks per worker (the LRU bound)
+    capacity: usize,
+    /// affinity is overridden when the matched worker's score exceeds the
+    /// least-loaded score by more than this many tokens
+    max_lag: usize,
+    tracked: HashMap<usize, LruSet>,
+}
+
+impl Default for PrefixAffinity {
+    fn default() -> PrefixAffinity {
+        PrefixAffinity {
+            block: 16,
+            capacity: 256,
+            max_lag: 8 * SLOT_COST_TOKENS,
+            tracked: HashMap::new(),
+        }
+    }
+}
+
+impl PrefixAffinity {
+    pub fn new() -> PrefixAffinity {
+        PrefixAffinity::default()
+    }
+
+    /// Tokens per hashed prefix block (match granularity).
+    pub fn with_block(mut self, block: usize) -> Self {
+        self.block = block.max(1);
+        self
+    }
+
+    /// Tracked prefix blocks per worker.
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = capacity.max(1);
+        self
+    }
+
+    /// Overload headroom (in score tokens) before affinity yields to
+    /// least-loaded.
+    pub fn with_max_lag(mut self, max_lag: usize) -> Self {
+        self.max_lag = max_lag;
+        self
+    }
+}
+
+impl DispatchPolicy for PrefixAffinity {
+    fn name(&self) -> &'static str {
+        "prefix-affinity"
+    }
+
+    fn pick(&mut self, req: &GenRequest, workers: &[WorkerLoad]) -> Pick {
+        let hashes = prefix_hashes(&req.prompt, self.block);
+        // longest tracked match across the alive workers' LRUs
+        let mut hit: Option<(usize, usize)> = None; // (worker, matched blocks)
+        for (k, h) in hashes.iter().enumerate().rev() {
+            for l in workers {
+                if self.tracked.get(&l.worker).is_some_and(|s| s.contains(*h)) {
+                    hit = Some((l.worker, k + 1));
+                    break;
+                }
+            }
+            if hit.is_some() {
+                break;
+            }
+        }
+        let least = LeastLoaded::least(workers);
+        let pick = match hit {
+            Some((w, blocks)) => {
+                let w_score =
+                    workers.iter().find(|l| l.worker == w).map(|l| l.score()).unwrap_or(0);
+                let least_score =
+                    workers.iter().find(|l| l.worker == least).map(|l| l.score()).unwrap_or(0);
+                if w_score > least_score + self.max_lag {
+                    // overflow: the affinity target is too far behind
+                    Pick::cold(least)
+                } else {
+                    // +1 for BOS: the hit covers the prefix pages incl. the
+                    // shared first page
+                    Pick { worker: w, affinity_hit: true, hit_tokens: blocks * self.block + 1 }
+                }
+            }
+            None => Pick::cold(least),
+        };
+        // register this prompt's blocks where the request actually lands
+        let set = self.tracked.entry(pick.worker).or_default();
+        for h in hashes {
+            set.touch(h, self.capacity);
+        }
+        pick
+    }
+
+    fn forget_worker(&mut self, worker: usize) {
+        self.tracked.remove(&worker);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle(workers: &[usize]) -> Vec<WorkerLoad> {
+        workers
+            .iter()
+            .map(|&worker| WorkerLoad {
+                worker,
+                active_slots: 0,
+                queued_requests: 0,
+                queued_tokens: 0,
+                dispatched_since_probe: 0,
+                outstanding: 0,
+                slots_total: 4,
+            })
+            .collect()
+    }
+
+    fn req(prompt: Vec<i32>) -> GenRequest {
+        GenRequest::new(0, prompt, 8)
+    }
+
+    #[test]
+    fn round_robin_cycles_the_alive_set() {
+        let mut p = RoundRobin::new();
+        let loads = idle(&[0, 2, 5]);
+        let picks: Vec<usize> =
+            (0..6).map(|_| p.pick(&req(vec![1, 2]), &loads).worker).collect();
+        assert_eq!(picks, vec![0, 2, 5, 0, 2, 5]);
+    }
+
+    #[test]
+    fn least_loaded_minimizes_score() {
+        let mut loads = idle(&[0, 1, 2]);
+        loads[0].queued_tokens = 500;
+        loads[1].active_slots = 1; // 1 slot charge
+        loads[2].active_slots = 3;
+        let mut p = LeastLoaded::new();
+        assert_eq!(p.pick(&req(vec![1]), &loads).worker, 1);
+        // unprobed dispatches count against a worker too
+        loads[1].dispatched_since_probe = 5;
+        assert_eq!(p.pick(&req(vec![1]), &loads).worker, 2);
+    }
+
+    #[test]
+    fn prefix_affinity_sticks_a_shared_prefix_to_one_worker() {
+        let mut p = PrefixAffinity::new().with_block(4);
+        let loads = idle(&[0, 1, 2]);
+        let shared: Vec<i32> = (0..8).collect();
+        let first = p.pick(&req(shared.clone()), &loads);
+        assert!(!first.affinity_hit, "nothing tracked yet");
+        for tail in 0..5 {
+            let mut prompt = shared.clone();
+            prompt.push(100 + tail);
+            let pick = p.pick(&req(prompt), &loads);
+            assert_eq!(pick.worker, first.worker, "same prefix → same worker");
+            assert!(pick.affinity_hit);
+            assert_eq!(pick.hit_tokens, 8 + 1, "both shared blocks + BOS");
+        }
+        // an unrelated prompt is NOT a hit
+        let other = p.pick(&req(vec![900, 901, 902, 903, 904]), &loads);
+        assert!(!other.affinity_hit);
+    }
+
+    #[test]
+    fn prefix_affinity_overflows_to_least_loaded() {
+        let mut p = PrefixAffinity::new().with_block(2).with_max_lag(10);
+        let mut loads = idle(&[0, 1]);
+        let shared = vec![7, 7, 7, 7];
+        let first = p.pick(&req(shared.clone()), &loads).worker;
+        // overload the affinity target far past max_lag
+        loads.iter_mut().find(|l| l.worker == first).unwrap().queued_tokens = 10_000;
+        let pick = p.pick(&req(shared), &loads);
+        assert_ne!(pick.worker, first, "overloaded target must be bypassed");
+        assert!(!pick.affinity_hit);
+    }
+
+    #[test]
+    fn forget_worker_drops_its_tracked_prefixes() {
+        let mut p = PrefixAffinity::new().with_block(2);
+        let loads = idle(&[0, 1]);
+        let shared = vec![3, 3, 3, 3];
+        let first = p.pick(&req(shared.clone()), &loads).worker;
+        p.forget_worker(first);
+        let survivors = idle(&[1 - first]);
+        let pick = p.pick(&req(shared), &survivors);
+        assert!(!pick.affinity_hit, "tracked prefixes of a lost worker are gone");
+        assert_eq!(pick.worker, 1 - first);
+    }
+
+    #[test]
+    fn lru_capacity_evicts_oldest_blocks() {
+        let mut p = PrefixAffinity::new().with_block(2).with_capacity(2);
+        let loads = idle(&[0]);
+        let a = vec![1, 1]; // 1 block
+        let b = vec![2, 2];
+        let c = vec![3, 3];
+        p.pick(&req(a.clone()), &loads);
+        p.pick(&req(b), &loads);
+        p.pick(&req(c), &loads); // capacity 2: evicts a's block
+        assert!(!p.pick(&req(a), &loads).affinity_hit, "evicted prefix no longer hits");
+    }
+}

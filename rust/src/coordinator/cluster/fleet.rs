@@ -1,0 +1,145 @@
+//! Fleet-wide metrics: router counters, per-worker dispatch/affinity
+//! breakdowns, and the merged engine [`Metrics`] view.
+//!
+//! The router-level counters form an exactly-once ledger: every submitted
+//! request ends in exactly one of `completed`, `cancelled`, `worker_lost`,
+//! or `errors`, whatever workers died along the way — the drain test holds
+//! the fleet to `submitted == terminal()` at the end of a run.
+
+use crate::coordinator::request::Metrics;
+
+use super::health::WorkerState;
+
+/// Router-level counters (cluster scope; per-engine counters live in the
+/// merged [`Metrics`]).
+#[derive(Debug, Clone, Default)]
+pub struct FleetMetrics {
+    /// requests accepted by the router
+    pub submitted: usize,
+    /// dispatches to workers (> `submitted` when requests are redistributed)
+    pub dispatched: usize,
+    /// terminal: streams finished normally on some worker
+    pub completed: usize,
+    /// terminal: streams finished via cancellation
+    pub cancelled: usize,
+    /// terminal: token-producing streams finished with
+    /// `FinishReason::WorkerLost` when their worker died
+    pub worker_lost: usize,
+    /// terminal: error events forwarded to clients
+    pub errors: usize,
+    /// re-dispatches of queued/token-less requests off dead, wedged, or
+    /// draining workers (also counts error-retry re-dispatches)
+    pub redistributed: usize,
+    /// dispatches whose worker was chosen by a tracked prompt-prefix match
+    pub affinity_hits: usize,
+    /// prompt tokens (incl. BOS) covered by the matched prefix on affinity
+    /// hits — the pages the target worker's radix cache can serve hot
+    pub prefix_hit_tokens: usize,
+    /// prompt tokens (incl. BOS) across all dispatches — the denominator of
+    /// [`FleetMetrics::prefix_hit_rate`]
+    pub dispatched_prefill_tokens: usize,
+    pub workers_dead: usize,
+    pub workers_wedged: usize,
+    pub workers_drained: usize,
+    pub workers_killed: usize,
+}
+
+impl FleetMetrics {
+    /// Requests that reached a terminal client event.
+    pub fn terminal(&self) -> usize {
+        self.completed + self.cancelled + self.worker_lost + self.errors
+    }
+
+    /// Requests still in flight (or lost to an accounting bug — the drain
+    /// test asserts this hits zero).
+    pub fn unresolved(&self) -> usize {
+        self.submitted.saturating_sub(self.terminal())
+    }
+
+    /// Fraction of dispatched prompt tokens covered by tracked-prefix hits
+    /// (the shared-prefix page-hit rate the bench compares across policies).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.dispatched_prefill_tokens == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / self.dispatched_prefill_tokens as f64
+        }
+    }
+
+    /// Prompt tokens a worker actually had to prefill cold (dispatched minus
+    /// prefix-hit tokens).
+    pub fn net_prefill_tokens(&self) -> usize {
+        self.dispatched_prefill_tokens.saturating_sub(self.prefix_hit_tokens)
+    }
+}
+
+/// Per-worker fleet-level counters (dispatch/affinity/redistribution view —
+/// the engine-level counters are in the worker's own [`Metrics`]).
+#[derive(Debug, Clone)]
+pub struct WorkerFleetMetrics {
+    pub worker: usize,
+    pub state: WorkerState,
+    /// requests dispatched to this worker (first dispatches + absorbed)
+    pub dispatched: usize,
+    /// dispatches that landed here via a tracked prompt-prefix match
+    pub affinity_hits: usize,
+    pub prefix_hit_tokens: usize,
+    /// redistributed requests this worker absorbed from lost/drained peers
+    pub redistributions_absorbed: usize,
+    /// terminal events (completed/cancelled) observed from this worker
+    pub completed: usize,
+    /// dispatched and not yet terminal (router-side view)
+    pub outstanding: usize,
+    /// active slots over total slots at the last probe
+    pub saturation: f64,
+    /// engine progress counter at the last probe
+    pub last_progress: u64,
+}
+
+/// One fleet-wide report: router counters, per-worker breakdown, and every
+/// worker's engine [`Metrics`] merged via [`Metrics::merge`].  Lost workers
+/// contribute their last probe snapshot, so the merged view still accounts
+/// for work they served before dying.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub fleet: FleetMetrics,
+    pub workers: Vec<WorkerFleetMetrics>,
+    pub merged: Metrics,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accounts_every_request_exactly_once() {
+        let mut f = FleetMetrics {
+            submitted: 10,
+            completed: 6,
+            cancelled: 1,
+            worker_lost: 2,
+            errors: 1,
+            ..FleetMetrics::default()
+        };
+        assert_eq!(f.terminal(), 10);
+        assert_eq!(f.unresolved(), 0);
+        f.submitted = 12;
+        assert_eq!(f.unresolved(), 2);
+    }
+
+    #[test]
+    fn hit_rate_and_net_prefill() {
+        assert_eq!(
+            FleetMetrics::default().prefix_hit_rate(),
+            0.0,
+            "no dispatches → rate 0, not NaN"
+        );
+        let f = FleetMetrics {
+            dispatched_prefill_tokens: 200,
+            prefix_hit_tokens: 50,
+            ..FleetMetrics::default()
+        };
+        assert!((f.prefix_hit_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(f.net_prefill_tokens(), 150);
+    }
+}

@@ -1,0 +1,141 @@
+//! Worker health: the per-worker lifecycle state machine and the
+//! progress-based wedge detector.
+//!
+//! The router probes each Alive worker on a fixed interval.  Three signals
+//! demote a worker:
+//!
+//! - **Dead**: the probe channel errored or the answer missed its deadline —
+//!   the worker thread is gone or blocked solid.
+//! - **Wedged**: probes keep answering but the engine's monotone progress
+//!   counter is frozen across `wedge_probes` consecutive probes while
+//!   requests are outstanding.  This generalizes the server-internal
+//!   `ReloadGovernor` no-progress test to the fleet level: the governor
+//!   bounds reload loops inside one worker, the wedge detector catches a
+//!   worker whose loop stopped consuming work at all.
+//! - **Failing**: the probe answered with `ProbeState::Failing` — the worker
+//!   exhausted its model-reload budget and is terminally erroring requests.
+//!
+//! All three end in `Lost`, which triggers redistribution of the worker's
+//! queued/token-less requests (see the router).  `Draining` is the
+//! cooperative middle state: excluded from dispatch, token-producing streams
+//! still running.
+
+/// Why a worker left the dispatch rotation for good.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainCause {
+    /// liveness probe failed (channel error or deadline miss)
+    Dead,
+    /// probes answered but progress stayed frozen with work outstanding
+    Wedged,
+    /// the worker reported `ProbeState::Failing` (reload budget exhausted)
+    Failing,
+    /// explicitly killed (crash simulation / forced retirement)
+    Killed,
+}
+
+impl DrainCause {
+    pub fn name(self) -> &'static str {
+        match self {
+            DrainCause::Dead => "dead",
+            DrainCause::Wedged => "wedged",
+            DrainCause::Failing => "failing",
+            DrainCause::Killed => "killed",
+        }
+    }
+}
+
+/// Lifecycle state of one worker in the fleet.
+///
+///   Alive ──drain──▶ Draining         (kept streams finish, then idle)
+///   Alive | Draining ──dead / wedged / failing / killed──▶ Lost(cause)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerState {
+    /// in the dispatch rotation, probed on the health interval
+    Alive,
+    /// out of the rotation; token-producing streams still completing
+    Draining,
+    /// terminal: server handle released, requests redistributed
+    Lost(DrainCause),
+}
+
+impl WorkerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkerState::Alive => "alive",
+            WorkerState::Draining => "draining",
+            WorkerState::Lost(_) => "lost",
+        }
+    }
+}
+
+/// Progress-based wedge detector, deterministic and thread-free so the
+/// policy is testable without booting workers.
+#[derive(Debug, Clone)]
+pub struct HealthTracker {
+    /// probes answered with frozen progress while work was outstanding
+    stale_probes: usize,
+    last_progress: u64,
+    /// consecutive stale probes tolerated before the wedged verdict
+    wedge_probes: usize,
+}
+
+impl HealthTracker {
+    pub fn new(wedge_probes: usize) -> HealthTracker {
+        HealthTracker { stale_probes: 0, last_progress: 0, wedge_probes: wedge_probes.max(1) }
+    }
+
+    /// Record one answered probe; returns true when the worker should be
+    /// declared wedged.  An idle worker (nothing outstanding) legitimately
+    /// makes no progress, so staleness only accumulates under load.
+    pub fn on_probe(&mut self, progress: u64, outstanding: usize) -> bool {
+        if progress > self.last_progress {
+            self.last_progress = progress;
+            self.stale_probes = 0;
+            return false;
+        }
+        if outstanding == 0 {
+            self.stale_probes = 0;
+            return false;
+        }
+        self.stale_probes += 1;
+        self.stale_probes >= self.wedge_probes
+    }
+
+    /// Last progress counter seen (fleet reporting).
+    pub fn last_progress(&self) -> u64 {
+        self.last_progress
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wedge_needs_consecutive_stale_probes_under_load() {
+        let mut h = HealthTracker::new(3);
+        assert!(!h.on_probe(10, 4));
+        assert!(!h.on_probe(10, 4), "stale probe 1");
+        assert!(!h.on_probe(10, 4), "stale probe 2");
+        assert!(h.on_probe(10, 4), "stale probe 3 → wedged");
+    }
+
+    #[test]
+    fn progress_resets_the_stale_count() {
+        let mut h = HealthTracker::new(2);
+        assert!(!h.on_probe(5, 1));
+        assert!(!h.on_probe(5, 1), "one stale probe");
+        assert!(!h.on_probe(6, 1), "progress clears staleness");
+        assert_eq!(h.last_progress(), 6);
+        assert!(!h.on_probe(6, 1));
+        assert!(h.on_probe(6, 1));
+    }
+
+    #[test]
+    fn idle_workers_are_never_wedged() {
+        let mut h = HealthTracker::new(1);
+        for _ in 0..10 {
+            assert!(!h.on_probe(0, 0), "no outstanding work → no wedge verdict");
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! Cluster serving layer: a [`Router`] front-end over a fleet of
+//! [`Server`](crate::coordinator::server::Server) workers booted from one
+//! shared quantization artifact.
+//!
+//! The module splits into four pieces:
+//!
+//! - [`dispatch`] — the [`DispatchPolicy`] trait and its three
+//!   implementations: [`RoundRobin`], [`LeastLoaded`] (active slots + queued
+//!   tokens from the last probe, corrected by dispatches since), and
+//!   [`PrefixAffinity`] (FNV hash of the longest tracked prompt-prefix block
+//!   → worker, overflowing to least-loaded when the sticky worker lags too
+//!   far behind).  Prefix affinity is the cluster-level completion of the
+//!   paper's prefixed-token design: the prefixed K/V pages every worker
+//!   shares are free, but per-conversation shared prefixes are only hot on
+//!   the worker that served them last — routing by prefix keeps them hot.
+//! - [`health`] — the worker lifecycle state machine
+//!   (Alive → Draining → Lost) and the progress-based [`HealthTracker`]
+//!   wedge detector.
+//! - [`router`] — the [`Router`] itself: id-namespaced dispatch, the
+//!   single-funnel event demultiplexer, health probing, drain/kill
+//!   redistribution, and fleet reporting.
+//! - [`fleet`] — [`FleetMetrics`] (the exactly-once request ledger and
+//!   prefix-hit accounting) and the per-worker/merged [`FleetReport`].
+
+pub mod dispatch;
+pub mod fleet;
+pub mod health;
+pub mod router;
+
+pub use dispatch::{DispatchPolicy, LeastLoaded, Pick, PrefixAffinity, RoundRobin, WorkerLoad};
+pub use fleet::{FleetMetrics, FleetReport, WorkerFleetMetrics};
+pub use health::{DrainCause, HealthTracker, WorkerState};
+pub use router::{Router, RouterConfig, RouterHandle};

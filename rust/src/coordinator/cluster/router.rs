@@ -1,0 +1,802 @@
+//! The cluster router: a stateless-ish front-end owning a fleet of
+//! [`Server`] workers, in the worker-executor/worker-service shape — the
+//! router holds no model state, only the in-flight table and per-worker
+//! load/health views.
+//!
+//! ## Event flow
+//!
+//! Clients submit through [`Router::submit`] and read a per-request
+//! [`StreamEvent`] channel, exactly like talking to one server.  Internally
+//! every dispatch uses `Reply::Routed`: ALL workers' token/terminal events
+//! funnel onto ONE channel, id-tagged with the namespaced request id (high
+//! bits = worker + 1, low bits = cluster sequence — see
+//! [`request_id`](crate::coordinator::request::request_id)), and the router
+//! core demultiplexes them back to the client channels.  That funnel is what
+//! makes redistribution safe: the router always knows which requests have
+//! produced tokens, and a re-dispatched request gets a FRESH namespaced id,
+//! so a straggler event from the old worker can never corrupt the new
+//! stream.
+//!
+//! ## Health and drain
+//!
+//! Alive workers are probed on `RouterConfig::health_interval` (fired
+//! asynchronously — a wedged worker cannot stall the loop).  A probe that
+//! errors or misses `probe_timeout` marks the worker Dead; probes that
+//! answer while the engine's progress counter stays frozen across
+//! `wedge_probes` probes with work outstanding mark it Wedged; a probe
+//! answering `ProbeState::Failing` retires it cooperatively.  In every case
+//! the worker's queued and token-less requests are re-dispatched to
+//! survivors (bounded by `max_redispatch`), and its token-producing streams
+//! are finished with `FinishReason::WorkerLost` carrying the tokens
+//! delivered so far.  [`Router::drain_worker`] is the cooperative version:
+//! the worker reports exactly which ids it released (authoritative — the
+//! router only re-dispatches those), keeps its token-producing streams
+//! running, and leaves the dispatch rotation.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::request::{
+    request_id, DrainReport, FinishReason, GenRequest, GenResponse, Metrics, ProbeState,
+    RoutedEvent, StreamEvent, WorkerPostMortem, WorkerProbe,
+};
+use crate::coordinator::server::Server;
+
+use super::dispatch::{DispatchPolicy, RoundRobin, WorkerLoad};
+use super::fleet::{FleetMetrics, FleetReport, WorkerFleetMetrics};
+use super::health::{DrainCause, HealthTracker, WorkerState};
+
+/// Router configuration.  `Default`: round-robin dispatch, 50ms health
+/// interval, 1s probe deadline, 4 stale probes to a wedge verdict, 3
+/// redistributions per request.
+pub struct RouterConfig {
+    pub policy: Box<dyn DispatchPolicy>,
+    /// how often each Alive worker is probed
+    pub health_interval: Duration,
+    /// probe answer deadline; a miss marks the worker Dead
+    pub probe_timeout: Duration,
+    /// consecutive progress-frozen probes (with work outstanding) before a
+    /// worker is declared Wedged
+    pub wedge_probes: usize,
+    /// re-dispatches allowed per request before it errors out
+    pub max_redispatch: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            policy: Box::new(RoundRobin::new()),
+            health_interval: Duration::from_millis(50),
+            probe_timeout: Duration::from_secs(1),
+            wedge_probes: 4,
+            max_redispatch: 3,
+        }
+    }
+}
+
+impl RouterConfig {
+    pub fn policy(mut self, policy: Box<dyn DispatchPolicy>) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn health_interval(mut self, interval: Duration) -> Self {
+        self.health_interval = interval;
+        self
+    }
+
+    pub fn probe_timeout(mut self, timeout: Duration) -> Self {
+        self.probe_timeout = timeout;
+        self
+    }
+
+    pub fn wedge_probes(mut self, probes: usize) -> Self {
+        self.wedge_probes = probes.max(1);
+        self
+    }
+
+    pub fn max_redispatch(mut self, n: usize) -> Self {
+        self.max_redispatch = n;
+        self
+    }
+}
+
+/// Control messages from the client side to the router core.
+enum Ctl {
+    Submit(GenRequest, u64, Instant, Sender<StreamEvent>),
+    Cancel(u64),
+    Report(Sender<FleetReport>),
+    Locate(u64, Sender<Option<usize>>),
+    Drain(usize, Sender<Result<DrainReport, String>>),
+    Kill(usize, Sender<Result<WorkerPostMortem, String>>),
+    Shutdown,
+}
+
+/// Client-side handle for one routed request.  Events carry NAMESPACED ids:
+/// `request_id::seq_of(resp.id)` equals [`RouterHandle::id`], and
+/// `request_id::worker_of(resp.id)` names the worker that served (or lost)
+/// the stream.
+pub struct RouterHandle {
+    seq: u64,
+    rx: Receiver<StreamEvent>,
+    ctl: Sender<Ctl>,
+}
+
+impl RouterHandle {
+    /// Cluster-wide sequence number of this request (the low bits of every
+    /// response id it will ever produce).
+    pub fn id(&self) -> u64 {
+        self.seq
+    }
+
+    /// Ask the router to cancel this request wherever it currently is.
+    pub fn cancel(&self) -> Result<()> {
+        self.ctl.send(Ctl::Cancel(self.seq)).map_err(|_| anyhow!("router is down"))
+    }
+
+    pub fn receiver(&self) -> &Receiver<StreamEvent> {
+        &self.rx
+    }
+
+    pub fn recv(&self) -> Result<StreamEvent> {
+        self.rx.recv().map_err(|_| anyhow!("router dropped request"))
+    }
+
+    pub fn into_receiver(self) -> Receiver<StreamEvent> {
+        self.rx
+    }
+
+    /// Drain the stream to its terminal event.
+    pub fn collect(self) -> Result<GenResponse> {
+        loop {
+            match self.rx.recv() {
+                Ok(StreamEvent::Token(_)) => {}
+                Ok(StreamEvent::Done(resp)) => return Ok(resp),
+                Ok(StreamEvent::Error(e)) => bail!(e),
+                Err(_) => bail!("router dropped stream"),
+            }
+        }
+    }
+}
+
+/// Prefix-affinity router over a fleet of workers (see the module docs).
+pub struct Router {
+    ctl: Sender<Ctl>,
+    seq: AtomicU64,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Front the fleet with a router thread.  The workers should all be
+    /// booted from the same artifact (the router assumes any worker can
+    /// serve any request).
+    pub fn new(workers: Vec<Server>, cfg: RouterConfig) -> Result<Router> {
+        if workers.is_empty() {
+            bail!("router needs at least one worker");
+        }
+        let RouterConfig { policy, health_interval, probe_timeout, wedge_probes, max_redispatch } =
+            cfg;
+        let (ctl_tx, ctl_rx) = channel::<Ctl>();
+        let (ev_tx, ev_rx) = channel::<RoutedEvent>();
+        let now = Instant::now();
+        let slots = workers
+            .into_iter()
+            .map(|server| WorkerSlot {
+                server: Some(server),
+                state: WorkerState::Alive,
+                health: HealthTracker::new(wedge_probes),
+                active_slots: 0,
+                queued_requests: 0,
+                queued_tokens: 0,
+                slots_total: 0,
+                dispatched_since_probe: 0,
+                outstanding: 0,
+                probe_pending: None,
+                last_probe_at: now,
+                last_metrics: Metrics::default(),
+                dispatched: 0,
+                affinity_hits: 0,
+                prefix_hit_tokens: 0,
+                redistributions_absorbed: 0,
+                completed: 0,
+            })
+            .collect();
+        let core = Core {
+            workers: slots,
+            policy,
+            health_interval,
+            probe_timeout,
+            max_redispatch,
+            ctl_rx,
+            ev_rx,
+            ev_tx,
+            routes: HashMap::new(),
+            by_seq: HashMap::new(),
+            fleet: FleetMetrics::default(),
+        };
+        let handle = std::thread::Builder::new().name("pq-router".into()).spawn(move || {
+            core.run();
+        })?;
+        Ok(Router { ctl: ctl_tx, seq: AtomicU64::new(0), handle: Some(handle) })
+    }
+
+    /// Submit a request; the router picks the worker.  The request's own
+    /// `id` field is replaced by a namespaced id on dispatch — correlate
+    /// through the handle's sequence number instead.
+    pub fn submit(&self, req: GenRequest) -> Result<RouterHandle> {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.ctl
+            .send(Ctl::Submit(req, seq, Instant::now(), tx))
+            .map_err(|_| anyhow!("router is down"))?;
+        Ok(RouterHandle { seq, rx, ctl: self.ctl.clone() })
+    }
+
+    /// Fleet-wide report: router counters, per-worker breakdown, and every
+    /// worker's engine metrics merged (lost workers contribute their last
+    /// probe snapshot).
+    pub fn report(&self) -> Result<FleetReport> {
+        let (tx, rx) = channel();
+        self.ctl.send(Ctl::Report(tx)).map_err(|_| anyhow!("router is down"))?;
+        rx.recv().map_err(|_| anyhow!("router dropped report request"))
+    }
+
+    /// Which worker a request (by handle sequence number) is currently on.
+    pub fn locate(&self, seq: u64) -> Result<Option<usize>> {
+        let (tx, rx) = channel();
+        self.ctl.send(Ctl::Locate(seq, tx)).map_err(|_| anyhow!("router is down"))?;
+        rx.recv().map_err(|_| anyhow!("router dropped locate request"))
+    }
+
+    /// Cooperatively drain a worker: it leaves the dispatch rotation, its
+    /// queued/token-less requests are re-dispatched to survivors (the
+    /// worker's released-id report is authoritative), and its
+    /// token-producing streams keep running to completion.
+    pub fn drain_worker(&self, worker: usize) -> Result<DrainReport> {
+        let (tx, rx) = channel();
+        self.ctl.send(Ctl::Drain(worker, tx)).map_err(|_| anyhow!("router is down"))?;
+        rx.recv().map_err(|_| anyhow!("router dropped drain request"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Kill a worker as if it crashed mid-flight: its replies are dropped
+    /// without terminal events, then the router redistributes its token-less
+    /// requests and finishes its token-producing streams with
+    /// `FinishReason::WorkerLost`.  Returns the worker's final page-pool
+    /// accounting.
+    pub fn kill_worker(&self, worker: usize) -> Result<WorkerPostMortem> {
+        let (tx, rx) = channel();
+        self.ctl.send(Ctl::Kill(worker, tx)).map_err(|_| anyhow!("router is down"))?;
+        rx.recv().map_err(|_| anyhow!("router dropped kill request"))?.map_err(|e| anyhow!(e))
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.ctl.send(Ctl::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        let _ = self.ctl.send(Ctl::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One in-flight request in the router's table.
+struct Route {
+    seq: u64,
+    client: Sender<StreamEvent>,
+    /// the original request (cloned per dispatch with a fresh namespaced id)
+    req: GenRequest,
+    submitted: Instant,
+    worker: usize,
+    /// tokens forwarded so far — the redistribution criterion, and the
+    /// payload of a synthesized `WorkerLost` response
+    tokens: Vec<i32>,
+    redispatches: usize,
+    first_token_s: Option<f64>,
+}
+
+/// Router-side view of one worker.
+struct WorkerSlot {
+    /// taken on loss (abandoned or joined); None = no longer contactable
+    server: Option<Server>,
+    state: WorkerState,
+    health: HealthTracker,
+    // last-probe gauges
+    active_slots: usize,
+    queued_requests: usize,
+    queued_tokens: usize,
+    slots_total: usize,
+    /// dispatches since the last answered probe (load-staleness correction)
+    dispatched_since_probe: usize,
+    /// dispatched and not yet terminal (router-side, always current)
+    outstanding: usize,
+    probe_pending: Option<(Receiver<WorkerProbe>, Instant)>,
+    last_probe_at: Instant,
+    /// last engine metrics seen (probe or report refresh) — what a lost
+    /// worker contributes to the merged fleet view
+    last_metrics: Metrics,
+    // fleet counters
+    dispatched: usize,
+    affinity_hits: usize,
+    prefix_hit_tokens: usize,
+    redistributions_absorbed: usize,
+    completed: usize,
+}
+
+impl WorkerSlot {
+    fn alive(&self) -> bool {
+        self.state == WorkerState::Alive && self.server.is_some()
+    }
+}
+
+/// The router core, owned by the `pq-router` thread.
+struct Core {
+    workers: Vec<WorkerSlot>,
+    policy: Box<dyn DispatchPolicy>,
+    health_interval: Duration,
+    probe_timeout: Duration,
+    max_redispatch: usize,
+    ctl_rx: Receiver<Ctl>,
+    ev_rx: Receiver<RoutedEvent>,
+    /// kept so `ev_rx` never disconnects while workers churn; cloned into
+    /// every dispatch
+    ev_tx: Sender<RoutedEvent>,
+    /// in-flight table keyed by namespaced id
+    routes: HashMap<u64, Route>,
+    /// handle sequence number → current namespaced id
+    by_seq: HashMap<u64, u64>,
+    fleet: FleetMetrics,
+}
+
+impl Core {
+    fn run(mut self) {
+        loop {
+            loop {
+                match self.ctl_rx.try_recv() {
+                    Ok(Ctl::Shutdown) | Err(TryRecvError::Disconnected) => {
+                        self.shutdown_all();
+                        return;
+                    }
+                    Ok(m) => self.on_ctl(m),
+                    Err(TryRecvError::Empty) => break,
+                }
+            }
+            while let Ok(ev) = self.ev_rx.try_recv() {
+                self.on_event(ev);
+            }
+            self.poll_probes();
+            self.start_due_probes();
+            // Park on the event funnel: token events are the high-rate
+            // stream; control messages wait at most one quantum.
+            match self.ev_rx.recv_timeout(self.quantum()) {
+                Ok(ev) => self.on_event(ev),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => unreachable!("core holds an ev_tx clone"),
+            }
+        }
+    }
+
+    fn quantum(&self) -> Duration {
+        let busy =
+            !self.routes.is_empty() || self.workers.iter().any(|w| w.probe_pending.is_some());
+        if busy {
+            Duration::from_micros(500)
+        } else {
+            Duration::from_millis(2)
+        }
+    }
+
+    fn on_ctl(&mut self, m: Ctl) {
+        match m {
+            Ctl::Submit(req, seq, submitted, client) => {
+                self.fleet.submitted += 1;
+                self.dispatch(Route {
+                    seq,
+                    client,
+                    req,
+                    submitted,
+                    worker: 0,
+                    tokens: Vec::new(),
+                    redispatches: 0,
+                    first_token_s: None,
+                });
+            }
+            Ctl::Cancel(seq) => {
+                if let Some(&wid) = self.by_seq.get(&seq) {
+                    let w = self.routes[&wid].worker;
+                    if let Some(server) = self.workers[w].server.as_ref() {
+                        // terminal Done(Cancelled) comes back via the funnel
+                        let _ = server.cancel(wid);
+                    }
+                }
+            }
+            Ctl::Report(tx) => {
+                let report = self.report();
+                let _ = tx.send(report);
+            }
+            Ctl::Locate(seq, tx) => {
+                let w = self.by_seq.get(&seq).map(|wid| self.routes[wid].worker);
+                let _ = tx.send(w);
+            }
+            Ctl::Drain(w, tx) => {
+                let r = self.drain_worker(w);
+                let _ = tx.send(r);
+            }
+            Ctl::Kill(w, tx) => {
+                let r = self.kill_worker(w);
+                let _ = tx.send(r);
+            }
+            Ctl::Shutdown => unreachable!("handled in run()"),
+        }
+    }
+
+    fn alive_loads(&self) -> Vec<WorkerLoad> {
+        self.workers
+            .iter()
+            .enumerate()
+            .filter(|(_, ws)| ws.alive())
+            .map(|(worker, ws)| WorkerLoad {
+                worker,
+                active_slots: ws.active_slots,
+                queued_requests: ws.queued_requests,
+                queued_tokens: ws.queued_tokens,
+                dispatched_since_probe: ws.dispatched_since_probe,
+                outstanding: ws.outstanding,
+                slots_total: ws.slots_total,
+            })
+            .collect()
+    }
+
+    /// Dispatch (or re-dispatch) a route to a policy-picked alive worker.
+    /// A worker whose channel is already gone is declared lost on the spot
+    /// and the pick retried against the survivors.
+    fn dispatch(&mut self, mut route: Route) {
+        loop {
+            let loads = self.alive_loads();
+            if loads.is_empty() {
+                self.fleet.errors += 1;
+                let _ = route
+                    .client
+                    .send(StreamEvent::Error("no alive workers in the fleet".into()));
+                return;
+            }
+            let pick = self.policy.pick(&route.req, &loads);
+            let w = pick.worker;
+            let wid = request_id::namespaced(w, route.seq);
+            let mut wreq = route.req.clone();
+            wreq.id = wid;
+            let ev_tx = self.ev_tx.clone();
+            let sent = match self.workers[w].server.as_ref() {
+                Some(server) => server.submit_routed(wreq, ev_tx, route.submitted).is_ok(),
+                None => false,
+            };
+            if !sent {
+                self.declare_lost(w, DrainCause::Dead);
+                continue;
+            }
+            let ws = &mut self.workers[w];
+            ws.dispatched += 1;
+            ws.dispatched_since_probe += 1;
+            ws.outstanding += 1;
+            self.fleet.dispatched += 1;
+            self.fleet.dispatched_prefill_tokens += 1 + route.req.prompt.len();
+            if pick.affinity_hit {
+                ws.affinity_hits += 1;
+                ws.prefix_hit_tokens += pick.hit_tokens;
+                self.fleet.affinity_hits += 1;
+                self.fleet.prefix_hit_tokens += pick.hit_tokens;
+            }
+            if route.redispatches > 0 {
+                ws.redistributions_absorbed += 1;
+                self.fleet.redistributed += 1;
+            }
+            route.worker = w;
+            self.by_seq.insert(route.seq, wid);
+            self.routes.insert(wid, route);
+            return;
+        }
+    }
+
+    /// Demultiplex one funnel event back to its client stream.
+    fn on_event(&mut self, ev: RoutedEvent) {
+        // stale ids (redistributed or torn-down routes) drop silently
+        if !self.routes.contains_key(&ev.id) {
+            return;
+        }
+        match ev.ev {
+            StreamEvent::Token(t) => {
+                let route = self.routes.get_mut(&ev.id).expect("checked above");
+                if route.tokens.is_empty() {
+                    route.first_token_s = Some(route.submitted.elapsed().as_secs_f64());
+                }
+                route.tokens.push(t);
+                let _ = route.client.send(StreamEvent::Token(t));
+            }
+            StreamEvent::Done(resp) => {
+                let route = self.routes.remove(&ev.id).expect("checked above");
+                self.by_seq.remove(&route.seq);
+                let ws = &mut self.workers[route.worker];
+                ws.outstanding = ws.outstanding.saturating_sub(1);
+                ws.completed += 1;
+                if resp.finish == FinishReason::Cancelled {
+                    self.fleet.cancelled += 1;
+                } else {
+                    self.fleet.completed += 1;
+                }
+                let _ = route.client.send(StreamEvent::Done(resp));
+            }
+            StreamEvent::Error(e) => {
+                let route = self.routes.remove(&ev.id).expect("checked above");
+                self.by_seq.remove(&route.seq);
+                let ws = &mut self.workers[route.worker];
+                ws.outstanding = ws.outstanding.saturating_sub(1);
+                if route.tokens.is_empty() && route.redispatches < self.max_redispatch {
+                    // token-less failure: give another worker a try (bounded,
+                    // so a deterministic rejection cannot ping-pong forever)
+                    let mut route = route;
+                    route.redispatches += 1;
+                    self.dispatch(route);
+                } else {
+                    self.fleet.errors += 1;
+                    let _ = route.client.send(StreamEvent::Error(e));
+                }
+            }
+        }
+    }
+
+    /// Fire probes for Alive workers whose interval elapsed.
+    fn start_due_probes(&mut self) {
+        for w in 0..self.workers.len() {
+            let due = {
+                let ws = &self.workers[w];
+                ws.alive()
+                    && ws.probe_pending.is_none()
+                    && ws.last_probe_at.elapsed() >= self.health_interval
+            };
+            if !due {
+                continue;
+            }
+            let started = self.workers[w]
+                .server
+                .as_ref()
+                .expect("alive() checked server presence")
+                .probe_start();
+            match started {
+                Ok(rx) => self.workers[w].probe_pending = Some((rx, Instant::now())),
+                Err(_) => self.declare_lost(w, DrainCause::Dead),
+            }
+        }
+    }
+
+    /// Poll outstanding probe answers; apply dead/wedged/failing verdicts.
+    fn poll_probes(&mut self) {
+        for w in 0..self.workers.len() {
+            let Some((rx, sent_at)) = self.workers[w].probe_pending.as_ref() else {
+                continue;
+            };
+            match rx.try_recv() {
+                Ok(probe) => {
+                    let ws = &mut self.workers[w];
+                    ws.probe_pending = None;
+                    ws.last_probe_at = Instant::now();
+                    ws.active_slots = probe.active_slots;
+                    ws.queued_requests = probe.queued_requests;
+                    ws.queued_tokens = probe.queued_tokens;
+                    ws.slots_total = probe.slots_total;
+                    ws.dispatched_since_probe = 0;
+                    ws.last_metrics = probe.metrics.clone();
+                    if probe.state == ProbeState::Failing {
+                        self.declare_lost(w, DrainCause::Failing);
+                        continue;
+                    }
+                    let outstanding = ws.outstanding;
+                    if ws.health.on_probe(probe.progress, outstanding) {
+                        self.declare_lost(w, DrainCause::Wedged);
+                    }
+                }
+                Err(TryRecvError::Empty) => {
+                    if sent_at.elapsed() > self.probe_timeout {
+                        self.declare_lost(w, DrainCause::Dead);
+                    }
+                }
+                Err(TryRecvError::Disconnected) => {
+                    self.declare_lost(w, DrainCause::Dead);
+                }
+            }
+        }
+    }
+
+    /// Terminal demotion: take the worker out of the fleet and settle every
+    /// route it held — token-less requests are re-dispatched to survivors,
+    /// token-producing streams are finished with `FinishReason::WorkerLost`
+    /// (their response id names the lost worker).
+    fn declare_lost(&mut self, w: usize, cause: DrainCause) {
+        if matches!(self.workers[w].state, WorkerState::Lost(_)) {
+            return;
+        }
+        // flush the funnel first: token events already sent by the dying
+        // worker decide which routes count as token-producing
+        while let Ok(ev) = self.ev_rx.try_recv() {
+            self.on_event(ev);
+        }
+        self.workers[w].state = WorkerState::Lost(cause);
+        self.workers[w].probe_pending = None;
+        match cause {
+            DrainCause::Dead => self.fleet.workers_dead += 1,
+            DrainCause::Wedged => self.fleet.workers_wedged += 1,
+            DrainCause::Failing => self.fleet.workers_drained += 1,
+            DrainCause::Killed => self.fleet.workers_killed += 1,
+        }
+        self.policy.forget_worker(w);
+        if let Some(server) = self.workers[w].server.take() {
+            match cause {
+                // a killed worker's thread has already exited: joining is
+                // instant and reaps it
+                DrainCause::Killed => server.shutdown(),
+                // dead/wedged threads may never exit: do NOT join
+                _ => server.abandon(),
+            }
+        }
+        let wids: Vec<u64> =
+            self.routes.iter().filter(|(_, r)| r.worker == w).map(|(&id, _)| id).collect();
+        for wid in wids {
+            let route = self.routes.remove(&wid).expect("collected above");
+            self.by_seq.remove(&route.seq);
+            if route.tokens.is_empty() {
+                let mut route = route;
+                route.redispatches += 1;
+                if route.redispatches <= self.max_redispatch {
+                    self.dispatch(route);
+                } else {
+                    self.fleet.errors += 1;
+                    let _ = route.client.send(StreamEvent::Error(format!(
+                        "worker {w} {} and the redistribution budget is exhausted",
+                        cause.name()
+                    )));
+                }
+            } else {
+                self.fleet.worker_lost += 1;
+                let resp = GenResponse {
+                    id: wid,
+                    tokens: route.tokens.clone(),
+                    ttft_s: route.first_token_s.unwrap_or(0.0),
+                    total_s: route.submitted.elapsed().as_secs_f64(),
+                    queue_s: 0.0,
+                    finish: FinishReason::WorkerLost,
+                };
+                let _ = route.client.send(StreamEvent::Done(resp));
+            }
+        }
+        self.workers[w].outstanding = 0;
+    }
+
+    /// Cooperative drain (see [`Router::drain_worker`]).
+    fn drain_worker(&mut self, w: usize) -> Result<DrainReport, String> {
+        if w >= self.workers.len() {
+            return Err(format!("no worker {w} in a fleet of {}", self.workers.len()));
+        }
+        if self.workers[w].state != WorkerState::Alive {
+            return Err(format!("worker {w} is {}", self.workers[w].state.name()));
+        }
+        let Some(server) = self.workers[w].server.as_ref() else {
+            return Err(format!("worker {w} has no server handle"));
+        };
+        let report = match server.drain(self.probe_timeout) {
+            Ok(r) => r,
+            Err(e) => {
+                // a worker that cannot answer a drain is dead
+                self.declare_lost(w, DrainCause::Dead);
+                return Err(format!("drain failed, worker {w} declared dead: {e:#}"));
+            }
+        };
+        self.workers[w].state = WorkerState::Draining;
+        self.fleet.workers_drained += 1;
+        self.policy.forget_worker(w);
+        // the worker's released list is authoritative: only those ids are
+        // re-dispatched, so a token event racing the drain can never spawn a
+        // duplicate stream
+        for &wid in &report.released {
+            let Some(mut route) = self.routes.remove(&wid) else {
+                continue;
+            };
+            self.by_seq.remove(&route.seq);
+            let ws = &mut self.workers[w];
+            ws.outstanding = ws.outstanding.saturating_sub(1);
+            route.redispatches += 1;
+            if route.redispatches <= self.max_redispatch {
+                self.dispatch(route);
+            } else {
+                self.fleet.errors += 1;
+                let _ = route.client.send(StreamEvent::Error(format!(
+                    "worker {w} drained and the redistribution budget is exhausted"
+                )));
+            }
+        }
+        Ok(report)
+    }
+
+    /// Forced kill (see [`Router::kill_worker`]).
+    fn kill_worker(&mut self, w: usize) -> Result<WorkerPostMortem, String> {
+        if w >= self.workers.len() {
+            return Err(format!("no worker {w} in a fleet of {}", self.workers.len()));
+        }
+        if matches!(self.workers[w].state, WorkerState::Lost(_)) {
+            return Err(format!("worker {w} is already lost"));
+        }
+        let Some(server) = self.workers[w].server.as_ref() else {
+            return Err(format!("worker {w} has no server handle"));
+        };
+        match server.kill(self.probe_timeout) {
+            Ok(pm) => {
+                self.declare_lost(w, DrainCause::Killed);
+                Ok(pm)
+            }
+            Err(e) => {
+                self.declare_lost(w, DrainCause::Dead);
+                Err(format!("kill failed, worker {w} declared dead: {e:#}"))
+            }
+        }
+    }
+
+    fn report(&mut self) -> FleetReport {
+        let mut merged = Metrics::default();
+        let mut workers = Vec::with_capacity(self.workers.len());
+        for w in 0..self.workers.len() {
+            if let Some(server) = self.workers[w].server.as_ref() {
+                if let Ok(m) = server.metrics_timeout(self.probe_timeout) {
+                    self.workers[w].last_metrics = m;
+                }
+            }
+            let ws = &self.workers[w];
+            merged.merge(&ws.last_metrics);
+            let saturation = if ws.slots_total > 0 {
+                ws.active_slots as f64 / ws.slots_total as f64
+            } else {
+                0.0
+            };
+            workers.push(WorkerFleetMetrics {
+                worker: w,
+                state: ws.state,
+                dispatched: ws.dispatched,
+                affinity_hits: ws.affinity_hits,
+                prefix_hit_tokens: ws.prefix_hit_tokens,
+                redistributions_absorbed: ws.redistributions_absorbed,
+                completed: ws.completed,
+                outstanding: ws.outstanding,
+                saturation,
+                last_progress: ws.health.last_progress(),
+            });
+        }
+        FleetReport { fleet: self.fleet.clone(), workers, merged }
+    }
+
+    /// Router shutdown: error every remaining stream, then shut the fleet
+    /// down (workers with in-flight work error it again internally; the
+    /// client channels are gone by then, which is fine).
+    fn shutdown_all(&mut self) {
+        for (_, route) in self.routes.drain() {
+            let _ = route.client.send(StreamEvent::Error("router shut down".into()));
+        }
+        self.by_seq.clear();
+        for ws in self.workers.iter_mut() {
+            if let Some(server) = ws.server.take() {
+                match ws.state {
+                    // never join a worker that might be wedged
+                    WorkerState::Lost(_) => server.abandon(),
+                    _ => server.shutdown(),
+                }
+            }
+        }
+    }
+}

@@ -22,6 +22,7 @@
 //! it reads pages directly through `KvCache::k_at`/`v_at`.
 
 use std::collections::BTreeMap;
+use std::ops::Deref;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -127,8 +128,13 @@ pub trait DecodeBackend {
 /// [`DecodeBackend`] over the real model executables (prefill runs the
 /// mode-selected forward; decode always runs the static executable, as in the
 /// original scheduler).
-pub struct ModelBackend<'a> {
-    pub model: &'a Model,
+///
+/// Generic over how the model is held: `&Model` for the borrowing callers
+/// (run-to-completion batch path, tests) and `Rc<Model>` for the serving
+/// worker, whose engine must outlive any one borrow so the worker loop can
+/// swap models on reload without a self-referential struct.
+pub struct ModelBackend<M: Deref<Target = Model>> {
+    pub model: M,
     pub mode: QuantMode,
     pub bos: i32,
     pub pad: i32,
@@ -137,10 +143,10 @@ pub struct ModelBackend<'a> {
     kv_layout: KvLayout,
 }
 
-impl<'a> ModelBackend<'a> {
+impl<M: Deref<Target = Model>> ModelBackend<M> {
     /// Dense-layout backend (the run-to-completion baseline keeps this; the
     /// serving path selects paged via [`ModelBackend::with_kv_layout`]).
-    pub fn new(model: &'a Model, mode: QuantMode, bos: i32, pad: i32) -> Result<Self> {
+    pub fn new(model: M, mode: QuantMode, bos: i32, pad: i32) -> Result<Self> {
         let (b_exec, s_exec) = model.fwd_geom()?;
         Ok(Self { model, mode, bos, pad, b_exec, s_exec, kv_layout: KvLayout::Dense })
     }
@@ -151,7 +157,7 @@ impl<'a> ModelBackend<'a> {
     }
 }
 
-impl<'a> DecodeBackend for ModelBackend<'a> {
+impl<M: Deref<Target = Model>> DecodeBackend for ModelBackend<M> {
     fn batch_slots(&self) -> usize {
         self.b_exec
     }
@@ -301,7 +307,10 @@ impl<'a> DecodeBackend for ModelBackend<'a> {
 /// `max_new` tokens (identical streams to decoding longer and truncating),
 /// emits a stop token (`FinishReason::Stop`, token included), or fills its
 /// cache row (`FinishReason::CacheFull`).
-pub fn run_to_completion<B: DecodeBackend>(be: &B, reqs: &[GenRequest]) -> Result<Vec<GenResponse>> {
+pub fn run_to_completion<B: DecodeBackend>(
+    be: &B,
+    reqs: &[GenRequest],
+) -> Result<Vec<GenResponse>> {
     if reqs.is_empty() {
         return Ok(Vec::new());
     }

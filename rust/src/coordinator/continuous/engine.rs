@@ -45,7 +45,8 @@ use anyhow::{bail, Result};
 use crate::coordinator::kvcache::KvCache;
 use crate::coordinator::policy::{Fcfs, QueueView, SchedulePolicy, SlotView};
 use crate::coordinator::request::{
-    ClassMetrics, FinishReason, GenRequest, GenResponse, Metrics, Priority, Reply, StreamEvent,
+    ClassMetrics, DrainReport, FinishReason, GenRequest, GenResponse, Metrics, Priority,
+    ProbeState, Reply, StreamEvent, WorkerPostMortem, WorkerProbe,
 };
 
 use super::backend::{DecodeBackend, DecodeGroup, PrefillJob};
@@ -1002,5 +1003,82 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
         m.kv_resident_bytes = self.kv.resident_kv_bytes();
         m.kv_used_bytes = self.kv.used_kv_bytes();
         m
+    }
+
+    /// Health/load snapshot for the cluster router.  `progress` is a
+    /// monotone work counter: a router seeing it frozen across probes while
+    /// requests are outstanding concludes the worker is wedged.
+    pub fn probe(&self) -> WorkerProbe {
+        let queued_tokens = self
+            .pending
+            .iter()
+            .map(|p| {
+                1 + p.req.prompt.len()
+                    + p.generated.len()
+                    + p.req.max_new.saturating_sub(p.generated.len())
+            })
+            .sum();
+        WorkerProbe {
+            state: ProbeState::Serving,
+            progress: (self.stats.prefill_tokens
+                + self.stats.generated_tokens
+                + self.stats.decode_rounds) as u64,
+            active_slots: self.slots.iter().filter(|s| s.is_some()).count(),
+            queued_requests: self.pending.len(),
+            queued_tokens,
+            slots_total: self.slots.len(),
+            kv_pages_total: self.kv.total_pages().unwrap_or(0),
+            kv_pages_free: self.kv.free_pages().unwrap_or(0),
+            metrics: self.metrics(),
+        }
+    }
+
+    /// Give back every request the cluster router can safely re-dispatch
+    /// elsewhere: all queued requests and every token-less in-flight slot.
+    /// Their `Reply` handles are dropped WITHOUT a terminal event — this is
+    /// a cluster-path API, and the router (which holds the client channels)
+    /// re-dispatches the returned ids under fresh namespaced ids.  Slots
+    /// that already streamed tokens keep running ("kept"); a drained worker
+    /// finishes them and then idles.
+    pub fn release_for_drain(&mut self) -> DrainReport {
+        let mut released = Vec::new();
+        for i in 0..self.slots.len() {
+            let token_less = matches!(&self.slots[i], Some(a) if a.tokens.is_empty());
+            if token_less {
+                let a = self.slots[i].take().expect("matched occupied slot");
+                released.push(a.req.id); // reply dropped with `a`: no terminal event
+                let _ = self.kv.reset_slot(i);
+            }
+        }
+        while let Some(p) = self.pending.pop_front() {
+            released.push(p.req.id);
+        }
+        self.deferred_ids.clear();
+        let kept = self.slots.iter().filter(|s| s.is_some()).count();
+        DrainReport { released, kept }
+    }
+
+    /// Crash-style teardown for a killed worker: drop every reply without a
+    /// terminal event (the router finishes or redistributes the streams from
+    /// its own in-flight table), reset every slot, and report the final
+    /// page-pool accounting so tests can prove nothing leaked.
+    pub fn post_mortem(&mut self) -> WorkerPostMortem {
+        let mut dropped_active = 0;
+        for i in 0..self.slots.len() {
+            if self.slots[i].take().is_some() {
+                dropped_active += 1;
+            }
+            let _ = self.kv.reset_slot(i);
+        }
+        let dropped_queued = self.pending.len();
+        self.pending.clear();
+        self.deferred_ids.clear();
+        WorkerPostMortem {
+            kv_pages_total: self.kv.total_pages().unwrap_or(0),
+            kv_pages_free: self.kv.free_pages().unwrap_or(0),
+            kv_prefix_pages: self.kv.prefix_page_ids().len(),
+            dropped_active,
+            dropped_queued,
+        }
     }
 }

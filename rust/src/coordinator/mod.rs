@@ -22,8 +22,15 @@
 //! (priority class, deadline hint, stop tokens), submissions return a
 //! [`server::RequestHandle`] with `cancel()`, and responses carry a
 //! [`request::FinishReason`].
+//!
+//! Above the single-worker server sits the [`cluster`] layer: a
+//! [`cluster::Router`] fronting a fleet of workers booted from one shared
+//! artifact, with pluggable [`cluster::DispatchPolicy`] implementations
+//! (round-robin, least-loaded, prefix-affinity), health-checked drain, and
+//! fleet-wide metrics via [`request::Metrics::merge`].
 
 pub mod batcher;
+pub mod cluster;
 pub mod continuous;
 pub mod kvcache;
 pub mod policy;
@@ -32,11 +39,19 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::{Batcher, Pending};
+pub use cluster::{
+    DispatchPolicy, DrainCause, FleetMetrics, FleetReport, HealthTracker, LeastLoaded, Pick,
+    PrefixAffinity, RoundRobin, Router, RouterConfig, RouterHandle, WorkerFleetMetrics,
+    WorkerLoad, WorkerState,
+};
 pub use continuous::{ContinuousEngine, ModelBackend, SimBackend};
 pub use kvcache::{KvCache, KvLayout, PagePool};
 pub use policy::{Fcfs, PriorityPreempt, QueueView, SchedulePolicy, SlotView};
 pub use request::{
-    ClassMetrics, FinishReason, GenRequest, GenRequestBuilder, GenResponse, Metrics, Priority,
-    Reply, StreamEvent,
+    ClassMetrics, DrainReport, FinishReason, GenRequest, GenRequestBuilder, GenResponse, Metrics,
+    Priority, ProbeState, Reply, RoutedEvent, StreamEvent, WorkerPostMortem, WorkerProbe,
 };
-pub use server::{EngineKind, RequestHandle, Server, ServerConfig, ServerConfigBuilder};
+pub use server::{
+    BackendSource, EngineKind, RequestHandle, Server, ServerConfig, ServerConfigBuilder,
+    SimSource,
+};

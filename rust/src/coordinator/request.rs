@@ -57,6 +57,10 @@ pub enum FinishReason {
     CacheFull,
     /// cancelled via a request handle; tokens generated so far are returned
     Cancelled,
+    /// the worker serving this stream died or wedged after producing tokens;
+    /// the tokens generated so far are returned (token-less requests are
+    /// silently redistributed to a surviving worker instead)
+    WorkerLost,
 }
 
 impl FinishReason {
@@ -66,6 +70,7 @@ impl FinishReason {
             FinishReason::Stop => "stop",
             FinishReason::CacheFull => "cache-full",
             FinishReason::Cancelled => "cancelled",
+            FinishReason::WorkerLost => "worker-lost",
         }
     }
 }
@@ -174,17 +179,40 @@ pub enum StreamEvent {
     Error(String),
 }
 
-/// Where a request's output goes: a single aggregate response, or a stream of
-/// per-token events.  Send failures are ignored (client hung up).
+/// A stream event tagged with the (namespaced) request id that produced it.
+///
+/// The cluster router funnels every worker's streams onto ONE channel; the
+/// tag is what lets it demultiplex events back to per-request client streams
+/// and maintain its in-flight table (which requests have produced tokens —
+/// the redistribution criterion when a worker is lost).
+#[derive(Debug, Clone)]
+pub struct RoutedEvent {
+    /// namespaced request id (see [`request_id`])
+    pub id: u64,
+    pub ev: StreamEvent,
+}
+
+/// Where a request's output goes: a single aggregate response, a stream of
+/// per-token events, or a router funnel carrying id-tagged events.  Send
+/// failures are ignored (client hung up).
 pub enum Reply {
     Aggregate(Sender<Result<GenResponse, String>>),
     Stream(Sender<StreamEvent>),
+    /// Cluster path: events are tagged with the namespaced request id and
+    /// multiplexed onto the router's single event channel.
+    Routed(u64, Sender<RoutedEvent>),
 }
 
 impl Reply {
     pub fn token(&self, t: i32) {
-        if let Reply::Stream(tx) = self {
-            let _ = tx.send(StreamEvent::Token(t));
+        match self {
+            Reply::Stream(tx) => {
+                let _ = tx.send(StreamEvent::Token(t));
+            }
+            Reply::Routed(id, tx) => {
+                let _ = tx.send(RoutedEvent { id: *id, ev: StreamEvent::Token(t) });
+            }
+            Reply::Aggregate(_) => {}
         }
     }
 
@@ -195,6 +223,9 @@ impl Reply {
             }
             Reply::Stream(tx) => {
                 let _ = tx.send(StreamEvent::Done(resp));
+            }
+            Reply::Routed(id, tx) => {
+                let _ = tx.send(RoutedEvent { id: *id, ev: StreamEvent::Done(resp) });
             }
         }
     }
@@ -207,8 +238,113 @@ impl Reply {
             Reply::Stream(tx) => {
                 let _ = tx.send(StreamEvent::Error(msg));
             }
+            Reply::Routed(id, tx) => {
+                let _ = tx.send(RoutedEvent { id: *id, ev: StreamEvent::Error(msg) });
+            }
         }
     }
+}
+
+/// Cluster-safe request-id namespacing.
+///
+/// A fleet of workers booted from one artifact must never emit colliding
+/// request ids in merged output, so the router stamps every dispatched
+/// request with `(worker + 1)` in the high [`request_id::WORKER_BITS`] bits
+/// and a cluster-wide sequence number in the low [`request_id::SEQ_BITS`]
+/// bits.  The `+ 1` keeps the whole low-48-bit plane (all ids produced by
+/// direct, router-less `Server` use) recognizably un-namespaced:
+/// [`request_id::worker_of`] returns `None` for those.
+pub mod request_id {
+    /// Low bits carrying the cluster-wide submission sequence number.
+    pub const SEQ_BITS: u32 = 48;
+    /// High bits carrying `worker + 1` (0 = not namespaced).
+    pub const WORKER_BITS: u32 = 64 - SEQ_BITS;
+    /// Mask selecting the sequence-number bits.
+    pub const SEQ_MASK: u64 = (1u64 << SEQ_BITS) - 1;
+
+    /// Id for cluster sequence number `seq` dispatched to `worker`.
+    pub fn namespaced(worker: usize, seq: u64) -> u64 {
+        ((worker as u64 + 1) << SEQ_BITS) | (seq & SEQ_MASK)
+    }
+
+    /// Worker a namespaced id was dispatched to (`None` when the id was not
+    /// produced by the cluster path).
+    pub fn worker_of(id: u64) -> Option<usize> {
+        let w = id >> SEQ_BITS;
+        if w == 0 {
+            None
+        } else {
+            Some((w - 1) as usize)
+        }
+    }
+
+    /// Cluster-wide sequence number of a namespaced id.
+    pub fn seq_of(id: u64) -> u64 {
+        id & SEQ_MASK
+    }
+}
+
+/// Whether a probed worker is still serving or has entered its terminal
+/// drain-failing loop (model factory exhausted its reload budget).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeState {
+    /// engine loop running; the load gauges below are live
+    Serving,
+    /// terminal: every new request is answered with an error — the router
+    /// should drain and stop dispatching here
+    Failing,
+}
+
+/// Snapshot of one worker's health and load, answered synchronously by the
+/// worker loop (so a timely answer IS the liveness signal).
+#[derive(Debug, Clone)]
+pub struct WorkerProbe {
+    pub state: ProbeState,
+    /// monotone work counter (prefill tokens + generated tokens + decode
+    /// rounds); frozen across probes while requests are outstanding means the
+    /// worker is wedged
+    pub progress: u64,
+    /// slots currently decoding
+    pub active_slots: usize,
+    /// requests queued behind the active slots
+    pub queued_requests: usize,
+    /// token footprint of the queue (BOS + prompt + budget per request) —
+    /// the load signal for least-loaded dispatch
+    pub queued_tokens: usize,
+    pub slots_total: usize,
+    /// page-pool gauges (0 when the worker runs a dense layout)
+    pub kv_pages_total: usize,
+    pub kv_pages_free: usize,
+    /// full metrics snapshot: kept by the router as the worker's last known
+    /// counters so a fleet report can still account for a dead worker
+    pub metrics: Metrics,
+}
+
+/// What a worker released when asked to drain: the namespaced ids of every
+/// queued or token-less in-flight request it gave back for redistribution
+/// (their `Reply` handles are dropped WITHOUT a terminal event — the router
+/// re-dispatches them under fresh ids), and how many token-producing streams
+/// it kept.
+#[derive(Debug, Clone)]
+pub struct DrainReport {
+    pub released: Vec<u64>,
+    pub kept: usize,
+}
+
+/// Final page-pool accounting from a killed worker, used by drain tests to
+/// prove the pool leaked nothing: every non-prefix page must be free once the
+/// engine has reset its slots.
+#[derive(Debug, Clone)]
+pub struct WorkerPostMortem {
+    pub kv_pages_total: usize,
+    pub kv_pages_free: usize,
+    /// pages pinned by the shared prompt prefix (never freed while the cache
+    /// lives)
+    pub kv_prefix_pages: usize,
+    /// in-flight requests dropped without a terminal event
+    pub dropped_active: usize,
+    /// queued requests dropped without a terminal event
+    pub dropped_queued: usize,
 }
 
 /// Per-priority-class serving counters (one entry per [`Priority`]).
@@ -484,5 +620,46 @@ mod tests {
         r.token(7); // aggregate replies ignore per-token events
         r.error("boom".into());
         assert_eq!(rx.recv().unwrap().unwrap_err(), "boom");
+    }
+
+    #[test]
+    fn routed_reply_tags_every_event_with_its_id() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let id = request_id::namespaced(3, 41);
+        let r = Reply::Routed(id, tx);
+        r.token(7);
+        r.error("boom".into());
+        let ev = rx.recv().unwrap();
+        assert_eq!(ev.id, id);
+        assert!(matches!(ev.ev, StreamEvent::Token(7)));
+        let ev = rx.recv().unwrap();
+        assert_eq!(ev.id, id);
+        assert!(matches!(ev.ev, StreamEvent::Error(_)));
+    }
+
+    #[test]
+    fn request_id_namespacing_round_trips() {
+        let id = request_id::namespaced(5, 1234);
+        assert_eq!(request_id::worker_of(id), Some(5));
+        assert_eq!(request_id::seq_of(id), 1234);
+        // worker 0 is distinguishable from "not namespaced"
+        let id0 = request_id::namespaced(0, 7);
+        assert_eq!(request_id::worker_of(id0), Some(0));
+        assert_eq!(request_id::seq_of(id0), 7);
+        // plain low-plane ids (direct Server use) are not namespaced
+        assert_eq!(request_id::worker_of(7), None);
+        assert_eq!(request_id::worker_of(request_id::SEQ_MASK), None);
+    }
+
+    #[test]
+    fn request_ids_never_collide_across_workers() {
+        // same sequence number on different workers → different ids; same
+        // worker, different sequence numbers → different ids
+        let mut seen = std::collections::HashSet::new();
+        for w in 0..4usize {
+            for seq in 0..64u64 {
+                assert!(seen.insert(request_id::namespaced(w, seq)));
+            }
+        }
     }
 }

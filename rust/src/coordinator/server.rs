@@ -48,10 +48,15 @@ use crate::quant::model_state::{self, ArtifactMeta};
 use crate::runtime::Engine;
 
 use super::batcher::Batcher;
-use super::continuous::{ContinuousEngine, EngineStats, ModelBackend, RetryReq};
+use super::continuous::{
+    ContinuousEngine, DecodeBackend, EngineStats, ModelBackend, RetryReq, SimBackend,
+};
 use super::kvcache::KvLayout;
 use super::policy::{Fcfs, SchedulePolicy};
-use super::request::{FinishReason, GenRequest, GenResponse, Metrics, Reply, StreamEvent};
+use super::request::{
+    DrainReport, FinishReason, GenRequest, GenResponse, Metrics, ProbeState, Reply, RoutedEvent,
+    StreamEvent, WorkerPostMortem, WorkerProbe,
+};
 use super::scheduler;
 
 /// Which scheduling engine the worker runs.
@@ -66,8 +71,19 @@ pub enum EngineKind {
 enum Msg {
     Gen(GenRequest, Instant, Sender<Result<GenResponse, String>>),
     GenStream(GenRequest, Instant, Sender<StreamEvent>),
+    /// Cluster path: events go back id-tagged on the router's funnel channel.
+    GenRouted(GenRequest, Instant, Sender<RoutedEvent>),
     Cancel(u64),
     Stats(Sender<Metrics>),
+    /// Synchronous health/load snapshot — a timely answer IS the liveness
+    /// signal the router's health checker watches.
+    Probe(Sender<WorkerProbe>),
+    /// Release every queued/token-less request for redistribution; streams
+    /// that already produced tokens keep running.
+    Drain(Sender<DrainReport>),
+    /// Crash-style teardown: drop every reply without a terminal event (the
+    /// router owns the client channels), report final page accounting, exit.
+    Kill(Sender<WorkerPostMortem>),
     Shutdown,
 }
 
@@ -210,6 +226,69 @@ impl ServerConfigBuilder {
     }
 }
 
+/// Where a continuous worker's [`DecodeBackend`]s come from.
+///
+/// The worker loop rebuilds its engine after a backend failure
+/// (`make_backend`) and reloads the underlying model when even the rebuild
+/// fails (`reload`).  Abstracting the pair lets the same worker loop serve a
+/// real model (`ModelSource`, `Rc<Model>`-holding backends so the engine owns
+/// its model reference) or a host-side simulation ([`SimSource`]) — which is
+/// what the cluster tests use to kill workers mid-decode deterministically.
+pub trait BackendSource {
+    type B: DecodeBackend;
+
+    /// A fresh backend over the CURRENT model (engine rebuild path).
+    fn make_backend(&mut self) -> Result<Self::B>;
+
+    /// Replace the underlying model (model reload path); the next
+    /// `make_backend` serves on the fresh model.
+    fn reload(&mut self) -> Result<()>;
+}
+
+/// [`BackendSource`] over a real model and its (re)constructor closure.
+struct ModelSource<F: FnMut() -> Result<Model>> {
+    model: Rc<Model>,
+    make_model: F,
+    mode: QuantMode,
+    bos: i32,
+    pad: i32,
+    kv: KvLayout,
+}
+
+impl<F: FnMut() -> Result<Model>> BackendSource for ModelSource<F> {
+    type B = ModelBackend<Rc<Model>>;
+
+    fn make_backend(&mut self) -> Result<Self::B> {
+        let be = ModelBackend::new(self.model.clone(), self.mode, self.bos, self.pad)?;
+        Ok(be.with_kv_layout(self.kv))
+    }
+
+    fn reload(&mut self) -> Result<()> {
+        // the failed engine (and its Rc clone) is dropped before the worker
+        // asks for a reload, so the old model frees here
+        self.model = Rc::new((self.make_model)()?);
+        Ok(())
+    }
+}
+
+/// [`BackendSource`] over the host-side simulation backend.  `reload` simply
+/// rebuilds via the same closure (the sim has no model to re-read).
+pub struct SimSource<F: FnMut() -> Result<SimBackend>> {
+    make: F,
+}
+
+impl<F: FnMut() -> Result<SimBackend>> BackendSource for SimSource<F> {
+    type B = SimBackend;
+
+    fn make_backend(&mut self) -> Result<SimBackend> {
+        (self.make)()
+    }
+
+    fn reload(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
 impl Server {
     /// Start the worker thread. `make_model` runs on the worker (PJRT state
     /// is created there and never crosses threads).  The factory is `FnMut`:
@@ -266,6 +345,51 @@ impl Server {
         )
     }
 
+    /// Start a worker over an arbitrary [`BackendSource`] (built on the
+    /// worker thread, so the source need not be `Send`).  Requires the
+    /// continuous engine: the run-to-completion path only understands real
+    /// models.  `ServerConfig::kv` is ignored when the source's backends
+    /// carry their own layout (the simulation backend does).
+    pub fn start_source<S, F>(make_source: F, cfg: ServerConfig) -> Result<Server>
+    where
+        S: BackendSource + 'static,
+        F: FnOnce() -> Result<S> + Send + 'static,
+    {
+        if cfg.engine != EngineKind::Continuous {
+            bail!("source-backed servers require the continuous engine");
+        }
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new().name("pq-source-worker".into()).spawn(
+            move || {
+                let mut source = match make_source() {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                worker_continuous(&mut source, &cfg, rx);
+            },
+        )?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during startup"))?
+            .map_err(|e| anyhow!("backend init failed: {e}"))?;
+        Ok(Server { tx, handle: Some(handle) })
+    }
+
+    /// Start a worker over the simulation backend (cluster tests, benches).
+    pub fn start_sim<F>(make: F, cfg: ServerConfig) -> Result<Server>
+    where
+        F: FnMut() -> Result<SimBackend> + Send + 'static,
+    {
+        Server::start_source(move || Ok(SimSource { make }), cfg)
+    }
+
     /// Submit a request; the handle carries the aggregate-response channel
     /// and `cancel()`.
     pub fn submit(&self, req: GenRequest) -> Result<RequestHandle<Result<GenResponse, String>>> {
@@ -303,11 +427,83 @@ impl Server {
         rx.recv().map_err(|_| anyhow!("server dropped stats request"))
     }
 
+    /// [`Server::metrics`] with a deadline, for callers (the router) that
+    /// must not block forever on a wedged worker.
+    pub fn metrics_timeout(&self, timeout: Duration) -> Result<Metrics> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Stats(tx)).map_err(|_| anyhow!("server is down"))?;
+        rx.recv_timeout(timeout).map_err(|_| anyhow!("stats probe timed out"))
+    }
+
+    /// Cluster submission: events for `req` come back id-tagged on `events`
+    /// (the router's shared funnel channel) instead of a per-request channel.
+    pub fn submit_routed(
+        &self,
+        req: GenRequest,
+        events: Sender<RoutedEvent>,
+        submitted: Instant,
+    ) -> Result<()> {
+        self.tx
+            .send(Msg::GenRouted(req, submitted, events))
+            .map_err(|_| anyhow!("server is down"))
+    }
+
+    /// Ask the router-facing cancel for a namespaced id (same wire as
+    /// [`RequestHandle::cancel`], without a handle).
+    pub fn cancel(&self, id: u64) -> Result<()> {
+        self.tx.send(Msg::Cancel(id)).map_err(|_| anyhow!("server is down"))
+    }
+
+    /// Synchronous health/load probe.  An error (send failure or deadline
+    /// miss) is the router's liveness signal that this worker is dead.
+    pub fn probe(&self, timeout: Duration) -> Result<WorkerProbe> {
+        let rx = self.probe_start()?;
+        rx.recv_timeout(timeout).map_err(|_| anyhow!("probe timed out"))
+    }
+
+    /// Fire a probe without blocking for the answer; the router polls the
+    /// returned receiver so one wedged worker cannot stall the whole fleet's
+    /// health loop.
+    pub fn probe_start(&self) -> Result<Receiver<WorkerProbe>> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Probe(tx)).map_err(|_| anyhow!("server is down"))?;
+        Ok(rx)
+    }
+
+    /// Release every queued/token-less request for redistribution (their
+    /// namespaced ids come back in the report; their reply handles are
+    /// dropped without a terminal event).  Token-producing streams keep
+    /// running to completion on this worker.
+    pub fn drain(&self, timeout: Duration) -> Result<DrainReport> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Drain(tx)).map_err(|_| anyhow!("server is down"))?;
+        rx.recv_timeout(timeout).map_err(|_| anyhow!("drain timed out"))
+    }
+
+    /// Crash-style teardown: the worker drops every in-flight reply without
+    /// a terminal event, resets its page pool, reports the final accounting,
+    /// and exits.  Used by the cluster tests to simulate a worker dying
+    /// mid-decode, and by the router to retire a wedged worker.
+    pub fn kill(&self, timeout: Duration) -> Result<WorkerPostMortem> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Kill(tx)).map_err(|_| anyhow!("server is down"))?;
+        rx.recv_timeout(timeout).map_err(|_| anyhow!("kill timed out"))
+    }
+
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+    }
+
+    /// Drop the server WITHOUT joining the worker thread.  `Drop` joins,
+    /// which would block forever on a wedged worker; the router abandons
+    /// those instead (the thread exits on its own if it ever unwedges and
+    /// sees the disconnected channel).
+    pub fn abandon(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.handle.take();
     }
 }
 
@@ -340,7 +536,17 @@ fn worker<F>(
     };
     match cfg.engine {
         EngineKind::Batch => worker_batch(&model, &cfg, rx),
-        EngineKind::Continuous => worker_continuous(model, make_model, &cfg, rx),
+        EngineKind::Continuous => {
+            let mut source = ModelSource {
+                model: Rc::new(model),
+                make_model,
+                mode: cfg.mode,
+                bos: cfg.bos,
+                pad: cfg.pad,
+                kv: cfg.kv,
+            };
+            worker_continuous(&mut source, &cfg, rx);
+        }
     }
 }
 
@@ -376,6 +582,39 @@ fn worker_batch(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
                 Msg::GenStream(req, submitted, tx) => {
                     waiters.insert(req.id, Reply::Stream(tx));
                     batcher.push_at(req, submitted);
+                }
+                Msg::GenRouted(req, submitted, tx) => {
+                    waiters.insert(req.id, Reply::Routed(req.id, tx));
+                    batcher.push_at(req, submitted);
+                }
+                Msg::Probe(tx) => {
+                    let _ = tx.send(WorkerProbe {
+                        state: ProbeState::Serving,
+                        progress: (metrics.prefill_tokens + metrics.generated_tokens) as u64,
+                        active_slots: 0,
+                        queued_requests: batcher.len(),
+                        queued_tokens: 0,
+                        slots_total: cfg.max_batch,
+                        kv_pages_total: 0,
+                        kv_pages_free: 0,
+                        metrics: metrics.clone(),
+                    });
+                }
+                Msg::Drain(tx) => {
+                    // run-to-completion batches are not individually
+                    // releasable: the batch engine keeps its queue (the
+                    // cluster path boots continuous workers only)
+                    let _ = tx.send(DrainReport { released: Vec::new(), kept: batcher.len() });
+                }
+                Msg::Kill(tx) => {
+                    let _ = tx.send(WorkerPostMortem {
+                        kv_pages_total: 0,
+                        kv_pages_free: 0,
+                        kv_prefix_pages: 0,
+                        dropped_active: 0,
+                        dropped_queued: batcher.len(),
+                    });
+                    break 'outer; // waiters drop without terminal events
                 }
                 Msg::Cancel(id) => {
                     // in-queue only: a dispatched batch runs to completion
@@ -510,20 +749,17 @@ impl ReloadGovernor {
     }
 }
 
-/// Continuous worker: serve on a model until shutdown, reloading the model
-/// through the (FnMut) factory when engine-level recovery fails.  With an
+/// Continuous worker: serve on a backend source until shutdown, reloading
+/// the source's model when engine-level recovery fails.  With an
 /// artifact-backed factory the reload re-reads the artifact — O(read), no
 /// pipeline.
-fn worker_continuous<F>(mut model: Model, mut make_model: F, cfg: &ServerConfig, rx: Receiver<Msg>)
-where
-    F: FnMut() -> Result<Model>,
-{
+fn worker_continuous<S: BackendSource>(source: &mut S, cfg: &ServerConfig, rx: Receiver<Msg>) {
     let mut carry: Vec<RetryReq> = Vec::new();
     let mut carry_stats = EngineStats::default();
     let mut governor = ReloadGovernor::new();
     loop {
         let progress_before = carry_stats.prefill_calls + carry_stats.decode_rounds;
-        match serve_on_model(&model, cfg, &rx, std::mem::take(&mut carry), carry_stats) {
+        match serve_on_source(source, cfg, &rx, std::mem::take(&mut carry), carry_stats) {
             ServeOutcome::Done => return,
             ServeOutcome::ReloadModel(reload) => {
                 let ModelReload { err, retry, mut stats, last_metrics } = *reload;
@@ -539,10 +775,9 @@ where
                     drain_failing(&rx, &msg, last_metrics);
                     return;
                 }
-                match make_model() {
-                    Ok(fresh) => {
+                match source.reload() {
+                    Ok(()) => {
                         stats.model_reloads += 1;
-                        model = fresh;
                         carry = retry;
                         carry_stats = stats;
                     }
@@ -564,17 +799,28 @@ where
     }
 }
 
+/// What one message asked the serve loop to do next.
+enum Flow {
+    Continue,
+    /// orderly shutdown: every in-flight request gets a terminal error
+    Shutdown,
+    /// crash simulation / forced retirement: replies are already dropped
+    /// without terminal events (the router owns the client channels) — the
+    /// loop must NOT fail_all on the way out
+    Killed,
+}
+
 /// Serve on one model instance: admit between decode rounds, stream as
 /// tokens appear, rebuild the engine in place after a backend failure.
 /// Returns `ReloadModel` when recovery needs a fresh model.
-fn serve_on_model(
-    model: &Model,
+fn serve_on_source<S: BackendSource>(
+    source: &mut S,
     cfg: &ServerConfig,
     rx: &Receiver<Msg>,
     carry: Vec<RetryReq>,
     carry_stats: EngineStats,
 ) -> ServeOutcome {
-    let mut engine = match make_engine(model, cfg) {
+    let mut engine = match make_engine(source, cfg) {
         Ok(e) => e,
         Err(e) => {
             // the engine cannot even be built on this model (e.g. the prefix
@@ -597,21 +843,21 @@ fn serve_on_model(
         // keep stepping (admission happens inside step()).
         if !engine.has_work() {
             match rx.recv() {
-                Ok(m) => {
-                    if handle_msg(m, &mut engine) {
-                        break 'outer;
-                    }
-                }
+                Ok(m) => match handle_msg(m, &mut engine) {
+                    Flow::Continue => {}
+                    Flow::Shutdown => break 'outer,
+                    Flow::Killed => return ServeOutcome::Done,
+                },
                 Err(_) => break,
             }
         }
         loop {
             match rx.try_recv() {
-                Ok(m) => {
-                    if handle_msg(m, &mut engine) {
-                        break 'outer;
-                    }
-                }
+                Ok(m) => match handle_msg(m, &mut engine) {
+                    Flow::Continue => {}
+                    Flow::Shutdown => break 'outer,
+                    Flow::Killed => return ServeOutcome::Done,
+                },
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => break 'outer,
             }
@@ -620,7 +866,7 @@ fn serve_on_model(
             let msg = format!("engine step failed: {e:#}");
             // the cache may be poisoned — rebuild so later requests can run,
             // and resubmit token-less in-flight requests (bounded attempts)
-            match make_engine(model, cfg) {
+            match make_engine(source, cfg) {
                 Ok(mut fresh) => {
                     fresh.stats = engine.stats.clone();
                     for r in engine.drain_for_recovery(&msg, cfg.max_retries) {
@@ -651,35 +897,53 @@ fn serve_on_model(
     ServeOutcome::Done
 }
 
-fn make_engine<'m>(
-    model: &'m Model,
+fn make_engine<S: BackendSource>(
+    source: &mut S,
     cfg: &ServerConfig,
-) -> Result<ContinuousEngine<ModelBackend<'m>>> {
-    let backend = ModelBackend::new(model, cfg.mode, cfg.bos, cfg.pad)?.with_kv_layout(cfg.kv);
+) -> Result<ContinuousEngine<S::B>> {
+    let backend = source.make_backend()?;
     Ok(ContinuousEngine::new(backend)?.with_policy(cfg.policy.fresh()))
 }
 
-/// Feed one message to the engine; returns true on shutdown.
-fn handle_msg(m: Msg, engine: &mut ContinuousEngine<ModelBackend<'_>>) -> bool {
+/// Feed one message to the engine; the returned [`Flow`] tells the serve
+/// loop whether (and how) to exit.
+fn handle_msg<B: DecodeBackend>(m: Msg, engine: &mut ContinuousEngine<B>) -> Flow {
     match m {
         Msg::Gen(req, submitted, tx) => {
             engine.submit(req, Reply::Aggregate(tx), submitted);
-            false
+            Flow::Continue
         }
         Msg::GenStream(req, submitted, tx) => {
             engine.submit(req, Reply::Stream(tx), submitted);
-            false
+            Flow::Continue
+        }
+        Msg::GenRouted(req, submitted, tx) => {
+            let id = req.id;
+            engine.submit(req, Reply::Routed(id, tx), submitted);
+            Flow::Continue
         }
         Msg::Cancel(id) => {
             // an unknown id already completed (cancel raced the finish)
             let _ = engine.cancel(id);
-            false
+            Flow::Continue
         }
         Msg::Stats(tx) => {
             let _ = tx.send(engine.metrics());
-            false
+            Flow::Continue
         }
-        Msg::Shutdown => true,
+        Msg::Probe(tx) => {
+            let _ = tx.send(engine.probe());
+            Flow::Continue
+        }
+        Msg::Drain(tx) => {
+            let _ = tx.send(engine.release_for_drain());
+            Flow::Continue
+        }
+        Msg::Kill(tx) => {
+            let _ = tx.send(engine.post_mortem());
+            Flow::Killed
+        }
+        Msg::Shutdown => Flow::Shutdown,
     }
 }
 
@@ -695,9 +959,42 @@ fn drain_failing(rx: &Receiver<Msg>, msg: &str, last_metrics: Metrics) {
             Msg::GenStream(_, _, tx) => {
                 let _ = tx.send(StreamEvent::Error(msg.to_string()));
             }
+            Msg::GenRouted(req, _, tx) => {
+                let _ = tx
+                    .send(RoutedEvent { id: req.id, ev: StreamEvent::Error(msg.to_string()) });
+            }
             Msg::Cancel(_) => {}
             Msg::Stats(tx) => {
                 let _ = tx.send(last_metrics.clone());
+            }
+            Msg::Probe(tx) => {
+                // answering (promptly) but Failing: the router drains us
+                // instead of declaring us dead
+                let _ = tx.send(WorkerProbe {
+                    state: ProbeState::Failing,
+                    progress: (last_metrics.prefill_tokens + last_metrics.generated_tokens)
+                        as u64,
+                    active_slots: 0,
+                    queued_requests: 0,
+                    queued_tokens: 0,
+                    slots_total: 0,
+                    kv_pages_total: 0,
+                    kv_pages_free: 0,
+                    metrics: last_metrics.clone(),
+                });
+            }
+            Msg::Drain(tx) => {
+                let _ = tx.send(DrainReport { released: Vec::new(), kept: 0 });
+            }
+            Msg::Kill(tx) => {
+                let _ = tx.send(WorkerPostMortem {
+                    kv_pages_total: 0,
+                    kv_pages_free: 0,
+                    kv_prefix_pages: 0,
+                    dropped_active: 0,
+                    dropped_queued: 0,
+                });
+                break;
             }
             Msg::Shutdown => break,
         }

@@ -14,7 +14,12 @@
 //!                                — generate via the serving coordinator;
 //!                                  the server always boots from an artifact
 //!                                  (`--load`, or quantize-once + save)
-//!   serve                        — pointer to the serve_batch example
+//!   serve     [--model M] [--scheme S] [--load DIR] [--workers N]
+//!             [--policy P] [--requests R] [--max-new T]
+//!                                — boot a router-fronted worker fleet from
+//!                                  one artifact and drive a demo workload;
+//!                                  policies: round-robin, least-loaded,
+//!                                  prefix-affinity (default)
 //!
 //! Schemes: fp16, rtn, quarot, smoothquant, atom, prefixquant-wo-ft,
 //! prefixquant (default bit-widths W4A4KV4; --bits w,a,kv overrides).
@@ -24,7 +29,10 @@ use std::rc::Rc;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
-use prefixquant::coordinator::{GenRequest, Server, ServerConfig};
+use prefixquant::coordinator::{
+    DispatchPolicy, GenRequest, LeastLoaded, PrefixAffinity, RoundRobin, Router, RouterConfig,
+    Server, ServerConfig,
+};
 use prefixquant::data::{self, Language};
 use prefixquant::eval;
 use prefixquant::model::Model;
@@ -238,40 +246,58 @@ fn cmd_eval(c: &Ctx, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The serving commands always boot from a QuantArtifact: either one saved
+/// earlier (--load) or one produced right now by a single offline recipe run
+/// — workers (and any post-failure model reload) only ever pay O(read).
+fn artifact_for_serving(c: &Ctx, args: &Args) -> Result<PathBuf> {
+    if let Some(dir) = args.get("load") {
+        return Ok(PathBuf::from(dir));
+    }
+    let (model, recipe, rep) = quantize_model(c, args)?;
+    let dir = match args.get("save") {
+        Some(d) => PathBuf::from(d),
+        None => std::env::temp_dir().join(format!("pq_gen_art_{}", std::process::id())),
+    };
+    QuantArtifact::save_model(&model, recipe.mode, Some(&rep), &dir)?;
+    eprintln!("quantized once → artifact at {dir:?}; serving boots from it");
+    Ok(dir)
+}
+
+/// One worker's server config for artifact-booted serving.
+fn worker_config(c: &Ctx, max_batch: usize) -> ServerConfig {
+    ServerConfig::builder(prefixquant::model::QuantMode::Static)
+        .engine(prefixquant::coordinator::EngineKind::Continuous)
+        .max_batch(max_batch)
+        .batch_window(Duration::from_millis(5))
+        .bos(c.tok.spec.bos)
+        .pad(c.tok.spec.pad)
+        // paged KV with a dense-equivalent auto-sized pool
+        .kv(prefixquant::coordinator::KvLayout::Paged { page_size: 16, n_pages: 0 })
+        .build()
+}
+
+fn dispatch_policy(name: &str) -> Result<Box<dyn DispatchPolicy>> {
+    Ok(match name {
+        "round-robin" => Box::new(RoundRobin::new()),
+        "least-loaded" => Box::new(LeastLoaded::new()),
+        "prefix-affinity" => Box::new(PrefixAffinity::new()),
+        other => {
+            bail!("unknown dispatch policy {other:?} (round-robin|least-loaded|prefix-affinity)")
+        }
+    })
+}
+
 fn cmd_gen(c: &Ctx, args: &Args) -> Result<()> {
     let prompt_text = args.get_or("prompt", "the quick").to_string();
     let n = args.usize_or("n", 32)?;
-    // the server always boots from a QuantArtifact: either one saved earlier
-    // (--load) or one produced right now by a single offline recipe run —
-    // the worker (and any post-failure model reload) only ever pays O(read)
-    let artifact_dir: PathBuf = match args.get("load") {
-        Some(dir) => PathBuf::from(dir),
-        None => {
-            let (model, recipe, rep) = quantize_model(c, args)?;
-            let dir = match args.get("save") {
-                Some(d) => PathBuf::from(d),
-                None => std::env::temp_dir().join(format!("pq_gen_art_{}", std::process::id())),
-            };
-            QuantArtifact::save_model(&model, recipe.mode, Some(&rep), &dir)?;
-            eprintln!("quantized once → artifact at {dir:?}; serving boots from it");
-            dir
-        }
-    };
+    let artifact_dir = artifact_for_serving(c, args)?;
     let tok = c.tok.clone();
     // the serving mode comes from the artifact itself: start_from_artifact
     // peeks the metadata and overrides the builder's mode seed
     let server = Server::start_from_artifact(
         prefixquant::artifacts_dir(),
         artifact_dir,
-        ServerConfig::builder(prefixquant::model::QuantMode::Static)
-            .engine(prefixquant::coordinator::EngineKind::Continuous)
-            .max_batch(8)
-            .batch_window(Duration::from_millis(5))
-            .bos(tok.spec.bos)
-            .pad(tok.spec.pad)
-            // paged KV with a dense-equivalent auto-sized pool
-            .kv(prefixquant::coordinator::KvLayout::Paged { page_size: 16, n_pages: 0 })
-            .build(),
+        worker_config(c, 8),
     )?;
     let req = GenRequest::builder(1)
         .prompt(tok.encode(&prompt_text, false))
@@ -291,6 +317,102 @@ fn cmd_gen(c: &Ctx, args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
+    let n_workers = args.usize_or("workers", 2)?.max(1);
+    let policy_name = args.get_or("policy", "prefix-affinity").to_string();
+    let n_requests = args.usize_or("requests", 24)?;
+    let max_new = args.usize_or("max-new", 16)?;
+    let artifact_dir = artifact_for_serving(c, args)?;
+
+    // one shared artifact, N workers: every boot is an O(read) of the same
+    // quantized state, so the fleet is interchangeable by construction
+    eprintln!("booting {n_workers} worker(s) from {artifact_dir:?} (policy: {policy_name})...");
+    let workers = (0..n_workers)
+        .map(|_| {
+            Server::start_from_artifact(
+                prefixquant::artifacts_dir(),
+                artifact_dir.clone(),
+                worker_config(c, 4),
+            )
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let policy = dispatch_policy(&policy_name)?;
+    let router = Router::new(workers, RouterConfig::default().policy(policy))?;
+
+    // demo workload with shared prompt prefixes: requests cycle through a few
+    // conversation groups, each group sharing a long prefix with unique tails
+    // — the shape prefix-affinity routing exists for
+    let ids = c.tok.encode(&c.lang.eval_text(), false);
+    let groups = 4.min(n_requests.max(1));
+    let prefix_len = 24.min(ids.len() / 2).max(1);
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let g = i % groups;
+            let start = (g * 8).min(ids.len().saturating_sub(prefix_len));
+            let mut prompt: Vec<i32> = ids[start..start + prefix_len].to_vec();
+            let tail_len = 4.min(ids.len());
+            let tail = (start + prefix_len + 4 * (i / groups))
+                % (ids.len().saturating_sub(tail_len) + 1).max(1);
+            prompt.extend_from_slice(&ids[tail..tail + tail_len]);
+            router.submit(GenRequest::new(0, prompt, max_new))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut ok = 0usize;
+    for h in handles {
+        let seq = h.id();
+        match h.collect() {
+            Ok(resp) => {
+                ok += 1;
+                println!(
+                    "req {seq}: {} tokens, ttft={:.1}ms, finish={}",
+                    resp.tokens.len(),
+                    resp.ttft_s * 1e3,
+                    resp.finish.name()
+                );
+            }
+            Err(e) => println!("req {seq}: error: {e:#}"),
+        }
+    }
+
+    let report = router.report()?;
+    let mut t = Table::new(
+        &format!("fleet ({policy_name})"),
+        &["worker", "state", "dispatched", "affinity", "absorbed", "completed", "saturation"],
+    );
+    for w in &report.workers {
+        t.rowv(vec![
+            w.worker.to_string(),
+            w.state.name().to_string(),
+            w.dispatched.to_string(),
+            w.affinity_hits.to_string(),
+            w.redistributions_absorbed.to_string(),
+            w.completed.to_string(),
+            format!("{:.2}", w.saturation),
+        ]);
+    }
+    t.print();
+    let f = &report.fleet;
+    println!(
+        "fleet: submitted={} completed={} errors={} redistributed={} \
+         prefix-hit-rate={:.1}% net-prefill={} tokens",
+        f.submitted,
+        f.completed,
+        f.errors,
+        f.redistributed,
+        f.prefix_hit_rate() * 100.0,
+        f.net_prefill_tokens()
+    );
+    println!(
+        "merged engine metrics: {} requests, {} generated tokens, {} prefill tokens",
+        report.merged.requests, report.merged.generated_tokens, report.merged.prefill_tokens
+    );
+    router.shutdown();
+    if ok < n_requests {
+        bail!("{} of {n_requests} requests failed", n_requests - ok);
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
@@ -301,10 +423,7 @@ fn main() -> Result<()> {
         "quantize" => cmd_quantize(&c, &args),
         "eval" => cmd_eval(&c, &args),
         "gen" => cmd_gen(&c, &args),
-        "serve" => {
-            println!("see `cargo run --release --example serve_batch`");
-            Ok(())
-        }
+        "serve" => cmd_serve(&c, &args),
         other => bail!("unknown command {other:?} (info|outliers|quantize|eval|gen|serve)"),
     }
 }

@@ -1,0 +1,329 @@
+//! Cluster-layer tests: `Metrics::merge` algebra, request-id namespacing
+//! across a real fleet, and the drain/kill redistribution guarantees.  All
+//! run on `SimBackend` workers — no artifacts required.
+
+use std::time::Duration;
+
+use prefixquant::coordinator::continuous::run_to_completion;
+use prefixquant::coordinator::request::request_id;
+use prefixquant::coordinator::{
+    ClassMetrics, FinishReason, GenRequest, GenResponse, Metrics, Router, RouterConfig, Server,
+    ServerConfig, SimBackend, StreamEvent, WorkerState,
+};
+use prefixquant::model::QuantMode;
+use prefixquant::util::prop::{check, Gen};
+
+// ---------------------------------------------------------------- merge algebra
+
+/// f64 sums drawn as dyadic rationals (k/1024) so addition is EXACT and the
+/// associativity property is a real equality, not an epsilon comparison.
+fn dyadic(g: &mut Gen) -> f64 {
+    g.usize_in(0, 1 << 13) as f64 / 1024.0
+}
+
+fn rand_class(g: &mut Gen) -> ClassMetrics {
+    ClassMetrics {
+        requests: g.usize_in(0, 1000),
+        completed: g.usize_in(0, 1000),
+        sum_ttft_s: dyadic(g),
+        sum_queue_s: dyadic(g),
+        preemptions: g.usize_in(0, 50),
+        cancelled: g.usize_in(0, 50),
+    }
+}
+
+fn rand_metrics(g: &mut Gen) -> Metrics {
+    Metrics {
+        requests: g.usize_in(0, 1000),
+        batches: g.usize_in(0, 1000),
+        generated_tokens: g.usize_in(0, 100_000),
+        prefill_tokens: g.usize_in(0, 100_000),
+        sum_ttft_s: dyadic(g),
+        sum_queue_s: dyadic(g),
+        sum_prefill_s: dyadic(g),
+        sum_decode_s: dyadic(g),
+        sum_busy_s: dyadic(g),
+        sum_dispatch_skew_s: dyadic(g),
+        active_slots: g.usize_in(0, 64),
+        kv_resident_bytes: g.usize_in(0, 1 << 20),
+        kv_used_bytes: g.usize_in(0, 1 << 20),
+        deferred_admissions: g.usize_in(0, 100),
+        preemptions: g.usize_in(0, 100),
+        cancelled: g.usize_in(0, 100),
+        retries: g.usize_in(0, 100),
+        model_reloads: g.usize_in(0, 10),
+        by_class: [rand_class(g), rand_class(g), rand_class(g)],
+    }
+}
+
+fn class_eq(a: &ClassMetrics, b: &ClassMetrics) -> bool {
+    a.requests == b.requests
+        && a.completed == b.completed
+        && a.sum_ttft_s == b.sum_ttft_s
+        && a.sum_queue_s == b.sum_queue_s
+        && a.preemptions == b.preemptions
+        && a.cancelled == b.cancelled
+}
+
+/// Field-by-field equality over EVERY counter `merge` touches (exact f64
+/// equality is sound here: all test inputs are dyadic).
+fn metrics_eq(a: &Metrics, b: &Metrics) -> bool {
+    a.requests == b.requests
+        && a.batches == b.batches
+        && a.generated_tokens == b.generated_tokens
+        && a.prefill_tokens == b.prefill_tokens
+        && a.sum_ttft_s == b.sum_ttft_s
+        && a.sum_queue_s == b.sum_queue_s
+        && a.sum_prefill_s == b.sum_prefill_s
+        && a.sum_decode_s == b.sum_decode_s
+        && a.sum_busy_s == b.sum_busy_s
+        && a.sum_dispatch_skew_s == b.sum_dispatch_skew_s
+        && a.active_slots == b.active_slots
+        && a.kv_resident_bytes == b.kv_resident_bytes
+        && a.kv_used_bytes == b.kv_used_bytes
+        && a.deferred_admissions == b.deferred_admissions
+        && a.preemptions == b.preemptions
+        && a.cancelled == b.cancelled
+        && a.retries == b.retries
+        && a.model_reloads == b.model_reloads
+        && a.by_class.iter().zip(&b.by_class).all(|(x, y)| class_eq(x, y))
+}
+
+fn merged(a: &Metrics, b: &Metrics) -> Metrics {
+    let mut m = a.clone();
+    m.merge(b);
+    m
+}
+
+/// `Metrics::merge` is a commutative monoid: commutative and associative on
+/// every counter (fleet reports must not depend on worker iteration order),
+/// with `Metrics::default()` as the identity.
+#[test]
+fn metrics_merge_is_a_commutative_monoid() {
+    check(
+        "metrics-merge-monoid",
+        200,
+        |g: &mut Gen| (rand_metrics(g), rand_metrics(g), rand_metrics(g)),
+        |(a, b, c)| {
+            if !metrics_eq(&merged(a, b), &merged(b, a)) {
+                return Err("merge not commutative".into());
+            }
+            if !metrics_eq(&merged(&merged(a, b), c), &merged(a, &merged(b, c))) {
+                return Err("merge not associative".into());
+            }
+            let id = Metrics::default();
+            if !metrics_eq(&merged(a, &id), a) {
+                return Err("default is not a right identity".into());
+            }
+            if !metrics_eq(&merged(&id, a), a) {
+                return Err("default is not a left identity".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------------- fleet rig
+
+/// One sim worker: single decode slot, 16-token prefill chunks, 1 prefix
+/// row, 128-row cache, `decode_ms` per decode round.
+fn sim_worker(decode_ms: u64) -> Server {
+    let cfg = ServerConfig::builder(QuantMode::Static)
+        .batch_window(Duration::from_millis(1))
+        .build();
+    Server::start_sim(
+        move || {
+            Ok(SimBackend::new(1, 16, 1, 128)
+                .with_costs(Duration::ZERO, Duration::from_millis(decode_ms)))
+        },
+        cfg,
+    )
+    .expect("sim worker boots")
+}
+
+/// Reference stream for `req` on a fresh backend with the same geometry as
+/// [`sim_worker`] — the token-identity oracle for cross-worker assertions.
+fn reference(req: &GenRequest) -> GenResponse {
+    let be = SimBackend::new(1, 16, 1, 128);
+    run_to_completion(&be, std::slice::from_ref(req)).expect("reference run").remove(0)
+}
+
+fn test_prompt(i: usize) -> Vec<i32> {
+    vec![10 + i as i32, 40 + i as i32, 70 + i as i32, 100 + i as i32]
+}
+
+fn drain_to_done(rx: &std::sync::mpsc::Receiver<StreamEvent>) -> Result<GenResponse, String> {
+    loop {
+        match rx.recv() {
+            Ok(StreamEvent::Token(_)) => {}
+            Ok(StreamEvent::Done(resp)) => return Ok(resp),
+            Ok(StreamEvent::Error(e)) => return Err(e),
+            Err(_) => return Err("stream dropped".into()),
+        }
+    }
+}
+
+// ------------------------------------------------------------- id namespacing
+
+/// Regression: two workers booted from the same artifact share one id
+/// space.  Without namespacing both emit ids from their own low plane and a
+/// merged fleet stream has colliding `GenResponse::id`s; with it, every
+/// response id is unique, names its worker, and round-trips the handle's
+/// sequence number.
+#[test]
+fn fleet_response_ids_never_collide_across_workers() {
+    let workers = vec![sim_worker(0), sim_worker(0)];
+    let router = Router::new(workers, RouterConfig::default()).unwrap();
+    let n = 8;
+    let handles: Vec<_> =
+        (0..n).map(|i| router.submit(GenRequest::new(0, test_prompt(i), 6)).unwrap()).collect();
+    let mut ids = Vec::new();
+    let mut workers_seen = Vec::new();
+    for h in handles {
+        let seq = h.id();
+        let resp = h.collect().expect("stream completes");
+        assert_eq!(
+            request_id::seq_of(resp.id),
+            seq,
+            "response correlates to its handle through the sequence bits"
+        );
+        let w = request_id::worker_of(resp.id)
+            .expect("fleet responses carry a worker in the high bits");
+        ids.push(resp.id);
+        workers_seen.push(w);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "no two responses in merged fleet output share an id");
+    workers_seen.sort_unstable();
+    workers_seen.dedup();
+    assert_eq!(workers_seen, vec![0, 1], "round-robin exercised both workers");
+
+    let report = router.report().unwrap();
+    assert_eq!(report.fleet.submitted, n);
+    assert_eq!(report.fleet.completed, n);
+    assert_eq!(report.fleet.unresolved(), 0, "ledger accounts for every request");
+    assert_eq!(report.merged.requests, n, "merged engine metrics see the whole fleet");
+    router.shutdown();
+}
+
+// ---------------------------------------------------------- drain / kill paths
+
+/// Kill a worker mid-decode.  Its queued (token-less) requests must complete
+/// on the survivor with streams token-identical to a fresh single-worker
+/// reference; its token-producing stream must finish as `WorkerLost` with
+/// the tokens delivered so far; the dead worker's page pool must hold no
+/// leaked pages; and the fleet ledger must account for every submitted
+/// request exactly once.
+#[test]
+fn killed_worker_loses_nothing_queued_and_leaks_no_pages() {
+    // worker 0: 20ms per decode round, so its active request is killed
+    // mid-stream; worker 1: instant
+    let workers = vec![sim_worker(20), sim_worker(0)];
+    let router = Router::new(workers, RouterConfig::default()).unwrap();
+    let n = 8;
+    let max_new = 20;
+    let reqs: Vec<GenRequest> =
+        (0..n).map(|i| GenRequest::new(0, test_prompt(i), max_new)).collect();
+    // round-robin: even sequence numbers land on worker 0 — seq 0 occupies
+    // its single slot, seqs 2/4/6 queue behind it token-less
+    let handles: Vec<_> = reqs.iter().map(|r| router.submit(r.clone()).unwrap()).collect();
+
+    // wait until worker 0's active stream has produced a token, then kill it
+    match handles[0].recv().expect("first token from worker 0") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token first, got {ev:?}"),
+    }
+    let pm = router.kill_worker(0).expect("kill reaches the worker");
+    assert_eq!(pm.dropped_active, 1, "seq 0 held the only slot");
+    assert_eq!(pm.dropped_queued, 3, "seqs 2/4/6 were queued token-less");
+    assert_eq!(
+        pm.kv_pages_free,
+        pm.kv_pages_total - pm.kv_prefix_pages,
+        "every non-prefix page freed: the killed worker's pool leaked nothing"
+    );
+
+    // the killed worker's token-producing stream finishes as WorkerLost with
+    // a prefix of the reference stream
+    let lost = drain_to_done(handles[0].receiver()).expect("terminal event for seq 0");
+    assert_eq!(lost.finish, FinishReason::WorkerLost);
+    assert_eq!(request_id::worker_of(lost.id), Some(0), "response names the lost worker");
+    assert!(!lost.tokens.is_empty(), "tokens delivered before the kill are returned");
+    let ref0 = reference(&reqs[0]);
+    assert_eq!(
+        lost.tokens,
+        ref0.tokens[..lost.tokens.len()],
+        "partial stream is a prefix of the reference stream"
+    );
+
+    // every other request — including the three redistributed off the dead
+    // worker — completes token-identically to the reference
+    for (i, h) in handles.into_iter().enumerate().skip(1) {
+        let resp = drain_to_done(h.receiver()).expect("survivor completes the stream");
+        assert_eq!(resp.finish, FinishReason::Length, "seq {i} finished normally");
+        assert_eq!(
+            request_id::worker_of(resp.id),
+            Some(1),
+            "seq {i} was served (or absorbed) by the survivor"
+        );
+        assert_eq!(resp.tokens, reference(&reqs[i]).tokens, "seq {i} is token-identical");
+    }
+
+    let report = router.report().unwrap();
+    let f = &report.fleet;
+    assert_eq!(f.submitted, n);
+    assert_eq!(f.completed, n - 1);
+    assert_eq!(f.worker_lost, 1);
+    assert_eq!(f.errors, 0, "no request was lost to an error");
+    assert_eq!(f.unresolved(), 0, "every submitted request reached exactly one terminal");
+    assert_eq!(f.redistributed, 3, "the killed worker's queue moved to the survivor");
+    assert_eq!(f.workers_killed, 1);
+    assert!(
+        matches!(report.workers[0].state, WorkerState::Lost(_)),
+        "worker 0 is out of the fleet"
+    );
+    router.shutdown();
+}
+
+/// Cooperative drain: the drained worker hands back its queued requests
+/// (worker-reported released ids are authoritative), keeps its
+/// token-producing stream, and finishes it normally.
+#[test]
+fn drained_worker_keeps_streams_and_releases_its_queue() {
+    let workers = vec![sim_worker(10), sim_worker(0)];
+    let router = Router::new(workers, RouterConfig::default()).unwrap();
+    let n = 6;
+    let reqs: Vec<GenRequest> = (0..n).map(|i| GenRequest::new(0, test_prompt(i), 12)).collect();
+    let handles: Vec<_> = reqs.iter().map(|r| router.submit(r.clone()).unwrap()).collect();
+
+    match handles[0].recv().expect("first token from worker 0") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token first, got {ev:?}"),
+    }
+    let report = router.drain_worker(0).expect("drain succeeds on an alive worker");
+    assert_eq!(report.kept, 1, "the token-producing stream stays on the drained worker");
+    assert_eq!(report.released.len(), 2, "seqs 2/4 released for redistribution");
+    for &wid in &report.released {
+        assert_eq!(request_id::worker_of(wid), Some(0), "released ids are worker 0's");
+    }
+
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = drain_to_done(h.receiver()).expect("stream completes");
+        assert_eq!(resp.finish, FinishReason::Length, "seq {i}: drain kills no stream");
+        assert_eq!(resp.tokens, reference(&reqs[i]).tokens, "seq {i} is token-identical");
+        let served = request_id::worker_of(resp.id).unwrap();
+        if i == 0 {
+            assert_eq!(served, 0, "the kept stream finished on the drained worker");
+        } else if i % 2 == 0 {
+            assert_eq!(served, 1, "released requests completed on the survivor");
+        }
+    }
+
+    let fleet = router.report().unwrap();
+    assert_eq!(fleet.fleet.submitted, n);
+    assert_eq!(fleet.fleet.completed, n);
+    assert_eq!(fleet.fleet.unresolved(), 0);
+    assert_eq!(fleet.fleet.redistributed, 2);
+    assert_eq!(fleet.workers[0].state, WorkerState::Draining);
+    router.shutdown();
+}
