@@ -30,6 +30,10 @@ pub struct FleetMetrics {
     /// re-dispatches of queued/token-less requests off dead, wedged, or
     /// draining workers (also counts error-retry re-dispatches)
     pub redistributed: usize,
+    /// token-producing streams resumed on a surviving worker after their
+    /// worker died (`RouterConfig::resume_streams`); without resume these
+    /// would have been `worker_lost` terminals
+    pub stream_resumes: usize,
     /// dispatches whose worker was chosen by a tracked prompt-prefix match
     pub affinity_hits: usize,
     /// prompt tokens (incl. BOS) covered by the matched prefix on affinity

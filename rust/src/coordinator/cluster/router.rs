@@ -32,8 +32,27 @@
 //! the worker reports exactly which ids it released (authoritative — the
 //! router only re-dispatches those), keeps its token-producing streams
 //! running, and leaves the dispatch rotation.
+//!
+//! ## Durable oplog and stream resume
+//!
+//! With [`RouterConfig::oplog`] set, the core journals every admission,
+//! dispatch/resume decision, forwarded token, terminal outcome, and worker
+//! loss to an append-only [`Oplog`] — journaling runs on the router thread,
+//! off the workers' decode paths.  Two capabilities fall out:
+//!
+//! - **resume instead of `WorkerLost`**: with `resume_streams` on (implied
+//!   by `oplog`), a token-producing stream whose worker dies is re-dispatched
+//!   to a survivor carrying its delivered tokens; the engine re-prefills
+//!   `prompt + tokens` and the stream continues from its last token.
+//! - **crash recovery**: [`Router::recover`] rebuilds a router from the
+//!   journal after a full-process crash ([`Router::simulate_crash`] in
+//!   tests), resuming every journaled in-flight stream on a fresh fleet.
+//!
+//! A failed journal append (disk error, injected torn write) downgrades the
+//! router to journal-less serving — it never takes the fleet down.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
@@ -41,6 +60,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::coordinator::oplog::{OpEntry, Oplog, Outcome, TraceView};
 use crate::coordinator::request::{
     request_id, DrainReport, FinishReason, GenRequest, GenResponse, Metrics, ProbeState,
     RoutedEvent, StreamEvent, WorkerPostMortem, WorkerProbe,
@@ -65,6 +85,12 @@ pub struct RouterConfig {
     pub wedge_probes: usize,
     /// re-dispatches allowed per request before it errors out
     pub max_redispatch: usize,
+    /// journal admissions/dispatches/tokens/outcomes to this oplog
+    pub oplog: Option<Oplog>,
+    /// resume token-producing streams on a survivor when their worker dies
+    /// (instead of finishing them with `FinishReason::WorkerLost`); off by
+    /// default, implied on by [`RouterConfig::oplog`]
+    pub resume_streams: bool,
 }
 
 impl Default for RouterConfig {
@@ -75,6 +101,8 @@ impl Default for RouterConfig {
             probe_timeout: Duration::from_secs(1),
             wedge_probes: 4,
             max_redispatch: 3,
+            oplog: None,
+            resume_streams: false,
         }
     }
 }
@@ -104,17 +132,34 @@ impl RouterConfig {
         self.max_redispatch = n;
         self
     }
+
+    /// Journal to `log`; also turns `resume_streams` on (a journaled fleet
+    /// can always reconstruct a stream, so losing it would be a waste).
+    pub fn oplog(mut self, log: Oplog) -> Self {
+        self.oplog = Some(log);
+        self.resume_streams = true;
+        self
+    }
+
+    pub fn resume_streams(mut self, on: bool) -> Self {
+        self.resume_streams = on;
+        self
+    }
 }
 
 /// Control messages from the client side to the router core.
 enum Ctl {
     Submit(GenRequest, u64, Instant, Sender<StreamEvent>),
+    /// recovery path: a journaled stream resuming with its delivered tokens
+    SubmitResumed(GenRequest, u64, Vec<i32>, Instant, Sender<StreamEvent>),
     Cancel(u64),
     Report(Sender<FleetReport>),
     Locate(u64, Sender<Option<usize>>),
     Drain(usize, Sender<Result<DrainReport, String>>),
     Kill(usize, Sender<Result<WorkerPostMortem, String>>),
     Shutdown,
+    /// simulated process crash: the core exits immediately, settling nothing
+    Die,
 }
 
 /// Client-side handle for one routed request.  Events carry NAMESPACED ids:
@@ -179,8 +224,15 @@ impl Router {
         if workers.is_empty() {
             bail!("router needs at least one worker");
         }
-        let RouterConfig { policy, health_interval, probe_timeout, wedge_probes, max_redispatch } =
-            cfg;
+        let RouterConfig {
+            policy,
+            health_interval,
+            probe_timeout,
+            wedge_probes,
+            max_redispatch,
+            oplog,
+            resume_streams,
+        } = cfg;
         let (ctl_tx, ctl_rx) = channel::<Ctl>();
         let (ev_tx, ev_rx) = channel::<RoutedEvent>();
         let now = Instant::now();
@@ -218,11 +270,69 @@ impl Router {
             routes: HashMap::new(),
             by_seq: HashMap::new(),
             fleet: FleetMetrics::default(),
+            oplog,
+            resume_streams,
         };
         let handle = std::thread::Builder::new().name("pq-router".into()).spawn(move || {
             core.run();
         })?;
         Ok(Router { ctl: ctl_tx, seq: AtomicU64::new(0), handle: Some(handle) })
+    }
+
+    /// Rebuild a router from a journal after a crash: open (and
+    /// torn-tail-truncate) the oplog at `path`, restart the sequence counter
+    /// above the largest journaled value, and resume every journaled stream
+    /// with no terminal outcome on the fresh `workers`.
+    ///
+    /// Returns one [`RouterHandle`] per resumed stream, in `seq` order.
+    /// Each handle's channel is pre-fed the stream's already-journaled
+    /// tokens, so draining it yields the COMPLETE stream — the journaled
+    /// prefix followed by the freshly decoded continuation.  `cfg.oplog` is
+    /// replaced by the recovered log (appends continue in the same file) and
+    /// `resume_streams` is forced on.
+    pub fn recover(
+        workers: Vec<Server>,
+        mut cfg: RouterConfig,
+        path: impl AsRef<Path>,
+    ) -> Result<(Router, Vec<RouterHandle>)> {
+        let (log, recovered) = Oplog::open_recover(path)?;
+        let view = TraceView::from_entries(&recovered.entries);
+        cfg.oplog = Some(log);
+        cfg.resume_streams = true;
+        let router = Router::new(workers, cfg)?;
+        router.seq.store(view.max_seq().map_or(0, |s| s + 1), Ordering::Relaxed);
+        let mut handles = Vec::new();
+        for rec in view.unfinished() {
+            let (tx, rx) = channel();
+            for &t in &rec.tokens {
+                let _ = tx.send(StreamEvent::Token(t));
+            }
+            router
+                .ctl
+                .send(Ctl::SubmitResumed(
+                    rec.req.clone(),
+                    rec.seq,
+                    rec.tokens.clone(),
+                    Instant::now(),
+                    tx,
+                ))
+                .map_err(|_| anyhow!("router died during recovery"))?;
+            handles.push(RouterHandle { seq: rec.seq, rx, ctl: router.ctl.clone() });
+        }
+        Ok((router, handles))
+    }
+
+    /// Crash the router as a process would: the core thread exits
+    /// immediately — no terminal events, no worker drains, no journal
+    /// settlement.  What the oplog holds at this instant is exactly what
+    /// [`Router::recover`] gets to work with.  (The worker `Server` handles
+    /// owned by the core are dropped, which ends their threads; a real crash
+    /// would kill those too.)
+    pub fn simulate_crash(mut self) {
+        let _ = self.ctl.send(Ctl::Die);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
     }
 
     /// Submit a request; the router picks the worker.  The request's own
@@ -357,6 +467,11 @@ struct Core {
     /// handle sequence number → current namespaced id
     by_seq: HashMap<u64, u64>,
     fleet: FleetMetrics,
+    /// durable journal; dropped (with a stderr notice) after a failed append
+    oplog: Option<Oplog>,
+    /// resume token-producing streams off lost workers instead of finishing
+    /// them with `WorkerLost`
+    resume_streams: bool,
 }
 
 impl Core {
@@ -368,6 +483,9 @@ impl Core {
                         self.shutdown_all();
                         return;
                     }
+                    // simulated process crash: exit with NOTHING settled —
+                    // no terminal events, no journal entries, no drains
+                    Ok(Ctl::Die) => return,
                     Ok(m) => self.on_ctl(m),
                     Err(TryRecvError::Empty) => break,
                 }
@@ -401,6 +519,7 @@ impl Core {
         match m {
             Ctl::Submit(req, seq, submitted, client) => {
                 self.fleet.submitted += 1;
+                self.journal(&OpEntry::Admitted { seq, req: req.clone() });
                 self.dispatch(Route {
                     seq,
                     client,
@@ -412,13 +531,38 @@ impl Core {
                     first_token_s: None,
                 });
             }
+            Ctl::SubmitResumed(req, seq, tokens, submitted, client) => {
+                // recovery path: the request's admission is already in the
+                // journal — only the resume decision gets a fresh entry
+                // (inside dispatch), and the ledger counts it as submitted
+                // to THIS router incarnation
+                self.fleet.submitted += 1;
+                self.dispatch(Route {
+                    seq,
+                    client,
+                    req,
+                    submitted,
+                    worker: 0,
+                    tokens,
+                    redispatches: 0,
+                    first_token_s: None,
+                });
+            }
             Ctl::Cancel(seq) => {
-                if let Some(&wid) = self.by_seq.get(&seq) {
-                    let w = self.routes[&wid].worker;
-                    if let Some(server) = self.workers[w].server.as_ref() {
-                        // terminal Done(Cancelled) comes back via the funnel
-                        let _ = server.cancel(wid);
-                    }
+                let Some(&wid) = self.by_seq.get(&seq) else {
+                    return; // already terminal: cancel raced the finish
+                };
+                let Some(route) = self.routes.get(&wid) else {
+                    // by_seq says in-flight but the route is gone — an
+                    // internal inconsistency; settle by dropping the stale
+                    // index entry instead of panicking mid-demux
+                    eprintln!("pq-router: dropping stale by_seq entry for seq {seq}");
+                    self.by_seq.remove(&seq);
+                    return;
+                };
+                if let Some(server) = self.workers[route.worker].server.as_ref() {
+                    // terminal Done(Cancelled) comes back via the funnel
+                    let _ = server.cancel(wid);
                 }
             }
             Ctl::Report(tx) => {
@@ -426,7 +570,11 @@ impl Core {
                 let _ = tx.send(report);
             }
             Ctl::Locate(seq, tx) => {
-                let w = self.by_seq.get(&seq).map(|wid| self.routes[wid].worker);
+                let w = self
+                    .by_seq
+                    .get(&seq)
+                    .and_then(|wid| self.routes.get(wid))
+                    .map(|route| route.worker);
                 let _ = tx.send(w);
             }
             Ctl::Drain(w, tx) => {
@@ -437,7 +585,23 @@ impl Core {
                 let r = self.kill_worker(w);
                 let _ = tx.send(r);
             }
-            Ctl::Shutdown => unreachable!("handled in run()"),
+            Ctl::Shutdown | Ctl::Die => unreachable!("handled in run()"),
+        }
+    }
+
+    /// Append one entry to the journal, when journaling is on.  A failed
+    /// append wedges the log (the file may end mid-frame), so the router
+    /// downgrades to journal-less serving — reported once on stderr, and
+    /// visible as a missing oplog suffix at the next recovery.
+    fn journal(&mut self, e: &OpEntry) {
+        if let Some(log) = self.oplog.as_mut() {
+            if let Err(err) = log.append(e) {
+                eprintln!(
+                    "pq-router: journaling disabled after a failed append to {}: {err:#}",
+                    log.path().display()
+                );
+                self.oplog = None;
+            }
         }
     }
 
@@ -466,6 +630,11 @@ impl Core {
             let loads = self.alive_loads();
             if loads.is_empty() {
                 self.fleet.errors += 1;
+                self.journal(&OpEntry::Finished {
+                    seq: route.seq,
+                    outcome: Outcome::Error,
+                    n_tokens: route.tokens.len() as u32,
+                });
                 let _ = route
                     .client
                     .send(StreamEvent::Error("no alive workers in the fleet".into()));
@@ -477,8 +646,15 @@ impl Core {
             let mut wreq = route.req.clone();
             wreq.id = wid;
             let ev_tx = self.ev_tx.clone();
+            // a route carrying tokens is a stream resume: the worker
+            // re-prefills prompt + tokens and emits only NEW tokens
             let sent = match self.workers[w].server.as_ref() {
-                Some(server) => server.submit_routed(wreq, ev_tx, route.submitted).is_ok(),
+                Some(server) if route.tokens.is_empty() => {
+                    server.submit_routed(wreq, ev_tx, route.submitted).is_ok()
+                }
+                Some(server) => server
+                    .submit_routed_resumed(wreq, route.tokens.clone(), ev_tx, route.submitted)
+                    .is_ok(),
                 None => false,
             };
             if !sent {
@@ -490,7 +666,8 @@ impl Core {
             ws.dispatched_since_probe += 1;
             ws.outstanding += 1;
             self.fleet.dispatched += 1;
-            self.fleet.dispatched_prefill_tokens += 1 + route.req.prompt.len();
+            self.fleet.dispatched_prefill_tokens +=
+                1 + route.req.prompt.len() + route.tokens.len();
             if pick.affinity_hit {
                 ws.affinity_hits += 1;
                 ws.prefix_hit_tokens += pick.hit_tokens;
@@ -501,6 +678,16 @@ impl Core {
                 ws.redistributions_absorbed += 1;
                 self.fleet.redistributed += 1;
             }
+            if route.tokens.is_empty() {
+                self.journal(&OpEntry::Dispatched { seq: route.seq, worker: w as u64 });
+            } else {
+                self.fleet.stream_resumes += 1;
+                self.journal(&OpEntry::Resumed {
+                    seq: route.seq,
+                    worker: w as u64,
+                    from_tokens: route.tokens.len() as u32,
+                });
+            }
             route.worker = w;
             self.by_seq.insert(route.seq, wid);
             self.routes.insert(wid, route);
@@ -508,23 +695,29 @@ impl Core {
         }
     }
 
-    /// Demultiplex one funnel event back to its client stream.
+    /// Demultiplex one funnel event back to its client stream.  Every arm
+    /// re-looks its route up and settles quietly on a miss: stale ids
+    /// (redistributed or torn-down routes) are EXPECTED here, and the demux
+    /// thread must never panic on one — it would take the whole fleet's
+    /// event flow down with it.
     fn on_event(&mut self, ev: RoutedEvent) {
-        // stale ids (redistributed or torn-down routes) drop silently
-        if !self.routes.contains_key(&ev.id) {
-            return;
-        }
         match ev.ev {
             StreamEvent::Token(t) => {
-                let route = self.routes.get_mut(&ev.id).expect("checked above");
+                let Some(route) = self.routes.get_mut(&ev.id) else {
+                    return; // stale: the route moved on, drop silently
+                };
                 if route.tokens.is_empty() {
                     route.first_token_s = Some(route.submitted.elapsed().as_secs_f64());
                 }
                 route.tokens.push(t);
                 let _ = route.client.send(StreamEvent::Token(t));
+                let seq = route.seq;
+                self.journal(&OpEntry::Token { seq, token: t });
             }
             StreamEvent::Done(resp) => {
-                let route = self.routes.remove(&ev.id).expect("checked above");
+                let Some(route) = self.routes.remove(&ev.id) else {
+                    return;
+                };
                 self.by_seq.remove(&route.seq);
                 let ws = &mut self.workers[route.worker];
                 ws.outstanding = ws.outstanding.saturating_sub(1);
@@ -534,21 +727,36 @@ impl Core {
                 } else {
                     self.fleet.completed += 1;
                 }
+                self.journal(&OpEntry::Finished {
+                    seq: route.seq,
+                    outcome: Outcome::Finish(resp.finish),
+                    n_tokens: resp.tokens.len() as u32,
+                });
                 let _ = route.client.send(StreamEvent::Done(resp));
             }
             StreamEvent::Error(e) => {
-                let route = self.routes.remove(&ev.id).expect("checked above");
+                let Some(route) = self.routes.remove(&ev.id) else {
+                    return;
+                };
                 self.by_seq.remove(&route.seq);
                 let ws = &mut self.workers[route.worker];
                 ws.outstanding = ws.outstanding.saturating_sub(1);
-                if route.tokens.is_empty() && route.redispatches < self.max_redispatch {
+                let retryable = route.tokens.is_empty() || self.resume_streams;
+                if retryable && route.redispatches < self.max_redispatch {
                     // token-less failure: give another worker a try (bounded,
-                    // so a deterministic rejection cannot ping-pong forever)
+                    // so a deterministic rejection cannot ping-pong forever).
+                    // With resume on, token-producing streams retry too — the
+                    // dispatch carries their tokens and resumes the stream.
                     let mut route = route;
                     route.redispatches += 1;
                     self.dispatch(route);
                 } else {
                     self.fleet.errors += 1;
+                    self.journal(&OpEntry::Finished {
+                        seq: route.seq,
+                        outcome: Outcome::Error,
+                        n_tokens: route.tokens.len() as u32,
+                    });
                     let _ = route.client.send(StreamEvent::Error(e));
                 }
             }
@@ -567,11 +775,15 @@ impl Core {
             if !due {
                 continue;
             }
-            let started = self.workers[w]
-                .server
-                .as_ref()
-                .expect("alive() checked server presence")
-                .probe_start();
+            // alive() checked server presence, but settle (never panic) if
+            // the handle vanished between the check and the probe
+            let started = match self.workers[w].server.as_ref() {
+                Some(server) => server.probe_start(),
+                None => {
+                    self.declare_lost(w, DrainCause::Dead);
+                    continue;
+                }
+            };
             match started {
                 Ok(rx) => self.workers[w].probe_pending = Some((rx, Instant::now())),
                 Err(_) => self.declare_lost(w, DrainCause::Dead),
@@ -632,6 +844,7 @@ impl Core {
         }
         self.workers[w].state = WorkerState::Lost(cause);
         self.workers[w].probe_pending = None;
+        self.journal(&OpEntry::WorkerLost { worker: w as u64, cause });
         match cause {
             DrainCause::Dead => self.fleet.workers_dead += 1,
             DrainCause::Wedged => self.fleet.workers_wedged += 1,
@@ -651,34 +864,61 @@ impl Core {
         let wids: Vec<u64> =
             self.routes.iter().filter(|(_, r)| r.worker == w).map(|(&id, _)| id).collect();
         for wid in wids {
-            let route = self.routes.remove(&wid).expect("collected above");
+            let Some(route) = self.routes.remove(&wid) else {
+                // a dispatch above may have re-homed this id already;
+                // nothing left to settle
+                continue;
+            };
             self.by_seq.remove(&route.seq);
-            if route.tokens.is_empty() {
+            if route.tokens.is_empty() || self.resume_streams {
+                // token-less requests are re-dispatched fresh; with resume
+                // on, token-PRODUCING streams are re-dispatched too, carrying
+                // their delivered tokens — the survivor re-prefills
+                // prompt + tokens and the stream continues seamlessly
                 let mut route = route;
                 route.redispatches += 1;
                 if route.redispatches <= self.max_redispatch {
                     self.dispatch(route);
-                } else {
+                } else if route.tokens.is_empty() {
                     self.fleet.errors += 1;
+                    self.journal(&OpEntry::Finished {
+                        seq: route.seq,
+                        outcome: Outcome::Error,
+                        n_tokens: 0,
+                    });
                     let _ = route.client.send(StreamEvent::Error(format!(
                         "worker {w} {} and the redistribution budget is exhausted",
                         cause.name()
                     )));
+                } else {
+                    self.finish_worker_lost(wid, route);
                 }
             } else {
-                self.fleet.worker_lost += 1;
-                let resp = GenResponse {
-                    id: wid,
-                    tokens: route.tokens.clone(),
-                    ttft_s: route.first_token_s.unwrap_or(0.0),
-                    total_s: route.submitted.elapsed().as_secs_f64(),
-                    queue_s: 0.0,
-                    finish: FinishReason::WorkerLost,
-                };
-                let _ = route.client.send(StreamEvent::Done(resp));
+                self.finish_worker_lost(wid, route);
             }
         }
         self.workers[w].outstanding = 0;
+    }
+
+    /// Terminal settlement of a token-producing stream whose worker died and
+    /// that cannot (or may not) be resumed: the client gets a `Done` with
+    /// `FinishReason::WorkerLost` carrying the tokens delivered so far.
+    fn finish_worker_lost(&mut self, wid: u64, route: Route) {
+        self.fleet.worker_lost += 1;
+        self.journal(&OpEntry::Finished {
+            seq: route.seq,
+            outcome: Outcome::Finish(FinishReason::WorkerLost),
+            n_tokens: route.tokens.len() as u32,
+        });
+        let resp = GenResponse {
+            id: wid,
+            tokens: route.tokens.clone(),
+            ttft_s: route.first_token_s.unwrap_or(0.0),
+            total_s: route.submitted.elapsed().as_secs_f64(),
+            queue_s: 0.0,
+            finish: FinishReason::WorkerLost,
+        };
+        let _ = route.client.send(StreamEvent::Done(resp));
     }
 
     /// Cooperative drain (see [`Router::drain_worker`]).
@@ -718,6 +958,11 @@ impl Core {
                 self.dispatch(route);
             } else {
                 self.fleet.errors += 1;
+                self.journal(&OpEntry::Finished {
+                    seq: route.seq,
+                    outcome: Outcome::Error,
+                    n_tokens: route.tokens.len() as u32,
+                });
                 let _ = route.client.send(StreamEvent::Error(format!(
                     "worker {w} drained and the redistribution budget is exhausted"
                 )));
@@ -785,7 +1030,15 @@ impl Core {
     /// down (workers with in-flight work error it again internally; the
     /// client channels are gone by then, which is fine).
     fn shutdown_all(&mut self) {
-        for (_, route) in self.routes.drain() {
+        // orderly shutdown settles the journal too: a cleanly stopped log
+        // has no unfinished records, so a later recover() resumes nothing
+        let routes: Vec<Route> = self.routes.drain().map(|(_, r)| r).collect();
+        for route in routes {
+            self.journal(&OpEntry::Finished {
+                seq: route.seq,
+                outcome: Outcome::Error,
+                n_tokens: route.tokens.len() as u32,
+            });
             let _ = route.client.send(StreamEvent::Error("router shut down".into()));
         }
         self.by_seq.clear();

@@ -98,6 +98,11 @@ pub struct DecodeGroup {
     pub tokens: Vec<i32>,
     /// materialized sink count per row (aligned with `rows`)
     pub n_sinks: Vec<i32>,
+    /// per-row sampling seed (aligned with `rows`), from `GenRequest::seed`.
+    /// Greedy backends ignore it; the sim backend mixes it into its token
+    /// hash so seeded streams are distinguishable yet fully deterministic —
+    /// the property oplog replay relies on (seed 0 leaves the hash untouched)
+    pub seeds: Vec<u64>,
 }
 
 #[derive(Debug, Clone)]
@@ -375,6 +380,7 @@ pub fn run_to_completion<B: DecodeBackend>(
                 len,
                 tokens: rows.iter().map(|&r| next[r]).collect(),
                 n_sinks: rows.iter().map(|&r| sinks[r]).collect(),
+                seeds: rows.iter().map(|&r| reqs[r].seed).collect(),
                 rows,
             };
             for o in be.decode(&mut kv, &group)? {

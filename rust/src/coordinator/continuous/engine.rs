@@ -291,6 +291,38 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
         });
     }
 
+    /// Queue a request that already delivered `generated` tokens on another
+    /// worker (cluster crash-recovery path).  Admission re-prefills
+    /// `BOS + prompt + generated` exactly like a preemption resume, so the
+    /// stream continues from its last delivered token; only NEW tokens are
+    /// emitted on `reply`, and the terminal response carries the full token
+    /// list.  Counted in `stats.resumed`, not `admitted` — the request was
+    /// admitted once already, on the worker that lost it.
+    pub fn submit_resumed(
+        &mut self,
+        req: GenRequest,
+        generated: Vec<i32>,
+        reply: Reply,
+        submitted: Instant,
+    ) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push_back(PendingReq {
+            req,
+            reply,
+            submitted,
+            generated,
+            // first-admission markers pre-set: queue wait and TTFT were
+            // spent (and recorded) on the original worker
+            ttft_s: Some(0.0),
+            queue_s: Some(0.0),
+            attempts: 0,
+            times_preempted: 0,
+            seq,
+            enqueued_round: self.round,
+        });
+    }
+
     /// Queue a request and stream its tokens over a fresh channel.
     pub fn submit_stream(&mut self, req: GenRequest) -> Receiver<StreamEvent> {
         let (tx, rx) = channel();
@@ -880,6 +912,10 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
                 n_sinks: rows
                     .iter()
                     .map(|&r| self.slots[r].as_ref().map(|a| a.n_sinks).unwrap_or(0))
+                    .collect(),
+                seeds: rows
+                    .iter()
+                    .map(|&r| self.slots[r].as_ref().map(|a| a.req.seed).unwrap_or(0))
                     .collect(),
                 rows,
             };

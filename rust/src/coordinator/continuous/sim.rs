@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::config::ModelConfig;
+use crate::coordinator::failpoint::{names, FailAction, Failpoints};
 use crate::coordinator::kvcache::{KvCache, KvLayout};
 use crate::model::PrefixState;
 use crate::tensor::Tensor;
@@ -60,6 +61,10 @@ pub struct SimBackend {
     pub decode_cost: Duration,
     /// cache layout for [`DecodeBackend::new_cache`] (paged by default)
     pub kv_layout: KvLayout,
+    /// fault-injection sites (`sim.prefill` / `sim.decode`): an armed
+    /// [`FailAction::Error`] makes the call fail deterministically at an
+    /// exact execution offset, exercising the engine-rebuild recovery paths
+    pub failpoints: Failpoints,
 }
 
 impl SimBackend {
@@ -98,6 +103,7 @@ impl SimBackend {
             prefill_cost: Duration::ZERO,
             decode_cost: Duration::ZERO,
             kv_layout: KvLayout::Paged { page_size: 8, n_pages: 0 },
+            failpoints: Failpoints::default(),
         }
     }
 
@@ -109,6 +115,13 @@ impl SimBackend {
 
     pub fn with_kv_layout(mut self, layout: KvLayout) -> Self {
         self.kv_layout = layout;
+        self
+    }
+
+    /// Share a fault-injection handle with this backend (tests arm it to
+    /// fail prefill or decode at exact call offsets).
+    pub fn with_failpoints(mut self, failpoints: Failpoints) -> Self {
+        self.failpoints = failpoints;
         self
     }
 
@@ -133,7 +146,12 @@ impl SimBackend {
         h
     }
 
-    fn next_from(&self, h: u64) -> i32 {
+    /// Next token from a row hash, mixed with the request's sampling seed.
+    /// Seed 0 (the default) is the identity — XOR with 0 — so unseeded
+    /// streams are unchanged and all pre-seed parity fixtures stay valid;
+    /// any other seed perturbs every emission deterministically.
+    fn next_from(&self, h: u64, seed: u64) -> i32 {
+        let h = h ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         3 + (h % (self.cfg.vocab_size as u64 - 3)) as i32
     }
 
@@ -173,6 +191,9 @@ impl DecodeBackend for SimBackend {
     fn prefill(&self, kv: &mut KvCache, jobs: &[PrefillJob]) -> Result<Vec<PrefillOut>> {
         if jobs.len() > self.b_exec {
             bail!("prefill wave {} exceeds batch {}", jobs.len(), self.b_exec);
+        }
+        if let Some(FailAction::Error) = self.failpoints.fire(names::SIM_PREFILL) {
+            bail!("injected fault: prefill failed (failpoint {})", names::SIM_PREFILL);
         }
         spin(self.prefill_cost);
         let mut outs = Vec::with_capacity(jobs.len());
@@ -221,12 +242,19 @@ impl DecodeBackend for SimBackend {
                 }
             }
             let h = self.row_hash(kv, j.slot, kv.row_len(j.slot));
-            outs.push(PrefillOut { slot: j.slot, first_token: Some(self.next_from(h)), n_sinks });
+            outs.push(PrefillOut {
+                slot: j.slot,
+                first_token: Some(self.next_from(h, j.req.seed)),
+                n_sinks,
+            });
         }
         Ok(outs)
     }
 
     fn decode(&self, kv: &mut KvCache, group: &DecodeGroup) -> Result<Vec<DecodeOut>> {
+        if let Some(FailAction::Error) = self.failpoints.fire(names::SIM_DECODE) {
+            bail!("injected fault: decode failed (failpoint {})", names::SIM_DECODE);
+        }
         spin(self.decode_cost);
         let mut outs = Vec::with_capacity(group.rows.len());
         for (i, &row) in group.rows.iter().enumerate() {
@@ -240,7 +268,8 @@ impl DecodeBackend for SimBackend {
             if Self::is_sink(tok) {
                 n_sinks += 1;
             }
-            outs.push(DecodeOut { row, next_token: self.next_from(h), n_sinks });
+            let seed = group.seeds.get(i).copied().unwrap_or(0);
+            outs.push(DecodeOut { row, next_token: self.next_from(h, seed), n_sinks });
         }
         Ok(outs)
     }
@@ -314,6 +343,41 @@ mod tests {
         let stopped = run_to_completion(&be, &[r]).unwrap();
         assert_eq!(stopped[0].finish, FinishReason::Stop);
         assert_eq!(stopped[0].tokens, free[0].tokens[..=first].to_vec());
+    }
+
+    /// The sampling seed perturbs every emission deterministically, and the
+    /// default seed 0 leaves the stream exactly as the unseeded hash produced
+    /// it (the identity property the pre-seed parity fixtures rely on).
+    #[test]
+    fn seed_perturbs_streams_and_zero_is_identity() {
+        let be = SimBackend::new(2, 16, 2, 48);
+        let base = run_to_completion(&be, &[req(0, vec![5, 6, 7], 5)]).unwrap();
+        let mut seeded = req(0, vec![5, 6, 7], 5);
+        seeded.seed = 0xA11CE;
+        let s1 = run_to_completion(&be, &[seeded.clone()]).unwrap();
+        let s2 = run_to_completion(&be, &[seeded]).unwrap();
+        assert_eq!(s1[0].tokens, s2[0].tokens, "seeded streams are deterministic");
+        assert_ne!(s1[0].tokens, base[0].tokens, "a nonzero seed perturbs the stream");
+        let zero = run_to_completion(&be, &[req(0, vec![5, 6, 7], 5)]).unwrap();
+        assert_eq!(zero[0].tokens, base[0].tokens, "seed 0 is the identity");
+    }
+
+    /// An armed failpoint fails exactly one call at the chosen offset, then
+    /// disarms — the determinism the crash-recovery tests schedule against.
+    #[test]
+    fn failpoints_fire_once_at_exact_offsets() {
+        let fp = Failpoints::default();
+        let be = SimBackend::new(2, 16, 2, 48).with_failpoints(fp.clone());
+        let r = req(0, vec![5, 6, 7], 4);
+        // skip 0 → the first decode call fails, later ones succeed
+        fp.arm(names::SIM_DECODE, 0, FailAction::Error);
+        assert!(run_to_completion(&be, &[r.clone()]).is_err());
+        assert_eq!(fp.fired(names::SIM_DECODE), 1);
+        let ok = run_to_completion(&be, &[r.clone()]).unwrap();
+        assert_eq!(ok[0].tokens.len(), 4, "failpoint is one-shot");
+        // prefill site is independent of the decode site
+        fp.arm(names::SIM_PREFILL, 0, FailAction::Error);
+        assert!(run_to_completion(&be, &[r]).is_err());
     }
 
     /// Chunked prefill through the backend: writing a prompt in bounded

@@ -1,0 +1,175 @@
+//! Deterministic fault injection for the crash-recovery paths.
+//!
+//! A [`Failpoints`] handle is a named set of one-shot triggers shared (via
+//! `Arc`) between a test and the component under test.  Instrumented code
+//! polls [`Failpoints::fire`] at its failure site; a test arms the site with
+//! [`Failpoints::arm`], choosing how many polls to let through before the
+//! fault triggers — so "crash on the 7th decode call" is expressible exactly,
+//! with no timing races and no sleeps.
+//!
+//! Handles are INSTANCE-scoped, not process-global: each `SimBackend`,
+//! `ServerConfig`, and `Oplog` carries its own clone, so concurrently running
+//! tests cannot trip each other's faults.  An unarmed site costs one map
+//! lookup under a mutex per poll — noise next to a simulated decode call.
+//!
+//! Instrumented sites live in [`names`]:
+//!
+//! | site                 | where it is polled                  | action |
+//! |----------------------|-------------------------------------|--------|
+//! | `sim.prefill`        | `SimBackend::prefill`, before writes | [`FailAction::Error`] fails the call |
+//! | `sim.decode`         | `SimBackend::decode`, before writes  | [`FailAction::Error`] fails the call |
+//! | `worker.crash`       | the worker serve loop, once per pass | [`FailAction::Crash`] exits the thread silently |
+//! | `worker.drain.crash` | on receiving a drain request         | [`FailAction::Crash`] dies before answering |
+//! | `oplog.append`       | `Oplog::append`, before the write    | [`FailAction::Torn`] leaves a partial frame |
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// What an armed failpoint does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailAction {
+    /// the instrumented operation returns an error — exercises the engine
+    /// rebuild / retry recovery paths without killing anything
+    Error,
+    /// the worker thread exits silently, settling nothing — the closest
+    /// in-process analog of a killed process (probes then fail, the router
+    /// declares the worker dead and redistributes)
+    Crash,
+    /// a journal append writes only the first `n` bytes of its frame before
+    /// failing — the torn-tail shape recovery must absorb
+    Torn(usize),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Site {
+    armed: Option<FailAction>,
+    /// polls to let through before the armed action fires
+    skip: usize,
+    /// total polls observed (armed or not)
+    polls: usize,
+    /// times this site has fired
+    fired: usize,
+}
+
+const IDLE: Site = Site { armed: None, skip: 0, polls: 0, fired: 0 };
+
+/// Shared registry of named one-shot fault triggers (see module docs).
+/// Cloning shares the registry; `default()` creates an independent one with
+/// every site unarmed.
+#[derive(Debug, Clone, Default)]
+pub struct Failpoints {
+    sites: Arc<Mutex<HashMap<String, Site>>>,
+}
+
+impl Failpoints {
+    /// Arm `name`: after `skip` polls pass through, the next poll fires
+    /// `action` once and the site disarms itself.  Re-arming an armed site
+    /// replaces its action and skip count; poll/fire history is kept.
+    pub fn arm(&self, name: &str, skip: usize, action: FailAction) {
+        let mut sites = self.sites.lock().unwrap();
+        let site = sites.entry(name.to_string()).or_insert(IDLE);
+        site.armed = Some(action);
+        site.skip = skip;
+    }
+
+    /// Disarm `name` without firing (history is kept).
+    pub fn disarm(&self, name: &str) {
+        if let Some(site) = self.sites.lock().unwrap().get_mut(name) {
+            site.armed = None;
+        }
+    }
+
+    /// Poll from instrumented code: counts the hit and returns the armed
+    /// action when this poll is the one that fires.
+    pub fn fire(&self, name: &str) -> Option<FailAction> {
+        let mut sites = self.sites.lock().unwrap();
+        let site = sites.entry(name.to_string()).or_insert(IDLE);
+        site.polls += 1;
+        site.armed?;
+        if site.skip > 0 {
+            site.skip -= 1;
+            return None;
+        }
+        site.fired += 1;
+        site.armed.take()
+    }
+
+    /// Total polls observed at `name`, armed or not — lets a test convert an
+    /// observed execution offset into an exact `skip` count for a second run.
+    pub fn polls(&self, name: &str) -> usize {
+        self.sites.lock().unwrap().get(name).map_or(0, |s| s.polls)
+    }
+
+    /// How many times `name` has fired.
+    pub fn fired(&self, name: &str) -> usize {
+        self.sites.lock().unwrap().get(name).map_or(0, |s| s.fired)
+    }
+}
+
+/// The instrumented failpoint sites (see the module table).
+pub mod names {
+    /// `SimBackend::prefill`, polled before any KV writes for the wave.
+    pub const SIM_PREFILL: &str = "sim.prefill";
+    /// `SimBackend::decode`, polled before any KV writes for the group.
+    pub const SIM_DECODE: &str = "sim.decode";
+    /// The worker serve loop, polled once per loop pass: `Crash` makes the
+    /// worker thread exit without draining, erroring, or answering probes.
+    pub const WORKER_CRASH: &str = "worker.crash";
+    /// Polled when a drain request arrives: `Crash` dies before the
+    /// `DrainReport` is sent, so the router sees a drain timeout.
+    pub const WORKER_DRAIN_CRASH: &str = "worker.drain.crash";
+    /// `Oplog::append`, polled before the frame write: `Torn(n)` persists
+    /// only the first `n` bytes and wedges the log.
+    pub const OPLOG_APPEND: &str = "oplog.append";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_once_after_the_skip_count() {
+        let fp = Failpoints::default();
+        fp.arm("x", 2, FailAction::Error);
+        assert_eq!(fp.fire("x"), None, "skip 1");
+        assert_eq!(fp.fire("x"), None, "skip 2");
+        assert_eq!(fp.fire("x"), Some(FailAction::Error), "third poll fires");
+        assert_eq!(fp.fire("x"), None, "one-shot: disarmed after firing");
+        assert_eq!(fp.polls("x"), 4);
+        assert_eq!(fp.fired("x"), 1);
+    }
+
+    #[test]
+    fn unarmed_polls_are_counted_but_never_fire() {
+        let fp = Failpoints::default();
+        for _ in 0..5 {
+            assert_eq!(fp.fire("y"), None);
+        }
+        assert_eq!(fp.polls("y"), 5);
+        assert_eq!(fp.fired("y"), 0);
+        // arming after the fact starts the skip count from now, not from 0
+        fp.arm("y", 1, FailAction::Crash);
+        assert_eq!(fp.fire("y"), None);
+        assert_eq!(fp.fire("y"), Some(FailAction::Crash));
+    }
+
+    #[test]
+    fn disarm_cancels_and_sites_are_independent() {
+        let fp = Failpoints::default();
+        fp.arm("a", 0, FailAction::Error);
+        fp.arm("b", 0, FailAction::Torn(3));
+        fp.disarm("a");
+        assert_eq!(fp.fire("a"), None);
+        assert_eq!(fp.fire("b"), Some(FailAction::Torn(3)));
+    }
+
+    #[test]
+    fn clones_share_state_but_instances_do_not() {
+        let fp = Failpoints::default();
+        let shared = fp.clone();
+        let other = Failpoints::default();
+        fp.arm("z", 0, FailAction::Error);
+        assert_eq!(shared.fire("z"), Some(FailAction::Error), "clone sees the arm");
+        assert_eq!(other.fire("z"), None, "independent instance does not");
+    }
+}

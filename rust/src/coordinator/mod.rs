@@ -28,11 +28,20 @@
 //! artifact, with pluggable [`cluster::DispatchPolicy`] implementations
 //! (round-robin, least-loaded, prefix-affinity), health-checked drain, and
 //! fleet-wide metrics via [`request::Metrics::merge`].
+//!
+//! Robustness layer: the router can journal every admission, dispatch,
+//! token, and terminal outcome to a durable [`oplog::Oplog`] — a restarted
+//! fleet resumes in-flight streams from their last journaled token
+//! ([`cluster::Router::recover`]), and `pq replay` re-executes a captured
+//! trace bit-identically ([`oplog::replay`]).  The crash paths are exercised
+//! deterministically via [`failpoint::Failpoints`].
 
 pub mod batcher;
 pub mod cluster;
 pub mod continuous;
+pub mod failpoint;
 pub mod kvcache;
+pub mod oplog;
 pub mod policy;
 pub mod request;
 pub mod scheduler;
@@ -45,7 +54,11 @@ pub use cluster::{
     WorkerLoad, WorkerState,
 };
 pub use continuous::{ContinuousEngine, ModelBackend, SimBackend};
+pub use failpoint::{FailAction, Failpoints};
 pub use kvcache::{KvCache, KvLayout, PagePool};
+pub use oplog::{
+    read_log, replay, BackendDesc, OpEntry, Oplog, Outcome, ReplayReport, TraceView,
+};
 pub use policy::{Fcfs, PriorityPreempt, QueueView, SchedulePolicy, SlotView};
 pub use request::{
     ClassMetrics, DrainReport, FinishReason, GenRequest, GenRequestBuilder, GenResponse, Metrics,

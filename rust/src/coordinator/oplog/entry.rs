@@ -1,0 +1,519 @@
+//! Typed oplog entries and the trace view reconstructed from them.
+//!
+//! Every entry encodes to a self-contained little-endian payload (one frame
+//! in the journal).  The set covers the full request lifecycle the router
+//! observes: admission (the complete `GenRequest`, seed included), dispatch
+//! and resume decisions, every emitted token, terminal outcomes, and worker
+//! lifecycle events — enough to (a) resume any in-flight stream from its
+//! last journaled token and (b) re-execute the whole trace bit-identically.
+//!
+//! [`TraceView::from_entries`] folds a recovered entry sequence into
+//! per-request records; [`TraceView::unfinished`] is the recovery worklist.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::cluster::DrainCause;
+use crate::coordinator::request::{FinishReason, GenRequest, Priority};
+
+/// Entry-payload format version, journaled in the header entry.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Which backend family produced a trace — enough for `pq replay` to boot an
+/// equivalent fleet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendDesc {
+    /// deterministic sim fleet (tests, benches)
+    Sim { b_exec: u32, s_exec: u32, n_prefix: u32, cache_max: u32 },
+    /// artifact-booted fleet; `path` is the artifacts directory
+    Artifact { path: String },
+}
+
+/// Terminal outcome journaled for a request: a [`FinishReason`] or an error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Finish(FinishReason),
+    Error,
+}
+
+impl Outcome {
+    fn code(self) -> u8 {
+        match self {
+            Outcome::Finish(FinishReason::Length) => 0,
+            Outcome::Finish(FinishReason::Stop) => 1,
+            Outcome::Finish(FinishReason::CacheFull) => 2,
+            Outcome::Finish(FinishReason::Cancelled) => 3,
+            Outcome::Finish(FinishReason::WorkerLost) => 4,
+            Outcome::Error => 5,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Outcome> {
+        Ok(match c {
+            0 => Outcome::Finish(FinishReason::Length),
+            1 => Outcome::Finish(FinishReason::Stop),
+            2 => Outcome::Finish(FinishReason::CacheFull),
+            3 => Outcome::Finish(FinishReason::Cancelled),
+            4 => Outcome::Finish(FinishReason::WorkerLost),
+            5 => Outcome::Error,
+            _ => bail!("unknown outcome code {c}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Finish(f) => f.name(),
+            Outcome::Error => "error",
+        }
+    }
+
+    /// Whether a replay of this outcome must reproduce the journaled tokens
+    /// EXACTLY (deterministic completions) rather than by prefix (streams
+    /// cut short by external events — cancellation, a lost worker).
+    pub fn deterministic(self) -> bool {
+        matches!(
+            self,
+            Outcome::Finish(FinishReason::Length)
+                | Outcome::Finish(FinishReason::Stop)
+                | Outcome::Finish(FinishReason::CacheFull)
+        )
+    }
+}
+
+fn cause_code(c: DrainCause) -> u8 {
+    match c {
+        DrainCause::Dead => 0,
+        DrainCause::Wedged => 1,
+        DrainCause::Failing => 2,
+        DrainCause::Killed => 3,
+    }
+}
+
+fn cause_from_code(c: u8) -> Result<DrainCause> {
+    Ok(match c {
+        0 => DrainCause::Dead,
+        1 => DrainCause::Wedged,
+        2 => DrainCause::Failing,
+        3 => DrainCause::Killed,
+        _ => bail!("unknown drain-cause code {c}"),
+    })
+}
+
+/// One journaled operation.  `seq` is the router's cluster-wide sequence
+/// number — stable across re-dispatches, unlike the worker-namespaced id.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpEntry {
+    /// first entry of every log: format version + backend description
+    Header { version: u32, backend: BackendDesc },
+    /// a request entered the router (the full request, seed included)
+    Admitted { seq: u64, req: GenRequest },
+    /// the request was dispatched to `worker` with no prior tokens
+    Dispatched { seq: u64, worker: u64 },
+    /// one generated token was forwarded to the client
+    Token { seq: u64, token: i32 },
+    /// the stream reached a terminal event with `n_tokens` delivered
+    Finished { seq: u64, outcome: Outcome, n_tokens: u32 },
+    /// a worker left the rotation (`cause` is the drain cause)
+    WorkerLost { worker: u64, cause: DrainCause },
+    /// a token-producing stream was re-dispatched to `worker`, resuming
+    /// after `from_tokens` already-delivered tokens
+    Resumed { seq: u64, worker: u64, from_tokens: u32 },
+}
+
+const TAG_HEADER: u8 = 0;
+const TAG_ADMITTED: u8 = 1;
+const TAG_DISPATCHED: u8 = 2;
+const TAG_TOKEN: u8 = 3;
+const TAG_FINISHED: u8 = 4;
+const TAG_WORKER_LOST: u8 = 5;
+const TAG_RESUMED: u8 = 6;
+
+/// `deadline: None` sentinel (a real deadline of u64::MAX ms is not a thing).
+const NO_DEADLINE: u64 = u64::MAX;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_tokens(out: &mut Vec<u8>, toks: &[i32]) {
+    put_u32(out, toks.len() as u32);
+    for &t in toks {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, off: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.off < n {
+            bail!("entry truncated: wanted {n} bytes at offset {}", self.off);
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn tokens(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        if self.buf.len() - self.off < n * 4 {
+            bail!("entry truncated: token list of {n} exceeds payload");
+        }
+        (0..n).map(|_| self.i32()).collect()
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.off != self.buf.len() {
+            bail!("entry has {} trailing bytes", self.buf.len() - self.off);
+        }
+        Ok(())
+    }
+}
+
+impl OpEntry {
+    /// Serialize to one frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32);
+        match self {
+            OpEntry::Header { version, backend } => {
+                out.push(TAG_HEADER);
+                put_u32(&mut out, *version);
+                match backend {
+                    BackendDesc::Sim { b_exec, s_exec, n_prefix, cache_max } => {
+                        out.push(0);
+                        put_u32(&mut out, *b_exec);
+                        put_u32(&mut out, *s_exec);
+                        put_u32(&mut out, *n_prefix);
+                        put_u32(&mut out, *cache_max);
+                    }
+                    BackendDesc::Artifact { path } => {
+                        out.push(1);
+                        put_u32(&mut out, path.len() as u32);
+                        out.extend_from_slice(path.as_bytes());
+                    }
+                }
+            }
+            OpEntry::Admitted { seq, req } => {
+                out.push(TAG_ADMITTED);
+                put_u64(&mut out, *seq);
+                put_u64(&mut out, req.seed);
+                out.push(req.priority.index() as u8);
+                put_u64(
+                    &mut out,
+                    req.deadline
+                        .map_or(NO_DEADLINE, |d| d.as_millis().min(u64::MAX as u128) as u64),
+                );
+                put_u32(&mut out, req.max_new as u32);
+                put_tokens(&mut out, &req.prompt);
+                put_tokens(&mut out, &req.stop_tokens);
+            }
+            OpEntry::Dispatched { seq, worker } => {
+                out.push(TAG_DISPATCHED);
+                put_u64(&mut out, *seq);
+                put_u64(&mut out, *worker);
+            }
+            OpEntry::Token { seq, token } => {
+                out.push(TAG_TOKEN);
+                put_u64(&mut out, *seq);
+                out.extend_from_slice(&token.to_le_bytes());
+            }
+            OpEntry::Finished { seq, outcome, n_tokens } => {
+                out.push(TAG_FINISHED);
+                put_u64(&mut out, *seq);
+                out.push(outcome.code());
+                put_u32(&mut out, *n_tokens);
+            }
+            OpEntry::WorkerLost { worker, cause } => {
+                out.push(TAG_WORKER_LOST);
+                put_u64(&mut out, *worker);
+                out.push(cause_code(*cause));
+            }
+            OpEntry::Resumed { seq, worker, from_tokens } => {
+                out.push(TAG_RESUMED);
+                put_u64(&mut out, *seq);
+                put_u64(&mut out, *worker);
+                put_u32(&mut out, *from_tokens);
+            }
+        }
+        out
+    }
+
+    /// Decode one frame payload.  Any defect is an error, never a panic —
+    /// recovery treats an undecodable frame as the start of the torn tail.
+    pub fn decode(payload: &[u8]) -> Result<OpEntry> {
+        let mut c = Cursor::new(payload);
+        let tag = c.u8().context("empty entry")?;
+        let entry = match tag {
+            TAG_HEADER => {
+                let version = c.u32()?;
+                let backend = match c.u8()? {
+                    0 => BackendDesc::Sim {
+                        b_exec: c.u32()?,
+                        s_exec: c.u32()?,
+                        n_prefix: c.u32()?,
+                        cache_max: c.u32()?,
+                    },
+                    1 => {
+                        let n = c.u32()? as usize;
+                        let path = String::from_utf8(c.bytes(n)?.to_vec())
+                            .context("artifact path is not UTF-8")?;
+                        BackendDesc::Artifact { path }
+                    }
+                    k => bail!("unknown backend kind {k}"),
+                };
+                OpEntry::Header { version, backend }
+            }
+            TAG_ADMITTED => {
+                let seq = c.u64()?;
+                let seed = c.u64()?;
+                let pi = c.u8()? as usize;
+                let priority = *Priority::all()
+                    .get(pi)
+                    .with_context(|| format!("unknown priority index {pi}"))?;
+                let deadline_ms = c.u64()?;
+                let max_new = c.u32()? as usize;
+                let prompt = c.tokens()?;
+                let stop_tokens = c.tokens()?;
+                let mut b = GenRequest::builder(seq)
+                    .prompt(prompt)
+                    .max_new(max_new)
+                    .priority(priority)
+                    .stop_tokens(stop_tokens)
+                    .seed(seed);
+                if deadline_ms != NO_DEADLINE {
+                    b = b.deadline(Duration::from_millis(deadline_ms));
+                }
+                OpEntry::Admitted { seq, req: b.build() }
+            }
+            TAG_DISPATCHED => OpEntry::Dispatched { seq: c.u64()?, worker: c.u64()? },
+            TAG_TOKEN => OpEntry::Token { seq: c.u64()?, token: c.i32()? },
+            TAG_FINISHED => OpEntry::Finished {
+                seq: c.u64()?,
+                outcome: Outcome::from_code(c.u8()?)?,
+                n_tokens: c.u32()?,
+            },
+            TAG_WORKER_LOST => {
+                OpEntry::WorkerLost { worker: c.u64()?, cause: cause_from_code(c.u8()?)? }
+            }
+            TAG_RESUMED => {
+                OpEntry::Resumed { seq: c.u64()?, worker: c.u64()?, from_tokens: c.u32()? }
+            }
+            _ => bail!("unknown entry tag {tag}"),
+        };
+        c.finish()?;
+        Ok(entry)
+    }
+}
+
+/// Per-request state folded out of a trace.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    /// the router's cluster-wide sequence number (also `req.id`)
+    pub seq: u64,
+    pub req: GenRequest,
+    /// every token journaled for this request, in emission order
+    pub tokens: Vec<i32>,
+    /// terminal outcome, `None` while the stream was still in flight
+    pub finish: Option<Outcome>,
+    /// dispatch + resume decisions journaled
+    pub dispatches: usize,
+}
+
+/// A recovered trace: header (when journaled) plus seq-ordered request
+/// records.
+#[derive(Debug, Clone, Default)]
+pub struct TraceView {
+    pub version: u32,
+    pub backend: Option<BackendDesc>,
+    /// request records in `seq` order
+    pub records: Vec<RequestRecord>,
+    /// worker-loss events journaled (drains, kills, crashes)
+    pub worker_events: usize,
+}
+
+impl TraceView {
+    /// Fold an entry sequence into per-request records.  Entries referencing
+    /// an unknown `seq` (their admission fell into a torn tail) are dropped —
+    /// recovery can only act on requests whose full parameters survived.
+    pub fn from_entries(entries: &[OpEntry]) -> TraceView {
+        let mut view = TraceView::default();
+        let mut records: BTreeMap<u64, RequestRecord> = BTreeMap::new();
+        for e in entries {
+            match e {
+                OpEntry::Header { version, backend } => {
+                    view.version = *version;
+                    view.backend = Some(backend.clone());
+                }
+                OpEntry::Admitted { seq, req } => {
+                    records.entry(*seq).or_insert_with(|| RequestRecord {
+                        seq: *seq,
+                        req: req.clone(),
+                        tokens: Vec::new(),
+                        finish: None,
+                        dispatches: 0,
+                    });
+                }
+                OpEntry::Dispatched { seq, .. } | OpEntry::Resumed { seq, .. } => {
+                    if let Some(r) = records.get_mut(seq) {
+                        r.dispatches += 1;
+                    }
+                }
+                OpEntry::Token { seq, token } => {
+                    if let Some(r) = records.get_mut(seq) {
+                        r.tokens.push(*token);
+                    }
+                }
+                OpEntry::Finished { seq, outcome, .. } => {
+                    if let Some(r) = records.get_mut(seq) {
+                        r.finish = Some(*outcome);
+                    }
+                }
+                OpEntry::WorkerLost { .. } => view.worker_events += 1,
+            }
+        }
+        view.records = records.into_values().collect();
+        view
+    }
+
+    /// Requests with no journaled terminal event — the recovery worklist.
+    pub fn unfinished(&self) -> impl Iterator<Item = &RequestRecord> {
+        self.records.iter().filter(|r| r.finish.is_none())
+    }
+
+    /// Largest sequence number in the trace (`None` for an empty trace);
+    /// recovery restarts the router's counter above it.
+    pub fn max_seq(&self) -> Option<u64> {
+        self.records.last().map(|r| r.seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_entries() -> Vec<OpEntry> {
+        let req = GenRequest::builder(3)
+            .prompt(vec![10, 20, 30])
+            .max_new(6)
+            .priority(Priority::Interactive)
+            .deadline(Duration::from_millis(250))
+            .stop_tokens(vec![99])
+            .seed(0xFEED)
+            .build();
+        vec![
+            OpEntry::Header {
+                version: FORMAT_VERSION,
+                backend: BackendDesc::Sim { b_exec: 4, s_exec: 48, n_prefix: 1, cache_max: 128 },
+            },
+            OpEntry::Admitted { seq: 3, req },
+            OpEntry::Admitted { seq: 4, req: GenRequest::new(4, vec![7], 2) },
+            OpEntry::Dispatched { seq: 3, worker: 1 },
+            OpEntry::Dispatched { seq: 4, worker: 0 },
+            OpEntry::Token { seq: 3, token: 41 },
+            OpEntry::Token { seq: 4, token: -2 },
+            OpEntry::Token { seq: 3, token: 17 },
+            OpEntry::WorkerLost { worker: 1, cause: DrainCause::Killed },
+            OpEntry::Resumed { seq: 3, worker: 0, from_tokens: 2 },
+            OpEntry::Finished {
+                seq: 4,
+                outcome: Outcome::Finish(FinishReason::Length),
+                n_tokens: 2,
+            },
+        ]
+    }
+
+    #[test]
+    fn entries_round_trip_byte_exact() {
+        for e in sample_entries() {
+            let bytes = e.encode();
+            let back = OpEntry::decode(&bytes).unwrap();
+            assert_eq!(back, e);
+            // field-level spot check on the rich one
+            if let OpEntry::Admitted { req, .. } = &back {
+                if req.seed != 0 {
+                    assert_eq!(req.seed, 0xFEED);
+                    assert_eq!(req.deadline, Some(Duration::from_millis(250)));
+                    assert_eq!(req.priority, Priority::Interactive);
+                }
+            }
+        }
+        // artifact-backed header too
+        let h = OpEntry::Header {
+            version: FORMAT_VERSION,
+            backend: BackendDesc::Artifact { path: "artifacts/llama".into() },
+        };
+        assert_eq!(OpEntry::decode(&h.encode()).unwrap(), h);
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_junk_without_panicking() {
+        for e in sample_entries() {
+            let bytes = e.encode();
+            for cut in 0..bytes.len() {
+                assert!(OpEntry::decode(&bytes[..cut]).is_err(), "accepted a truncated entry");
+            }
+            let mut extended = bytes.clone();
+            extended.push(0);
+            assert!(OpEntry::decode(&extended).is_err(), "accepted trailing bytes");
+        }
+        assert!(OpEntry::decode(&[]).is_err());
+        assert!(OpEntry::decode(&[200]).is_err(), "unknown tag");
+    }
+
+    #[test]
+    fn trace_view_folds_lifecycle_and_orders_by_seq() {
+        let view = TraceView::from_entries(&sample_entries());
+        assert!(matches!(view.backend, Some(BackendDesc::Sim { b_exec: 4, .. })));
+        assert_eq!(view.records.len(), 2);
+        assert_eq!(view.records[0].seq, 3);
+        assert_eq!(view.records[0].tokens, vec![41, 17]);
+        assert_eq!(view.records[0].dispatches, 2, "dispatch + resume");
+        assert!(view.records[0].finish.is_none());
+        assert_eq!(view.records[1].tokens, vec![-2]);
+        assert_eq!(view.records[1].finish, Some(Outcome::Finish(FinishReason::Length)));
+        assert_eq!(view.worker_events, 1);
+        let unfinished: Vec<u64> = view.unfinished().map(|r| r.seq).collect();
+        assert_eq!(unfinished, vec![3], "only the in-flight stream needs recovery");
+        assert_eq!(view.max_seq(), Some(4));
+    }
+
+    #[test]
+    fn events_for_unadmitted_requests_are_dropped() {
+        // admission lost to a torn tail: trailing events must not fabricate
+        // a recoverable record
+        let view = TraceView::from_entries(&[
+            OpEntry::Token { seq: 9, token: 1 },
+            OpEntry::Finished { seq: 9, outcome: Outcome::Error, n_tokens: 1 },
+        ]);
+        assert!(view.records.is_empty());
+    }
+}

@@ -1,0 +1,281 @@
+//! Durable request oplog: an append-only, CRC-framed journal of everything
+//! the cluster router decides and observes, with torn-tail recovery and
+//! bit-identical replay.
+//!
+//! Golem-style idea, serving-shaped: because PrefixQuant's prefixed K/V is
+//! deterministic and artifact-derived, a request's entire state is its
+//! parameters plus the tokens emitted so far — so journaling admissions,
+//! dispatch/resume decisions, tokens, and terminal outcomes is enough to
+//! (a) resume any in-flight stream on a fresh fleet after a crash
+//! ([`crate::coordinator::Router::recover`]) and (b) re-execute a whole
+//! captured trace bit-identically ([`replay::replay`], `pq replay`).
+//!
+//! Durability model: every [`Oplog::append`] issues one `write_all` of a
+//! complete frame (no user-space buffering), so an OS-level crash can tear
+//! at most the final frame; `fsync` is deliberately NOT issued per append —
+//! the ≤5% journaling-overhead budget buys process-crash and
+//! restart-durability, not power-loss durability.  [`Oplog::open_recover`]
+//! scans the frame sequence, keeps every complete entry, truncates the torn
+//! tail, and reports what was dropped.  A log whose append failed (disk
+//! error, injected torn write) wedges: further appends error and the router
+//! downgrades to journal-less serving rather than crashing.
+
+pub mod entry;
+pub mod frame;
+pub mod replay;
+
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use entry::{BackendDesc, OpEntry, Outcome, RequestRecord, TraceView, FORMAT_VERSION};
+pub use replay::{replay, ReplayReport};
+
+use crate::coordinator::failpoint::{names, FailAction, Failpoints};
+
+/// Append handle over one journal file (see module docs).
+#[derive(Debug)]
+pub struct Oplog {
+    file: File,
+    path: PathBuf,
+    /// set after a failed append: the file may end in a torn frame, so no
+    /// further appends are allowed (recovery will truncate the tail)
+    wedged: bool,
+    failpoints: Failpoints,
+}
+
+/// What [`Oplog::open_recover`] salvaged.
+#[derive(Debug)]
+pub struct Recovered {
+    /// every complete, checksum-valid, decodable entry, in file order
+    pub entries: Vec<OpEntry>,
+    /// torn-tail bytes truncated from the file
+    pub dropped_bytes: u64,
+}
+
+impl Oplog {
+    /// Create (truncating) a new journal at `path`, writing the magic and a
+    /// header entry describing the backend.
+    pub fn create(path: impl AsRef<Path>, backend: &BackendDesc) -> Result<Oplog> {
+        Oplog::create_with_failpoints(path, backend, Failpoints::default())
+    }
+
+    /// [`Oplog::create`] with a shared fault-injection handle (tests arm
+    /// `oplog.append` to leave torn frames at exact append offsets).
+    pub fn create_with_failpoints(
+        path: impl AsRef<Path>,
+        backend: &BackendDesc,
+        failpoints: Failpoints,
+    ) -> Result<Oplog> {
+        let path = path.as_ref();
+        let mut file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("create oplog {}", path.display()))?;
+        file.write_all(frame::MAGIC)?;
+        let mut log = Oplog { file, path: path.to_path_buf(), wedged: false, failpoints };
+        log.append(&OpEntry::Header { version: FORMAT_VERSION, backend: backend.clone() })?;
+        Ok(log)
+    }
+
+    /// Open an existing journal: decode every complete entry, truncate any
+    /// torn tail in place, and return the log positioned for appending.
+    /// Never panics on damaged input; a file without the oplog magic is an
+    /// error (that is not a torn tail — it was never a journal).
+    pub fn open_recover(path: impl AsRef<Path>) -> Result<(Oplog, Recovered)> {
+        let path = path.as_ref();
+        let bytes =
+            std::fs::read(path).with_context(|| format!("read oplog {}", path.display()))?;
+        if bytes.len() < frame::MAGIC.len() || !bytes.starts_with(frame::MAGIC) {
+            bail!("{}: not an oplog (bad or missing magic)", path.display());
+        }
+        let scan = frame::scan(&bytes[frame::MAGIC.len()..]);
+        // a CRC-valid but undecodable frame is corruption too: surrender it
+        // and everything after it, same as a torn tail
+        let mut entries = Vec::with_capacity(scan.frames.len());
+        let mut good_len = 0u64;
+        for payload in &scan.frames {
+            match OpEntry::decode(payload) {
+                Ok(e) => {
+                    entries.push(e);
+                    good_len += (frame::FRAME_HEADER + payload.len()) as u64;
+                }
+                Err(_) => break,
+            }
+        }
+        let keep = frame::MAGIC.len() as u64 + good_len;
+        let dropped_bytes = bytes.len() as u64 - keep;
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("reopen oplog {}", path.display()))?;
+        if dropped_bytes > 0 {
+            file.set_len(keep).context("truncate torn oplog tail")?;
+        }
+        file.seek(SeekFrom::End(0))?;
+        let log = Oplog {
+            file,
+            path: path.to_path_buf(),
+            wedged: false,
+            failpoints: Failpoints::default(),
+        };
+        Ok((log, Recovered { entries, dropped_bytes }))
+    }
+
+    /// Append one entry as a complete frame (single `write_all`).  After any
+    /// failure the log is wedged: the file may end mid-frame, so appends stop
+    /// and the caller should continue without journaling.
+    pub fn append(&mut self, e: &OpEntry) -> Result<()> {
+        if self.wedged {
+            bail!("oplog {} is wedged after a failed append", self.path.display());
+        }
+        let buf = frame::encode_frame(&e.encode());
+        match self.failpoints.fire(names::OPLOG_APPEND) {
+            Some(FailAction::Torn(n)) => {
+                // persist a deliberately torn frame, then fail the append
+                let n = n.min(buf.len());
+                let _ = self.file.write_all(&buf[..n]);
+                self.wedged = true;
+                bail!("injected fault: oplog append torn after {n} of {} bytes", buf.len());
+            }
+            Some(_) => {
+                self.wedged = true;
+                bail!("injected fault: oplog append failed");
+            }
+            None => {}
+        }
+        if let Err(err) = self.file.write_all(&buf) {
+            self.wedged = true;
+            return Err(err).with_context(|| format!("append to oplog {}", self.path.display()));
+        }
+        Ok(())
+    }
+
+    /// Whether appends have been stopped by a failed write.
+    pub fn is_wedged(&self) -> bool {
+        self.wedged
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Read-only load of a journal (no truncation, no append handle): the
+/// decodable entry prefix plus the byte count of any torn tail.
+pub fn read_log(path: impl AsRef<Path>) -> Result<Recovered> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("read oplog {}", path.display()))?;
+    if bytes.len() < frame::MAGIC.len() || !bytes.starts_with(frame::MAGIC) {
+        bail!("{}: not an oplog (bad or missing magic)", path.display());
+    }
+    let scan = frame::scan(&bytes[frame::MAGIC.len()..]);
+    let mut entries = Vec::with_capacity(scan.frames.len());
+    let mut good_len = 0u64;
+    for payload in &scan.frames {
+        match OpEntry::decode(payload) {
+            Ok(e) => {
+                entries.push(e);
+                good_len += (frame::FRAME_HEADER + payload.len()) as u64;
+            }
+            Err(_) => break,
+        }
+    }
+    let keep = frame::MAGIC.len() as u64 + good_len;
+    Ok(Recovered { entries, dropped_bytes: bytes.len() as u64 - keep })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("pq-oplog-{name}-{}", std::process::id()));
+        p
+    }
+
+    fn sim_desc() -> BackendDesc {
+        BackendDesc::Sim { b_exec: 2, s_exec: 16, n_prefix: 1, cache_max: 64 }
+    }
+
+    #[test]
+    fn create_append_recover_round_trips() {
+        let path = tmp("roundtrip");
+        let mut log = Oplog::create(&path, &sim_desc()).unwrap();
+        let req = crate::coordinator::GenRequest::new(0, vec![5, 6], 3);
+        log.append(&OpEntry::Admitted { seq: 0, req }).unwrap();
+        log.append(&OpEntry::Dispatched { seq: 0, worker: 1 }).unwrap();
+        log.append(&OpEntry::Token { seq: 0, token: 7 }).unwrap();
+        drop(log);
+
+        let (_log, rec) = Oplog::open_recover(&path).unwrap();
+        assert_eq!(rec.dropped_bytes, 0);
+        assert_eq!(rec.entries.len(), 4, "header + 3 appends");
+        assert!(matches!(rec.entries[0], OpEntry::Header { .. }));
+        let view = TraceView::from_entries(&rec.entries);
+        assert_eq!(view.backend, Some(sim_desc()));
+        assert_eq!(view.records.len(), 1);
+        assert_eq!(view.records[0].tokens, vec![7]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn recovered_log_accepts_further_appends() {
+        let path = tmp("reappend");
+        let mut log = Oplog::create(&path, &sim_desc()).unwrap();
+        log.append(&OpEntry::Token { seq: 0, token: 1 }).unwrap();
+        drop(log);
+        let (mut log, _) = Oplog::open_recover(&path).unwrap();
+        log.append(&OpEntry::Token { seq: 0, token: 2 }).unwrap();
+        drop(log);
+        let rec = read_log(&path).unwrap();
+        let toks: Vec<i32> = rec
+            .entries
+            .iter()
+            .filter_map(|e| match e {
+                OpEntry::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(toks, vec![1, 2], "appends after recovery extend the same stream");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_append_failpoint_wedges_and_recovery_drops_the_tail() {
+        let path = tmp("torn");
+        let fp = Failpoints::default();
+        let mut log = Oplog::create_with_failpoints(&path, &sim_desc(), fp.clone()).unwrap();
+        log.append(&OpEntry::Token { seq: 0, token: 1 }).unwrap();
+        fp.arm(names::OPLOG_APPEND, 0, FailAction::Torn(5));
+        assert!(log.append(&OpEntry::Token { seq: 0, token: 2 }).is_err());
+        assert!(log.is_wedged());
+        assert!(log.append(&OpEntry::Token { seq: 0, token: 3 }).is_err(), "wedged stays wedged");
+        drop(log);
+
+        let (_log, rec) = Oplog::open_recover(&path).unwrap();
+        assert_eq!(rec.dropped_bytes, 5, "the torn frame's bytes are surrendered");
+        assert_eq!(rec.entries.len(), 2, "header + the one complete token");
+        // the file itself was truncated back to the good prefix
+        let again = read_log(&path).unwrap();
+        assert_eq!(again.dropped_bytes, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn non_oplog_files_are_rejected_not_recovered() {
+        let path = tmp("notalog");
+        std::fs::write(&path, b"definitely not a journal").unwrap();
+        assert!(Oplog::open_recover(&path).is_err());
+        assert!(read_log(&path).is_err());
+        std::fs::write(&path, b"PQ").unwrap();
+        assert!(Oplog::open_recover(&path).is_err(), "short magic");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,106 @@
+//! Deterministic re-execution of a captured trace (`pq replay`).
+//!
+//! The sim backend's next token is a pure function of the request's own
+//! sequence (batching-independent), and the model backend decodes greedily —
+//! so any journaled stream that finished for a DETERMINISTIC reason (length
+//! budget, stop token, cache full) must reproduce token for token on a fresh
+//! fleet, whatever the scheduling interleave.  Streams cut short by external
+//! events (cancellation, a lost worker, an error, or a crash that left them
+//! unfinished) are checked by prefix instead: the journaled tokens and the
+//! replayed tokens must agree on their common prefix.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::cluster::Router;
+
+use super::entry::{Outcome, TraceView};
+
+/// What [`replay`] observed, stream by stream.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayReport {
+    /// journaled requests re-executed
+    pub total: usize,
+    /// deterministic finishes that reproduced their tokens exactly
+    pub exact: usize,
+    /// non-deterministic records whose prefix relation held
+    pub prefix_ok: usize,
+    /// sequence numbers whose replay contradicted the journal
+    pub mismatched: Vec<u64>,
+    /// tokens produced by the replay run
+    pub replayed_tokens: usize,
+    /// wall time of the replay run
+    pub wall_s: f64,
+}
+
+impl ReplayReport {
+    /// A replay is bit-identical when no stream contradicted the journal.
+    pub fn ok(&self) -> bool {
+        self.mismatched.is_empty()
+    }
+}
+
+/// Whether `a` and `b` agree on their common prefix (either may be the
+/// longer stream).
+fn prefix_agrees(a: &[i32], b: &[i32]) -> bool {
+    let n = a.len().min(b.len());
+    a[..n] == b[..n]
+}
+
+/// Re-execute every journaled request of `view` against `router` and compare
+/// the streams (see the module docs for the exact/prefix split).  Requests
+/// are submitted in `seq` order and pipelined; the router's scheduling is
+/// free to interleave them differently from the original run — determinism
+/// comes from the backend, not the schedule.
+pub fn replay(view: &TraceView, router: &Router) -> Result<ReplayReport> {
+    let t0 = Instant::now();
+    let mut report = ReplayReport { total: view.records.len(), ..ReplayReport::default() };
+    let mut handles = Vec::with_capacity(view.records.len());
+    for rec in &view.records {
+        handles.push(router.submit(rec.req.clone())?);
+    }
+    for (rec, h) in view.records.iter().zip(handles) {
+        let got = h.collect();
+        let deterministic = rec.finish.is_some_and(|o| o.deterministic());
+        match got {
+            Ok(resp) => {
+                report.replayed_tokens += resp.tokens.len();
+                if deterministic {
+                    if resp.tokens == rec.tokens {
+                        report.exact += 1;
+                    } else {
+                        report.mismatched.push(rec.seq);
+                    }
+                } else if prefix_agrees(&resp.tokens, &rec.tokens) {
+                    report.prefix_ok += 1;
+                } else {
+                    report.mismatched.push(rec.seq);
+                }
+            }
+            Err(_) => {
+                // an error is consistent only with a journaled error outcome
+                if rec.finish == Some(Outcome::Error) {
+                    report.prefix_ok += 1;
+                } else {
+                    report.mismatched.push(rec.seq);
+                }
+            }
+        }
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_relation_is_symmetric_and_positional() {
+        assert!(prefix_agrees(&[1, 2, 3], &[1, 2]));
+        assert!(prefix_agrees(&[1, 2], &[1, 2, 3]));
+        assert!(prefix_agrees(&[], &[9]));
+        assert!(!prefix_agrees(&[1, 2, 3], &[1, 9]));
+    }
+}

@@ -80,7 +80,7 @@ impl FinishReason {
 ///
 /// Construct with [`GenRequest::new`] for the defaults (Batch priority, no
 /// deadline, no stop tokens) or [`GenRequest::builder`] for the full surface.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GenRequest {
     pub id: u64,
     pub prompt: Vec<i32>,
@@ -94,6 +94,11 @@ pub struct GenRequest {
     /// generation ends early when one of these tokens is emitted (the stop
     /// token itself is delivered, `FinishReason::Stop`)
     pub stop_tokens: Vec<i32>,
+    /// sampling seed, journaled by the oplog and threaded to the backend so a
+    /// replayed trace stays bit-identical once sampling lands (greedy decode
+    /// ignores it; the sim backend mixes it into its token hash, with 0 — the
+    /// default — leaving the hash untouched)
+    pub seed: u64,
 }
 
 impl GenRequest {
@@ -107,6 +112,7 @@ impl GenRequest {
             priority: Priority::default(),
             deadline: None,
             stop_tokens: Vec::new(),
+            seed: 0,
         }
     }
 
@@ -144,6 +150,11 @@ impl GenRequestBuilder {
 
     pub fn stop_tokens(mut self, stop_tokens: Vec<i32>) -> Self {
         self.req.stop_tokens = stop_tokens;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.req.seed = seed;
         self
     }
 
@@ -585,6 +596,7 @@ mod tests {
             .priority(Priority::Interactive)
             .deadline(Duration::from_millis(50))
             .stop_tokens(vec![9])
+            .seed(0xDEAD_BEEF)
             .build();
         assert_eq!(r.id, 7);
         assert_eq!(r.prompt, vec![1, 2, 3]);
@@ -592,10 +604,12 @@ mod tests {
         assert_eq!(r.priority, Priority::Interactive);
         assert_eq!(r.deadline, Some(Duration::from_millis(50)));
         assert_eq!(r.stop_tokens, vec![9]);
+        assert_eq!(r.seed, 0xDEAD_BEEF);
         // `new` keeps the v1 defaults
         let d = GenRequest::new(1, vec![4], 2);
         assert_eq!(d.priority, Priority::Batch);
         assert!(d.deadline.is_none() && d.stop_tokens.is_empty());
+        assert_eq!(d.seed, 0, "default seed is the identity for the sim hash");
     }
 
     #[test]
@@ -660,6 +674,21 @@ mod tests {
             for seq in 0..64u64 {
                 assert!(seen.insert(request_id::namespaced(w, seq)));
             }
+        }
+    }
+
+    /// Namespacing rewrites only the id: a request re-stamped for dispatch
+    /// keeps its journaled sampling seed, so a worker crash + re-dispatch (or
+    /// an oplog replay) decodes with the same seed the client submitted.
+    #[test]
+    fn namespacing_preserves_the_sampling_seed() {
+        let req = GenRequest::builder(0).prompt(vec![1]).max_new(4).seed(41).build();
+        for w in 0..4usize {
+            let mut wreq = req.clone();
+            wreq.id = request_id::namespaced(w, 9);
+            assert_eq!(request_id::worker_of(wreq.id), Some(w));
+            assert_eq!(request_id::seq_of(wreq.id), 9);
+            assert_eq!(wreq.seed, 41, "dispatch stamping must not touch the seed");
         }
     }
 }

@@ -51,6 +51,7 @@ use super::batcher::Batcher;
 use super::continuous::{
     ContinuousEngine, DecodeBackend, EngineStats, ModelBackend, RetryReq, SimBackend,
 };
+use super::failpoint::{names, FailAction, Failpoints};
 use super::kvcache::KvLayout;
 use super::policy::{Fcfs, SchedulePolicy};
 use super::request::{
@@ -73,6 +74,10 @@ enum Msg {
     GenStream(GenRequest, Instant, Sender<StreamEvent>),
     /// Cluster path: events go back id-tagged on the router's funnel channel.
     GenRouted(GenRequest, Instant, Sender<RoutedEvent>),
+    /// Cluster crash-recovery path: a stream that already delivered the
+    /// carried tokens elsewhere — the engine resumes it (re-prefilling
+    /// prompt + carried tokens) and emits only NEW tokens.
+    GenRoutedResumed(GenRequest, Vec<i32>, Instant, Sender<RoutedEvent>),
     Cancel(u64),
     Stats(Sender<Metrics>),
     /// Synchronous health/load snapshot — a timely answer IS the liveness
@@ -152,6 +157,10 @@ pub struct ServerConfig {
     /// resubmissions allowed per request across engine rebuilds (only
     /// requests that have produced no tokens are ever resubmitted)
     pub max_retries: usize,
+    /// fault-injection handle polled by the worker loop (`worker.crash`,
+    /// `worker.drain.crash`); unarmed by default — tests keep a clone and
+    /// arm sites to crash the worker at exact points
+    pub failpoints: Failpoints,
 }
 
 impl ServerConfig {
@@ -170,6 +179,7 @@ impl ServerConfig {
                 kv: KvLayout::Paged { page_size: 16, n_pages: 0 },
                 policy: Box::new(Fcfs),
                 max_retries: 1,
+                failpoints: Failpoints::default(),
             },
         }
     }
@@ -218,6 +228,11 @@ impl ServerConfigBuilder {
 
     pub fn max_retries(mut self, max_retries: usize) -> Self {
         self.cfg.max_retries = max_retries;
+        self
+    }
+
+    pub fn failpoints(mut self, failpoints: Failpoints) -> Self {
+        self.cfg.failpoints = failpoints;
         self
     }
 
@@ -448,6 +463,22 @@ impl Server {
             .map_err(|_| anyhow!("server is down"))
     }
 
+    /// Cluster crash-recovery submission: `generated` tokens were already
+    /// delivered to the client by a worker that has since been lost — the
+    /// engine re-prefills `prompt + generated` and streams only NEW tokens.
+    /// Requires the continuous engine (the batch engine errors the request).
+    pub fn submit_routed_resumed(
+        &self,
+        req: GenRequest,
+        generated: Vec<i32>,
+        events: Sender<RoutedEvent>,
+        submitted: Instant,
+    ) -> Result<()> {
+        self.tx
+            .send(Msg::GenRoutedResumed(req, generated, submitted, events))
+            .map_err(|_| anyhow!("server is down"))
+    }
+
     /// Ask the router-facing cancel for a namespaced id (same wire as
     /// [`RequestHandle::cancel`], without a handle).
     pub fn cancel(&self, id: u64) -> Result<()> {
@@ -586,6 +617,16 @@ fn worker_batch(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
                 Msg::GenRouted(req, submitted, tx) => {
                     waiters.insert(req.id, Reply::Routed(req.id, tx));
                     batcher.push_at(req, submitted);
+                }
+                Msg::GenRoutedResumed(req, _, _, tx) => {
+                    // mid-stream resume re-prefills into a live slot table;
+                    // the run-to-completion engine has none
+                    let _ = tx.send(RoutedEvent {
+                        id: req.id,
+                        ev: StreamEvent::Error(
+                            "stream resume requires the continuous engine".into(),
+                        ),
+                    });
                 }
                 Msg::Probe(tx) => {
                     let _ = tx.send(WorkerProbe {
@@ -839,11 +880,19 @@ fn serve_on_source<S: BackendSource>(
         engine.resubmit(r);
     }
     'outer: loop {
+        // Deterministic crash injection: one poll per serve pass, so a test
+        // can count passes and kill the worker mid-prefill or mid-decode at
+        // an exact offset.  A crash exits the thread with NOTHING settled —
+        // replies drop without terminal events, probes start failing, and
+        // the router declares the worker dead.
+        if matches!(cfg.failpoints.fire(names::WORKER_CRASH), Some(FailAction::Crash)) {
+            return ServeOutcome::Done;
+        }
         // Idle → block for a message; busy → drain whatever is queued and
         // keep stepping (admission happens inside step()).
         if !engine.has_work() {
             match rx.recv() {
-                Ok(m) => match handle_msg(m, &mut engine) {
+                Ok(m) => match handle_msg(m, &mut engine, &cfg.failpoints) {
                     Flow::Continue => {}
                     Flow::Shutdown => break 'outer,
                     Flow::Killed => return ServeOutcome::Done,
@@ -853,7 +902,7 @@ fn serve_on_source<S: BackendSource>(
         }
         loop {
             match rx.try_recv() {
-                Ok(m) => match handle_msg(m, &mut engine) {
+                Ok(m) => match handle_msg(m, &mut engine, &cfg.failpoints) {
                     Flow::Continue => {}
                     Flow::Shutdown => break 'outer,
                     Flow::Killed => return ServeOutcome::Done,
@@ -907,7 +956,11 @@ fn make_engine<S: BackendSource>(
 
 /// Feed one message to the engine; the returned [`Flow`] tells the serve
 /// loop whether (and how) to exit.
-fn handle_msg<B: DecodeBackend>(m: Msg, engine: &mut ContinuousEngine<B>) -> Flow {
+fn handle_msg<B: DecodeBackend>(
+    m: Msg,
+    engine: &mut ContinuousEngine<B>,
+    failpoints: &Failpoints,
+) -> Flow {
     match m {
         Msg::Gen(req, submitted, tx) => {
             engine.submit(req, Reply::Aggregate(tx), submitted);
@@ -920,6 +973,11 @@ fn handle_msg<B: DecodeBackend>(m: Msg, engine: &mut ContinuousEngine<B>) -> Flo
         Msg::GenRouted(req, submitted, tx) => {
             let id = req.id;
             engine.submit(req, Reply::Routed(id, tx), submitted);
+            Flow::Continue
+        }
+        Msg::GenRoutedResumed(req, generated, submitted, tx) => {
+            let id = req.id;
+            engine.submit_resumed(req, generated, Reply::Routed(id, tx), submitted);
             Flow::Continue
         }
         Msg::Cancel(id) => {
@@ -936,6 +994,11 @@ fn handle_msg<B: DecodeBackend>(m: Msg, engine: &mut ContinuousEngine<B>) -> Flo
             Flow::Continue
         }
         Msg::Drain(tx) => {
+            if matches!(failpoints.fire(names::WORKER_DRAIN_CRASH), Some(FailAction::Crash)) {
+                // die before answering: the caller's drain times out, and
+                // the router falls back to declaring the worker dead
+                return Flow::Killed;
+            }
             let _ = tx.send(engine.release_for_drain());
             Flow::Continue
         }
@@ -959,7 +1022,7 @@ fn drain_failing(rx: &Receiver<Msg>, msg: &str, last_metrics: Metrics) {
             Msg::GenStream(_, _, tx) => {
                 let _ = tx.send(StreamEvent::Error(msg.to_string()));
             }
-            Msg::GenRouted(req, _, tx) => {
+            Msg::GenRouted(req, _, tx) | Msg::GenRoutedResumed(req, _, _, tx) => {
                 let _ = tx
                     .send(RoutedEvent { id: req.id, ev: StreamEvent::Error(msg.to_string()) });
             }

@@ -15,11 +15,18 @@
 //!                                  the server always boots from an artifact
 //!                                  (`--load`, or quantize-once + save)
 //!   serve     [--model M] [--scheme S] [--load DIR] [--workers N]
-//!             [--policy P] [--requests R] [--max-new T]
+//!             [--policy P] [--requests R] [--max-new T] [--oplog PATH]
 //!                                — boot a router-fronted worker fleet from
 //!                                  one artifact and drive a demo workload;
 //!                                  policies: round-robin, least-loaded,
-//!                                  prefix-affinity (default)
+//!                                  prefix-affinity (default); `--oplog`
+//!                                  journals every admission/token/outcome
+//!                                  to PATH and turns stream resume on
+//!   replay    <oplog> [--workers N]
+//!                                — re-execute a captured trace on a fresh
+//!                                  fleet (booted per the journal's backend
+//!                                  header; sim traces need no artifacts)
+//!                                  and verify the streams bit-identically
 //!
 //! Schemes: fp16, rtn, quarot, smoothquant, atom, prefixquant-wo-ft,
 //! prefixquant (default bit-widths W4A4KV4; --bits w,a,kv overrides).
@@ -30,8 +37,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 use prefixquant::coordinator::{
-    DispatchPolicy, GenRequest, LeastLoaded, PrefixAffinity, RoundRobin, Router, RouterConfig,
-    Server, ServerConfig,
+    read_log, replay, BackendDesc, DispatchPolicy, GenRequest, LeastLoaded, Oplog,
+    PrefixAffinity, RoundRobin, Router, RouterConfig, Server, ServerConfig, SimBackend,
+    TraceView,
 };
 use prefixquant::data::{self, Language};
 use prefixquant::eval;
@@ -337,7 +345,16 @@ fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
         })
         .collect::<Result<Vec<_>>>()?;
     let policy = dispatch_policy(&policy_name)?;
-    let router = Router::new(workers, RouterConfig::default().policy(policy))?;
+    let mut rcfg = RouterConfig::default().policy(policy);
+    if let Some(log_path) = args.get("oplog") {
+        let log = Oplog::create(
+            std::path::Path::new(log_path),
+            &BackendDesc::Artifact { path: artifact_dir.to_string_lossy().into_owned() },
+        )?;
+        eprintln!("journaling to {log_path} (stream resume on); replay with: pq replay {log_path}");
+        rcfg = rcfg.oplog(log);
+    }
+    let router = Router::new(workers, rcfg)?;
 
     // demo workload with shared prompt prefixes: requests cycle through a few
     // conversation groups, each group sharing a long prefix with unique tails
@@ -413,9 +430,85 @@ fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Re-execute a captured oplog trace on a fresh fleet and verify it (see
+/// the `replay` entry in the module docs).  The fleet is booted from the
+/// journal's own backend header: sim traces need no artifacts at all, so
+/// this runs BEFORE the artifact context is created.
+fn cmd_replay(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: pq replay <oplog> [--workers N]"))?
+        .clone();
+    let rec = read_log(std::path::Path::new(&path))?;
+    if rec.dropped_bytes > 0 {
+        eprintln!("{path}: ignoring a torn tail of {} byte(s)", rec.dropped_bytes);
+    }
+    let view = TraceView::from_entries(&rec.entries);
+    let n_workers = args.usize_or("workers", 2)?.max(1);
+    let workers: Vec<Server> = match &view.backend {
+        Some(BackendDesc::Sim { b_exec, s_exec, n_prefix, cache_max }) => {
+            let (b, s, p, m) =
+                (*b_exec as usize, *s_exec as usize, *n_prefix as usize, *cache_max as usize);
+            (0..n_workers)
+                .map(|_| {
+                    Server::start_sim(
+                        move || Ok(SimBackend::new(b, s, p, m)),
+                        ServerConfig::builder(prefixquant::model::QuantMode::Static)
+                            .batch_window(Duration::from_millis(1))
+                            .build(),
+                    )
+                })
+                .collect::<Result<_>>()?
+        }
+        Some(BackendDesc::Artifact { path: artifact_dir }) => {
+            let c = ctx()?;
+            (0..n_workers)
+                .map(|_| {
+                    Server::start_from_artifact(
+                        prefixquant::artifacts_dir(),
+                        PathBuf::from(artifact_dir),
+                        worker_config(&c, 4),
+                    )
+                })
+                .collect::<Result<_>>()?
+        }
+        None => bail!("{path}: journal has no backend header — nothing to boot for replay"),
+    };
+    let router = Router::new(workers, RouterConfig::default())?;
+    eprintln!(
+        "replaying {} journaled request(s) on {n_workers} fresh worker(s) \
+         ({} worker-loss event(s) in the original run)...",
+        view.records.len(),
+        view.worker_events
+    );
+    let report = replay(&view, &router)?;
+    router.shutdown();
+    println!(
+        "replay: {} request(s), {} exact, {} prefix-consistent, {} mismatched, \
+         {} token(s) in {:.2}s",
+        report.total,
+        report.exact,
+        report.prefix_ok,
+        report.mismatched.len(),
+        report.replayed_tokens,
+        report.wall_s
+    );
+    if !report.ok() {
+        bail!("replay diverged from the journal on seq(s) {:?}", report.mismatched);
+    }
+    println!("replay is consistent with the journal");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    // replay boots from the journal's own header; a sim trace must work with
+    // no artifacts on disk, so the Engine context is not created up front
+    if cmd == "replay" {
+        return cmd_replay(&args);
+    }
     let c = ctx()?;
     match cmd {
         "info" => cmd_info(&c),
@@ -424,6 +517,6 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&c, &args),
         "gen" => cmd_gen(&c, &args),
         "serve" => cmd_serve(&c, &args),
-        other => bail!("unknown command {other:?} (info|outliers|quantize|eval|gen|serve)"),
+        other => bail!("unknown command {other:?} (info|outliers|quantize|eval|gen|serve|replay)"),
     }
 }

@@ -1,0 +1,554 @@
+//! Durable-oplog tests: torn-write recovery at every byte boundary, crash
+//! recovery with token-identical stream resume (randomized crash offsets),
+//! the deterministic fault-injection matrix, and bit-identical trace replay.
+//! All run on `SimBackend` workers — no artifacts required.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use prefixquant::coordinator::continuous::run_to_completion;
+use prefixquant::coordinator::failpoint::names;
+use prefixquant::coordinator::oplog::frame;
+use prefixquant::coordinator::{
+    read_log, replay, BackendDesc, FailAction, Failpoints, FinishReason, GenRequest, GenResponse,
+    Oplog, Router, RouterConfig, Server, ServerConfig, SimBackend, StreamEvent, TraceView,
+};
+use prefixquant::model::QuantMode;
+use prefixquant::util::prop::{check, Gen};
+
+// ------------------------------------------------------------------ fleet rig
+
+const B_EXEC: usize = 1;
+const S_EXEC: usize = 16;
+const N_PREFIX: usize = 1;
+const CACHE_MAX: usize = 128;
+
+fn sim_desc() -> BackendDesc {
+    BackendDesc::Sim {
+        b_exec: B_EXEC as u32,
+        s_exec: S_EXEC as u32,
+        n_prefix: N_PREFIX as u32,
+        cache_max: CACHE_MAX as u32,
+    }
+}
+
+/// One sim worker with the [`sim_desc`] geometry and `decode_ms` per round.
+fn sim_worker(decode_ms: u64) -> Server {
+    let cfg = ServerConfig::builder(QuantMode::Static)
+        .batch_window(Duration::from_millis(1))
+        .build();
+    Server::start_sim(
+        move || {
+            Ok(SimBackend::new(B_EXEC, S_EXEC, N_PREFIX, CACHE_MAX)
+                .with_costs(Duration::ZERO, Duration::from_millis(decode_ms)))
+        },
+        cfg,
+    )
+    .expect("sim worker boots")
+}
+
+/// [`sim_worker`] wired to a shared fault-injection handle: the backend AND
+/// the serve loop poll `failpoints`, so tests can crash this worker at exact
+/// prefill/decode/drain offsets.
+fn faulty_worker(decode_ms: u64, failpoints: Failpoints) -> Server {
+    let cfg = ServerConfig::builder(QuantMode::Static)
+        .batch_window(Duration::from_millis(1))
+        .failpoints(failpoints.clone())
+        .build();
+    Server::start_sim(
+        move || {
+            Ok(SimBackend::new(B_EXEC, S_EXEC, N_PREFIX, CACHE_MAX)
+                .with_costs(Duration::ZERO, Duration::from_millis(decode_ms))
+                .with_failpoints(failpoints.clone()))
+        },
+        cfg,
+    )
+    .expect("sim worker boots")
+}
+
+/// Reference stream for `req` on a fresh backend with the same geometry —
+/// the token-identity oracle for every resume/replay assertion.
+fn reference(req: &GenRequest) -> GenResponse {
+    let be = SimBackend::new(B_EXEC, S_EXEC, N_PREFIX, CACHE_MAX);
+    run_to_completion(&be, std::slice::from_ref(req)).expect("reference run").remove(0)
+}
+
+fn test_prompt(i: usize) -> Vec<i32> {
+    vec![10 + i as i32, 40 + i as i32, 70 + i as i32, 100 + i as i32]
+}
+
+fn drain_to_done(rx: &std::sync::mpsc::Receiver<StreamEvent>) -> Result<GenResponse, String> {
+    loop {
+        match rx.recv() {
+            Ok(StreamEvent::Token(_)) => {}
+            Ok(StreamEvent::Done(resp)) => return Ok(resp),
+            Ok(StreamEvent::Error(e)) => return Err(e),
+            Err(_) => return Err("stream dropped".into()),
+        }
+    }
+}
+
+/// Unique temp path per call (tests run concurrently in one process).
+fn tmp(name: &str) -> std::path::PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let mut p = std::env::temp_dir();
+    p.push(format!(
+        "pq-oplog-test-{name}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    p
+}
+
+// ------------------------------------------------------------ torn-tail sweep
+
+/// Damage the final frame of a real journal at EVERY byte boundary — first by
+/// truncation, then by single-bit flips — and require recovery to keep every
+/// complete entry, report the dropped tail, and never panic.
+#[test]
+fn torn_tail_sweep_truncation_and_bit_flips_at_every_byte() {
+    let path = tmp("torn-sweep");
+    let log = Oplog::create(&path, &sim_desc()).unwrap();
+    let router =
+        Router::new(vec![sim_worker(0), sim_worker(0)], RouterConfig::default().oplog(log))
+            .unwrap();
+    let handles: Vec<_> =
+        (0..4).map(|i| router.submit(GenRequest::new(0, test_prompt(i), 5)).unwrap()).collect();
+    for h in handles {
+        h.collect().expect("workload completes");
+    }
+    router.shutdown();
+
+    let full = read_log(&path).unwrap();
+    assert_eq!(full.dropped_bytes, 0, "a cleanly shut-down journal has no torn tail");
+    let bytes = std::fs::read(&path).unwrap();
+    let scan = frame::scan(&bytes[frame::MAGIC.len()..]);
+    let n_frames = scan.frames.len();
+    assert_eq!(n_frames, full.entries.len());
+    let last_len = frame::FRAME_HEADER + scan.frames.last().unwrap().len();
+    let last_start = bytes.len() - last_len;
+
+    // truncation at every byte boundary of the final frame: the complete
+    // prefix survives, the partial frame is reported as dropped
+    let cut_path = tmp("torn-cut");
+    for cut in last_start..bytes.len() {
+        std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+        let rec = read_log(&cut_path).unwrap();
+        assert_eq!(rec.entries.len(), n_frames - 1, "cut at {cut}");
+        assert_eq!(rec.entries, full.entries[..n_frames - 1], "cut at {cut}");
+        assert_eq!(rec.dropped_bytes, (cut - last_start) as u64, "cut at {cut}");
+        // open_recover truncates the file back to the good prefix in place
+        let (_log, rec2) = Oplog::open_recover(&cut_path).unwrap();
+        assert_eq!(rec2.entries.len(), n_frames - 1, "cut at {cut}");
+        assert_eq!(std::fs::metadata(&cut_path).unwrap().len(), last_start as u64);
+    }
+
+    // single-bit flips at every byte of the final frame: never a panic, and
+    // every frame before the damaged one survives intact
+    let flip_path = tmp("torn-flip");
+    for pos in last_start..bytes.len() {
+        let mut damaged = bytes.clone();
+        damaged[pos] ^= 0x01;
+        std::fs::write(&flip_path, &damaged).unwrap();
+        let rec = read_log(&flip_path).unwrap();
+        assert!(rec.entries.len() >= n_frames - 1, "flip at {pos} lost a complete entry");
+        assert_eq!(
+            rec.entries[..n_frames - 1],
+            full.entries[..n_frames - 1],
+            "flip at {pos} corrupted an untouched frame"
+        );
+    }
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&cut_path).ok();
+    std::fs::remove_file(&flip_path).ok();
+}
+
+// ------------------------------------------------- in-place resume (no crash)
+
+/// Kill a worker mid-decode with journaling on: the token-producing stream
+/// must RESUME on the survivor (not finish `WorkerLost`), token-identical to
+/// the single-worker reference, and the journal must hold the full trace.
+#[test]
+fn killed_worker_streams_resume_on_the_survivor_token_identically() {
+    let path = tmp("kill-resume");
+    let log = Oplog::create(&path, &sim_desc()).unwrap();
+    // worker 0: 20ms per decode round, so its active stream is killed
+    // mid-flight; worker 1: instant
+    let router =
+        Router::new(vec![sim_worker(20), sim_worker(0)], RouterConfig::default().oplog(log))
+            .unwrap();
+    let n = 8;
+    let reqs: Vec<GenRequest> =
+        (0..n).map(|i| GenRequest::new(0, test_prompt(i), 12)).collect();
+    let handles: Vec<_> = reqs.iter().map(|r| router.submit(r.clone()).unwrap()).collect();
+
+    // wait until worker 0's active stream has produced a token, then kill it
+    match handles[0].recv().expect("first token from worker 0") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token first, got {ev:?}"),
+    }
+    router.kill_worker(0).expect("kill reaches the worker");
+
+    // EVERY stream — including the one that was mid-decode on the killed
+    // worker — finishes normally and token-identical to the reference
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = drain_to_done(h.receiver()).expect("stream completes despite the kill");
+        assert_eq!(resp.finish, FinishReason::Length, "seq {i} finished normally");
+        assert_eq!(resp.tokens, reference(&reqs[i]).tokens, "seq {i} is token-identical");
+    }
+
+    let f = router.report().unwrap().fleet;
+    assert_eq!(f.submitted, n);
+    assert_eq!(f.completed, n, "no stream was downgraded to WorkerLost");
+    assert_eq!(f.worker_lost, 0, "resume replaced every WorkerLost terminal");
+    assert_eq!(f.stream_resumes, 1, "exactly the mid-decode stream resumed");
+    assert_eq!(f.unresolved(), 0, "ledger accounts for every request");
+    assert_eq!(f.workers_killed, 1);
+    router.shutdown();
+
+    // the journal captured the whole story: 8 finished records, a worker-loss
+    // event, and a resume decision — and a fresh fleet replays it exactly
+    let rec = read_log(&path).unwrap();
+    assert_eq!(rec.dropped_bytes, 0);
+    let view = TraceView::from_entries(&rec.entries);
+    assert_eq!(view.records.len(), n);
+    assert!(view.unfinished().next().is_none(), "every record reached a terminal");
+    assert_eq!(view.worker_events, 1);
+    assert!(view.records.iter().any(|r| r.dispatches >= 2), "the resumed stream re-dispatched");
+
+    let router2 =
+        Router::new(vec![sim_worker(0), sim_worker(0)], RouterConfig::default()).unwrap();
+    let report = replay(&view, &router2).unwrap();
+    router2.shutdown();
+    assert!(report.ok(), "replay diverged on seq(s) {:?}", report.mismatched);
+    assert_eq!(report.exact, n, "a crashy trace still replays bit-identically");
+    std::fs::remove_file(&path).ok();
+}
+
+// --------------------------------------------------- full crash + recover()
+
+/// Property: crash the whole router at a randomized journaled offset
+/// mid-decode, recover on a fresh fleet, and every resumed stream finishes
+/// token-identical to the reference with zero `WorkerLost` terminals and a
+/// balanced ledger.
+#[test]
+fn crash_recovery_resumes_streams_token_identically_at_any_offset() {
+    check(
+        "oplog-crash-recovery",
+        8,
+        |g: &mut Gen| (g.usize_in(1, 4), g.usize_in(0, 1 << 16), g.usize_in(5, 9)),
+        |&(k_tokens, seed, max_new)| {
+            let path = tmp("crash-prop");
+            let log = Oplog::create(&path, &sim_desc()).map_err(|e| e.to_string())?;
+            let router = Router::new(vec![sim_worker(5)], RouterConfig::default().oplog(log))
+                .map_err(|e| e.to_string())?;
+            let reqs: Vec<GenRequest> = (0..3)
+                .map(|i| {
+                    GenRequest::builder(0)
+                        .prompt(test_prompt(i))
+                        .max_new(max_new)
+                        .seed(seed as u64 * 7 + i as u64)
+                        .build()
+                })
+                .collect();
+            let handles: Vec<_> =
+                reqs.iter().map(|r| router.submit(r.clone()).unwrap()).collect();
+            // consume k tokens of the active stream, then crash the fleet at
+            // exactly that journaled offset
+            for _ in 0..k_tokens.min(max_new - 1) {
+                match handles[0].recv() {
+                    Ok(StreamEvent::Token(_)) => {}
+                    ev => return Err(format!("expected a token, got {ev:?}")),
+                }
+            }
+            router.simulate_crash();
+            drop(handles);
+
+            let (router2, resumed) =
+                Router::recover(vec![sim_worker(0)], RouterConfig::default(), &path)
+                    .map_err(|e| format!("recover: {e:#}"))?;
+            if resumed.is_empty() {
+                // only legitimate if a scheduling stall let the WHOLE
+                // workload finish before the crash landed — the journal
+                // must agree there is nothing left to resume
+                let rec = read_log(&path).map_err(|e| e.to_string())?;
+                let view = TraceView::from_entries(&rec.entries);
+                if view.unfinished().next().is_some() {
+                    return Err("recover() returned no handles for unfinished records".into());
+                }
+                router2.shutdown();
+                std::fs::remove_file(&path).ok();
+                return Ok(());
+            }
+            for h in resumed {
+                let seq = h.id() as usize;
+                let resp = h.collect().map_err(|e| format!("seq {seq}: {e:#}"))?;
+                if resp.finish != FinishReason::Length {
+                    return Err(format!(
+                        "seq {seq} finished {:?}, not Length — a journaled stream was lost",
+                        resp.finish
+                    ));
+                }
+                let want = reference(&reqs[seq]).tokens;
+                if resp.tokens != want {
+                    return Err(format!(
+                        "seq {seq} not token-identical: {:?} != {:?}",
+                        resp.tokens, want
+                    ));
+                }
+            }
+            let f = router2.report().map_err(|e| e.to_string())?.fleet;
+            if f.worker_lost != 0 {
+                return Err(format!("{} WorkerLost terminals after recovery", f.worker_lost));
+            }
+            if f.unresolved() != 0 {
+                return Err(format!("{} unresolved requests in the ledger", f.unresolved()));
+            }
+            router2.shutdown();
+            std::fs::remove_file(&path).ok();
+            Ok(())
+        },
+    );
+}
+
+/// A recovered journal keeps accepting appends: run a workload, crash,
+/// recover, run MORE work through the recovered router, and the final journal
+/// holds both generations with no torn bytes.
+#[test]
+fn recovered_journal_extends_across_router_generations() {
+    let path = tmp("generations");
+    let log = Oplog::create(&path, &sim_desc()).unwrap();
+    let router = Router::new(vec![sim_worker(5)], RouterConfig::default().oplog(log)).unwrap();
+    let h = router.submit(GenRequest::new(0, test_prompt(0), 8)).unwrap();
+    match h.recv().expect("first token") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token, got {ev:?}"),
+    }
+    router.simulate_crash();
+
+    let (router2, resumed) =
+        Router::recover(vec![sim_worker(0)], RouterConfig::default(), &path).unwrap();
+    assert_eq!(resumed.len(), 1, "the in-flight stream is the recovery worklist");
+    // second-generation traffic gets sequence numbers ABOVE the journaled ones
+    let h2 = router2.submit(GenRequest::new(0, test_prompt(9), 4)).unwrap();
+    assert!(h2.id() >= 1, "recovered sequence counter restarts above the journal");
+    for h in resumed {
+        let resp = h.collect().expect("resumed stream completes");
+        assert_eq!(resp.tokens, reference(&GenRequest::new(0, test_prompt(0), 8)).tokens);
+    }
+    h2.collect().expect("second-generation stream completes");
+    router2.shutdown();
+
+    let view = TraceView::from_entries(&read_log(&path).unwrap().entries);
+    assert_eq!(view.records.len(), 2, "both generations share one journal");
+    assert!(view.unfinished().next().is_none());
+    std::fs::remove_file(&path).ok();
+}
+
+// ------------------------------------------------------- failpoint matrix
+
+/// `sim.prefill` Error: the engine rebuild path resubmits the token-less
+/// request and the stream survives, token-identical.
+#[test]
+fn prefill_failpoint_rebuilds_the_engine_and_the_stream_survives() {
+    let fp = Failpoints::default();
+    let server = faulty_worker(0, fp.clone());
+    fp.arm(names::SIM_PREFILL, 0, FailAction::Error);
+    let req = GenRequest::new(0, test_prompt(0), 6);
+    let resp = server.generate(req.clone()).expect("rebuild resubmits the token-less request");
+    assert_eq!(resp.tokens, reference(&req).tokens, "recovery is token-identical");
+    assert_eq!(fp.fired(names::SIM_PREFILL), 1, "the injected fault actually fired");
+    server.shutdown();
+}
+
+/// `sim.decode` Error behind the router with resume on: the worker's engine
+/// rebuild errors the token-producing stream, and the router resumes it from
+/// its journaled tokens instead of surfacing the error.
+#[test]
+fn decode_failpoint_mid_stream_is_absorbed_by_stream_resume() {
+    let fp = Failpoints::default();
+    let path = tmp("decode-fault");
+    let log = Oplog::create(&path, &sim_desc()).unwrap();
+    let router = Router::new(
+        vec![faulty_worker(5, fp.clone()), sim_worker(0)],
+        RouterConfig::default().oplog(log),
+    )
+    .unwrap();
+    let req = GenRequest::new(0, test_prompt(3), 10);
+    let h = router.submit(req.clone()).unwrap();
+    match h.recv().expect("first token") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token, got {ev:?}"),
+    }
+    // fail the next decode call: the stream has tokens, so the worker's own
+    // rebuild cannot resubmit it — only the router's resume path can save it
+    fp.arm(names::SIM_DECODE, 0, FailAction::Error);
+    let resp = drain_to_done(h.receiver()).expect("stream resumed after the decode fault");
+    assert_eq!(resp.finish, FinishReason::Length);
+    assert_eq!(resp.tokens, reference(&req).tokens, "resumed stream is token-identical");
+    let f = router.report().unwrap().fleet;
+    assert_eq!(f.worker_lost, 0);
+    assert_eq!(f.unresolved(), 0);
+    assert!(f.stream_resumes >= 1, "the error retry re-dispatched with tokens");
+    router.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// `worker.crash` mid-decode: the worker thread exits silently, probes fail,
+/// the router declares it dead and resumes its streams on the survivor.
+#[test]
+fn worker_crash_failpoint_mid_decode_resumes_on_the_survivor() {
+    let fp = Failpoints::default();
+    let path = tmp("worker-crash");
+    let log = Oplog::create(&path, &sim_desc()).unwrap();
+    let router = Router::new(
+        vec![faulty_worker(10, fp.clone()), sim_worker(0)],
+        RouterConfig::default()
+            .oplog(log)
+            .health_interval(Duration::from_millis(5))
+            .probe_timeout(Duration::from_millis(250)),
+    )
+    .unwrap();
+    let n = 6;
+    let reqs: Vec<GenRequest> =
+        (0..n).map(|i| GenRequest::new(0, test_prompt(i), 10)).collect();
+    let handles: Vec<_> = reqs.iter().map(|r| router.submit(r.clone()).unwrap()).collect();
+    match handles[0].recv().expect("first token from worker 0") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token first, got {ev:?}"),
+    }
+    // crash worker 0 on its next serve pass — mid-decode, nothing settled
+    fp.arm(names::WORKER_CRASH, 0, FailAction::Crash);
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = drain_to_done(h.receiver()).expect("stream completes despite the crash");
+        assert_eq!(resp.finish, FinishReason::Length, "seq {i}");
+        assert_eq!(resp.tokens, reference(&reqs[i]).tokens, "seq {i} is token-identical");
+    }
+    let f = router.report().unwrap().fleet;
+    assert_eq!(f.worker_lost, 0, "resume turned every would-be WorkerLost into a resume");
+    assert_eq!(f.unresolved(), 0);
+    assert_eq!(f.workers_dead, 1, "the crashed worker was declared dead");
+    assert_eq!(fp.fired(names::WORKER_CRASH), 1);
+    router.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// `worker.drain.crash`: the worker dies before answering a drain request;
+/// the drain errors, the worker is declared dead, and its streams resume.
+#[test]
+fn drain_crash_failpoint_downgrades_the_drain_to_a_loss_without_losing_streams() {
+    let fp = Failpoints::default();
+    let router = Router::new(
+        vec![faulty_worker(10, fp.clone()), sim_worker(0)],
+        RouterConfig::default()
+            .resume_streams(true)
+            .probe_timeout(Duration::from_millis(200)),
+    )
+    .unwrap();
+    let n = 4;
+    let reqs: Vec<GenRequest> =
+        (0..n).map(|i| GenRequest::new(0, test_prompt(i), 10)).collect();
+    let handles: Vec<_> = reqs.iter().map(|r| router.submit(r.clone()).unwrap()).collect();
+    match handles[0].recv().expect("first token from worker 0") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token first, got {ev:?}"),
+    }
+    fp.arm(names::WORKER_DRAIN_CRASH, 0, FailAction::Crash);
+    let err = router.drain_worker(0);
+    assert!(err.is_err(), "a drain the worker never answers must error, not hang");
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = drain_to_done(h.receiver()).expect("stream completes despite the crash");
+        assert_eq!(resp.finish, FinishReason::Length, "seq {i}");
+        assert_eq!(resp.tokens, reference(&reqs[i]).tokens, "seq {i} is token-identical");
+    }
+    let f = router.report().unwrap().fleet;
+    assert_eq!(f.worker_lost, 0);
+    assert_eq!(f.unresolved(), 0);
+    assert_eq!(f.workers_dead, 1, "the unanswerable drain downgraded to a dead verdict");
+    router.shutdown();
+}
+
+/// `oplog.append` Torn: a failed journal append wedges the log and the router
+/// downgrades to journal-less serving — requests keep completing, and the
+/// file holds a clean prefix plus exactly the injected torn bytes.
+#[test]
+fn torn_journal_append_downgrades_to_journal_less_serving() {
+    let fp = Failpoints::default();
+    let path = tmp("downgrade");
+    let log = Oplog::create_with_failpoints(&path, &sim_desc(), fp.clone()).unwrap();
+    let router = Router::new(vec![sim_worker(0)], RouterConfig::default().oplog(log)).unwrap();
+    let first = GenRequest::new(0, test_prompt(0), 5);
+    router.submit(first.clone()).unwrap().collect().expect("journaled request completes");
+    // tear the NEXT append 3 bytes in: journaling stops, serving must not
+    fp.arm(names::OPLOG_APPEND, 0, FailAction::Torn(3));
+    for i in 1..4 {
+        let req = GenRequest::new(0, test_prompt(i), 5);
+        let resp =
+            router.submit(req.clone()).unwrap().collect().expect("journal-less serving works");
+        assert_eq!(resp.tokens, reference(&req).tokens);
+    }
+    let f = router.report().unwrap().fleet;
+    assert_eq!(f.unresolved(), 0);
+    router.shutdown();
+
+    let rec = read_log(&path).unwrap();
+    assert_eq!(rec.dropped_bytes, 3, "exactly the injected torn bytes are surrendered");
+    let view = TraceView::from_entries(&rec.entries);
+    assert_eq!(view.records.len(), 1, "only the pre-fault request reached the journal");
+    assert!(view.records[0].finish.is_some(), "its full lifecycle was journaled");
+    assert_eq!(view.records[0].tokens, reference(&first).tokens);
+    std::fs::remove_file(&path).ok();
+}
+
+// ------------------------------------------------------------------- replay
+
+/// A clean trace (seeded, mixed-length requests over two workers) replays
+/// bit-identically on a DIFFERENTLY-SHAPED fresh fleet, and the journal's
+/// per-request token streams match what the clients saw.
+#[test]
+fn replay_reproduces_a_clean_trace_bit_identically() {
+    let path = tmp("replay-clean");
+    let log = Oplog::create(&path, &sim_desc()).unwrap();
+    let router =
+        Router::new(vec![sim_worker(0), sim_worker(0)], RouterConfig::default().oplog(log))
+            .unwrap();
+    let n = 6;
+    let reqs: Vec<GenRequest> = (0..n)
+        .map(|i| {
+            GenRequest::builder(0)
+                .prompt(test_prompt(i))
+                .max_new(5 + i % 3)
+                .seed(0xA0 + i as u64)
+                .build()
+        })
+        .collect();
+    let handles: Vec<_> = reqs.iter().map(|r| router.submit(r.clone()).unwrap()).collect();
+    let collected: Vec<Vec<i32>> =
+        handles.into_iter().map(|h| h.collect().expect("stream completes").tokens).collect();
+    router.shutdown();
+
+    let rec = read_log(&path).unwrap();
+    assert_eq!(rec.dropped_bytes, 0);
+    let view = TraceView::from_entries(&rec.entries);
+    assert_eq!(view.records.len(), n);
+    assert!(view.unfinished().next().is_none(), "clean shutdown settles the journal");
+    for (i, r) in view.records.iter().enumerate() {
+        assert_eq!(r.tokens, collected[i], "journal carries seq {i}'s exact stream");
+        assert_eq!(r.req.seed, 0xA0 + i as u64, "journal preserves the sampling seed");
+    }
+
+    // three workers instead of two: scheduling differs, streams must not
+    let router2 = Router::new(
+        vec![sim_worker(0), sim_worker(0), sim_worker(0)],
+        RouterConfig::default(),
+    )
+    .unwrap();
+    let report = replay(&view, &router2).unwrap();
+    router2.shutdown();
+    assert!(report.ok(), "replay diverged on seq(s) {:?}", report.mismatched);
+    assert_eq!(report.total, n);
+    assert_eq!(report.exact, n, "every deterministic finish reproduced exactly");
+    assert!(report.replayed_tokens >= n * 5);
+    std::fs::remove_file(&path).ok();
+}
