@@ -3,14 +3,15 @@
 //! (75% of requests drawn from 8 conversation groups that share a 24-token
 //! prompt prefix, 25% fully unique).
 //!
-//! The page-hit accounting is policy-independent: a per-worker radix-cache
-//! model (bounded LRU of 8-token prefix blocks, capacity 12 blocks — small
-//! enough that one worker cannot hold all 8 groups) is fed with each
-//! worker's ACTUAL dispatch assignment, taken from the namespaced response
-//! ids.  Prefix-affinity keeps each group's blocks hot on one worker;
-//! round-robin smears every group across all caches and thrashes the
-//! capacity bound.  The same model scores every policy, so the comparison
-//! is honest — the router's own affinity counters are reported separately.
+//! The page-hit accounting comes from the REAL radix prefix cache: every
+//! worker runs with `ServerConfig::radix_cache(true)` over a page-starved
+//! paged pool (32 pages of 8 tokens — small enough that one worker cannot
+//! keep all 8 groups resident), and each policy is scored by the fleet's
+//! merged `radix_hit_tokens` counter: cache positions admission actually
+//! served from mapped pages instead of prefill.  Prefix-affinity keeps each
+//! group's pages hot on one worker; round-robin smears every group across
+//! all four trees and thrashes the LRU.  The router's own affinity counters
+//! are reported separately.
 //!
 //!   cargo bench --bench router_fleet            # full run
 //!   cargo bench --bench router_fleet -- --smoke # CI perf trail
@@ -19,14 +20,12 @@
 //! PrefixAffinity ≥1.3x the shared-prefix page-hit rate of RoundRobin, with
 //! strictly fewer net (cold) prefill tokens.  No artifacts required.
 
-use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use prefixquant::bench_support::{emit_bench_json, smoke_mode};
-use prefixquant::coordinator::request::request_id;
 use prefixquant::coordinator::{
-    DispatchPolicy, GenRequest, LeastLoaded, PrefixAffinity, RoundRobin, Router, RouterConfig,
-    Server, ServerConfig, SimBackend,
+    DispatchPolicy, GenRequest, KvLayout, LeastLoaded, PrefixAffinity, RoundRobin, Router,
+    RouterConfig, Server, ServerConfig, SimBackend,
 };
 use prefixquant::model::QuantMode;
 use prefixquant::util::args::Args;
@@ -42,19 +41,23 @@ const N_GROUPS: usize = 8;
 const GROUP_PREFIX: usize = 24;
 const TAIL: usize = 4;
 const MAX_NEW: usize = 8;
-/// radix-model block size (tokens per cached prefix block)
-const BLOCK: usize = 8;
-/// radix-model capacity per worker, in blocks: holds 4 of the 8 groups
-const CACHE_BLOCKS: usize = 12;
+/// KV page size — one radix-tree node per completed 8-token chunk
+const PAGE: usize = 8;
+/// per-worker pool: 4 slots × 5 worst-case pages + 1 prefix page leaves
+/// ~11 pages of tree budget — 8 groups need 24 shared pages, so no single
+/// worker can keep every group hot
+const POOL_PAGES: usize = 32;
 
 fn sim_worker() -> Server {
     let cfg = ServerConfig::builder(QuantMode::Static)
         .batch_window(Duration::from_millis(1))
+        .radix_cache(true)
         .build();
     Server::start_sim(
         move || {
             Ok(SimBackend::new(B_EXEC, S_EXEC, N_PREFIX, CACHE_MAX)
-                .with_costs(Duration::from_micros(300), Duration::from_micros(200)))
+                .with_costs(Duration::from_micros(300), Duration::from_micros(200))
+                .with_kv_layout(KvLayout::Paged { page_size: PAGE, n_pages: POOL_PAGES }))
         },
         cfg,
     )
@@ -87,65 +90,16 @@ fn workload(n: usize, seed: u64) -> Vec<GenRequest> {
         .collect()
 }
 
-/// FNV-1a chain over the prompt, one hash per completed BLOCK — the same
-/// block identity a radix cache would key pages by.
-fn block_hashes(prompt: &[i32]) -> Vec<u64> {
-    let mut h: u64 = 0xcbf29ce484222325;
-    let mut out = Vec::new();
-    for (i, &t) in prompt.iter().enumerate() {
-        for b in t.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-        if (i + 1) % BLOCK == 0 {
-            out.push(h);
-        }
-    }
-    out
-}
-
-/// Bounded LRU of prefix blocks: the radix-cache stand-in for one worker.
-struct BlockCache {
-    order: VecDeque<u64>,
-}
-
-impl BlockCache {
-    fn new() -> BlockCache {
-        BlockCache { order: VecDeque::new() }
-    }
-
-    /// Longest run of leading blocks already cached (the pages a radix cache
-    /// would serve hot), then install/refresh every block.
-    fn hit_blocks_and_insert(&mut self, hashes: &[u64]) -> usize {
-        let mut hits = 0;
-        for h in hashes {
-            if self.order.contains(h) {
-                hits += 1;
-            } else {
-                break;
-            }
-        }
-        for &h in hashes {
-            if let Some(pos) = self.order.iter().position(|&x| x == h) {
-                self.order.remove(pos);
-            }
-            self.order.push_back(h);
-            if self.order.len() > CACHE_BLOCKS {
-                self.order.pop_front();
-            }
-        }
-        hits
-    }
-}
-
 struct PolicyRun {
     name: &'static str,
-    /// modeled page-hit rate: hit prefill tokens / total prefill tokens
+    /// real page-hit rate: radix-matched positions / dispatched prompt tokens
     hit_rate: f64,
     hit_tokens: usize,
     total_tokens: usize,
-    /// prefill tokens a worker had to compute cold under the radix model
+    /// prompt tokens the engines actually prefilled cold (after radix skip)
     net_prefill_tokens: usize,
+    cow_splits: usize,
+    evicted_pages: usize,
     wall_s: f64,
     mean_ttft_ms: f64,
     /// the router's own affinity accounting (0 for policies without a tracker)
@@ -158,31 +112,25 @@ fn run(name: &'static str, policy: Box<dyn DispatchPolicy>, reqs: &[GenRequest])
     let t0 = Instant::now();
     let handles: Vec<_> =
         reqs.iter().map(|r| router.submit(r.clone()).expect("submit")).collect();
-    let mut served = Vec::with_capacity(reqs.len());
     for h in handles {
-        let resp = h.collect().expect("bench stream completes");
-        served.push(request_id::worker_of(resp.id).expect("namespaced id"));
+        h.collect().expect("bench stream completes");
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let report = router.report().expect("fleet report");
     assert_eq!(report.fleet.unresolved(), 0, "{name}: ledger must balance");
     router.shutdown();
 
-    // score the dispatch assignment against the policy-independent model
-    let mut caches: Vec<BlockCache> = (0..N_WORKERS).map(|_| BlockCache::new()).collect();
-    let mut hit_tokens = 0usize;
-    let mut total_tokens = 0usize;
-    for (req, &w) in reqs.iter().zip(&served) {
-        let hashes = block_hashes(&req.prompt);
-        hit_tokens += caches[w].hit_blocks_and_insert(&hashes) * BLOCK;
-        total_tokens += 1 + req.prompt.len(); // BOS included, as dispatched
-    }
+    // score from the real caches: merged engine counters across the fleet
+    let hit_tokens = report.merged.radix_hit_tokens;
+    let total_tokens = report.fleet.dispatched_prefill_tokens;
     PolicyRun {
         name,
-        hit_rate: hit_tokens as f64 / total_tokens as f64,
+        hit_rate: hit_tokens as f64 / total_tokens.max(1) as f64,
         hit_tokens,
         total_tokens,
-        net_prefill_tokens: total_tokens - hit_tokens,
+        net_prefill_tokens: report.merged.prefill_tokens,
+        cow_splits: report.merged.radix_cow_splits,
+        evicted_pages: report.merged.radix_evicted_pages,
         wall_s,
         mean_ttft_ms: report.merged.mean_ttft() * 1e3,
         router_hit_rate: report.fleet.prefix_hit_rate(),
@@ -197,7 +145,7 @@ fn main() {
 
     println!(
         "router fleet bench{}: {n_requests} requests, {N_WORKERS} workers x {B_EXEC} slots, \
-         {N_GROUPS} groups sharing {GROUP_PREFIX}-token prefixes",
+         {N_GROUPS} groups sharing {GROUP_PREFIX}-token prefixes, {POOL_PAGES}-page pools",
         if smoke { " [smoke]" } else { "" }
     );
 
@@ -205,13 +153,22 @@ fn main() {
     let ll = run("least-loaded", Box::new(LeastLoaded::new()), &reqs);
     let pa = run(
         "prefix-affinity",
-        Box::new(PrefixAffinity::new().with_block(BLOCK).with_capacity(CACHE_BLOCKS)),
+        Box::new(PrefixAffinity::new().with_block(PAGE).with_capacity(12)),
         &reqs,
     );
 
     let mut t = Table::new(
-        "dispatch policy vs shared-prefix page hits (modeled radix cache)",
-        &["policy", "hit rate", "hit tok", "net prefill tok", "wall s", "mean ttft ms"],
+        "dispatch policy vs shared-prefix page hits (real radix cache)",
+        &[
+            "policy",
+            "hit rate",
+            "hit tok",
+            "net prefill tok",
+            "cow",
+            "evicted",
+            "wall s",
+            "mean ttft ms",
+        ],
     );
     for r in [&rr, &ll, &pa] {
         t.rowv(vec![
@@ -219,6 +176,8 @@ fn main() {
             format!("{:.1}%", r.hit_rate * 100.0),
             r.hit_tokens.to_string(),
             r.net_prefill_tokens.to_string(),
+            r.cow_splits.to_string(),
+            r.evicted_pages.to_string(),
             ff(r.wall_s),
             ff(r.mean_ttft_ms),
         ]);
@@ -246,6 +205,10 @@ fn main() {
             ("rr_net_prefill_tokens", rr.net_prefill_tokens as f64),
             ("ll_net_prefill_tokens", ll.net_prefill_tokens as f64),
             ("pa_net_prefill_tokens", pa.net_prefill_tokens as f64),
+            ("rr_cow_splits", rr.cow_splits as f64),
+            ("pa_cow_splits", pa.cow_splits as f64),
+            ("rr_evicted_pages", rr.evicted_pages as f64),
+            ("pa_evicted_pages", pa.evicted_pages as f64),
             ("rr_wall_s", rr.wall_s),
             ("ll_wall_s", ll.wall_s),
             ("pa_wall_s", pa.wall_s),
@@ -256,7 +219,8 @@ fn main() {
         ],
     );
 
-    // headline win: affinity routing keeps shared prefixes hot
+    // headline win: affinity routing keeps shared prefixes hot in the REAL
+    // radix caches — more matched pages, fewer cold prefill tokens
     assert!(
         pa.hit_rate >= 1.3 * rr.hit_rate,
         "PrefixAffinity page-hit rate {:.3} must be ≥1.3x RoundRobin {:.3}",

@@ -37,6 +37,12 @@ pub struct WorkerLoad {
     /// dispatched and not yet terminal (router-side, always current)
     pub outstanding: usize,
     pub slots_total: usize,
+    /// pages the worker's radix prefix cache held resident at the last probe
+    /// (0 when the worker serves without the radix cache)
+    pub radix_shared_pages: usize,
+    /// cumulative cache positions the worker served from its radix cache
+    /// instead of prefill, as of the last probe
+    pub radix_hit_tokens: usize,
 }
 
 /// Tokens a decoding slot or an unprobed dispatch is charged in the load
@@ -233,6 +239,22 @@ impl DispatchPolicy for PrefixAffinity {
     }
 
     fn pick(&mut self, req: &GenRequest, workers: &[WorkerLoad]) -> Pick {
+        // Reconcile the router-side tracker against the workers' REAL radix
+        // prefix caches: when radix gauges are flowing at all, a worker
+        // reporting zero shared pages resident holds none of the prefixes we
+        // tracked for it (cache evicted or engine rebuilt) — routing on that
+        // memory would chase pages that no longer exist, so drop it.  With
+        // the radix cache off fleet-wide every gauge is zero and the tracker
+        // behaves exactly as before.
+        let gauges_live =
+            workers.iter().any(|l| l.radix_shared_pages > 0 || l.radix_hit_tokens > 0);
+        if gauges_live {
+            for l in workers {
+                if l.radix_shared_pages == 0 {
+                    self.tracked.remove(&l.worker);
+                }
+            }
+        }
         let hashes = prefix_hashes(&req.prompt, self.block);
         // longest tracked match across the alive workers' LRUs
         let mut hit: Option<(usize, usize)> = None; // (worker, matched blocks)
@@ -293,6 +315,8 @@ mod tests {
                 dispatched_since_probe: 0,
                 outstanding: 0,
                 slots_total: 4,
+                radix_shared_pages: 0,
+                radix_hit_tokens: 0,
             })
             .collect()
     }
@@ -367,6 +391,31 @@ mod tests {
         let pick = p.pick(&req(shared), &survivors);
         assert!(!pick.affinity_hit, "tracked prefixes of a lost worker are gone");
         assert_eq!(pick.worker, 1 - first);
+    }
+
+    #[test]
+    fn live_radix_gauges_invalidate_tracked_prefixes_of_a_cold_worker() {
+        let mut p = PrefixAffinity::new().with_block(2);
+        let mut loads = idle(&[0, 1]);
+        let shared = vec![5, 5, 5, 5];
+        let first = p.pick(&req(shared.clone()), &loads).worker;
+        assert!(p.pick(&req(shared.clone()), &loads).affinity_hit, "tracker primed");
+        // radix stats start flowing: the affinity target reports an EMPTY
+        // cache while another worker holds pages — its tracked prefixes are
+        // provably stale and must stop attracting traffic
+        loads.iter_mut().find(|l| l.worker != first).unwrap().radix_shared_pages = 3;
+        let pick = p.pick(&req(shared.clone()), &loads);
+        assert!(!pick.affinity_hit, "cold worker's tracked prefixes are dropped");
+        // that pick re-registered the prefix at its landing worker; once the
+        // landing worker reports resident pages the affinity is live again
+        for l in loads.iter_mut() {
+            if l.worker == pick.worker {
+                l.radix_shared_pages = 2;
+            }
+        }
+        let again = p.pick(&req(shared), &loads);
+        assert!(again.affinity_hit);
+        assert_eq!(again.worker, pick.worker);
     }
 
     #[test]

@@ -98,6 +98,11 @@ pub struct WorkerFleetMetrics {
     pub saturation: f64,
     /// engine progress counter at the last probe
     pub last_progress: u64,
+    /// pages the worker's radix prefix cache held resident at the last probe
+    pub radix_shared_pages: usize,
+    /// cache positions this worker served from its radix cache instead of
+    /// prefill (cumulative, as of the last probe)
+    pub radix_hit_tokens: usize,
 }
 
 /// One fleet-wide report: router counters, per-worker breakdown, and every

@@ -618,6 +618,8 @@ impl Core {
                 dispatched_since_probe: ws.dispatched_since_probe,
                 outstanding: ws.outstanding,
                 slots_total: ws.slots_total,
+                radix_shared_pages: ws.last_metrics.radix_shared_pages,
+                radix_hit_tokens: ws.last_metrics.radix_hit_tokens,
             })
             .collect()
     }
@@ -1021,6 +1023,8 @@ impl Core {
                 outstanding: ws.outstanding,
                 saturation,
                 last_progress: ws.health.last_progress(),
+                radix_shared_pages: ws.last_metrics.radix_shared_pages,
+                radix_hit_tokens: ws.last_metrics.radix_hit_tokens,
             });
         }
         FleetReport { fleet: self.fleet.clone(), workers, merged }

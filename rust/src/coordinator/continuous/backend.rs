@@ -120,6 +120,13 @@ pub trait DecodeBackend {
     fn max_prompt_tokens(&self) -> usize;
     /// Positions per cache row (incl. prefix).
     fn cache_capacity(&self) -> usize;
+    /// BOS token prepended to every row (the engine reconstructs each row's
+    /// own-region token sequence — BOS + prompt + generated — to key the
+    /// radix prefix cache).  Defaults to 1, the convention every current
+    /// backend follows.
+    fn bos(&self) -> i32 {
+        1
+    }
     /// Fresh cache with the shared prefixed K/V installed in every row.
     fn new_cache(&self) -> Result<KvCache>;
     /// Prefill `jobs` (mixed prompt lengths and mixed spans allowed) in one
@@ -173,6 +180,10 @@ impl<M: Deref<Target = Model>> DecodeBackend for ModelBackend<M> {
 
     fn cache_capacity(&self) -> usize {
         self.model.cfg.cache_max
+    }
+
+    fn bos(&self) -> i32 {
+        self.bos
     }
 
     fn new_cache(&self) -> Result<KvCache> {

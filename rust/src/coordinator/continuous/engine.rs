@@ -203,6 +203,13 @@ impl EngineStats {
             cancelled: self.cancelled,
             retries: self.retries,
             model_reloads: self.model_reloads,
+            radix_lookups: 0,
+            radix_hits: 0,
+            radix_hit_tokens: 0,
+            radix_cow_splits: 0,
+            radix_evicted_pages: 0,
+            radix_shared_pages: 0,
+            radix_shared_bytes: 0,
             by_class: self.per_class,
         }
     }
@@ -270,6 +277,15 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
 
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
+    }
+
+    /// Enable the generalized radix prefix cache (paged KV layout only):
+    /// admission walks a radix tree over token sequences and maps matched
+    /// shared pages instead of prefilling them; retirement inserts completed
+    /// sequences back.  Call before submitting work.
+    pub fn with_radix_cache(mut self) -> Result<Self> {
+        self.kv.enable_radix()?;
+        Ok(self)
     }
 
     /// Queue a request; its output goes to `reply`.  `submitted` anchors the
@@ -453,6 +469,17 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
             self.stats.sum_total_s += total_s;
             self.stats.per_class[a.req.priority.index()].completed += 1;
         }
+        if self.kv.radix_enabled() {
+            // Offer the retiring row's pages to the prefix cache before
+            // reset_slot releases them.  Any finish reason qualifies — the
+            // K/V written so far is valid for future prefix matches whether
+            // the request completed, hit a stop token, or was cancelled.
+            let mut seq = Vec::with_capacity(1 + a.req.prompt.len() + a.tokens.len());
+            seq.push(self.backend.bos());
+            seq.extend_from_slice(&a.req.prompt);
+            seq.extend_from_slice(&a.tokens);
+            self.kv.radix_insert(i, &seq)?;
+        }
         let resp = GenResponse {
             id: a.req.id,
             tokens: a.tokens,
@@ -585,7 +612,9 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
         let chunk = self.policy.prefill_chunk().max(1);
         let wave_start = Instant::now();
         let mut claimed = vec![false; self.slots.len()];
-        let mut wave: Vec<(usize, PendingReq)> = Vec::new();
+        // (slot, request, cache positions served by the radix prefix cache —
+        // prefill starts there; 0 without a radix match)
+        let mut wave: Vec<(usize, PendingReq, usize)> = Vec::new();
 
         loop {
             if self.pending.is_empty() {
@@ -634,7 +663,23 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
             }
             let free_slot =
                 (0..self.slots.len()).find(|&i| self.slots[i].is_none() && !claimed[i]);
-            let blocked_pages = !self.kv.can_admit(total, remaining);
+            // With the radix cache on, admission math is match-aware: pages
+            // already resident for this row's prefix shrink the reservation,
+            // and cache-only runs count as reclaimable headroom.
+            let row_toks: Option<Vec<i32>> = if self.kv.radix_enabled() {
+                let p = &self.pending[pick];
+                let mut t = Vec::with_capacity(total);
+                t.push(self.backend.bos());
+                t.extend_from_slice(&p.req.prompt);
+                t.extend_from_slice(&p.generated);
+                Some(t)
+            } else {
+                None
+            };
+            let blocked_pages = match &row_toks {
+                Some(t) => !self.kv.radix_can_admit(total, remaining, t),
+                None => !self.kv.can_admit(total, remaining),
+            };
             if free_slot.is_none() || blocked_pages {
                 // ask the policy for a preemption victim to make room; when
                 // the blocker is PAGES, the eviction must actually cover the
@@ -649,7 +694,13 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
                     .filter(|&v| v < self.slots.len() && !claimed[v])
                     .filter(|&v| matches!(&self.slots[v], Some(a) if a.decoding()))
                     .filter(|&v| {
-                        !blocked_pages || self.kv.can_admit_after_evicting(v, total, remaining)
+                        !blocked_pages
+                            || match &row_toks {
+                                Some(t) => {
+                                    self.kv.radix_can_admit_after_evicting(v, total, remaining, t)
+                                }
+                                None => self.kv.can_admit_after_evicting(v, total, remaining),
+                            }
                     });
                 if let Some(v) = victim {
                     self.preempt(v)?;
@@ -664,20 +715,49 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
                 break;
             }
             let slot = free_slot.expect("checked above");
+            let matched = if let Some(t) = &row_toks {
+                match self.kv.admit_radix(slot, total, remaining, t) {
+                    Ok(Some(m)) => m,
+                    Ok(None) => {
+                        // the match-aware peek passed but the transactional
+                        // admission could not cover the reservation (an
+                        // eviction candidate got pinned in between): safe
+                        // fallback — the candidate waits in the queue
+                        if self.deferred_ids.insert(views[pick].id) {
+                            self.stats.deferred_admissions += 1;
+                        }
+                        break;
+                    }
+                    Err(e) => {
+                        let msg = format!("radix admission failed: {e:#}");
+                        let p = self.pending.remove(pick).expect("pick is in range");
+                        self.deferred_ids.remove(&p.req.id);
+                        p.reply.error(msg.clone());
+                        for (_, w, _) in &wave {
+                            w.reply.error(msg.clone());
+                        }
+                        return Err(e);
+                    }
+                }
+            } else {
+                0
+            };
             let p = self.pending.remove(pick).expect("pick is in range");
             self.deferred_ids.remove(&p.req.id);
-            if let Err(e) = self.kv.reserve(slot, total, remaining) {
-                // can_admit passed, so this is an engine invariant violation;
-                // fail the wave the way a prefill error would
-                let msg = format!("page reservation failed: {e:#}");
-                p.reply.error(msg.clone());
-                for (_, w) in &wave {
-                    w.reply.error(msg.clone());
+            if row_toks.is_none() {
+                if let Err(e) = self.kv.reserve(slot, total, remaining) {
+                    // can_admit passed, so this is an engine invariant
+                    // violation; fail the wave the way a prefill error would
+                    let msg = format!("page reservation failed: {e:#}");
+                    p.reply.error(msg.clone());
+                    for (_, w, _) in &wave {
+                        w.reply.error(msg.clone());
+                    }
+                    return Err(e);
                 }
-                return Err(e);
             }
             claimed[slot] = true;
-            wave.push((slot, p));
+            wave.push((slot, p, matched));
         }
         if wave.is_empty() {
             return Ok(());
@@ -685,14 +765,14 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
 
         let jobs: Vec<PrefillJob> = wave
             .iter()
-            .map(|(slot, p)| {
+            .map(|(slot, p, matched)| {
                 let total = 1 + p.req.prompt.len() + p.generated.len();
                 PrefillJob {
                     slot: *slot,
                     req: &p.req,
                     resumed: &p.generated,
-                    start: 0,
-                    end: chunk.min(total),
+                    start: *matched,
+                    end: (matched + chunk).min(total),
                 }
             })
             .collect();
@@ -702,7 +782,7 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
                 // a failed wave is requeued (order preserved) so the server's
                 // recovery path can retry token-less requests after a rebuild
                 drop(jobs);
-                for (slot, p) in wave.into_iter().rev() {
+                for (slot, p, _) in wave.into_iter().rev() {
                     let _ = self.kv.reset_slot(slot);
                     self.pending.push_front(p);
                 }
@@ -727,14 +807,14 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
         // terminal event
         let covered = prefill_covers(
             &first,
-            wave.iter().map(|(slot, p)| {
+            wave.iter().map(|(slot, p, matched)| {
                 let total = 1 + p.req.prompt.len() + p.generated.len();
-                (*slot, chunk.min(total), total)
+                (*slot, (matched + chunk).min(total), total)
             }),
         );
         if !covered {
             let msg = "backend prefill output does not cover the admitted wave";
-            for (_, p) in &wave {
+            for (_, p, _) in &wave {
                 p.reply.error(msg.to_string());
             }
             bail!(msg);
@@ -742,9 +822,9 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
 
         let mut skew = 0.0f64;
         let mut finished: Vec<usize> = Vec::new();
-        for (slot, p) in wave {
+        for (slot, p, matched) in wave {
             let total = 1 + p.req.prompt.len() + p.generated.len();
-            let end = chunk.min(total);
+            let end = (matched + chunk).min(total);
             let (first_token, n_sinks) = first[&slot];
             let fresh = p.queue_s.is_none();
             let queue_s = p.queue_s.unwrap_or_else(|| {
@@ -760,7 +840,7 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
             } else {
                 self.stats.resumed += 1;
             }
-            self.stats.prefill_tokens += end;
+            self.stats.prefill_tokens += end - matched;
             self.slots[slot] = Some(Active {
                 req: p.req,
                 tokens: p.generated,
@@ -1038,6 +1118,15 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
         m.active_slots = self.slots.iter().filter(|s| s.is_some()).count();
         m.kv_resident_bytes = self.kv.resident_kv_bytes();
         m.kv_used_bytes = self.kv.used_kv_bytes();
+        if let Some(rs) = self.kv.radix_stats() {
+            m.radix_lookups = rs.lookups;
+            m.radix_hits = rs.hits;
+            m.radix_hit_tokens = rs.hit_tokens;
+            m.radix_cow_splits = rs.cow_splits;
+            m.radix_evicted_pages = rs.evicted_pages;
+            m.radix_shared_pages = rs.shared_pages;
+            m.radix_shared_bytes = rs.shared_bytes;
+        }
         m
     }
 
@@ -1109,6 +1198,10 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
         let dropped_queued = self.pending.len();
         self.pending.clear();
         self.deferred_ids.clear();
+        // release the prefix cache's refs so the page accounting below proves
+        // the whole pool drains (tree-held pages are not leaks, but a
+        // post-mortem reports raw pool truth)
+        let _ = self.kv.radix_flush();
         WorkerPostMortem {
             kv_pages_total: self.kv.total_pages().unwrap_or(0),
             kv_pages_free: self.kv.free_pages().unwrap_or(0),

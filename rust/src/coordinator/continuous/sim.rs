@@ -182,6 +182,10 @@ impl DecodeBackend for SimBackend {
         self.cfg.cache_max
     }
 
+    fn bos(&self) -> i32 {
+        self.bos
+    }
+
     fn new_cache(&self) -> Result<KvCache> {
         let mut kv = KvCache::with_layout(&self.cfg, self.b_exec, self.kv_layout);
         kv.install_prefix(&self.prefix)?;

@@ -32,9 +32,12 @@
 //! layout directly through [`KvCache::k_at`] so parity tests exercise the
 //! page tables themselves.
 
+use std::collections::HashSet;
+
 use anyhow::{bail, Result};
 
 use crate::config::ModelConfig;
+use crate::coordinator::radix::{RadixStats, RadixTree};
 use crate::model::PrefixState;
 use crate::tensor::Tensor;
 
@@ -198,6 +201,9 @@ struct Paged {
     /// bumped on retirement so dense mirrors of the old occupant invalidate
     generation: Vec<u64>,
     view: Option<DenseView>,
+    /// generalized radix prefix cache over own-region pages (None = only the
+    /// quantization prefix is shared, the pre-radix behaviour)
+    radix: Option<RadixTree>,
 }
 
 impl Paged {
@@ -236,6 +242,36 @@ impl Paged {
         let page = self.pool.alloc()?;
         self.own[slot].push(page);
         Ok(page)
+    }
+
+    /// Copy-on-write guard for a write into `slot`'s own page `idx`: when
+    /// the page is shared (the radix tree or another slot also references
+    /// it), swap in a private copy first.  The radix flow never hands a slot
+    /// a shared page it would write — matched pages are completely written
+    /// and appends land past them, the divergent partial page is a fresh
+    /// copy — so this never fires in normal operation; it exists to make
+    /// "divergence cannot mutate a shared page" structural rather than
+    /// circumstantial.  The allocation may exceed the slot's reservation,
+    /// which is acceptable for a defensive path that normal flow never takes.
+    fn cow_own_page(&mut self, slot: usize, idx: usize) -> Result<u32> {
+        let page = self.own[slot][idx];
+        if self.pool.refcount(page) <= 1 {
+            return Ok(page);
+        }
+        let fresh = self.pool.alloc()?;
+        let elems =
+            self.pool.n_layers * self.pool.n_heads * self.pool.page_size * self.pool.d_head;
+        let src = self.pool.slab_offset(page, 0, 0, 0);
+        let dst = self.pool.slab_offset(fresh, 0, 0, 0);
+        self.pool.k.copy_within(src..src + elems, dst);
+        self.pool.v.copy_within(src..src + elems, dst);
+        self.own[slot][idx] = fresh;
+        let freed = self.pool.decref(page)?;
+        debug_assert!(!freed, "a shared page cannot free on one decref");
+        if let Some(t) = &mut self.radix {
+            t.counters.cow_splits += 1;
+        }
+        Ok(fresh)
     }
 
     /// (page, in-page offset) of logical position `pos` of `slot`.
@@ -339,6 +375,7 @@ impl KvCache {
                     reserved: vec![0; batch],
                     generation: vec![0; batch],
                     view: None,
+                    radix: None,
                 })
             }
         };
@@ -671,6 +708,11 @@ impl KvCache {
                 let ps = pg.pool.page_size;
                 for idx in 0..div_ceil(end, ps) {
                     pg.ensure_own_page(slot, idx)?;
+                    if (idx + 1) * ps > start {
+                        // the page overlaps the written span [start, end):
+                        // it must be private before any byte changes
+                        pg.cow_own_page(slot, idx)?;
+                    }
                 }
                 for li in 0..l {
                     for hi in 0..h {
@@ -778,7 +820,8 @@ impl KvCache {
                 Store::Paged(pg) => {
                     let ps = pg.pool.page_size;
                     let rel = len - self.n_prefix;
-                    let page = pg.ensure_own_page(row, rel / ps)?;
+                    pg.ensure_own_page(row, rel / ps)?;
+                    let page = pg.cow_own_page(row, rel / ps)?;
                     let po = rel % ps;
                     for l in 0..self.n_layers {
                         for h in 0..self.n_heads {
@@ -834,7 +877,8 @@ impl KvCache {
             Store::Paged(pg) => {
                 let ps = pg.pool.page_size;
                 let rel = len - self.n_prefix;
-                let page = pg.ensure_own_page(slot, rel / ps)?;
+                pg.ensure_own_page(slot, rel / ps)?;
+                let page = pg.cow_own_page(slot, rel / ps)?;
                 let po = rel % ps;
                 for l in 0..self.n_layers {
                     for h in 0..self.n_heads {
@@ -948,6 +992,266 @@ impl KvCache {
                     view.gen[row] = generation[row];
                 }
                 Ok((&view.k, &view.v))
+            }
+        }
+    }
+
+    // ---- radix prefix cache ------------------------------------------------
+
+    /// Turn on the generalized radix prefix cache (tree over own-region page
+    /// runs, see `coordinator/radix/`).  Requires the paged layout — the tree
+    /// shares physical pages, which dense rows cannot do.
+    pub fn enable_radix(&mut self) -> Result<()> {
+        match &mut self.store {
+            Store::Dense { .. } => bail!("radix prefix cache requires the paged KV layout"),
+            Store::Paged(p) => {
+                if p.radix.is_none() {
+                    p.radix = Some(RadixTree::new(p.pool.page_size));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    pub fn radix_enabled(&self) -> bool {
+        matches!(&self.store, Store::Paged(p) if p.radix.is_some())
+    }
+
+    /// Prefix-cache counters plus current shared-page gauges (None when the
+    /// cache is dense or the radix tree is off).
+    pub fn radix_stats(&self) -> Option<RadixStats> {
+        match &self.store {
+            Store::Dense { .. } => None,
+            Store::Paged(p) => {
+                let bytes = p.pool.page_bytes();
+                p.radix.as_ref().map(|t| t.stats(bytes))
+            }
+        }
+    }
+
+    /// Drop every cached run and release the tree's page references (worker
+    /// teardown, so post-mortem page accounting balances).  Returns the
+    /// number of pages released.
+    pub fn radix_flush(&mut self) -> Result<usize> {
+        match &mut self.store {
+            Store::Dense { .. } => Ok(0),
+            Store::Paged(p) => {
+                let Some(tree) = &mut p.radix else {
+                    return Ok(0);
+                };
+                let pages = tree.flush();
+                let n = pages.len();
+                for pg in pages {
+                    p.pool.decref(pg)?;
+                }
+                Ok(n)
+            }
+        }
+    }
+
+    /// Match-aware admission check: like [`KvCache::can_admit`], but credits
+    /// the full pages the radix tree would serve for this row's token
+    /// sequence AND the pages sustained LRU eviction of cache-only runs could
+    /// free.  `tokens` is the row's own-region sequence (BOS + prompt +
+    /// resumed, so `tokens.len() == plen`).  Falls back to the plain
+    /// worst-case check when the tree is off.
+    pub fn radix_can_admit(&self, plen: usize, max_new: usize, tokens: &[i32]) -> bool {
+        match &self.store {
+            Store::Dense { .. } => true,
+            Store::Paged(p) => {
+                let worst = self.worst_own_pages(plen, max_new);
+                let Some(tree) = &p.radix else {
+                    return p.pool.free_pages() >= p.uncommitted() + worst;
+                };
+                // cap the match one token short so every admission still
+                // prefills at least one position (the first-token contract)
+                let matched = tree.peek(tokens, plen.saturating_sub(1));
+                let exclude: HashSet<u32> = matched.iter().copied().collect();
+                let evictable = tree.evictable_pages(&exclude, |pg| p.pool.refcount(pg) == 1);
+                p.pool.free_pages() + evictable
+                    >= p.uncommitted() + worst.saturating_sub(matched.len())
+            }
+        }
+    }
+
+    /// Match-aware [`KvCache::can_admit_after_evicting`]: would preempting
+    /// `slot` (plus LRU-evicting cache-only runs) actually cover the
+    /// candidate's reservation?  Unlike the worst-case variant, only the
+    /// victim's PRIVATE pages count as freed — a page the victim shares with
+    /// the tree or another slot survives its retirement (though retirement
+    /// does make victim+tree pages evictable, which the eviction term sees).
+    pub fn radix_can_admit_after_evicting(
+        &self,
+        slot: usize,
+        plen: usize,
+        max_new: usize,
+        tokens: &[i32],
+    ) -> bool {
+        match &self.store {
+            Store::Dense { .. } => true,
+            Store::Paged(p) => {
+                if slot >= self.batch {
+                    return false;
+                }
+                if p.radix.is_none() {
+                    return self.can_admit_after_evicting(slot, plen, max_new);
+                }
+                let tree = p.radix.as_ref().expect("checked above");
+                let worst = self.worst_own_pages(plen, max_new);
+                let victim: HashSet<u32> = p.own[slot].iter().copied().collect();
+                let own_freed =
+                    p.own[slot].iter().filter(|&&pg| p.pool.refcount(pg) == 1).count();
+                let outstanding = p.reserved[slot].saturating_sub(p.own[slot].len());
+                let matched = tree.peek(tokens, plen.saturating_sub(1));
+                let exclude: HashSet<u32> = matched.iter().copied().collect();
+                let evictable = tree.evictable_pages(&exclude, |pg| {
+                    // effective refcount once the victim's mapping is gone
+                    let held = u32::from(victim.contains(&pg));
+                    p.pool.refcount(pg).saturating_sub(held) == 1
+                });
+                p.pool.free_pages() + own_freed + evictable
+                    >= p.uncommitted().saturating_sub(outstanding)
+                        + worst.saturating_sub(matched.len())
+            }
+        }
+    }
+
+    /// Atomic radix admission of `slot`: walk the prefix cache with the
+    /// row's own-region token sequence (`tokens` = BOS + prompt + resumed,
+    /// `tokens.len() == plen`), map every matched full page into the slot's
+    /// page table, copy-on-write the first divergent partial page, LRU-evict
+    /// cache-only runs when the worst-case reservation needs the room, and
+    /// reserve the remainder.  Returns the number of cache positions served
+    /// from shared pages — the engine starts prefill there — or `Ok(None)`
+    /// when pages are short even after eviction (the safe fallback: the
+    /// caller defers or preempts exactly as for a failed
+    /// [`KvCache::can_admit`]).  With the tree off this degenerates to
+    /// [`KvCache::reserve`] semantics, reporting `Some(0)` or `None`.
+    pub fn admit_radix(
+        &mut self,
+        slot: usize,
+        plen: usize,
+        max_new: usize,
+        tokens: &[i32],
+    ) -> Result<Option<usize>> {
+        if slot >= self.batch {
+            bail!("radix admission slot {slot} out of range");
+        }
+        let worst = self.worst_own_pages(plen, max_new);
+        let clean = self.lens[slot] == self.n_prefix;
+        let n_prefix = self.n_prefix;
+        match &mut self.store {
+            Store::Dense { .. } => Ok(Some(0)),
+            Store::Paged(p) => {
+                if !clean || !p.own[slot].is_empty() {
+                    bail!("radix admission on a dirty slot {slot}");
+                }
+                let Paged { pool, radix, own, reserved, .. } = p;
+                let promised = |own: &[Vec<u32>], reserved: &[usize]| -> usize {
+                    own.iter()
+                        .zip(reserved.iter())
+                        .map(|(o, &r)| r.saturating_sub(o.len()))
+                        .sum()
+                };
+                let Some(tree) = radix.as_mut() else {
+                    if pool.free_pages() < promised(own, reserved) + worst {
+                        return Ok(None);
+                    }
+                    reserved[slot] = worst;
+                    return Ok(Some(0));
+                };
+                tree.counters.lookups += 1;
+                let ps = pool.page_size;
+                // cap one token short: every admission must prefill ≥ 1
+                // position to carry the first-token contract
+                let m = tree.lookup(tokens, plen.saturating_sub(1));
+                let k_full = m.pages.len();
+                let needed = worst.saturating_sub(k_full);
+                let uncommitted = promised(own, reserved);
+                let deficit = (uncommitted + needed).saturating_sub(pool.free_pages());
+                if deficit > 0 {
+                    // only evict when eviction can actually cover the gap —
+                    // shrinking the cache for an admission that then defers
+                    // anyway would be pure lost hits
+                    let exclude: HashSet<u32> = m.pages.iter().copied().collect();
+                    if tree.evictable_pages(&exclude, |pg| pool.refcount(pg) == 1) < deficit {
+                        return Ok(None);
+                    }
+                    let evicted =
+                        tree.evict_lru(deficit, &exclude, |pg| pool.refcount(pg) == 1);
+                    for pg in evicted {
+                        pool.decref(pg)?;
+                    }
+                    if (uncommitted + needed).saturating_sub(pool.free_pages()) > 0 {
+                        return Ok(None); // eviction fell short: safe fallback
+                    }
+                }
+                // transaction point: nothing below can fail for page shortage
+                for &pg in &m.pages {
+                    pool.incref(pg)?;
+                    own[slot].push(pg);
+                }
+                reserved[slot] = worst;
+                let mut matched_tok = k_full * ps;
+                if let Some((src_page, cp)) = m.partial {
+                    // divergent partial page: private copy of the shared
+                    // tokens (cp ≥ 1, < page_size), inside the reservation —
+                    // k_full < worst whenever a partial exists, and the
+                    // eviction above guaranteed free ≥ uncommitted + needed
+                    let fresh = pool.alloc()?;
+                    for l in 0..pool.n_layers {
+                        for h in 0..pool.n_heads {
+                            let src = pool.slab_offset(src_page, l, h, 0);
+                            let dst = pool.slab_offset(fresh, l, h, 0);
+                            let span = cp * pool.d_head;
+                            pool.k.copy_within(src..src + span, dst);
+                            pool.v.copy_within(src..src + span, dst);
+                        }
+                    }
+                    own[slot].push(fresh);
+                    tree.counters.cow_splits += 1;
+                    matched_tok += cp;
+                }
+                if matched_tok > 0 {
+                    tree.counters.hits += 1;
+                    tree.counters.hit_tokens += matched_tok;
+                }
+                self.lens[slot] = n_prefix + matched_tok;
+                Ok(Some(matched_tok))
+            }
+        }
+    }
+
+    /// Offer a retiring slot's sequence to the prefix cache: every own page
+    /// whose `page_size` positions were completely written becomes a tree
+    /// node unless that chunk is already cached (first writer wins — the
+    /// root-path invariant makes contents identical).  The tree takes one
+    /// pool reference per adopted page, so they survive the caller's
+    /// [`KvCache::reset_slot`].  `tokens` is the row's own-region sequence
+    /// (BOS + prompt + generated).  Returns the pages adopted.
+    pub fn radix_insert(&mut self, slot: usize, tokens: &[i32]) -> Result<usize> {
+        if slot >= self.batch {
+            bail!("radix insert slot {slot} out of range");
+        }
+        let written = self.lens[slot].saturating_sub(self.n_prefix);
+        match &mut self.store {
+            Store::Dense { .. } => Ok(0),
+            Store::Paged(p) => {
+                let Paged { pool, radix, own, .. } = p;
+                let Some(tree) = radix.as_mut() else {
+                    return Ok(0);
+                };
+                let ps = pool.page_size;
+                let n_full = tokens.len().min(written) / ps;
+                if n_full == 0 {
+                    return Ok(0);
+                }
+                let adopted = tree.insert(&tokens[..n_full * ps], &own[slot][..n_full]);
+                let n = adopted.len();
+                for pg in adopted {
+                    pool.incref(pg)?;
+                }
+                Ok(n)
             }
         }
     }
@@ -1298,6 +1602,156 @@ mod tests {
         kv.reset_slot(2).unwrap();
         assert_eq!(kv.free_pages(), Some(6));
         assert!(kv.can_admit(5, 3));
+    }
+
+    /// Deterministic prefill source: value at flat index i is i (so every
+    /// (l, h, position) span is unique and byte-comparisons are meaningful).
+    fn ramp_src(c: &ModelConfig, n_tok: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[c.n_layers, 1, c.n_heads, n_tok, c.d_head]);
+        for (i, v) in t.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        t
+    }
+
+    #[test]
+    fn radix_admission_maps_matched_pages() {
+        let c = cfg(); // cache_max 16, page_size 4 below, prefix 2
+        let mut kv =
+            KvCache::with_layout(&c, 2, KvLayout::Paged { page_size: 4, n_pages: 12 });
+        kv.install_prefix(&prefix(&c, 2)).unwrap();
+        kv.enable_radix().unwrap();
+        let toks: Vec<i32> = (0..9).map(|i| 100 + i).collect(); // BOS + 8 prompt
+        let src = ramp_src(&c, 9);
+
+        // first occupant: cold lookup, full prefill, insertion at retirement
+        assert_eq!(kv.admit_radix(0, 9, 2, &toks).unwrap(), Some(0));
+        kv.write_prefill_span(0, &src, &src, 0, 0, 9).unwrap();
+        assert_eq!(kv.radix_insert(0, &toks).unwrap(), 2, "9 tokens = 2 full pages");
+        let shared: Vec<u32> = kv.own_page_ids(0)[..2].to_vec();
+        kv.reset_slot(0).unwrap();
+        for &pg in &shared {
+            assert_eq!(kv.page_refcount(pg), Some(1), "tree keeps the run alive");
+        }
+
+        // second occupant with the same sequence: 2 pages MAPPED, prefill
+        // resumes at token 8 (the cap leaves ≥ 1 token to prefill)
+        assert_eq!(kv.admit_radix(1, 9, 2, &toks).unwrap(), Some(8));
+        assert_eq!(kv.row_len(1), 2 + 8);
+        assert_eq!(&kv.own_page_ids(1)[..2], shared.as_slice(), "mapped, not copied");
+        for &pg in &shared {
+            assert_eq!(kv.page_refcount(pg), Some(2), "tree + slot 1");
+        }
+        kv.write_prefill_span(1, &src, &src, 0, 8, 9).unwrap();
+        // the row reads back exactly as a cold full prefill would
+        for l in 0..c.n_layers {
+            for h in 0..c.n_heads {
+                for s in 2..kv.row_len(1) {
+                    let src_off = ((l * c.n_heads + h) * 9 + (s - 2)) * c.d_head;
+                    assert_eq!(
+                        kv.k_at(l, 1, h, s),
+                        &src.data[src_off..src_off + c.d_head],
+                        "shared-page read diverged at (l={l}, h={h}, s={s})"
+                    );
+                }
+            }
+        }
+        let stats = kv.radix_stats().unwrap();
+        assert_eq!((stats.lookups, stats.hits, stats.hit_tokens), (2, 1, 8));
+        assert_eq!(stats.shared_pages, 2);
+    }
+
+    #[test]
+    fn radix_partial_divergence_cows_without_touching_the_shared_page() {
+        let c = cfg();
+        let mut kv =
+            KvCache::with_layout(&c, 2, KvLayout::Paged { page_size: 4, n_pages: 12 });
+        kv.install_prefix(&prefix(&c, 2)).unwrap();
+        kv.enable_radix().unwrap();
+        let a: Vec<i32> = vec![1, 10, 11, 12, 13, 14, 15, 16];
+        let src = ramp_src(&c, 8);
+        kv.admit_radix(0, 8, 0, &a).unwrap();
+        kv.write_prefill_span(0, &src, &src, 0, 0, 8).unwrap();
+        // byte snapshot of a's row while slot 0 still maps it (the same
+        // physical pages the tree adopts below)
+        let snapshot: Vec<f32> = (0..c.n_layers)
+            .flat_map(|l| {
+                (0..c.n_heads)
+                    .flat_map(move |h| (2..10).map(move |s| (l, h, s)))
+                    .collect::<Vec<_>>()
+            })
+            .flat_map(|(l, h, s)| kv.k_at(l, 0, h, s).to_vec())
+            .collect();
+        kv.radix_insert(0, &a).unwrap();
+        kv.reset_slot(0).unwrap();
+
+        // b shares chunk 1 fully and 2 tokens of chunk 2, then diverges
+        let b: Vec<i32> = vec![1, 10, 11, 12, 13, 14, 77, 78];
+        let matched = kv.admit_radix(1, 8, 0, &b).unwrap().unwrap();
+        assert_eq!(matched, 6, "4 full-page tokens + 2 CoW tokens");
+        assert_eq!(kv.row_len(1), 2 + 6);
+        assert_eq!(kv.radix_stats().unwrap().cow_splits, 1);
+        // b's second page must be a private copy, not the tree's page
+        let cow_page = kv.own_page_ids(1)[1];
+        assert_eq!(kv.page_refcount(cow_page), Some(1), "CoW page is private");
+        // write b's divergent tail over the CoW page
+        let mut div = ramp_src(&c, 8);
+        for v in div.data.iter_mut() {
+            *v = -*v - 1.0; // unmistakably different bytes
+        }
+        kv.write_prefill_span(1, &div, &div, 0, 6, 8).unwrap();
+
+        // re-admit a: chunk 1 maps, chunk 2 partial-matches 3 tokens ([13,
+        // 14, 15]) copied from the TREE's page — if b's divergence had
+        // mutated the shared page, these reads would show it
+        let matched_a = kv.admit_radix(0, 8, 0, &a).unwrap().unwrap();
+        assert_eq!(matched_a, 4 + 3, "limit is plen-1 = 7");
+        let mut off = 0;
+        for l in 0..c.n_layers {
+            for h in 0..c.n_heads {
+                for s in 2..10 {
+                    let want = &snapshot[off..off + c.d_head];
+                    if s < 2 + 7 {
+                        assert_eq!(
+                            kv.k_at(l, 0, h, s),
+                            want,
+                            "divergence mutated a shared page at (l={l}, h={h}, s={s})"
+                        );
+                    }
+                    off += c.d_head;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn radix_eviction_frees_cache_only_runs_under_pressure() {
+        let c = cfg();
+        // 6 pages: 1 prefix + room for exactly one worst-case occupant (2
+        // pages) plus one cached run (2 pages) plus one spare
+        let mut kv =
+            KvCache::with_layout(&c, 1, KvLayout::Paged { page_size: 4, n_pages: 6 });
+        kv.install_prefix(&prefix(&c, 2)).unwrap();
+        kv.enable_radix().unwrap();
+        let a: Vec<i32> = vec![1, 20, 21, 22, 23, 24, 25, 26];
+        let src = ramp_src(&c, 8);
+        kv.admit_radix(0, 8, 0, &a).unwrap();
+        kv.write_prefill_span(0, &src, &src, 0, 0, 8).unwrap();
+        kv.radix_insert(0, &a).unwrap();
+        kv.reset_slot(0).unwrap();
+        assert_eq!(kv.free_pages(), Some(3), "tree holds 2 of 5 non-prefix pages");
+
+        // an unrelated 14-token worst case needs 4 pages: 3 free + eviction
+        let b: Vec<i32> = (0..12).map(|i| 200 + i).collect();
+        assert!(kv.radix_can_admit(12, 2, &b), "eviction credit must count");
+        let matched = kv.admit_radix(0, 12, 2, &b).unwrap();
+        assert_eq!(matched, Some(0), "no shared prefix with the cached run");
+        let stats = kv.radix_stats().unwrap();
+        assert!(stats.evicted_pages >= 1, "pressure must evict the cold run");
+        // zero leak: every page is either free, prefix, or slot-0 promised
+        kv.reset_slot(0).unwrap();
+        kv.radix_flush().unwrap();
+        assert_eq!(kv.free_pages(), Some(5), "all non-prefix pages back");
     }
 
     #[test]

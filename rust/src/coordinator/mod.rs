@@ -43,6 +43,7 @@ pub mod failpoint;
 pub mod kvcache;
 pub mod oplog;
 pub mod policy;
+pub mod radix;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -57,9 +58,11 @@ pub use continuous::{ContinuousEngine, ModelBackend, SimBackend};
 pub use failpoint::{FailAction, Failpoints};
 pub use kvcache::{KvCache, KvLayout, PagePool};
 pub use oplog::{
-    read_log, replay, BackendDesc, OpEntry, Oplog, Outcome, ReplayReport, TraceView,
+    compact, read_log, replay, BackendDesc, CompactReport, OpEntry, Oplog, Outcome, ReplayReport,
+    TraceView,
 };
 pub use policy::{Fcfs, PriorityPreempt, QueueView, SchedulePolicy, SlotView};
+pub use radix::{RadixMatch, RadixStats, RadixTree};
 pub use request::{
     ClassMetrics, DrainReport, FinishReason, GenRequest, GenRequestBuilder, GenResponse, Metrics,
     Priority, ProbeState, Reply, RoutedEvent, StreamEvent, WorkerPostMortem, WorkerProbe,

@@ -166,6 +166,82 @@ impl Oplog {
     }
 }
 
+/// What [`compact`] did to a journal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompactReport {
+    /// entries in the compacted file (including its fresh header)
+    pub kept_entries: usize,
+    /// entries of the original file that were dropped
+    pub dropped_entries: usize,
+    /// fully-finished request records whose entries were dropped
+    pub dropped_requests: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+}
+
+/// Rewrite the journal at `path` without the records of fully-finished
+/// requests: recovery only replays unfinished streams, so their entries are
+/// dead weight a long-running router accretes without bound.  Kept verbatim:
+/// every entry of every unfinished request, every `WorkerLost` event, and
+/// the full record of the finished request holding the overall max `seq`
+/// (recovery restarts the router's sequence counter above it — dropping
+/// that record would let a recovered router re-issue journaled ids).  The
+/// rewrite goes to a sibling temp file that replaces the original via
+/// rename, so a crash mid-compaction leaves the original journal intact.
+/// Any torn tail is dropped with the finished records.
+pub fn compact(path: impl AsRef<Path>) -> Result<CompactReport> {
+    let path = path.as_ref();
+    let rec = read_log(path)?;
+    let bytes_before = std::fs::metadata(path)
+        .with_context(|| format!("stat oplog {}", path.display()))?
+        .len();
+    let view = TraceView::from_entries(&rec.entries);
+    let Some(backend) = view.backend.clone() else {
+        bail!("{}: cannot compact a journal without a header entry", path.display());
+    };
+    let mut keep: std::collections::HashSet<u64> = view.unfinished().map(|r| r.seq).collect();
+    if let Some(max) = view.max_seq() {
+        keep.insert(max);
+    }
+    let dropped_requests = view.records.iter().filter(|r| !keep.contains(&r.seq)).count();
+
+    let tmp = path.with_extension("compact-tmp");
+    let mut out = Oplog::create(&tmp, &backend)
+        .with_context(|| format!("create compaction temp {}", tmp.display()))?;
+    let mut kept_entries = 1usize; // the fresh header
+    for e in &rec.entries {
+        let carry = match e {
+            // the temp file already opens with an equivalent header
+            OpEntry::Header { .. } => false,
+            OpEntry::WorkerLost { .. } => true,
+            OpEntry::Admitted { seq, .. }
+            | OpEntry::Dispatched { seq, .. }
+            | OpEntry::Token { seq, .. }
+            | OpEntry::Finished { seq, .. }
+            | OpEntry::Resumed { seq, .. } => keep.contains(seq),
+        };
+        if carry {
+            out.append(e)?;
+            kept_entries += 1;
+        }
+    }
+    drop(out);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("replace {} with compacted journal", path.display()))?;
+    let bytes_after = std::fs::metadata(path)
+        .with_context(|| format!("stat compacted oplog {}", path.display()))?
+        .len();
+    Ok(CompactReport {
+        kept_entries,
+        // the fresh header stands in for the original one, so the header
+        // counts as carried, not dropped
+        dropped_entries: rec.entries.len().saturating_sub(kept_entries),
+        dropped_requests,
+        bytes_before,
+        bytes_after,
+    })
+}
+
 /// Read-only load of a journal (no truncation, no append handle): the
 /// decodable entry prefix plus the byte count of any torn tail.
 pub fn read_log(path: impl AsRef<Path>) -> Result<Recovered> {
@@ -265,6 +341,61 @@ mod tests {
         // the file itself was truncated back to the good prefix
         let again = read_log(&path).unwrap();
         assert_eq!(again.dropped_bytes, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compact_drops_finished_records_and_preserves_the_rest() {
+        use crate::coordinator::cluster::DrainCause;
+        use crate::coordinator::request::FinishReason;
+        use crate::coordinator::GenRequest;
+
+        let path = tmp("compact");
+        let mut log = Oplog::create(&path, &sim_desc()).unwrap();
+        // seq 0 finished (droppable); seq 1 unfinished (kept verbatim);
+        // seq 2 finished but holds the overall max seq (kept)
+        log.append(&OpEntry::Admitted { seq: 0, req: GenRequest::new(0, vec![1], 2) }).unwrap();
+        log.append(&OpEntry::Dispatched { seq: 0, worker: 0 }).unwrap();
+        log.append(&OpEntry::Token { seq: 0, token: 9 }).unwrap();
+        log.append(&OpEntry::Finished {
+            seq: 0,
+            outcome: Outcome::Finish(FinishReason::Length),
+            n_tokens: 1,
+        })
+        .unwrap();
+        log.append(&OpEntry::Admitted { seq: 1, req: GenRequest::new(1, vec![2], 2) }).unwrap();
+        log.append(&OpEntry::Dispatched { seq: 1, worker: 1 }).unwrap();
+        log.append(&OpEntry::Token { seq: 1, token: 4 }).unwrap();
+        log.append(&OpEntry::WorkerLost { worker: 0, cause: DrainCause::Killed }).unwrap();
+        log.append(&OpEntry::Admitted { seq: 2, req: GenRequest::new(2, vec![3], 1) }).unwrap();
+        log.append(&OpEntry::Finished {
+            seq: 2,
+            outcome: Outcome::Finish(FinishReason::Length),
+            n_tokens: 0,
+        })
+        .unwrap();
+        drop(log);
+
+        let report = compact(&path).unwrap();
+        assert_eq!(report.dropped_requests, 1, "only seq 0 drops (seq 2 holds max seq)");
+        assert_eq!(report.dropped_entries, 4, "seq 0's four entries");
+        assert!(report.bytes_after < report.bytes_before);
+
+        let after = read_log(&path).unwrap();
+        assert_eq!(after.dropped_bytes, 0);
+        let view = TraceView::from_entries(&after.entries);
+        assert_eq!(view.backend, Some(sim_desc()));
+        assert_eq!(view.records.len(), 2);
+        assert_eq!(view.max_seq(), Some(2), "recovery's seq restart point survives");
+        let unfinished: Vec<u64> = view.unfinished().map(|r| r.seq).collect();
+        assert_eq!(unfinished, vec![1]);
+        assert_eq!(view.records[0].tokens, vec![4], "seq 1 kept verbatim");
+        assert_eq!(view.worker_events, 1, "WorkerLost survives compaction");
+
+        // compacting an already-compacted journal changes nothing
+        let again = compact(&path).unwrap();
+        assert_eq!(again.dropped_requests, 0);
+        assert_eq!(again.bytes_after, report.bytes_after);
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,465 @@
+//! Radix prefix cache: a tree over token sequences whose nodes map to
+//! refcounted [`crate::coordinator::PagePool`] pages.
+//!
+//! This generalizes the paper's mechanism.  PrefixQuant writes the
+//! outlier-prefix K/V once and maps it into every sequence; the radix tree
+//! extends that economics to ARBITRARY prompt prefixes: thousands of
+//! requests sharing a system prompt or few-shot template pay for the shared
+//! K/V exactly once (IntactKV makes the quantization-side argument that
+//! pivot-token K/V is worth caching losslessly).
+//!
+//! Layout invariants the tree relies on:
+//!
+//! - Nodes are keyed by whole `page_size` token chunks, so a node IS one
+//!   page: the K/V for cache positions `[n_prefix + depth*page_size,
+//!   n_prefix + (depth+1)*page_size)` of any row whose token sequence starts
+//!   with the node's root-path.  Causal attention makes K/V at a position a
+//!   function of the tokens at and before it, and every slot shares the same
+//!   `n_prefix` offset — so equal root-paths imply byte-identical page
+//!   contents, and a cached page can be MAPPED (not copied) into any
+//!   matching slot.
+//! - The tree holds exactly ONE pool reference per cached page (taken when a
+//!   node adopts the page, dropped when the node is evicted or flushed).  A
+//!   page mapped into live slots carries additional references, so
+//!   `refcount == 1` identifies a run only the cache remembers — the only
+//!   thing eviction is allowed to take.
+//! - Eviction is leaf-first LRU on a monotone logical clock (bumped per
+//!   lookup/insert, never wall time, so behaviour is deterministic).
+//!   Removing a leaf can expose its parent as the next leaf, which is how
+//!   unreferenced interior runs drain under sustained page pressure.
+//!
+//! The tree itself is storage-agnostic bookkeeping: [`RadixTree`] never
+//! touches K/V bytes or refcounts.  `KvCache::admit_radix` (kvcache.rs) owns
+//! the transactional part — mapping matched pages into a slot's page table,
+//! copy-on-write of the first divergent partial page, and eviction under
+//! reservation pressure — so tree state and pool state can never disagree.
+
+use std::collections::HashSet;
+
+/// Prefix-cache observability counters plus point-in-time gauges, exported
+/// through `Metrics` and merged fleet-wide.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RadixStats {
+    /// admission-time lookups against the tree
+    pub lookups: usize,
+    /// lookups that matched at least one token
+    pub hits: usize,
+    /// total tokens served from cached pages instead of prefill
+    pub hit_tokens: usize,
+    /// copy-on-write page splits (divergent partial page at admission, or a
+    /// write into a still-shared page)
+    pub cow_splits: usize,
+    /// pages evicted from the tree under page pressure
+    pub evicted_pages: usize,
+    /// gauge: pages currently held by the tree
+    pub shared_pages: usize,
+    /// gauge: K/V bytes of the pages currently held by the tree
+    pub shared_bytes: usize,
+}
+
+#[derive(Debug)]
+struct Node {
+    /// exactly `page_size` tokens — the chunk this node appends to its
+    /// parent's root-path
+    chunk: Vec<i32>,
+    /// pool page holding this chunk's K/V (the tree owns one reference)
+    page: u32,
+    children: Vec<u32>,
+    /// parent node id; `None` for children of the virtual root
+    parent: Option<u32>,
+    /// logical-clock timestamp of the last lookup/insert touching this node
+    last_use: u64,
+}
+
+/// What a lookup matched: whole cached pages plus, when the walk ended at a
+/// partial overlap, the divergent child to copy-on-write from.
+#[derive(Debug, Clone, Default)]
+pub struct RadixMatch {
+    /// fully matched pages, in root-path order
+    pub pages: Vec<u32>,
+    /// `(page, shared_tokens)` of the child sharing the longest strict
+    /// prefix (≥ 1, < page_size tokens) with the remaining tokens — the
+    /// CoW-split source
+    pub partial: Option<(u32, usize)>,
+}
+
+impl RadixMatch {
+    /// Tokens covered by the full-page matches (partial excluded).
+    pub fn full_tokens(&self, page_size: usize) -> usize {
+        self.pages.len() * page_size
+    }
+}
+
+/// Radix tree over token sequences at page granularity (see module docs).
+#[derive(Debug)]
+pub struct RadixTree {
+    page_size: usize,
+    /// slab of nodes; freed ids are recycled via `free_ids`
+    nodes: Vec<Option<Node>>,
+    free_ids: Vec<u32>,
+    /// children of the virtual root
+    roots: Vec<u32>,
+    /// monotone logical clock for LRU ordering
+    clock: u64,
+    /// cumulative counters (gauges are filled by [`RadixTree::stats`])
+    pub counters: RadixStats,
+}
+
+impl RadixTree {
+    pub fn new(page_size: usize) -> Self {
+        RadixTree {
+            page_size: page_size.max(1),
+            nodes: Vec::new(),
+            free_ids: Vec::new(),
+            roots: Vec::new(),
+            clock: 0,
+            counters: RadixStats::default(),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Live nodes (== pages held by the tree).
+    pub fn len(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counters plus current gauges (`page_bytes` converts pages to bytes).
+    pub fn stats(&self, page_bytes: usize) -> RadixStats {
+        let mut s = self.counters;
+        s.shared_pages = self.len();
+        s.shared_bytes = s.shared_pages * page_bytes;
+        s
+    }
+
+    fn node(&self, id: u32) -> &Node {
+        self.nodes[id as usize].as_ref().expect("live radix node")
+    }
+
+    fn node_mut(&mut self, id: u32) -> &mut Node {
+        self.nodes[id as usize].as_mut().expect("live radix node")
+    }
+
+    fn child_matching(&self, children: &[u32], chunk: &[i32]) -> Option<u32> {
+        children.iter().copied().find(|&c| self.node(c).chunk == chunk)
+    }
+
+    /// Walk `tokens` (capped at `max_tokens`) matching whole chunks, bumping
+    /// the LRU clock along the path; also reports the best partial overlap at
+    /// the divergence point.  Read-modify (LRU only) — no structural change.
+    pub fn lookup(&mut self, tokens: &[i32], max_tokens: usize) -> RadixMatch {
+        self.clock += 1;
+        let now = self.clock;
+        let ps = self.page_size;
+        let limit = tokens.len().min(max_tokens);
+        let mut m = RadixMatch::default();
+        let mut children: Vec<u32> = self.roots.clone();
+        let mut consumed = 0usize;
+        while consumed + ps <= limit {
+            let Some(id) = self.child_matching(&children, &tokens[consumed..consumed + ps])
+            else {
+                break;
+            };
+            self.node_mut(id).last_use = now;
+            m.pages.push(self.node(id).page);
+            consumed += ps;
+            children = self.node(id).children.clone();
+        }
+        // divergence point: the child sharing the longest strict token prefix
+        // with what remains is the copy-on-write source
+        let remain = limit - consumed;
+        if remain > 0 {
+            let mut best: Option<(u32, usize)> = None;
+            for &c in &children {
+                let chunk = &self.node(c).chunk;
+                let shared = chunk
+                    .iter()
+                    .zip(&tokens[consumed..limit])
+                    .take_while(|(a, b)| a == b)
+                    .count();
+                if shared > 0 && best.map_or(true, |(_, k)| shared > k) {
+                    best = Some((c, shared));
+                }
+            }
+            if let Some((id, shared)) = best {
+                self.node_mut(id).last_use = now;
+                m.partial = Some((self.node(id).page, shared.min(remain)));
+            }
+        }
+        m
+    }
+
+    /// Read-only variant of [`RadixTree::lookup`]: full-page matches only, no
+    /// LRU bump, no counters — the admission pre-check peek.
+    pub fn peek(&self, tokens: &[i32], max_tokens: usize) -> Vec<u32> {
+        let ps = self.page_size;
+        let limit = tokens.len().min(max_tokens);
+        let mut pages = Vec::new();
+        let mut children: &[u32] = &self.roots;
+        let mut consumed = 0usize;
+        while consumed + ps <= limit {
+            let Some(id) = self.child_matching(children, &tokens[consumed..consumed + ps])
+            else {
+                break;
+            };
+            pages.push(self.node(id).page);
+            consumed += ps;
+            children = &self.node(id).children;
+        }
+        pages
+    }
+
+    /// Insert the full-page chunks of `tokens`, adopting `pages[i]` for every
+    /// chunk not already cached.  Returns the pages the tree ADOPTED (the
+    /// caller must add one pool reference to each); chunks that already have
+    /// a node are skipped — first writer wins, contents are identical by the
+    /// root-path invariant.
+    pub fn insert(&mut self, tokens: &[i32], pages: &[u32]) -> Vec<u32> {
+        self.clock += 1;
+        let now = self.clock;
+        let ps = self.page_size;
+        let n_full = (tokens.len() / ps).min(pages.len());
+        let mut adopted = Vec::new();
+        let mut parent: Option<u32> = None;
+        for i in 0..n_full {
+            let chunk = &tokens[i * ps..(i + 1) * ps];
+            let siblings: Vec<u32> = match parent {
+                None => self.roots.clone(),
+                Some(p) => self.node(p).children.clone(),
+            };
+            if let Some(id) = self.child_matching(&siblings, chunk) {
+                self.node_mut(id).last_use = now;
+                parent = Some(id);
+                continue;
+            }
+            let id = self.alloc_node(Node {
+                chunk: chunk.to_vec(),
+                page: pages[i],
+                children: Vec::new(),
+                parent,
+                last_use: now,
+            });
+            match parent {
+                None => self.roots.push(id),
+                Some(p) => self.node_mut(p).children.push(id),
+            }
+            adopted.push(pages[i]);
+            parent = Some(id);
+        }
+        adopted
+    }
+
+    fn alloc_node(&mut self, n: Node) -> u32 {
+        if let Some(id) = self.free_ids.pop() {
+            self.nodes[id as usize] = Some(n);
+            id
+        } else {
+            self.nodes.push(Some(n));
+            (self.nodes.len() - 1) as u32
+        }
+    }
+
+    fn remove_node(&mut self, id: u32) -> u32 {
+        let node = self.nodes[id as usize].take().expect("evicting a live node");
+        match node.parent {
+            None => self.roots.retain(|&c| c != id),
+            Some(p) => self.node_mut(p).children.retain(|&c| c != id),
+        }
+        self.free_ids.push(id);
+        node.page
+    }
+
+    /// Evict up to `want` pages, leaf-first in LRU order (ties break on the
+    /// lower node id, keeping eviction deterministic).  A leaf is only taken
+    /// when `evictable(page)` holds (the cache passes `refcount == 1`: only
+    /// the tree remembers it) and its page is not in `exclude` (pages just
+    /// matched for the admission in progress).  Returns the evicted pages;
+    /// the caller drops the tree's pool reference on each.
+    pub fn evict_lru(
+        &mut self,
+        want: usize,
+        exclude: &HashSet<u32>,
+        mut evictable: impl FnMut(u32) -> bool,
+    ) -> Vec<u32> {
+        let mut out = Vec::new();
+        while out.len() < want {
+            let mut best: Option<(u64, u32)> = None;
+            for (idx, slot) in self.nodes.iter().enumerate() {
+                let Some(n) = slot else { continue };
+                if !n.children.is_empty() || exclude.contains(&n.page) || !evictable(n.page) {
+                    continue;
+                }
+                let key = (n.last_use, idx as u32);
+                if best.map_or(true, |b| key < b) {
+                    best = Some(key);
+                }
+            }
+            let Some((_, id)) = best else { break };
+            out.push(self.remove_node(id));
+        }
+        self.counters.evicted_pages += out.len();
+        out
+    }
+
+    /// Pages that sustained eviction could free for an admission that has
+    /// `exclude` matched: nodes whose ENTIRE subtree is evictable (every
+    /// descendant passes `evictable` and none is excluded) — exactly what
+    /// cascading leaf-first eviction can reach.
+    pub fn evictable_pages(
+        &self,
+        exclude: &HashSet<u32>,
+        mut evictable: impl FnMut(u32) -> bool,
+    ) -> usize {
+        // post-order over every root: a node counts iff all children count
+        // and its own page is evictable
+        fn walk(
+            tree: &RadixTree,
+            id: u32,
+            exclude: &HashSet<u32>,
+            evictable: &mut dyn FnMut(u32) -> bool,
+            count: &mut usize,
+        ) -> bool {
+            let node = tree.node(id);
+            let mut all = true;
+            for &c in &node.children {
+                all &= walk(tree, c, exclude, evictable, count);
+            }
+            let ok = all && !exclude.contains(&node.page) && evictable(node.page);
+            if ok {
+                *count += 1;
+            }
+            ok
+        }
+        let mut count = 0;
+        for &r in &self.roots {
+            walk(self, r, exclude, &mut evictable, &mut count);
+        }
+        count
+    }
+
+    /// Drop every node and return all held pages (the caller releases the
+    /// tree's pool reference on each) — post-mortem accounting and tests.
+    pub fn flush(&mut self) -> Vec<u32> {
+        let pages =
+            self.nodes.iter().flatten().map(|n| n.page).collect::<Vec<_>>();
+        self.nodes.clear();
+        self.free_ids.clear();
+        self.roots.clear();
+        pages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize, base: i32) -> Vec<i32> {
+        (0..n as i32).map(|i| base + i).collect()
+    }
+
+    #[test]
+    fn insert_then_lookup_matches_full_pages_only() {
+        let mut t = RadixTree::new(4);
+        let seq = toks(10, 100); // 2 full chunks + 2 spare tokens
+        let adopted = t.insert(&seq, &[7, 8]);
+        assert_eq!(adopted, vec![7, 8], "both chunks are new");
+        assert_eq!(t.len(), 2);
+
+        let m = t.lookup(&seq, seq.len());
+        assert_eq!(m.pages, vec![7, 8]);
+        assert_eq!(m.full_tokens(4), 8);
+        assert!(m.partial.is_none(), "no cached child past the matched path");
+
+        // a cap below a chunk boundary stops the match early
+        let m = t.lookup(&seq, 7);
+        assert_eq!(m.pages, vec![7], "second chunk needs 8 tokens, cap is 7");
+    }
+
+    #[test]
+    fn shared_prefixes_share_nodes_and_diverge_with_partials() {
+        let mut t = RadixTree::new(4);
+        let a = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let b = vec![1, 2, 3, 4, 5, 6, 9, 9]; // diverges inside chunk 2
+        assert_eq!(t.insert(&a, &[0, 1]).len(), 2);
+        let adopted = t.insert(&b, &[2, 3]);
+        assert_eq!(adopted, vec![3], "shared first chunk is reused, not re-adopted");
+        assert_eq!(t.len(), 3);
+
+        // c shares chunk 1 fully and 2 leading tokens of a's chunk 2
+        let c = vec![1, 2, 3, 4, 5, 6, 0, 0];
+        let m = t.lookup(&c, c.len());
+        assert_eq!(m.pages, vec![0]);
+        let (page, shared) = m.partial.expect("divergent child reported for CoW");
+        assert_eq!(shared, 2);
+        assert!(page == 1 || page == 3, "either divergent sibling is a valid CoW source");
+    }
+
+    #[test]
+    fn eviction_is_leaf_first_lru_and_respects_the_guard() {
+        let mut t = RadixTree::new(2);
+        t.insert(&[1, 2, 3, 4], &[0, 1]); // path 0 -> 1
+        t.insert(&[5, 6], &[2]); // sibling leaf
+        t.lookup(&[5, 6], 2); // bump page 2: now the LRU leaf is page 1
+
+        // page 1 is pinned (still referenced): eviction must skip it and the
+        // interior page 0 is unreachable while its child lives
+        let none = t.evict_lru(2, &HashSet::new(), |p| p != 1);
+        assert_eq!(none, vec![2], "only the unpinned leaf can go");
+
+        // unpinned: leaf 1 goes first, THEN its parent becomes a leaf
+        let rest = t.evict_lru(2, &HashSet::new(), |_| true);
+        assert_eq!(rest, vec![1, 0], "leaf-first cascade reaches the interior node");
+        assert!(t.is_empty());
+        assert_eq!(t.counters.evicted_pages, 3);
+    }
+
+    #[test]
+    fn exclusion_protects_the_admission_in_flight() {
+        let mut t = RadixTree::new(2);
+        t.insert(&[1, 2], &[0]);
+        t.insert(&[3, 4], &[1]);
+        let exclude: HashSet<u32> = [0].into_iter().collect();
+        let got = t.evict_lru(2, &exclude, |_| true);
+        assert_eq!(got, vec![1], "the matched page is untouchable this admission");
+    }
+
+    #[test]
+    fn evictable_pages_counts_whole_free_subtrees_only() {
+        let mut t = RadixTree::new(2);
+        t.insert(&[1, 2, 3, 4], &[0, 1]); // 0 interior, 1 leaf
+        t.insert(&[5, 6], &[2]);
+        // leaf 1 pinned: its parent 0 cannot drain either, only 2 can
+        assert_eq!(t.evictable_pages(&HashSet::new(), |p| p != 1), 1);
+        assert_eq!(t.evictable_pages(&HashSet::new(), |_| true), 3);
+        let exclude: HashSet<u32> = [2].into_iter().collect();
+        assert_eq!(t.evictable_pages(&exclude, |_| true), 2);
+    }
+
+    #[test]
+    fn flush_returns_every_held_page() {
+        let mut t = RadixTree::new(2);
+        t.insert(&[1, 2, 3, 4], &[5, 6]);
+        let mut pages = t.flush();
+        pages.sort_unstable();
+        assert_eq!(pages, vec![5, 6]);
+        assert!(t.is_empty());
+        // reusable after a flush
+        assert_eq!(t.insert(&[9, 9], &[3]), vec![3]);
+    }
+
+    #[test]
+    fn peek_is_pure() {
+        let mut t = RadixTree::new(2);
+        t.insert(&[1, 2, 3, 4], &[0, 1]);
+        let clock_before = t.clock;
+        assert_eq!(t.peek(&[1, 2, 3, 4], 4), vec![0, 1]);
+        assert_eq!(t.peek(&[1, 2, 3, 4], 3), vec![0], "cap respected");
+        assert_eq!(t.clock, clock_before, "peek must not disturb LRU order");
+    }
+}

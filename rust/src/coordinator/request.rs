@@ -437,6 +437,20 @@ pub struct Metrics {
     /// re-read the QuantArtifact) after an engine rebuild on the same model
     /// failed — the pipeline never re-runs on this path
     pub model_reloads: usize,
+    /// radix prefix-cache lookups at admission (0 when the cache is off)
+    pub radix_lookups: usize,
+    /// admissions that matched at least one cached page
+    pub radix_hits: usize,
+    /// cache positions served from the radix cache instead of prefill
+    pub radix_hit_tokens: usize,
+    /// copy-on-write page splits (partial-page divergence at admission)
+    pub radix_cow_splits: usize,
+    /// cache-only pages evicted from the radix tree under page pressure
+    pub radix_evicted_pages: usize,
+    /// pages currently held resident by the radix tree (gauge)
+    pub radix_shared_pages: usize,
+    /// bytes of K+V those shared pages pin resident (gauge)
+    pub radix_shared_bytes: usize,
     /// per-priority-class breakdown (index = `Priority::index()`)
     pub by_class: [ClassMetrics; Priority::COUNT],
 }
@@ -465,6 +479,13 @@ impl Metrics {
         self.cancelled += m.cancelled;
         self.retries += m.retries;
         self.model_reloads += m.model_reloads;
+        self.radix_lookups += m.radix_lookups;
+        self.radix_hits += m.radix_hits;
+        self.radix_hit_tokens += m.radix_hit_tokens;
+        self.radix_cow_splits += m.radix_cow_splits;
+        self.radix_evicted_pages += m.radix_evicted_pages;
+        self.radix_shared_pages += m.radix_shared_pages;
+        self.radix_shared_bytes += m.radix_shared_bytes;
         for (d, c) in self.by_class.iter_mut().zip(&m.by_class) {
             d.requests += c.requests;
             d.completed += c.completed;

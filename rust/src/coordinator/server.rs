@@ -161,6 +161,11 @@ pub struct ServerConfig {
     /// `worker.drain.crash`); unarmed by default — tests keep a clone and
     /// arm sites to crash the worker at exact points
     pub failpoints: Failpoints,
+    /// enable the generalized radix prefix cache (continuous engine with a
+    /// paged KV layout only): admission maps cached shared-prefix pages
+    /// instead of re-prefilling them.  Off by default; re-applied on every
+    /// engine rebuild.
+    pub radix_cache: bool,
 }
 
 impl ServerConfig {
@@ -180,6 +185,7 @@ impl ServerConfig {
                 policy: Box::new(Fcfs),
                 max_retries: 1,
                 failpoints: Failpoints::default(),
+                radix_cache: false,
             },
         }
     }
@@ -233,6 +239,11 @@ impl ServerConfigBuilder {
 
     pub fn failpoints(mut self, failpoints: Failpoints) -> Self {
         self.cfg.failpoints = failpoints;
+        self
+    }
+
+    pub fn radix_cache(mut self, on: bool) -> Self {
+        self.cfg.radix_cache = on;
         self
     }
 
@@ -951,7 +962,11 @@ fn make_engine<S: BackendSource>(
     cfg: &ServerConfig,
 ) -> Result<ContinuousEngine<S::B>> {
     let backend = source.make_backend()?;
-    Ok(ContinuousEngine::new(backend)?.with_policy(cfg.policy.fresh()))
+    let mut engine = ContinuousEngine::new(backend)?.with_policy(cfg.policy.fresh());
+    if cfg.radix_cache {
+        engine = engine.with_radix_cache()?;
+    }
+    Ok(engine)
 }
 
 /// Feed one message to the engine; the returned [`Flow`] tells the serve

@@ -27,6 +27,10 @@
 //!                                  fleet (booted per the journal's backend
 //!                                  header; sim traces need no artifacts)
 //!                                  and verify the streams bit-identically
+//!   oplog     compact <path>     — rewrite a journal in place, dropping the
+//!                                  records of fully-finished requests
+//!                                  (recovery resumes identically from the
+//!                                  compacted log)
 //!
 //! Schemes: fp16, rtn, quarot, smoothquant, atom, prefixquant-wo-ft,
 //! prefixquant (default bit-widths W4A4KV4; --bits w,a,kv overrides).
@@ -37,7 +41,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 use prefixquant::coordinator::{
-    read_log, replay, BackendDesc, DispatchPolicy, GenRequest, LeastLoaded, Oplog,
+    compact, read_log, replay, BackendDesc, DispatchPolicy, GenRequest, LeastLoaded, Oplog,
     PrefixAffinity, RoundRobin, Router, RouterConfig, Server, ServerConfig, SimBackend,
     TraceView,
 };
@@ -281,6 +285,8 @@ fn worker_config(c: &Ctx, max_batch: usize) -> ServerConfig {
         .pad(c.tok.spec.pad)
         // paged KV with a dense-equivalent auto-sized pool
         .kv(prefixquant::coordinator::KvLayout::Paged { page_size: 16, n_pages: 0 })
+        // shared-prefix pages are mapped, not re-prefilled
+        .radix_cache(true)
         .build()
 }
 
@@ -394,7 +400,17 @@ fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
     let report = router.report()?;
     let mut t = Table::new(
         &format!("fleet ({policy_name})"),
-        &["worker", "state", "dispatched", "affinity", "absorbed", "completed", "saturation"],
+        &[
+            "worker",
+            "state",
+            "dispatched",
+            "affinity",
+            "absorbed",
+            "completed",
+            "saturation",
+            "rdx pages",
+            "rdx hit tok",
+        ],
     );
     for w in &report.workers {
         t.rowv(vec![
@@ -405,6 +421,8 @@ fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
             w.redistributions_absorbed.to_string(),
             w.completed.to_string(),
             format!("{:.2}", w.saturation),
+            w.radix_shared_pages.to_string(),
+            w.radix_hit_tokens.to_string(),
         ]);
     }
     t.print();
@@ -423,6 +441,20 @@ fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
         "merged engine metrics: {} requests, {} generated tokens, {} prefill tokens",
         report.merged.requests, report.merged.generated_tokens, report.merged.prefill_tokens
     );
+    let m = &report.merged;
+    if m.radix_lookups > 0 {
+        println!(
+            "radix cache: {}/{} admissions hit, {} tokens served from cache, \
+             {} CoW split(s), {} page(s) evicted, {} shared page(s) resident ({} KiB)",
+            m.radix_hits,
+            m.radix_lookups,
+            m.radix_hit_tokens,
+            m.radix_cow_splits,
+            m.radix_evicted_pages,
+            m.radix_shared_pages,
+            m.radix_shared_bytes / 1024
+        );
+    }
     router.shutdown();
     if ok < n_requests {
         bail!("{} of {n_requests} requests failed", n_requests - ok);
@@ -501,13 +533,39 @@ fn cmd_replay(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Journal maintenance.  `pq oplog compact <path>` rewrites the journal
+/// without the records of fully-finished requests; recovery on the
+/// compacted log resumes exactly what it would have resumed before.
+fn cmd_oplog(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("compact") => {
+            let path = args
+                .positional
+                .get(2)
+                .ok_or_else(|| anyhow!("usage: pq oplog compact <path>"))?;
+            let r = compact(std::path::Path::new(path))?;
+            println!(
+                "compacted {path}: dropped {} finished request(s) / {} entries, \
+                 {} → {} bytes (kept {} entries)",
+                r.dropped_requests, r.dropped_entries, r.bytes_before, r.bytes_after, r.kept_entries
+            );
+            Ok(())
+        }
+        _ => bail!("usage: pq oplog compact <path>"),
+    }
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
-    // replay boots from the journal's own header; a sim trace must work with
-    // no artifacts on disk, so the Engine context is not created up front
+    // replay and oplog maintenance work from the journal alone; a sim trace
+    // must work with no artifacts on disk, so the Engine context is not
+    // created up front
     if cmd == "replay" {
         return cmd_replay(&args);
+    }
+    if cmd == "oplog" {
+        return cmd_oplog(&args);
     }
     let c = ctx()?;
     match cmd {
@@ -517,6 +575,8 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&c, &args),
         "gen" => cmd_gen(&c, &args),
         "serve" => cmd_serve(&c, &args),
-        other => bail!("unknown command {other:?} (info|outliers|quantize|eval|gen|serve|replay)"),
+        other => {
+            bail!("unknown command {other:?} (info|outliers|quantize|eval|gen|serve|replay|oplog)")
+        }
     }
 }

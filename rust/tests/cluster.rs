@@ -52,6 +52,13 @@ fn rand_metrics(g: &mut Gen) -> Metrics {
         cancelled: g.usize_in(0, 100),
         retries: g.usize_in(0, 100),
         model_reloads: g.usize_in(0, 10),
+        radix_lookups: g.usize_in(0, 1000),
+        radix_hits: g.usize_in(0, 1000),
+        radix_hit_tokens: g.usize_in(0, 100_000),
+        radix_cow_splits: g.usize_in(0, 100),
+        radix_evicted_pages: g.usize_in(0, 1000),
+        radix_shared_pages: g.usize_in(0, 1000),
+        radix_shared_bytes: g.usize_in(0, 1 << 20),
         by_class: [rand_class(g), rand_class(g), rand_class(g)],
     }
 }
@@ -86,6 +93,13 @@ fn metrics_eq(a: &Metrics, b: &Metrics) -> bool {
         && a.cancelled == b.cancelled
         && a.retries == b.retries
         && a.model_reloads == b.model_reloads
+        && a.radix_lookups == b.radix_lookups
+        && a.radix_hits == b.radix_hits
+        && a.radix_hit_tokens == b.radix_hit_tokens
+        && a.radix_cow_splits == b.radix_cow_splits
+        && a.radix_evicted_pages == b.radix_evicted_pages
+        && a.radix_shared_pages == b.radix_shared_pages
+        && a.radix_shared_bytes == b.radix_shared_bytes
         && a.by_class.iter().zip(&b.by_class).all(|(x, y)| class_eq(x, y))
 }
 

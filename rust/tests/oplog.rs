@@ -10,8 +10,9 @@ use prefixquant::coordinator::continuous::run_to_completion;
 use prefixquant::coordinator::failpoint::names;
 use prefixquant::coordinator::oplog::frame;
 use prefixquant::coordinator::{
-    read_log, replay, BackendDesc, FailAction, Failpoints, FinishReason, GenRequest, GenResponse,
-    Oplog, Router, RouterConfig, Server, ServerConfig, SimBackend, StreamEvent, TraceView,
+    compact, read_log, replay, BackendDesc, FailAction, Failpoints, FinishReason, GenRequest,
+    GenResponse, Oplog, Router, RouterConfig, Server, ServerConfig, SimBackend, StreamEvent,
+    TraceView,
 };
 use prefixquant::model::QuantMode;
 use prefixquant::util::prop::{check, Gen};
@@ -343,6 +344,57 @@ fn recovered_journal_extends_across_router_generations() {
     let view = TraceView::from_entries(&read_log(&path).unwrap().entries);
     assert_eq!(view.records.len(), 2, "both generations share one journal");
     assert!(view.unfinished().next().is_none());
+    std::fs::remove_file(&path).ok();
+}
+
+/// `pq oplog compact` round-trip: run finished traffic plus one in-flight
+/// stream, crash, compact the journal, and `Router::recover` on the
+/// compacted log resumes identically — same worklist, token-identical
+/// completion, and a sequence counter still above every journaled id.
+#[test]
+fn recovery_from_a_compacted_journal_resumes_identically() {
+    let path = tmp("compacted");
+    let log = Oplog::create(&path, &sim_desc()).unwrap();
+    let router = Router::new(vec![sim_worker(5)], RouterConfig::default().oplog(log)).unwrap();
+    // three finished records: dead weight compaction must drop
+    for i in 0..3 {
+        let resp =
+            router.submit(GenRequest::new(0, test_prompt(i), 4)).unwrap().collect().unwrap();
+        assert_eq!(resp.finish, FinishReason::Length);
+    }
+    // one stream crashes mid-decode with tokens on the wire
+    let inflight = GenRequest::new(0, test_prompt(7), 8);
+    let h = router.submit(inflight.clone()).unwrap();
+    match h.recv().expect("first token") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token, got {ev:?}"),
+    }
+    router.simulate_crash();
+
+    let rep = compact(&path).unwrap();
+    assert_eq!(rep.dropped_requests, 3, "every finished record below the in-flight seq goes");
+    assert!(rep.dropped_entries > 0, "compaction must actually shrink the entry stream");
+    assert!(rep.bytes_after < rep.bytes_before, "the file shrinks on disk");
+    let view = TraceView::from_entries(&read_log(&path).unwrap().entries);
+    assert_eq!(view.max_seq(), Some(3), "the highest journaled seq survives compaction");
+    assert_eq!(view.unfinished().map(|r| r.seq).collect::<Vec<_>>(), vec![3]);
+
+    // recovery on the compacted log behaves exactly like on the full one
+    let (router2, resumed) =
+        Router::recover(vec![sim_worker(0)], RouterConfig::default(), &path).unwrap();
+    assert_eq!(resumed.len(), 1, "the in-flight stream is still the recovery worklist");
+    let h2 = router2.submit(GenRequest::new(0, test_prompt(9), 4)).unwrap();
+    assert!(h2.id() >= 4, "recovered sequence counter stays above every compacted-away id");
+    for h in resumed {
+        let resp = h.collect().expect("resumed stream completes");
+        assert_eq!(
+            resp.tokens,
+            reference(&inflight).tokens,
+            "resume from a compacted journal is token-identical"
+        );
+    }
+    h2.collect().expect("post-compaction traffic completes");
+    router2.shutdown();
     std::fs::remove_file(&path).ok();
 }
 

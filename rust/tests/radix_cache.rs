@@ -1,0 +1,323 @@
+//! Radix prefix-cache tests: copy-on-write byte preservation, eviction
+//! accounting under page pressure, engine-level token identity against the
+//! run-to-completion reference, and the server's `radix_cache` knob.  All on
+//! `SimBackend` — no artifacts required, deterministic under `PQ_THREADS=1`.
+//!
+//! The byte checks lean on the cache's own read path: every value is written
+//! as a known function of (token, position) and read back through
+//! `KvCache::k_at`/`v_at`, which resolve the slot's page table — so a CoW
+//! that mutates a shared page, a mapping that points at an evicted page, or
+//! a leak that lets a live page be re-allocated all surface as a mismatch.
+
+use std::time::Duration;
+
+use prefixquant::coordinator::continuous::{run_to_completion, DecodeBackend, SimBackend};
+use prefixquant::coordinator::{
+    ContinuousEngine, FinishReason, GenRequest, GenResponse, KvCache, KvLayout, Server,
+    ServerConfig, StreamEvent,
+};
+use prefixquant::model::QuantMode;
+use prefixquant::tensor::Tensor;
+use prefixquant::util::prop::{check, Gen};
+
+const PS: usize = 4;
+const N_PREFIX: usize = 2;
+const MAX_NEW: usize = 2;
+const LAYERS: usize = 2;
+const HEADS: usize = 2;
+const D_HEAD: usize = 4;
+
+/// Radix-enabled paged cache with the sim geometry (2 slots, 2 prefix
+/// tokens → 1 prefix page) over a `pool_pages`-page pool.
+fn radix_kv(pool_pages: usize) -> KvCache {
+    let be = SimBackend::new(2, 32, N_PREFIX, 64)
+        .with_kv_layout(KvLayout::Paged { page_size: PS, n_pages: pool_pages });
+    let mut kv = be.new_cache().expect("cache boots");
+    kv.enable_radix().expect("radix enables on the paged layout");
+    kv
+}
+
+/// The known K/V fill value for `tok` at absolute cache position `pos`
+/// (mirrors the sim backend's style: exactly representable small integers).
+fn val_at(tok: i32, pos: usize) -> f32 {
+    ((tok as i64 * 31 + pos as i64 * 7 + 3).rem_euclid(997)) as f32
+}
+
+/// Append `tokens[from..]` into `slot` (positions `from..` of its own
+/// region), each cell holding `val_at(token, position)`.
+fn fill_row(kv: &mut KvCache, slot: usize, tokens: &[i32], from: usize) {
+    for (i, &t) in tokens.iter().enumerate().skip(from) {
+        let pos = kv.row_len(slot);
+        assert_eq!(pos, N_PREFIX + i, "appends are contiguous");
+        let cell = Tensor::full(&[LAYERS, HEADS, D_HEAD], val_at(t, pos));
+        kv.append_token_row(slot, &cell, &cell).expect("append within reservation");
+    }
+}
+
+/// Read `slot` back through its page table and compare every position —
+/// matched pages, CoW copies, and plain appends alike — to the expected
+/// fill values.
+fn row_bytes_ok(kv: &KvCache, slot: usize, tokens: &[i32]) -> Result<(), String> {
+    for (i, &t) in tokens.iter().enumerate() {
+        let pos = N_PREFIX + i;
+        let want = val_at(t, pos);
+        for l in 0..LAYERS {
+            for h in 0..HEADS {
+                let k = kv.k_at(l, slot, h, pos)[0];
+                let v = kv.v_at(l, slot, h, pos)[0];
+                if k != want || v != want {
+                    return Err(format!(
+                        "slot {slot} pos {pos} (token {t}) holds k={k} v={v}, want {want}"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// CoW property: a request that diverges inside a shared page gets a private
+/// copy, and the shared page's bytes survive for the next exact-match reuse.
+/// Also pins the match arithmetic: matched = min(divergence, full inserted
+/// pages), capped one token short of the prompt, and every non-page-aligned
+/// match is exactly one CoW split.
+#[test]
+fn cow_preserves_shared_page_bytes_under_divergence() {
+    check(
+        "radix-cow-bytes",
+        60,
+        |g: &mut Gen| {
+            let len_a = g.usize_in(5, 12);
+            let d = g.usize_in(1, len_a - 1);
+            let tail = g.usize_in(1, 3);
+            let a: Vec<i32> = (0..len_a).map(|_| 10 + g.usize_in(0, 180) as i32).collect();
+            let b: Vec<i32> = a[..d]
+                .iter()
+                .copied()
+                .chain((0..tail).map(|_| 200 + g.usize_in(0, 60) as i32))
+                .collect();
+            (a, b, d)
+        },
+        |(a, b, d)| {
+            let d = *d;
+            let mut kv = radix_kv(16);
+            // round 1: cold run of A seeds the tree with its full pages
+            let m0 = kv
+                .admit_radix(0, a.len(), MAX_NEW, a)
+                .map_err(|e| e.to_string())?
+                .ok_or("cold admission deferred")?;
+            if m0 != 0 {
+                return Err(format!("empty tree matched {m0} positions"));
+            }
+            fill_row(&mut kv, 0, a, 0);
+            kv.radix_insert(0, a).map_err(|e| e.to_string())?;
+            kv.reset_slot(0).map_err(|e| e.to_string())?;
+            let full_a = a.len() / PS * PS;
+
+            // round 2: B shares d tokens then diverges — the match stops at
+            // the divergence (or at A's last full inserted page)
+            let mb = kv
+                .admit_radix(0, b.len(), MAX_NEW, b)
+                .map_err(|e| e.to_string())?
+                .ok_or("B deferred with a roomy pool")?;
+            if mb != d.min(full_a) {
+                return Err(format!("B matched {mb}, want {}", d.min(full_a)));
+            }
+            fill_row(&mut kv, 0, b, mb);
+
+            // round 3: A again, in the other slot — the pages B diverged
+            // from must still hold A's bytes
+            let ma = kv
+                .admit_radix(1, a.len(), MAX_NEW, a)
+                .map_err(|e| e.to_string())?
+                .ok_or("A re-admission deferred")?;
+            if ma != full_a.min(a.len() - 1) {
+                return Err(format!("A rematched {ma}, want {}", full_a.min(a.len() - 1)));
+            }
+            fill_row(&mut kv, 1, a, ma);
+
+            row_bytes_ok(&kv, 0, b)?;
+            row_bytes_ok(&kv, 1, a)?;
+            let st = kv.radix_stats().expect("paged stats");
+            let want_cow = usize::from(mb % PS != 0) + usize::from(ma % PS != 0);
+            if st.cow_splits != want_cow {
+                return Err(format!("{} CoW splits, want {want_cow}", st.cow_splits));
+            }
+            if st.hit_tokens != mb + ma {
+                return Err(format!("{} hit tokens, want {}", st.hit_tokens, mb + ma));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Eviction property: churning sequences through a page-starved pool while
+/// one row stays live never corrupts the live row, never strands a page
+/// (used == prefix + live row + tree after every retirement), and a final
+/// flush returns everything except the prefix page.
+#[test]
+fn eviction_under_pressure_leaks_nothing_and_spares_referenced_pages() {
+    check(
+        "radix-evict-accounting",
+        40,
+        |g: &mut Gen| {
+            let base: Vec<i32> = (0..12).map(|_| 10 + g.usize_in(0, 120) as i32).collect();
+            let churn: Vec<Vec<i32>> = (0..10)
+                .map(|_| {
+                    if g.bool() {
+                        let cut = g.usize_in(4, 10);
+                        let mut s = base[..cut].to_vec();
+                        s.push(150 + g.usize_in(0, 40) as i32);
+                        s
+                    } else {
+                        (0..g.usize_in(4, 10)).map(|_| 10 + g.usize_in(0, 120) as i32).collect()
+                    }
+                })
+                .collect();
+            (base, churn)
+        },
+        |(base, churn)| {
+            let mut kv = radix_kv(12);
+            // the long-lived row: admitted cold, held across every eviction
+            let live = base[..8].to_vec();
+            let m = kv
+                .admit_radix(0, live.len(), MAX_NEW, &live)
+                .map_err(|e| e.to_string())?
+                .ok_or("live row deferred on an empty pool")?;
+            fill_row(&mut kv, 0, &live, m);
+            let mut admitted = 0usize;
+            for seq in churn {
+                let Some(m) =
+                    kv.admit_radix(1, seq.len(), MAX_NEW, seq).map_err(|e| e.to_string())?
+                else {
+                    continue; // pool too tight this round: safe defer, not a leak
+                };
+                admitted += 1;
+                fill_row(&mut kv, 1, seq, m);
+                row_bytes_ok(&kv, 1, seq)?;
+                // pressure/eviction must never touch the live row's pages
+                row_bytes_ok(&kv, 0, &live)?;
+                kv.radix_insert(1, seq).map_err(|e| e.to_string())?;
+                kv.reset_slot(1).map_err(|e| e.to_string())?;
+                let used = kv.total_pages().expect("paged") - kv.free_pages().expect("paged");
+                let shared = kv.radix_stats().expect("paged stats").shared_pages;
+                if used != 1 + 2 + shared {
+                    return Err(format!(
+                        "page leak: {used} used vs prefix 1 + live 2 + shared {shared}"
+                    ));
+                }
+            }
+            if admitted == 0 {
+                return Err("no churn admission succeeded".into());
+            }
+            kv.reset_slot(0).map_err(|e| e.to_string())?;
+            kv.radix_flush().map_err(|e| e.to_string())?;
+            if kv.free_pages() != Some(kv.total_pages().expect("paged") - 1) {
+                return Err(format!(
+                    "flush stranded pages: {:?} free of {:?}",
+                    kv.free_pages(),
+                    kv.total_pages()
+                ));
+            }
+            if kv.radix_stats().expect("paged stats").shared_pages != 0 {
+                return Err("flushed tree still reports shared pages".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+fn drain(rx: &std::sync::mpsc::Receiver<StreamEvent>) -> GenResponse {
+    loop {
+        match rx.recv().expect("stream alive") {
+            StreamEvent::Token(_) => {}
+            StreamEvent::Done(resp) => return resp,
+            StreamEvent::Error(e) => panic!("stream errored: {e}"),
+        }
+    }
+}
+
+/// Mixed shared/unique workload: 2 of every 3 requests share a 12-token
+/// prefix (+1 unique token), the rest are fully unique 13-token prompts.
+fn mixed_reqs(n: usize, max_new: usize) -> Vec<GenRequest> {
+    let shared: Vec<i32> = (0..12).map(|i| 20 + i).collect();
+    (0..n)
+        .map(|i| {
+            let prompt: Vec<i32> = if i % 3 == 2 {
+                (0..13).map(|j| 10 + ((100 + 17 * i + j) % 180) as i32).collect()
+            } else {
+                let mut p = shared.clone();
+                p.push(60 + i as i32);
+                p
+            };
+            GenRequest::new(i as u64, prompt, max_new)
+        })
+        .collect()
+}
+
+/// The radix engine on a page-starved pool streams token-identically to the
+/// run-to-completion reference (the sim's next token hashes the stored row
+/// bytes, so this is a byte-level check of matched and CoW'd pages), and
+/// every radix counter is reproducible run over run.
+#[test]
+fn radix_engine_is_token_identical_to_the_reference_and_deterministic() {
+    let reqs = mixed_reqs(12, 4);
+    let reference =
+        run_to_completion(&SimBackend::new(4, 32, N_PREFIX, 64), &reqs).expect("reference run");
+    let mut last: Option<(usize, usize, usize, usize)> = None;
+    for round in 0..2 {
+        let be = SimBackend::new(4, 32, N_PREFIX, 64)
+            .with_kv_layout(KvLayout::Paged { page_size: PS, n_pages: 18 });
+        let mut engine =
+            ContinuousEngine::new(be).expect("engine").with_radix_cache().expect("radix on");
+        let rxs: Vec<_> = reqs.iter().map(|r| engine.submit_stream(r.clone())).collect();
+        engine.run_to_idle().expect("engine drains");
+        for (rx, oracle) in rxs.iter().zip(&reference) {
+            let resp = drain(rx);
+            assert_eq!(resp.finish, FinishReason::Length, "round {round} seq {}", resp.id);
+            assert_eq!(
+                resp.tokens, oracle.tokens,
+                "round {round} seq {}: radix stream must match the reference",
+                resp.id
+            );
+        }
+        let m = engine.metrics();
+        assert!(m.radix_hit_tokens > 0, "round {round}: shared prefixes must hit the cache");
+        let now =
+            (m.radix_hit_tokens, m.radix_cow_splits, m.radix_evicted_pages, m.prefill_tokens);
+        if let Some(prev) = last.replace(now) {
+            assert_eq!(prev, now, "radix counters must be deterministic across runs");
+        }
+    }
+}
+
+/// `ServerConfig::radix_cache(true)` wires the cache into the worker engine:
+/// streams stay reference-identical and the server's metrics snapshot
+/// carries the radix counters.
+#[test]
+fn server_radix_knob_reports_cache_metrics_and_matches_reference() {
+    let reqs = mixed_reqs(8, 3);
+    let reference =
+        run_to_completion(&SimBackend::new(4, 32, N_PREFIX, 64), &reqs).expect("reference run");
+    let cfg = ServerConfig::builder(QuantMode::Static)
+        .batch_window(Duration::from_millis(1))
+        .radix_cache(true)
+        .build();
+    let server = Server::start_sim(
+        move || {
+            Ok(SimBackend::new(4, 32, N_PREFIX, 64)
+                .with_kv_layout(KvLayout::Paged { page_size: PS, n_pages: 20 }))
+        },
+        cfg,
+    )
+    .expect("server boots");
+    let handles: Vec<_> = reqs.iter().map(|r| server.submit(r.clone()).expect("submit")).collect();
+    for (h, oracle) in handles.into_iter().zip(&reference) {
+        let resp = h.recv().expect("reply").expect("stream completes");
+        assert_eq!(resp.tokens, oracle.tokens, "served stream must match the reference");
+    }
+    let m = server.metrics().expect("metrics");
+    assert!(m.radix_lookups >= reqs.len(), "every admission consults the tree: {m:?}");
+    assert!(m.radix_hit_tokens > 0, "later shared requests must hit pages: {m:?}");
+    server.shutdown();
+}
