@@ -223,14 +223,21 @@ fn main() -> Result<()> {
         }
         println!(
             "  class {:>12}: {} served, {} preempted, {} cancelled | \
-             TTFT {:.0}ms queue {:.0}ms",
+             TTFT p50 {:.1}ms p99 {:.1}ms (mean {:.0}ms, queue {:.0}ms) | \
+             TPOT p50 {:.1}ms",
             p.name(),
             c.completed,
             c.preemptions,
             c.cancelled,
+            c.ttft_hist.p50() * 1e3,
+            c.ttft_hist.p99() * 1e3,
             c.mean_ttft() * 1e3,
-            c.mean_queue_wait() * 1e3
+            c.mean_queue_wait() * 1e3,
+            c.tpot_hist.p50() * 1e3
         );
+    }
+    if m.deadline_misses > 0 {
+        println!("  deadline misses: {}", m.deadline_misses);
     }
     if m.kv_resident_bytes > 0 {
         println!(

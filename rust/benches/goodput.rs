@@ -1,0 +1,197 @@
+//! Headline serving bench: SLO **goodput** vs offered load, swept past the
+//! saturation knee on the mixed open-loop workload.
+//!
+//! Two fleets face identical seeded traces at each offered load:
+//!
+//! - **baseline**: Fcfs scheduling, round-robin dispatch, radix cache off —
+//!   the no-policy stack;
+//! - **full stack**: PriorityPreempt scheduling, least-loaded dispatch,
+//!   radix prefix cache on.
+//!
+//! The driver is open-loop (arrivals never wait for completions), so
+//! overload shows up as collapsing attainment instead of a silently
+//! stretched clock.  Per-call busy-wait costs on the sim backend make fleet
+//! capacity a property of the cost model, so the knee lands mid-sweep on
+//! any host.
+//!
+//!   cargo bench --bench goodput            # full sweep
+//!   cargo bench --bench goodput -- --smoke # CI trail (3 loads)
+//!
+//! Emits `BENCH_goodput.json` and ASSERTS the headline wins:
+//! - traces are deterministic (same seed → identical fingerprint, and both
+//!   sweeps replay byte-identical traffic);
+//! - the full-stack sweep bends (goodput at the deepest overload is below
+//!   the knee);
+//! - at an offered load where the baseline falls under 90% SLO attainment,
+//!   the full stack sustains ≥1.5x the baseline's goodput.
+//!
+//! No artifacts required.
+
+use std::time::Duration;
+
+use prefixquant::bench_support::{emit_bench_json, smoke_mode};
+use prefixquant::coordinator::{
+    DispatchPolicy, Fcfs, KvLayout, LeastLoaded, PriorityPreempt, RoundRobin, Router,
+    RouterConfig, SchedulePolicy, Server, ServerConfig, SimBackend,
+};
+use prefixquant::util::table::Table;
+use prefixquant::workload::{run_trace, sweep_rates, Target, Workload};
+
+const B_EXEC: usize = 4;
+const S_EXEC: usize = 96;
+const N_PREFIX: usize = 1;
+const CACHE_MAX: usize = 192;
+const N_WORKERS: usize = 2;
+const SEED: u64 = 0x600D;
+
+/// Boot a two-worker sim fleet: the full serving stack, or the baseline.
+fn fleet(full_stack: bool) -> anyhow::Result<Target> {
+    let workers = (0..N_WORKERS)
+        .map(|_| {
+            let sched: Box<dyn SchedulePolicy> = if full_stack {
+                Box::new(PriorityPreempt::default())
+            } else {
+                Box::new(Fcfs)
+            };
+            Server::start_sim(
+                move || {
+                    Ok(SimBackend::new(B_EXEC, S_EXEC, N_PREFIX, CACHE_MAX)
+                        .with_costs(Duration::from_micros(500), Duration::from_millis(1)))
+                },
+                ServerConfig::builder(prefixquant::model::QuantMode::Static)
+                    .max_batch(B_EXEC)
+                    .batch_window(Duration::from_millis(1))
+                    .policy(sched)
+                    .kv(KvLayout::Paged { page_size: 8, n_pages: 0 })
+                    .radix_cache(full_stack)
+                    .build(),
+            )
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let dispatch: Box<dyn DispatchPolicy> = if full_stack {
+        Box::new(LeastLoaded::new())
+    } else {
+        Box::new(RoundRobin::new())
+    };
+    Ok(Target::Router(Router::new(workers, RouterConfig::default().policy(dispatch))?))
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let (rates, duration_s, min_req): (Vec<f64>, f64, usize) = if smoke {
+        (vec![150.0, 600.0, 2400.0], 0.3, 40)
+    } else {
+        (vec![75.0, 150.0, 300.0, 600.0, 1200.0, 2400.0], 1.0, 60)
+    };
+    let workload = Workload::mixed(SEED);
+
+    // determinism gate: the trace at every swept rate is a pure function of
+    // the spec — regeneration must be byte-identical
+    for &r in &rates {
+        let n = ((r * duration_s).ceil() as usize).max(min_req);
+        let a = workload.clone().with_rate(r).with_requests(n).generate();
+        let b = workload.clone().with_rate(r).with_requests(n).generate();
+        assert_eq!(a, b, "trace generation must be pure at {r} rps");
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    // warm both stacks with a throwaway run (thread spin-up, first faults)
+    for full in [false, true] {
+        let warm = workload.clone().with_rate(100.0).with_requests(10).generate();
+        let target = fleet(full).expect("warm fleet");
+        let _ = run_trace(&warm, &target);
+        target.shutdown();
+    }
+
+    eprintln!(
+        "sweeping {} offered loads x 2 stacks ({N_WORKERS} workers, mixed workload){}",
+        rates.len(),
+        if smoke { " [smoke]" } else { "" }
+    );
+    let baseline = sweep_rates(&workload, &rates, duration_s, min_req, || fleet(false))
+        .expect("baseline sweep");
+    let full = sweep_rates(&workload, &rates, duration_s, min_req, || fleet(true))
+        .expect("full-stack sweep");
+
+    // both sweeps must have faced byte-identical offered traffic
+    for (b, f) in baseline.points.iter().zip(&full.points) {
+        assert_eq!(
+            b.trace_fingerprint, f.trace_fingerprint,
+            "stacks must be swept with identical traces"
+        );
+    }
+
+    let mut t = Table::new(
+        "SLO goodput vs offered load (baseline: fcfs/round-robin/no-radix; \
+         full: priority-preempt/least-loaded/radix)",
+        &[
+            "offered rps",
+            "base goodput",
+            "base attain",
+            "full goodput",
+            "full attain",
+            "goodput ratio",
+        ],
+    );
+    let mut best_ratio = 0.0f64;
+    let mut best_rate = 0.0f64;
+    let mut qualifying = 0usize;
+    for (b, f) in baseline.points.iter().zip(&full.points) {
+        let ratio = f.score.goodput_rps / b.score.goodput_rps.max(1e-9);
+        t.rowv(vec![
+            format!("{:.0}", b.offered_rps),
+            format!("{:.1}", b.score.goodput_rps),
+            format!("{:.3}", b.score.attainment),
+            format!("{:.1}", f.score.goodput_rps),
+            format!("{:.3}", f.score.attainment),
+            format!("{ratio:.2}x"),
+        ]);
+        if b.score.attainment < 0.90 {
+            qualifying += 1;
+            if ratio > best_ratio {
+                best_ratio = ratio;
+                best_rate = b.offered_rps;
+            }
+        }
+    }
+    t.print();
+    let knee = full.knee_point();
+    println!(
+        "\nfull-stack knee: {:.0} rps offered -> {:.1} rps goodput; \
+         best overload win: {best_ratio:.2}x at {best_rate:.0} rps offered",
+        knee.offered_rps, knee.score.goodput_rps
+    );
+
+    assert!(
+        qualifying > 0,
+        "sweep must reach an offered load where the baseline misses 90% SLO attainment"
+    );
+    assert!(
+        full.saturated(),
+        "sweep must run past the full stack's saturation knee (knee at {:.0} rps, \
+         last point {:.0} rps)",
+        knee.offered_rps,
+        full.points.last().map(|p| p.offered_rps).unwrap_or(0.0)
+    );
+    assert!(
+        best_ratio >= 1.5,
+        "full stack must sustain >=1.5x baseline goodput under overload (got {best_ratio:.2}x)"
+    );
+
+    let mut fields: Vec<(String, f64)> = Vec::new();
+    for (b, f) in baseline.points.iter().zip(&full.points) {
+        let r = b.offered_rps as u64;
+        fields.push((format!("offered_rps_{r}"), b.offered_rps));
+        fields.push((format!("baseline_goodput_rps_{r}"), b.score.goodput_rps));
+        fields.push((format!("baseline_attainment_{r}"), b.score.attainment));
+        fields.push((format!("full_goodput_rps_{r}"), f.score.goodput_rps));
+        fields.push((format!("full_attainment_{r}"), f.score.attainment));
+    }
+    fields.push(("knee_offered_rps".to_string(), knee.offered_rps));
+    fields.push(("knee_goodput_rps".to_string(), knee.score.goodput_rps));
+    fields.push(("overload_goodput_ratio".to_string(), best_ratio));
+    fields.push(("overload_ratio_at_rps".to_string(), best_rate));
+    fields.push(("smoke".to_string(), if smoke { 1.0 } else { 0.0 }));
+    let field_refs: Vec<(&str, f64)> = fields.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    emit_bench_json("goodput", &field_refs);
+}

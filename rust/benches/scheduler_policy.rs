@@ -10,6 +10,11 @@
 //! model the fixed-geometry executable economics, so TTFT differences are
 //! real wall time.
 //!
+//! Both waves come from the seeded workload generator
+//! ([`Workload::single`] over [`Scenario::batch_fill`] /
+//! [`Scenario::interactive_burst`]), so the request population is shared
+//! byte-for-byte across the two policy runs by construction.
+//!
 //!   cargo bench --bench scheduler_policy            # full run
 //!   cargo bench --bench scheduler_policy -- --smoke # CI perf trail
 //!
@@ -26,6 +31,7 @@ use prefixquant::coordinator::{
     Fcfs, GenRequest, Priority, PriorityPreempt, SchedulePolicy, StreamEvent,
 };
 use prefixquant::util::table::Table;
+use prefixquant::workload::{Scenario, Workload};
 
 const B_EXEC: usize = 4;
 const S_EXEC: usize = 48;
@@ -53,20 +59,30 @@ struct RunStats {
     streams: HashMap<u64, Vec<i32>>,
 }
 
-fn batch_req(i: usize) -> GenRequest {
-    GenRequest::builder(i as u64)
-        .prompt(vec![5 + (i % 7) as i32; 10])
-        .max_new(24)
-        .priority(Priority::Batch)
-        .build()
-}
-
-fn inter_req(i: usize) -> GenRequest {
-    GenRequest::builder(1000 + i as u64)
-        .prompt(vec![4 + (i % 5) as i32; 4])
-        .max_new(2)
-        .priority(Priority::Interactive)
-        .build()
+/// Seeded request waves from the workload generator: a saturating Batch
+/// fill and a short Interactive burst.  Interactive ids are offset so the
+/// two waves never collide in the stream map.
+fn waves(n_batch: usize, n_inter: usize) -> (Vec<GenRequest>, Vec<GenRequest>) {
+    let batch: Vec<GenRequest> = Workload::single("batch-fill", Scenario::batch_fill(), 0xBEEF)
+        .with_requests(n_batch)
+        .generate()
+        .events
+        .into_iter()
+        .map(|e| e.req)
+        .collect();
+    let inter: Vec<GenRequest> =
+        Workload::single("interactive-burst", Scenario::interactive_burst(), 0xCAFE)
+            .with_requests(n_inter)
+            .generate()
+            .events
+            .into_iter()
+            .map(|e| {
+                let mut r = e.req;
+                r.id += 1000;
+                r
+            })
+            .collect();
+    (batch, inter)
 }
 
 /// Saturate the slots with Batch work, then submit the Interactive burst.
@@ -76,18 +92,19 @@ fn run(
     n_inter: usize,
     costs: (Duration, Duration),
 ) -> RunStats {
+    let (batch, inter) = waves(n_batch, n_inter);
     let be = SimBackend::new(B_EXEC, S_EXEC, N_PREFIX, CACHE_MAX).with_costs(costs.0, costs.1);
     let mut engine = ContinuousEngine::new(be).expect("engine").with_policy(policy);
     let t0 = Instant::now();
     let mut rxs = Vec::new();
-    for i in 0..n_batch {
-        rxs.push((Priority::Batch, engine.submit_stream(batch_req(i))));
+    for req in batch {
+        rxs.push((Priority::Batch, engine.submit_stream(req)));
     }
     // let the batch load occupy every slot and start decoding
     engine.step().expect("warm step");
     engine.step().expect("warm step");
-    for i in 0..n_inter {
-        rxs.push((Priority::Interactive, engine.submit_stream(inter_req(i))));
+    for req in inter {
+        rxs.push((Priority::Interactive, engine.submit_stream(req)));
     }
     engine.run_to_idle().expect("drain");
     let wall_s = t0.elapsed().as_secs_f64();
@@ -128,8 +145,8 @@ fn main() {
         (Duration::from_micros(2000), Duration::from_micros(600))
     };
     println!(
-        "workload: {n_batch} batch (24 new) saturating {B_EXEC} slots, then {n_inter} \
-         interactive (2 new){}",
+        "workload: {n_batch} generated batch-fill (20-24 new) saturating {B_EXEC} slots, \
+         then {n_inter} generated interactive (2 new){}",
         if smoke { " [smoke]" } else { "" }
     );
 

@@ -103,6 +103,13 @@ pub struct WorkerFleetMetrics {
     /// cache positions this worker served from its radix cache instead of
     /// prefill (cumulative, as of the last probe)
     pub radix_hit_tokens: usize,
+    /// engine-side TTFT p50, from the worker's merged per-class latency
+    /// histograms at the last probe (log2-bucket upper bound, seconds)
+    pub ttft_p50_s: f64,
+    /// engine-side TTFT p99 at the last probe (bucket upper bound, seconds)
+    pub ttft_p99_s: f64,
+    /// terminals this worker delivered after their request's deadline budget
+    pub deadline_misses: usize,
 }
 
 /// One fleet-wide report: router counters, per-worker breakdown, and every

@@ -1025,6 +1025,9 @@ impl Core {
                 last_progress: ws.health.last_progress(),
                 radix_shared_pages: ws.last_metrics.radix_shared_pages,
                 radix_hit_tokens: ws.last_metrics.radix_hit_tokens,
+                ttft_p50_s: ws.last_metrics.ttft_hist().p50(),
+                ttft_p99_s: ws.last_metrics.ttft_hist().p99(),
+                deadline_misses: ws.last_metrics.deadline_misses,
             });
         }
         FleetReport { fleet: self.fleet.clone(), workers, merged }

@@ -170,6 +170,8 @@ pub struct EngineStats {
     pub sum_ttft_s: f64,
     pub sum_queue_s: f64,
     pub sum_total_s: f64,
+    /// non-cancelled terminals delivered after the request's deadline budget
+    pub deadline_misses: usize,
     /// per admission wave: the longest submit→dispatch wait in the wave
     pub sum_dispatch_skew_s: f64,
     pub t_prefill_s: f64,
@@ -210,6 +212,7 @@ impl EngineStats {
             radix_evicted_pages: 0,
             radix_shared_pages: 0,
             radix_shared_bytes: 0,
+            deadline_misses: self.deadline_misses,
             by_class: self.per_class,
         }
     }
@@ -393,7 +396,9 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
                 // (rebuild-retried mid-prefill): keep sum_ttft_s paired with
                 // stats.admitted by recording the termination time
                 self.stats.sum_ttft_s += total_s;
-                self.stats.per_class[p.req.priority.index()].sum_ttft_s += total_s;
+                let cls = &mut self.stats.per_class[p.req.priority.index()];
+                cls.sum_ttft_s += total_s;
+                cls.ttft_hist.record(total_s);
             }
             let resp = GenResponse {
                 id: p.req.id,
@@ -459,7 +464,9 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
             // entry so sum_ttft_s keeps pairing 1:1 with stats.admitted
             a.ttft = Some(total_s);
             self.stats.sum_ttft_s += total_s;
-            self.stats.per_class[a.req.priority.index()].sum_ttft_s += total_s;
+            let cls = &mut self.stats.per_class[a.req.priority.index()];
+            cls.sum_ttft_s += total_s;
+            cls.ttft_hist.record(total_s);
         }
         if reason == FinishReason::Cancelled {
             self.stats.cancelled += 1;
@@ -467,7 +474,17 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
         } else {
             self.stats.completed += 1;
             self.stats.sum_total_s += total_s;
-            self.stats.per_class[a.req.priority.index()].completed += 1;
+            let cls = &mut self.stats.per_class[a.req.priority.index()];
+            cls.completed += 1;
+            if a.tokens.len() >= 2 {
+                let ttft = a.ttft.unwrap_or(0.0);
+                cls.tpot_hist.record((total_s - ttft).max(0.0) / (a.tokens.len() - 1) as f64);
+            }
+            if let Some(d) = a.req.deadline {
+                if total_s > d.as_secs_f64() {
+                    self.stats.deadline_misses += 1;
+                }
+            }
         }
         if self.kv.radix_enabled() {
             // Offer the retiring row's pages to the prefix cache before
@@ -578,7 +595,9 @@ impl<B: DecodeBackend> ContinuousEngine<B> {
             let ttft_s = a.submitted.elapsed().as_secs_f64();
             a.ttft = Some(ttft_s);
             self.stats.sum_ttft_s += ttft_s;
-            self.stats.per_class[a.req.priority.index()].sum_ttft_s += ttft_s;
+            let cls = &mut self.stats.per_class[a.req.priority.index()];
+            cls.sum_ttft_s += ttft_s;
+            cls.ttft_hist.record(ttft_s);
         }
         let mut done = false;
         if a.tokens.len() < a.req.max_new {

@@ -64,8 +64,9 @@ pub use oplog::{
 pub use policy::{Fcfs, PriorityPreempt, QueueView, SchedulePolicy, SlotView};
 pub use radix::{RadixMatch, RadixStats, RadixTree};
 pub use request::{
-    ClassMetrics, DrainReport, FinishReason, GenRequest, GenRequestBuilder, GenResponse, Metrics,
-    Priority, ProbeState, Reply, RoutedEvent, StreamEvent, WorkerPostMortem, WorkerProbe,
+    ClassMetrics, DrainReport, FinishReason, GenRequest, GenRequestBuilder, GenResponse,
+    LatencyHistogram, Metrics, Priority, ProbeState, Reply, RoutedEvent, StreamEvent,
+    WorkerPostMortem, WorkerProbe,
 };
 pub use server::{
     BackendSource, EngineKind, RequestHandle, Server, ServerConfig, ServerConfigBuilder,

@@ -89,7 +89,8 @@ pub struct GenRequest {
     pub priority: Priority,
     /// latency budget from submission, used by policies as an ordering hint
     /// (a tighter deadline sorts earlier within a class); requests are NOT
-    /// killed on expiry
+    /// killed on expiry, but a terminal delivered after the budget elapses
+    /// counts in [`Metrics::deadline_misses`]
     pub deadline: Option<Duration>,
     /// generation ends early when one of these tokens is emitted (the stop
     /// token itself is delivered, `FinishReason::Stop`)
@@ -358,6 +359,93 @@ pub struct WorkerPostMortem {
     pub dropped_queued: usize,
 }
 
+/// Fixed-bucket log2 latency histogram (microsecond-grained, mergeable).
+///
+/// Bucket `b` counts samples in `[2^b, 2^{b+1})` microseconds (sub-µs
+/// samples land in bucket 0; anything ≥ ~36 minutes clamps into the last
+/// bucket).  Recording, merging, and percentile extraction are all integer
+/// operations, so histograms aggregated across workers — or across runs —
+/// are deterministic: [`LatencyHistogram::merge`] is a commutative monoid
+/// exactly like the counters around it, and a percentile is always a bucket
+/// upper bound, never an interpolated float.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyHistogram {
+    counts: [u64; Self::BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { counts: [0; Self::BUCKETS] }
+    }
+}
+
+impl LatencyHistogram {
+    pub const BUCKETS: usize = 32;
+
+    /// Bucket index for a latency in seconds: `floor(log2(µs))`, clamped.
+    fn bucket(seconds: f64) -> usize {
+        let us = seconds.max(0.0) * 1e6;
+        if us < 1.0 {
+            return 0;
+        }
+        // us >= 1.0 and finite casts to a nonzero u64 (saturating on inf)
+        let us = us as u64;
+        ((63 - us.leading_zeros()) as usize).min(Self::BUCKETS - 1)
+    }
+
+    /// Representative value reported for bucket `b`: its upper bound, in
+    /// seconds (a percentile therefore never under-reports a latency).
+    fn bucket_upper_s(b: usize) -> f64 {
+        (1u64 << (b + 1).min(63)) as f64 * 1e-6
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.counts[Self::bucket(seconds)] += 1;
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (d, c) in self.counts.iter_mut().zip(&other.counts) {
+            *d += *c;
+        }
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// The `p`-quantile (`p` in [0, 1]) as a bucket upper bound in seconds.
+    /// Deterministic: the smallest bucket whose cumulative count reaches
+    /// `ceil(p * total)`.  Returns 0 for an empty histogram.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_upper_s(b);
+            }
+        }
+        Self::bucket_upper_s(Self::BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+}
+
 /// Per-priority-class serving counters (one entry per [`Priority`]).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ClassMetrics {
@@ -371,6 +459,11 @@ pub struct ClassMetrics {
     /// times a request of this class was preempted mid-decode
     pub preemptions: usize,
     pub cancelled: usize,
+    /// time-to-first-token distribution (recorded alongside `sum_ttft_s`)
+    pub ttft_hist: LatencyHistogram,
+    /// time-per-output-token distribution — `(total − ttft) / (tokens − 1)`,
+    /// recorded at completion for responses with ≥ 2 tokens
+    pub tpot_hist: LatencyHistogram,
 }
 
 impl ClassMetrics {
@@ -451,6 +544,9 @@ pub struct Metrics {
     pub radix_shared_pages: usize,
     /// bytes of K+V those shared pages pin resident (gauge)
     pub radix_shared_bytes: usize,
+    /// terminals (other than cancellations) delivered after the request's
+    /// [`GenRequest::deadline`] budget had already elapsed
+    pub deadline_misses: usize,
     /// per-priority-class breakdown (index = `Priority::index()`)
     pub by_class: [ClassMetrics; Priority::COUNT],
 }
@@ -486,6 +582,7 @@ impl Metrics {
         self.radix_evicted_pages += m.radix_evicted_pages;
         self.radix_shared_pages += m.radix_shared_pages;
         self.radix_shared_bytes += m.radix_shared_bytes;
+        self.deadline_misses += m.deadline_misses;
         for (d, c) in self.by_class.iter_mut().zip(&m.by_class) {
             d.requests += c.requests;
             d.completed += c.completed;
@@ -493,7 +590,27 @@ impl Metrics {
             d.sum_queue_s += c.sum_queue_s;
             d.preemptions += c.preemptions;
             d.cancelled += c.cancelled;
+            d.ttft_hist.merge(&c.ttft_hist);
+            d.tpot_hist.merge(&c.tpot_hist);
         }
+    }
+
+    /// TTFT distribution aggregated over all classes.
+    pub fn ttft_hist(&self) -> LatencyHistogram {
+        let mut h = LatencyHistogram::default();
+        for c in &self.by_class {
+            h.merge(&c.ttft_hist);
+        }
+        h
+    }
+
+    /// TPOT distribution aggregated over all classes.
+    pub fn tpot_hist(&self) -> LatencyHistogram {
+        let mut h = LatencyHistogram::default();
+        for c in &self.by_class {
+            h.merge(&c.tpot_hist);
+        }
+        h
     }
 
     /// Mean per-request time-to-first-token (includes queue wait).
@@ -597,6 +714,51 @@ mod tests {
         assert_eq!(a.model_reloads, 1);
         assert!((a.sum_ttft_s - 0.75).abs() < 1e-12);
         assert_eq!(a.by_class[Priority::Interactive.index()].completed, 5);
+    }
+
+    #[test]
+    fn histogram_buckets_merge_and_percentiles() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0.0, "empty histogram reports 0");
+        // 1µs → bucket 0 (upper bound 2µs); 3µs → bucket 1 (upper 4µs);
+        // 1ms = 1000µs → bucket 9 [512, 1024) (upper 1024µs)
+        h.record(1e-6);
+        h.record(3e-6);
+        h.record(1e-3);
+        assert_eq!(h.count(), 3);
+        assert!((h.p50() - 4e-6).abs() < 1e-12);
+        assert!((h.p99() - 1024e-6).abs() < 1e-9);
+        // percentiles never under-report: every sample ≤ its bucket upper
+        assert!(h.percentile(1.0) >= 1e-3);
+        // negative / zero / huge samples clamp instead of panicking
+        h.record(-1.0);
+        h.record(0.0);
+        h.record(1e9);
+        assert_eq!(h.count(), 6);
+        // merge is plain counter addition (commutative)
+        let mut a = LatencyHistogram::default();
+        a.record(5e-6);
+        let mut ab = a;
+        ab.merge(&h);
+        let mut ba = h;
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.count(), 7);
+    }
+
+    #[test]
+    fn merge_carries_deadline_misses_and_class_histograms() {
+        let mut a = Metrics { deadline_misses: 2, ..Metrics::default() };
+        a.by_class[Priority::Interactive.index()].ttft_hist.record(0.010);
+        let mut b = Metrics { deadline_misses: 3, ..Metrics::default() };
+        b.by_class[Priority::Interactive.index()].ttft_hist.record(0.020);
+        b.by_class[Priority::Batch.index()].tpot_hist.record(0.001);
+        a.merge(&b);
+        assert_eq!(a.deadline_misses, 5);
+        assert_eq!(a.by_class[Priority::Interactive.index()].ttft_hist.count(), 2);
+        assert_eq!(a.ttft_hist().count(), 2, "aggregate spans all classes");
+        assert_eq!(a.tpot_hist().count(), 1);
     }
 
     #[test]

@@ -737,6 +737,17 @@ fn worker_batch(model: &Model, cfg: &ServerConfig, rx: Receiver<Msg>) {
                         cls.completed += 1;
                         cls.sum_ttft_s += resp.ttft_s;
                         cls.sum_queue_s += resp.queue_s;
+                        cls.ttft_hist.record(resp.ttft_s);
+                        if resp.tokens.len() >= 2 {
+                            let tpot = (resp.total_s - resp.ttft_s).max(0.0)
+                                / (resp.tokens.len() - 1) as f64;
+                            cls.tpot_hist.record(tpot);
+                        }
+                        if let Some(d) = p.req.deadline {
+                            if resp.total_s > d.as_secs_f64() {
+                                metrics.deadline_misses += 1;
+                            }
+                        }
                         if let Some(reply) = waiters.remove(&resp.id) {
                             for &t in &resp.tokens {
                                 reply.token(t);

@@ -10,9 +10,11 @@
 //! Entry points: [`runtime::Engine`] loads artifacts, [`model::Model`] binds a
 //! checkpoint, [`quant::pipeline`] runs the PrefixQuant quantization flow,
 //! [`coordinator`] serves generation requests (run-to-completion or
-//! continuous batching), [`eval`] scores models.  All host-side compute of
-//! the quantize path (matmul, rotation folding, weight quantization, …)
-//! routes through the threaded [`kernels`] layer (`PQ_THREADS` knob).
+//! continuous batching), [`workload`] drives open-loop load against the
+//! serving layer and scores SLO goodput, [`eval`] scores models.  All
+//! host-side compute of the quantize path (matmul, rotation folding, weight
+//! quantization, …) routes through the threaded [`kernels`] layer
+//! (`PQ_THREADS` knob).
 
 pub mod bench_support;
 pub mod config;
@@ -27,6 +29,7 @@ pub mod runtime;
 pub mod tensor;
 pub mod tokenizer;
 pub mod util;
+pub mod workload;
 
 pub use anyhow::Result;
 

@@ -22,6 +22,16 @@
 //!                                  prefix-affinity (default); `--oplog`
 //!                                  journals every admission/token/outcome
 //!                                  to PATH and turns stream resume on
+//!   loadgen   [--rate R] [--requests N] [--seed S] [--workers W]
+//!             [--policy fcfs|priority] [--dispatch D] [--no-radix]
+//!             [--arrival poisson|bursty|heavy-tail] [--duration SECS]
+//!             [--sweep] [--rates R1,R2,..] [--oplog PATH] [--json]
+//!                                — open-loop workload against a sim-backed
+//!                                  fleet (no artifacts needed): seeded
+//!                                  deterministic trace, per-class SLO
+//!                                  attainment, goodput; `--sweep` walks
+//!                                  offered load past the saturation knee;
+//!                                  `--oplog` captures the run for replay
 //!   replay    <oplog> [--workers N]
 //!                                — re-execute a captured trace on a fresh
 //!                                  fleet (booted per the journal's backend
@@ -41,9 +51,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 use prefixquant::coordinator::{
-    compact, read_log, replay, BackendDesc, DispatchPolicy, GenRequest, LeastLoaded, Oplog,
-    PrefixAffinity, RoundRobin, Router, RouterConfig, Server, ServerConfig, SimBackend,
-    TraceView,
+    compact, read_log, replay, BackendDesc, DispatchPolicy, Fcfs, GenRequest, KvLayout,
+    LeastLoaded, Oplog, PrefixAffinity, Priority, PriorityPreempt, RoundRobin, Router,
+    RouterConfig, SchedulePolicy, Server, ServerConfig, SimBackend, TraceView,
 };
 use prefixquant::data::{self, Language};
 use prefixquant::eval;
@@ -301,6 +311,240 @@ fn dispatch_policy(name: &str) -> Result<Box<dyn DispatchPolicy>> {
     })
 }
 
+fn schedule_policy(name: &str) -> Result<Box<dyn SchedulePolicy>> {
+    Ok(match name {
+        "fcfs" => Box::new(Fcfs),
+        "priority" => Box::new(PriorityPreempt::default()),
+        other => bail!("unknown schedule policy {other:?} (fcfs|priority)"),
+    })
+}
+
+fn sweep_json(r: &prefixquant::workload::SweepReport) -> prefixquant::util::json::Json {
+    use prefixquant::util::json::{num, obj, s, Json};
+    let points: Vec<Json> = r
+        .points
+        .iter()
+        .map(|p| {
+            let inter = &p.score.per_class[Priority::Interactive.index()];
+            obj(vec![
+                ("offered_rps", num(p.offered_rps)),
+                ("n_requests", num(p.n_requests as f64)),
+                ("trace_fingerprint", s(&format!("{:016x}", p.trace_fingerprint))),
+                ("goodput_rps", num(p.score.goodput_rps)),
+                ("attainment", num(p.score.attainment)),
+                ("interactive_attainment", num(inter.attainment())),
+                ("cancelled", num(p.score.cancelled as f64)),
+                ("errors", num(p.score.errors as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("workload", s(&r.workload)),
+        ("knee_offered_rps", num(r.knee_point().offered_rps)),
+        ("knee_goodput_rps", num(r.knee_point().score.goodput_rps)),
+        ("saturated", Json::Bool(r.saturated())),
+        ("points", Json::Arr(points)),
+    ])
+}
+
+/// Open-loop load generation against a sim-backed fleet.  Like `replay`,
+/// this needs no artifacts on disk, so it runs before the Engine context is
+/// created.  The sim backend carries fixed per-call costs, which makes the
+/// fleet's capacity a property of the cost model rather than the host.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use prefixquant::workload::{
+        render_table, run_trace, sweep_rates, ArrivalProcess, Target, Workload,
+    };
+    // sim fleet geometry (journaled in the oplog header so captures replay)
+    const B_EXEC: usize = 4;
+    const S_EXEC: usize = 96;
+    const N_PREFIX: usize = 1;
+    const CACHE_MAX: usize = 192;
+
+    let seed = args.usize_or("seed", 17)? as u64;
+    let n_workers = args.usize_or("workers", 2)?.max(1);
+    let rate = args.f32_or("rate", 300.0)? as f64;
+    let duration_s = args.f32_or("duration", 1.0)? as f64;
+    let policy_name = args.get_or("policy", "priority").to_string();
+    let dispatch_name = args.get_or("dispatch", "least-loaded").to_string();
+    let radix = !args.flag("no-radix");
+    let arrival = match args.get_or("arrival", "poisson") {
+        "poisson" => ArrivalProcess::Poisson,
+        "bursty" => ArrivalProcess::Bursty { on_s: 0.050, off_s: 0.050 },
+        "heavy-tail" => ArrivalProcess::HeavyTail { alpha: 2.0 },
+        other => bail!("unknown arrival process {other:?} (poisson|bursty|heavy-tail)"),
+    };
+    let workload = Workload::mixed(seed).with_arrival(arrival);
+
+    let build_target = |oplog: Option<Oplog>| -> Result<Target> {
+        let workers = (0..n_workers)
+            .map(|_| {
+                Server::start_sim(
+                    move || {
+                        Ok(SimBackend::new(B_EXEC, S_EXEC, N_PREFIX, CACHE_MAX)
+                            .with_costs(Duration::from_micros(500), Duration::from_millis(1)))
+                    },
+                    ServerConfig::builder(prefixquant::model::QuantMode::Static)
+                        .max_batch(B_EXEC)
+                        .batch_window(Duration::from_millis(1))
+                        .policy(schedule_policy(&policy_name)?)
+                        .kv(KvLayout::Paged { page_size: 8, n_pages: 0 })
+                        .radix_cache(radix)
+                        .build(),
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut rcfg = RouterConfig::default().policy(dispatch_policy(&dispatch_name)?);
+        if let Some(log) = oplog {
+            rcfg = rcfg.oplog(log);
+        }
+        Ok(Target::Router(Router::new(workers, rcfg)?))
+    };
+
+    if args.flag("sweep") {
+        let rates: Vec<f64> = match args.get("rates") {
+            Some(list) => list
+                .split(',')
+                .map(|r| r.trim().parse::<f64>().map_err(|e| anyhow!("--rates: {e}")))
+                .collect::<Result<_>>()?,
+            None => vec![rate * 0.25, rate * 0.5, rate, rate * 2.0, rate * 4.0, rate * 8.0],
+        };
+        let min_requests = args.usize_or("requests", 40)?.max(1);
+        eprintln!(
+            "sweeping {} offered loads ({} workers, {policy_name}/{dispatch_name}{})...",
+            rates.len(),
+            n_workers,
+            if radix { "" } else { ", radix off" }
+        );
+        let report = sweep_rates(&workload, &rates, duration_s, min_requests, || {
+            build_target(None)
+        })?;
+        print!("{}", render_table(&report));
+        let knee = report.knee_point();
+        println!(
+            "knee: {:.1} rps offered -> {:.2} rps goodput ({})",
+            knee.offered_rps,
+            knee.score.goodput_rps,
+            if report.saturated() { "swept past saturation" } else { "no bend in swept range" }
+        );
+        if args.flag("json") {
+            println!("{}", sweep_json(&report).to_string());
+        }
+        return Ok(());
+    }
+
+    let n = match args.usize_or("requests", 0)? {
+        0 => ((rate * duration_s).ceil() as usize).max(1),
+        n => n,
+    };
+    let trace = workload.clone().with_rate(rate).with_requests(n).generate();
+    let oplog = match args.get("oplog") {
+        Some(path) => {
+            eprintln!("journaling to {path}; replay with: pq replay {path}");
+            Some(Oplog::create(
+                std::path::Path::new(path),
+                &BackendDesc::Sim {
+                    b_exec: B_EXEC as u32,
+                    s_exec: S_EXEC as u32,
+                    n_prefix: N_PREFIX as u32,
+                    cache_max: CACHE_MAX as u32,
+                },
+            )?)
+        }
+        None => None,
+    };
+    eprintln!(
+        "loadgen: {n} request(s) at {rate:.1} rps ({} arrivals, {n_workers} worker(s), \
+         {policy_name}/{dispatch_name}{}), trace fingerprint {:016x}",
+        workload.arrival.name(),
+        if radix { "" } else { ", radix off" },
+        trace.fingerprint()
+    );
+    let target = build_target(oplog)?;
+    let report = run_trace(&trace, &target);
+    let engine_metrics = target.metrics();
+    target.shutdown();
+    let report = report?;
+
+    let sc = &report.score;
+    let mut t = Table::new(
+        &format!("loadgen ({}, {rate:.0} rps offered)", trace.workload),
+        &[
+            "class", "offered", "done", "slo ok", "attain", "p50 ttft", "p99 ttft", "p99 tpot",
+            "cancel", "err",
+        ],
+    );
+    for p in Priority::all() {
+        let c = &sc.per_class[p.index()];
+        if c.offered == 0 {
+            continue;
+        }
+        t.rowv(vec![
+            p.name().to_string(),
+            c.offered.to_string(),
+            c.completed.to_string(),
+            c.slo_ok.to_string(),
+            format!("{:.3}", c.attainment()),
+            format!("{:.1}ms", c.p50_ttft_s * 1e3),
+            format!("{:.1}ms", c.p99_ttft_s * 1e3),
+            format!("{:.1}ms", c.p99_tpot_s * 1e3),
+            c.cancelled.to_string(),
+            c.errors.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "goodput: {:.2} rps ({} SLO-met of {} submitted in {:.2}s wall, attainment {:.3})",
+        sc.goodput_rps, sc.slo_ok, sc.submitted, sc.wall_s, sc.attainment
+    );
+    if let Ok(m) = engine_metrics {
+        println!(
+            "engine: {} deadline miss(es); merged ttft p50={:.1}ms p99={:.1}ms",
+            m.deadline_misses,
+            m.ttft_hist().p50() * 1e3,
+            m.ttft_hist().p99() * 1e3
+        );
+    }
+    if args.flag("json") {
+        use prefixquant::util::json::{num, obj, s, Json};
+        let classes: Vec<Json> = Priority::all()
+            .iter()
+            .map(|p| {
+                let c = &sc.per_class[p.index()];
+                obj(vec![
+                    ("class", s(p.name())),
+                    ("offered", num(c.offered as f64)),
+                    ("completed", num(c.completed as f64)),
+                    ("slo_ok", num(c.slo_ok as f64)),
+                    ("attainment", num(c.attainment())),
+                    ("p50_ttft_s", num(c.p50_ttft_s)),
+                    ("p99_ttft_s", num(c.p99_ttft_s)),
+                    ("p50_tpot_s", num(c.p50_tpot_s)),
+                    ("p99_tpot_s", num(c.p99_tpot_s)),
+                    ("cancelled", num(c.cancelled as f64)),
+                    ("errors", num(c.errors as f64)),
+                ])
+            })
+            .collect();
+        let j = obj(vec![
+            ("workload", s(&trace.workload)),
+            ("seed", num(seed as f64)),
+            ("offered_rps", num(rate)),
+            ("trace_fingerprint", s(&format!("{:016x}", trace.fingerprint()))),
+            ("goodput_rps", num(sc.goodput_rps)),
+            ("attainment", num(sc.attainment)),
+            ("wall_s", num(sc.wall_s)),
+            ("submitted", num(sc.submitted as f64)),
+            ("slo_ok", num(sc.slo_ok as f64)),
+            ("cancelled", num(sc.cancelled as f64)),
+            ("errors", num(sc.errors as f64)),
+            ("per_class", Json::Arr(classes)),
+        ]);
+        println!("{}", j.to_string());
+    }
+    Ok(())
+}
+
 fn cmd_gen(c: &Ctx, args: &Args) -> Result<()> {
     let prompt_text = args.get_or("prompt", "the quick").to_string();
     let n = args.usize_or("n", 32)?;
@@ -408,6 +652,9 @@ fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
             "absorbed",
             "completed",
             "saturation",
+            "ttft p50",
+            "ttft p99",
+            "ddl miss",
             "rdx pages",
             "rdx hit tok",
         ],
@@ -421,6 +668,9 @@ fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
             w.redistributions_absorbed.to_string(),
             w.completed.to_string(),
             format!("{:.2}", w.saturation),
+            format!("{:.1}ms", w.ttft_p50_s * 1e3),
+            format!("{:.1}ms", w.ttft_p99_s * 1e3),
+            w.deadline_misses.to_string(),
             w.radix_shared_pages.to_string(),
             w.radix_hit_tokens.to_string(),
         ]);
@@ -561,6 +811,9 @@ fn main() -> Result<()> {
     // replay and oplog maintenance work from the journal alone; a sim trace
     // must work with no artifacts on disk, so the Engine context is not
     // created up front
+    if cmd == "loadgen" {
+        return cmd_loadgen(&args);
+    }
     if cmd == "replay" {
         return cmd_replay(&args);
     }
@@ -576,7 +829,10 @@ fn main() -> Result<()> {
         "gen" => cmd_gen(&c, &args),
         "serve" => cmd_serve(&c, &args),
         other => {
-            bail!("unknown command {other:?} (info|outliers|quantize|eval|gen|serve|replay|oplog)")
+            bail!(
+                "unknown command {other:?} \
+                 (info|outliers|quantize|eval|gen|serve|loadgen|replay|oplog)"
+            )
         }
     }
 }

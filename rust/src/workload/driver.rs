@@ -1,0 +1,413 @@
+//! Open-loop driver: submit a [`Trace`] against a [`Server`] or [`Router`]
+//! on the generated arrival clock and score per-class SLO attainment.
+//!
+//! The defining property of an open-loop run is that the arrival clock never
+//! waits for completions: the driver walks the trace's timestamps, fires
+//! each submission (and each scheduled mid-stream cancellation) at its
+//! appointed offset, and only *after* the last event does it drain the
+//! response channels.  Under overload the queues grow and latency explodes —
+//! which is exactly the signal a closed-loop harness hides.
+//!
+//! Scoring: a completion counts toward **goodput** when it finished normally
+//! (`Length`/`Stop`) and met its class's TTFT and TPOT budgets.  Cancelled
+//! requests leave the denominator (the client walked away); errors and
+//! truncated finishes stay in it.  `goodput_rps` divides SLO-met completions
+//! by the full wall time from first arrival to last drained terminal, so
+//! post-overload drain time is paid, not hidden.
+
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::cluster::{Router, RouterHandle};
+use crate::coordinator::request::{FinishReason, Metrics, Priority, StreamEvent};
+use crate::coordinator::server::{RequestHandle, Server};
+
+use super::trace::{ScenarioKind, SloTarget, Trace};
+
+/// How long the drain phase waits on one response channel before declaring
+/// the request lost (a safety net — sim runs finish in milliseconds).
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// What the driver submits against: a single worker or a routed fleet.
+pub enum Target {
+    Server(Server),
+    Router(Router),
+}
+
+impl Target {
+    fn submit(&self, req: crate::coordinator::request::GenRequest) -> Result<TargetHandle> {
+        match self {
+            Target::Server(s) => Ok(TargetHandle::Server(s.submit_stream(req)?)),
+            Target::Router(r) => Ok(TargetHandle::Router(r.submit(req)?)),
+        }
+    }
+
+    /// Merged serving-layer metrics (single worker, or fleet-wide merge).
+    pub fn metrics(&self) -> Result<Metrics> {
+        match self {
+            Target::Server(s) => s.metrics(),
+            Target::Router(r) => Ok(r.report()?.merged),
+        }
+    }
+
+    pub fn shutdown(self) {
+        match self {
+            Target::Server(s) => s.shutdown(),
+            Target::Router(r) => r.shutdown(),
+        }
+    }
+}
+
+enum TargetHandle {
+    Server(RequestHandle<StreamEvent>),
+    Router(RouterHandle),
+}
+
+impl TargetHandle {
+    fn receiver(&self) -> &Receiver<StreamEvent> {
+        match self {
+            TargetHandle::Server(h) => h.receiver(),
+            TargetHandle::Router(h) => h.receiver(),
+        }
+    }
+
+    fn cancel(&self) {
+        // best-effort: a cancel racing completion is fine either way
+        let _ = match self {
+            TargetHandle::Server(h) => h.cancel(),
+            TargetHandle::Router(h) => h.cancel(),
+        };
+    }
+}
+
+/// Sleep (then spin, for sub-ms precision) until `t0 + at_s`.
+fn wait_until(t0: Instant, at_s: f64) {
+    let target = t0 + Duration::from_secs_f64(at_s.max(0.0));
+    loop {
+        let now = Instant::now();
+        if now >= target {
+            return;
+        }
+        let rem = target - now;
+        if rem > Duration::from_millis(3) {
+            std::thread::sleep(rem - Duration::from_millis(2));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Outcome of one traced request.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    /// index into the trace's event list (== `GenRequest::id`)
+    pub seq: usize,
+    pub kind: ScenarioKind,
+    pub priority: Priority,
+    pub tokens: usize,
+    pub ttft_s: f64,
+    /// time per output token past the first; 0 when fewer than 2 tokens
+    pub tpot_s: f64,
+    pub total_s: f64,
+    /// `None` when the request errored (submit failure, stream error, or a
+    /// dropped channel)
+    pub finish: Option<FinishReason>,
+    pub slo_ok: bool,
+}
+
+/// Per-class scoring rollup.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassScore {
+    pub offered: usize,
+    /// normal finishes (`Length`/`Stop`)
+    pub completed: usize,
+    pub slo_ok: usize,
+    pub cancelled: usize,
+    pub errors: usize,
+    pub p50_ttft_s: f64,
+    pub p99_ttft_s: f64,
+    pub p50_tpot_s: f64,
+    pub p99_tpot_s: f64,
+}
+
+impl ClassScore {
+    /// SLO attainment over the class's non-cancelled offered load.
+    pub fn attainment(&self) -> f64 {
+        let denom = self.offered.saturating_sub(self.cancelled);
+        if denom == 0 {
+            1.0
+        } else {
+            self.slo_ok as f64 / denom as f64
+        }
+    }
+}
+
+/// Scored result of one open-loop run.
+#[derive(Debug, Clone)]
+pub struct RunScore {
+    pub offered_rps: f64,
+    /// first arrival → last drained terminal
+    pub wall_s: f64,
+    pub submitted: usize,
+    pub completed: usize,
+    pub slo_ok: usize,
+    pub cancelled: usize,
+    pub errors: usize,
+    /// SLO-met completions per second of wall time — the headline metric
+    pub goodput_rps: f64,
+    /// SLO-met completions over non-cancelled offered load
+    pub attainment: f64,
+    pub per_class: [ClassScore; Priority::COUNT],
+}
+
+/// Full run report: the score plus every per-request outcome (seq order).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub score: RunScore,
+    pub outcomes: Vec<RequestOutcome>,
+}
+
+/// Does this outcome meet its class SLO?
+fn meets_slo(
+    slo: &SloTarget,
+    finish: FinishReason,
+    ttft_s: f64,
+    tokens: usize,
+    tpot_s: f64,
+) -> bool {
+    matches!(finish, FinishReason::Length | FinishReason::Stop)
+        && ttft_s <= slo.ttft_s
+        && (tokens < 2 || tpot_s <= slo.tpot_s)
+}
+
+/// Pop and fire every scheduled cancellation due strictly before
+/// `due_before_s`, sleeping up to each one's due time.
+fn fire_due(
+    t0: Instant,
+    due_before_s: f64,
+    cancels: &mut BinaryHeap<std::cmp::Reverse<(u64, usize)>>,
+    handles: &[Option<TargetHandle>],
+) {
+    while let Some(&std::cmp::Reverse((due_us, idx))) = cancels.peek() {
+        let due_s = due_us as f64 * 1e-6;
+        if due_s > due_before_s {
+            break;
+        }
+        cancels.pop();
+        wait_until(t0, due_s);
+        if let Some(h) = &handles[idx] {
+            h.cancel();
+        }
+    }
+}
+
+/// Run `trace` open-loop against `target`.
+///
+/// The submission loop interleaves arrivals with due cancellations on one
+/// timeline; completions are never consulted until the drain phase.
+pub fn run_trace(trace: &Trace, target: &Target) -> Result<RunReport> {
+    let n = trace.events.len();
+    let t0 = Instant::now();
+    let mut handles: Vec<Option<TargetHandle>> = Vec::with_capacity(n);
+    // min-heap of (due µs, event index) cancellations
+    let mut cancels: BinaryHeap<std::cmp::Reverse<(u64, usize)>> = BinaryHeap::new();
+
+    for (i, ev) in trace.events.iter().enumerate() {
+        fire_due(t0, ev.at_s, &mut cancels, &handles);
+        wait_until(t0, ev.at_s);
+        match target.submit(ev.req.clone()) {
+            Ok(h) => {
+                handles.push(Some(h));
+                if let Some(after_s) = ev.cancel_after_s {
+                    let due_us = ((ev.at_s + after_s.max(0.0)) * 1e6) as u64;
+                    cancels.push(std::cmp::Reverse((due_us, i)));
+                }
+            }
+            Err(_) => handles.push(None),
+        }
+    }
+    // cancellations scheduled past the last arrival
+    fire_due(t0, f64::INFINITY, &mut cancels, &handles);
+
+    // drain: collect every terminal (channels buffer, so late drain loses
+    // nothing; the open-loop clock above never touched them)
+    let mut outcomes = Vec::with_capacity(n);
+    for (i, (ev, h)) in trace.events.iter().zip(&handles).enumerate() {
+        let slo = &trace.slo[ev.req.priority.index()];
+        let mut outcome = RequestOutcome {
+            seq: i,
+            kind: ev.kind,
+            priority: ev.req.priority,
+            tokens: 0,
+            ttft_s: 0.0,
+            tpot_s: 0.0,
+            total_s: 0.0,
+            finish: None,
+            slo_ok: false,
+        };
+        if let Some(h) = h {
+            loop {
+                match h.receiver().recv_timeout(DRAIN_TIMEOUT) {
+                    Ok(StreamEvent::Token(_)) => {}
+                    Ok(StreamEvent::Done(resp)) => {
+                        outcome.tokens = resp.tokens.len();
+                        outcome.ttft_s = resp.ttft_s;
+                        outcome.total_s = resp.total_s;
+                        if resp.tokens.len() >= 2 {
+                            outcome.tpot_s = (resp.total_s - resp.ttft_s).max(0.0)
+                                / (resp.tokens.len() - 1) as f64;
+                        }
+                        outcome.finish = Some(resp.finish);
+                        outcome.slo_ok = meets_slo(
+                            slo,
+                            resp.finish,
+                            resp.ttft_s,
+                            resp.tokens.len(),
+                            outcome.tpot_s,
+                        );
+                        break;
+                    }
+                    Ok(StreamEvent::Error(_))
+                    | Err(RecvTimeoutError::Disconnected)
+                    | Err(RecvTimeoutError::Timeout) => break,
+                }
+            }
+        }
+        outcomes.push(outcome);
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(RunReport { score: score_outcomes(trace, &outcomes, wall_s), outcomes })
+}
+
+/// Fold outcomes into a [`RunScore`] (pure; unit-testable without a fleet).
+pub fn score_outcomes(trace: &Trace, outcomes: &[RequestOutcome], wall_s: f64) -> RunScore {
+    let mut per_class = [ClassScore::default(); Priority::COUNT];
+    let mut ttfts: Vec<Vec<f64>> = vec![Vec::new(); Priority::COUNT];
+    let mut tpots: Vec<Vec<f64>> = vec![Vec::new(); Priority::COUNT];
+    for o in outcomes {
+        let c = &mut per_class[o.priority.index()];
+        c.offered += 1;
+        match o.finish {
+            Some(FinishReason::Cancelled) => c.cancelled += 1,
+            Some(FinishReason::Length) | Some(FinishReason::Stop) => {
+                c.completed += 1;
+                ttfts[o.priority.index()].push(o.ttft_s);
+                if o.tokens >= 2 {
+                    tpots[o.priority.index()].push(o.tpot_s);
+                }
+            }
+            Some(_) => {}
+            None => c.errors += 1,
+        }
+        if o.slo_ok {
+            c.slo_ok += 1;
+        }
+    }
+    for (i, c) in per_class.iter_mut().enumerate() {
+        c.p50_ttft_s = percentile(&mut ttfts[i], 0.50);
+        c.p99_ttft_s = percentile(&mut ttfts[i], 0.99);
+        c.p50_tpot_s = percentile(&mut tpots[i], 0.50);
+        c.p99_tpot_s = percentile(&mut tpots[i], 0.99);
+    }
+    let submitted = outcomes.len();
+    let cancelled: usize = per_class.iter().map(|c| c.cancelled).sum();
+    let completed: usize = per_class.iter().map(|c| c.completed).sum();
+    let errors: usize = per_class.iter().map(|c| c.errors).sum();
+    let slo_ok: usize = per_class.iter().map(|c| c.slo_ok).sum();
+    let denom = submitted.saturating_sub(cancelled);
+    RunScore {
+        offered_rps: trace.rate_rps,
+        wall_s,
+        submitted,
+        completed,
+        slo_ok,
+        cancelled,
+        errors,
+        goodput_rps: slo_ok as f64 / wall_s,
+        attainment: if denom == 0 { 1.0 } else { slo_ok as f64 / denom as f64 },
+        per_class,
+    }
+}
+
+/// Exact percentile over the collected samples (sorts in place): the
+/// `ceil(p·n)`-th smallest value.  0 when empty.
+fn percentile(xs: &mut [f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let rank = ((p.clamp(0.0, 1.0) * xs.len() as f64).ceil() as usize).clamp(1, xs.len());
+    xs[rank - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::Workload;
+
+    fn outcome(
+        priority: Priority,
+        finish: Option<FinishReason>,
+        ttft: f64,
+        ok: bool,
+    ) -> RequestOutcome {
+        RequestOutcome {
+            seq: 0,
+            kind: ScenarioKind::ShortChat,
+            priority,
+            tokens: 3,
+            ttft_s: ttft,
+            tpot_s: 0.001,
+            total_s: ttft + 0.002,
+            finish,
+            slo_ok: ok,
+        }
+    }
+
+    #[test]
+    fn scoring_excludes_cancels_and_counts_errors() {
+        let trace = Workload::mixed(1).with_rate(50.0).with_requests(4).generate();
+        let outcomes = vec![
+            outcome(Priority::Interactive, Some(FinishReason::Length), 0.010, true),
+            outcome(Priority::Interactive, Some(FinishReason::Cancelled), 0.0, false),
+            outcome(Priority::Batch, Some(FinishReason::Length), 0.900, false),
+            outcome(Priority::Batch, None, 0.0, false),
+        ];
+        let s = score_outcomes(&trace, &outcomes, 2.0);
+        assert_eq!(s.submitted, 4);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.slo_ok, 1);
+        assert!((s.goodput_rps - 0.5).abs() < 1e-12);
+        // attainment denominator drops the cancel: 1 ok / 3
+        assert!((s.attainment - 1.0 / 3.0).abs() < 1e-12);
+        let inter = &s.per_class[Priority::Interactive.index()];
+        assert_eq!((inter.offered, inter.slo_ok, inter.cancelled), (2, 1, 1));
+        assert!((inter.attainment() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_check_requires_normal_finish_and_both_budgets() {
+        let slo = SloTarget { ttft_s: 0.05, tpot_s: 0.02 };
+        assert!(meets_slo(&slo, FinishReason::Length, 0.04, 3, 0.01));
+        assert!(meets_slo(&slo, FinishReason::Stop, 0.04, 1, 99.0), "tpot waived under 2 tokens");
+        assert!(!meets_slo(&slo, FinishReason::Length, 0.06, 3, 0.01), "ttft over budget");
+        assert!(!meets_slo(&slo, FinishReason::Length, 0.04, 3, 0.03), "tpot over budget");
+        assert!(!meets_slo(&slo, FinishReason::Cancelled, 0.01, 3, 0.01));
+        assert!(!meets_slo(&slo, FinishReason::CacheFull, 0.01, 3, 0.01));
+        assert!(!meets_slo(&slo, FinishReason::WorkerLost, 0.01, 3, 0.01));
+    }
+
+    #[test]
+    fn percentiles_are_exact_order_statistics() {
+        let mut xs = vec![0.4, 0.1, 0.3, 0.2];
+        assert!((percentile(&mut xs, 0.50) - 0.2).abs() < 1e-12);
+        assert!((percentile(&mut xs, 0.99) - 0.4).abs() < 1e-12);
+        assert!((percentile(&mut xs, 0.0) - 0.1).abs() < 1e-12);
+        assert_eq!(percentile(&mut [], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! Open-loop workload harness: seeded trace generation, an open-loop driver
+//! that submits on the arrival clock (never back-pressured by completions),
+//! and an offered-load sweep whose headline metric is **SLO goodput** —
+//! completions per second that met their class's TTFT/TPOT budget.
+//!
+//! The pieces compose:
+//!
+//! - [`trace`]: [`Workload`] specs (arrival process × scenario mix × SLO
+//!   targets) generate deterministic [`Trace`]s — pure functions of the
+//!   seed, fingerprintable, and whole-ms-deadline-stamped so a captured run
+//!   survives an oplog export → `pq replay` round trip.
+//! - [`driver`]: [`run_trace`] fires a trace at a [`Target`] (single
+//!   [`Server`](crate::coordinator::server::Server) or routed
+//!   [`Router`](crate::coordinator::cluster::Router) fleet) and scores
+//!   per-class attainment into a [`RunScore`].
+//! - [`sweep`]: [`sweep_rates`] walks offered load past the saturation
+//!   knee and reports the goodput curve.
+//!
+//! `pq loadgen` and `benches/goodput.rs` are thin shells over these.
+
+pub mod driver;
+pub mod sweep;
+pub mod trace;
+
+pub use driver::{run_trace, ClassScore, RequestOutcome, RunReport, RunScore, Target};
+pub use sweep::{render_table, sweep_rates, SweepPoint, SweepReport};
+pub use trace::{
+    default_slo, ArrivalProcess, Scenario, ScenarioKind, SloTarget, Trace, TraceEvent, Workload,
+};

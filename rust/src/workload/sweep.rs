@@ -1,0 +1,181 @@
+//! Offered-load sweep: walk a workload's arrival rate across a ladder of
+//! offered loads, score each run, and report the goodput-vs-offered-load
+//! curve with its saturation knee.
+//!
+//! Each sweep point regenerates the trace at the new rate from the same
+//! seed, so the request *population* (scenario mix, prompt shapes, seeds,
+//! deadlines) is deterministic per rate while the arrival clock compresses.
+//! The trace fingerprint at every rate is recorded so two sweeps of the same
+//! spec can be byte-compared.
+//!
+//! The **knee** is the offered load that maximises goodput (first on ties):
+//! past it, admitting more work completes fewer requests within SLO — the
+//! open-loop signature of saturation.
+
+use anyhow::Result;
+
+use crate::coordinator::request::Priority;
+
+use super::driver::{run_trace, RunScore, Target};
+use super::trace::Workload;
+
+/// One point on the goodput curve.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub offered_rps: f64,
+    /// requests in the generated trace at this rate
+    pub n_requests: usize,
+    /// fingerprint of the generated trace (seed-deterministic per rate)
+    pub trace_fingerprint: u64,
+    pub score: RunScore,
+}
+
+/// A swept goodput-vs-offered-load curve.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub workload: String,
+    pub points: Vec<SweepPoint>,
+    /// index into `points` of the goodput-maximising offered load
+    pub knee: usize,
+}
+
+impl SweepReport {
+    pub fn knee_point(&self) -> &SweepPoint {
+        &self.points[self.knee]
+    }
+
+    /// True when the curve bends: the last swept load achieves strictly
+    /// less goodput than the knee, i.e. the sweep ran past saturation.
+    pub fn saturated(&self) -> bool {
+        match (self.points.last(), self.points.get(self.knee)) {
+            (Some(last), Some(knee)) => {
+                self.knee + 1 < self.points.len()
+                    && last.score.goodput_rps < knee.score.goodput_rps
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Index of the goodput-maximising point, first on ties.
+fn knee_index(points: &[SweepPoint]) -> usize {
+    let mut best = 0usize;
+    for (i, p) in points.iter().enumerate().skip(1) {
+        if p.score.goodput_rps > points[best].score.goodput_rps {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sweep `workload` across `rates` (requests-per-second offered load)
+/// against targets built per point by `make_target`.
+///
+/// A fresh target per point keeps runs independent: no residual queue or
+/// cache state leaks from an overloaded point into the next.  The request
+/// count scales with the rate (`ceil(rate × duration_s)`, floored at
+/// `min_requests`) so every point offers the same wall-clock window of
+/// traffic and overload points pay their own drain time.
+pub fn sweep_rates(
+    workload: &Workload,
+    rates: &[f64],
+    duration_s: f64,
+    min_requests: usize,
+    mut make_target: impl FnMut() -> Result<Target>,
+) -> Result<SweepReport> {
+    let mut points = Vec::with_capacity(rates.len());
+    for &rate in rates {
+        let n = ((rate * duration_s).ceil() as usize).max(min_requests);
+        let trace = workload.clone().with_rate(rate).with_requests(n).generate();
+        let target = make_target()?;
+        let report = run_trace(&trace, &target);
+        target.shutdown();
+        let report = report?;
+        points.push(SweepPoint {
+            offered_rps: rate,
+            n_requests: n,
+            trace_fingerprint: trace.fingerprint(),
+            score: report.score,
+        });
+    }
+    let knee = knee_index(&points);
+    Ok(SweepReport { workload: workload.name.clone(), points, knee })
+}
+
+/// Render the sweep as an aligned text table (offered load, goodput,
+/// attainment overall and for the Interactive class).
+pub fn render_table(report: &SweepReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("workload: {}\n", report.workload));
+    out.push_str("offered_rps  goodput_rps  attainment  interactive  cancelled  errors\n");
+    for (i, p) in report.points.iter().enumerate() {
+        let inter = &p.score.per_class[Priority::Interactive.index()];
+        let marker = if i == report.knee { "  <- knee" } else { "" };
+        out.push_str(&format!(
+            "{:>11.1}  {:>11.2}  {:>10.3}  {:>11.3}  {:>9}  {:>6}{}\n",
+            p.offered_rps,
+            p.score.goodput_rps,
+            p.score.attainment,
+            inter.attainment(),
+            p.score.cancelled,
+            p.score.errors,
+            marker,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::FinishReason;
+    use crate::workload::driver::{score_outcomes, RequestOutcome};
+    use crate::workload::trace::ScenarioKind;
+
+    fn point(rate: f64, goodput: f64) -> SweepPoint {
+        let trace = Workload::mixed(7).with_rate(rate).with_requests(1).generate();
+        let outcomes = vec![RequestOutcome {
+            seq: 0,
+            kind: ScenarioKind::ShortChat,
+            priority: Priority::Interactive,
+            tokens: 2,
+            ttft_s: 0.001,
+            tpot_s: 0.001,
+            total_s: 0.002,
+            finish: Some(FinishReason::Length),
+            slo_ok: true,
+        }];
+        let mut score = score_outcomes(&trace, &outcomes, 1.0);
+        score.goodput_rps = goodput;
+        SweepPoint {
+            offered_rps: rate,
+            n_requests: 1,
+            trace_fingerprint: trace.fingerprint(),
+            score,
+        }
+    }
+
+    #[test]
+    fn knee_is_goodput_argmax_first_on_ties() {
+        let points = vec![point(10.0, 8.0), point(20.0, 15.0), point(40.0, 15.0)];
+        assert_eq!(knee_index(&points), 1);
+        let report = SweepReport { workload: "t".into(), points, knee: 1 };
+        assert!(!report.saturated(), "flat tail is not a bend");
+
+        let points = vec![point(10.0, 8.0), point(20.0, 15.0), point(40.0, 9.0)];
+        assert_eq!(knee_index(&points), 1);
+        let report = SweepReport { workload: "t".into(), points, knee: 1 };
+        assert!(report.saturated());
+        assert!((report.knee_point().score.goodput_rps - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_marks_the_knee_row() {
+        let points = vec![point(10.0, 8.0), point(20.0, 5.0)];
+        let report = SweepReport { workload: "t".into(), points, knee: 0 };
+        let table = render_table(&report);
+        assert!(table.contains("<- knee"));
+        assert!(table.lines().nth(2).unwrap().contains("<- knee"));
+        assert_eq!(table.lines().count(), 4);
+    }
+}

@@ -1,0 +1,638 @@
+//! Seeded, deterministic trace generation: arrival processes × scenario
+//! mixes → a [`Trace`] of timestamped [`GenRequest`]s with per-class SLO
+//! targets attached.
+//!
+//! Generation is a pure function of the [`Workload`] spec (including its
+//! seed): a single [`SplitMix64`] stream drives every draw in a fixed order,
+//! no wall clock or thread pool is consulted, so the same spec produces a
+//! byte-identical trace on any machine and under any `PQ_THREADS` setting.
+//! [`Trace::fingerprint`] hashes the canonical encoding so benches and tests
+//! can assert that in one comparison.
+//!
+//! Deadlines are stamped at whole-millisecond granularity on purpose: the
+//! oplog journals `deadline` as integer milliseconds, so a generated trace
+//! survives an export → `pq replay` round trip exactly.
+
+use std::time::Duration;
+
+use crate::coordinator::request::{GenRequest, Priority};
+use crate::util::rng::SplitMix64;
+
+/// Token values emitted into prompts: `PROMPT_BASE + [0, PROMPT_SPAN)`,
+/// comfortably inside the sim backend's 271-token vocabulary and clear of
+/// BOS/PAD.
+const PROMPT_BASE: i32 = 5;
+const PROMPT_SPAN: u64 = 200;
+
+/// How a request stream arrives.  All processes share the workload's mean
+/// rate; they differ in how the gaps are distributed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// memoryless arrivals: exponential inter-arrival gaps
+    Poisson,
+    /// on/off bursts: arrivals only during `on_s`-long windows separated by
+    /// `off_s`-long silences, at a within-burst rate inflated so the mean
+    /// over wall time still matches the configured rate
+    Bursty { on_s: f64, off_s: f64 },
+    /// Pareto inter-arrival gaps with tail index `alpha` (> 1), scaled so
+    /// the mean gap is `1/rate`; smaller `alpha` = heavier tail
+    HeavyTail { alpha: f64 },
+}
+
+impl ArrivalProcess {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::HeavyTail { .. } => "heavy-tail",
+        }
+    }
+
+    /// `n` arrival offsets (seconds from trace start), non-decreasing.
+    fn times(&self, rate_rps: f64, n: usize, rng: &mut SplitMix64) -> Vec<f64> {
+        let rate = rate_rps.max(1e-9);
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Poisson => {
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += exp_gap(rate, rng);
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Bursty { on_s, off_s } => {
+                // accumulate "on-time" at the inflated within-burst rate,
+                // then map on-time to wall time by inserting the off windows
+                let on = on_s.max(1e-6);
+                let off = off_s.max(0.0);
+                let rate_on = rate * (on + off) / on;
+                let mut tau = 0.0;
+                for _ in 0..n {
+                    tau += exp_gap(rate_on, rng);
+                    let bursts = (tau / on).floor();
+                    out.push(bursts * (on + off) + (tau - bursts * on));
+                }
+            }
+            ArrivalProcess::HeavyTail { alpha } => {
+                let a = alpha.max(1.0 + 1e-6);
+                // x_m chosen so the Pareto mean a*x_m/(a-1) equals 1/rate
+                let x_m = (a - 1.0) / (a * rate);
+                let mut t = 0.0;
+                for _ in 0..n {
+                    let u = rng.unit_f64();
+                    t += x_m * (1.0 - u).powf(-1.0 / a);
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Exponential gap with mean `1/rate` (`u` in [0,1) keeps `ln` finite).
+fn exp_gap(rate: f64, rng: &mut SplitMix64) -> f64 {
+    -(1.0 - rng.unit_f64()).ln() / rate
+}
+
+/// Scenario families the generator knows how to shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    ShortChat,
+    LongDocument,
+    AgentLoop,
+    Interactive,
+    BatchFill,
+    BestEffort,
+}
+
+impl ScenarioKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioKind::ShortChat => "short-chat",
+            ScenarioKind::LongDocument => "long-document",
+            ScenarioKind::AgentLoop => "agent-loop",
+            ScenarioKind::Interactive => "interactive",
+            ScenarioKind::BatchFill => "batch-fill",
+            ScenarioKind::BestEffort => "best-effort",
+        }
+    }
+}
+
+/// One request family: class, prompt/generation shape, shared-prefix
+/// structure, cancellation behavior, and an optional deadline stamp.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub kind: ScenarioKind,
+    pub priority: Priority,
+    /// prompt length range, inclusive
+    pub prompt_lo: usize,
+    pub prompt_hi: usize,
+    /// generation budget range, inclusive
+    pub max_new_lo: usize,
+    pub max_new_hi: usize,
+    /// distinct shared prompt pools (0 = every prompt unique).  Requests in
+    /// one pool share a common prompt prefix — the radix cache's food.
+    pub prefix_groups: usize,
+    /// probability a request is cancelled mid-stream by the driver
+    pub cancel_rate: f64,
+    /// cancel delay range after submission, seconds
+    pub cancel_after_lo_s: f64,
+    pub cancel_after_hi_s: f64,
+    /// whole-millisecond latency budget stamped on every request (whole ms
+    /// so the oplog's integer-ms encoding round-trips exactly)
+    pub deadline_ms: Option<u64>,
+}
+
+impl Scenario {
+    /// Small prompts, small replies, heavily shared openings.
+    pub fn short_chat() -> Scenario {
+        Scenario {
+            kind: ScenarioKind::ShortChat,
+            priority: Priority::Interactive,
+            prompt_lo: 4,
+            prompt_hi: 8,
+            max_new_lo: 3,
+            max_new_hi: 5,
+            prefix_groups: 8,
+            cancel_rate: 0.0,
+            cancel_after_lo_s: 0.0,
+            cancel_after_hi_s: 0.0,
+            deadline_ms: None,
+        }
+    }
+
+    /// Long shared-document prefills with batch-class replies.
+    pub fn long_document() -> Scenario {
+        Scenario {
+            kind: ScenarioKind::LongDocument,
+            priority: Priority::Batch,
+            prompt_lo: 28,
+            prompt_hi: 44,
+            max_new_lo: 8,
+            max_new_hi: 12,
+            prefix_groups: 4,
+            cancel_rate: 0.0,
+            cancel_after_lo_s: 0.0,
+            cancel_after_hi_s: 0.0,
+            deadline_ms: None,
+        }
+    }
+
+    /// Agent sessions: each group's context grows turn over turn (the new
+    /// prompt extends the previous one, so the radix cache can serve the
+    /// re-submitted history), with mid-stream cancellations.
+    pub fn agent_loop() -> Scenario {
+        Scenario {
+            kind: ScenarioKind::AgentLoop,
+            priority: Priority::Interactive,
+            prompt_lo: 12,
+            prompt_hi: 32,
+            max_new_lo: 4,
+            max_new_hi: 8,
+            prefix_groups: 6,
+            cancel_rate: 0.15,
+            cancel_after_lo_s: 0.005,
+            cancel_after_hi_s: 0.080,
+            deadline_ms: None,
+        }
+    }
+
+    /// Deadline-carrying interactive traffic (tight latency budget).
+    pub fn interactive_deadline() -> Scenario {
+        Scenario {
+            kind: ScenarioKind::Interactive,
+            priority: Priority::Interactive,
+            prompt_lo: 3,
+            prompt_hi: 6,
+            max_new_lo: 2,
+            max_new_hi: 3,
+            prefix_groups: 0,
+            cancel_rate: 0.0,
+            cancel_after_lo_s: 0.0,
+            cancel_after_hi_s: 0.0,
+            deadline_ms: Some(80),
+        }
+    }
+
+    /// Saturating batch wave (the `scheduler_policy` bench's background
+    /// load: mid prompts, long generations).
+    pub fn batch_fill() -> Scenario {
+        Scenario {
+            kind: ScenarioKind::BatchFill,
+            priority: Priority::Batch,
+            prompt_lo: 8,
+            prompt_hi: 12,
+            max_new_lo: 20,
+            max_new_hi: 24,
+            prefix_groups: 0,
+            cancel_rate: 0.0,
+            cancel_after_lo_s: 0.0,
+            cancel_after_hi_s: 0.0,
+            deadline_ms: None,
+        }
+    }
+
+    /// Short deadline-stamped interactive burst (the `scheduler_policy`
+    /// bench's foreground load: tiny prompts, two-token replies).
+    pub fn interactive_burst() -> Scenario {
+        Scenario {
+            kind: ScenarioKind::Interactive,
+            priority: Priority::Interactive,
+            prompt_lo: 3,
+            prompt_hi: 6,
+            max_new_lo: 2,
+            max_new_hi: 2,
+            prefix_groups: 0,
+            cancel_rate: 0.0,
+            cancel_after_lo_s: 0.0,
+            cancel_after_hi_s: 0.0,
+            deadline_ms: Some(50),
+        }
+    }
+
+    /// Background best-effort filler.
+    pub fn best_effort() -> Scenario {
+        Scenario {
+            kind: ScenarioKind::BestEffort,
+            priority: Priority::BestEffort,
+            prompt_lo: 6,
+            prompt_hi: 16,
+            max_new_lo: 6,
+            max_new_hi: 10,
+            prefix_groups: 0,
+            cancel_rate: 0.0,
+            cancel_after_lo_s: 0.0,
+            cancel_after_hi_s: 0.0,
+            deadline_ms: None,
+        }
+    }
+
+    fn sample_len(lo: usize, hi: usize, rng: &mut SplitMix64) -> usize {
+        if hi <= lo {
+            lo
+        } else {
+            lo + rng.below((hi - lo + 1) as u64) as usize
+        }
+    }
+}
+
+/// Per-class SLO target: a completion "counts" (goodput) only when its TTFT
+/// and TPOT both land inside the class budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTarget {
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+}
+
+/// Default per-class SLO vector (index = [`Priority::index`]): tight for
+/// Interactive, loose for Batch, looser for BestEffort.
+pub fn default_slo() -> [SloTarget; Priority::COUNT] {
+    let mut slo = [SloTarget { ttft_s: 1.0, tpot_s: 0.1 }; Priority::COUNT];
+    slo[Priority::Interactive.index()] = SloTarget { ttft_s: 0.050, tpot_s: 0.025 };
+    slo[Priority::Batch.index()] = SloTarget { ttft_s: 0.400, tpot_s: 0.050 };
+    slo[Priority::BestEffort.index()] = SloTarget { ttft_s: 2.000, tpot_s: 0.100 };
+    slo
+}
+
+/// A complete open-loop workload spec: arrival process + rate, request
+/// count, weighted scenario mix, per-class SLOs, and the seed that makes the
+/// whole thing reproducible.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub arrival: ArrivalProcess,
+    pub rate_rps: f64,
+    pub n_requests: usize,
+    pub seed: u64,
+    /// (scenario, weight) — weights need not sum to 1
+    pub mix: Vec<(Scenario, f64)>,
+    /// per-class SLO targets (index = [`Priority::index`])
+    pub slo: [SloTarget; Priority::COUNT],
+}
+
+impl Workload {
+    /// The standard mixed workload: shared-opening chat, long-document
+    /// prefill, agent loops with cancellations, deadline-stamped
+    /// interactive traffic, and best-effort filler.
+    pub fn mixed(seed: u64) -> Workload {
+        Workload {
+            name: "mixed".into(),
+            arrival: ArrivalProcess::Poisson,
+            rate_rps: 100.0,
+            n_requests: 200,
+            seed,
+            mix: vec![
+                (Scenario::short_chat(), 0.20),
+                (Scenario::long_document(), 0.40),
+                (Scenario::agent_loop(), 0.10),
+                (Scenario::interactive_deadline(), 0.10),
+                (Scenario::best_effort(), 0.20),
+            ],
+            slo: default_slo(),
+        }
+    }
+
+    /// Single-scenario workload (the `scheduler_policy` bench builds its
+    /// two waves from these).
+    pub fn single(name: &str, scenario: Scenario, seed: u64) -> Workload {
+        Workload {
+            name: name.into(),
+            arrival: ArrivalProcess::Poisson,
+            rate_rps: 100.0,
+            n_requests: 100,
+            seed,
+            mix: vec![(scenario, 1.0)],
+            slo: default_slo(),
+        }
+    }
+
+    pub fn with_rate(mut self, rate_rps: f64) -> Workload {
+        self.rate_rps = rate_rps;
+        self
+    }
+
+    pub fn with_requests(mut self, n: usize) -> Workload {
+        self.n_requests = n;
+        self
+    }
+
+    pub fn with_arrival(mut self, arrival: ArrivalProcess) -> Workload {
+        self.arrival = arrival;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Workload {
+        self.seed = seed;
+        self
+    }
+
+    /// Generate the trace.  Pure: same spec (same seed) → identical trace,
+    /// independent of machine, run, or `PQ_THREADS`.
+    pub fn generate(&self) -> Trace {
+        let mut rng = SplitMix64::new(self.seed);
+        let times = self.arrival.times(self.rate_rps, self.n_requests, &mut rng);
+
+        // Shared prompt pools, generated up front in a fixed order.  Each
+        // grouped scenario owns `prefix_groups` pools of `prompt_hi` tokens;
+        // a request takes a prefix of its pool, so pool-mates share their
+        // opening tokens (and agent sessions literally extend each other).
+        let mut pools: Vec<Vec<Vec<i32>>> = Vec::with_capacity(self.mix.len());
+        for (sc, _) in &self.mix {
+            let mut groups = Vec::with_capacity(sc.prefix_groups);
+            for _ in 0..sc.prefix_groups {
+                let pool: Vec<i32> = (0..sc.prompt_hi)
+                    .map(|_| PROMPT_BASE + rng.below(PROMPT_SPAN) as i32)
+                    .collect();
+                groups.push(pool);
+            }
+            pools.push(groups);
+        }
+        let mut agent_steps: Vec<Vec<usize>> =
+            self.mix.iter().map(|(sc, _)| vec![0; sc.prefix_groups]).collect();
+
+        let total_weight: f64 = self.mix.iter().map(|(_, w)| w.max(0.0)).sum();
+        let mut events = Vec::with_capacity(self.n_requests);
+        for (i, &at_s) in times.iter().enumerate() {
+            // pick a scenario by weight
+            let mut pick = rng.unit_f64() * total_weight.max(1e-12);
+            let mut si = self.mix.len() - 1;
+            for (j, (_, w)) in self.mix.iter().enumerate() {
+                pick -= w.max(0.0);
+                if pick < 0.0 {
+                    si = j;
+                    break;
+                }
+            }
+            let sc = &self.mix[si].0;
+
+            let (prompt, group) = if sc.prefix_groups > 0 {
+                let g = rng.below(sc.prefix_groups as u64) as usize;
+                let len = if sc.kind == ScenarioKind::AgentLoop {
+                    // session context grows turn over turn
+                    let step = agent_steps[si][g];
+                    agent_steps[si][g] += 1;
+                    (sc.prompt_lo + 4 * step).min(sc.prompt_hi)
+                } else {
+                    Scenario::sample_len(sc.prompt_lo, sc.prompt_hi, &mut rng)
+                };
+                (pools[si][g][..len.min(pools[si][g].len())].to_vec(), Some(g))
+            } else {
+                let len = Scenario::sample_len(sc.prompt_lo, sc.prompt_hi, &mut rng);
+                let p = (0..len).map(|_| PROMPT_BASE + rng.below(PROMPT_SPAN) as i32).collect();
+                (p, None)
+            };
+            let max_new = Scenario::sample_len(sc.max_new_lo, sc.max_new_hi, &mut rng);
+            let sample_seed = rng.next_u64();
+            let mut b = GenRequest::builder(i as u64)
+                .prompt(prompt)
+                .max_new(max_new)
+                .priority(sc.priority)
+                .seed(sample_seed);
+            if let Some(ms) = sc.deadline_ms {
+                b = b.deadline(Duration::from_millis(ms));
+            }
+            let cancel_after_s = if sc.cancel_rate > 0.0 && rng.unit_f64() < sc.cancel_rate {
+                let u = rng.unit_f64();
+                Some(sc.cancel_after_lo_s + u * (sc.cancel_after_hi_s - sc.cancel_after_lo_s))
+            } else {
+                None
+            };
+            events.push(TraceEvent {
+                at_s,
+                kind: sc.kind,
+                group,
+                req: b.build(),
+                cancel_after_s,
+            });
+        }
+        Trace {
+            workload: self.name.clone(),
+            seed: self.seed,
+            rate_rps: self.rate_rps,
+            slo: self.slo,
+            events,
+        }
+    }
+}
+
+/// One scheduled submission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// arrival offset from trace start, seconds
+    pub at_s: f64,
+    pub kind: ScenarioKind,
+    /// shared-prefix pool index within the scenario, when grouped
+    pub group: Option<usize>,
+    pub req: GenRequest,
+    /// when set, the driver cancels this request this long after submission
+    pub cancel_after_s: Option<f64>,
+}
+
+/// A generated open-loop trace: the arrival schedule plus the SLO targets
+/// outcomes are scored against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub workload: String,
+    pub seed: u64,
+    pub rate_rps: f64,
+    pub slo: [SloTarget; Priority::COUNT],
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Span from trace start to the last arrival.
+    pub fn duration_s(&self) -> f64 {
+        self.events.last().map(|e| e.at_s).unwrap_or(0.0)
+    }
+
+    /// Realized mean arrival rate of the generated schedule.
+    pub fn empirical_rate(&self) -> f64 {
+        let d = self.duration_s();
+        if d <= 0.0 {
+            0.0
+        } else {
+            self.events.len() as f64 / d
+        }
+    }
+
+    /// FNV-1a hash over the canonical encoding of everything that shapes an
+    /// open-loop run: arrival times (exact bits), request contents, deadline
+    /// stamps, cancellation schedule, and the SLO vector.  Two traces with
+    /// equal fingerprints submit identical byte streams.
+    pub fn fingerprint(&self) -> u64 {
+        fn eat(h: &mut u64, v: u64) {
+            *h ^= v;
+            *h = h.wrapping_mul(0x100000001b3);
+        }
+        let mut h: u64 = 0xcbf29ce484222325;
+        eat(&mut h, self.seed);
+        eat(&mut h, self.rate_rps.to_bits());
+        eat(&mut h, self.events.len() as u64);
+        for t in &self.slo {
+            eat(&mut h, t.ttft_s.to_bits());
+            eat(&mut h, t.tpot_s.to_bits());
+        }
+        for e in &self.events {
+            eat(&mut h, e.at_s.to_bits());
+            for &b in e.kind.name().as_bytes() {
+                eat(&mut h, b as u64);
+            }
+            eat(&mut h, e.req.id);
+            eat(&mut h, e.req.prompt.len() as u64);
+            for &t in &e.req.prompt {
+                eat(&mut h, t as u64);
+            }
+            eat(&mut h, e.req.max_new as u64);
+            eat(&mut h, e.req.priority.index() as u64);
+            eat(&mut h, e.req.deadline.map_or(u64::MAX, |d| d.as_millis() as u64));
+            eat(&mut h, e.req.seed);
+            eat(&mut h, e.cancel_after_s.map_or(u64::MAX, f64::to_bits));
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_nondecreasing_and_rate_scaled() {
+        let mut rng = SplitMix64::new(7);
+        for p in [
+            ArrivalProcess::Poisson,
+            ArrivalProcess::Bursty { on_s: 0.05, off_s: 0.05 },
+            ArrivalProcess::HeavyTail { alpha: 2.5 },
+        ] {
+            let ts = p.times(200.0, 400, &mut rng);
+            assert_eq!(ts.len(), 400);
+            assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{} not sorted", p.name());
+            assert!(ts[0] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn same_seed_same_trace() {
+        let w = Workload::mixed(0xFEED).with_rate(250.0).with_requests(120);
+        let a = w.generate();
+        let b = w.generate();
+        assert_eq!(a, b, "generation must be pure");
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = w.clone().with_seed(0xFEED ^ 1).generate();
+        assert_ne!(a.fingerprint(), c.fingerprint(), "seed must matter");
+    }
+
+    #[test]
+    fn mixed_trace_has_expected_structure() {
+        let t = Workload::mixed(3).with_rate(400.0).with_requests(400).generate();
+        assert_eq!(t.events.len(), 400);
+        // every scenario family shows up in a 400-request draw
+        for kind in [
+            ScenarioKind::ShortChat,
+            ScenarioKind::LongDocument,
+            ScenarioKind::AgentLoop,
+            ScenarioKind::Interactive,
+            ScenarioKind::BestEffort,
+        ] {
+            assert!(t.events.iter().any(|e| e.kind == kind), "missing {}", kind.name());
+        }
+        // deadline stamps ride only on the interactive-deadline scenario,
+        // at whole-ms granularity; cancellations only on agent loops
+        for e in &t.events {
+            if let Some(d) = e.req.deadline {
+                assert_eq!(e.kind, ScenarioKind::Interactive);
+                assert_eq!(d.as_micros() % 1000, 0, "deadline must be whole ms");
+            }
+            if e.cancel_after_s.is_some() {
+                assert_eq!(e.kind, ScenarioKind::AgentLoop);
+            }
+        }
+        assert!(t.events.iter().any(|e| e.cancel_after_s.is_some()), "agent cancels expected");
+        // request ids are the event index (unique, replay-stable)
+        for (i, e) in t.events.iter().enumerate() {
+            assert_eq!(e.req.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn agent_sessions_grow_their_context() {
+        let t = Workload::single("agents", Scenario::agent_loop(), 11)
+            .with_rate(500.0)
+            .with_requests(60)
+            .generate();
+        // within a group, prompts must extend earlier prompts (prefix chain)
+        use std::collections::HashMap;
+        let mut last: HashMap<usize, Vec<i32>> = HashMap::new();
+        let mut grew = false;
+        for e in &t.events {
+            let g = e.group.expect("agent events are grouped");
+            if let Some(prev) = last.get(&g) {
+                if e.req.prompt.len() >= prev.len() {
+                    assert_eq!(&e.req.prompt[..prev.len()], &prev[..], "context must extend");
+                    grew |= e.req.prompt.len() > prev.len();
+                }
+            }
+            last.insert(g, e.req.prompt.clone());
+        }
+        assert!(grew, "at least one session should have grown");
+    }
+
+    #[test]
+    fn shared_groups_share_their_opening_tokens() {
+        let t = Workload::single("docs", Scenario::long_document(), 5)
+            .with_rate(300.0)
+            .with_requests(80)
+            .generate();
+        use std::collections::HashMap;
+        let mut by_group: HashMap<usize, Vec<&TraceEvent>> = HashMap::new();
+        for e in &t.events {
+            by_group.entry(e.group.unwrap()).or_default().push(e);
+        }
+        for evs in by_group.values() {
+            for pair in evs.windows(2) {
+                let n = pair[0].req.prompt.len().min(pair[1].req.prompt.len());
+                assert_eq!(pair[0].req.prompt[..n], pair[1].req.prompt[..n]);
+            }
+        }
+    }
+}

@@ -7,8 +7,8 @@ use std::time::Duration;
 use prefixquant::coordinator::continuous::run_to_completion;
 use prefixquant::coordinator::request::request_id;
 use prefixquant::coordinator::{
-    ClassMetrics, FinishReason, GenRequest, GenResponse, Metrics, Router, RouterConfig, Server,
-    ServerConfig, SimBackend, StreamEvent, WorkerState,
+    ClassMetrics, FinishReason, GenRequest, GenResponse, LatencyHistogram, Metrics, Router,
+    RouterConfig, Server, ServerConfig, SimBackend, StreamEvent, WorkerState,
 };
 use prefixquant::model::QuantMode;
 use prefixquant::util::prop::{check, Gen};
@@ -21,6 +21,16 @@ fn dyadic(g: &mut Gen) -> f64 {
     g.usize_in(0, 1 << 13) as f64 / 1024.0
 }
 
+/// Histograms populated by recording generator-driven samples: bucket counts
+/// are integers, so merge equality is exact.
+fn rand_hist(g: &mut Gen) -> LatencyHistogram {
+    let mut h = LatencyHistogram::default();
+    for _ in 0..g.usize_in(0, 8) {
+        h.record(g.usize_in(0, 4_000_000) as f64 * 1e-6);
+    }
+    h
+}
+
 fn rand_class(g: &mut Gen) -> ClassMetrics {
     ClassMetrics {
         requests: g.usize_in(0, 1000),
@@ -29,6 +39,8 @@ fn rand_class(g: &mut Gen) -> ClassMetrics {
         sum_queue_s: dyadic(g),
         preemptions: g.usize_in(0, 50),
         cancelled: g.usize_in(0, 50),
+        ttft_hist: rand_hist(g),
+        tpot_hist: rand_hist(g),
     }
 }
 
@@ -59,6 +71,7 @@ fn rand_metrics(g: &mut Gen) -> Metrics {
         radix_evicted_pages: g.usize_in(0, 1000),
         radix_shared_pages: g.usize_in(0, 1000),
         radix_shared_bytes: g.usize_in(0, 1 << 20),
+        deadline_misses: g.usize_in(0, 100),
         by_class: [rand_class(g), rand_class(g), rand_class(g)],
     }
 }
@@ -70,6 +83,8 @@ fn class_eq(a: &ClassMetrics, b: &ClassMetrics) -> bool {
         && a.sum_queue_s == b.sum_queue_s
         && a.preemptions == b.preemptions
         && a.cancelled == b.cancelled
+        && a.ttft_hist == b.ttft_hist
+        && a.tpot_hist == b.tpot_hist
 }
 
 /// Field-by-field equality over EVERY counter `merge` touches (exact f64
@@ -100,6 +115,7 @@ fn metrics_eq(a: &Metrics, b: &Metrics) -> bool {
         && a.radix_evicted_pages == b.radix_evicted_pages
         && a.radix_shared_pages == b.radix_shared_pages
         && a.radix_shared_bytes == b.radix_shared_bytes
+        && a.deadline_misses == b.deadline_misses
         && a.by_class.iter().zip(&b.by_class).all(|(x, y)| class_eq(x, y))
 }
 

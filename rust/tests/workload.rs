@@ -1,0 +1,228 @@
+//! Workload-harness tests: generator determinism (including across
+//! `PQ_THREADS`), empirical arrival rates, engine-side deadline-miss
+//! accounting, the open-loop driver's scoring ledger, and the full
+//! trace → oplog export → replay round trip.  All sim-backed — no
+//! artifacts required.
+
+use std::time::Duration;
+
+use prefixquant::coordinator::{
+    BackendDesc, FinishReason, GenRequest, LeastLoaded, Oplog, Priority, Router, RouterConfig,
+    Server, ServerConfig, SimBackend, TraceView,
+};
+use prefixquant::model::QuantMode;
+use prefixquant::workload::{run_trace, ArrivalProcess, Target, Workload};
+
+const B_EXEC: usize = 4;
+const S_EXEC: usize = 96;
+const N_PREFIX: usize = 1;
+const CACHE_MAX: usize = 192;
+
+fn sim_server(costs: Option<(Duration, Duration)>) -> Server {
+    Server::start_sim(
+        move || {
+            let be = SimBackend::new(B_EXEC, S_EXEC, N_PREFIX, CACHE_MAX);
+            Ok(match costs {
+                Some((p, d)) => be.with_costs(p, d),
+                None => be,
+            })
+        },
+        ServerConfig::builder(QuantMode::Static)
+            .max_batch(B_EXEC)
+            .batch_window(Duration::from_millis(1))
+            .build(),
+    )
+    .expect("sim server")
+}
+
+// ------------------------------------------------------------- determinism
+
+#[test]
+fn generation_is_deterministic_across_regenerations() {
+    let w = Workload::mixed(0xD5EED).with_rate(350.0).with_requests(150);
+    let a = w.generate();
+    let b = w.generate();
+    assert_eq!(a, b, "same spec must yield a byte-identical trace");
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    // and the fingerprint is sensitive to everything that shapes a run
+    assert_ne!(a.fingerprint(), w.clone().with_seed(1).generate().fingerprint());
+    assert_ne!(a.fingerprint(), w.clone().with_rate(351.0).generate().fingerprint());
+    assert_ne!(a.fingerprint(), w.clone().with_requests(151).generate().fingerprint());
+}
+
+#[test]
+fn generation_ignores_pq_threads() {
+    // generation is a pure single-threaded walk of one rng stream; the
+    // thread-pool knob must not be consulted.  CI additionally runs this
+    // whole test binary under PQ_THREADS=1.
+    let w = Workload::mixed(42).with_rate(500.0).with_requests(200);
+    let saved = std::env::var("PQ_THREADS").ok();
+    std::env::set_var("PQ_THREADS", "1");
+    let single = w.generate();
+    std::env::set_var("PQ_THREADS", "7");
+    let many = w.generate();
+    match saved {
+        Some(v) => std::env::set_var("PQ_THREADS", v),
+        None => std::env::remove_var("PQ_THREADS"),
+    }
+    assert_eq!(single, many, "PQ_THREADS must not influence trace generation");
+    assert_eq!(single.fingerprint(), many.fingerprint());
+}
+
+#[test]
+fn empirical_rates_track_the_configured_rate() {
+    // fixed seeds make these exact, but the tolerances are set so any
+    // healthy seed passes: Poisson concentrates tightly at n=400; the
+    // burst/heavy-tail shapes wander more
+    let poisson = Workload::mixed(9)
+        .with_arrival(ArrivalProcess::Poisson)
+        .with_rate(200.0)
+        .with_requests(400);
+    let r = poisson.generate().empirical_rate();
+    assert!((150.0..=250.0).contains(&r), "poisson empirical rate {r:.1} off 200");
+
+    let bursty = Workload::mixed(9)
+        .with_arrival(ArrivalProcess::Bursty { on_s: 0.05, off_s: 0.05 })
+        .with_rate(200.0)
+        .with_requests(400);
+    let r = bursty.generate().empirical_rate();
+    assert!((120.0..=300.0).contains(&r), "bursty empirical rate {r:.1} off 200");
+
+    let heavy = Workload::mixed(9)
+        .with_arrival(ArrivalProcess::HeavyTail { alpha: 2.5 })
+        .with_rate(200.0)
+        .with_requests(400);
+    let r = heavy.generate().empirical_rate();
+    assert!((100.0..=320.0).contains(&r), "heavy-tail empirical rate {r:.1} off 200");
+}
+
+// --------------------------------------------------- deadline-miss metrics
+
+#[test]
+fn engine_counts_deadline_misses() {
+    // spin-wait costs give a reliable LOWER bound on total latency: a 1ms
+    // budget cannot survive a 2ms prefill + 3 x 2ms decode
+    let server = sim_server(Some((Duration::from_millis(2), Duration::from_millis(2))));
+    let missed = server
+        .generate(
+            GenRequest::builder(1)
+                .prompt(vec![5, 6, 7])
+                .max_new(3)
+                .priority(Priority::Interactive)
+                .deadline(Duration::from_millis(1))
+                .build(),
+        )
+        .expect("tight-deadline request");
+    assert_eq!(missed.finish, FinishReason::Length, "deadlines do not kill requests");
+    let met = server
+        .generate(
+            GenRequest::builder(2)
+                .prompt(vec![8, 9, 10])
+                .max_new(3)
+                .priority(Priority::Interactive)
+                .deadline(Duration::from_secs(10))
+                .build(),
+        )
+        .expect("loose-deadline request");
+    assert_eq!(met.finish, FinishReason::Length);
+    let m = server.metrics().expect("metrics");
+    server.shutdown();
+    assert_eq!(m.deadline_misses, 1, "only the 1ms-budget request missed");
+    assert_eq!(m.ttft_hist().count(), 2, "both completions record TTFT");
+    assert_eq!(m.tpot_hist().count(), 2, "multi-token completions record TPOT");
+    assert!(m.ttft_hist().p99() >= m.ttft_hist().p50());
+}
+
+// ------------------------------------------------------- open-loop driver
+
+#[test]
+fn driver_accounts_every_traced_request() {
+    let trace = Workload::mixed(0xAB).with_rate(300.0).with_requests(40).generate();
+    let target = Target::Server(sim_server(None));
+    let report = run_trace(&trace, &target).expect("open-loop run");
+    let m = target.metrics().expect("metrics");
+    target.shutdown();
+
+    let sc = &report.score;
+    assert_eq!(sc.submitted, 40);
+    assert_eq!(report.outcomes.len(), 40);
+    assert_eq!(sc.per_class.iter().map(|c| c.offered).sum::<usize>(), 40);
+    // exactly-once: every request reached exactly one terminal bucket
+    // (truncations — CacheFull / WorkerLost — drain but score in no bucket)
+    let terminal: usize = sc.per_class.iter().map(|c| c.completed + c.cancelled + c.errors).sum();
+    let truncated = report
+        .outcomes
+        .iter()
+        .filter(|o| {
+            matches!(o.finish, Some(FinishReason::CacheFull) | Some(FinishReason::WorkerLost))
+        })
+        .count();
+    assert_eq!(terminal + truncated, 40, "driver must drain every stream");
+    assert_eq!(sc.errors, 0, "sim fleet serves everything");
+    assert!(sc.wall_s > 0.0 && sc.goodput_rps >= 0.0);
+    assert!((0.0..=1.0).contains(&sc.attainment));
+    // an uncontended cost-free fleet meets the budgets
+    assert!(sc.slo_ok > 0, "an idle sim fleet must land inside SLO");
+    assert!(m.requests > 0, "engine-side metrics saw the run");
+}
+
+// ------------------------------------------- oplog export → replay round trip
+
+#[test]
+fn trace_survives_oplog_export_and_replay() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("pq_workload_oplog_{}.log", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    // cancels + deadlines in the population: agent loops cancel mid-stream,
+    // interactive-deadline requests carry whole-ms budgets.  Per-call costs
+    // keep streams alive long enough for some cancels to land mid-flight.
+    let trace = Workload::mixed(0xA5).with_rate(400.0).with_requests(80).generate();
+    assert!(trace.events.iter().any(|e| e.req.deadline.is_some()), "deadlines in trace");
+    assert!(trace.events.iter().any(|e| e.cancel_after_s.is_some()), "cancels in trace");
+
+    let costs = Some((Duration::from_micros(500), Duration::from_millis(1)));
+    let workers: Vec<Server> = (0..2).map(|_| sim_server(costs)).collect();
+    let log = Oplog::create(
+        &path,
+        &BackendDesc::Sim {
+            b_exec: B_EXEC as u32,
+            s_exec: S_EXEC as u32,
+            n_prefix: N_PREFIX as u32,
+            cache_max: CACHE_MAX as u32,
+        },
+    )
+    .expect("create oplog");
+    let cfg = RouterConfig::default().policy(Box::new(LeastLoaded::new())).oplog(log);
+    let router = Router::new(workers, cfg).expect("router");
+    let target = Target::Router(router);
+    let report = run_trace(&trace, &target).expect("captured run");
+    target.shutdown();
+    assert_eq!(report.score.submitted, 80);
+
+    // every admission must have journaled the request verbatim (deadline at
+    // whole-ms granularity survives the integer-ms wire encoding exactly)
+    let recovered = prefixquant::coordinator::read_log(&path).expect("read journal");
+    assert_eq!(recovered.dropped_bytes, 0, "clean shutdown leaves no torn tail");
+    let view = TraceView::from_entries(&recovered.entries);
+    assert_eq!(view.records.len(), 80, "one record per traced request");
+    for (ev, rec) in trace.events.iter().zip(&view.records) {
+        assert_eq!(rec.req.prompt, ev.req.prompt, "seq {}", rec.seq);
+        assert_eq!(rec.req.max_new, ev.req.max_new, "seq {}", rec.seq);
+        assert_eq!(rec.req.priority, ev.req.priority, "seq {}", rec.seq);
+        assert_eq!(rec.req.seed, ev.req.seed, "seq {}", rec.seq);
+        assert_eq!(rec.req.deadline, ev.req.deadline, "deadline must round-trip exactly");
+    }
+
+    // the captured run replays bit-consistently on a fresh (cost-free) fleet:
+    // sim tokens depend only on prompt + seed, and cancelled captures need
+    // only prefix agreement
+    let fresh: Vec<Server> = (0..2).map(|_| sim_server(None)).collect();
+    let router = Router::new(fresh, RouterConfig::default()).expect("replay fleet");
+    let rep = prefixquant::coordinator::replay(&view, &router).expect("replay");
+    router.shutdown();
+    assert_eq!(rep.total, 80);
+    assert!(rep.ok(), "replay diverged on seqs {:?}", rep.mismatched);
+
+    let _ = std::fs::remove_file(&path);
+}
