@@ -1,0 +1,292 @@
+//! Fleet-resilience bench: SLO goodput under failpoint-driven chaos, with
+//! and without the self-healing layer.
+//!
+//! Two identically-provisioned fleets face the SAME seeded open-loop trace
+//! while every worker is armed to crash (silent thread exit) at a staggered
+//! serve-pass offset:
+//!
+//! - **baseline**: stream resume on, but no supervisor, no admission
+//!   control, no retry budget — each crash permanently removes a worker;
+//! - **resilient**: the same fleet plus supervised restarts (seeded
+//!   exponential backoff, windowed budget), overload-protected admission,
+//!   and a global redispatch retry budget.
+//!
+//!   cargo bench --bench fleet_resilience            # full run
+//!   cargo bench --bench fleet_resilience -- --smoke # CI trail
+//!
+//! Emits `BENCH_fleet_resilience.json` and ASSERTS the headline wins:
+//! - the trace is deterministic (same seed → identical fingerprint) and both
+//!   fleets face byte-identical traffic;
+//! - the resilient fleet sustains ≥2x the baseline's goodput under chaos;
+//! - both fleets settle every request exactly once
+//!   (completed + cancelled + shed + quarantined + errors == offered, and
+//!   the router ledger drains to zero unresolved);
+//! - every crashed worker is rebooted, and no restart runs ahead of its
+//!   backoff schedule (zero violations);
+//! - a poison request is quarantined after exactly two worker deaths, and
+//!   the fleet survives with ≥ workers−2 slots alive.
+//!
+//! No artifacts required.
+
+use std::time::Duration;
+
+use prefixquant::bench_support::{emit_bench_json, smoke_mode};
+use prefixquant::coordinator::failpoint::names;
+use prefixquant::coordinator::{
+    AdmissionConfig, FailAction, Failpoints, FinishReason, FleetMetrics, GenRequest, KvLayout,
+    PriorityPreempt, Router, RouterConfig, Server, ServerConfig, SimBackend, StreamEvent,
+    SupervisorConfig, WorkerState,
+};
+use prefixquant::model::QuantMode;
+use prefixquant::workload::{run_trace, RunScore, Target, Trace, Workload};
+
+const B_EXEC: usize = 4;
+const S_EXEC: usize = 96;
+const N_PREFIX: usize = 1;
+const CACHE_MAX: usize = 192;
+const N_WORKERS: usize = 4;
+const SEED: u64 = 0x5AFE;
+
+/// One sim worker; `failpoints` lets the chaos schedule crash its serve loop.
+fn sim_worker(decode: Duration, failpoints: Failpoints) -> anyhow::Result<Server> {
+    Server::start_sim(
+        move || {
+            Ok(SimBackend::new(B_EXEC, S_EXEC, N_PREFIX, CACHE_MAX)
+                .with_costs(Duration::from_micros(500), decode))
+        },
+        ServerConfig::builder(QuantMode::Static)
+            .max_batch(B_EXEC)
+            .batch_window(Duration::from_millis(1))
+            .policy(Box::new(PriorityPreempt::default()))
+            .kv(KvLayout::Paged { page_size: 8, n_pages: 0 })
+            .failpoints(failpoints)
+            .build(),
+    )
+}
+
+/// Boot the chaos fleet: every worker armed to crash at a staggered
+/// serve-pass offset.  `resilient` adds the self-healing layer; replacement
+/// workers boot healthy (unarmed failpoints).
+fn chaos_fleet(resilient: bool) -> anyhow::Result<Target> {
+    let decode = Duration::from_millis(1);
+    let workers = (0..N_WORKERS)
+        .map(|w| {
+            let fp = Failpoints::default();
+            // staggered chaos: the fleet decays worker by worker, early
+            // enough that the baseline spends most of the run short-handed
+            fp.arm(names::WORKER_CRASH, 60 + 60 * w, FailAction::Crash);
+            sim_worker(decode, fp)
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let mut cfg = RouterConfig::default()
+        .resume_streams(true)
+        .health_interval(Duration::from_millis(5))
+        .probe_timeout(Duration::from_millis(250));
+    if resilient {
+        cfg = cfg
+            .supervise(
+                SupervisorConfig::default()
+                    .backoff_base(Duration::from_millis(20))
+                    .backoff_max(Duration::from_millis(200))
+                    .max_restarts(4)
+                    .seed(SEED),
+                Box::new(move |_w| sim_worker(decode, Failpoints::default())),
+            )
+            .admission(AdmissionConfig::default().est_token_cost_s(0.0002))
+            .retry_budget(256, 64.0);
+    }
+    Ok(Target::Router(Router::new(workers, cfg)?))
+}
+
+/// Driver-level exactly-once ledger (the router-side one is checked via
+/// `unresolved()`): with resume on, no stream may settle outside these five
+/// buckets.
+fn assert_ledger(tag: &str, s: &RunScore) {
+    let settled = s.completed + s.cancelled + s.shed + s.quarantined + s.errors;
+    assert_eq!(
+        settled, s.submitted,
+        "{tag}: every offered request must settle exactly once \
+         (completed {} + cancelled {} + shed {} + quarantined {} + errors {} != offered {})",
+        s.completed, s.cancelled, s.shed, s.quarantined, s.errors, s.submitted
+    );
+}
+
+/// Run the chaos trace against one fleet flavor; returns the driver score
+/// plus the router's own fleet counters.
+fn run_chaos(trace: &Trace, resilient: bool) -> (RunScore, FleetMetrics) {
+    let target = chaos_fleet(resilient).expect("chaos fleet boots");
+    let report = run_trace(trace, &target).expect("open-loop run completes");
+    let fleet = match &target {
+        Target::Router(r) => r.report().expect("fleet report").fleet,
+        Target::Server(_) => unreachable!("chaos fleet is routed"),
+    };
+    target.shutdown();
+    (report.score, fleet)
+}
+
+/// Poison-request scenario: one stream implicated in two worker deaths must
+/// quarantine, with ≥ N_WORKERS−2 slots still alive and serving.
+fn poison_scenario() -> (usize, usize) {
+    let workers = (0..N_WORKERS)
+        .map(|_| sim_worker(Duration::from_millis(20), Failpoints::default()))
+        .collect::<anyhow::Result<Vec<_>>>()
+        .expect("poison fleet boots");
+    let router = Router::new(workers, RouterConfig::default().resume_streams(true))
+        .expect("poison fleet routes");
+    let poison = GenRequest::new(0, vec![13, 31, 77, 99], 40);
+    let h = router.submit(poison).expect("poison submits");
+    match h.recv().expect("poison produces a token") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token first, got {ev:?}"),
+    }
+    let mut deaths = 0usize;
+    for round in 0..2 {
+        let w = router
+            .locate(h.id())
+            .expect("locate works")
+            .unwrap_or_else(|| panic!("poison stream in flight before death {round}"));
+        router.kill_worker(w).expect("kill reaches the worker");
+        deaths += 1;
+        let quarantined_now = router.report().expect("report").fleet.quarantined;
+        if round == 0 {
+            assert_eq!(quarantined_now, 0, "one death must NOT quarantine");
+        }
+    }
+    let resp = loop {
+        match h.recv().expect("poison stream settles") {
+            StreamEvent::Token(_) => {}
+            StreamEvent::Done(resp) => break resp,
+            StreamEvent::Error(e) => panic!("poison stream errored instead of quarantining: {e}"),
+        }
+    };
+    assert_eq!(resp.finish, FinishReason::Quarantined, "2 deaths → quarantine");
+    assert!(!resp.tokens.is_empty(), "delivered tokens come back with the quarantine");
+
+    let report = router.report().expect("report");
+    assert_eq!(report.fleet.quarantined, 1);
+    assert_eq!(report.fleet.unresolved(), 0, "poison ledger balances");
+    let alive = report
+        .workers
+        .iter()
+        .filter(|w| matches!(w.state, WorkerState::Alive | WorkerState::Draining))
+        .count();
+    assert!(
+        alive >= N_WORKERS - 2,
+        "fleet must survive the poison request with >= {} alive (got {alive})",
+        N_WORKERS - 2
+    );
+    // the survivors still serve fresh traffic
+    let fresh = GenRequest::new(0, vec![1, 2, 3, 4], 4);
+    let resp = router.submit(fresh).expect("fresh submit").collect().expect("fresh completes");
+    assert_eq!(resp.finish, FinishReason::Length);
+    router.shutdown();
+    (deaths, alive)
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let (rate, duration_s, min_req) = if smoke { (350.0, 0.5, 60) } else { (350.0, 1.2, 150) };
+    let n = ((rate * duration_s).ceil() as usize).max(min_req);
+    let workload = Workload::mixed(SEED).with_rate(rate).with_requests(n);
+
+    // determinism gate: the chaos trace is a pure function of the spec
+    let trace = workload.clone().generate();
+    let again = workload.generate();
+    assert_eq!(trace, again, "trace generation must be pure at {rate} rps");
+    assert_eq!(trace.fingerprint(), again.fingerprint());
+
+    // warm both flavors with a throwaway run (thread spin-up, first faults)
+    for resilient in [false, true] {
+        let warm = Workload::mixed(1).with_rate(100.0).with_requests(10).generate();
+        let target = chaos_fleet(resilient).expect("warm fleet");
+        let _ = run_trace(&warm, &target);
+        target.shutdown();
+    }
+
+    eprintln!(
+        "chaos run: {N_WORKERS} workers, every worker armed to crash, {rate:.0} rps x \
+         {duration_s}s{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+    let (base, base_fleet) = run_chaos(&trace, false);
+    let (res, res_fleet) = run_chaos(&trace, true);
+
+    println!(
+        "baseline : goodput {:>7.1} rps  attain {:.3}  completed {:>4}  errors {:>4}  \
+         crashes {}",
+        base.goodput_rps,
+        base.attainment,
+        base.completed,
+        base.errors,
+        base_fleet.workers_dead + base_fleet.workers_killed
+    );
+    println!(
+        "resilient: goodput {:>7.1} rps  attain {:.3}  completed {:>4}  shed {:>3}  \
+         quarantined {:>2}  restarts {} (violations {})",
+        res.goodput_rps,
+        res.attainment,
+        res.completed,
+        res.shed,
+        res.quarantined,
+        res_fleet.workers_restarted,
+        res_fleet.restart_schedule_violations
+    );
+
+    // exactly-once: driver-side AND router-side
+    assert_ledger("baseline", &base);
+    assert_ledger("resilient", &res);
+    assert_eq!(base_fleet.unresolved(), 0, "baseline router ledger drains to zero");
+    assert_eq!(res_fleet.unresolved(), 0, "resilient router ledger drains to zero");
+
+    // chaos actually happened, and only the resilient fleet healed from it
+    assert!(
+        base_fleet.workers_dead >= N_WORKERS - 1,
+        "chaos must kill most of the baseline fleet (got {} dead)",
+        base_fleet.workers_dead
+    );
+    assert_eq!(base_fleet.workers_restarted, 0, "the baseline fleet must not self-heal");
+    assert!(
+        res_fleet.workers_restarted >= N_WORKERS - 1,
+        "the supervisor must reboot the crashed workers (got {} restarts)",
+        res_fleet.workers_restarted
+    );
+    assert_eq!(
+        res_fleet.restart_schedule_violations, 0,
+        "no restart may run ahead of its backoff schedule"
+    );
+
+    let ratio = res.goodput_rps / base.goodput_rps.max(1e-9);
+    assert!(
+        ratio >= 2.0,
+        "supervised+admission fleet must sustain >=2x baseline goodput under chaos \
+         (got {ratio:.2}x: {:.1} vs {:.1} rps)",
+        res.goodput_rps,
+        base.goodput_rps
+    );
+
+    let (poison_deaths, poison_alive) = poison_scenario();
+    println!(
+        "\nchaos goodput ratio {ratio:.2}x; poison quarantined after {poison_deaths} deaths, \
+         {poison_alive}/{N_WORKERS} workers alive"
+    );
+
+    emit_bench_json(
+        "fleet_resilience",
+        &[
+            ("offered_rps", rate),
+            ("baseline_goodput_rps", base.goodput_rps),
+            ("baseline_attainment", base.attainment),
+            ("resilient_goodput_rps", res.goodput_rps),
+            ("resilient_attainment", res.attainment),
+            ("goodput_ratio", ratio),
+            ("resilient_shed", res.shed as f64),
+            ("resilient_quarantined", res.quarantined as f64),
+            ("workers_restarted", res_fleet.workers_restarted as f64),
+            ("restart_schedule_violations", res_fleet.restart_schedule_violations as f64),
+            ("retries_denied", res_fleet.retries_denied as f64),
+            ("poison_deaths_to_quarantine", poison_deaths as f64),
+            ("poison_alive_workers", poison_alive as f64),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
+}

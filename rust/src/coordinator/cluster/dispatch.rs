@@ -86,6 +86,11 @@ pub trait DispatchPolicy: Send {
     /// A worker left the fleet for good: drop any per-worker state (tracked
     /// prefixes must not keep routing at a dead worker).
     fn forget_worker(&mut self, _worker: usize) {}
+
+    /// The supervisor rebooted a replacement into slot `worker`: the slot id
+    /// is live again but the process behind it is fresh, so any per-worker
+    /// cache state (tracked prefixes) must be dropped, not inherited.
+    fn worker_restarted(&mut self, _worker: usize) {}
 }
 
 /// Rotate through the alive workers in id order.
@@ -298,6 +303,12 @@ impl DispatchPolicy for PrefixAffinity {
     fn forget_worker(&mut self, worker: usize) {
         self.tracked.remove(&worker);
     }
+
+    fn worker_restarted(&mut self, worker: usize) {
+        // the slot is back but the replacement booted with an empty radix
+        // cache — tracked prefixes describe the dead process, not this one
+        self.tracked.remove(&worker);
+    }
 }
 
 #[cfg(test)]
@@ -391,6 +402,22 @@ mod tests {
         let pick = p.pick(&req(shared), &survivors);
         assert!(!pick.affinity_hit, "tracked prefixes of a lost worker are gone");
         assert_eq!(pick.worker, 1 - first);
+    }
+
+    #[test]
+    fn worker_restarted_drops_tracked_prefixes_but_keeps_the_slot_routable() {
+        let mut p = PrefixAffinity::new().with_block(2);
+        let loads = idle(&[0, 1]);
+        let shared = vec![4, 4, 4, 4];
+        let first = p.pick(&req(shared.clone()), &loads).worker;
+        assert!(p.pick(&req(shared.clone()), &loads).affinity_hit, "tracker primed");
+        p.worker_restarted(first);
+        // same slot ids remain routable, but the replacement's cache is cold:
+        // no stale affinity hit may route on the dead process's prefixes
+        let pick = p.pick(&req(shared.clone()), &loads);
+        assert!(!pick.affinity_hit, "restarted worker's tracked prefixes are gone");
+        // the pick re-registers the prefix, so affinity rebuilds naturally
+        assert!(p.pick(&req(shared), &loads).affinity_hit);
     }
 
     #[test]

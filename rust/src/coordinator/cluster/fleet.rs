@@ -3,12 +3,13 @@
 //!
 //! The router-level counters form an exactly-once ledger: every submitted
 //! request ends in exactly one of `completed`, `cancelled`, `worker_lost`,
-//! or `errors`, whatever workers died along the way — the drain test holds
-//! the fleet to `submitted == terminal()` at the end of a run.
+//! `shed`, `quarantined`, or `errors`, whatever workers died along the way —
+//! the drain test holds the fleet to `submitted == terminal()` at the end of
+//! a run.
 
 use crate::coordinator::request::Metrics;
 
-use super::health::WorkerState;
+use super::health::{DrainCause, WorkerState};
 
 /// Router-level counters (cluster scope; per-engine counters live in the
 /// merged [`Metrics`]).
@@ -46,12 +47,33 @@ pub struct FleetMetrics {
     pub workers_wedged: usize,
     pub workers_drained: usize,
     pub workers_killed: usize,
+    /// terminal: rejected by the admission controller before dispatch
+    /// (`FinishReason::Shed`) — deadline infeasible, backlog limit, or
+    /// brownout tier
+    pub shed: usize,
+    /// terminal: implicated in ≥2 worker deaths and removed from dispatch
+    /// (`FinishReason::Quarantined`)
+    pub quarantined: usize,
+    /// replacement workers the supervisor booted into lost slots
+    pub workers_restarted: usize,
+    /// worker slots permanently retired after exhausting the restart budget
+    pub workers_retired: usize,
+    /// redispatches denied by the global retry token bucket (each denial
+    /// settles its request, so the ledger still balances)
+    pub retries_denied: usize,
+    /// restarts that ran ahead of their scheduled backoff (invariant: 0)
+    pub restart_schedule_violations: usize,
 }
 
 impl FleetMetrics {
     /// Requests that reached a terminal client event.
     pub fn terminal(&self) -> usize {
-        self.completed + self.cancelled + self.worker_lost + self.errors
+        self.completed
+            + self.cancelled
+            + self.worker_lost
+            + self.errors
+            + self.shed
+            + self.quarantined
     }
 
     /// Requests still in flight (or lost to an accounting bug — the drain
@@ -110,6 +132,13 @@ pub struct WorkerFleetMetrics {
     pub ttft_p99_s: f64,
     /// terminals this worker delivered after their request's deadline budget
     pub deadline_misses: usize,
+    /// why this slot last left the rotation (`None` = never lost); survives
+    /// a supervised restart so the fleet table can show crash history
+    pub cause: Option<DrainCause>,
+    /// times the supervisor rebooted a replacement into this slot
+    pub restarts: usize,
+    /// the slot exhausted its restart budget and is permanently out
+    pub retired: bool,
 }
 
 /// One fleet-wide report: router counters, per-worker breakdown, and every
@@ -130,16 +159,18 @@ mod tests {
     #[test]
     fn ledger_accounts_every_request_exactly_once() {
         let mut f = FleetMetrics {
-            submitted: 10,
+            submitted: 13,
             completed: 6,
             cancelled: 1,
             worker_lost: 2,
             errors: 1,
+            shed: 2,
+            quarantined: 1,
             ..FleetMetrics::default()
         };
-        assert_eq!(f.terminal(), 10);
+        assert_eq!(f.terminal(), 13, "shed/quarantined are terminals too");
         assert_eq!(f.unresolved(), 0);
-        f.submitted = 12;
+        f.submitted = 15;
         assert_eq!(f.unresolved(), 2);
     }
 

@@ -2,7 +2,7 @@
 //! [`Server`](crate::coordinator::server::Server) workers booted from one
 //! shared quantization artifact.
 //!
-//! The module splits into four pieces:
+//! The module splits into five pieces:
 //!
 //! - [`dispatch`] — the [`DispatchPolicy`] trait and its three
 //!   implementations: [`RoundRobin`], [`LeastLoaded`] (active slots + queued
@@ -21,13 +21,23 @@
 //!   redistribution, and fleet reporting.
 //! - [`fleet`] — [`FleetMetrics`] (the exactly-once request ledger and
 //!   prefix-hit accounting) and the per-worker/merged [`FleetReport`].
+//! - [`supervisor`] — fleet self-healing: the [`Supervisor`] restart
+//!   scheduler (seeded exponential backoff, sliding-window budgets,
+//!   permanent retirement), the [`RetryBudget`] redispatch token bucket,
+//!   and the [`AdmissionController`] overload front (deadline-infeasibility
+//!   shedding, backlog limits, brownout tiers).
 
 pub mod dispatch;
 pub mod fleet;
 pub mod health;
 pub mod router;
+pub mod supervisor;
 
 pub use dispatch::{DispatchPolicy, LeastLoaded, Pick, PrefixAffinity, RoundRobin, WorkerLoad};
 pub use fleet::{FleetMetrics, FleetReport, WorkerFleetMetrics};
 pub use health::{DrainCause, HealthTracker, WorkerState};
 pub use router::{Router, RouterConfig, RouterHandle};
+pub use supervisor::{
+    Admission, AdmissionConfig, AdmissionController, RestartPlan, RetryBudget, Supervisor,
+    SupervisorConfig,
+};

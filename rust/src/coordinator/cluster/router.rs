@@ -70,6 +70,18 @@ use crate::coordinator::server::Server;
 use super::dispatch::{DispatchPolicy, RoundRobin, WorkerLoad};
 use super::fleet::{FleetMetrics, FleetReport, WorkerFleetMetrics};
 use super::health::{DrainCause, HealthTracker, WorkerState};
+use super::supervisor::{
+    Admission, AdmissionConfig, AdmissionController, RestartPlan, RetryBudget, Supervisor,
+    SupervisorConfig,
+};
+
+/// Boots a replacement [`Server`] for a worker slot (from the same shared
+/// artifact/backend the original came from).
+pub type WorkerFactory = Box<dyn FnMut(usize) -> Result<Server> + Send>;
+
+/// A request implicated in this many worker deaths is quarantined
+/// (finished with `FinishReason::Quarantined`) instead of redispatched.
+const QUARANTINE_DEATHS: usize = 2;
 
 /// Router configuration.  `Default`: round-robin dispatch, 50ms health
 /// interval, 1s probe deadline, 4 stale probes to a wedge verdict, 3
@@ -91,6 +103,15 @@ pub struct RouterConfig {
     /// (instead of finishing them with `FinishReason::WorkerLost`); off by
     /// default, implied on by [`RouterConfig::oplog`]
     pub resume_streams: bool,
+    /// supervised restarts: lost workers are rebooted via `worker_factory`
+    /// on the supervisor's backoff schedule (requires `worker_factory`)
+    pub supervisor: Option<SupervisorConfig>,
+    /// boots replacement workers for the supervisor
+    pub worker_factory: Option<WorkerFactory>,
+    /// overload-protected admission at the router front
+    pub admission: Option<AdmissionConfig>,
+    /// global redispatch token bucket (crash-loop storm bound)
+    pub retry_budget: Option<RetryBudget>,
 }
 
 impl Default for RouterConfig {
@@ -103,6 +124,10 @@ impl Default for RouterConfig {
             max_redispatch: 3,
             oplog: None,
             resume_streams: false,
+            supervisor: None,
+            worker_factory: None,
+            admission: None,
+            retry_budget: None,
         }
     }
 }
@@ -143,6 +168,27 @@ impl RouterConfig {
 
     pub fn resume_streams(mut self, on: bool) -> Self {
         self.resume_streams = on;
+        self
+    }
+
+    /// Supervise the fleet: lost workers are rebooted by `factory` on
+    /// `cfg`'s backoff schedule, budgeted per sliding window.
+    pub fn supervise(mut self, cfg: SupervisorConfig, factory: WorkerFactory) -> Self {
+        self.supervisor = Some(cfg);
+        self.worker_factory = Some(factory);
+        self
+    }
+
+    /// Shed overload at the router front (see [`AdmissionConfig`]).
+    pub fn admission(mut self, cfg: AdmissionConfig) -> Self {
+        self.admission = Some(cfg);
+        self
+    }
+
+    /// Bound crash-loop redispatch storms with a token bucket: `capacity`
+    /// burst, refilling at `refill_per_s` tokens per second.
+    pub fn retry_budget(mut self, capacity: usize, refill_per_s: f64) -> Self {
+        self.retry_budget = Some(RetryBudget::new(capacity, refill_per_s));
         self
     }
 }
@@ -232,10 +278,18 @@ impl Router {
             max_redispatch,
             oplog,
             resume_streams,
+            supervisor,
+            worker_factory,
+            admission,
+            retry_budget,
         } = cfg;
+        if supervisor.is_some() && worker_factory.is_none() {
+            bail!("supervised restarts need a worker factory (RouterConfig::supervise)");
+        }
         let (ctl_tx, ctl_rx) = channel::<Ctl>();
         let (ev_tx, ev_rx) = channel::<RoutedEvent>();
         let now = Instant::now();
+        let n_workers = workers.len();
         let slots = workers
             .into_iter()
             .map(|server| WorkerSlot {
@@ -256,6 +310,8 @@ impl Router {
                 prefix_hit_tokens: 0,
                 redistributions_absorbed: 0,
                 completed: 0,
+                restarts: 0,
+                last_cause: None,
             })
             .collect();
         let core = Core {
@@ -263,6 +319,7 @@ impl Router {
             policy,
             health_interval,
             probe_timeout,
+            wedge_probes,
             max_redispatch,
             ctl_rx,
             ev_rx,
@@ -272,6 +329,12 @@ impl Router {
             fleet: FleetMetrics::default(),
             oplog,
             resume_streams,
+            supervisor: supervisor.map(|cfg| Supervisor::new(n_workers, cfg)),
+            factory: worker_factory,
+            admission: admission.map(AdmissionController::new),
+            retry_budget,
+            implicated: HashMap::new(),
+            lost_metrics: Metrics::default(),
         };
         let handle = std::thread::Builder::new().name("pq-router".into()).spawn(move || {
             core.run();
@@ -442,6 +505,10 @@ struct WorkerSlot {
     prefix_hit_tokens: usize,
     redistributions_absorbed: usize,
     completed: usize,
+    /// supervised replacement boots into this slot
+    restarts: usize,
+    /// why the slot last left the rotation (survives restarts)
+    last_cause: Option<DrainCause>,
 }
 
 impl WorkerSlot {
@@ -472,6 +539,21 @@ struct Core {
     /// resume token-producing streams off lost workers instead of finishing
     /// them with `WorkerLost`
     resume_streams: bool,
+    /// wedge threshold, kept so restarted workers get a fresh tracker
+    wedge_probes: usize,
+    /// restart scheduler (None = unsupervised fleet)
+    supervisor: Option<Supervisor>,
+    /// boots replacement workers for the supervisor
+    factory: Option<WorkerFactory>,
+    /// overload front (None = admit everything)
+    admission: Option<AdmissionController>,
+    /// global redispatch token bucket (None = unbounded retries)
+    retry_budget: Option<RetryBudget>,
+    /// seq → worker deaths this request was in flight for (poison tracking)
+    implicated: HashMap<u64, usize>,
+    /// merged engine metrics of every lost worker incarnation, so restarted
+    /// slots don't erase the work their dead predecessors served
+    lost_metrics: Metrics,
 }
 
 impl Core {
@@ -495,6 +577,7 @@ impl Core {
             }
             self.poll_probes();
             self.start_due_probes();
+            self.tick_supervisor();
             // Park on the event funnel: token events are the high-rate
             // stream; control messages wait at most one quantum.
             match self.ev_rx.recv_timeout(self.quantum()) {
@@ -517,8 +600,20 @@ impl Core {
 
     fn on_ctl(&mut self, m: Ctl) {
         match m {
-            Ctl::Submit(req, seq, submitted, client) => {
+            Ctl::Submit(mut req, seq, submitted, client) => {
                 self.fleet.submitted += 1;
+                match self.assess_admission(&req) {
+                    Admission::Admit => {}
+                    // the cap is applied BEFORE the admission journal entry:
+                    // replay re-executes the journaled request verbatim, and
+                    // a deterministic finish must reproduce exactly
+                    Admission::AdmitCapped(cap) => req.max_new = req.max_new.min(cap),
+                    Admission::Shed(_) => {
+                        self.journal(&OpEntry::Admitted { seq, req: req.clone() });
+                        self.finish_shed(seq, submitted, &client);
+                        return;
+                    }
+                }
                 self.journal(&OpEntry::Admitted { seq, req: req.clone() });
                 self.dispatch(Route {
                     seq,
@@ -721,6 +816,7 @@ impl Core {
                     return;
                 };
                 self.by_seq.remove(&route.seq);
+                self.implicated.remove(&route.seq);
                 let ws = &mut self.workers[route.worker];
                 ws.outstanding = ws.outstanding.saturating_sub(1);
                 ws.completed += 1;
@@ -745,15 +841,18 @@ impl Core {
                 ws.outstanding = ws.outstanding.saturating_sub(1);
                 let retryable = route.tokens.is_empty() || self.resume_streams;
                 if retryable && route.redispatches < self.max_redispatch {
-                    // token-less failure: give another worker a try (bounded,
-                    // so a deterministic rejection cannot ping-pong forever).
-                    // With resume on, token-producing streams retry too — the
-                    // dispatch carries their tokens and resumes the stream.
+                    // token-less failure: give another worker a try — at most
+                    // `max_redispatch` redispatches over the route's lifetime
+                    // (check-then-increment, the one idiom every retry path
+                    // uses), so a deterministic rejection cannot ping-pong
+                    // forever.  With resume on, token-producing streams retry
+                    // too — the dispatch carries their tokens and resumes.
                     let mut route = route;
                     route.redispatches += 1;
                     self.dispatch(route);
                 } else {
                     self.fleet.errors += 1;
+                    self.implicated.remove(&route.seq);
                     self.journal(&OpEntry::Finished {
                         seq: route.seq,
                         outcome: Outcome::Error,
@@ -845,7 +944,13 @@ impl Core {
             self.on_event(ev);
         }
         self.workers[w].state = WorkerState::Lost(cause);
+        self.workers[w].last_cause = Some(cause);
         self.workers[w].probe_pending = None;
+        // fold the dead incarnation's last metrics snapshot into the lost
+        // accumulator now: a supervised restart will zero the slot's gauges,
+        // and the merged fleet view must keep the work this one served
+        let snapshot = self.workers[w].last_metrics.clone();
+        self.lost_metrics.merge(&snapshot);
         self.journal(&OpEntry::WorkerLost { worker: w as u64, cause });
         match cause {
             DrainCause::Dead => self.fleet.workers_dead += 1,
@@ -872,17 +977,33 @@ impl Core {
                 continue;
             };
             self.by_seq.remove(&route.seq);
+            // poison tracking: this request was in flight on a dying worker.
+            // Implicated in QUARANTINE_DEATHS deaths → presumed poisonous,
+            // finished instead of redispatched into another victim.
+            let deaths = {
+                let c = self.implicated.entry(route.seq).or_insert(0);
+                *c += 1;
+                *c
+            };
+            if deaths >= QUARANTINE_DEATHS {
+                self.finish_quarantined(wid, route);
+                continue;
+            }
             if route.tokens.is_empty() || self.resume_streams {
                 // token-less requests are re-dispatched fresh; with resume
                 // on, token-PRODUCING streams are re-dispatched too, carrying
                 // their delivered tokens — the survivor re-prefills
-                // prompt + tokens and the stream continues seamlessly
+                // prompt + tokens and the stream continues seamlessly.  At
+                // most `max_redispatch` redispatches per route
+                // (check-then-increment, same idiom as every retry path),
+                // gated by the global retry budget during crash loops.
                 let mut route = route;
-                route.redispatches += 1;
-                if route.redispatches <= self.max_redispatch {
+                if route.redispatches < self.max_redispatch && self.retry_allowed() {
+                    route.redispatches += 1;
                     self.dispatch(route);
                 } else if route.tokens.is_empty() {
                     self.fleet.errors += 1;
+                    self.implicated.remove(&route.seq);
                     self.journal(&OpEntry::Finished {
                         seq: route.seq,
                         outcome: Outcome::Error,
@@ -900,6 +1021,22 @@ impl Core {
             }
         }
         self.workers[w].outstanding = 0;
+        self.notify_supervisor_lost(w, cause);
+    }
+
+    /// Consult the global retry token bucket (always allowed when none is
+    /// configured).  A denial is counted — the caller settles the request.
+    fn retry_allowed(&mut self) -> bool {
+        match self.retry_budget.as_mut() {
+            None => true,
+            Some(bucket) => {
+                let ok = bucket.try_take(Instant::now());
+                if !ok {
+                    self.fleet.retries_denied += 1;
+                }
+                ok
+            }
+        }
     }
 
     /// Terminal settlement of a token-producing stream whose worker died and
@@ -907,6 +1044,7 @@ impl Core {
     /// `FinishReason::WorkerLost` carrying the tokens delivered so far.
     fn finish_worker_lost(&mut self, wid: u64, route: Route) {
         self.fleet.worker_lost += 1;
+        self.implicated.remove(&route.seq);
         self.journal(&OpEntry::Finished {
             seq: route.seq,
             outcome: Outcome::Finish(FinishReason::WorkerLost),
@@ -921,6 +1059,147 @@ impl Core {
             finish: FinishReason::WorkerLost,
         };
         let _ = route.client.send(StreamEvent::Done(resp));
+    }
+
+    /// Terminal settlement of a request implicated in `QUARANTINE_DEATHS`
+    /// worker deaths: presumed poisonous, it is finished with
+    /// `FinishReason::Quarantined` (tokens delivered so far attached)
+    /// instead of being redispatched into another worker.
+    fn finish_quarantined(&mut self, wid: u64, route: Route) {
+        self.fleet.quarantined += 1;
+        self.implicated.remove(&route.seq);
+        self.journal(&OpEntry::Finished {
+            seq: route.seq,
+            outcome: Outcome::Finish(FinishReason::Quarantined),
+            n_tokens: route.tokens.len() as u32,
+        });
+        let resp = GenResponse {
+            id: wid,
+            tokens: route.tokens.clone(),
+            ttft_s: route.first_token_s.unwrap_or(0.0),
+            total_s: route.submitted.elapsed().as_secs_f64(),
+            queue_s: 0.0,
+            finish: FinishReason::Quarantined,
+        };
+        let _ = route.client.send(StreamEvent::Done(resp));
+    }
+
+    /// Terminal settlement of a request the admission controller rejected
+    /// before dispatch: no worker involved, no tokens, a plain (seq) id.
+    fn finish_shed(&mut self, seq: u64, submitted: Instant, client: &Sender<StreamEvent>) {
+        self.fleet.shed += 1;
+        self.journal(&OpEntry::Finished {
+            seq,
+            outcome: Outcome::Finish(FinishReason::Shed),
+            n_tokens: 0,
+        });
+        let resp = GenResponse {
+            id: seq,
+            tokens: Vec::new(),
+            ttft_s: 0.0,
+            total_s: submitted.elapsed().as_secs_f64(),
+            queue_s: 0.0,
+            finish: FinishReason::Shed,
+        };
+        let _ = client.send(StreamEvent::Done(resp));
+    }
+
+    /// Run one submission through the admission controller (admit-everything
+    /// when none is configured).
+    fn assess_admission(&mut self, req: &GenRequest) -> Admission {
+        if self.admission.is_none() {
+            return Admission::Admit;
+        }
+        // same token-equivalent load estimate the dispatch policies use
+        let loads = self.alive_loads();
+        let backlog: usize = loads.iter().map(|l| l.score()).sum();
+        let admission = self.admission.as_mut().expect("checked above");
+        admission.assess(req, self.routes.len(), backlog, loads.len())
+    }
+
+    /// Let the supervisor react to a lost worker: schedule a replacement on
+    /// the backoff schedule, or retire the slot when its budget is spent.
+    fn notify_supervisor_lost(&mut self, w: usize, cause: DrainCause) {
+        let Some(sup) = self.supervisor.as_mut() else {
+            return;
+        };
+        match sup.on_worker_lost(w, cause, Instant::now()) {
+            RestartPlan::Scheduled { .. } => {}
+            RestartPlan::Retired { cause } => {
+                self.fleet.workers_retired += 1;
+                eprintln!(
+                    "pq-router: worker {w} retired permanently after exhausting its restart \
+                     budget (last cause: {})",
+                    cause.name()
+                );
+            }
+        }
+    }
+
+    /// Boot due replacement workers (supervised fleets only).
+    fn tick_supervisor(&mut self) {
+        if self.supervisor.is_none() {
+            return;
+        }
+        let due = self.supervisor.as_ref().expect("checked above").due(Instant::now());
+        for w in due {
+            let built = match self.factory.as_mut() {
+                Some(f) => f(w),
+                None => unreachable!("Router::new requires a factory with a supervisor"),
+            };
+            match built {
+                Ok(server) => self.reenlist(w, server),
+                Err(e) => {
+                    eprintln!("pq-router: replacement boot for worker {w} failed: {e:#}");
+                    let sup = self.supervisor.as_mut().expect("checked above");
+                    if let RestartPlan::Retired { cause } =
+                        sup.on_restart_failed(w, DrainCause::Dead, Instant::now())
+                    {
+                        self.fleet.workers_retired += 1;
+                        eprintln!(
+                            "pq-router: worker {w} retired permanently after exhausting its \
+                             restart budget (last cause: {})",
+                            cause.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Re-enlist a freshly booted replacement into worker slot `w`: reset
+    /// the slot's health/load state (the process behind it is new), keep the
+    /// cumulative dispatch counters, drop the dispatch policy's stale
+    /// per-worker state, and journal the restart so recovery and replay see
+    /// the same fleet history.
+    fn reenlist(&mut self, w: usize, server: Server) {
+        let now = Instant::now();
+        let ws = &mut self.workers[w];
+        ws.server = Some(server);
+        ws.state = WorkerState::Alive;
+        ws.health = HealthTracker::new(self.wedge_probes);
+        ws.active_slots = 0;
+        ws.queued_requests = 0;
+        ws.queued_tokens = 0;
+        ws.slots_total = 0;
+        ws.dispatched_since_probe = 0;
+        ws.outstanding = 0;
+        ws.probe_pending = None;
+        ws.last_probe_at = now;
+        // the dead incarnation's snapshot lives in lost_metrics already
+        ws.last_metrics = Metrics::default();
+        ws.restarts += 1;
+        self.policy.worker_restarted(w);
+        let done = self
+            .supervisor
+            .as_mut()
+            .expect("reenlist only runs on supervised fleets")
+            .on_restarted(w, now);
+        if done.violated {
+            self.fleet.restart_schedule_violations += 1;
+        }
+        self.fleet.workers_restarted += 1;
+        self.journal(&OpEntry::WorkerRestarted { worker: w as u64, restarts: done.restarts });
     }
 
     /// Cooperative drain (see [`Router::drain_worker`]).
@@ -955,8 +1234,10 @@ impl Core {
             self.by_seq.remove(&route.seq);
             let ws = &mut self.workers[w];
             ws.outstanding = ws.outstanding.saturating_sub(1);
-            route.redispatches += 1;
-            if route.redispatches <= self.max_redispatch {
+            // at most `max_redispatch` redispatches per route — the same
+            // check-then-increment idiom as the loss and error-retry paths
+            if route.redispatches < self.max_redispatch {
+                route.redispatches += 1;
                 self.dispatch(route);
             } else {
                 self.fleet.errors += 1;
@@ -997,7 +1278,9 @@ impl Core {
     }
 
     fn report(&mut self) -> FleetReport {
-        let mut merged = Metrics::default();
+        // lost incarnations were folded into lost_metrics at declare_lost;
+        // merging a Lost slot's snapshot again would double-count it
+        let mut merged = self.lost_metrics.clone();
         let mut workers = Vec::with_capacity(self.workers.len());
         for w in 0..self.workers.len() {
             if let Some(server) = self.workers[w].server.as_ref() {
@@ -1005,8 +1288,11 @@ impl Core {
                     self.workers[w].last_metrics = m;
                 }
             }
+            let retired = self.supervisor.as_ref().is_some_and(|s| s.is_retired(w));
             let ws = &self.workers[w];
-            merged.merge(&ws.last_metrics);
+            if !matches!(ws.state, WorkerState::Lost(_)) {
+                merged.merge(&ws.last_metrics);
+            }
             let saturation = if ws.slots_total > 0 {
                 ws.active_slots as f64 / ws.slots_total as f64
             } else {
@@ -1028,6 +1314,9 @@ impl Core {
                 ttft_p50_s: ws.last_metrics.ttft_hist().p50(),
                 ttft_p99_s: ws.last_metrics.ttft_hist().p99(),
                 deadline_misses: ws.last_metrics.deadline_misses,
+                cause: ws.last_cause,
+                restarts: ws.restarts,
+                retired,
             });
         }
         FleetReport { fleet: self.fleet.clone(), workers, merged }

@@ -1,0 +1,670 @@
+//! Fleet self-healing: supervised worker restarts, the redispatch retry
+//! budget, and overload-protected admission.
+//!
+//! Everything here is a deterministic, thread-free state machine driven by
+//! explicit `Instant`s, so the policies are unit-testable without booting a
+//! fleet and the router's chaos behavior is reproducible run-to-run:
+//!
+//! - [`Supervisor`] — when the router declares a worker `Lost`, schedule a
+//!   replacement boot after a seeded exponential backoff with deterministic
+//!   jitter ([`SplitMix64`], so two fleets with the same seed compute the
+//!   same schedule).  Restarts are budgeted per sliding window; a slot that
+//!   exhausts the budget is permanently retired with its last loss cause.
+//!   Every restart records its scheduled-vs-actual time, so a bench can
+//!   assert zero backoff-schedule violations.
+//! - [`RetryBudget`] — a global token bucket bounding redispatches during
+//!   crash loops: every worker death redistributes its queued requests, and
+//!   without a bound a crash loop turns each death into a redispatch storm
+//!   that re-poisons the survivors.
+//! - [`AdmissionController`] — sheds work at the router front before it
+//!   costs anything: requests whose deadline is infeasible given the
+//!   estimated queue delay, requests beyond the queue-depth/token-backlog
+//!   limits, and (under sustained overload) brownout tiers that first shed
+//!   `BestEffort` entirely and then cap `Batch` token budgets.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::{GenRequest, Priority};
+use crate::util::rng::SplitMix64;
+
+use super::health::DrainCause;
+
+/// Supervisor policy knobs.  `Default`: 50ms base backoff doubling to a 2s
+/// cap with 20% jitter, at most 3 restarts per 10s sliding window.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// delay before the first restart attempt (doubles per attempt)
+    pub backoff_base: Duration,
+    /// backoff ceiling
+    pub backoff_max: Duration,
+    /// extra delay as a fraction of the backoff, drawn deterministically
+    /// from the seeded rng (de-synchronizes simultaneous restarts)
+    pub jitter_frac: f64,
+    /// sliding window over which restarts are budgeted
+    pub restart_window: Duration,
+    /// restarts allowed per window; exceeding it retires the slot for good
+    pub max_restarts: usize,
+    /// jitter rng seed (same seed → same schedule)
+    pub seed: u64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            backoff_base: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(2),
+            jitter_frac: 0.2,
+            restart_window: Duration::from_secs(10),
+            max_restarts: 3,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl SupervisorConfig {
+    pub fn backoff_base(mut self, d: Duration) -> Self {
+        self.backoff_base = d;
+        self
+    }
+
+    pub fn backoff_max(mut self, d: Duration) -> Self {
+        self.backoff_max = d;
+        self
+    }
+
+    pub fn jitter_frac(mut self, f: f64) -> Self {
+        self.jitter_frac = f.max(0.0);
+        self
+    }
+
+    pub fn restart_window(mut self, d: Duration) -> Self {
+        self.restart_window = d;
+        self
+    }
+
+    pub fn max_restarts(mut self, n: usize) -> Self {
+        self.max_restarts = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// What the supervisor decided about a lost worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RestartPlan {
+    /// a replacement boot is scheduled for `due`
+    Scheduled { due: Instant, attempt: usize },
+    /// restart budget exhausted: the slot is permanently out of the fleet
+    Retired { cause: DrainCause },
+}
+
+/// Acknowledgement of a completed restart.
+#[derive(Debug, Clone, Copy)]
+pub struct RestartDone {
+    /// the slot's cumulative restart count (journaled)
+    pub restarts: u32,
+    /// the restart ran BEFORE its scheduled due time — a backoff-schedule
+    /// violation (the bench holds this at zero)
+    pub violated: bool,
+}
+
+#[derive(Debug, Clone)]
+struct SlotSup {
+    /// pending restart: (due, attempt number within the current window)
+    scheduled: Option<(Instant, usize)>,
+    /// completed-restart instants inside the sliding window (pruned lazily)
+    window: VecDeque<Instant>,
+    restarts: u32,
+    retired: Option<DrainCause>,
+}
+
+impl SlotSup {
+    fn new() -> SlotSup {
+        SlotSup { scheduled: None, window: VecDeque::new(), restarts: 0, retired: None }
+    }
+}
+
+/// Per-slot restart scheduler (see module docs).  All decisions are pure in
+/// the `now` arguments, so tests drive it on a synthetic clock.
+pub struct Supervisor {
+    cfg: SupervisorConfig,
+    rng: SplitMix64,
+    slots: Vec<SlotSup>,
+    violations: usize,
+}
+
+impl Supervisor {
+    pub fn new(n_workers: usize, cfg: SupervisorConfig) -> Supervisor {
+        let rng = SplitMix64::new(cfg.seed);
+        let slots = (0..n_workers).map(|_| SlotSup::new()).collect();
+        Supervisor { cfg, rng, slots, violations: 0 }
+    }
+
+    /// Exponential backoff with deterministic jitter for the given attempt
+    /// (0-based).  Consumes one rng draw per call, so schedules differ
+    /// between restarts but are identical across same-seed fleets.
+    fn backoff(&mut self, attempt: usize) -> Duration {
+        let base = self.cfg.backoff_base.as_secs_f64();
+        let exp = base * (1u64 << attempt.min(32)) as f64;
+        let capped = exp.min(self.cfg.backoff_max.as_secs_f64());
+        let jitter = capped * self.cfg.jitter_frac * self.rng.unit_f64();
+        Duration::from_secs_f64(capped + jitter)
+    }
+
+    fn prune(window: &mut VecDeque<Instant>, horizon: Duration, now: Instant) {
+        while let Some(&front) = window.front() {
+            if now.duration_since(front) > horizon {
+                window.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// A worker was declared lost: schedule a replacement or retire the
+    /// slot when its window budget is spent.
+    pub fn on_worker_lost(&mut self, w: usize, cause: DrainCause, now: Instant) -> RestartPlan {
+        if let Some(cause) = self.slots[w].retired {
+            return RestartPlan::Retired { cause };
+        }
+        Self::prune(&mut self.slots[w].window, self.cfg.restart_window, now);
+        let attempt = self.slots[w].window.len();
+        if attempt >= self.cfg.max_restarts {
+            self.slots[w].retired = Some(cause);
+            self.slots[w].scheduled = None;
+            return RestartPlan::Retired { cause };
+        }
+        let due = now + self.backoff(attempt);
+        self.slots[w].scheduled = Some((due, attempt));
+        RestartPlan::Scheduled { due, attempt }
+    }
+
+    /// Workers whose scheduled restart is due.  The schedule entry stays
+    /// until [`Supervisor::on_restarted`] or
+    /// [`Supervisor::on_restart_failed`] resolves it.
+    pub fn due(&self, now: Instant) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.scheduled.is_some_and(|(due, _)| now >= due))
+            .map(|(w, _)| w)
+            .collect()
+    }
+
+    /// A replacement booted into slot `w`.  Records the restart against the
+    /// window budget and checks the backoff schedule was honored.
+    pub fn on_restarted(&mut self, w: usize, now: Instant) -> RestartDone {
+        let slot = &mut self.slots[w];
+        let violated = slot.scheduled.take().is_some_and(|(due, _)| now < due);
+        if violated {
+            self.violations += 1;
+        }
+        slot.window.push_back(now);
+        slot.restarts += 1;
+        RestartDone { restarts: slot.restarts, violated }
+    }
+
+    /// The replacement boot itself failed: re-schedule with the next
+    /// backoff, or retire when the budget is gone.  The failed attempt
+    /// charges the window budget — a factory that cannot produce workers
+    /// must not retry forever.
+    pub fn on_restart_failed(&mut self, w: usize, cause: DrainCause, now: Instant) -> RestartPlan {
+        self.slots[w].scheduled = None;
+        self.slots[w].window.push_back(now);
+        self.on_worker_lost(w, cause, now)
+    }
+
+    pub fn is_retired(&self, w: usize) -> bool {
+        self.slots[w].retired.is_some()
+    }
+
+    pub fn retired_cause(&self, w: usize) -> Option<DrainCause> {
+        self.slots[w].retired
+    }
+
+    /// Cumulative restarts of slot `w`.
+    pub fn restarts(&self, w: usize) -> u32 {
+        self.slots[w].restarts
+    }
+
+    /// Restarts that ran ahead of their scheduled backoff (should be zero).
+    pub fn schedule_violations(&self) -> usize {
+        self.violations
+    }
+}
+
+/// Global token bucket bounding redispatches during crash loops.  `capacity`
+/// is the burst allowance; tokens refill continuously at `refill_per_s`.
+#[derive(Debug, Clone)]
+pub struct RetryBudget {
+    capacity: f64,
+    tokens: f64,
+    refill_per_s: f64,
+    last: Option<Instant>,
+}
+
+impl RetryBudget {
+    pub fn new(capacity: usize, refill_per_s: f64) -> RetryBudget {
+        RetryBudget {
+            capacity: capacity as f64,
+            tokens: capacity as f64,
+            refill_per_s: refill_per_s.max(0.0),
+            last: None,
+        }
+    }
+
+    /// Take one retry token; `false` means the redispatch is denied.
+    pub fn try_take(&mut self, now: Instant) -> bool {
+        if let Some(last) = self.last {
+            let dt = now.saturating_duration_since(last).as_secs_f64();
+            self.tokens = (self.tokens + dt * self.refill_per_s).min(self.capacity);
+        }
+        self.last = Some(now);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Admission policy knobs.  Limits set to 0 are disabled.  `Default`:
+/// no hard limits, deadline shedding on, brownout armed at 75% pressure
+/// sustained for 8 consecutive submissions, Batch capped to 32 tokens in
+/// the deep tier.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// max in-flight requests fleet-wide (0 = unlimited)
+    pub max_queue_depth: usize,
+    /// max token-equivalent backlog fleet-wide (0 = unlimited)
+    pub max_backlog_tokens: usize,
+    /// shed requests whose deadline cannot survive the estimated queue delay
+    pub shed_infeasible: bool,
+    /// estimated service seconds per token-equivalent of backlog per worker
+    pub est_token_cost_s: f64,
+    /// pressure fraction (backlog or depth over its limit) that arms the
+    /// brownout streak
+    pub brownout_enter: f64,
+    /// consecutive over-pressure submissions before tier 1 engages (tier 2
+    /// engages at twice this streak)
+    pub brownout_sustain: usize,
+    /// `max_new_tokens` cap applied to Batch requests in brownout tier 2
+    pub batch_cap_tokens: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            max_queue_depth: 0,
+            max_backlog_tokens: 0,
+            shed_infeasible: true,
+            est_token_cost_s: 0.0005,
+            brownout_enter: 0.75,
+            brownout_sustain: 8,
+            batch_cap_tokens: 32,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    pub fn max_queue_depth(mut self, n: usize) -> Self {
+        self.max_queue_depth = n;
+        self
+    }
+
+    pub fn max_backlog_tokens(mut self, n: usize) -> Self {
+        self.max_backlog_tokens = n;
+        self
+    }
+
+    pub fn shed_infeasible(mut self, on: bool) -> Self {
+        self.shed_infeasible = on;
+        self
+    }
+
+    pub fn est_token_cost_s(mut self, s: f64) -> Self {
+        self.est_token_cost_s = s.max(0.0);
+        self
+    }
+
+    pub fn brownout_enter(mut self, f: f64) -> Self {
+        self.brownout_enter = f.max(0.0);
+        self
+    }
+
+    pub fn brownout_sustain(mut self, n: usize) -> Self {
+        self.brownout_sustain = n.max(1);
+        self
+    }
+
+    pub fn batch_cap_tokens(mut self, n: usize) -> Self {
+        self.batch_cap_tokens = n.max(1);
+        self
+    }
+}
+
+/// Admission verdict for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Admit,
+    /// admit with `max_new_tokens` capped (brownout tier 2, Batch class)
+    AdmitCapped(usize),
+    /// reject before dispatch (`FinishReason::Shed`); the str names why
+    Shed(&'static str),
+}
+
+/// Early-shedding front (see module docs).  Stateful only in the brownout
+/// streak, and deterministic in its inputs.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    /// consecutive over-pressure submissions
+    streak: usize,
+    // per-reason shed counters (introspection/tests)
+    pub shed_limit: usize,
+    pub shed_infeasible: usize,
+    pub shed_brownout: usize,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionController {
+        AdmissionController { cfg, streak: 0, shed_limit: 0, shed_infeasible: 0, shed_brownout: 0 }
+    }
+
+    /// Queue delay estimate: backlog split across the alive workers, each
+    /// consuming `est_token_cost_s` per token-equivalent.
+    pub fn est_queue_delay_s(&self, backlog_tokens: usize, alive_workers: usize) -> f64 {
+        backlog_tokens as f64 * self.cfg.est_token_cost_s / alive_workers.max(1) as f64
+    }
+
+    /// Overload pressure: the worst fraction of any configured limit.
+    fn pressure(&self, queue_depth: usize, backlog_tokens: usize) -> f64 {
+        let mut p: f64 = 0.0;
+        if self.cfg.max_queue_depth > 0 {
+            p = p.max(queue_depth as f64 / self.cfg.max_queue_depth as f64);
+        }
+        if self.cfg.max_backlog_tokens > 0 {
+            p = p.max(backlog_tokens as f64 / self.cfg.max_backlog_tokens as f64);
+        }
+        p
+    }
+
+    /// Brownout tier: 0 = normal, 1 = shed BestEffort, 2 = also cap Batch.
+    pub fn brownout_level(&self) -> usize {
+        if self.streak >= 2 * self.cfg.brownout_sustain {
+            2
+        } else if self.streak >= self.cfg.brownout_sustain {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Assess one submission against the current fleet load signals.
+    pub fn assess(
+        &mut self,
+        req: &GenRequest,
+        queue_depth: usize,
+        backlog_tokens: usize,
+        alive_workers: usize,
+    ) -> Admission {
+        if self.pressure(queue_depth, backlog_tokens) >= self.cfg.brownout_enter {
+            self.streak += 1;
+        } else {
+            self.streak = 0;
+        }
+        if (self.cfg.max_queue_depth > 0 && queue_depth >= self.cfg.max_queue_depth)
+            || (self.cfg.max_backlog_tokens > 0 && backlog_tokens >= self.cfg.max_backlog_tokens)
+        {
+            self.shed_limit += 1;
+            return Admission::Shed("backlog-limit");
+        }
+        if self.cfg.shed_infeasible {
+            if let Some(deadline) = req.deadline {
+                if self.est_queue_delay_s(backlog_tokens, alive_workers) > deadline.as_secs_f64() {
+                    self.shed_infeasible += 1;
+                    return Admission::Shed("deadline-infeasible");
+                }
+            }
+        }
+        let level = self.brownout_level();
+        if level >= 1 && req.priority == Priority::BestEffort {
+            self.shed_brownout += 1;
+            return Admission::Shed("brownout");
+        }
+        if level >= 2 && req.priority == Priority::Batch && req.max_new > self.cfg.batch_cap_tokens
+        {
+            return Admission::AdmitCapped(self.cfg.batch_cap_tokens);
+        }
+        Admission::Admit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sup(max_restarts: usize) -> Supervisor {
+        let cfg = SupervisorConfig::default()
+            .backoff_base(Duration::from_millis(100))
+            .backoff_max(Duration::from_millis(400))
+            .jitter_frac(0.5)
+            .restart_window(Duration::from_secs(10))
+            .max_restarts(max_restarts)
+            .seed(7);
+        Supervisor::new(2, cfg)
+    }
+
+    #[test]
+    fn backoff_doubles_caps_and_jitters_deterministically() {
+        let mut a = sup(10);
+        let mut b = sup(10);
+        for attempt in 0..6 {
+            let (da, db) = (a.backoff(attempt), b.backoff(attempt));
+            assert_eq!(da, db, "same seed → same schedule");
+            let base = Duration::from_millis(100 * (1 << attempt)).min(Duration::from_millis(400));
+            assert!(da >= base, "jitter only adds delay: {da:?} < {base:?}");
+            assert!(da <= base.mul_f64(1.5), "jitter bounded by jitter_frac");
+        }
+        // differently-seeded supervisors draw different jitter eventually
+        let mut c = Supervisor::new(1, SupervisorConfig::default().seed(99).jitter_frac(0.5));
+        let mut d = Supervisor::new(1, SupervisorConfig::default().seed(7).jitter_frac(0.5));
+        assert!((0..8).any(|i| c.backoff(i) != d.backoff(i)));
+    }
+
+    #[test]
+    fn lost_worker_is_scheduled_then_due_then_restarted() {
+        let mut s = sup(3);
+        let t0 = Instant::now();
+        let RestartPlan::Scheduled { due, attempt } = s.on_worker_lost(0, DrainCause::Dead, t0)
+        else {
+            panic!("first loss must schedule");
+        };
+        assert_eq!(attempt, 0);
+        assert!(due > t0);
+        assert!(s.due(t0).is_empty(), "not due before the backoff elapses");
+        assert_eq!(s.due(due), vec![0]);
+        let done = s.on_restarted(0, due);
+        assert_eq!(done.restarts, 1);
+        assert!(!done.violated);
+        assert!(s.due(due + Duration::from_secs(1)).is_empty(), "schedule resolved");
+        assert_eq!(s.schedule_violations(), 0);
+    }
+
+    #[test]
+    fn premature_restart_counts_as_a_schedule_violation() {
+        let mut s = sup(3);
+        let t0 = Instant::now();
+        let RestartPlan::Scheduled { due, .. } = s.on_worker_lost(0, DrainCause::Dead, t0) else {
+            panic!("must schedule");
+        };
+        let done = s.on_restarted(0, due - Duration::from_millis(1));
+        assert!(done.violated);
+        assert_eq!(s.schedule_violations(), 1);
+    }
+
+    #[test]
+    fn window_budget_retires_the_slot_with_the_last_cause() {
+        let mut s = sup(2);
+        let mut now = Instant::now();
+        for i in 0..2 {
+            let plan = s.on_worker_lost(0, DrainCause::Dead, now);
+            let RestartPlan::Scheduled { due, attempt } = plan else {
+                panic!("restart {i} inside the budget");
+            };
+            assert_eq!(attempt, i, "attempt counts restarts in the window");
+            s.on_restarted(0, due);
+            now = due;
+        }
+        let plan = s.on_worker_lost(0, DrainCause::Wedged, now);
+        assert_eq!(plan, RestartPlan::Retired { cause: DrainCause::Wedged });
+        assert!(s.is_retired(0));
+        assert_eq!(s.retired_cause(0), Some(DrainCause::Wedged));
+        // retired is terminal, whatever the cause of later losses
+        let again = s.on_worker_lost(0, DrainCause::Dead, now);
+        assert_eq!(again, RestartPlan::Retired { cause: DrainCause::Wedged });
+        // the other slot is unaffected
+        let other = s.on_worker_lost(1, DrainCause::Dead, now);
+        assert!(matches!(other, RestartPlan::Scheduled { .. }));
+    }
+
+    #[test]
+    fn window_slides_so_old_restarts_stop_charging_the_budget() {
+        let mut s = sup(1);
+        let t0 = Instant::now();
+        let RestartPlan::Scheduled { due, .. } = s.on_worker_lost(0, DrainCause::Dead, t0) else {
+            panic!("must schedule");
+        };
+        s.on_restarted(0, due);
+        // inside the window the budget is spent
+        let soon = due + Duration::from_secs(1);
+        assert!(matches!(
+            s.on_worker_lost(0, DrainCause::Dead, soon),
+            RestartPlan::Retired { .. }
+        ));
+        // a fresh slot past the window heals: rebuild and lose it much later
+        let mut s = sup(1);
+        let RestartPlan::Scheduled { due, .. } = s.on_worker_lost(0, DrainCause::Dead, t0) else {
+            panic!("must schedule");
+        };
+        s.on_restarted(0, due);
+        let later = due + Duration::from_secs(11);
+        assert!(matches!(
+            s.on_worker_lost(0, DrainCause::Dead, later),
+            RestartPlan::Scheduled { attempt: 0, .. }
+        ));
+    }
+
+    #[test]
+    fn failed_factory_boot_charges_the_budget_and_reschedules() {
+        let mut s = sup(2);
+        let t0 = Instant::now();
+        let RestartPlan::Scheduled { due, .. } = s.on_worker_lost(0, DrainCause::Dead, t0) else {
+            panic!("must schedule");
+        };
+        let plan = s.on_restart_failed(0, DrainCause::Dead, due);
+        assert!(matches!(plan, RestartPlan::Scheduled { attempt: 1, .. }), "retries with backoff");
+        let RestartPlan::Scheduled { due: due2, .. } = plan else { unreachable!() };
+        assert!(matches!(
+            s.on_restart_failed(0, DrainCause::Dead, due2),
+            RestartPlan::Retired { .. }
+        ));
+    }
+
+    #[test]
+    fn retry_budget_allows_the_burst_then_denies_until_refill() {
+        let mut b = RetryBudget::new(2, 1.0);
+        let t0 = Instant::now();
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(!b.try_take(t0), "burst spent");
+        assert!(!b.try_take(t0 + Duration::from_millis(500)), "half a token is not a token");
+        assert!(b.try_take(t0 + Duration::from_millis(1600)));
+        // refill never exceeds capacity
+        let far = t0 + Duration::from_secs(3600);
+        assert!(b.try_take(far));
+        assert!(b.try_take(far));
+        assert!(!b.try_take(far));
+    }
+
+    fn req(priority: Priority, max_new: usize, deadline_ms: Option<u64>) -> GenRequest {
+        let mut b = GenRequest::builder(0).prompt(vec![1, 2]).max_new(max_new).priority(priority);
+        if let Some(ms) = deadline_ms {
+            b = b.deadline(Duration::from_millis(ms));
+        }
+        b.build()
+    }
+
+    #[test]
+    fn hard_limits_shed_before_anything_else() {
+        let cfg = AdmissionConfig::default().max_queue_depth(4).max_backlog_tokens(1000);
+        let mut a = AdmissionController::new(cfg);
+        let r = req(Priority::Interactive, 8, None);
+        assert_eq!(a.assess(&r, 0, 0, 2), Admission::Admit);
+        assert_eq!(a.assess(&r, 4, 0, 2), Admission::Shed("backlog-limit"));
+        assert_eq!(a.assess(&r, 0, 1000, 2), Admission::Shed("backlog-limit"));
+        assert_eq!(a.shed_limit, 2);
+    }
+
+    #[test]
+    fn infeasible_deadlines_are_shed_early() {
+        let cfg = AdmissionConfig::default().est_token_cost_s(0.001);
+        let mut a = AdmissionController::new(cfg);
+        // 1000 backlog tokens over 1 worker at 1ms each → ~1s queue delay
+        let tight = req(Priority::Interactive, 8, Some(100));
+        assert_eq!(a.assess(&tight, 0, 1000, 1), Admission::Shed("deadline-infeasible"));
+        // the same backlog split across 20 workers is feasible
+        assert_eq!(a.assess(&tight, 0, 1000, 20), Admission::Admit);
+        // no deadline → nothing to be infeasible against
+        let lazy = req(Priority::BestEffort, 8, None);
+        assert_eq!(a.assess(&lazy, 0, 1000, 1), Admission::Admit);
+        assert_eq!(a.shed_infeasible, 1);
+    }
+
+    #[test]
+    fn brownout_tiers_shed_best_effort_then_cap_batch() {
+        let cfg = AdmissionConfig::default()
+            .max_backlog_tokens(1000)
+            .brownout_enter(0.75)
+            .brownout_sustain(2)
+            .batch_cap_tokens(4)
+            .shed_infeasible(false);
+        let mut a = AdmissionController::new(cfg);
+        let be = req(Priority::BestEffort, 8, None);
+        let batch = req(Priority::Batch, 64, None);
+        let inter = req(Priority::Interactive, 64, None);
+        // below pressure: everything admits, streak stays zero
+        assert_eq!(a.assess(&be, 0, 100, 2), Admission::Admit);
+        assert_eq!(a.brownout_level(), 0);
+        // sustained 80% pressure: tier 1 after 2, tier 2 after 4
+        assert_eq!(a.assess(&be, 0, 800, 2), Admission::Admit, "streak 1: not sustained yet");
+        assert_eq!(a.assess(&be, 0, 800, 2), Admission::Shed("brownout"), "tier 1");
+        assert_eq!(a.assess(&batch, 0, 800, 2), Admission::Admit, "tier 1 leaves Batch alone");
+        assert_eq!(a.assess(&batch, 0, 800, 2), Admission::AdmitCapped(4), "tier 2 caps Batch");
+        assert_eq!(a.assess(&inter, 0, 800, 2), Admission::Admit, "Interactive never browns out");
+        // pressure release resets the streak and the tiers
+        assert_eq!(a.assess(&be, 0, 100, 2), Admission::Admit);
+        assert_eq!(a.brownout_level(), 0);
+        assert_eq!(a.shed_brownout, 1);
+    }
+
+    #[test]
+    fn capped_batch_within_budget_is_not_touched() {
+        let cfg = AdmissionConfig::default()
+            .max_backlog_tokens(100)
+            .brownout_enter(0.5)
+            .brownout_sustain(1)
+            .batch_cap_tokens(16)
+            .shed_infeasible(false);
+        let mut a = AdmissionController::new(cfg);
+        let small = req(Priority::Batch, 8, None);
+        assert_eq!(a.assess(&small, 0, 60, 2), Admission::Admit, "streak 1 → tier 1");
+        assert_eq!(a.assess(&small, 0, 60, 2), Admission::Admit, "already under the cap");
+    }
+}

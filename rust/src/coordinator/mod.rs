@@ -50,9 +50,10 @@ pub mod server;
 
 pub use batcher::{Batcher, Pending};
 pub use cluster::{
-    DispatchPolicy, DrainCause, FleetMetrics, FleetReport, HealthTracker, LeastLoaded, Pick,
-    PrefixAffinity, RoundRobin, Router, RouterConfig, RouterHandle, WorkerFleetMetrics,
-    WorkerLoad, WorkerState,
+    Admission, AdmissionConfig, AdmissionController, DispatchPolicy, DrainCause, FleetMetrics,
+    FleetReport, HealthTracker, LeastLoaded, Pick, PrefixAffinity, RestartPlan, RetryBudget,
+    RoundRobin, Router, RouterConfig, RouterHandle, Supervisor, SupervisorConfig,
+    WorkerFleetMetrics, WorkerLoad, WorkerState,
 };
 pub use continuous::{ContinuousEngine, ModelBackend, SimBackend};
 pub use failpoint::{FailAction, Failpoints};

@@ -47,6 +47,8 @@ impl Outcome {
             Outcome::Finish(FinishReason::Cancelled) => 3,
             Outcome::Finish(FinishReason::WorkerLost) => 4,
             Outcome::Error => 5,
+            Outcome::Finish(FinishReason::Shed) => 6,
+            Outcome::Finish(FinishReason::Quarantined) => 7,
         }
     }
 
@@ -58,6 +60,8 @@ impl Outcome {
             3 => Outcome::Finish(FinishReason::Cancelled),
             4 => Outcome::Finish(FinishReason::WorkerLost),
             5 => Outcome::Error,
+            6 => Outcome::Finish(FinishReason::Shed),
+            7 => Outcome::Finish(FinishReason::Quarantined),
             _ => bail!("unknown outcome code {c}"),
         })
     }
@@ -120,6 +124,9 @@ pub enum OpEntry {
     /// a token-producing stream was re-dispatched to `worker`, resuming
     /// after `from_tokens` already-delivered tokens
     Resumed { seq: u64, worker: u64, from_tokens: u32 },
+    /// the supervisor rebooted a replacement into worker slot `worker`;
+    /// `restarts` is the slot's cumulative restart count after the reboot
+    WorkerRestarted { worker: u64, restarts: u32 },
 }
 
 const TAG_HEADER: u8 = 0;
@@ -129,6 +136,7 @@ const TAG_TOKEN: u8 = 3;
 const TAG_FINISHED: u8 = 4;
 const TAG_WORKER_LOST: u8 = 5;
 const TAG_RESUMED: u8 = 6;
+const TAG_WORKER_RESTARTED: u8 = 7;
 
 /// `deadline: None` sentinel (a real deadline of u64::MAX ms is not a thing).
 const NO_DEADLINE: u64 = u64::MAX;
@@ -263,6 +271,11 @@ impl OpEntry {
                 put_u64(&mut out, *worker);
                 put_u32(&mut out, *from_tokens);
             }
+            OpEntry::WorkerRestarted { worker, restarts } => {
+                out.push(TAG_WORKER_RESTARTED);
+                put_u64(&mut out, *worker);
+                put_u32(&mut out, *restarts);
+            }
         }
         out
     }
@@ -327,6 +340,9 @@ impl OpEntry {
             TAG_RESUMED => {
                 OpEntry::Resumed { seq: c.u64()?, worker: c.u64()?, from_tokens: c.u32()? }
             }
+            TAG_WORKER_RESTARTED => {
+                OpEntry::WorkerRestarted { worker: c.u64()?, restarts: c.u32()? }
+            }
             _ => bail!("unknown entry tag {tag}"),
         };
         c.finish()?;
@@ -358,6 +374,8 @@ pub struct TraceView {
     pub records: Vec<RequestRecord>,
     /// worker-loss events journaled (drains, kills, crashes)
     pub worker_events: usize,
+    /// supervisor restart events journaled (replacement worker reboots)
+    pub worker_restarts: usize,
 }
 
 impl TraceView {
@@ -398,6 +416,7 @@ impl TraceView {
                     }
                 }
                 OpEntry::WorkerLost { .. } => view.worker_events += 1,
+                OpEntry::WorkerRestarted { .. } => view.worker_restarts += 1,
             }
         }
         view.records = records.into_values().collect();
@@ -442,11 +461,22 @@ mod tests {
             OpEntry::Token { seq: 4, token: -2 },
             OpEntry::Token { seq: 3, token: 17 },
             OpEntry::WorkerLost { worker: 1, cause: DrainCause::Killed },
+            OpEntry::WorkerRestarted { worker: 1, restarts: 1 },
             OpEntry::Resumed { seq: 3, worker: 0, from_tokens: 2 },
             OpEntry::Finished {
                 seq: 4,
                 outcome: Outcome::Finish(FinishReason::Length),
                 n_tokens: 2,
+            },
+            OpEntry::Finished {
+                seq: 5,
+                outcome: Outcome::Finish(FinishReason::Shed),
+                n_tokens: 0,
+            },
+            OpEntry::Finished {
+                seq: 6,
+                outcome: Outcome::Finish(FinishReason::Quarantined),
+                n_tokens: 1,
             },
         ]
     }
@@ -501,9 +531,20 @@ mod tests {
         assert_eq!(view.records[1].tokens, vec![-2]);
         assert_eq!(view.records[1].finish, Some(Outcome::Finish(FinishReason::Length)));
         assert_eq!(view.worker_events, 1);
+        assert_eq!(view.worker_restarts, 1);
         let unfinished: Vec<u64> = view.unfinished().map(|r| r.seq).collect();
         assert_eq!(unfinished, vec![3], "only the in-flight stream needs recovery");
         assert_eq!(view.max_seq(), Some(4));
+    }
+
+    #[test]
+    fn shed_and_quarantined_are_nondeterministic_outcomes() {
+        // both are router-side settlements of external events (overload,
+        // crash loops): a replay completes them fully, so the replay check
+        // must use the prefix relation, not exact token equality
+        for f in [FinishReason::Shed, FinishReason::Quarantined] {
+            assert!(!Outcome::Finish(f).deterministic());
+        }
     }
 
     #[test]

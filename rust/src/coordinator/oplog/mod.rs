@@ -182,7 +182,8 @@ pub struct CompactReport {
 /// Rewrite the journal at `path` without the records of fully-finished
 /// requests: recovery only replays unfinished streams, so their entries are
 /// dead weight a long-running router accretes without bound.  Kept verbatim:
-/// every entry of every unfinished request, every `WorkerLost` event, and
+/// every entry of every unfinished request, every `WorkerLost` and
+/// `WorkerRestarted` event, and
 /// the full record of the finished request holding the overall max `seq`
 /// (recovery restarts the router's sequence counter above it — dropping
 /// that record would let a recovered router re-issue journaled ids).  The
@@ -213,7 +214,7 @@ pub fn compact(path: impl AsRef<Path>) -> Result<CompactReport> {
         let carry = match e {
             // the temp file already opens with an equivalent header
             OpEntry::Header { .. } => false,
-            OpEntry::WorkerLost { .. } => true,
+            OpEntry::WorkerLost { .. } | OpEntry::WorkerRestarted { .. } => true,
             OpEntry::Admitted { seq, .. }
             | OpEntry::Dispatched { seq, .. }
             | OpEntry::Token { seq, .. }

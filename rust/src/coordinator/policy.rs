@@ -129,8 +129,10 @@ impl SchedulePolicy for Fcfs {
 /// - **Order**: highest *effective* class first, where a request's class is
 ///   promoted one level per `age_rounds` rounds waited (capped at
 ///   Interactive) — sustained Interactive load therefore cannot starve Batch
-///   beyond `2 * age_rounds` rounds.  Within a class: tighter deadline
-///   first, then arrival order.
+///   beyond `2 * age_rounds` rounds.  Within a class: tighter FEASIBLE
+///   deadline first (past-due deadlines sort with "no deadline" — spending
+///   slots chasing an already-blown SLO would starve work that can still
+///   make its budget), then arrival order.
 /// - **Preemption**: when the chosen candidate cannot be admitted, the
 ///   lowest-RAW-priority Decoding slot below the candidate's raw class is
 ///   evicted (ties: fewest generated tokens — cheapest resume — then most
@@ -200,9 +202,17 @@ impl SchedulePolicy for PriorityPreempt {
                         // holds whether or not clients set deadlines)
                         self.boost(q) > self.boost(bq)
                     } else {
-                        // tighter deadline first (None sorts last), then FCFS
-                        let dq = q.deadline_remaining_s.unwrap_or(f64::INFINITY);
-                        let db = bq.deadline_remaining_s.unwrap_or(f64::INFINITY);
+                        // tighter FEASIBLE deadline first: a past-due request
+                        // (remaining budget already negative) cannot make its
+                        // SLO no matter what, so it must not outrank work that
+                        // still can — past-due sorts with None (last), then
+                        // FCFS breaks the remaining ties
+                        let feasible = |d: Option<f64>| match d {
+                            Some(r) if r >= 0.0 => r,
+                            _ => f64::INFINITY,
+                        };
+                        let dq = feasible(q.deadline_remaining_s);
+                        let db = feasible(bq.deadline_remaining_s);
                         if dq != db {
                             dq < db
                         } else {
@@ -327,6 +337,26 @@ mod tests {
         a.deadline_remaining_s = None;
         b.deadline_remaining_s = Some(0.05);
         assert_eq!(p.next_candidate(0, &[a, b]), Some(1), "deadline beats arrival order");
+    }
+
+    #[test]
+    fn past_due_deadlines_lose_to_feasible_ones() {
+        let mut p = PriorityPreempt::default();
+        // a past-due request (negative remaining budget) must not outrank a
+        // feasible deadline carrier, however loose that deadline is
+        let mut past_due = qv(1, Priority::Interactive, 0, 0);
+        let mut feasible = qv(2, Priority::Interactive, 0, 1);
+        past_due.deadline_remaining_s = Some(-0.5);
+        feasible.deadline_remaining_s = Some(3.0);
+        assert_eq!(p.next_candidate(0, &[past_due, feasible]), Some(1));
+        // past-due sorts with the deadline-less: FCFS decides between them
+        let mut no_deadline = qv(3, Priority::Interactive, 0, 2);
+        no_deadline.deadline_remaining_s = None;
+        assert_eq!(
+            p.next_candidate(0, &[past_due, no_deadline]),
+            Some(0),
+            "past-due vs no-deadline falls back to arrival order"
+        );
     }
 
     #[test]

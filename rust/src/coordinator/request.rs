@@ -61,6 +61,14 @@ pub enum FinishReason {
     /// the tokens generated so far are returned (token-less requests are
     /// silently redistributed to a surviving worker instead)
     WorkerLost,
+    /// rejected by the admission controller before dispatch: the estimated
+    /// queue delay made the deadline infeasible, a backlog limit tripped, or
+    /// a brownout tier dropped the class — no tokens were generated
+    Shed,
+    /// implicated in two or more worker deaths while in flight — presumed
+    /// poisonous and permanently removed from dispatch instead of being
+    /// redistributed into (and potentially killing) another worker
+    Quarantined,
 }
 
 impl FinishReason {
@@ -71,6 +79,8 @@ impl FinishReason {
             FinishReason::CacheFull => "cache-full",
             FinishReason::Cancelled => "cancelled",
             FinishReason::WorkerLost => "worker-lost",
+            FinishReason::Shed => "shed",
+            FinishReason::Quarantined => "quarantined",
         }
     }
 }

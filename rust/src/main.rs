@@ -16,22 +16,35 @@
 //!                                  (`--load`, or quantize-once + save)
 //!   serve     [--model M] [--scheme S] [--load DIR] [--workers N]
 //!             [--policy P] [--requests R] [--max-new T] [--oplog PATH]
+//!             [--supervise] [--restart-budget N] [--backoff-ms B]
+//!             [--backoff-max-ms B] [--admission] [--admit-queue-depth N]
+//!             [--admit-backlog-tokens N] [--no-shed-infeasible]
+//!             [--retry-budget N] [--retry-refill R]
 //!                                — boot a router-fronted worker fleet from
 //!                                  one artifact and drive a demo workload;
 //!                                  policies: round-robin, least-loaded,
 //!                                  prefix-affinity (default); `--oplog`
 //!                                  journals every admission/token/outcome
-//!                                  to PATH and turns stream resume on
+//!                                  to PATH and turns stream resume on;
+//!                                  `--supervise` reboots lost workers from
+//!                                  the same artifact under a seeded backoff
+//!                                  schedule and a capped restart budget
 //!   loadgen   [--rate R] [--requests N] [--seed S] [--workers W]
 //!             [--policy fcfs|priority] [--dispatch D] [--no-radix]
 //!             [--arrival poisson|bursty|heavy-tail] [--duration SECS]
 //!             [--sweep] [--rates R1,R2,..] [--oplog PATH] [--json]
+//!             [--admission] [--admit-queue-depth N]
+//!             [--admit-backlog-tokens N] [--no-shed-infeasible]
+//!             [--retry-budget N] [--retry-refill R]
 //!                                — open-loop workload against a sim-backed
 //!                                  fleet (no artifacts needed): seeded
 //!                                  deterministic trace, per-class SLO
 //!                                  attainment, goodput; `--sweep` walks
 //!                                  offered load past the saturation knee;
-//!                                  `--oplog` captures the run for replay
+//!                                  `--oplog` captures the run for replay;
+//!                                  the admission knobs shed infeasible or
+//!                                  over-backlog requests instead of letting
+//!                                  the queue collapse the SLOs
 //!   replay    <oplog> [--workers N]
 //!                                — re-execute a captured trace on a fresh
 //!                                  fleet (booted per the journal's backend
@@ -51,9 +64,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 use prefixquant::coordinator::{
-    compact, read_log, replay, BackendDesc, DispatchPolicy, Fcfs, GenRequest, KvLayout,
-    LeastLoaded, Oplog, PrefixAffinity, Priority, PriorityPreempt, RoundRobin, Router,
-    RouterConfig, SchedulePolicy, Server, ServerConfig, SimBackend, TraceView,
+    compact, read_log, replay, AdmissionConfig, BackendDesc, DispatchPolicy, Fcfs, GenRequest,
+    KvLayout, LeastLoaded, Oplog, PrefixAffinity, Priority, PriorityPreempt, RoundRobin, Router,
+    RouterConfig, SchedulePolicy, Server, ServerConfig, SimBackend, SupervisorConfig, TraceView,
 };
 use prefixquant::data::{self, Language};
 use prefixquant::eval;
@@ -285,14 +298,16 @@ fn artifact_for_serving(c: &Ctx, args: &Args) -> Result<PathBuf> {
     Ok(dir)
 }
 
-/// One worker's server config for artifact-booted serving.
-fn worker_config(c: &Ctx, max_batch: usize) -> ServerConfig {
+/// One worker's server config for artifact-booted serving.  Takes the bos/pad
+/// ids by value (not `&Ctx`) so a supervisor's restart factory can rebuild the
+/// config from captured primitives.
+fn worker_config(bos: i32, pad: i32, max_batch: usize) -> ServerConfig {
     ServerConfig::builder(prefixquant::model::QuantMode::Static)
         .engine(prefixquant::coordinator::EngineKind::Continuous)
         .max_batch(max_batch)
         .batch_window(Duration::from_millis(5))
-        .bos(c.tok.spec.bos)
-        .pad(c.tok.spec.pad)
+        .bos(bos)
+        .pad(pad)
         // paged KV with a dense-equivalent auto-sized pool
         .kv(prefixquant::coordinator::KvLayout::Paged { page_size: 16, n_pages: 0 })
         // shared-prefix pages are mapped, not re-prefilled
@@ -317,6 +332,31 @@ fn schedule_policy(name: &str) -> Result<Box<dyn SchedulePolicy>> {
         "priority" => Box::new(PriorityPreempt::default()),
         other => bail!("unknown schedule policy {other:?} (fcfs|priority)"),
     })
+}
+
+/// Apply the shared overload-protection CLI knobs to a router config:
+/// `--admission` (or `--admit-queue-depth N` / `--admit-backlog-tokens N`,
+/// 0 = unlimited) engages the admission controller, `--no-shed-infeasible`
+/// keeps deadline-doomed requests instead of shedding them, and
+/// `--retry-budget N` (+ `--retry-refill R` tokens/s) bounds fleet-wide
+/// redispatch storms.
+fn overload_flags(mut rcfg: RouterConfig, args: &Args) -> Result<RouterConfig> {
+    let depth = args.usize_or("admit-queue-depth", 0)?;
+    let backlog = args.usize_or("admit-backlog-tokens", 0)?;
+    if depth > 0 || backlog > 0 || args.flag("admission") {
+        rcfg = rcfg.admission(
+            AdmissionConfig::default()
+                .max_queue_depth(depth)
+                .max_backlog_tokens(backlog)
+                .shed_infeasible(!args.flag("no-shed-infeasible")),
+        );
+    }
+    if let Some(cap) = args.get("retry-budget") {
+        let cap: usize = cap.parse().map_err(|e| anyhow!("--retry-budget: {e}"))?;
+        let refill = args.f32_or("retry-refill", 32.0)? as f64;
+        rcfg = rcfg.retry_budget(cap, refill);
+    }
+    Ok(rcfg)
 }
 
 fn sweep_json(r: &prefixquant::workload::SweepReport) -> prefixquant::util::json::Json {
@@ -395,6 +435,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             })
             .collect::<Result<Vec<_>>>()?;
         let mut rcfg = RouterConfig::default().policy(dispatch_policy(&dispatch_name)?);
+        rcfg = overload_flags(rcfg, args)?;
         if let Some(log) = oplog {
             rcfg = rcfg.oplog(log);
         }
@@ -471,7 +512,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         &format!("loadgen ({}, {rate:.0} rps offered)", trace.workload),
         &[
             "class", "offered", "done", "slo ok", "attain", "p50 ttft", "p99 ttft", "p99 tpot",
-            "cancel", "err",
+            "cancel", "shed", "err",
         ],
     );
     for p in Priority::all() {
@@ -489,13 +530,23 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             format!("{:.1}ms", c.p99_ttft_s * 1e3),
             format!("{:.1}ms", c.p99_tpot_s * 1e3),
             c.cancelled.to_string(),
+            c.shed.to_string(),
             c.errors.to_string(),
         ]);
     }
     t.print();
     println!(
-        "goodput: {:.2} rps ({} SLO-met of {} submitted in {:.2}s wall, attainment {:.3})",
-        sc.goodput_rps, sc.slo_ok, sc.submitted, sc.wall_s, sc.attainment
+        "goodput: {:.2} rps ({} SLO-met of {} submitted in {:.2}s wall, attainment {:.3}{})",
+        sc.goodput_rps,
+        sc.slo_ok,
+        sc.submitted,
+        sc.wall_s,
+        sc.attainment,
+        if sc.shed + sc.quarantined > 0 {
+            format!("; {} shed, {} quarantined", sc.shed, sc.quarantined)
+        } else {
+            String::new()
+        }
     );
     if let Ok(m) = engine_metrics {
         println!(
@@ -522,6 +573,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                     ("p50_tpot_s", num(c.p50_tpot_s)),
                     ("p99_tpot_s", num(c.p99_tpot_s)),
                     ("cancelled", num(c.cancelled as f64)),
+                    ("shed", num(c.shed as f64)),
+                    ("quarantined", num(c.quarantined as f64)),
                     ("errors", num(c.errors as f64)),
                 ])
             })
@@ -537,6 +590,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             ("submitted", num(sc.submitted as f64)),
             ("slo_ok", num(sc.slo_ok as f64)),
             ("cancelled", num(sc.cancelled as f64)),
+            ("shed", num(sc.shed as f64)),
+            ("quarantined", num(sc.quarantined as f64)),
             ("errors", num(sc.errors as f64)),
             ("per_class", Json::Arr(classes)),
         ]);
@@ -555,7 +610,7 @@ fn cmd_gen(c: &Ctx, args: &Args) -> Result<()> {
     let server = Server::start_from_artifact(
         prefixquant::artifacts_dir(),
         artifact_dir,
-        worker_config(c, 8),
+        worker_config(c.tok.spec.bos, c.tok.spec.pad, 8),
     )?;
     let req = GenRequest::builder(1)
         .prompt(tok.encode(&prompt_text, false))
@@ -585,12 +640,13 @@ fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
     // one shared artifact, N workers: every boot is an O(read) of the same
     // quantized state, so the fleet is interchangeable by construction
     eprintln!("booting {n_workers} worker(s) from {artifact_dir:?} (policy: {policy_name})...");
+    let (bos, pad) = (c.tok.spec.bos, c.tok.spec.pad);
     let workers = (0..n_workers)
         .map(|_| {
             Server::start_from_artifact(
                 prefixquant::artifacts_dir(),
                 artifact_dir.clone(),
-                worker_config(c, 4),
+                worker_config(bos, pad, 4),
             )
         })
         .collect::<Result<Vec<_>>>()?;
@@ -604,6 +660,32 @@ fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
         eprintln!("journaling to {log_path} (stream resume on); replay with: pq replay {log_path}");
         rcfg = rcfg.oplog(log);
     }
+    if args.flag("supervise") {
+        let budget = args.usize_or("restart-budget", 3)?;
+        let backoff_ms = args.usize_or("backoff-ms", 50)? as u64;
+        let backoff_max_ms = args.usize_or("backoff-max-ms", 2000)? as u64;
+        eprintln!(
+            "supervising: restart budget {budget} per window, \
+             backoff {backoff_ms}..{backoff_max_ms}ms"
+        );
+        // the factory reboots a lost slot from the same shared artifact; it
+        // captures only owned values so restarts need no live `Ctx`
+        let dir = artifact_dir.clone();
+        rcfg = rcfg.supervise(
+            SupervisorConfig::default()
+                .backoff_base(Duration::from_millis(backoff_ms))
+                .backoff_max(Duration::from_millis(backoff_max_ms))
+                .max_restarts(budget),
+            Box::new(move |_w| {
+                Server::start_from_artifact(
+                    prefixquant::artifacts_dir(),
+                    dir.clone(),
+                    worker_config(bos, pad, 4),
+                )
+            }),
+        );
+    }
+    rcfg = overload_flags(rcfg, args)?;
     let router = Router::new(workers, rcfg)?;
 
     // demo workload with shared prompt prefixes: requests cycle through a few
@@ -647,6 +729,8 @@ fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
         &[
             "worker",
             "state",
+            "cause",
+            "restarts",
             "dispatched",
             "affinity",
             "absorbed",
@@ -660,9 +744,20 @@ fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
         ],
     );
     for w in &report.workers {
+        let state = if w.retired {
+            format!("{} (retired)", w.state.name())
+        } else {
+            w.state.name().to_string()
+        };
+        let cause = match &w.cause {
+            Some(c) => c.name().to_string(),
+            None => "-".to_string(),
+        };
         t.rowv(vec![
             w.worker.to_string(),
-            w.state.name().to_string(),
+            state,
+            cause,
+            w.restarts.to_string(),
             w.dispatched.to_string(),
             w.affinity_hits.to_string(),
             w.redistributions_absorbed.to_string(),
@@ -678,12 +773,17 @@ fn cmd_serve(c: &Ctx, args: &Args) -> Result<()> {
     t.print();
     let f = &report.fleet;
     println!(
-        "fleet: submitted={} completed={} errors={} redistributed={} \
-         prefix-hit-rate={:.1}% net-prefill={} tokens",
+        "fleet: submitted={} completed={} errors={} redistributed={} shed={} \
+         quarantined={} restarts={} retired={} prefix-hit-rate={:.1}% \
+         net-prefill={} tokens",
         f.submitted,
         f.completed,
         f.errors,
         f.redistributed,
+        f.shed,
+        f.quarantined,
+        f.workers_restarted,
+        f.workers_retired,
         f.prefix_hit_rate() * 100.0,
         f.net_prefill_tokens()
     );
@@ -750,7 +850,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
                     Server::start_from_artifact(
                         prefixquant::artifacts_dir(),
                         PathBuf::from(artifact_dir),
-                        worker_config(&c, 4),
+                        worker_config(c.tok.spec.bos, c.tok.spec.pad, 4),
                     )
                 })
                 .collect::<Result<_>>()?

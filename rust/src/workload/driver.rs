@@ -126,6 +126,10 @@ pub struct ClassScore {
     pub completed: usize,
     pub slo_ok: usize,
     pub cancelled: usize,
+    /// rejected by the admission controller (`FinishReason::Shed`)
+    pub shed: usize,
+    /// removed from dispatch after ≥2 worker deaths (`FinishReason::Quarantined`)
+    pub quarantined: usize,
     pub errors: usize,
     pub p50_ttft_s: f64,
     pub p99_ttft_s: f64,
@@ -155,6 +159,10 @@ pub struct RunScore {
     pub completed: usize,
     pub slo_ok: usize,
     pub cancelled: usize,
+    /// rejected by the admission controller (`FinishReason::Shed`)
+    pub shed: usize,
+    /// removed from dispatch after ≥2 worker deaths (`FinishReason::Quarantined`)
+    pub quarantined: usize,
     pub errors: usize,
     /// SLO-met completions per second of wall time — the headline metric
     pub goodput_rps: f64,
@@ -299,6 +307,8 @@ pub fn score_outcomes(trace: &Trace, outcomes: &[RequestOutcome], wall_s: f64) -
                     tpots[o.priority.index()].push(o.tpot_s);
                 }
             }
+            Some(FinishReason::Shed) => c.shed += 1,
+            Some(FinishReason::Quarantined) => c.quarantined += 1,
             Some(_) => {}
             None => c.errors += 1,
         }
@@ -315,6 +325,8 @@ pub fn score_outcomes(trace: &Trace, outcomes: &[RequestOutcome], wall_s: f64) -
     let submitted = outcomes.len();
     let cancelled: usize = per_class.iter().map(|c| c.cancelled).sum();
     let completed: usize = per_class.iter().map(|c| c.completed).sum();
+    let shed: usize = per_class.iter().map(|c| c.shed).sum();
+    let quarantined: usize = per_class.iter().map(|c| c.quarantined).sum();
     let errors: usize = per_class.iter().map(|c| c.errors).sum();
     let slo_ok: usize = per_class.iter().map(|c| c.slo_ok).sum();
     let denom = submitted.saturating_sub(cancelled);
@@ -325,6 +337,8 @@ pub fn score_outcomes(trace: &Trace, outcomes: &[RequestOutcome], wall_s: f64) -
         completed,
         slo_ok,
         cancelled,
+        shed,
+        quarantined,
         errors,
         goodput_rps: slo_ok as f64 / wall_s,
         attainment: if denom == 0 { 1.0 } else { slo_ok as f64 / denom as f64 },
@@ -369,22 +383,27 @@ mod tests {
 
     #[test]
     fn scoring_excludes_cancels_and_counts_errors() {
-        let trace = Workload::mixed(1).with_rate(50.0).with_requests(4).generate();
+        let trace = Workload::mixed(1).with_rate(50.0).with_requests(6).generate();
         let outcomes = vec![
             outcome(Priority::Interactive, Some(FinishReason::Length), 0.010, true),
             outcome(Priority::Interactive, Some(FinishReason::Cancelled), 0.0, false),
             outcome(Priority::Batch, Some(FinishReason::Length), 0.900, false),
             outcome(Priority::Batch, None, 0.0, false),
+            outcome(Priority::BestEffort, Some(FinishReason::Shed), 0.0, false),
+            outcome(Priority::Batch, Some(FinishReason::Quarantined), 0.0, false),
         ];
         let s = score_outcomes(&trace, &outcomes, 2.0);
-        assert_eq!(s.submitted, 4);
+        assert_eq!(s.submitted, 6);
         assert_eq!(s.cancelled, 1);
         assert_eq!(s.errors, 1);
         assert_eq!(s.completed, 2);
         assert_eq!(s.slo_ok, 1);
+        // shed/quarantined are tracked but never goodput, and they stay in
+        // the attainment denominator (the fleet turned away real demand)
+        assert_eq!((s.shed, s.quarantined), (1, 1));
         assert!((s.goodput_rps - 0.5).abs() < 1e-12);
-        // attainment denominator drops the cancel: 1 ok / 3
-        assert!((s.attainment - 1.0 / 3.0).abs() < 1e-12);
+        // attainment denominator drops the cancel: 1 ok / 5
+        assert!((s.attainment - 1.0 / 5.0).abs() < 1e-12);
         let inter = &s.per_class[Priority::Interactive.index()];
         assert_eq!((inter.offered, inter.slo_ok, inter.cancelled), (2, 1, 1));
         assert!((inter.attainment() - 1.0).abs() < 1e-12);

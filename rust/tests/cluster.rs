@@ -2,13 +2,16 @@
 //! across a real fleet, and the drain/kill redistribution guarantees.  All
 //! run on `SimBackend` workers — no artifacts required.
 
-use std::time::Duration;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
 
 use prefixquant::coordinator::continuous::run_to_completion;
+use prefixquant::coordinator::failpoint::names;
 use prefixquant::coordinator::request::request_id;
 use prefixquant::coordinator::{
-    ClassMetrics, FinishReason, GenRequest, GenResponse, LatencyHistogram, Metrics, Router,
-    RouterConfig, Server, ServerConfig, SimBackend, StreamEvent, WorkerState,
+    read_log, AdmissionConfig, BackendDesc, ClassMetrics, DrainCause, FailAction, Failpoints,
+    FinishReason, GenRequest, GenResponse, LatencyHistogram, Metrics, Oplog, Router, RouterConfig,
+    Server, ServerConfig, SimBackend, StreamEvent, SupervisorConfig, WorkerState,
 };
 use prefixquant::model::QuantMode;
 use prefixquant::util::prop::{check, Gen};
@@ -355,5 +358,410 @@ fn drained_worker_keeps_streams_and_releases_its_queue() {
     assert_eq!(fleet.fleet.unresolved(), 0);
     assert_eq!(fleet.fleet.redistributed, 2);
     assert_eq!(fleet.workers[0].state, WorkerState::Draining);
+    router.shutdown();
+}
+
+// ------------------------------------------------------- self-healing fleet
+
+/// [`sim_worker`] wired to a shared fault-injection handle: the backend AND
+/// the serve loop poll `failpoints`, so tests can crash or fault this worker
+/// at exact prefill/decode/pass offsets.
+fn faulty_worker(decode_ms: u64, failpoints: Failpoints) -> Server {
+    let cfg = ServerConfig::builder(QuantMode::Static)
+        .batch_window(Duration::from_millis(1))
+        .failpoints(failpoints.clone())
+        .build();
+    Server::start_sim(
+        move || {
+            Ok(SimBackend::new(1, 16, 1, 128)
+                .with_costs(Duration::ZERO, Duration::from_millis(decode_ms))
+                .with_failpoints(failpoints.clone()))
+        },
+        cfg,
+    )
+    .expect("sim worker boots")
+}
+
+fn sim_desc() -> BackendDesc {
+    BackendDesc::Sim { b_exec: 1, s_exec: 16, n_prefix: 1, cache_max: 128 }
+}
+
+/// Unique temp path per call (tests run concurrently in one process).
+fn tmp(name: &str) -> std::path::PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let mut p = std::env::temp_dir();
+    p.push(format!(
+        "pq-cluster-test-{name}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    p
+}
+
+/// Regression for the redispatch budget on the ERROR-retry path: every retry
+/// site uses check-then-increment, so a route gets AT MOST `max_redispatch`
+/// redispatches — `max_redispatch(0)` means the first worker-side error is
+/// terminal, and `max_redispatch(1)` absorbs exactly one fault.
+#[test]
+fn redispatch_budget_is_exact_on_the_error_retry_path() {
+    // budget 0: the first decode fault surfaces to the client untried
+    let fp = Failpoints::default();
+    let router = Router::new(
+        vec![faulty_worker(5, fp.clone())],
+        RouterConfig::default().resume_streams(true).max_redispatch(0),
+    )
+    .unwrap();
+    let h = router.submit(GenRequest::new(0, test_prompt(0), 30)).unwrap();
+    match h.recv().expect("first token") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token, got {ev:?}"),
+    }
+    fp.arm(names::SIM_DECODE, 0, FailAction::Error);
+    drain_to_done(h.receiver()).expect_err("budget 0: the fault must reach the client");
+    let f = router.report().unwrap().fleet;
+    assert_eq!(f.redistributed, 0, "budget 0 permits zero redispatches");
+    assert_eq!(f.errors, 1);
+    assert_eq!(f.unresolved(), 0);
+    router.shutdown();
+
+    // budget 1: one fault is absorbed by a resume, the second is terminal
+    let fp = Failpoints::default();
+    let router = Router::new(
+        vec![faulty_worker(5, fp.clone())],
+        RouterConfig::default().resume_streams(true).max_redispatch(1),
+    )
+    .unwrap();
+    let h = router.submit(GenRequest::new(0, test_prompt(1), 30)).unwrap();
+    match h.recv().expect("first token") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token, got {ev:?}"),
+    }
+    fp.arm(names::SIM_DECODE, 0, FailAction::Error);
+    let t0 = Instant::now();
+    while fp.fired(names::SIM_DECODE) < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "first fault never fired");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // the route is on redispatch 1 of 1 now; a second fault must exhaust it
+    fp.arm(names::SIM_DECODE, 0, FailAction::Error);
+    drain_to_done(h.receiver()).expect_err("budget 1: the second fault must be terminal");
+    let f = router.report().unwrap().fleet;
+    assert_eq!(f.redistributed, 1, "budget 1 permits exactly one redispatch");
+    assert_eq!(f.errors, 1);
+    assert_eq!(f.completed, 0);
+    assert_eq!(f.unresolved(), 0);
+    router.shutdown();
+}
+
+/// Regression for the redispatch budget on the LOST-worker path (same
+/// check-then-increment idiom): with `max_redispatch(0)` a killed worker's
+/// queued token-less requests error instead of redistributing.
+#[test]
+fn redispatch_budget_is_exact_on_the_lost_worker_path() {
+    let workers = vec![sim_worker(20), sim_worker(0)];
+    let router = Router::new(workers, RouterConfig::default().max_redispatch(0)).unwrap();
+    let n = 8;
+    let handles: Vec<_> =
+        (0..n).map(|i| router.submit(GenRequest::new(0, test_prompt(i), 12)).unwrap()).collect();
+    match handles[0].recv().expect("first token from worker 0") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token first, got {ev:?}"),
+    }
+    router.kill_worker(0).expect("kill reaches the worker");
+    let mut errored = 0;
+    for (i, h) in handles.into_iter().enumerate() {
+        match drain_to_done(h.receiver()) {
+            Ok(resp) if i == 0 => assert_eq!(resp.finish, FinishReason::WorkerLost),
+            Ok(resp) => assert_eq!(resp.finish, FinishReason::Length, "seq {i} on the survivor"),
+            Err(e) => {
+                errored += 1;
+                assert!(e.contains("budget"), "the error names the exhausted budget: {e}");
+            }
+        }
+    }
+    assert_eq!(errored, 3, "seqs 2/4/6 were queued on the dead worker and had no budget");
+    let f = router.report().unwrap().fleet;
+    assert_eq!(f.redistributed, 0, "budget 0 permits zero redispatches");
+    assert_eq!(f.errors, 3);
+    assert_eq!(f.worker_lost, 1);
+    assert_eq!(f.completed, n - 4);
+    assert_eq!(f.unresolved(), 0);
+    router.shutdown();
+}
+
+/// The global retry token bucket bounds redispatch storms: with a zero
+/// budget, a killed worker's queued requests are settled (errored) instead
+/// of redispatched, and every denial is counted.
+#[test]
+fn retry_budget_denial_settles_requests_instead_of_redispatching() {
+    let workers = vec![sim_worker(20), sim_worker(0)];
+    let router = Router::new(workers, RouterConfig::default().retry_budget(0, 0.0)).unwrap();
+    let n = 8;
+    let handles: Vec<_> =
+        (0..n).map(|i| router.submit(GenRequest::new(0, test_prompt(i), 12)).unwrap()).collect();
+    match handles[0].recv().expect("first token from worker 0") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token first, got {ev:?}"),
+    }
+    router.kill_worker(0).expect("kill reaches the worker");
+    let mut errored = 0;
+    for (i, h) in handles.into_iter().enumerate() {
+        match drain_to_done(h.receiver()) {
+            Ok(resp) if i == 0 => assert_eq!(resp.finish, FinishReason::WorkerLost),
+            Ok(resp) => assert_eq!(resp.finish, FinishReason::Length, "seq {i} on the survivor"),
+            Err(_) => errored += 1,
+        }
+    }
+    assert_eq!(errored, 3, "every queued request was denied a retry token");
+    let f = router.report().unwrap().fleet;
+    assert_eq!(f.retries_denied, 3, "each denial is counted");
+    assert_eq!(f.redistributed, 0);
+    assert_eq!(f.errors, 3);
+    assert_eq!(f.unresolved(), 0);
+    router.shutdown();
+}
+
+/// The supervisor reboots a crashed worker on its backoff schedule, the slot
+/// re-enlists into dispatch, the restart is journaled, and no restart runs
+/// ahead of schedule.
+#[test]
+fn supervisor_reboots_crashed_worker_and_reenlists_it() {
+    let fp = Failpoints::default();
+    let path = tmp("supervised-restart");
+    let log = Oplog::create(&path, &sim_desc()).unwrap();
+    let router = Router::new(
+        vec![faulty_worker(10, fp.clone()), sim_worker(0)],
+        RouterConfig::default()
+            .oplog(log)
+            .resume_streams(true)
+            .health_interval(Duration::from_millis(5))
+            .probe_timeout(Duration::from_millis(250))
+            .supervise(
+                SupervisorConfig::default()
+                    .backoff_base(Duration::from_millis(10))
+                    .backoff_max(Duration::from_millis(40))
+                    .restart_window(Duration::from_secs(10))
+                    .max_restarts(3)
+                    .seed(1),
+                Box::new(|_w| Ok(sim_worker(10))),
+            ),
+    )
+    .unwrap();
+    let n = 6;
+    let reqs: Vec<GenRequest> = (0..n).map(|i| GenRequest::new(0, test_prompt(i), 10)).collect();
+    let handles: Vec<_> = reqs.iter().map(|r| router.submit(r.clone()).unwrap()).collect();
+    match handles[0].recv().expect("first token from worker 0") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token first, got {ev:?}"),
+    }
+    // crash worker 0 on its next serve pass — mid-decode, nothing settled
+    fp.arm(names::WORKER_CRASH, 0, FailAction::Crash);
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = drain_to_done(h.receiver()).expect("stream completes despite the crash");
+        assert_eq!(resp.finish, FinishReason::Length, "seq {i}");
+        assert_eq!(resp.tokens, reference(&reqs[i]).tokens, "seq {i} is token-identical");
+    }
+
+    // the supervisor must detect the loss, wait out the backoff, and boot a
+    // replacement into slot 0
+    let t0 = Instant::now();
+    let report = loop {
+        let r = router.report().expect("report");
+        if r.fleet.workers_restarted >= 1 && matches!(r.workers[0].state, WorkerState::Alive) {
+            break r;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker 0 was never rebooted");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert_eq!(report.workers[0].restarts, 1, "one reboot into slot 0");
+    assert_eq!(report.workers[0].cause, Some(DrainCause::Dead), "crash history survives");
+    assert!(!report.workers[0].retired);
+    assert_eq!(report.fleet.workers_dead, 1);
+    assert_eq!(report.fleet.restart_schedule_violations, 0, "no restart ran early");
+
+    // re-enlistment: round-robin serves fresh traffic through BOTH slots
+    let reqs2: Vec<GenRequest> =
+        (0..4).map(|i| GenRequest::new(0, test_prompt(n + i), 8)).collect();
+    let mut served = Vec::new();
+    for (i, r) in reqs2.iter().enumerate() {
+        let resp = router
+            .submit(r.clone())
+            .unwrap()
+            .collect()
+            .expect("post-restart traffic completes");
+        assert_eq!(resp.tokens, reference(r).tokens, "post-restart seq {i} is token-identical");
+        served.push(request_id::worker_of(resp.id).expect("fleet response names its worker"));
+    }
+    served.sort_unstable();
+    served.dedup();
+    assert_eq!(served, vec![0, 1], "the rebooted slot is back in the rotation");
+    let f = router.report().unwrap().fleet;
+    assert_eq!(f.unresolved(), 0, "ledger balances across crash, restart, and re-enlistment");
+    router.shutdown();
+
+    let view = prefixquant::coordinator::TraceView::from_entries(&read_log(&path).unwrap().entries);
+    assert_eq!(view.worker_restarts, 1, "the restart was journaled");
+    assert_eq!(view.worker_events, 1, "so was the loss that caused it");
+    std::fs::remove_file(&path).ok();
+}
+
+/// A slot whose replacements keep failing to boot exhausts its windowed
+/// restart budget and is permanently retired — the fleet keeps serving on
+/// the survivors.
+#[test]
+fn restart_budget_exhaustion_retires_the_slot_permanently() {
+    let fp = Failpoints::default();
+    let router = Router::new(
+        vec![faulty_worker(0, fp.clone()), sim_worker(0)],
+        RouterConfig::default()
+            .resume_streams(true)
+            .health_interval(Duration::from_millis(5))
+            .probe_timeout(Duration::from_millis(250))
+            .supervise(
+                SupervisorConfig::default()
+                    .backoff_base(Duration::from_millis(1))
+                    .backoff_max(Duration::from_millis(2))
+                    .restart_window(Duration::from_secs(60))
+                    .max_restarts(1)
+                    .seed(3),
+                Box::new(|_w| -> anyhow::Result<Server> {
+                    anyhow::bail!("replacement boot refused")
+                }),
+            ),
+    )
+    .unwrap();
+    // crash worker 0 outright; probes detect it within the health interval
+    fp.arm(names::WORKER_CRASH, 0, FailAction::Crash);
+    let t0 = Instant::now();
+    let report = loop {
+        let r = router.report().expect("report");
+        if r.workers[0].retired {
+            break r;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker 0 was never retired");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert_eq!(report.fleet.workers_retired, 1);
+    assert_eq!(report.fleet.workers_restarted, 0, "no replacement ever booted");
+    assert_eq!(report.workers[0].restarts, 0);
+    assert_eq!(report.workers[0].cause, Some(DrainCause::Dead));
+    assert!(matches!(report.workers[0].state, WorkerState::Lost(_)));
+
+    // the retired slot is out of the rotation, but the fleet still serves
+    let req = GenRequest::new(0, test_prompt(0), 6);
+    let resp = router.submit(req.clone()).unwrap().collect().expect("survivor serves");
+    assert_eq!(resp.finish, FinishReason::Length);
+    assert_eq!(request_id::worker_of(resp.id), Some(1));
+    assert_eq!(resp.tokens, reference(&req).tokens);
+    router.shutdown();
+}
+
+/// A request implicated in two worker deaths is presumed poisonous: instead
+/// of a third dispatch it finishes as `Quarantined` (delivered tokens
+/// attached), and the rest of the fleet keeps serving.
+#[test]
+fn poison_request_quarantines_after_two_worker_deaths() {
+    let workers = vec![sim_worker(20), sim_worker(20), sim_worker(20)];
+    let router = Router::new(workers, RouterConfig::default().resume_streams(true)).unwrap();
+    let poison = GenRequest::new(0, test_prompt(0), 30);
+    let h = router.submit(poison.clone()).unwrap();
+    match h.recv().expect("poison produces a token") {
+        StreamEvent::Token(_) => {}
+        ev => panic!("expected a token first, got {ev:?}"),
+    }
+    for death in 0..2u32 {
+        let w = router
+            .locate(h.id())
+            .expect("locate works")
+            .expect("poison stream is in flight before the kill");
+        router.kill_worker(w).expect("kill reaches the worker");
+        if death == 0 {
+            let f = router.report().unwrap().fleet;
+            assert_eq!(f.quarantined, 0, "ONE death must not quarantine — two must");
+        }
+    }
+    let resp = drain_to_done(h.receiver()).expect("quarantine is a Done, not an Error");
+    assert_eq!(resp.finish, FinishReason::Quarantined);
+    assert!(!resp.tokens.is_empty(), "delivered tokens come back with the quarantine");
+    let ref0 = reference(&poison);
+    assert_eq!(
+        resp.tokens,
+        ref0.tokens[..resp.tokens.len()],
+        "the partial stream is a prefix of the reference stream"
+    );
+
+    let report = router.report().unwrap();
+    assert_eq!(report.fleet.quarantined, 1);
+    assert_eq!(report.fleet.unresolved(), 0, "the ledger still balances");
+    let alive = report
+        .workers
+        .iter()
+        .filter(|w| matches!(w.state, WorkerState::Alive))
+        .count();
+    assert_eq!(alive, 1, "two workers died; the third survives");
+
+    let fresh = GenRequest::new(0, test_prompt(1), 6);
+    let resp = router.submit(fresh.clone()).unwrap().collect().expect("survivor serves");
+    assert_eq!(resp.finish, FinishReason::Length);
+    assert_eq!(resp.tokens, reference(&fresh).tokens);
+    router.shutdown();
+}
+
+/// Overload-protected admission: a deadline the backlog makes infeasible is
+/// shed at submit time, and the hard queue-depth limit sheds whatever
+/// arrives past it — both as `FinishReason::Shed` terminals with no worker
+/// involved, both counted in the ledger.
+#[test]
+fn admission_sheds_infeasible_deadlines_and_enforces_the_backlog_limit() {
+    let router = Router::new(
+        vec![sim_worker(50)],
+        RouterConfig::default().admission(
+            AdmissionConfig::default()
+                .max_queue_depth(3)
+                .shed_infeasible(true)
+                .est_token_cost_s(0.01),
+        ),
+    )
+    .unwrap();
+    // seq 0 occupies the single slot, seq 1 queues behind it: depth 2
+    let slow: Vec<GenRequest> = (0..2).map(|i| GenRequest::new(0, test_prompt(i), 8)).collect();
+    let slow_handles: Vec<_> = slow.iter().map(|r| router.submit(r.clone()).unwrap()).collect();
+
+    // a 50ms deadline against a ≥0.64s estimated queue delay: infeasible
+    let tight = GenRequest::builder(0)
+        .prompt(test_prompt(2))
+        .max_new(8)
+        .deadline(Duration::from_millis(50))
+        .build();
+    let resp = router.submit(tight).unwrap().collect().expect("shed is a Done, not an Error");
+    assert_eq!(resp.finish, FinishReason::Shed);
+    assert!(resp.tokens.is_empty(), "shed requests never reach a worker");
+    assert_eq!(request_id::worker_of(resp.id), None, "no worker in a shed response id");
+
+    // depth is still 2 (the shed request was never routed): admitted
+    let third = GenRequest::new(0, test_prompt(3), 8);
+    let h3 = router.submit(third.clone()).unwrap();
+
+    // depth 3 ≥ max_queue_depth 3: the hard limit sheds this one
+    let resp = router
+        .submit(GenRequest::new(0, test_prompt(4), 8))
+        .unwrap()
+        .collect()
+        .expect("backlog-limit shed is a Done");
+    assert_eq!(resp.finish, FinishReason::Shed);
+
+    for (i, h) in slow_handles.into_iter().enumerate() {
+        let resp = drain_to_done(h.receiver()).expect("admitted request completes");
+        assert_eq!(resp.finish, FinishReason::Length, "seq {i}");
+        assert_eq!(resp.tokens, reference(&slow[i]).tokens, "seq {i} is token-identical");
+    }
+    let resp = drain_to_done(h3.receiver()).expect("admitted request completes");
+    assert_eq!(resp.tokens, reference(&third).tokens);
+
+    let f = router.report().unwrap().fleet;
+    assert_eq!(f.submitted, 5);
+    assert_eq!(f.shed, 2, "one infeasible deadline + one backlog-limit trip");
+    assert_eq!(f.completed, 3);
+    assert_eq!(f.unresolved(), 0, "shed terminals balance the ledger");
     router.shutdown();
 }

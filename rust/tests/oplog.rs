@@ -10,9 +10,9 @@ use prefixquant::coordinator::continuous::run_to_completion;
 use prefixquant::coordinator::failpoint::names;
 use prefixquant::coordinator::oplog::frame;
 use prefixquant::coordinator::{
-    compact, read_log, replay, BackendDesc, FailAction, Failpoints, FinishReason, GenRequest,
-    GenResponse, Oplog, Router, RouterConfig, Server, ServerConfig, SimBackend, StreamEvent,
-    TraceView,
+    compact, read_log, replay, BackendDesc, DrainCause, FailAction, Failpoints, FinishReason,
+    GenRequest, GenResponse, OpEntry, Oplog, Outcome, Router, RouterConfig, Server, ServerConfig,
+    SimBackend, StreamEvent, TraceView,
 };
 use prefixquant::model::QuantMode;
 use prefixquant::util::prop::{check, Gen};
@@ -395,6 +395,85 @@ fn recovery_from_a_compacted_journal_resumes_identically() {
     }
     h2.collect().expect("post-compaction traffic completes");
     router2.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// A journal carrying the self-healing entry kinds — `Shed` and
+/// `Quarantined` finishes plus `WorkerLost`/`WorkerRestarted` events —
+/// survives `pq oplog compact` (worker events verbatim, the quarantined
+/// max-seq record kept) and replays bit-identically on a fresh fleet.
+#[test]
+fn shed_quarantine_and_restart_entries_survive_compaction_and_replay() {
+    let path = tmp("self-healing");
+    let reqs: Vec<GenRequest> =
+        (0..4).map(|i| GenRequest::new(i as u64, test_prompt(i), 4)).collect();
+    let refs: Vec<GenResponse> = reqs.iter().map(reference).collect();
+    {
+        let mut log = Oplog::create(&path, &sim_desc()).unwrap();
+        // seq 0: normally finished — dead weight compaction must drop
+        log.append(&OpEntry::Admitted { seq: 0, req: reqs[0].clone() }).unwrap();
+        log.append(&OpEntry::Dispatched { seq: 0, worker: 0 }).unwrap();
+        for &t in &refs[0].tokens {
+            log.append(&OpEntry::Token { seq: 0, token: t }).unwrap();
+        }
+        log.append(&OpEntry::Finished {
+            seq: 0,
+            outcome: Outcome::Finish(FinishReason::Length),
+            n_tokens: refs[0].tokens.len() as u32,
+        })
+        .unwrap();
+        // seq 1: shed at admission — finished with no dispatch and no tokens
+        log.append(&OpEntry::Admitted { seq: 1, req: reqs[1].clone() }).unwrap();
+        log.append(&OpEntry::Finished {
+            seq: 1,
+            outcome: Outcome::Finish(FinishReason::Shed),
+            n_tokens: 0,
+        })
+        .unwrap();
+        // worker 1 dies and the supervisor reboots a replacement
+        log.append(&OpEntry::WorkerLost { worker: 1, cause: DrainCause::Dead }).unwrap();
+        log.append(&OpEntry::WorkerRestarted { worker: 1, restarts: 1 }).unwrap();
+        // seq 2: still in flight with one token on the wire
+        log.append(&OpEntry::Admitted { seq: 2, req: reqs[2].clone() }).unwrap();
+        log.append(&OpEntry::Dispatched { seq: 2, worker: 0 }).unwrap();
+        log.append(&OpEntry::Token { seq: 2, token: refs[2].tokens[0] }).unwrap();
+        // seq 3: quarantined after two worker deaths, one token delivered —
+        // the max-seq finished record, which compaction must keep
+        log.append(&OpEntry::Admitted { seq: 3, req: reqs[3].clone() }).unwrap();
+        log.append(&OpEntry::Dispatched { seq: 3, worker: 1 }).unwrap();
+        log.append(&OpEntry::Token { seq: 3, token: refs[3].tokens[0] }).unwrap();
+        log.append(&OpEntry::Finished {
+            seq: 3,
+            outcome: Outcome::Finish(FinishReason::Quarantined),
+            n_tokens: 1,
+        })
+        .unwrap();
+    }
+    let before = TraceView::from_entries(&read_log(&path).unwrap().entries);
+    assert_eq!(before.records.len(), 4);
+    assert_eq!(before.worker_events, 1);
+    assert_eq!(before.worker_restarts, 1);
+
+    let rep = compact(&path).unwrap();
+    assert_eq!(rep.dropped_requests, 2, "the Length and Shed records are dead weight");
+    let after = TraceView::from_entries(&read_log(&path).unwrap().entries);
+    assert_eq!(after.worker_events, 1, "WorkerLost survives compaction verbatim");
+    assert_eq!(after.worker_restarts, 1, "WorkerRestarted survives compaction verbatim");
+    assert_eq!(after.max_seq(), Some(3), "the quarantined max-seq record is kept");
+    assert_eq!(after.unfinished().map(|r| r.seq).collect::<Vec<_>>(), vec![2]);
+
+    // both the full and the compacted trace replay bit-identically on a
+    // fresh fleet: the deterministic Length record reproduces exactly, and
+    // the shed/quarantined/in-flight records hold the prefix relation
+    // (their journaled tokens came from the same deterministic stream)
+    for view in [&before, &after] {
+        let router =
+            Router::new(vec![sim_worker(0), sim_worker(0)], RouterConfig::default()).unwrap();
+        let replayed = replay(view, &router).expect("replay runs");
+        assert!(replayed.ok(), "replay contradicted the journal: {:?}", replayed.mismatched);
+        assert_eq!(replayed.exact + replayed.prefix_ok, view.records.len());
+        router.shutdown();
+    }
     std::fs::remove_file(&path).ok();
 }
 
